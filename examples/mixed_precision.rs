@@ -1,0 +1,72 @@
+//! Mixed precision on a fragile model (paper §4.5 + Table 5).
+//!
+//! Depthwise/group-conv models (MobileNet, ShuffleNet) are the paper's
+//! "fragile" cases: tiny per-channel weight ranges make tensor-granular
+//! int8 lossy. This example shows how keeping the first/last layers in
+//! fp32 (mixed precision) and switching granularity trades accuracy
+//! against model size.
+
+use anyhow::Result;
+
+use quantune::coordinator::{Evaluator, InterpEvaluator, Quantune};
+use quantune::quant::{
+    model_size_bytes, model_size_fp32, CalibCount, Clipping, Granularity, QuantConfig,
+    Scheme,
+};
+use quantune::zoo;
+
+fn main() -> Result<()> {
+    let q = Quantune::open(zoo::artifacts_dir())?;
+    let model_name = std::env::args().nth(1).unwrap_or_else(|| "shn".to_string());
+    let model = q.load_model(&model_name)?;
+    println!(
+        "{} ({}): fp32 top1 {:.2}%",
+        model.name,
+        zoo::full_name(&model.name),
+        model.fp32_top1 * 100.0
+    );
+
+    let weight_dims = |layer: &str| {
+        let w = model.weights.get(&format!("{layer}_w")).unwrap();
+        let b = model.weights.get(&format!("{layer}_b")).unwrap();
+        (w.len(), b.len())
+    };
+    let orig = model_size_fp32(&model.graph, &weight_dims);
+    println!("fp32 size: {:.2} KiB", orig as f64 / 1024.0);
+
+    let mut evaluator = InterpEvaluator::new(&model, &q.calib_pool, &q.eval, q.seed);
+    println!(
+        "{:>9} {:>7} | {:>9} | {:>9} | {:>8}",
+        "gran", "mixed", "top1", "drop", "size"
+    );
+    for gran in [Granularity::Tensor, Granularity::Channel] {
+        for mixed in [false, true] {
+            let cfg = QuantConfig {
+                calib: CalibCount::C512,
+                scheme: Scheme::SymmetricUint8,
+                clip: Clipping::Max,
+                gran,
+                mixed,
+            };
+            let acc = evaluator.measure(cfg.index())?;
+            let size = model_size_bytes(&model.graph, &weight_dims, gran, mixed);
+            println!(
+                "{:>9} {:>7} | {:>8.2}% | {:>+8.2}% | {:>7.2}K",
+                match gran {
+                    Granularity::Tensor => "tensor",
+                    Granularity::Channel => "channel",
+                },
+                mixed,
+                acc * 100.0,
+                (acc - model.fp32_top1) * 100.0,
+                size as f64 / 1024.0,
+            );
+        }
+    }
+    println!(
+        "\nTable 5's shape: channel granularity costs a few % in size;\n\
+         mixed precision costs more (first/last layers stay fp32) but\n\
+         recovers accuracy on fragile models."
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Search-algorithm comparison on one model (a single-model slice of the
+//! paper's Fig 5).
+//!
+//! Runs the five algorithms -- random, grid, genetic, XGB, XGB-T --
+//! against the sweep ground truth in the trial database and prints each
+//! one's accuracy-vs-trials convergence. Requires `quantune sweep` (the
+//! bench harness runs it automatically; this example asks politely).
+
+use anyhow::{Context, Result};
+
+use quantune::coordinator::{OracleEvaluator, Quantune, ALGORITHMS};
+use quantune::quant::QuantConfig;
+use quantune::util::stats::mean;
+use quantune::zoo;
+
+fn main() -> Result<()> {
+    let mut q = Quantune::open(zoo::artifacts_dir())?;
+    let model_name =
+        std::env::args().nth(1).unwrap_or_else(|| "mn".to_string());
+    let model = q.load_model(&model_name)?;
+    let table = q.db.accuracy_table(&model.name, QuantConfig::SPACE_SIZE);
+    anyhow::ensure!(
+        table.iter().all(|a| !a.is_nan()),
+        "no full sweep for {model_name}; run `quantune sweep --models {model_name}`"
+    );
+    let best = table.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "{model_name}: sweep best {:.2}% (fp32 {:.2}%), eps = 0.1%",
+        best * 100.0,
+        model.fp32_top1 * 100.0
+    );
+
+    // xgb_t needs other models' sweeps
+    let transfer_ready = !q
+        .transfer_for(&model)
+        .context("loading transfer records")?
+        .is_empty();
+
+    let seeds: Vec<u64> = (0..5).collect();
+    println!("{:>8} | {:>14} | {:>10} | convergence (best top1 after 1/4/16/48 trials)", "algo", "trials-to-best", "speedup");
+    let mut random_mean = None;
+    for algo in ALGORITHMS {
+        if algo == "xgb_t" && !transfer_ready {
+            println!("{algo:>8} | (needs other models' sweeps in the database)");
+            continue;
+        }
+        let mut to_best = Vec::new();
+        let mut curves = [0.0f64; 4];
+        for &seed in &seeds {
+            let mut oracle = OracleEvaluator::new(table.clone());
+            let trace = q.search(&model, algo, &mut oracle, 96, seed)?;
+            let t = trace.trials_to_reach(best, 1e-3).unwrap_or(96) as f64;
+            to_best.push(t);
+            for (i, &n) in [1usize, 4, 16, 48].iter().enumerate() {
+                curves[i] += trace.best_after(n) / seeds.len() as f64;
+            }
+        }
+        let m = mean(&to_best);
+        if algo == "random" {
+            random_mean = Some(m);
+        }
+        let speedup = random_mean.map(|r| r / m).unwrap_or(1.0);
+        println!(
+            "{algo:>8} | {m:>14.1} | {speedup:>9.2}x | {:.1}% / {:.1}% / {:.1}% / {:.1}%",
+            curves[0] * 100.0,
+            curves[1] * 100.0,
+            curves[2] * 100.0,
+            curves[3] * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Integer-only deployment on the VTA simulator (the paper's Fig 8
+//! scenario): explore the 12-config space of Eq. 23, compare Quantune's
+//! per-layer power-of-two scales against the TVM-VTA single-global-scale
+//! baseline, and report accuracy + simulated cycles.
+
+use anyhow::Result;
+
+use quantune::calib::{calibrate, CalibBackend};
+use quantune::coordinator::Quantune;
+use quantune::quant::VtaConfig;
+use quantune::vta::VtaModel;
+use quantune::zoo;
+
+fn main() -> Result<()> {
+    let q = Quantune::open(zoo::artifacts_dir())?;
+    let model_name =
+        std::env::args().nth(1).unwrap_or_else(|| "rn18".to_string());
+    let model = q.load_model(&model_name)?;
+    println!(
+        "{}: VTA integer-only deployment (fp32 top1 {:.2}%)",
+        model.name,
+        model.fp32_top1 * 100.0
+    );
+
+    let eval_n = 256.min(q.eval.n);
+    let idx: Vec<usize> = (0..eval_n).collect();
+    let measure = |vm: &VtaModel| -> Result<(f64, u64)> {
+        let mut hits = 0;
+        let mut cycles = 0u64;
+        for chunk in idx.chunks(64) {
+            let x = q.eval.batch(chunk);
+            let (_, preds, cyc) = vm.forward(&x)?;
+            hits += preds
+                .iter()
+                .zip(&q.eval.labels_for(chunk))
+                .filter(|(&p, &l)| p == l as usize)
+                .count();
+            cycles += cyc.total();
+        }
+        Ok((hits as f64 / eval_n as f64, cycles / eval_n as u64))
+    };
+
+    // the TVM-VTA baseline: one scale for the entire network
+    let base_cache = calibrate(
+        &model,
+        &q.calib_pool,
+        quantune::quant::CalibCount::C512,
+        &CalibBackend::Interp,
+        q.seed,
+    )?;
+    let global =
+        VtaModel::build_global_scale(&model.graph, model.weights_map(), &base_cache.hists, true)?;
+    let (gacc, gcyc) = measure(&global)?;
+    println!(
+        "  TVM-VTA baseline (global scale): top1 {:5.2}%  {} cycles/img ({:.2} ms @100MHz)",
+        gacc * 100.0,
+        gcyc,
+        gcyc as f64 / 100e3
+    );
+
+    // Quantune: explore all 12 configs
+    println!("  Quantune per-layer configs:");
+    let mut best: Option<(VtaConfig, f64, u64)> = None;
+    for cfg in VtaConfig::space() {
+        let cache = calibrate(
+            &model,
+            &q.calib_pool,
+            cfg.calib,
+            &CalibBackend::Interp,
+            q.seed,
+        )?;
+        let vm = VtaModel::build(&model.graph, model.weights_map(), &cache.hists, &cfg)?;
+        let (acc, cyc) = measure(&vm)?;
+        println!(
+            "    {:28} top1 {:5.2}%  {} cycles/img",
+            cfg.slug(),
+            acc * 100.0,
+            cyc
+        );
+        if best.map_or(true, |(_, a, c)| acc > a || (acc == a && cyc < c)) {
+            best = Some((cfg, acc, cyc));
+        }
+    }
+    let (cfg, acc, cyc) = best.unwrap();
+    println!(
+        "  => Quantune best: {} top1 {:.2}% ({:+.2}% vs global baseline, Fig 8's gap), {} cycles/img",
+        cfg.slug(),
+        acc * 100.0,
+        (acc - gacc) * 100.0,
+        cyc
+    );
+    Ok(())
+}

@@ -1,0 +1,227 @@
+"""AOT build: dataset -> trained weights -> HLO text artifacts.
+
+Runs ONCE at build time (`make artifacts`); python never appears on the
+rust request path afterwards. Emits into artifacts/:
+
+  dataset_train.qtd / dataset_calib.qtd / dataset_eval.qtd
+  {model}_weights.qtw            trained fp32 weights (rust-readable)
+  {model}_meta.json              architecture spec + ABI + fp32 top1
+  {model}_fp32.hlo.txt           fp32 forward, batch 128
+  {model}_fq.hlo.txt             fake-quant forward, batch 128
+  {model}_acts.hlo.txt           calibration instrumentation, batch 128
+  {model}_fp32_b1.hlo.txt        single-image latency variants (Fig 9)
+  {model}_fq_b1.hlo.txt
+  kernel_fake_quant.hlo.txt      standalone L1 Pallas kernel artifacts
+  kernel_int8_gemm.hlo.txt
+  manifest.json
+
+Interchange is HLO TEXT, not serialized protos: jax>=0.5 emits 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+The production fq artifacts lower the jnp fake-quant path: it is
+bit-identical to the Pallas kernel (asserted by python/tests) and ~40x
+faster under interpret-mode emulation on CPU PJRT. The Pallas kernels ship
+as standalone artifacts exercised by rust tests/benches; on a real TPU the
+fq graphs would lower with use_pallas=True unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import dataset, layers, model, specs, train
+from .kernels.fake_quant import fake_quant
+from .kernels.int8_gemm import int8_gemm_requant
+
+BATCH = 128
+SEED = 20220205  # arXiv id of the paper
+TRAIN_N = 4096
+CALIB_N = 512  # calibration pool (paper: ImageNet train subset)
+EVAL_N = 512  # held-out eval set (paper: ImageNet val)
+EPOCHS = {"mn": 8, "shn": 8, "sqn": 8, "gn": 8, "rn18": 8, "rn50": 8}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the rust-side format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def save_qtw(path: str, named: list[tuple[str, np.ndarray]]) -> None:
+    """Weight container shared with rust/src/data (f32 only)."""
+    with open(path, "wb") as f:
+        f.write(b"QTW1")
+        f.write(struct.pack("<I", len(named)))
+        for name, arr in named:
+            arr = np.asarray(arr, np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", 0, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def load_qtw(path: str) -> dict[str, np.ndarray]:
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"QTW1"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (ln,) = struct.unpack("<H", f.read(2))
+            name = f.read(ln).decode()
+            dtype, ndim = struct.unpack("<BB", f.read(2))
+            assert dtype == 0
+            shape = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            size = int(np.prod(shape)) if ndim else 1
+            out[name] = np.frombuffer(f.read(4 * size), np.float32).reshape(shape)
+    return out
+
+
+def build_datasets(outdir: str, force: bool, log=print):
+    paths = {
+        "train": os.path.join(outdir, "dataset_train.qtd"),
+        "calib": os.path.join(outdir, "dataset_calib.qtd"),
+        "eval": os.path.join(outdir, "dataset_eval.qtd"),
+    }
+    if not force and all(os.path.exists(p) for p in paths.values()):
+        log("datasets: cached")
+        return paths
+    t0 = time.time()
+    for split, n, seed in (
+        ("train", TRAIN_N, SEED),
+        ("calib", CALIB_N, SEED + 1),
+        ("eval", EVAL_N, SEED + 2),
+    ):
+        imgs, labels = dataset.generate(n, seed)
+        dataset.save_qtd(paths[split], imgs, labels)
+    log(f"datasets: generated in {time.time() - t0:.0f}s")
+    return paths
+
+
+def lower_model(m: model.Model, weights: dict, outdir: str, log=print):
+    flat = layers.flatten_weights(m.nodes, weights)
+    flat_specs = [jax.ShapeDtypeStruct(w.shape, jnp.float32) for w in flat]
+    nq = len(m.quant_points)
+
+    def emit(fn, args, fname):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        log(f"  wrote {fname} ({len(text) // 1024} KiB)")
+
+    for b, suffix in ((BATCH, ""), (1, "_b1")):
+        x = jax.ShapeDtypeStruct((b, 32, 32, 3), jnp.float32)
+        ap = jax.ShapeDtypeStruct((nq, 5), jnp.float32)
+        emit(m.fwd_fp32, (x, *flat_specs), f"{m.name}_fp32{suffix}.hlo.txt")
+        emit(m.fwd_fq(use_pallas=False), (x, ap, *flat_specs),
+             f"{m.name}_fq{suffix}.hlo.txt")
+        if b == BATCH:
+            emit(m.fwd_acts, (x, *flat_specs), f"{m.name}_acts.hlo.txt")
+
+
+def lower_kernels(outdir: str, log=print):
+    """Standalone L1 Pallas kernel artifacts (interpret-mode lowering)."""
+
+    def fq_fn(x, params):
+        return (fake_quant(x, params[0], params[1], params[2], params[3]),)
+
+    emit_x = jax.ShapeDtypeStruct((BATCH, 32, 32, 16), jnp.float32)
+    emit_p = jax.ShapeDtypeStruct((5,), jnp.float32)
+    lowered = jax.jit(fq_fn).lower(emit_x, emit_p)
+    with open(os.path.join(outdir, "kernel_fake_quant.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    log("  wrote kernel_fake_quant.hlo.txt")
+
+    def gemm_fn(a, b, bias, ms):
+        return (int8_gemm_requant(a, b, bias, ms[0], ms[1]),)
+
+    a = jax.ShapeDtypeStruct((64, 96), jnp.int32)
+    b = jax.ShapeDtypeStruct((96, 48), jnp.int32)
+    bias = jax.ShapeDtypeStruct((48,), jnp.int32)
+    ms = jax.ShapeDtypeStruct((2,), jnp.int32)
+    lowered = jax.jit(gemm_fn).lower(a, b, bias, ms)
+    with open(os.path.join(outdir, "kernel_int8_gemm.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    log("  wrote kernel_int8_gemm.hlo.txt")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--models", default=",".join(specs.MODELS))
+    args = ap.parse_args(argv)
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    names = args.models.split(",")
+
+    ds = build_datasets(outdir, args.force)
+    train_imgs, train_labels = dataset.load_qtd(ds["train"])
+    eval_imgs, eval_labels = dataset.load_qtd(ds["eval"])
+
+    manifest = {"batch": BATCH, "seed": SEED, "models": {},
+                "num_classes": specs.NUM_CLASSES,
+                "eval_n": EVAL_N, "calib_n": CALIB_N}
+    for name in names:
+        m = model.Model(name)
+        wpath = os.path.join(outdir, f"{name}_weights.qtw")
+        mpath = os.path.join(outdir, f"{name}_meta.json")
+        hlo_done = os.path.exists(os.path.join(outdir, f"{name}_fq.hlo.txt"))
+        if not args.force and os.path.exists(wpath) and os.path.exists(mpath) and hlo_done:
+            print(f"{name}: cached")
+            meta = json.load(open(mpath))
+            manifest["models"][name] = meta["fp32_top1"]
+            continue
+
+        print(f"{name}: training ({m.full_name})")
+        weights = train.train_model(
+            m, train_imgs, train_labels, epochs=EPOCHS[name], seed=SEED
+        )
+        top1 = train.accuracy(m, weights, eval_imgs, eval_labels)
+        print(f"{name}: fp32 top1 = {top1 * 100:.2f}%")
+
+        np_weights = {k: np.asarray(v) for k, v in weights.items()}
+        save_qtw(wpath, [(k, np_weights[k]) for k in m.weight_names])
+        meta = {
+            "name": name,
+            "full_name": m.full_name,
+            "input_shape": list(specs.INPUT_SHAPE),
+            "num_classes": specs.NUM_CLASSES,
+            "batch": BATCH,
+            "nodes": m.nodes,
+            "quant_points": m.quant_points,
+            "weight_names": m.weight_names,
+            "layers": m.layers,
+            "fp32_top1": top1,
+        }
+        json.dump(meta, open(mpath, "w"), indent=1)
+
+        print(f"{name}: lowering HLO artifacts")
+        lower_model(m, weights, outdir)
+        manifest["models"][name] = top1
+
+    lower_kernels(outdir)
+    json.dump(manifest, open(os.path.join(outdir, "manifest.json"), "w"), indent=1)
+    print("AOT build complete.")
+
+
+if __name__ == "__main__":
+    main()

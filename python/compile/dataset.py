@@ -1,0 +1,143 @@
+"""Synthetic 16-class image dataset (the ImageNet stand-in).
+
+The paper calibrates and evaluates on ImageNet, which is unavailable here.
+This module generates a deterministic, procedurally-rendered 32x32 RGB
+dataset whose classes are (shape x texture) combinations. It is learnable by
+small CNNs to high accuracy, while producing long-tailed activation
+distributions in trained networks -- the property that makes calibration
+sample count and clipping interact the way the paper reports.
+
+Classes: shape in {circle, square, triangle, cross} x texture in
+{solid, stripes, checker, radial}. Nuisance factors (not class-defining):
+color, position, scale, rotation, background gradient, pixel noise.
+
+File format ``.qtd`` (shared with the rust ``data`` module)::
+
+    magic   b"QTD1"
+    u32     n_images
+    u32     height
+    u32     width
+    u32     channels
+    u8[n]   labels
+    u8[n*h*w*c]  pixels (NHWC, row-major)
+
+All integers little-endian.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+NUM_CLASSES = 16
+IMG = 32
+SHAPES = ("circle", "square", "triangle", "cross")
+TEXTURES = ("solid", "stripes", "checker", "radial")
+
+
+def class_name(label: int) -> str:
+    return f"{SHAPES[label // 4]}_{TEXTURES[label % 4]}"
+
+
+def _shape_mask(shape: str, rng: np.random.Generator) -> np.ndarray:
+    """Binary mask for a randomly-placed instance of ``shape``."""
+    yy, xx = np.mgrid[0:IMG, 0:IMG].astype(np.float32)
+    cx = rng.uniform(10, IMG - 10)
+    cy = rng.uniform(10, IMG - 10)
+    r = rng.uniform(6.5, 11.0)
+    theta = rng.uniform(0, 2 * np.pi)
+    # rotate coordinates about the center
+    xr = (xx - cx) * np.cos(theta) + (yy - cy) * np.sin(theta)
+    yr = -(xx - cx) * np.sin(theta) + (yy - cy) * np.cos(theta)
+    if shape == "circle":
+        return (xr**2 + yr**2) <= r**2
+    if shape == "square":
+        return (np.abs(xr) <= r * 0.82) & (np.abs(yr) <= r * 0.82)
+    if shape == "triangle":
+        # upward triangle: inside three half-planes
+        h = r * 1.2
+        return (yr >= -h * 0.5) & (yr + 2.4 * xr <= h) & (yr - 2.4 * xr <= h)
+    if shape == "cross":
+        w = r * 0.38
+        return ((np.abs(xr) <= w) & (np.abs(yr) <= r)) | (
+            (np.abs(yr) <= w) & (np.abs(xr) <= r)
+        )
+    raise ValueError(shape)
+
+
+def _texture(texture: str, rng: np.random.Generator) -> np.ndarray:
+    """Texture field in [0,1], (IMG, IMG)."""
+    yy, xx = np.mgrid[0:IMG, 0:IMG].astype(np.float32)
+    phase = rng.uniform(0, 2 * np.pi)
+    if texture == "solid":
+        return np.ones((IMG, IMG), np.float32)
+    if texture == "stripes":
+        freq = rng.uniform(0.9, 1.4)
+        return 0.5 + 0.5 * np.sin(freq * (xx + yy * 0.15) + phase)
+    if texture == "checker":
+        p = rng.integers(3, 5)
+        return (((xx // p) + (yy // p)) % 2).astype(np.float32)
+    if texture == "radial":
+        cx, cy = rng.uniform(12, 20, size=2)
+        d = np.sqrt((xx - cx) ** 2 + (yy - cy) ** 2)
+        return 0.5 + 0.5 * np.cos(d * rng.uniform(0.55, 0.8) + phase)
+    raise ValueError(texture)
+
+
+def render_image(label: int, rng: np.random.Generator) -> np.ndarray:
+    """Render one u8 HWC image of the given class."""
+    shape = SHAPES[label // 4]
+    texture = TEXTURES[label % 4]
+
+    # background: low-frequency gradient + noise
+    yy, xx = np.mgrid[0:IMG, 0:IMG].astype(np.float32) / IMG
+    gdir = rng.uniform(-1, 1, size=2)
+    bg_base = rng.uniform(0.1, 0.5, size=3)
+    bg = bg_base[None, None, :] + 0.25 * (gdir[0] * xx + gdir[1] * yy)[:, :, None]
+
+    mask = _shape_mask(shape, rng).astype(np.float32)
+    tex = _texture(texture, rng)
+    fg_color = rng.uniform(0.45, 1.0, size=3)
+    fg_color2 = rng.uniform(0.0, 0.35, size=3)
+    fg = tex[:, :, None] * fg_color[None, None, :] + (1 - tex[:, :, None]) * fg_color2[
+        None, None, :
+    ]
+
+    img = bg * (1 - mask[:, :, None]) + fg * mask[:, :, None]
+    img += rng.normal(0, 0.03, size=img.shape)
+    return (np.clip(img, 0, 1) * 255).astype(np.uint8)
+
+
+def generate(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate ``n`` images with balanced class labels. Returns (x, y)."""
+    rng = np.random.default_rng(seed)
+    labels = np.arange(n) % NUM_CLASSES
+    rng.shuffle(labels)
+    imgs = np.stack([render_image(int(l), rng) for l in labels])
+    return imgs, labels.astype(np.uint8)
+
+
+def save_qtd(path: str, imgs: np.ndarray, labels: np.ndarray) -> None:
+    assert imgs.dtype == np.uint8 and labels.dtype == np.uint8
+    n, h, w, c = imgs.shape
+    with open(path, "wb") as f:
+        f.write(b"QTD1")
+        f.write(struct.pack("<IIII", n, h, w, c))
+        f.write(labels.tobytes())
+        f.write(imgs.tobytes())
+
+
+def load_qtd(path: str) -> tuple[np.ndarray, np.ndarray]:
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        assert magic == b"QTD1", f"bad magic {magic!r}"
+        n, h, w, c = struct.unpack("<IIII", f.read(16))
+        labels = np.frombuffer(f.read(n), np.uint8)
+        imgs = np.frombuffer(f.read(n * h * w * c), np.uint8).reshape(n, h, w, c)
+    return imgs, labels
+
+
+def normalize(imgs: np.ndarray) -> np.ndarray:
+    """u8 NHWC -> f32 in [-1, 1]; identical to the rust side."""
+    return imgs.astype(np.float32) / 127.5 - 1.0

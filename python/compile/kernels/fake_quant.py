@@ -1,0 +1,74 @@
+"""Pallas kernel: affine fake-quantization (quantize-dequantize).
+
+This is the L1 hot-spot of the fake-quant evaluation path: every
+quantization point in the L2 model graph passes its activation tensor
+through this kernel. The kernel is written TPU-shaped -- last dimension
+tiled to the 128-wide lane dimension, second-to-last to 8 sublanes, params
+broadcast from a small operand -- but executed with ``interpret=True``
+(CPU PJRT cannot run Mosaic custom-calls; see DESIGN.md
+§Hardware-Adaptation).
+
+TPU resource estimate (for DESIGN.md §9): block (256, 128) f32 in/out =
+256 KiB VMEM for double-buffered in+out; pure-VPU elementwise (no MXU),
+~6 vector ops per element -> bandwidth-bound, roofline ~= HBM BW.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 128 lanes is the TPU vector width; 256 rows keeps the
+# block within a comfortable VMEM budget while amortizing grid overhead.
+_BLOCK_ROWS = 256
+_LANES = 128
+
+
+def _fq_kernel(params_ref, x_ref, o_ref):
+    scale = params_ref[0]
+    zp = params_ref[1]
+    qmin = params_ref[2]
+    qmax = params_ref[3]
+    q = jnp.clip(jnp.round(x_ref[...] / scale + zp), qmin, qmax)
+    o_ref[...] = (q - zp) * scale
+
+
+def fake_quant(x, scale, zp, qmin, qmax, *, interpret=True):
+    """Quantize-dequantize ``x`` (any shape, f32) through an affine grid.
+
+    scale/zp/qmin/qmax are f32 scalars (runtime values, not trace-time
+    constants -- the rust coordinator feeds them per configuration).
+    Matches kernels.ref.fake_quant_ref bit-for-bit.
+    """
+    orig_shape = x.shape
+    n = x.size
+    # Flatten and pad to a (rows, 128) tile multiple.
+    cols = _LANES
+    rows = -(-n // cols)
+    pad_rows = -(-rows // _BLOCK_ROWS) * _BLOCK_ROWS
+    xf = jnp.ravel(x)
+    xf = jnp.pad(xf, (0, pad_rows * cols - n))
+    xf = xf.reshape(pad_rows, cols)
+
+    params = jnp.stack(
+        [
+            jnp.asarray(scale, jnp.float32),
+            jnp.asarray(zp, jnp.float32),
+            jnp.asarray(qmin, jnp.float32),
+            jnp.asarray(qmax, jnp.float32),
+        ]
+    )
+
+    out = pl.pallas_call(
+        _fq_kernel,
+        grid=(pad_rows // _BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((4,), lambda i: (0,)),
+            pl.BlockSpec((_BLOCK_ROWS, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((_BLOCK_ROWS, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pad_rows, cols), jnp.float32),
+        interpret=interpret,
+    )(params, xf)
+    return out.reshape(-1)[:n].reshape(orig_shape)

@@ -1,0 +1,97 @@
+"""Pallas kernel: int8 GEMM with int32 accumulation + pow2 requantization.
+
+This is the TPU adaptation of the paper's integer-only (VTA) compute path:
+the VTA GEMM core is a 16x16 int8 systolic array with an int32 accumulator
+register file and a shift-based ALU for requantization. On TPU the same
+structure maps to MXU tiles with an int32 VMEM scratch accumulator and a
+fused shift-round-clamp epilogue -- expressed here with a K-innermost grid
+and `scratch_shapes=[pltpu.VMEM(...)]`.
+
+Executed with ``interpret=True`` on CPU PJRT (see DESIGN.md). The rust VTA
+simulator (rust/src/vta) implements identical arithmetic; parity is
+asserted by rust/tests/runtime_integration.rs through the
+``int8_gemm.hlo.txt`` artifact.
+
+TPU resource estimate (real-TPU tiles 128x128): A + B i8 blocks 32 KiB,
+acc i32 block 64 KiB -> 96 KiB/stage double-buffered = 192 KiB VMEM;
+MXU-bound, int8 throughput ~2x bf16 roofline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_BM = 32  # output tile rows (128 on real TPU; small for interpret speed)
+_BN = 32  # output tile cols
+_BK = 32  # contraction tile
+
+
+def _gemm_kernel(a_ref, b_ref, bias_ref, shifts_ref, o_ref, acc_ref):
+    """Grid = (M/_BM, N/_BN, K/_BK); K is the innermost (fastest) axis."""
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        mul = shifts_ref[0]
+        shift = shifts_ref[1]
+        acc = (acc_ref[...] + bias_ref[...][None, :]) * mul
+        rounding = jnp.right_shift(jnp.left_shift(jnp.int32(1), shift), 1)
+        y = jnp.right_shift(acc + rounding, shift)
+        o_ref[...] = jnp.clip(y, -128, 127)
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def int8_gemm_requant(a, b, bias, mul, shift, *, interpret=True):
+    """C[M,N] = requant_pow2(A[M,K] @ B[K,N] + bias[N], mul, shift).
+
+    a/b hold int8-range values in i32 storage (the xla crate cannot build
+    i8 literals); bias/mul/shift are i32. Output is i32 in int8 range.
+    Matches kernels.ref.int8_gemm_requant_ref exactly.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    ap = _pad_to(_pad_to(a.astype(jnp.int32), _BM, 0), _BK, 1)
+    bp = _pad_to(_pad_to(b.astype(jnp.int32), _BK, 0), _BN, 1)
+    biasp = _pad_to(bias.astype(jnp.int32), _BN, 0)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    shifts = jnp.stack([jnp.asarray(mul, jnp.int32), jnp.asarray(shift, jnp.int32)])
+
+    out = pl.pallas_call(
+        _gemm_kernel,
+        grid=(mp // _BM, np_ // _BN, kp // _BK),
+        in_specs=[
+            pl.BlockSpec((_BM, _BK), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((_BK, _BN), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((_BN,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((2,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_BM, _BN), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((_BM, _BN), jnp.int32)],
+        interpret=interpret,
+    )(ap, bp, biasp, shifts)
+    return out[:m, :n]

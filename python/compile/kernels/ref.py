@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: pytest (python/tests/test_kernel.py)
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels match
+these to float tolerance / bit-exactness. The rust interpreters
+(rust/src/interp, rust/src/vta) implement the same arithmetic; parity is
+checked end-to-end through the HLO artifacts.
+
+Rounding convention: round-half-to-even everywhere (jnp.round == XLA
+RoundNearestEven); the rust side uses f32::round_ties_even.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fake_quant_ref(x, scale, zp, qmin, qmax):
+    """Quantize-dequantize ``x`` through an affine int grid.
+
+    q  = clamp(round(x / scale + zp), qmin, qmax)
+    x' = (q - zp) * scale
+
+    All of scale/zp/qmin/qmax are f32 scalars (zp/qmin/qmax hold integer
+    values); x is any-shape f32. This parameterization covers all four
+    paper schemes -- they differ only in how scale/zp/qmin/qmax are
+    computed from the tensor range (done on the rust side).
+    """
+    q = jnp.clip(jnp.round(x / scale + zp), qmin, qmax)
+    return (q - zp) * scale
+
+
+def requant_shift_ref(acc, mul, shift):
+    """VTA-style fixed-point requantization of an i32 accumulator.
+
+    y = clamp((acc * mul + (1 << (shift-1))) >> shift, -128, 127)
+
+    ``mul`` and ``shift`` are i32 scalars; the rounding term makes the
+    arithmetic right shift round-half-away-from-zero (VTA ALU behaviour).
+    """
+    acc = acc.astype(jnp.int32) * mul
+    rounding = jnp.right_shift(jnp.left_shift(jnp.int32(1), shift), jnp.int32(1))
+    y = jnp.right_shift(acc + rounding, shift)
+    return jnp.clip(y, -128, 127).astype(jnp.int32)
+
+
+def int8_gemm_requant_ref(a, b, bias, mul, shift):
+    """int8 GEMM with int32 accumulate + power-of-two requantization.
+
+    a: [M, K] i8-range values (i32 storage accepted), b: [K, N], bias: [N]
+    i32. Returns [M, N] i32 holding int8-range values.
+    """
+    acc = jnp.dot(
+        a.astype(jnp.int8), b.astype(jnp.int8), preferred_element_type=jnp.int32
+    )
+    acc = acc + bias[None, :].astype(jnp.int32)
+    return requant_shift_ref(acc, mul, shift)

@@ -1,0 +1,330 @@
+"""L2 forward engine: evaluates an architecture spec as a JAX graph.
+
+Three modes (one AOT artifact each, per model):
+
+  fp32 -- plain float forward, weights as runtime inputs.
+  fq   -- fake-quantized forward: after every quantization point the
+          tensor passes through the L1 Pallas fake-quant kernel with
+          runtime scale/zp/qmin/qmax/bypass parameters (one row of the
+          ``act_params`` [L, 5] array per point). Weights arrive already
+          fake-quantized by the rust coordinator.
+  acts -- fp32 forward that also returns the tensor at every quantization
+          point (Glow's "instrumented code" for calibration).
+
+The parameter order of the lowered functions is the rust<->python ABI:
+  fp32:  (x, w0, b0, w1, b1, ...)
+  fq:    (x, act_params, w0, b0, ...)
+  acts:  (x, w0, b0, ...)
+with weights in specs.weight_names() order.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import specs
+from .kernels.fake_quant import fake_quant
+from .kernels.ref import fake_quant_ref
+
+
+def _act(x, kind):
+    if kind == "none":
+        return x
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    raise ValueError(kind)
+
+
+def _conv(x, w, b, attrs):
+    s = attrs["stride"]
+    p = attrs["pad"]
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(s, s),
+        padding=((p, p), (p, p)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=attrs["groups"],
+    )
+    return _act(out + b[None, None, None, :], attrs["act"])
+
+
+def _pool(x, attrs):
+    k, s, p = attrs["k"], attrs["stride"], attrs["pad"]
+    pads = ((0, 0), (p, p), (p, p), (0, 0))
+    if attrs["kind"] == "max":
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, s, s, 1), pads
+        )
+    ones = jnp.ones_like(x)
+    summed = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, k, k, 1), (1, s, s, 1), pads
+    )
+    count = jax.lax.reduce_window(
+        ones, 0.0, jax.lax.add, (1, k, k, 1), (1, s, s, 1), pads
+    )
+    return summed / count
+
+
+def _shuffle(x, groups):
+    n, h, w, c = x.shape
+    x = x.reshape(n, h, w, groups, c // groups)
+    x = jnp.swapaxes(x, 3, 4)
+    return x.reshape(n, h, w, c)
+
+
+def forward(
+    nodes,
+    weights,
+    x,
+    mode="fp32",
+    act_params=None,
+    use_pallas=True,
+):
+    """Evaluate the graph.
+
+    weights: dict name -> array (HWIO convs, [in,out] dense, biases).
+    mode: fp32 | fq | acts.
+    act_params: [L, 5] f32 (scale, zp, qmin, qmax, bypass) for mode=fq.
+    Returns logits (fp32/fq) or (logits, [acts...]) for mode=acts.
+    """
+    qpoints = specs.quant_points(nodes)
+    fq_fn = fake_quant if use_pallas else fake_quant_ref
+
+    def maybe_fq(name, t):
+        if mode != "fq" or name not in qpoints:
+            return t
+        row = act_params[qpoints.index(name)]
+        quantized = fq_fn(t, row[0], row[1], row[2], row[3])
+        # bypass=1 keeps the tensor in fp32 (mixed precision / first-last)
+        return jnp.where(row[4] > 0.5, t, quantized)
+
+    captured = []
+    env = {"input": maybe_fq("input", x)}
+    if mode == "acts":
+        captured.append(x)
+
+    out_name = None
+    for n in nodes:
+        op = n["op"]
+        ins = [env[i] for i in n["inputs"]]
+        if op == "conv":
+            t = _conv(ins[0], weights[f"{n['name']}_w"], weights[f"{n['name']}_b"], n)
+        elif op == "pool":
+            t = _pool(ins[0], n)
+        elif op == "gap":
+            t = jnp.mean(ins[0], axis=(1, 2))
+        elif op == "add":
+            t = _act(ins[0] + ins[1], n.get("act", "none"))
+        elif op == "concat":
+            t = jnp.concatenate(ins, axis=-1)
+        elif op == "shuffle":
+            t = _shuffle(ins[0], n["groups"])
+        elif op == "dense":
+            t = ins[0] @ weights[f"{n['name']}_w"] + weights[f"{n['name']}_b"]
+        else:
+            raise ValueError(op)
+        if mode == "acts" and n["name"] in qpoints:
+            captured.append(t)
+        env[n["name"]] = maybe_fq(n["name"], t)
+        out_name = n["name"]
+
+    logits = env[out_name]
+    if mode == "acts":
+        return logits, captured
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Batch-norm support (training only).
+#
+# The paper quantizes BN-folded pretrained models (Glow folds BN before
+# profiling). We do the same: convs train with batchnorm (batch statistics),
+# then population statistics are folded into conv weights/biases at export,
+# so every downstream consumer (AOT artifacts, rust IR, quantizers) sees
+# plain conv+bias graphs.
+# ---------------------------------------------------------------------------
+
+_BN_EPS = 1e-5
+
+
+def forward_train(nodes, weights, bn, x):
+    """fp32 forward with per-conv batchnorm using batch statistics.
+
+    bn: dict name -> {"gamma": [C], "beta": [C]}.
+    """
+
+    def conv_bn(xin, n):
+        name = n["name"]
+        out = jax.lax.conv_general_dilated(
+            xin,
+            weights[f"{name}_w"],
+            window_strides=(n["stride"], n["stride"]),
+            padding=((n["pad"], n["pad"]), (n["pad"], n["pad"])),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=n["groups"],
+        )
+        mean = jnp.mean(out, axis=(0, 1, 2))
+        var = jnp.var(out, axis=(0, 1, 2))
+        out = (out - mean) / jnp.sqrt(var + _BN_EPS)
+        out = out * bn[name]["gamma"] + bn[name]["beta"]
+        return _act(out, n["act"])
+
+    env = {"input": x}
+    out_name = None
+    for n in nodes:
+        op = n["op"]
+        ins = [env[i] for i in n["inputs"]]
+        if op == "conv":
+            t = conv_bn(ins[0], n)
+        elif op == "pool":
+            t = _pool(ins[0], n)
+        elif op == "gap":
+            t = jnp.mean(ins[0], axis=(1, 2))
+        elif op == "add":
+            t = _act(ins[0] + ins[1], n.get("act", "none"))
+        elif op == "concat":
+            t = jnp.concatenate(ins, axis=-1)
+        elif op == "shuffle":
+            t = _shuffle(ins[0], n["groups"])
+        elif op == "dense":
+            t = ins[0] @ weights[f"{n['name']}_w"] + weights[f"{n['name']}_b"]
+        else:
+            raise ValueError(op)
+        env[n["name"]] = t
+        out_name = n["name"]
+    return env[out_name]
+
+
+def collect_bn_stats(nodes, weights, bn, imgs_f32, batch=128):
+    """Population BN statistics: average batch mean/var over the train set.
+
+    Returns dict name -> (mean, var) as numpy arrays.
+    """
+    import numpy as np
+
+    agg = {}
+
+    @jax.jit
+    def one_batch(xb):
+        stats = {}
+
+        def conv_bn(xin, n):
+            name = n["name"]
+            out = jax.lax.conv_general_dilated(
+                xin,
+                weights[f"{name}_w"],
+                window_strides=(n["stride"], n["stride"]),
+                padding=((n["pad"], n["pad"]), (n["pad"], n["pad"])),
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=n["groups"],
+            )
+            mean = jnp.mean(out, axis=(0, 1, 2))
+            var = jnp.var(out, axis=(0, 1, 2))
+            stats[name] = (mean, var)
+            out = (out - mean) / jnp.sqrt(var + _BN_EPS)
+            out = out * bn[name]["gamma"] + bn[name]["beta"]
+            return _act(out, n["act"])
+
+        env = {"input": xb}
+        for n in nodes:
+            op = n["op"]
+            ins = [env[i] for i in n["inputs"]]
+            if op == "conv":
+                t = conv_bn(ins[0], n)
+            elif op == "pool":
+                t = _pool(ins[0], n)
+            elif op == "gap":
+                t = jnp.mean(ins[0], axis=(1, 2))
+            elif op == "add":
+                t = _act(ins[0] + ins[1], n.get("act", "none"))
+            elif op == "concat":
+                t = jnp.concatenate(ins, axis=-1)
+            elif op == "shuffle":
+                t = _shuffle(ins[0], n["groups"])
+            elif op == "dense":
+                t = ins[0] @ weights[f"{n['name']}_w"] + weights[f"{n['name']}_b"]
+            else:
+                raise ValueError(op)
+            env[n["name"]] = t
+        return stats
+
+    nb = 0
+    for i in range(0, len(imgs_f32) - batch + 1, batch):
+        stats = one_batch(jnp.asarray(imgs_f32[i : i + batch]))
+        nb += 1
+        for k, (m, v) in stats.items():
+            m, v = np.array(m), np.array(v)
+            if k not in agg:
+                agg[k] = [m, v]
+            else:
+                agg[k][0] += m
+                agg[k][1] += v
+    return {k: (m / nb, v / nb) for k, (m, v) in agg.items()}
+
+
+def fold_bn(nodes, weights, bn, stats):
+    """Fold batchnorm into conv weights/biases; returns plain weights.
+
+    w' = w * gamma / sqrt(var + eps)   (per output channel)
+    b' = beta - gamma * mean / sqrt(var + eps)
+    """
+    out = dict(weights)
+    for n in nodes:
+        if n["op"] != "conv":
+            continue
+        name = n["name"]
+        gamma = bn[name]["gamma"]
+        beta = bn[name]["beta"]
+        mean, var = stats[name]
+        scale = gamma / jnp.sqrt(jnp.asarray(var) + _BN_EPS)
+        out[f"{name}_w"] = weights[f"{name}_w"] * scale[None, None, None, :]
+        out[f"{name}_b"] = beta - jnp.asarray(mean) * scale
+    return out
+
+
+def init_bn(nodes):
+    bn = {}
+    for n in nodes:
+        if n["op"] == "conv":
+            c = n["out_ch"]
+            bn[n["name"]] = {
+                "gamma": jnp.ones((c,), jnp.float32),
+                "beta": jnp.zeros((c,), jnp.float32),
+            }
+    return bn
+
+
+def init_weights(nodes, seed=0):
+    """He-normal init, biases zero. Returns dict name -> np-backed array."""
+    key = jax.random.PRNGKey(seed)
+    weights = {}
+    for n in nodes:
+        if n["op"] == "conv":
+            k, cin, cout, g = n["k"], n["in_ch"], n["out_ch"], n["groups"]
+            key, sub = jax.random.split(key)
+            fan_in = k * k * (cin // g)
+            w = jax.random.normal(sub, (k, k, cin // g, cout)) * jnp.sqrt(
+                2.0 / fan_in
+            )
+            weights[f"{n['name']}_w"] = w.astype(jnp.float32)
+            weights[f"{n['name']}_b"] = jnp.zeros((cout,), jnp.float32)
+        elif n["op"] == "dense":
+            din, dout = n["in_dim"], n["out_dim"]
+            key, sub = jax.random.split(key)
+            w = jax.random.normal(sub, (din, dout)) * jnp.sqrt(2.0 / din)
+            weights[f"{n['name']}_w"] = w.astype(jnp.float32)
+            weights[f"{n['name']}_b"] = jnp.zeros((dout,), jnp.float32)
+    return weights
+
+
+def flatten_weights(nodes, weights):
+    """Weights as a flat list in the rust<->python ABI order."""
+    return [weights[name] for name in specs.weight_names(nodes)]
+
+
+def unflatten_weights(nodes, flat):
+    return dict(zip(specs.weight_names(nodes), flat))

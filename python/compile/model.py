@@ -1,0 +1,69 @@
+"""L2 public model API: the six mini CNNs as JAX functions.
+
+Thin facade over specs.py (architecture graphs) + layers.py (forward
+engine). aot.py lowers these functions; train.py optimizes them.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import layers, specs
+
+
+class Model:
+    """One mini CNN: spec + forward closures in the three AOT modes."""
+
+    def __init__(self, name: str):
+        assert name in specs.MODELS, name
+        self.name = name
+        self.full_name = specs.FULL_NAMES[name]
+        self.nodes = specs.build(name)
+        self.quant_points = specs.quant_points(self.nodes)
+        self.weight_names = specs.weight_names(self.nodes)
+        self.layers = specs.quantizable_layers(self.nodes)
+
+    # ---- forward closures (flat-ABI, used for lowering) ----
+
+    def fwd_fp32(self, x, *flat_weights):
+        w = layers.unflatten_weights(self.nodes, list(flat_weights))
+        return (layers.forward(self.nodes, w, x, mode="fp32"),)
+
+    def fwd_fq(self, use_pallas=True):
+        def fn(x, act_params, *flat_weights):
+            w = layers.unflatten_weights(self.nodes, list(flat_weights))
+            return (
+                layers.forward(
+                    self.nodes, w, x, mode="fq", act_params=act_params,
+                    use_pallas=use_pallas,
+                ),
+            )
+
+        return fn
+
+    def fwd_acts(self, x, *flat_weights):
+        w = layers.unflatten_weights(self.nodes, list(flat_weights))
+        _, acts = layers.forward(self.nodes, w, x, mode="acts")
+        return tuple(acts)
+
+    # ---- convenience (dict-ABI, used for training/tests) ----
+
+    def apply(self, weights, x):
+        return layers.forward(self.nodes, weights, x, mode="fp32")
+
+    def init(self, seed=0):
+        return layers.init_weights(self.nodes, seed)
+
+    def num_params(self, weights) -> int:
+        return int(sum(v.size for v in weights.values()))
+
+    def identity_act_params(self) -> jnp.ndarray:
+        """act_params that make the fq graph equal the fp32 graph
+        (bypass=1 everywhere); used by shape tests."""
+        rows = len(self.quant_points)
+        p = jnp.zeros((rows, 5), jnp.float32)
+        return p.at[:, 0].set(1.0).at[:, 4].set(1.0)
+
+
+def all_models():
+    return [Model(m) for m in specs.MODELS]

@@ -1,0 +1,279 @@
+"""Architecture specs for the six mini CNN models.
+
+A spec is a JSON-serializable graph: a list of node dicts evaluated in
+order. It is the single source of truth shared between the JAX forward
+engine (layers.py) and the rust graph IR (rust/src/ir, rust/src/zoo): the
+spec is exported verbatim into ``artifacts/{model}_meta.json``.
+
+Node ops:
+  input                                    (implicit, name "input")
+  conv    {k, stride, pad, in_ch, out_ch, groups, act}
+  pool    {kind: max|avg, k, stride, pad}
+  gap     {}                               global average pool -> [N, C]
+  add     {act}                            two inputs
+  concat  {}                               n inputs, channel axis
+  shuffle {groups}                         channel shuffle
+  dense   {in_dim, out_dim}                after gap
+
+``act`` is one of none|relu|relu6 and is fused into the producing node.
+
+Quantization points (tensors that get their own activation profile +
+scale): the input plus the outputs of conv, dense, add, concat, avg-pool
+and gap nodes. max-pool and shuffle are value-preserving permutations /
+max-selections, so in an int8 pipeline they run directly on the quantized
+tensor of their producer (Glow does the same).
+
+The six models mirror the paper's six ImageNet networks at mini scale:
+same architectural motifs, 32x32x3 inputs, 16 classes.
+"""
+
+from __future__ import annotations
+
+NUM_CLASSES = 16
+INPUT_SHAPE = (32, 32, 3)
+
+# ops whose outputs are quantization points
+QUANT_OPS = ("conv", "dense", "add", "concat", "gap")
+MODELS = ("mn", "shn", "sqn", "gn", "rn18", "rn50")
+FULL_NAMES = {
+    "mn": "MobileNetV2-mini",
+    "shn": "ShuffleNetV1-mini",
+    "sqn": "SqueezeNetV1-mini",
+    "gn": "GoogLeNet-mini",
+    "rn18": "ResNet18-mini",
+    "rn50": "ResNet50-mini",
+}
+
+
+class B:
+    """Tiny graph builder."""
+
+    def __init__(self):
+        self.nodes = []
+        self._n = 0
+
+    def _name(self, op):
+        self._n += 1
+        return f"{op}{self._n}"
+
+    def node(self, op, inputs, **attrs):
+        name = attrs.pop("name", None) or self._name(op)
+        self.nodes.append({"name": name, "op": op, "inputs": list(inputs), **attrs})
+        return name
+
+    def conv(self, x, in_ch, out_ch, k=3, stride=1, pad=None, groups=1, act="relu"):
+        if pad is None:
+            pad = k // 2
+        return self.node(
+            "conv", [x], k=k, stride=stride, pad=pad, in_ch=in_ch, out_ch=out_ch,
+            groups=groups, act=act,
+        )
+
+    def pool(self, x, kind, k=2, stride=2, pad=0):
+        return self.node("pool", [x], kind=kind, k=k, stride=stride, pad=pad)
+
+    def gap(self, x):
+        return self.node("gap", [x])
+
+    def add(self, a, b, act="none"):
+        return self.node("add", [a, b], act=act)
+
+    def concat(self, xs):
+        return self.node("concat", xs)
+
+    def shuffle(self, x, groups):
+        return self.node("shuffle", [x], groups=groups)
+
+    def dense(self, x, in_dim, out_dim):
+        return self.node("dense", [x], in_dim=in_dim, out_dim=out_dim)
+
+
+def mobilenet_mini() -> list[dict]:
+    """MobileNetV2 motif: inverted residuals with depthwise 3x3, relu6."""
+    b = B()
+    x = b.conv("input", 3, 16, act="relu6")
+
+    def inv_res(x, in_ch, out_ch, stride, t=4):
+        mid = in_ch * t
+        e = b.conv(x, in_ch, mid, k=1, act="relu6")
+        d = b.conv(e, mid, mid, k=3, stride=stride, groups=mid, act="relu6")
+        p = b.conv(d, mid, out_ch, k=1, act="none")
+        if stride == 1 and in_ch == out_ch:
+            return b.add(x, p)
+        return p
+
+    x = inv_res(x, 16, 24, 2)
+    x = inv_res(x, 24, 24, 1)
+    x = inv_res(x, 24, 40, 2)
+    x = inv_res(x, 40, 40, 1)
+    x = b.conv(x, 40, 128, k=1, act="relu6")
+    x = b.gap(x)
+    b.dense(x, 128, NUM_CLASSES)
+    return b.nodes
+
+
+def shufflenet_mini() -> list[dict]:
+    """ShuffleNetV1 motif: grouped 1x1 convs + channel shuffle + depthwise."""
+    g = 3
+    b = B()
+    x = b.conv("input", 3, 24, act="relu")
+
+    def unit_down(x, in_ch, mid, out_branch):
+        # stride-2 unit: concat(avgpool shortcut, transformed branch)
+        c = b.conv(x, in_ch, mid, k=1, groups=g, act="relu")
+        c = b.shuffle(c, g)
+        c = b.conv(c, mid, mid, k=3, stride=2, groups=mid, act="none")
+        c = b.conv(c, mid, out_branch, k=1, groups=g, act="none")
+        s = b.pool(x, "avg", k=3, stride=2, pad=1)
+        return b.concat([s, c])
+
+    def unit(x, ch, mid):
+        c = b.conv(x, ch, mid, k=1, groups=g, act="relu")
+        c = b.shuffle(c, g)
+        c = b.conv(c, mid, mid, k=3, stride=1, groups=mid, act="none")
+        c = b.conv(c, mid, ch, k=1, groups=g, act="none")
+        return b.add(x, c, act="relu")
+
+    x = unit_down(x, 24, 30, 36)  # -> 24 + 36 = 60 ch, 16px
+    x = unit(x, 60, 30)
+    x = unit_down(x, 60, 60, 60)  # -> 120 ch, 8px
+    x = unit(x, 120, 60)
+    x = b.gap(x)
+    b.dense(x, 120, NUM_CLASSES)
+    return b.nodes
+
+
+def squeezenet_mini() -> list[dict]:
+    """SqueezeNet motif: fire modules (squeeze 1x1, expand 1x1 + 3x3)."""
+    b = B()
+    x = b.conv("input", 3, 32, act="relu")
+    x = b.pool(x, "max", k=2, stride=2)
+
+    def fire(x, in_ch, s, e):
+        sq = b.conv(x, in_ch, s, k=1, act="relu")
+        e1 = b.conv(sq, s, e, k=1, act="relu")
+        e3 = b.conv(sq, s, e, k=3, act="relu")
+        return b.concat([e1, e3])
+
+    x = fire(x, 32, 8, 16)   # 32ch, 16px
+    x = fire(x, 32, 8, 16)
+    x = b.pool(x, "max", k=2, stride=2)
+    x = fire(x, 32, 12, 24)  # 48ch, 8px
+    x = fire(x, 48, 12, 24)
+    x = b.pool(x, "max", k=2, stride=2)
+    x = b.conv(x, 48, 64, k=1, act="relu")
+    x = b.gap(x)
+    b.dense(x, 64, NUM_CLASSES)
+    return b.nodes
+
+
+def googlenet_mini() -> list[dict]:
+    """GoogLeNet motif: inception blocks with four parallel branches."""
+    b = B()
+    x = b.conv("input", 3, 32, act="relu")
+    x = b.pool(x, "max", k=2, stride=2)  # 16px
+
+    def inception(x, in_ch, c1, c3r, c3, c5r, c5, cp):
+        b1 = b.conv(x, in_ch, c1, k=1, act="relu")
+        b2 = b.conv(x, in_ch, c3r, k=1, act="relu")
+        b2 = b.conv(b2, c3r, c3, k=3, act="relu")
+        b3 = b.conv(x, in_ch, c5r, k=1, act="relu")
+        b3 = b.conv(b3, c5r, c5, k=3, act="relu")
+        b3 = b.conv(b3, c5, c5, k=3, act="relu")  # 5x5 as two 3x3s
+        b4 = b.pool(x, "max", k=3, stride=1, pad=1)
+        b4 = b.conv(b4, in_ch, cp, k=1, act="relu")
+        return b.concat([b1, b2, b3, b4])
+
+    x = inception(x, 32, 16, 12, 24, 6, 12, 12)    # -> 64
+    x = inception(x, 64, 24, 16, 32, 8, 16, 16)    # -> 88
+    x = b.pool(x, "max", k=2, stride=2)            # 8px
+    x = inception(x, 88, 32, 24, 48, 12, 24, 24)   # -> 128
+    x = b.gap(x)
+    b.dense(x, 128, NUM_CLASSES)
+    return b.nodes
+
+
+def resnet18_mini() -> list[dict]:
+    """ResNet basic-block motif."""
+    b = B()
+    x = b.conv("input", 3, 16, act="relu")
+
+    def basic(x, in_ch, out_ch, stride):
+        c = b.conv(x, in_ch, out_ch, k=3, stride=stride, act="relu")
+        c = b.conv(c, out_ch, out_ch, k=3, act="none")
+        if stride != 1 or in_ch != out_ch:
+            x = b.conv(x, in_ch, out_ch, k=1, stride=stride, act="none")
+        return b.add(x, c, act="relu")
+
+    x = basic(x, 16, 16, 1)
+    x = basic(x, 16, 16, 1)
+    x = basic(x, 16, 32, 2)
+    x = basic(x, 32, 32, 1)
+    x = basic(x, 32, 64, 2)
+    x = basic(x, 64, 64, 1)
+    x = b.gap(x)
+    b.dense(x, 64, NUM_CLASSES)
+    return b.nodes
+
+
+def resnet50_mini() -> list[dict]:
+    """ResNet bottleneck-block motif (1x1 reduce, 3x3, 1x1 expand x4)."""
+    b = B()
+    x = b.conv("input", 3, 16, act="relu")
+
+    def bottleneck(x, in_ch, mid, stride, project):
+        out_ch = mid * 4
+        c = b.conv(x, in_ch, mid, k=1, act="relu")
+        c = b.conv(c, mid, mid, k=3, stride=stride, act="relu")
+        c = b.conv(c, mid, out_ch, k=1, act="none")
+        if project:
+            x = b.conv(x, in_ch, out_ch, k=1, stride=stride, act="none")
+        return b.add(x, c, act="relu")
+
+    x = bottleneck(x, 16, 16, 1, True)    # -> 64
+    x = bottleneck(x, 64, 16, 1, False)
+    x = bottleneck(x, 64, 32, 2, True)    # -> 128
+    x = bottleneck(x, 128, 32, 1, False)
+    x = bottleneck(x, 128, 64, 2, True)   # -> 256
+    x = bottleneck(x, 256, 64, 1, False)
+    x = b.gap(x)
+    b.dense(x, 256, NUM_CLASSES)
+    return b.nodes
+
+
+_BUILDERS = {
+    "mn": mobilenet_mini,
+    "shn": shufflenet_mini,
+    "sqn": squeezenet_mini,
+    "gn": googlenet_mini,
+    "rn18": resnet18_mini,
+    "rn50": resnet50_mini,
+}
+
+
+def build(model: str) -> list[dict]:
+    return _BUILDERS[model]()
+
+
+def quant_points(nodes: list[dict]) -> list[str]:
+    """Names of tensors that get an activation-quantization profile.
+
+    Row 0 of the activation-parameter array is always the network input.
+    """
+    pts = ["input"]
+    pts += [n["name"] for n in nodes if n["op"] in QUANT_OPS]
+    return pts
+
+
+def weight_names(nodes: list[dict]) -> list[str]:
+    """Flat weight tensor order shared with rust (conv/dense: w then b)."""
+    out = []
+    for n in nodes:
+        if n["op"] in ("conv", "dense"):
+            out += [f"{n['name']}_w", f"{n['name']}_b"]
+    return out
+
+
+def quantizable_layers(nodes: list[dict]) -> list[str]:
+    """Weighted layers, in graph order (for mixed-precision first/last)."""
+    return [n["name"] for n in nodes if n["op"] in ("conv", "dense")]

@@ -1,0 +1,101 @@
+"""Build-time training of the six mini CNNs on the synthetic dataset.
+
+The paper uses pretrained ImageNet models; we train our minis here, once,
+as part of `make artifacts`. Plain Adam + cross-entropy (no optax in the
+image). Deterministic given the seed.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset, layers
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(labels.shape[0]), labels])
+
+
+def adam_init(params):
+    """Adam state for any pytree of arrays."""
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros,
+            "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    tf = t.astype(jnp.float32)
+    m = jax.tree_util.tree_map(lambda s, g: b1 * s + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda s, g: b2 * s + (1 - b2) * g**2, state["v"], grads)
+    new_p = jax.tree_util.tree_map(
+        lambda p, mm, vv: p
+        - lr * (mm / (1 - b1**tf)) / (jnp.sqrt(vv / (1 - b2**tf)) + eps),
+        params, m, v,
+    )
+    return new_p, {"m": m, "v": v, "t": t}
+
+
+def accuracy(model, weights, imgs_u8, labels, batch=256):
+    """Top-1 on u8 NHWC images."""
+    hits = 0
+    fwd = jax.jit(model.apply)
+    for i in range(0, len(labels), batch):
+        xb = jnp.asarray(dataset.normalize(imgs_u8[i : i + batch]))
+        pred = np.asarray(jnp.argmax(fwd(weights, xb), axis=-1))
+        hits += int((pred == labels[i : i + batch]).sum())
+    return hits / len(labels)
+
+
+def train_model(model, train_imgs, train_labels, epochs=14, batch=128,
+                lr=2e-3, seed=0, log=print):
+    """Train one mini CNN with per-conv batchnorm, then fold BN into the
+    conv weights (the paper quantizes BN-folded models; so do we).
+    Returns the folded, BN-free weight dict."""
+    weights = layers.init_weights(model.nodes, seed=seed)
+    bn = layers.init_bn(model.nodes)
+    params = {"w": weights, "bn": bn}
+    opt = adam_init(params)
+    n = len(train_labels)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(params, opt, xb, yb, lr):
+        def loss_fn(p):
+            logits = layers.forward_train(model.nodes, p["w"], p["bn"], xb)
+            return cross_entropy(logits, yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    t0 = time.time()
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        # simple cosine decay
+        cur_lr = lr * 0.5 * (1 + np.cos(np.pi * ep / epochs))
+        losses = []
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i : i + batch]
+            xb = jnp.asarray(dataset.normalize(train_imgs[idx]))
+            yb = jnp.asarray(train_labels[idx].astype(np.int32))
+            params, opt, loss = step(params, opt, xb, yb, jnp.float32(cur_lr))
+            losses.append(float(loss))
+        log(
+            f"  [{model.name}] epoch {ep + 1}/{epochs} "
+            f"loss={np.mean(losses):.4f} ({time.time() - t0:.0f}s)"
+        )
+
+    # population statistics over (a slice of) the train set, then fold
+    stats = layers.collect_bn_stats(
+        model.nodes, params["w"], params["bn"],
+        dataset.normalize(train_imgs[:2048]), batch=batch,
+    )
+    folded = layers.fold_bn(model.nodes, params["w"], params["bn"], stats)
+    return {k: jnp.asarray(v) for k, v in folded.items()}

@@ -1,0 +1,69 @@
+"""AOT pipeline: HLO text emission and weight-container round-trip."""
+
+import os
+import tempfile
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, layers, model
+
+
+def test_qtw_roundtrip():
+    named = [
+        ("a_w", np.random.default_rng(0).normal(size=(3, 3, 2, 4)).astype(np.float32)),
+        ("a_b", np.zeros(4, np.float32)),
+        ("scalar_ish", np.array([1.5], np.float32)),
+    ]
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "w.qtw")
+        aot.save_qtw(path, named)
+        out = aot.load_qtw(path)
+    assert set(out) == {"a_w", "a_b", "scalar_ish"}
+    for k, v in named:
+        np.testing.assert_array_equal(out[k], v)
+
+
+def test_hlo_text_emission_small_model():
+    """Lower the smallest model end to end and sanity-check the HLO text.
+
+    The text must be parseable by the rust side: HloModule header plus an
+    ENTRY computation with the full parameter list.
+    """
+    m = model.Model("sqn")
+    w = m.init(seed=0)
+    flat = layers.flatten_weights(m.nodes, w)
+    x = jax.ShapeDtypeStruct((1, 32, 32, 3), jnp.float32)
+    fspecs = [jax.ShapeDtypeStruct(t.shape, jnp.float32) for t in flat]
+    lowered = jax.jit(m.fwd_fp32).lower(x, *fspecs)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # parameter count in the ENTRY computation: x + all weights
+    # (fused sub-computations also use parameter() internally)
+    entry = text[text.index("ENTRY"):]
+    assert entry.count("parameter(") == 1 + len(flat)
+
+
+def test_hlo_text_fq_has_act_params():
+    m = model.Model("sqn")
+    w = m.init(seed=0)
+    flat = layers.flatten_weights(m.nodes, w)
+    x = jax.ShapeDtypeStruct((1, 32, 32, 3), jnp.float32)
+    ap = jax.ShapeDtypeStruct((len(m.quant_points), 5), jnp.float32)
+    fspecs = [jax.ShapeDtypeStruct(t.shape, jnp.float32) for t in flat]
+    lowered = jax.jit(m.fwd_fq(use_pallas=False)).lower(x, ap, *fspecs)
+    text = aot.to_hlo_text(lowered)
+    entry = text[text.index("ENTRY"):]
+    assert entry.count("parameter(") == 2 + len(flat)
+    # fake-quant lowers to round/clamp ops
+    assert "round-nearest-even" in text or "round" in text
+    assert "clamp" in text or "minimum" in text  # jnp.clip lowers to min/max
+
+
+def test_manifest_constants_consistent():
+    assert aot.EVAL_N <= 512
+    assert aot.BATCH == 128
+    assert set(aot.EPOCHS) == {"mn", "shn", "sqn", "gn", "rn18", "rn50"}

@@ -1,0 +1,71 @@
+"""Synthetic dataset: determinism, balance, format round-trip."""
+
+import os
+import tempfile
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import dataset
+
+
+def test_deterministic_generation():
+    a_imgs, a_labels = dataset.generate(64, seed=9)
+    b_imgs, b_labels = dataset.generate(64, seed=9)
+    np.testing.assert_array_equal(a_imgs, b_imgs)
+    np.testing.assert_array_equal(a_labels, b_labels)
+
+
+def test_different_seeds_differ():
+    a, _ = dataset.generate(16, seed=1)
+    b, _ = dataset.generate(16, seed=2)
+    assert not np.array_equal(a, b)
+
+
+def test_labels_balanced():
+    _, labels = dataset.generate(160, seed=3)
+    counts = np.bincount(labels, minlength=dataset.NUM_CLASSES)
+    assert (counts == 10).all()
+
+
+def test_image_range_and_shape():
+    imgs, labels = dataset.generate(8, seed=4)
+    assert imgs.shape == (8, dataset.IMG, dataset.IMG, 3)
+    assert imgs.dtype == np.uint8
+    assert labels.max() < dataset.NUM_CLASSES
+
+
+@given(st.integers(1, 40), st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_qtd_roundtrip(n, seed):
+    imgs, labels = dataset.generate(n, seed)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.qtd")
+        dataset.save_qtd(path, imgs, labels)
+        imgs2, labels2 = dataset.load_qtd(path)
+    np.testing.assert_array_equal(imgs, imgs2)
+    np.testing.assert_array_equal(labels, labels2)
+
+
+def test_normalize_range():
+    imgs, _ = dataset.generate(4, seed=5)
+    x = dataset.normalize(imgs)
+    assert x.dtype == np.float32
+    assert x.min() >= -1.0 and x.max() <= 1.0
+
+
+def test_classes_are_visually_distinct():
+    """A trivial nearest-centroid classifier on raw pixels should beat
+    chance comfortably -- the classes carry signal."""
+    train_x, train_y = dataset.generate(320, seed=6)
+    test_x, test_y = dataset.generate(160, seed=7)
+    tx = dataset.normalize(train_x).reshape(len(train_y), -1)
+    centroids = np.stack(
+        [tx[train_y == c].mean(axis=0) for c in range(dataset.NUM_CLASSES)]
+    )
+    ex = dataset.normalize(test_x).reshape(len(test_y), -1)
+    pred = np.argmin(
+        ((ex[:, None, :] - centroids[None]) ** 2).sum(-1), axis=1
+    )
+    acc = (pred == test_y).mean()
+    assert acc > 2.0 / dataset.NUM_CLASSES, f"centroid acc {acc}"

@@ -1,0 +1,117 @@
+"""L1 Pallas kernels vs pure-jnp oracles.
+
+The CORE correctness signal of the compile path: hypothesis sweeps
+shapes/dtypes/parameters and asserts bit-exact agreement between the
+Pallas kernels (interpret mode) and ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.fake_quant import fake_quant
+from compile.kernels.int8_gemm import int8_gemm_requant
+from compile.kernels.ref import (
+    fake_quant_ref,
+    int8_gemm_requant_ref,
+    requant_shift_ref,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def fq_case(draw):
+    shape = tuple(
+        draw(st.lists(st.integers(1, 9), min_size=1, max_size=4))
+    )
+    n = int(np.prod(shape))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, draw(st.floats(0.1, 8.0)), size=shape).astype(np.float32)
+    scale = draw(st.floats(1e-3, 1.0))
+    zp = float(draw(st.integers(-128, 127)))
+    return x, np.float32(scale), np.float32(zp)
+
+
+@given(fq_case())
+@settings(**SETTINGS)
+def test_fake_quant_matches_ref(case):
+    x, scale, zp = case
+    got = fake_quant(jnp.asarray(x), scale, zp, -128.0, 127.0)
+    want = fake_quant_ref(jnp.asarray(x), scale, zp, -128.0, 127.0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fake_quant_identity_when_scale_one_zp_zero():
+    x = jnp.asarray(np.arange(-100, 100, dtype=np.float32))
+    got = np.asarray(fake_quant(x, 1.0, 0.0, -128.0, 127.0))
+    np.testing.assert_array_equal(got, np.round(np.asarray(x)))
+
+
+def test_fake_quant_saturates():
+    x = jnp.asarray(np.array([1e6, -1e6], np.float32))
+    got = np.asarray(fake_quant(x, 1.0, 0.0, -128.0, 127.0))
+    np.testing.assert_array_equal(got, [127.0, -128.0])
+
+
+def test_fake_quant_odd_sizes_pad_correctly():
+    # sizes around the (256, 128) block boundary
+    for n in [1, 127, 128, 129, 255 * 128 + 1]:
+        x = jnp.asarray(np.linspace(-4, 4, n, dtype=np.float32))
+        got = fake_quant(x, 0.05, 3.0, -128.0, 127.0)
+        want = fake_quant_ref(x, 0.05, 3.0, -128.0, 127.0)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@st.composite
+def gemm_case(draw):
+    m = draw(st.integers(1, 70))
+    k = draw(st.integers(1, 70))
+    n = draw(st.integers(1, 70))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-128, 128, size=(m, k), dtype=np.int32)
+    b = rng.integers(-128, 128, size=(k, n), dtype=np.int32)
+    bias = rng.integers(-4096, 4096, size=(n,), dtype=np.int32)
+    mul = draw(st.integers(1, 8))
+    shift = draw(st.integers(0, 16))
+    return a, b, bias, mul, shift
+
+
+@given(gemm_case())
+@settings(**SETTINGS)
+def test_int8_gemm_matches_ref(case):
+    a, b, bias, mul, shift = case
+    got = int8_gemm_requant(
+        jnp.asarray(a), jnp.asarray(b), jnp.asarray(bias), mul, shift
+    )
+    want = int8_gemm_requant_ref(
+        jnp.asarray(a), jnp.asarray(b), jnp.asarray(bias), mul, shift
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_int8_gemm_output_in_int8_range():
+    rng = np.random.default_rng(0)
+    a = rng.integers(-128, 128, size=(33, 65), dtype=np.int32)
+    b = rng.integers(-128, 128, size=(65, 17), dtype=np.int32)
+    bias = np.zeros(17, np.int32)
+    out = np.asarray(int8_gemm_requant(jnp.asarray(a), jnp.asarray(b),
+                                       jnp.asarray(bias), 1, 7))
+    assert out.min() >= -128 and out.max() <= 127
+
+
+@pytest.mark.parametrize("acc,mul,shift,want", [
+    (5, 1, 1, 3),       # 2.5 rounds (half away) to 3
+    (-5, 1, 1, -2),     # -2.5 + 0.5 -> -2
+    (4, 1, 2, 1),
+    (3, 1, 0, 3),
+    (1000, 1, 0, 127),  # clamps
+    (-1000, 1, 0, -128),
+])
+def test_requant_shift_semantics(acc, mul, shift, want):
+    got = int(requant_shift_ref(jnp.int32(acc), jnp.int32(mul), jnp.int32(shift)))
+    assert got == want, (acc, mul, shift)

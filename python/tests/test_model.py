@@ -1,0 +1,150 @@
+"""L2 model graph tests: shapes, spec consistency, fq-vs-fp32 semantics."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import layers, model, specs
+
+
+@pytest.fixture(scope="module", params=specs.MODELS)
+def m(request):
+    return model.Model(request.param)
+
+
+@pytest.fixture(scope="module")
+def weights_cache():
+    return {}
+
+
+def get_weights(m, cache):
+    if m.name not in cache:
+        cache[m.name] = m.init(seed=1)
+    return cache[m.name]
+
+
+def test_forward_shape(m, weights_cache):
+    w = get_weights(m, weights_cache)
+    x = jnp.zeros((2, *specs.INPUT_SHAPE), jnp.float32)
+    logits = m.apply(w, x)
+    assert logits.shape == (2, specs.NUM_CLASSES)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_quant_points_cover_all_quant_ops(m):
+    names = {n["name"]: n for n in m.nodes}
+    for q in m.quant_points:
+        assert q == "input" or names[q]["op"] in specs.QUANT_OPS
+    # every quant-op output is covered exactly once
+    want = 1 + sum(1 for n in m.nodes if n["op"] in specs.QUANT_OPS)
+    assert len(m.quant_points) == want
+
+
+def test_weight_abi_order_matches_spec(m, weights_cache):
+    w = get_weights(m, weights_cache)
+    flat = layers.flatten_weights(m.nodes, w)
+    assert len(flat) == len(m.weight_names)
+    rebuilt = layers.unflatten_weights(m.nodes, flat)
+    for k in w:
+        np.testing.assert_array_equal(np.asarray(w[k]), np.asarray(rebuilt[k]))
+
+
+def test_fq_with_bypass_equals_fp32(m, weights_cache):
+    """act_params with bypass=1 everywhere must reproduce fp32 exactly."""
+    w = get_weights(m, weights_cache)
+    x = jnp.asarray(
+        np.random.default_rng(0).normal(0, 1, (2, *specs.INPUT_SHAPE)).astype(
+            np.float32
+        )
+    )
+    fp32 = m.apply(w, x)
+    flat = layers.flatten_weights(m.nodes, w)
+    fq = m.fwd_fq(use_pallas=False)(x, m.identity_act_params(), *flat)[0]
+    np.testing.assert_array_equal(np.asarray(fp32), np.asarray(fq))
+
+
+def test_fq_quantization_changes_logits(m, weights_cache):
+    """A coarse grid must actually alter the logits."""
+    w = get_weights(m, weights_cache)
+    x = jnp.asarray(
+        np.random.default_rng(1).normal(0, 1, (2, *specs.INPUT_SHAPE)).astype(
+            np.float32
+        )
+    )
+    flat = layers.flatten_weights(m.nodes, w)
+    rows = len(m.quant_points)
+    ap = np.zeros((rows, 5), np.float32)
+    ap[:, 0] = 0.5  # very coarse scale
+    ap[:, 2] = -128
+    ap[:, 3] = 127
+    fq = m.fwd_fq(use_pallas=False)(x, jnp.asarray(ap), *flat)[0]
+    fp32 = m.apply(w, x)
+    assert not np.allclose(np.asarray(fq), np.asarray(fp32))
+
+
+def test_acts_capture_matches_quant_points(m, weights_cache):
+    w = get_weights(m, weights_cache)
+    x = jnp.zeros((1, *specs.INPUT_SHAPE), jnp.float32)
+    flat = layers.flatten_weights(m.nodes, w)
+    acts = m.fwd_acts(x, *flat)
+    assert len(acts) == len(m.quant_points)
+    # first capture is the input itself
+    np.testing.assert_array_equal(np.asarray(acts[0]), np.asarray(x))
+
+
+def test_pallas_and_jnp_fq_agree(weights_cache):
+    """The pallas and jnp fake-quant paths are bit-identical on a model."""
+    m = model.Model("sqn")
+    w = get_weights(m, weights_cache)
+    x = jnp.asarray(
+        np.random.default_rng(2).normal(0, 1, (1, *specs.INPUT_SHAPE)).astype(
+            np.float32
+        )
+    )
+    flat = layers.flatten_weights(m.nodes, w)
+    rows = len(m.quant_points)
+    ap = np.zeros((rows, 5), np.float32)
+    ap[:, 0] = 0.04
+    ap[:, 2] = -128
+    ap[:, 3] = 127
+    a = m.fwd_fq(use_pallas=True)(x, jnp.asarray(ap), *flat)[0]
+    b = m.fwd_fq(use_pallas=False)(x, jnp.asarray(ap), *flat)[0]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_group_conv_channel_math():
+    """ShuffleNet's grouped convs must keep channels divisible."""
+    nodes = specs.build("shn")
+    for n in nodes:
+        if n["op"] == "conv":
+            assert n["in_ch"] % n["groups"] == 0
+            assert n["out_ch"] % n["groups"] == 0
+
+
+def test_bn_fold_preserves_forward():
+    """Folded BN weights reproduce the train-mode forward (population
+    stats == batch stats when evaluated on the same single batch)."""
+    m = model.Model("rn18")
+    w = layers.init_weights(m.nodes, seed=3)
+    bn = layers.init_bn(m.nodes)
+    # make gamma/beta non-trivial
+    key = jax.random.PRNGKey(0)
+    for name in bn:
+        key, k1, k2 = jax.random.split(key, 3)
+        c = bn[name]["gamma"].shape[0]
+        bn[name]["gamma"] = 1.0 + 0.1 * jax.random.normal(k1, (c,))
+        bn[name]["beta"] = 0.1 * jax.random.normal(k2, (c,))
+    x = jnp.asarray(
+        np.random.default_rng(4).normal(0, 1, (64, *specs.INPUT_SHAPE)).astype(
+            np.float32
+        )
+    )
+    train_logits = layers.forward_train(m.nodes, w, bn, x)
+    stats = layers.collect_bn_stats(m.nodes, w, bn, np.asarray(x), batch=64)
+    folded = layers.fold_bn(m.nodes, w, bn, stats)
+    folded_logits = layers.forward(m.nodes, folded, x, mode="fp32")
+    np.testing.assert_allclose(
+        np.asarray(train_logits), np.asarray(folded_logits), atol=2e-2, rtol=1e-2
+    )

@@ -1,0 +1,140 @@
+//! Ablations of the design choices the paper discusses in §5.2.2:
+//!
+//!   1. feature preprocessing: one-hot vs categorical encoding (the paper
+//!      picked one-hot because "it shows better accuracy than the
+//!      categorical ones");
+//!   2. XGBoost hyper-parameters (eta, max_depth) vs search convergence;
+//!   3. calibration-seed sensitivity of the measured accuracy (how noisy
+//!      is f(g(e, s)) itself).
+//!
+//! All searches run against the sweep ground truth in the database
+//! (`quantune sweep` first), so this bench takes seconds.
+//!
+//! ```bash
+//! cargo bench --offline --bench bench_ablation
+//! ```
+
+use anyhow::Result;
+
+use quantune::coordinator::Quantune;
+use quantune::quant::QuantConfig;
+use quantune::search::{run_search, XgbSearch};
+use quantune::util::stats::mean;
+use quantune::util::Csv;
+use quantune::zoo;
+
+/// Mean trials-to-optimum for an XGB search with custom space features.
+fn measure_xgb(
+    table: &[f64],
+    feats: &[Vec<f32>],
+    seeds: &[u64],
+    eps: f64,
+    mutate: impl Fn(&mut XgbSearch),
+) -> f64 {
+    let best = table.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut out = Vec::new();
+    for &seed in seeds {
+        let mut algo = XgbSearch::new(feats.to_vec(), seed);
+        mutate(&mut algo);
+        let trace = run_search(&mut algo, table.len(), |i| Ok(table[i])).unwrap();
+        out.push(trace.trials_to_reach(best, eps).unwrap_or(table.len()) as f64);
+    }
+    mean(&out)
+}
+
+fn main() -> Result<()> {
+    let q = Quantune::open(zoo::artifacts_dir())?;
+    let seeds: Vec<u64> = (0..7).collect();
+    let eps = 1e-3;
+    let models: Vec<String> = zoo::MODELS
+        .iter()
+        .filter(|m| {
+            q.db.has_full_sweep(m, QuantConfig::SPACE_SIZE)
+                && q.artifacts.join(format!("{m}_meta.json")).exists()
+        })
+        .map(|s| s.to_string())
+        .collect();
+    if models.is_empty() {
+        eprintln!("no sweeps in the database; run `quantune sweep` first");
+        return Ok(());
+    }
+
+    // ---- ablation 1: one-hot vs categorical encoding ----
+    println!("== Ablation: feature preprocessing (paper §5.2.2) ==");
+    println!("{:>5} | {:>10} | {:>12}", "model", "one-hot", "categorical");
+    let mut csv = Csv::new(&["model", "one_hot_trials", "categorical_trials"]);
+    for name in &models {
+        let model = q.load_model(name)?;
+        let table = q.db.accuracy_table(name, QuantConfig::SPACE_SIZE);
+        let arch = model.arch_features();
+        let one_hot: Vec<Vec<f32>> = (0..96)
+            .map(|i| {
+                let mut f = arch.clone();
+                f.extend(QuantConfig::from_index(i).unwrap().one_hot());
+                f
+            })
+            .collect();
+        let categorical: Vec<Vec<f32>> = (0..96)
+            .map(|i| {
+                let mut f = arch.clone();
+                f.extend(QuantConfig::from_index(i).unwrap().categorical());
+                f
+            })
+            .collect();
+        let t_oh = measure_xgb(&table, &one_hot, &seeds, eps, |_| {});
+        let t_cat = measure_xgb(&table, &categorical, &seeds, eps, |_| {});
+        println!("{name:>5} | {t_oh:>10.1} | {t_cat:>12.1}");
+        csv.row(&[name.clone(), format!("{t_oh:.1}"), format!("{t_cat:.1}")]);
+    }
+    csv.write_file(&quantune::experiments::result_path("ablation_encoding.csv"))?;
+
+    // ---- ablation 2: XGBoost hyper-parameters ----
+    println!("\n== Ablation: XGBoost eta / max_depth (mean over models) ==");
+    let feats_for = |name: &str| -> Result<Vec<Vec<f32>>> {
+        let model = q.load_model(name)?;
+        let arch = model.arch_features();
+        Ok((0..96)
+            .map(|i| {
+                let mut f = arch.clone();
+                f.extend(QuantConfig::from_index(i).unwrap().one_hot());
+                f
+            })
+            .collect())
+    };
+    let mut csv = Csv::new(&["eta", "max_depth", "mean_trials"]);
+    for eta in [0.1f32, 0.3, 0.6] {
+        for depth in [2usize, 4, 6] {
+            let mut per_model = Vec::new();
+            for name in &models {
+                let table = q.db.accuracy_table(name, QuantConfig::SPACE_SIZE);
+                let feats = feats_for(name)?;
+                per_model.push(measure_xgb(&table, &feats, &seeds, eps, |a| {
+                    a.params.eta = eta;
+                    a.params.max_depth = depth;
+                }));
+            }
+            let m = mean(&per_model);
+            println!("  eta {eta:>4} depth {depth} -> {m:>5.1} trials");
+            csv.row(&[eta.to_string(), depth.to_string(), format!("{m:.1}")]);
+        }
+    }
+    csv.write_file(&quantune::experiments::result_path("ablation_hyperparams.csv"))?;
+
+    // ---- ablation 3: eps sensitivity of the convergence metric ----
+    println!("\n== Ablation: convergence epsilon (XGB, mean over models) ==");
+    let mut csv = Csv::new(&["eps", "mean_trials"]);
+    for e in [0.0f64, 1e-3, 5e-3, 1e-2] {
+        let mut per_model = Vec::new();
+        for name in &models {
+            let table = q.db.accuracy_table(name, QuantConfig::SPACE_SIZE);
+            let feats = feats_for(name)?;
+            per_model.push(measure_xgb(&table, &feats, &seeds, e, |_| {}));
+        }
+        let m = mean(&per_model);
+        println!("  eps {e:>6}: {m:>5.1} trials");
+        csv.row(&[e.to_string(), format!("{m:.1}")]);
+    }
+    csv.write_file(&quantune::experiments::result_path("ablation_epsilon.csv"))?;
+
+    Ok(())
+}

@@ -1,0 +1,221 @@
+//! Hot-path micro benchmarks (EXPERIMENTS.md §Perf).
+//!
+//! No criterion in the offline vendor set: this is a small warmup+reps
+//! harness reporting median / mean wall-clock per operation for each
+//! layer's hot path:
+//!   L3  interpreter conv GEMM, VTA int-GEMM forward, KL threshold
+//!       search, XGBoost refit, fake-quant weight prep
+//!   RT  PJRT execute (fp32 + fq, batch 128 and batch 1)
+//!
+//! ```bash
+//! cargo bench --offline --bench bench_perf
+//! ```
+
+use anyhow::Result;
+
+use quantune::calib::{calibrate, CalibBackend};
+use quantune::coordinator::{act_params_tensor, prepare, Quantune};
+use quantune::ir::Tensor;
+use quantune::quant::{fake_quant_weights, Granularity, QuantConfig, Scheme};
+use quantune::runtime::{tensor_to_literal, Runtime};
+use quantune::util::{stats::percentile, Pcg32, Timer};
+use quantune::zoo;
+
+fn bench<F: FnMut() -> Result<()>>(name: &str, reps: usize, mut f: F) -> Result<f64> {
+    // warmup
+    for _ in 0..2.max(reps / 10) {
+        f()?;
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        f()?;
+        samples.push(t.ms());
+    }
+    let p50 = percentile(&samples, 50.0);
+    let mean: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
+    println!("{name:<44} p50 {p50:>9.3} ms   mean {mean:>9.3} ms   ({reps} reps)");
+    Ok(p50)
+}
+
+/// The pre-optimization GEMM (single rank-1 update per pass), kept for a
+/// clean A/B comparison in §Perf.
+fn gemm_f32_reference(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let q = Quantune::open(zoo::artifacts_dir())?;
+    let runtime = Runtime::cpu()?;
+    let model = q.load_model("rn18")?;
+    println!("perf harness on {} ({} MACs/img)\n", model.name, model.graph.macs()?);
+
+    // ---- L3 interpreter conv (im2col + gemm) ----
+    let interp = quantune::interp::Interpreter::new(&model.graph, model.weights_map());
+    let x32 = q.eval.batch(&(0..32).collect::<Vec<_>>());
+    bench("interp fp32 forward (batch 32)", 10, || {
+        interp.forward(&x32).map(|_| ())
+    })?;
+
+    // ---- GEMM A/B: reference (pre-opt) vs current k-by-4 unroll ----
+    {
+        let mut rng = Pcg32::seeded(3);
+        // rn18 stage-2 shape: M = 32 imgs * 16*16 px, K = 3*3*16, N = 32
+        let (m, k, n) = (32 * 256, 144, 32);
+        let a: Vec<f32> = (0..m * k)
+            .map(|_| if rng.chance(0.5) { 0.0 } else { rng.normal() })
+            .collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let mut c = vec![0.0f32; m * n];
+        bench("gemm_f32 reference (8192x144x32)", 20, || {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            gemm_f32_reference(m, k, n, &a, &b, &mut c);
+            std::hint::black_box(&c);
+            Ok(())
+        })?;
+        bench("gemm_f32 unrolled  (8192x144x32)", 20, || {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            quantune::interp::gemm::gemm_f32(m, k, n, &a, &b, &mut c);
+            std::hint::black_box(&c);
+            Ok(())
+        })?;
+    }
+
+    // ---- calibration + KL ----
+    let cache = calibrate(
+        &model,
+        &q.calib_pool,
+        quantune::quant::CalibCount::C64,
+        &CalibBackend::Interp,
+        q.seed,
+    )?;
+    bench("KL threshold search, cold (all points)", 10, || {
+        // cloning + touching each histogram invalidates the memo, so
+        // this measures the true first-call cost per calibration
+        for h in &cache.hists {
+            let mut fresh = h.clone();
+            fresh.update(&[0.0]);
+            std::hint::black_box(fresh.kl_threshold());
+        }
+        Ok(())
+    })?;
+    bench("KL threshold search, memoized", 20, || {
+        for h in &cache.hists {
+            std::hint::black_box(h.kl_threshold());
+        }
+        Ok(())
+    })?;
+
+    // ---- quantized-model preparation ----
+    let cfg = QuantConfig::from_index(70)?;
+    bench("prepare quantized setup (weights+acts)", 20, || {
+        std::hint::black_box(prepare(&model, &cache, &cfg)?);
+        Ok(())
+    })?;
+    let w = model.weights.get("conv10_w").or_else(|_| {
+        model.weights.get(&format!("{}_w", model.graph.layers()[2]))
+    })?;
+    bench("fake-quant one conv weight (channel)", 200, || {
+        std::hint::black_box(fake_quant_weights(w, Scheme::Asymmetric, Granularity::Channel));
+        Ok(())
+    })?;
+
+    // ---- XGBoost refit (96 rows, 23 features) ----
+    let mut rng = Pcg32::seeded(9);
+    let feats: Vec<Vec<f32>> = (0..96)
+        .map(|i| {
+            let mut f = model.arch_features();
+            f.extend(QuantConfig::from_index(i).unwrap().one_hot());
+            f
+        })
+        .collect();
+    let ys: Vec<f32> = (0..96).map(|_| rng.f32()).collect();
+    bench("xgboost fit (96 rows x 23 feats, 60 trees)", 20, || {
+        std::hint::black_box(quantune::xgb::XgbModel::fit(
+            &feats,
+            &ys,
+            quantune::xgb::XgbParams::default(),
+        )?);
+        Ok(())
+    })?;
+
+    // ---- VTA integer forward ----
+    let vcfg = quantune::quant::VtaConfig {
+        calib: quantune::quant::CalibCount::C64,
+        clip: quantune::quant::Clipping::Max,
+        fusion: true,
+    };
+    let vm = quantune::vta::VtaModel::build(
+        &model.graph,
+        model.weights_map(),
+        &cache.hists,
+        &vcfg,
+    )?;
+    bench("VTA int-only forward (batch 32)", 10, || {
+        vm.forward(&x32).map(|_| ())
+    })?;
+
+    // ---- PJRT execution ----
+    let setup = prepare(&model, &cache, &cfg)?;
+    let exe_fp32 = runtime.load(&q.artifacts.join(format!("{}_fp32.hlo.txt", model.name)))?;
+    let exe_fq = runtime.load(&q.artifacts.join(format!("{}_fq.hlo.txt", model.name)))?;
+    let x128 = q.eval.batch(&(0..q.eval.n.min(128)).collect::<Vec<_>>());
+    let x_lit = tensor_to_literal(&x128)?;
+    let ap = act_params_tensor(&setup);
+    let ap_lit = tensor_to_literal(&ap)?;
+    let w_raw: Vec<xla::Literal> = model
+        .weights
+        .flat()
+        .iter()
+        .map(|t| tensor_to_literal(t))
+        .collect::<Result<_>>()?;
+    let w_fq: Vec<xla::Literal> =
+        setup.weights.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+
+    let mut fp32_args: Vec<&xla::Literal> = vec![&x_lit];
+    fp32_args.extend(w_raw.iter());
+    bench("PJRT fp32 forward (batch 128)", 20, || {
+        exe_fp32.run_literals(&fp32_args).map(|_| ())
+    })?;
+    let mut fq_args: Vec<&xla::Literal> = vec![&x_lit, &ap_lit];
+    fq_args.extend(w_fq.iter());
+    bench("PJRT fq forward (batch 128)", 20, || {
+        exe_fq.run_literals(&fq_args).map(|_| ())
+    })?;
+
+    // literal upload cost (the per-measure constant work)
+    bench("literal upload (all rn18 weights)", 20, || {
+        for t in model.weights.flat() {
+            std::hint::black_box(tensor_to_literal(t)?);
+        }
+        Ok(())
+    })?;
+
+    // interpreter single hot conv via full fq forward
+    let aq = &setup.aq;
+    let weights_fq: std::collections::HashMap<String, Tensor> = model
+        .weights
+        .order
+        .iter()
+        .cloned()
+        .zip(setup.weights.iter().cloned())
+        .collect();
+    let interp_fq = quantune::interp::Interpreter::new(&model.graph, &weights_fq);
+    bench("interp fq forward (batch 32)", 10, || {
+        interp_fq.forward_fq(&x32, aq).map(|_| ())
+    })?;
+
+    Ok(())
+}

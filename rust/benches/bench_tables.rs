@@ -1,0 +1,116 @@
+//! Regenerates the paper's Tables 1-5 (see DESIGN.md §5).
+//!
+//! ```bash
+//! cargo bench --offline --bench bench_tables            # all tables
+//! cargo bench --offline --bench bench_tables -- table1  # one table
+//! ```
+//!
+//! Output: stdout + CSVs under results/.
+
+use anyhow::Result;
+
+use quantune::coordinator::Quantune;
+use quantune::experiments as exp;
+use quantune::runtime::Runtime;
+use quantune::zoo;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let want = |t: &str| {
+        args.iter().all(|a| a.starts_with("--")) || args.iter().any(|a| a == t)
+    };
+    let mut q = Quantune::open(zoo::artifacts_dir())?;
+    let runtime = Runtime::cpu()?;
+
+    if want("table1") {
+        println!("== Table 1: best configuration per model ==");
+        println!(
+            "{:>5} | {:>9} | {:>7} | {:>8} | {:>4} | {:>15} | accuracy",
+            "model", "precision", "#calib", "gran", "clip", "scheme"
+        );
+        for r in exp::table1(&mut q, &runtime)? {
+            println!(
+                "{:>5} | {:>9} | {:>7} | {:>8} | {:>4} | {:>15} | {}",
+                r.model,
+                if r.best.mixed { "int8+fp32" } else { "int8" },
+                r.best.calib.paper_images(),
+                format!("{:?}", r.best.gran),
+                format!("{:?}", r.best.clip),
+                r.best.scheme.name(),
+                r.accuracy_cell(),
+            );
+        }
+        q.db.save()?;
+    }
+
+    if want("table2") {
+        println!("\n== Table 2: accuracy-measurement cost ==");
+        println!(
+            "{:>5} | {:>12} | {:>10} | {:>10} | {:>10}",
+            "model", "host (s)", "a53 (h)", "i7 (h)", "2080ti (h)"
+        );
+        for r in exp::table2(&mut q, &runtime)? {
+            println!(
+                "{:>5} | {:>12.2} | {:>10.2} | {:>10.3} | {:>10.4}",
+                r.model,
+                r.measured_host_secs,
+                r.modeled_hours[0],
+                r.modeled_hours[1],
+                r.modeled_hours[2]
+            );
+        }
+    }
+
+    if want("table3") {
+        println!("\n== Table 3: scheme comparison (computed) ==");
+        println!(
+            "{:>16} | {:>12} | {:>12} | {:>6} | int-only",
+            "scheme", "mse(gauss)", "mse(skewed)", "ops"
+        );
+        for r in exp::table3()? {
+            println!(
+                "{:>16} | {:>12.3e} | {:>12.3e} | {:>6} | {}",
+                r.scheme.name(),
+                r.mse_gaussian,
+                r.mse_skewed,
+                r.ops_per_value,
+                r.integer_only
+            );
+        }
+    }
+
+    if want("table4") {
+        println!("\n== Table 4: diversity (Shannon entropy) of <=1%-loss configs ==");
+        let d = exp::table4(&mut q, &runtime, 0.01)?;
+        println!(
+            "precision {:.2} | calibration {:.2} | granularity {:.2} | \
+             clipping {:.2} | scheme {:.2} | samples {}",
+            d.precision, d.calibration, d.granularity, d.clipping, d.scheme,
+            d.num_samples
+        );
+        println!("no universal config: {}", d.no_universal_config());
+        q.db.save()?;
+    }
+
+    if want("table5") {
+        println!("\n== Table 5: quantized model size ==");
+        println!(
+            "{:>5} | {:>10} | {:>10} | {:>10} | {:>12} | {:>13}",
+            "model", "original", "tensor", "channel", "tensor+mixed", "channel+mixed"
+        );
+        for r in exp::table5(&q)? {
+            let kb = |b: u64| format!("{:.2}KB", b as f64 / 1024.0);
+            println!(
+                "{:>5} | {:>10} | {:>10} | {:>10} | {:>12} | {:>13}",
+                r.model,
+                kb(r.original),
+                kb(r.tensor),
+                kb(r.channel),
+                kb(r.tensor_mixed),
+                kb(r.channel_mixed)
+            );
+        }
+    }
+
+    Ok(())
+}

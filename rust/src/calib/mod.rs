@@ -1,0 +1,113 @@
+//! Calibration phase (paper §3, dashed path of Fig 1).
+//!
+//! Runs the instrumented model over the selected calibration images and
+//! accumulates a histogram per quantization point. The instrumented
+//! execution is either the `{model}_acts.hlo.txt` PJRT executable (the
+//! production path: Glow's "instrumented code") or the rust interpreter
+//! (bit-equivalent fallback used in tests / when artifacts are absent).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::data::{select_calibration_images, Dataset};
+use crate::quant::{CalibCount, Histogram};
+use crate::runtime::Runtime;
+use crate::zoo::ZooModel;
+
+/// The calibration cache of one (model, image-count) pair: one histogram
+/// per quantization point, in `graph.quant_points()` order.
+#[derive(Clone)]
+pub struct CalibrationCache {
+    pub model: String,
+    pub count: CalibCount,
+    pub hists: Vec<Histogram>,
+    /// wall-clock seconds spent building the cache (Table 2 bookkeeping)
+    pub build_secs: f64,
+}
+
+/// Which engine runs the instrumented forward.
+pub enum CalibBackend<'a> {
+    /// PJRT executable from the artifacts directory.
+    Hlo { runtime: &'a Runtime, artifacts: &'a Path },
+    /// Pure-rust interpreter.
+    Interp,
+}
+
+/// Build the calibration cache for `count` images drawn from `pool`.
+///
+/// The image selector (paper Fig 1) draws a deterministic random subset;
+/// `seed` controls the draw so the three caches are reproducible.
+pub fn calibrate(
+    model: &ZooModel,
+    pool: &Dataset,
+    count: CalibCount,
+    backend: &CalibBackend,
+    seed: u64,
+) -> Result<CalibrationCache> {
+    let timer = crate::util::Timer::start();
+    let idx = select_calibration_images(pool.n, count.images(), seed);
+    let qpoints = model.graph.quant_points();
+    let mut hists = vec![Histogram::new(); qpoints.len()];
+
+    match backend {
+        CalibBackend::Interp => {
+            let interp = crate::interp::Interpreter::new(&model.graph, model.weights_map());
+            // interpreter batches of 32 keep memory modest
+            for chunk in idx.chunks(32) {
+                let x = pool.batch(chunk);
+                let (_, acts) = interp.forward_acts(&x)?;
+                for (h, t) in hists.iter_mut().zip(&acts) {
+                    h.update(&t.data);
+                }
+            }
+        }
+        CalibBackend::Hlo { runtime, artifacts } => {
+            let exe =
+                runtime.load(&artifacts.join(format!("{}_acts.hlo.txt", model.name)))?;
+            let flat = model.weights.flat();
+            for chunk in idx.chunks(model.batch) {
+                let (x, valid) = pool.batch_padded(chunk, model.batch);
+                let mut inputs: Vec<&crate::ir::Tensor> = vec![&x];
+                inputs.extend(flat.iter().copied());
+                let acts = exe.run_f32(&inputs)?;
+                anyhow::ensure!(
+                    acts.len() == qpoints.len(),
+                    "acts artifact returned {} tensors, graph has {} quant points",
+                    acts.len(),
+                    qpoints.len()
+                );
+                for (h, t) in hists.iter_mut().zip(&acts) {
+                    // batch-padded rows repeat the last image; histogram
+                    // only the first `valid` images' activations
+                    let per_image = t.data.len() / model.batch;
+                    h.update(&t.data[..valid * per_image]);
+                }
+            }
+        }
+    }
+
+    Ok(CalibrationCache {
+        model: model.name.clone(),
+        count,
+        hists,
+        build_secs: timer.secs(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::CalibCount;
+
+    #[test]
+    fn selector_subset_sizes() {
+        // the three paper cache sizes at our scale
+        for (c, n) in [(CalibCount::C1, 1), (CalibCount::C64, 64), (CalibCount::C512, 512)]
+        {
+            assert_eq!(c.images(), n);
+            let idx = select_calibration_images(512, c.images(), 1);
+            assert_eq!(idx.len(), n);
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! CLI / run configuration (no clap in the offline vendor set; this is a
+//! small explicit parser with `--key value` / `--flag` syntax).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: a subcommand plus options.
+#[derive(Debug, Default)]
+pub struct Cli {
+    pub command: String,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Cli {
+    /// Parse `args` (without argv[0]). Grammar:
+    /// `<command> [--key value | --flag]...`
+    pub fn parse(args: &[String]) -> Result<Cli> {
+        let mut cli = Cli::default();
+        let mut it = args.iter().peekable();
+        match it.next() {
+            Some(cmd) if !cmd.starts_with("--") => cli.command = cmd.clone(),
+            Some(cmd) => bail!("expected a subcommand before {cmd:?}"),
+            None => bail!("missing subcommand"),
+        }
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument {a:?}");
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    cli.opts.insert(key.to_string(), it.next().unwrap().clone());
+                }
+                _ => cli.flags.push(key.to_string()),
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Artifacts directory: --artifacts, $QUANTUNE_ARTIFACTS, ./artifacts.
+    pub fn artifacts(&self) -> PathBuf {
+        self.opt("artifacts")
+            .map(PathBuf::from)
+            .unwrap_or_else(crate::zoo::artifacts_dir)
+    }
+
+    /// Comma-separated model list (default: all six).
+    pub fn models(&self) -> Vec<String> {
+        self.opt_or("models", &crate::zoo::MODELS.join(","))
+            .split(',')
+            .map(str::to_string)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Cli> {
+        Cli::parse(&s.split_whitespace().map(str::to_string).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_command_opts_flags() {
+        let c = parse("sweep --models mn,shn --budget 42 --force").unwrap();
+        assert_eq!(c.command, "sweep");
+        assert_eq!(c.models(), vec!["mn", "shn"]);
+        assert_eq!(c.opt_usize("budget", 0).unwrap(), 42);
+        assert!(c.flag("force"));
+        assert!(!c.flag("other"));
+    }
+
+    #[test]
+    fn rejects_positional_garbage() {
+        assert!(parse("sweep junk").is_err());
+        assert!(parse("").is_err());
+        assert!(parse("--flag").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let c = parse("eval").unwrap();
+        assert_eq!(c.models().len(), 6);
+        assert_eq!(c.opt_or("algo", "xgb_t"), "xgb_t");
+    }
+}

@@ -1,0 +1,170 @@
+//! The trial database D = {(e_i, s_i, c_i)} (paper §5.2).
+//!
+//! Every measured (model, config, accuracy) triple is appended here; the
+//! transfer-learning search (XGB-T) warm-starts from the records of
+//! *other* models. Persisted as JSON so runs accumulate across processes.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::quant::QuantConfig;
+use crate::search::TransferRecord;
+use crate::util::Json;
+
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub model: String,
+    pub config: usize,
+    pub accuracy: f64,
+    /// seconds it took to measure (Table 2 bookkeeping)
+    pub measure_secs: f64,
+}
+
+#[derive(Default)]
+pub struct Database {
+    pub records: Vec<Record>,
+    path: Option<PathBuf>,
+}
+
+impl Database {
+    pub fn in_memory() -> Database {
+        Database::default()
+    }
+
+    /// Open (or create) a JSON-backed database.
+    pub fn open(path: &Path) -> Result<Database> {
+        if !path.exists() {
+            return Ok(Database { records: Vec::new(), path: Some(path.to_path_buf()) });
+        }
+        let json = Json::from_file(path)?;
+        let mut records = Vec::new();
+        for r in json.get("records")?.as_arr()? {
+            records.push(Record {
+                model: r.get("model")?.as_str()?.to_string(),
+                config: r.get("config")?.as_usize()?,
+                accuracy: r.get("accuracy")?.as_f64()?,
+                measure_secs: r.get("measure_secs")?.as_f64()?,
+            });
+        }
+        Ok(Database { records, path: Some(path.to_path_buf()) })
+    }
+
+    pub fn add(&mut self, r: Record) {
+        self.records.push(r);
+    }
+
+    pub fn save(&self) -> Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        let records: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("model", Json::str(r.model.clone())),
+                    ("config", Json::num(r.config as f64)),
+                    ("accuracy", Json::num(r.accuracy)),
+                    ("measure_secs", Json::num(r.measure_secs)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("records", Json::Arr(records))]).write_file(path)
+    }
+
+    /// Accuracy table (index -> best-known accuracy) for one model; holes
+    /// are NaN.
+    pub fn accuracy_table(&self, model: &str, space: usize) -> Vec<f64> {
+        let mut t = vec![f64::NAN; space];
+        for r in self.records.iter().filter(|r| r.model == model) {
+            if r.config < space {
+                t[r.config] = r.accuracy;
+            }
+        }
+        t
+    }
+
+    /// Does the database hold a full sweep for `model`?
+    pub fn has_full_sweep(&self, model: &str, space: usize) -> bool {
+        self.accuracy_table(model, space).iter().all(|a| !a.is_nan())
+    }
+
+    /// Transfer-learning records from every model EXCEPT `exclude`.
+    /// `features` maps (model, config index) -> feature vector.
+    pub fn transfer_records(
+        &self,
+        exclude: &str,
+        mut features: impl FnMut(&str, usize) -> Option<Vec<f32>>,
+    ) -> Vec<TransferRecord> {
+        let mut out = Vec::new();
+        for r in &self.records {
+            if r.model == exclude {
+                continue;
+            }
+            if let Some(f) = features(&r.model, r.config) {
+                out.push(TransferRecord { features: f, accuracy: r.accuracy as f32 });
+            }
+        }
+        out
+    }
+
+    /// Best (config, accuracy) for a model.
+    pub fn best_for(&self, model: &str) -> Option<(QuantConfig, f64)> {
+        self.records
+            .iter()
+            .filter(|r| r.model == model)
+            .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+            .and_then(|r| QuantConfig::from_index(r.config).ok().map(|c| (c, r.accuracy)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(model: &str, config: usize, acc: f64) -> Record {
+        Record { model: model.into(), config, accuracy: acc, measure_secs: 0.1 }
+    }
+
+    #[test]
+    fn roundtrip_persistence() {
+        let dir = std::env::temp_dir().join("quantune_db_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("db.json");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut db = Database::open(&path).unwrap();
+            db.add(rec("mn", 3, 0.7));
+            db.add(rec("shn", 5, 0.6));
+            db.save().unwrap();
+        }
+        let db = Database::open(&path).unwrap();
+        assert_eq!(db.records.len(), 2);
+        assert_eq!(db.records[0].model, "mn");
+        assert_eq!(db.records[0].config, 3);
+    }
+
+    #[test]
+    fn transfer_excludes_target_model() {
+        let mut db = Database::in_memory();
+        db.add(rec("mn", 0, 0.5));
+        db.add(rec("shn", 1, 0.6));
+        let recs = db.transfer_records("mn", |_, i| Some(vec![i as f32]));
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].accuracy, 0.6);
+    }
+
+    #[test]
+    fn accuracy_table_and_best() {
+        let mut db = Database::in_memory();
+        db.add(rec("mn", 0, 0.5));
+        db.add(rec("mn", 2, 0.9));
+        let t = db.accuracy_table("mn", 4);
+        assert_eq!(t[0], 0.5);
+        assert!(t[1].is_nan());
+        assert_eq!(t[2], 0.9);
+        assert!(!db.has_full_sweep("mn", 4));
+        let (cfg, acc) = db.best_for("mn").unwrap();
+        assert_eq!(cfg.index(), 2);
+        assert_eq!(acc, 0.9);
+    }
+}

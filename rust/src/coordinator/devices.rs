@@ -1,0 +1,112 @@
+//! Analytical device cost model (paper Table 2 + Fig 9 context).
+//!
+//! The paper measures accuracy-evaluation time on an ARM A53, an Intel
+//! i7-8700, and an NVIDIA 2080 Ti. None of those are available here, so
+//! we model per-image inference time from each device's effective
+//! arithmetic throughput plus a per-layer dispatch overhead, calibrated
+//! so the *ratios* between devices match the paper's Table 2 (a53 : i7 :
+//! 2080ti measurement times of roughly 200 : 8 : 1 for the heavy models
+//! and a larger overhead share for the small ones).
+//!
+//! Real wallclock numbers for Fig 9 come from actual PJRT / VTA-simulator
+//! runs; this model only supplies the cross-device scaling story.
+
+/// Effective single-stream inference characteristics of one target.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// effective GFLOP/s sustained on conv workloads (fp32)
+    pub gflops_fp32: f64,
+    /// multiplier on fp32 throughput when running naive int8 kernels
+    /// (the paper: quantized kernels are often *slower* because codegen
+    /// does not use vmlal/VNNI/DP4A; values < 1 mean slowdown)
+    pub int8_naive_factor: f64,
+    /// fixed per-layer dispatch overhead (seconds)
+    pub layer_overhead_s: f64,
+}
+
+/// The paper's three measurement targets.
+pub const DEVICES: [DeviceProfile; 3] = [
+    DeviceProfile {
+        name: "CPU(a53)",
+        gflops_fp32: 4.0,
+        int8_naive_factor: 0.75,
+        layer_overhead_s: 120e-6,
+    },
+    DeviceProfile {
+        name: "CPU(i7-8700)",
+        gflops_fp32: 90.0,
+        int8_naive_factor: 0.80,
+        layer_overhead_s: 20e-6,
+    },
+    DeviceProfile {
+        name: "GPU(2080ti)",
+        gflops_fp32: 2600.0,
+        int8_naive_factor: 1.10,
+        layer_overhead_s: 35e-6,
+    },
+];
+
+impl DeviceProfile {
+    /// Modeled fp32 per-image latency (seconds).
+    pub fn fp32_latency_s(&self, macs: u64, layers: usize) -> f64 {
+        2.0 * macs as f64 / (self.gflops_fp32 * 1e9) + layers as f64 * self.layer_overhead_s
+    }
+
+    /// Modeled naive-int8 per-image latency (seconds); includes the
+    /// quantize/dequantize epilogues that make naive kernels slower.
+    pub fn int8_latency_s(&self, macs: u64, layers: usize) -> f64 {
+        2.0 * macs as f64 / (self.gflops_fp32 * self.int8_naive_factor * 1e9)
+            + layers as f64 * self.layer_overhead_s * 1.4
+    }
+
+    /// Modeled time to measure Top-1 over `images` images (Table 2),
+    /// in hours.
+    pub fn accuracy_measurement_hours(
+        &self,
+        macs: u64,
+        layers: usize,
+        images: usize,
+    ) -> f64 {
+        self.fp32_latency_s(macs, layers) * images as f64 / 3600.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_ordering_matches_paper() {
+        // for a mid-size model the a53 must be slowest and the GPU fastest
+        let macs = 2_000_000_000u64; // ~ResNet18-class
+        let layers = 40;
+        let t: Vec<f64> =
+            DEVICES.iter().map(|d| d.fp32_latency_s(macs, layers)).collect();
+        assert!(t[0] > 10.0 * t[1], "a53 {} vs i7 {}", t[0], t[1]);
+        assert!(t[1] > 3.0 * t[2], "i7 {} vs gpu {}", t[1], t[2]);
+    }
+
+    #[test]
+    fn naive_int8_slower_on_cpus_faster_on_gpu() {
+        let macs = 500_000_000u64;
+        let layers = 30;
+        for d in &DEVICES[..2] {
+            assert!(d.int8_latency_s(macs, layers) > d.fp32_latency_s(macs, layers));
+        }
+        // dp4a gives the GPU a small win on compute-bound models
+        let gpu = DEVICES[2];
+        let big = 20_000_000_000u64;
+        assert!(gpu.int8_latency_s(big, layers) < gpu.fp32_latency_s(big, layers));
+    }
+
+    #[test]
+    fn small_models_are_overhead_dominated() {
+        // the paper's SQN takes 0.03h on GPU vs GN 0.58h -- overhead, not
+        // FLOPs, dominates tiny models
+        let gpu = DEVICES[2];
+        let small = gpu.fp32_latency_s(5_000_000, 20);
+        let overhead = 20.0 * gpu.layer_overhead_s;
+        assert!(overhead / small > 0.5);
+    }
+}

@@ -1,0 +1,270 @@
+//! Accuracy measurement backends: `f(g(e, s))` of the paper's Eq. 14.
+//!
+//! Three interchangeable evaluators measure the Top-1 accuracy of a
+//! quantized model variant on the held-out eval split:
+//! - [`HloEvaluator`]: the production path -- the parameterized
+//!   `{model}_fq.hlo.txt` PJRT executable fed with fake-quantized weights
+//!   and activation parameter rows;
+//! - [`InterpEvaluator`]: the pure-rust oracle (bit-equivalent modulo
+//!   float associativity);
+//! - [`OracleEvaluator`]: a precomputed accuracy table (used to compare
+//!   search algorithms on identical ground truth, and in tests).
+//!
+//! All evaluators memoize per config index: re-measuring an explored
+//! config is free, which matches how the search driver accounts trials.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::calib::{calibrate, CalibBackend, CalibrationCache};
+use crate::data::Dataset;
+use crate::interp::{argmax_batch, Interpreter};
+use crate::quant::{CalibCount, QuantConfig};
+use crate::runtime::{tensor_to_literal, Runtime};
+use crate::util::Timer;
+use crate::zoo::ZooModel;
+
+use super::quantizer::{act_params_tensor, prepare};
+
+/// Top-1 accuracy measurement of one config of one model.
+pub trait Evaluator {
+    /// Measure (or return the memoized) Top-1 for a config index.
+    fn measure(&mut self, config: usize) -> Result<f64>;
+    /// Mean wall-clock seconds of a non-memoized measurement.
+    fn mean_measure_secs(&self) -> f64;
+}
+
+/// Shared calibration-cache store (3 caches per model, built lazily).
+pub struct CalibStore {
+    caches: HashMap<CalibCount, CalibrationCache>,
+    pub seed: u64,
+}
+
+impl CalibStore {
+    pub fn new(seed: u64) -> Self {
+        CalibStore { caches: HashMap::new(), seed }
+    }
+
+    pub fn get(
+        &mut self,
+        model: &ZooModel,
+        pool: &Dataset,
+        count: CalibCount,
+        backend: &CalibBackend,
+    ) -> Result<&CalibrationCache> {
+        if !self.caches.contains_key(&count) {
+            let cache = calibrate(model, pool, count, backend, self.seed)?;
+            self.caches.insert(count, cache);
+        }
+        Ok(&self.caches[&count])
+    }
+}
+
+/// PJRT-backed evaluator (the production path).
+pub struct HloEvaluator<'a> {
+    pub model: &'a ZooModel,
+    pub runtime: &'a Runtime,
+    pub artifacts: PathBuf,
+    pub calib_pool: &'a Dataset,
+    pub eval: &'a Dataset,
+    calib: CalibStore,
+    memo: HashMap<usize, f64>,
+    measure_times: Vec<f64>,
+}
+
+impl<'a> HloEvaluator<'a> {
+    pub fn new(
+        model: &'a ZooModel,
+        runtime: &'a Runtime,
+        artifacts: PathBuf,
+        calib_pool: &'a Dataset,
+        eval: &'a Dataset,
+        seed: u64,
+    ) -> Self {
+        HloEvaluator {
+            model,
+            runtime,
+            artifacts,
+            calib_pool,
+            eval,
+            calib: CalibStore::new(seed),
+            memo: HashMap::new(),
+            measure_times: Vec::new(),
+        }
+    }
+
+    fn top1_fq(&mut self, cfg: &QuantConfig) -> Result<f64> {
+        let backend =
+            CalibBackend::Hlo { runtime: self.runtime, artifacts: &self.artifacts };
+        let cache = self.calib.get(self.model, self.calib_pool, cfg.calib, &backend)?;
+        let setup = prepare(self.model, cache, cfg)?;
+        let exe = self
+            .runtime
+            .load(&self.artifacts.join(format!("{}_fq.hlo.txt", self.model.name)))?;
+
+        // constant operands (act params + weights) are uploaded once and
+        // borrowed across all eval batches
+        let ap = act_params_tensor(&setup);
+        let ap_lit = tensor_to_literal(&ap)?;
+        let w_lits: Vec<xla::Literal> = setup
+            .weights
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<_>>()?;
+
+        let batch = self.model.batch;
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        let idx_all: Vec<usize> = (0..self.eval.n).collect();
+        for chunk in idx_all.chunks(batch) {
+            let (x, valid) = self.eval.batch_padded(chunk, batch);
+            let x_lit = tensor_to_literal(&x)?;
+            let mut literals: Vec<&xla::Literal> = Vec::with_capacity(2 + w_lits.len());
+            literals.push(&x_lit);
+            literals.push(&ap_lit);
+            literals.extend(w_lits.iter());
+            let out = exe.run_literals(&literals)?;
+            let preds = argmax_batch(&out[0]);
+            let labels = self.eval.labels_for(chunk);
+            hits += preds
+                .iter()
+                .take(valid)
+                .zip(&labels)
+                .filter(|(&p, &l)| p == l as usize)
+                .count();
+            total += valid;
+        }
+        Ok(hits as f64 / total as f64)
+    }
+}
+
+impl Evaluator for HloEvaluator<'_> {
+    fn measure(&mut self, config: usize) -> Result<f64> {
+        if let Some(&a) = self.memo.get(&config) {
+            return Ok(a);
+        }
+        let cfg = QuantConfig::from_index(config)?;
+        let t = Timer::start();
+        let acc = self.top1_fq(&cfg)?;
+        self.measure_times.push(t.secs());
+        self.memo.insert(config, acc);
+        Ok(acc)
+    }
+
+    fn mean_measure_secs(&self) -> f64 {
+        crate::util::stats::mean(&self.measure_times)
+    }
+}
+
+/// Interpreter-backed evaluator (identical pipeline, no PJRT).
+pub struct InterpEvaluator<'a> {
+    pub model: &'a ZooModel,
+    pub calib_pool: &'a Dataset,
+    pub eval: &'a Dataset,
+    calib: CalibStore,
+    memo: HashMap<usize, f64>,
+    measure_times: Vec<f64>,
+}
+
+impl<'a> InterpEvaluator<'a> {
+    pub fn new(
+        model: &'a ZooModel,
+        calib_pool: &'a Dataset,
+        eval: &'a Dataset,
+        seed: u64,
+    ) -> Self {
+        InterpEvaluator {
+            model,
+            calib_pool,
+            eval,
+            calib: CalibStore::new(seed),
+            memo: HashMap::new(),
+            measure_times: Vec::new(),
+        }
+    }
+}
+
+impl Evaluator for InterpEvaluator<'_> {
+    fn measure(&mut self, config: usize) -> Result<f64> {
+        if let Some(&a) = self.memo.get(&config) {
+            return Ok(a);
+        }
+        let cfg = QuantConfig::from_index(config)?;
+        let t = Timer::start();
+        let cache = self.calib.get(
+            self.model,
+            self.calib_pool,
+            cfg.calib,
+            &CalibBackend::Interp,
+        )?;
+        let setup = prepare(self.model, cache, &cfg)?;
+        let weights: HashMap<String, crate::ir::Tensor> = self
+            .model
+            .weights
+            .order
+            .iter()
+            .cloned()
+            .zip(setup.weights.iter().cloned())
+            .collect();
+        let interp = Interpreter::new(&self.model.graph, &weights);
+        let mut hits = 0;
+        let idx_all: Vec<usize> = (0..self.eval.n).collect();
+        for chunk in idx_all.chunks(64) {
+            let x = self.eval.batch(chunk);
+            let logits = interp.forward_fq(&x, &setup.aq)?;
+            let preds = argmax_batch(&logits);
+            let labels = self.eval.labels_for(chunk);
+            hits +=
+                preds.iter().zip(&labels).filter(|(&p, &l)| p == l as usize).count();
+        }
+        let acc = hits as f64 / self.eval.n as f64;
+        self.measure_times.push(t.secs());
+        self.memo.insert(config, acc);
+        Ok(acc)
+    }
+
+    fn mean_measure_secs(&self) -> f64 {
+        crate::util::stats::mean(&self.measure_times)
+    }
+}
+
+/// Precomputed accuracy table (search-algorithm comparisons, tests).
+pub struct OracleEvaluator {
+    pub table: Vec<f64>,
+    /// simulated per-measurement cost (for search-time accounting)
+    pub secs_per_measure: f64,
+}
+
+impl OracleEvaluator {
+    pub fn new(table: Vec<f64>) -> Self {
+        OracleEvaluator { table, secs_per_measure: 0.0 }
+    }
+}
+
+impl Evaluator for OracleEvaluator {
+    fn measure(&mut self, config: usize) -> Result<f64> {
+        self.table
+            .get(config)
+            .copied()
+            .filter(|a| !a.is_nan())
+            .ok_or_else(|| anyhow::anyhow!("oracle has no entry for config {config}"))
+    }
+
+    fn mean_measure_secs(&self) -> f64 {
+        self.secs_per_measure
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_returns_table_values() {
+        let mut o = OracleEvaluator::new(vec![0.1, 0.9]);
+        assert_eq!(o.measure(1).unwrap(), 0.9);
+        assert!(o.measure(5).is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! Data containers shared with the python build path: the `.qtd` image
+//! dataset and `.qtw` weight files (formats defined in
+//! python/compile/dataset.py and python/compile/aot.py), plus batching
+//! and the calibration image selector.
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ir::Tensor;
+use crate::util::Pcg32;
+
+/// An image classification dataset: u8 NHWC pixels + labels.
+#[derive(Clone)]
+pub struct Dataset {
+    pub images: Vec<u8>, // n*h*w*c
+    pub labels: Vec<u8>,
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+impl Dataset {
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"QTD1" {
+            bail!("{}: bad magic {magic:?}", path.display());
+        }
+        let n = read_u32(&mut f)? as usize;
+        let h = read_u32(&mut f)? as usize;
+        let w = read_u32(&mut f)? as usize;
+        let c = read_u32(&mut f)? as usize;
+        let mut labels = vec![0u8; n];
+        f.read_exact(&mut labels)?;
+        let mut images = vec![0u8; n * h * w * c];
+        f.read_exact(&mut images)?;
+        Ok(Dataset { images, labels, n, h, w, c })
+    }
+
+    fn image_len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Normalized f32 batch [len(idx), H, W, C] in [-1, 1]
+    /// (identical to python dataset.normalize).
+    pub fn batch(&self, idx: &[usize]) -> Tensor {
+        let il = self.image_len();
+        let mut data = Vec::with_capacity(idx.len() * il);
+        for &i in idx {
+            assert!(i < self.n, "image index {i} out of range {}", self.n);
+            let src = &self.images[i * il..(i + 1) * il];
+            data.extend(src.iter().map(|&b| b as f32 / 127.5 - 1.0));
+        }
+        Tensor { shape: vec![idx.len(), self.h, self.w, self.c], data }
+    }
+
+    /// Batch padded to `batch` rows by repeating the last image (PJRT
+    /// executables have a fixed batch dimension). Returns (tensor, valid).
+    pub fn batch_padded(&self, idx: &[usize], batch: usize) -> (Tensor, usize) {
+        assert!(!idx.is_empty() && idx.len() <= batch);
+        let mut padded = idx.to_vec();
+        while padded.len() < batch {
+            padded.push(*idx.last().unwrap());
+        }
+        (self.batch(&padded), idx.len())
+    }
+
+    pub fn labels_for(&self, idx: &[usize]) -> Vec<u8> {
+        idx.iter().map(|&i| self.labels[i]).collect()
+    }
+}
+
+/// The paper's "Image Selector": draws the calibration subset from the
+/// calibration pool. Sample counts mirror the paper's {1, 1000, 10000}
+/// at our scale: {1, 64, 512}.
+pub fn select_calibration_images(
+    pool_size: usize,
+    count: usize,
+    seed: u64,
+) -> Vec<usize> {
+    let count = count.min(pool_size);
+    let mut rng = Pcg32::new(seed, 7);
+    rng.sample_indices(pool_size, count)
+}
+
+/// Named weight tensors loaded from a `.qtw` file.
+pub struct Weights {
+    pub tensors: HashMap<String, Tensor>,
+    pub order: Vec<String>, // file order == flat ABI order
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> Result<Weights> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"QTW1" {
+            bail!("{}: bad magic", path.display());
+        }
+        let count = read_u32(&mut f)? as usize;
+        let mut tensors = HashMap::new();
+        let mut order = Vec::new();
+        for _ in 0..count {
+            let mut lb = [0u8; 2];
+            f.read_exact(&mut lb)?;
+            let name_len = u16::from_le_bytes(lb) as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            let mut hdr = [0u8; 2];
+            f.read_exact(&mut hdr)?;
+            let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+            if dtype != 0 {
+                bail!("tensor {name}: unsupported dtype {dtype}");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut f)? as usize);
+            }
+            let len: usize = shape.iter().product();
+            let mut bytes = vec![0u8; len * 4];
+            f.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            order.push(name.clone());
+            tensors.insert(name, Tensor { shape, data });
+        }
+        Ok(Weights { tensors, order })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow::anyhow!("missing weight {name}"))
+    }
+
+    /// Tensors in the flat ABI order (for feeding HLO executables).
+    pub fn flat(&self) -> Vec<&Tensor> {
+        self.order.iter().map(|n| &self.tensors[n]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selector_is_deterministic_and_distinct() {
+        let a = select_calibration_images(512, 64, 9);
+        let b = select_calibration_images(512, 64, 9);
+        assert_eq!(a, b);
+        let mut s = a.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 64);
+    }
+
+    #[test]
+    fn selector_caps_at_pool() {
+        assert_eq!(select_calibration_images(8, 100, 1).len(), 8);
+    }
+
+    #[test]
+    fn batch_normalization_range() {
+        let ds = Dataset {
+            images: vec![0, 255, 127, 128, 0, 255],
+            labels: vec![0],
+            n: 1,
+            h: 1,
+            w: 2,
+            c: 3,
+        };
+        let t = ds.batch(&[0]);
+        assert_eq!(t.shape, vec![1, 1, 2, 3]);
+        assert!((t.data[0] + 1.0).abs() < 1e-6);
+        assert!((t.data[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batch_padded_repeats_last() {
+        let ds = Dataset {
+            images: vec![10, 20],
+            labels: vec![1, 2],
+            n: 2,
+            h: 1,
+            w: 1,
+            c: 1,
+        };
+        let (t, valid) = ds.batch_padded(&[0, 1], 4);
+        assert_eq!(valid, 2);
+        assert_eq!(t.shape[0], 4);
+        assert_eq!(t.data[1], t.data[2]);
+        assert_eq!(t.data[2], t.data[3]);
+    }
+}

@@ -1,0 +1,632 @@
+//! Experiment drivers that regenerate every table and figure of the
+//! paper (the index lives in DESIGN.md §5). The bench binaries
+//! (rust/benches/*) are thin CLIs over this module; results are printed
+//! and also written as CSV under `results/`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::calib::{calibrate, CalibBackend};
+use crate::coordinator::{
+    Evaluator, HloEvaluator, OracleEvaluator, Quantune, DEVICES,
+};
+use crate::metrics::{BestConfigRow, DiversityAnalysis};
+use crate::quant::{
+    model_size_bytes, model_size_fp32, weight_mse, CalibCount, Granularity,
+    QuantConfig, Scheme, VtaConfig, ALL_SCHEMES,
+};
+use crate::runtime::Runtime;
+use crate::search::SearchTrace;
+use crate::util::{stats::mean, Csv, Pcg32, Timer};
+use crate::vta::VtaModel;
+use crate::zoo::{self, ZooModel};
+
+/// Models that actually have artifacts, in paper order.
+pub fn available_models(q: &Quantune) -> Vec<String> {
+    zoo::MODELS
+        .iter()
+        .filter(|m| q.artifacts.join(format!("{m}_meta.json")).exists())
+        .map(|s| s.to_string())
+        .collect()
+}
+
+pub fn results_dir() -> PathBuf {
+    std::env::var("QUANTUNE_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"))
+}
+
+/// Ensure the database holds a full sweep for `model`, measuring through
+/// the HLO backend when missing. Returns the 96-entry accuracy table.
+pub fn ensure_sweep(
+    q: &mut Quantune,
+    runtime: &Runtime,
+    model: &ZooModel,
+) -> Result<Vec<f64>> {
+    if q.db.has_full_sweep(&model.name, QuantConfig::SPACE_SIZE) {
+        return Ok(q.db.accuracy_table(&model.name, QuantConfig::SPACE_SIZE));
+    }
+    eprintln!("[sweep] measuring {} (96 configs)...", model.name);
+    let artifacts = q.artifacts.clone();
+    let (calib_pool, eval) = (q.calib_pool.clone(), q.eval.clone());
+    let mut evaluator =
+        HloEvaluator::new(model, runtime, artifacts, &calib_pool, &eval, q.seed);
+    q.sweep(model, &mut evaluator, false, |_, _| {})
+}
+
+// ---------------------------------------------------------------------------
+// Table 1: best configuration per model
+// ---------------------------------------------------------------------------
+
+pub fn table1(q: &mut Quantune, runtime: &Runtime) -> Result<Vec<BestConfigRow>> {
+    let mut rows = Vec::new();
+    for name in available_models(q) {
+        let model = q.load_model(&name)?;
+        let table = ensure_sweep(q, runtime, &model)?;
+        let (best_i, best_acc) = table
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        rows.push(BestConfigRow {
+            model: name,
+            fp32_top1: model.fp32_top1,
+            best: QuantConfig::from_index(best_i)?,
+            best_top1: *best_acc,
+        });
+    }
+    let mut csv = Csv::new(&[
+        "model", "precision", "calib_images", "granularity", "clipping", "scheme",
+        "top1", "error_vs_fp32",
+    ]);
+    for r in &rows {
+        csv.row(&[
+            r.model.clone(),
+            if r.best.mixed { "int8+fp32".into() } else { "int8".into() },
+            r.best.calib.paper_images().to_string(),
+            format!("{:?}", r.best.gran),
+            format!("{:?}", r.best.clip),
+            r.best.scheme.name().into(),
+            format!("{:.4}", r.best_top1),
+            format!("{:.4}", r.error_vs_fp32()),
+        ]);
+    }
+    csv.write_file(&results_dir().join("table1_best_configs.csv"))?;
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Table 2: accuracy-measurement cost per device
+// ---------------------------------------------------------------------------
+
+pub struct Table2Row {
+    pub model: String,
+    pub measured_host_secs: f64,
+    /// modeled hours on (a53, i7-8700, 2080ti) for a paper-scale
+    /// (50 000 image) validation pass
+    pub modeled_hours: [f64; 3],
+}
+
+pub fn table2(q: &mut Quantune, runtime: &Runtime) -> Result<Vec<Table2Row>> {
+    let mut rows = Vec::new();
+    for name in available_models(q) {
+        let model = q.load_model(&name)?;
+        // measured: one non-memoized measurement through the HLO backend
+        let artifacts = q.artifacts.clone();
+        let (calib_pool, eval) = (q.calib_pool.clone(), q.eval.clone());
+        let mut ev =
+            HloEvaluator::new(&model, runtime, artifacts, &calib_pool, &eval, q.seed);
+        let t = Timer::start();
+        ev.measure(Quantune::tensorrt_like_baseline().index())?;
+        let measured = t.secs();
+        let macs = model.graph.macs()?;
+        let layers = model.graph.layers().len();
+        let modeled = [
+            DEVICES[0].accuracy_measurement_hours(macs, layers, 50_000),
+            DEVICES[1].accuracy_measurement_hours(macs, layers, 50_000),
+            DEVICES[2].accuracy_measurement_hours(macs, layers, 50_000),
+        ];
+        rows.push(Table2Row { model: name, measured_host_secs: measured, modeled_hours: modeled });
+    }
+    let mut csv = Csv::new(&["model", "host_secs", "a53_hours", "i7_hours", "gpu_hours"]);
+    for r in &rows {
+        csv.row(&[
+            r.model.clone(),
+            format!("{:.2}", r.measured_host_secs),
+            format!("{:.4}", r.modeled_hours[0]),
+            format!("{:.4}", r.modeled_hours[1]),
+            format!("{:.4}", r.modeled_hours[2]),
+        ]);
+    }
+    csv.write_file(&results_dir().join("table2_measurement_cost.csv"))?;
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Table 3: scheme comparison (computed, not just asserted)
+// ---------------------------------------------------------------------------
+
+pub struct Table3Row {
+    pub scheme: Scheme,
+    /// fake-quant MSE on a symmetric gaussian tensor (fine-grained mapping)
+    pub mse_gaussian: f64,
+    /// fake-quant MSE on a skewed (shifted) tensor (robustness to skew)
+    pub mse_skewed: f64,
+    /// arithmetic ops per requantized value (low computation)
+    pub ops_per_value: u32,
+    pub integer_only: bool,
+}
+
+pub fn table3() -> Result<Vec<Table3Row>> {
+    let mut rng = Pcg32::seeded(42);
+    let gaussian = crate::ir::Tensor {
+        shape: vec![4096],
+        data: (0..4096).map(|_| rng.normal()).collect(),
+    };
+    let skewed = crate::ir::Tensor {
+        shape: vec![4096],
+        data: (0..4096).map(|_| rng.normal() * 0.5 + 3.0).collect(),
+    };
+    let mut rows = Vec::new();
+    for scheme in ALL_SCHEMES {
+        rows.push(Table3Row {
+            scheme,
+            mse_gaussian: weight_mse(&gaussian, scheme, Granularity::Tensor),
+            mse_skewed: weight_mse(&skewed, scheme, Granularity::Tensor),
+            // mul + add(zp) + round + clamp vs shift-only pipelines
+            ops_per_value: match scheme {
+                Scheme::Asymmetric => 4,
+                Scheme::Symmetric => 3,
+                Scheme::SymmetricUint8 => 3,
+                Scheme::Pow2 => 2,
+            },
+            integer_only: scheme.integer_only(),
+        });
+    }
+    let mut csv = Csv::new(&[
+        "scheme", "mse_gaussian", "mse_skewed", "ops_per_value", "integer_only",
+    ]);
+    for r in &rows {
+        csv.row(&[
+            r.scheme.name().into(),
+            format!("{:.3e}", r.mse_gaussian),
+            format!("{:.3e}", r.mse_skewed),
+            r.ops_per_value.to_string(),
+            r.integer_only.to_string(),
+        ]);
+    }
+    csv.write_file(&results_dir().join("table3_schemes.csv"))?;
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Table 4: diversity (entropy) analysis
+// ---------------------------------------------------------------------------
+
+pub fn table4(q: &mut Quantune, runtime: &Runtime, threshold: f64) -> Result<DiversityAnalysis> {
+    let mut tables = Vec::new();
+    for name in available_models(q) {
+        let model = q.load_model(&name)?;
+        let table = ensure_sweep(q, runtime, &model)?;
+        tables.push((model.fp32_top1, table));
+    }
+    let d = DiversityAnalysis::compute(&tables, threshold);
+    let mut csv = Csv::new(&[
+        "precision", "calibration", "granularity", "clipping", "scheme", "n_samples",
+    ]);
+    csv.row(&[
+        format!("{:.2}", d.precision),
+        format!("{:.2}", d.calibration),
+        format!("{:.2}", d.granularity),
+        format!("{:.2}", d.clipping),
+        format!("{:.2}", d.scheme),
+        d.num_samples.to_string(),
+    ]);
+    csv.write_file(&results_dir().join("table4_diversity.csv"))?;
+    Ok(d)
+}
+
+// ---------------------------------------------------------------------------
+// Table 5: model sizes
+// ---------------------------------------------------------------------------
+
+pub struct Table5Row {
+    pub model: String,
+    pub original: u64,
+    pub tensor: u64,
+    pub channel: u64,
+    pub tensor_mixed: u64,
+    pub channel_mixed: u64,
+}
+
+pub fn table5(q: &Quantune) -> Result<Vec<Table5Row>> {
+    let mut rows = Vec::new();
+    for name in available_models(q) {
+        let model = q.load_model(&name)?;
+        let dims = |layer: &str| {
+            let w = model.weights.get(&format!("{layer}_w")).unwrap();
+            let b = model.weights.get(&format!("{layer}_b")).unwrap();
+            (w.len(), b.len())
+        };
+        let sz = |g, m| model_size_bytes(&model.graph, &dims, g, m);
+        rows.push(Table5Row {
+            model: name,
+            original: model_size_fp32(&model.graph, &dims),
+            tensor: sz(Granularity::Tensor, false),
+            channel: sz(Granularity::Channel, false),
+            tensor_mixed: sz(Granularity::Tensor, true),
+            channel_mixed: sz(Granularity::Channel, true),
+        });
+    }
+    let mut csv = Csv::new(&[
+        "model", "original", "tensor", "channel", "tensor_mixed", "channel_mixed",
+    ]);
+    for r in &rows {
+        csv.row(&[
+            r.model.clone(),
+            r.original.to_string(),
+            r.tensor.to_string(),
+            r.channel.to_string(),
+            r.tensor_mixed.to_string(),
+            r.channel_mixed.to_string(),
+        ]);
+    }
+    csv.write_file(&results_dir().join("table5_model_size.csv"))?;
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 2: accuracy across all 96 configs
+// ---------------------------------------------------------------------------
+
+pub fn fig2(q: &mut Quantune, runtime: &Runtime) -> Result<HashMap<String, Vec<f64>>> {
+    let mut out = HashMap::new();
+    let mut csv = Csv::new(&["model", "config", "slug", "top1", "fp32_top1"]);
+    for name in available_models(q) {
+        let model = q.load_model(&name)?;
+        let table = ensure_sweep(q, runtime, &model)?;
+        for (i, &acc) in table.iter().enumerate() {
+            csv.row(&[
+                name.clone(),
+                i.to_string(),
+                QuantConfig::from_index(i)?.slug(),
+                format!("{acc:.4}"),
+                format!("{:.4}", model.fp32_top1),
+            ]);
+        }
+        out.insert(name, table);
+    }
+    csv.write_file(&results_dir().join("fig2_sweep.csv"))?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 3: XGBoost feature importance
+// ---------------------------------------------------------------------------
+
+pub fn fig3(q: &mut Quantune, runtime: &Runtime) -> Result<Vec<(String, f64)>> {
+    // fit the cost model on every model's sweep (arch + config features)
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for name in available_models(q) {
+        let model = q.load_model(&name)?;
+        let table = ensure_sweep(q, runtime, &model)?;
+        let arch = model.arch_features();
+        for (i, &acc) in table.iter().enumerate() {
+            let mut f = arch.clone();
+            f.extend(QuantConfig::from_index(i)?.one_hot());
+            xs.push(f);
+            ys.push(acc as f32);
+        }
+    }
+    let m = crate::xgb::XgbModel::fit(&xs, &ys, crate::xgb::XgbParams::default())?;
+    let imp = m.feature_importance();
+    let names: Vec<String> = zoo::ARCH_FEATURE_NAMES
+        .iter()
+        .map(|s| s.to_string())
+        .chain(QuantConfig::FEATURE_NAMES.iter().map(|s| s.to_string()))
+        .collect();
+    let mut ranked: Vec<(String, f64)> =
+        names.into_iter().zip(imp.iter().copied()).collect();
+    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut csv = Csv::new(&["feature", "gain_importance"]);
+    for (n, g) in &ranked {
+        csv.row(&[n.clone(), format!("{g:.4}")]);
+    }
+    csv.write_file(&results_dir().join("fig3_feature_importance.csv"))?;
+    Ok(ranked)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5/6: search-algorithm convergence
+// ---------------------------------------------------------------------------
+
+pub struct ConvergenceResult {
+    pub model: String,
+    pub algo: String,
+    /// mean trials to reach within eps of the sweep best (seed-averaged)
+    pub trials_to_best: f64,
+    /// one representative trace (first seed)
+    pub trace: SearchTrace,
+}
+
+pub fn fig5(
+    q: &mut Quantune,
+    runtime: &Runtime,
+    seeds: &[u64],
+    eps: f64,
+) -> Result<Vec<ConvergenceResult>> {
+    let mut results = Vec::new();
+    let mut curve_csv = Csv::new(&["model", "algo", "seed", "trial", "best_so_far"]);
+    for name in available_models(q) {
+        let model = q.load_model(&name)?;
+        let table = ensure_sweep(q, runtime, &model)?;
+        let best = table.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        for algo in crate::coordinator::ALGORITHMS {
+            if algo == "xgb_t" && q.transfer_for(&model)?.is_empty() {
+                continue;
+            }
+            let mut per_seed = Vec::new();
+            let mut first_trace = None;
+            for &seed in seeds {
+                let mut oracle = OracleEvaluator::new(table.clone());
+                let trace = q.search(&model, algo, &mut oracle, 96, seed)?;
+                per_seed.push(trace.trials_to_reach(best, eps).unwrap_or(96) as f64);
+                let mut running = f64::NEG_INFINITY;
+                for (t, trial) in trace.trials.iter().enumerate() {
+                    running = running.max(trial.accuracy);
+                    curve_csv.row(&[
+                        name.clone(),
+                        algo.to_string(),
+                        seed.to_string(),
+                        (t + 1).to_string(),
+                        format!("{running:.4}"),
+                    ]);
+                }
+                if first_trace.is_none() {
+                    first_trace = Some(trace);
+                }
+            }
+            results.push(ConvergenceResult {
+                model: name.clone(),
+                algo: algo.to_string(),
+                trials_to_best: mean(&per_seed),
+                trace: first_trace.unwrap(),
+            });
+        }
+    }
+    curve_csv.write_file(&results_dir().join("fig5_convergence_curves.csv"))?;
+
+    let mut csv = Csv::new(&["model", "algo", "mean_trials_to_best"]);
+    for r in &results {
+        csv.row(&[r.model.clone(), r.algo.clone(), format!("{:.2}", r.trials_to_best)]);
+    }
+    csv.write_file(&results_dir().join("fig5_trials_to_best.csv"))?;
+    Ok(results)
+}
+
+/// Fig 6: speedup of each algorithm's convergence over random.
+pub fn fig6(results: &[ConvergenceResult]) -> Result<Vec<(String, String, f64)>> {
+    let mut out = Vec::new();
+    let mut csv = Csv::new(&["model", "algo", "speedup_vs_random"]);
+    let models: Vec<String> = {
+        let mut m: Vec<String> = results.iter().map(|r| r.model.clone()).collect();
+        m.dedup();
+        m
+    };
+    for model in models {
+        let base = results
+            .iter()
+            .find(|r| r.model == model && r.algo == "random")
+            .map(|r| r.trials_to_best)
+            .context("random baseline missing")?;
+        for r in results.iter().filter(|r| r.model == model) {
+            let speedup = base / r.trials_to_best.max(1.0);
+            csv.row(&[model.clone(), r.algo.clone(), format!("{speedup:.2}")]);
+            out.push((model.clone(), r.algo.clone(), speedup));
+        }
+    }
+    csv.write_file(&results_dir().join("fig6_speedups.csv"))?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 7: Quantune vs fixed vendor-default baseline ("TensorRT")
+// ---------------------------------------------------------------------------
+
+pub struct Fig7Row {
+    pub model: String,
+    pub fp32: f64,
+    pub baseline: f64,
+    pub quantune: f64,
+}
+
+pub fn fig7(q: &mut Quantune, runtime: &Runtime) -> Result<Vec<Fig7Row>> {
+    let baseline_cfg = Quantune::tensorrt_like_baseline();
+    let mut rows = Vec::new();
+    for name in available_models(q) {
+        let model = q.load_model(&name)?;
+        let table = ensure_sweep(q, runtime, &model)?;
+        let best = table.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        rows.push(Fig7Row {
+            model: name,
+            fp32: model.fp32_top1,
+            baseline: table[baseline_cfg.index()],
+            quantune: best,
+        });
+    }
+    let mut csv = Csv::new(&["model", "fp32", "trt_like_baseline", "quantune"]);
+    for r in &rows {
+        csv.row(&[
+            r.model.clone(),
+            format!("{:.4}", r.fp32),
+            format!("{:.4}", r.baseline),
+            format!("{:.4}", r.quantune),
+        ]);
+    }
+    csv.write_file(&results_dir().join("fig7_vs_tensorrt.csv"))?;
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 8: integer-only accelerator (VTA)
+// ---------------------------------------------------------------------------
+
+pub struct Fig8Row {
+    pub model: String,
+    pub fp32: f64,
+    pub tvm_global: f64,
+    pub quantune_best: f64,
+    pub best_cfg: VtaConfig,
+    pub cycles_per_image: u64,
+}
+
+pub fn fig8(q: &Quantune, eval_n: usize) -> Result<Vec<Fig8Row>> {
+    let mut rows = Vec::new();
+    for name in available_models(q) {
+        let model = q.load_model(&name)?;
+        let eval_n = eval_n.min(q.eval.n);
+        let idx: Vec<usize> = (0..eval_n).collect();
+        let measure = |vm: &VtaModel| -> Result<(f64, u64)> {
+            let mut hits = 0;
+            let mut cycles = 0u64;
+            for chunk in idx.chunks(64) {
+                let x = q.eval.batch(chunk);
+                let (_, preds, cyc) = vm.forward(&x)?;
+                hits += preds
+                    .iter()
+                    .zip(&q.eval.labels_for(chunk))
+                    .filter(|(&p, &l)| p == l as usize)
+                    .count();
+                cycles += cyc.total();
+            }
+            Ok((hits as f64 / eval_n as f64, cycles / eval_n as u64))
+        };
+
+        let base_cache = calibrate(
+            &model,
+            &q.calib_pool,
+            CalibCount::C512,
+            &CalibBackend::Interp,
+            q.seed,
+        )?;
+        let global = VtaModel::build_global_scale(
+            &model.graph,
+            model.weights_map(),
+            &base_cache.hists,
+            true,
+        )?;
+        let (gacc, _) = measure(&global)?;
+
+        let mut best: Option<(VtaConfig, f64, u64)> = None;
+        for cfg in VtaConfig::space() {
+            let cache = calibrate(
+                &model,
+                &q.calib_pool,
+                cfg.calib,
+                &CalibBackend::Interp,
+                q.seed,
+            )?;
+            let vm =
+                VtaModel::build(&model.graph, model.weights_map(), &cache.hists, &cfg)?;
+            let (acc, cyc) = measure(&vm)?;
+            if best.map_or(true, |(_, a, c)| acc > a || (acc == a && cyc < c)) {
+                best = Some((cfg, acc, cyc));
+            }
+        }
+        let (cfg, acc, cyc) = best.unwrap();
+        rows.push(Fig8Row {
+            model: name,
+            fp32: model.fp32_top1,
+            tvm_global: gacc,
+            quantune_best: acc,
+            best_cfg: cfg,
+            cycles_per_image: cyc,
+        });
+    }
+    let mut csv = Csv::new(&[
+        "model", "fp32", "tvm_global_scale", "quantune", "best_cfg", "cycles_per_image",
+    ]);
+    for r in &rows {
+        csv.row(&[
+            r.model.clone(),
+            format!("{:.4}", r.fp32),
+            format!("{:.4}", r.tvm_global),
+            format!("{:.4}", r.quantune_best),
+            r.best_cfg.slug(),
+            r.cycles_per_image.to_string(),
+        ]);
+    }
+    csv.write_file(&results_dir().join("fig8_vta.csv"))?;
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 9: fp32 vs quantized latency
+// ---------------------------------------------------------------------------
+
+pub struct Fig9Row {
+    pub model: String,
+    pub fp32_ms: f64,
+    pub fq_ms: f64,
+    pub speedup: f64,
+    /// modeled relative speedups on (a53, i7, 2080ti)
+    pub modeled_speedups: [f64; 3],
+}
+
+pub fn fig9(q: &Quantune, runtime: &Runtime, reps: usize) -> Result<Vec<Fig9Row>> {
+    let mut rows = Vec::new();
+    for name in available_models(q) {
+        let model = q.load_model(&name)?;
+        let rep = crate::latency::fp32_vs_fq_b1(q, &model, runtime, reps)?;
+        let macs = model.graph.macs()?;
+        let layers = model.graph.layers().len();
+        let modeled = [
+            DEVICES[0].fp32_latency_s(macs, layers) / DEVICES[0].int8_latency_s(macs, layers),
+            DEVICES[1].fp32_latency_s(macs, layers) / DEVICES[1].int8_latency_s(macs, layers),
+            DEVICES[2].fp32_latency_s(macs, layers) / DEVICES[2].int8_latency_s(macs, layers),
+        ];
+        rows.push(Fig9Row {
+            model: name,
+            fp32_ms: rep.fp32_ms,
+            fq_ms: rep.fq_ms,
+            speedup: rep.speedup(),
+            modeled_speedups: modeled,
+        });
+    }
+    let mut csv = Csv::new(&[
+        "model", "fp32_ms", "fq_ms", "measured_speedup", "a53_speedup", "i7_speedup",
+        "gpu_speedup",
+    ]);
+    for r in &rows {
+        csv.row(&[
+            r.model.clone(),
+            format!("{:.3}", r.fp32_ms),
+            format!("{:.3}", r.fq_ms),
+            format!("{:.3}", r.speedup),
+            format!("{:.3}", r.modeled_speedups[0]),
+            format!("{:.3}", r.modeled_speedups[1]),
+            format!("{:.3}", r.modeled_speedups[2]),
+        ]);
+    }
+    csv.write_file(&results_dir().join("fig9_latency.csv"))?;
+    Ok(rows)
+}
+
+/// Write a text report file alongside the CSVs.
+pub fn write_report(name: &str, content: &str) -> Result<()> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join(name), content)?;
+    Ok(())
+}
+
+/// Resolve a `Path` under results/ (helper for benches).
+pub fn result_path(name: &str) -> PathBuf {
+    results_dir().join(name)
+}
+
+#[allow(dead_code)]
+fn _unused(_: &Path) {}

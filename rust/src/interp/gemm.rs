@@ -1,0 +1,129 @@
+//! Small dense GEMM used by the fp32/fake-quant interpreters.
+//!
+//! C[M,N] += A[M,K] * B[K,N], row-major. The m-k-n loop order keeps the
+//! inner loop a contiguous FMA over C/B rows, which LLVM auto-vectorizes;
+//! this is the interpreter's hot path (see EXPERIMENTS.md §Perf).
+
+/// C += A * B.
+///
+/// k is unrolled by 4 (§Perf): each pass over the C row applies four
+/// rank-1 updates, which quarters the C-row traffic and gives the
+/// autovectorizer four independent FMA streams. Post-ReLU activation
+/// rows are zero-heavy, so an all-zero quad still short-circuits.
+pub fn gemm_f32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let k4 = k / 4 * 4;
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut p = 0;
+        while p < k4 {
+            let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                p += 4;
+                continue;
+            }
+            let b0 = &b[p * n..(p + 1) * n];
+            let b1 = &b[(p + 1) * n..(p + 2) * n];
+            let b2 = &b[(p + 2) * n..(p + 3) * n];
+            let b3 = &b[(p + 3) * n..(p + 4) * n];
+            for j in 0..n {
+                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+            p += 4;
+        }
+        for (p, &av) in arow.iter().enumerate().skip(k4) {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// C += A * B over i32 (VTA accumulator semantics; no saturation --
+/// accumulators are 32-bit like the hardware's register file and our
+/// operand magnitudes cannot overflow them). Same k-by-4 unroll as the
+/// f32 kernel.
+pub fn gemm_i32(m: usize, k: usize, n: usize, a: &[i32], b: &[i32], c: &mut [i32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let k4 = k / 4 * 4;
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut p = 0;
+        while p < k4 {
+            let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+            if (a0 | a1 | a2 | a3) == 0 {
+                p += 4;
+                continue;
+            }
+            let b0 = &b[p * n..(p + 1) * n];
+            let b1 = &b[(p + 1) * n..(p + 2) * n];
+            let b2 = &b[(p + 2) * n..(p + 3) * n];
+            let b3 = &b[(p + 3) * n..(p + 4) * n];
+            for j in 0..n {
+                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+            p += 4;
+        }
+        for (p, &av) in arow.iter().enumerate().skip(k4) {
+            if av == 0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_naive() {
+        let (m, k, n) = (3, 4, 5);
+        let a: Vec<f32> = (0..m * k).map(|i| i as f32 * 0.5 - 2.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 7) as f32 - 3.0).collect();
+        let mut c = vec![0.0; m * n];
+        gemm_f32(m, k, n, &a, &b, &mut c);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 = (0..k).map(|p| a[i * k + p] * b[p * n + j]).sum();
+                assert!((c[i * n + j] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn i32_matches_naive() {
+        let (m, k, n) = (4, 3, 2);
+        let a: Vec<i32> = (0..m * k).map(|i| i as i32 - 5).collect();
+        let b: Vec<i32> = (0..k * n).map(|i| (i as i32 % 5) - 2).collect();
+        let mut c = vec![0; m * n];
+        gemm_i32(m, k, n, &a, &b, &mut c);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i32 = (0..k).map(|p| a[i * k + p] * b[p * n + j]).sum();
+                assert_eq!(c[i * n + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn accumulates_into_c() {
+        let mut c = vec![1.0; 1];
+        gemm_f32(1, 1, 1, &[2.0], &[3.0], &mut c);
+        assert_eq!(c[0], 7.0);
+    }
+}

@@ -1,0 +1,474 @@
+//! Reference interpreters over the graph IR.
+//!
+//! Three evaluation modes mirror the three HLO artifacts:
+//! - `forward`      fp32 (oracle for `{model}_fp32.hlo.txt`)
+//! - `forward_fq`   fake-quantized (oracle for `{model}_fq.hlo.txt`)
+//! - `forward_acts` fp32 + captured quant-point tensors (calibration)
+//!
+//! The interpreter is the fallback accuracy-measurement backend when
+//! PJRT artifacts are absent, and the parity reference in tests.
+
+pub mod gemm;
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::ir::{Act, Graph, Op, PoolKind, Tensor};
+use crate::quant::ActQuantization;
+
+use gemm::gemm_f32;
+
+/// im2col: [N,H,W,C] -> patches [N*OH*OW, k*k*C] for one channel group.
+///
+/// `ch_off..ch_off+cg` selects the input-channel slice (grouped convs).
+#[allow(clippy::too_many_arguments)]
+fn im2col(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    ch_off: usize,
+    cg: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let cols = k * k * cg;
+    out.clear();
+    out.resize(n * oh * ow * cols, 0.0);
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((ni * oh + oy) * ow + ox) * cols;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((ni * h + iy as usize) * w + ix as usize) * c + ch_off;
+                        let dst = row + (ky * k + kx) * cg;
+                        out[dst..dst + cg].copy_from_slice(&x[src..src + cg]);
+                    }
+                }
+            }
+        }
+    }
+    (oh, ow)
+}
+
+/// Repack HWIO weights [k,k,cg,outg] into a [k*k*cg, outg] GEMM operand
+/// for group `g` (selecting output channels g*outg..(g+1)*outg).
+fn weight_matrix(wt: &Tensor, g: usize, groups: usize) -> (Vec<f32>, usize, usize) {
+    let (k1, k2, cg, out_ch) = (wt.shape[0], wt.shape[1], wt.shape[2], wt.shape[3]);
+    let outg = out_ch / groups;
+    let rows = k1 * k2 * cg;
+    let mut m = vec![0.0f32; rows * outg];
+    for r in 0..rows {
+        let src = r * out_ch + g * outg;
+        m[r * outg..(r + 1) * outg].copy_from_slice(&wt.data[src..src + outg]);
+    }
+    (m, rows, outg)
+}
+
+pub struct Interpreter<'a> {
+    pub graph: &'a Graph,
+    weights: &'a HashMap<String, Tensor>,
+}
+
+/// Which evaluation semantics to apply.
+enum Mode<'q> {
+    Fp32,
+    FakeQuant(&'q ActQuantization),
+    Acts(Vec<Tensor>),
+}
+
+impl<'a> Interpreter<'a> {
+    /// `weights` must contain every `{layer}_w` / `{layer}_b`. For the
+    /// fake-quant mode pass weights already fake-quantized per config.
+    pub fn new(graph: &'a Graph, weights: &'a HashMap<String, Tensor>) -> Self {
+        Interpreter { graph, weights }
+    }
+
+    /// fp32 logits [N, classes].
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        match self.run(x, Mode::Fp32)? {
+            (logits, None) => Ok(logits),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Fake-quantized logits (weights must be pre-fake-quantized).
+    pub fn forward_fq(&self, x: &Tensor, aq: &ActQuantization) -> Result<Tensor> {
+        match self.run(x, Mode::FakeQuant(aq))? {
+            (logits, None) => Ok(logits),
+            _ => unreachable!(),
+        }
+    }
+
+    /// fp32 logits + the tensor at every quantization point (calibration).
+    pub fn forward_acts(&self, x: &Tensor) -> Result<(Tensor, Vec<Tensor>)> {
+        match self.run(x, Mode::Acts(Vec::new()))? {
+            (logits, Some(acts)) => Ok((logits, acts)),
+            _ => unreachable!(),
+        }
+    }
+
+    fn weight(&self, name: &str) -> Result<&Tensor> {
+        self.weights.get(name).ok_or_else(|| anyhow!("missing weight {name}"))
+    }
+
+    fn run(&self, x: &Tensor, mut mode: Mode) -> Result<(Tensor, Option<Vec<Tensor>>)> {
+        anyhow::ensure!(x.rank() == 4, "input must be NHWC, got {:?}", x.shape);
+        let qpoints = self.graph.quant_points();
+        let qindex: HashMap<&str, usize> =
+            qpoints.iter().enumerate().map(|(i, s)| (s.as_str(), i)).collect();
+
+        let apply_q = |name: &str, t: Tensor, mode: &mut Mode| -> Tensor {
+            match mode {
+                Mode::Fp32 => t,
+                Mode::Acts(captured) => {
+                    if qindex.contains_key(name) {
+                        captured.push(t.clone());
+                    }
+                    t
+                }
+                Mode::FakeQuant(aq) => match qindex.get(name) {
+                    Some(&i) if !aq.is_bypassed(i) => {
+                        let p = aq.params(i);
+                        Tensor {
+                            shape: t.shape,
+                            data: t.data.iter().map(|&v| p.fake_quant(v)).collect(),
+                        }
+                    }
+                    _ => t,
+                },
+            }
+        };
+
+        let mut env: HashMap<&str, Tensor> = HashMap::new();
+        env.insert("input", apply_q("input", x.clone(), &mut mode));
+
+        let mut patch_buf = Vec::new();
+        for node in &self.graph.nodes {
+            let ins: Vec<&Tensor> = node
+                .inputs
+                .iter()
+                .map(|i| env.get(i.as_str()).ok_or_else(|| anyhow!("missing {i}")))
+                .collect::<Result<_>>()?;
+            let t = match &node.op {
+                Op::Conv { k, stride, pad, in_ch, out_ch, groups, act } => self.conv(
+                    ins[0], node, *k, *stride, *pad, *in_ch, *out_ch, *groups, *act,
+                    &mut patch_buf,
+                )?,
+                Op::Pool { kind, k, stride, pad } => pool(ins[0], *kind, *k, *stride, *pad),
+                Op::Gap => gap(ins[0]),
+                Op::Add { act } => {
+                    anyhow::ensure!(ins[0].shape == ins[1].shape, "add shape mismatch");
+                    Tensor {
+                        shape: ins[0].shape.clone(),
+                        data: ins[0]
+                            .data
+                            .iter()
+                            .zip(&ins[1].data)
+                            .map(|(&a, &b)| act.apply(a + b))
+                            .collect(),
+                    }
+                }
+                Op::Concat => concat(&ins),
+                Op::Shuffle { groups } => shuffle(ins[0], *groups),
+                Op::Dense { in_dim, out_dim } => {
+                    let w = self.weight(&format!("{}_w", node.name))?;
+                    let b = self.weight(&format!("{}_b", node.name))?;
+                    let n = ins[0].shape[0];
+                    let mut out = vec![0.0f32; n * out_dim];
+                    for (row, chunk) in out.chunks_exact_mut(*out_dim).enumerate() {
+                        chunk.copy_from_slice(&b.data);
+                        let _ = row;
+                    }
+                    gemm_f32(n, *in_dim, *out_dim, &ins[0].data, &w.data, &mut out);
+                    Tensor { shape: vec![n, *out_dim], data: out }
+                }
+            };
+            let t = apply_q(&node.name, t, &mut mode);
+            env.insert(node.name.as_str(), t);
+        }
+
+        let logits = env.remove(self.graph.output()).expect("output computed");
+        match mode {
+            Mode::Acts(captured) => Ok((logits, Some(captured))),
+            _ => Ok((logits, None)),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn conv(
+        &self,
+        x: &Tensor,
+        node: &crate::ir::Node,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        in_ch: usize,
+        out_ch: usize,
+        groups: usize,
+        act: Act,
+        patch_buf: &mut Vec<f32>,
+    ) -> Result<Tensor> {
+        let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        anyhow::ensure!(c == in_ch, "conv {}: in_ch mismatch", node.name);
+        let wt = self.weight(&format!("{}_w", node.name))?;
+        let bias = self.weight(&format!("{}_b", node.name))?;
+        let cg = in_ch / groups;
+        let outg = out_ch / groups;
+        let mut oh = 0;
+        let mut ow = 0;
+        // output in group-major scratch, then interleave
+        let mut group_out: Vec<Vec<f32>> = Vec::with_capacity(groups);
+        for g in 0..groups {
+            let (oh_, ow_) =
+                im2col(&x.data, n, h, w, c, g * cg, cg, k, stride, pad, patch_buf);
+            oh = oh_;
+            ow = ow_;
+            let (wm, rows, cols) = weight_matrix(wt, g, groups);
+            let m = n * oh * ow;
+            let mut out = vec![0.0f32; m * cols];
+            // seed with bias
+            for chunk in out.chunks_exact_mut(cols) {
+                chunk.copy_from_slice(&bias.data[g * outg..(g + 1) * outg]);
+            }
+            gemm_f32(m, rows, cols, patch_buf, &wm, &mut out);
+            group_out.push(out);
+        }
+        let m = n * oh * ow;
+        let mut data = vec![0.0f32; m * out_ch];
+        if groups == 1 {
+            data.copy_from_slice(&group_out[0]);
+        } else {
+            for (g, go) in group_out.iter().enumerate() {
+                for r in 0..m {
+                    data[r * out_ch + g * outg..r * out_ch + (g + 1) * outg]
+                        .copy_from_slice(&go[r * outg..(r + 1) * outg]);
+                }
+            }
+        }
+        if act != Act::None {
+            for v in &mut data {
+                *v = act.apply(*v);
+            }
+        }
+        Ok(Tensor { shape: vec![n, oh, ow, out_ch], data })
+    }
+}
+
+fn pool(x: &Tensor, kind: PoolKind, k: usize, stride: usize, pad: usize) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let mut data = vec![0.0f32; n * oh * ow * c];
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ci in 0..c {
+                    let mut acc = match kind {
+                        PoolKind::Max => f32::NEG_INFINITY,
+                        PoolKind::Avg => 0.0,
+                    };
+                    let mut cnt = 0usize;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let v = x.data
+                                [((ni * h + iy as usize) * w + ix as usize) * c + ci];
+                            match kind {
+                                PoolKind::Max => acc = acc.max(v),
+                                PoolKind::Avg => acc += v,
+                            }
+                            cnt += 1;
+                        }
+                    }
+                    let out = match kind {
+                        PoolKind::Max => acc,
+                        PoolKind::Avg => acc / cnt.max(1) as f32,
+                    };
+                    data[((ni * oh + oy) * ow + ox) * c + ci] = out;
+                }
+            }
+        }
+    }
+    Tensor { shape: vec![n, oh, ow, c], data }
+}
+
+fn gap(x: &Tensor) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut data = vec![0.0f32; n * c];
+    let inv = 1.0 / (h * w) as f32;
+    for ni in 0..n {
+        for p in 0..h * w {
+            let src = (ni * h * w + p) * c;
+            for ci in 0..c {
+                data[ni * c + ci] += x.data[src + ci];
+            }
+        }
+    }
+    for v in &mut data {
+        *v *= inv;
+    }
+    Tensor { shape: vec![n, c], data }
+}
+
+fn concat(ins: &[&Tensor]) -> Tensor {
+    let (n, h, w) = (ins[0].shape[0], ins[0].shape[1], ins[0].shape[2]);
+    let cs: Vec<usize> = ins.iter().map(|t| t.shape[3]).collect();
+    let c_total: usize = cs.iter().sum();
+    let mut data = vec![0.0f32; n * h * w * c_total];
+    let rows = n * h * w;
+    for r in 0..rows {
+        let mut off = 0;
+        for (t, &ct) in ins.iter().zip(&cs) {
+            data[r * c_total + off..r * c_total + off + ct]
+                .copy_from_slice(&t.data[r * ct..(r + 1) * ct]);
+            off += ct;
+        }
+    }
+    Tensor { shape: vec![n, h, w, c_total], data }
+}
+
+fn shuffle(x: &Tensor, groups: usize) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let per = c / groups;
+    let mut data = vec![0.0f32; x.data.len()];
+    let rows = n * h * w;
+    for r in 0..rows {
+        let src = &x.data[r * c..(r + 1) * c];
+        let dst = &mut data[r * c..(r + 1) * c];
+        // [g, per] -> [per, g] transpose
+        for g in 0..groups {
+            for p in 0..per {
+                dst[p * groups + g] = src[g * per + p];
+            }
+        }
+    }
+    Tensor { shape: vec![n, h, w, c], data }
+}
+
+/// Top-1 predictions from logits [N, classes].
+pub fn argmax_batch(logits: &Tensor) -> Vec<usize> {
+    let classes = *logits.shape.last().unwrap();
+    logits
+        .data
+        .chunks_exact(classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Json;
+
+    fn graph_1conv() -> Graph {
+        Graph::from_meta(
+            &Json::parse(
+                r#"{"name": "t", "input_shape": [4, 4, 1], "num_classes": 2,
+            "nodes": [
+              {"name": "c1", "op": "conv", "inputs": ["input"], "k": 3,
+               "stride": 1, "pad": 1, "in_ch": 1, "out_ch": 1, "groups": 1,
+               "act": "none"},
+              {"name": "g1", "op": "gap", "inputs": ["c1"]},
+              {"name": "d1", "op": "dense", "inputs": ["g1"], "in_dim": 1,
+               "out_dim": 2}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    fn identity_weights() -> HashMap<String, Tensor> {
+        let mut w = HashMap::new();
+        // 3x3 kernel with center 1 => identity conv
+        let mut kw = vec![0.0; 9];
+        kw[4] = 1.0;
+        w.insert("c1_w".into(), Tensor::from_vec(&[3, 3, 1, 1], kw).unwrap());
+        w.insert("c1_b".into(), Tensor::from_vec(&[1], vec![0.0]).unwrap());
+        w.insert(
+            "d1_w".into(),
+            Tensor::from_vec(&[1, 2], vec![1.0, -1.0]).unwrap(),
+        );
+        w.insert("d1_b".into(), Tensor::from_vec(&[2], vec![0.0, 0.5]).unwrap());
+        w
+    }
+
+    #[test]
+    fn identity_conv_and_head() {
+        let g = graph_1conv();
+        let w = identity_weights();
+        let interp = Interpreter::new(&g, &w);
+        let x = Tensor::from_vec(&[1, 4, 4, 1], vec![1.0; 16]).unwrap();
+        let logits = interp.forward(&x).unwrap();
+        // gap(identity(ones)) = 1 -> logits = [1*1, 1*-1+0.5] = [1.0, -0.5]
+        assert!((logits.data[0] - 1.0).abs() < 1e-6);
+        assert!((logits.data[1] + 0.5).abs() < 1e-6);
+        assert_eq!(argmax_batch(&logits), vec![0]);
+    }
+
+    #[test]
+    fn acts_capture_matches_quant_points() {
+        let g = graph_1conv();
+        let w = identity_weights();
+        let interp = Interpreter::new(&g, &w);
+        let x = Tensor::from_vec(&[1, 4, 4, 1], vec![0.5; 16]).unwrap();
+        let (_, acts) = interp.forward_acts(&x).unwrap();
+        assert_eq!(acts.len(), g.quant_points().len());
+        // first captured tensor is the input itself
+        assert_eq!(acts[0].data, x.data);
+    }
+
+    #[test]
+    fn pool_maxavg() {
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let mx = pool(&x, PoolKind::Max, 2, 2, 0);
+        assert_eq!(mx.data, vec![4.0]);
+        let av = pool(&x, PoolKind::Avg, 2, 2, 0);
+        assert_eq!(av.data, vec![2.5]);
+    }
+
+    #[test]
+    fn shuffle_transposes_groups() {
+        // c=4, groups=2: [a b c d] -> [a c b d]
+        let x = Tensor::from_vec(&[1, 1, 1, 4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let y = shuffle(&x, 2);
+        assert_eq!(y.data, vec![1.0, 3.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn concat_channels() {
+        let a = Tensor::from_vec(&[1, 1, 1, 2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_vec(&[1, 1, 1, 1], vec![9.0]).unwrap();
+        let y = concat(&[&a, &b]);
+        assert_eq!(y.shape, vec![1, 1, 1, 3]);
+        assert_eq!(y.data, vec![1.0, 2.0, 9.0]);
+    }
+}

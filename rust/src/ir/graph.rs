@@ -1,0 +1,440 @@
+//! Graph IR for the mini CNN models.
+//!
+//! Mirrors python/compile/specs.py exactly: graphs arrive as the `nodes`
+//! array of `artifacts/{model}_meta.json` and evaluate in list order
+//! (specs.py emits a valid topological order; `Graph::validate` checks it).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// Activation fused into a producing node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    Relu6,
+}
+
+impl Act {
+    pub fn parse(s: &str) -> Result<Act> {
+        Ok(match s {
+            "none" => Act::None,
+            "relu" => Act::Relu,
+            "relu6" => Act::Relu6,
+            other => bail!("unknown activation {other:?}"),
+        })
+    }
+
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            Act::None => x,
+            Act::Relu => x.max(0.0),
+            Act::Relu6 => x.clamp(0.0, 6.0),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Graph operator. Channel counts are stored explicitly (as in the spec)
+/// so validation can cross-check shape inference.
+#[derive(Clone, Debug)]
+pub enum Op {
+    Conv {
+        k: usize,
+        stride: usize,
+        pad: usize,
+        in_ch: usize,
+        out_ch: usize,
+        groups: usize,
+        act: Act,
+    },
+    Pool {
+        kind: PoolKind,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    },
+    /// Global average pool: [N,H,W,C] -> [N,C]
+    Gap,
+    Add {
+        act: Act,
+    },
+    Concat,
+    Shuffle {
+        groups: usize,
+    },
+    Dense {
+        in_dim: usize,
+        out_dim: usize,
+    },
+}
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<String>,
+}
+
+impl Node {
+    /// Does this node's output carry its own quantization profile?
+    /// (Mirrors specs.QUANT_OPS; see the rationale there.)
+    pub fn is_quant_point(&self) -> bool {
+        matches!(
+            self.op,
+            Op::Conv { .. } | Op::Dense { .. } | Op::Add { .. } | Op::Concat | Op::Gap
+        )
+    }
+
+    /// Does this node own weights (conv / dense)?
+    pub fn has_weights(&self) -> bool {
+        matches!(self.op, Op::Conv { .. } | Op::Dense { .. })
+    }
+}
+
+/// A CNN model graph plus its ABI metadata.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub input_shape: [usize; 3], // H, W, C
+    pub num_classes: usize,
+}
+
+impl Graph {
+    /// Parse the `nodes` array of a meta JSON.
+    pub fn from_meta(meta: &Json) -> Result<Graph> {
+        let name = meta.get("name")?.as_str()?.to_string();
+        let ishape = meta.get("input_shape")?.as_arr()?;
+        let input_shape = [
+            ishape[0].as_usize()?,
+            ishape[1].as_usize()?,
+            ishape[2].as_usize()?,
+        ];
+        let num_classes = meta.get("num_classes")?.as_usize()?;
+        let mut nodes = Vec::new();
+        for n in meta.get("nodes")?.as_arr()? {
+            nodes.push(parse_node(n).with_context(|| format!("node {n:?}"))?);
+        }
+        let g = Graph { name, nodes, input_shape, num_classes };
+        g.validate()?;
+        Ok(g)
+    }
+
+    /// Evaluation-order sanity: every input is defined before use and all
+    /// channel arithmetic is consistent with shape inference.
+    pub fn validate(&self) -> Result<()> {
+        let mut seen: HashMap<&str, ()> = HashMap::new();
+        seen.insert("input", ());
+        for n in &self.nodes {
+            for i in &n.inputs {
+                if !seen.contains_key(i.as_str()) {
+                    bail!("node {} uses undefined input {i}", n.name);
+                }
+            }
+            if seen.insert(&n.name, ()).is_some() {
+                bail!("duplicate node name {}", n.name);
+            }
+            match &n.op {
+                Op::Conv { in_ch, out_ch, groups, k, .. } => {
+                    if in_ch % groups != 0 || out_ch % groups != 0 {
+                        bail!("conv {}: groups {groups} does not divide {in_ch}/{out_ch}",
+                              n.name);
+                    }
+                    if *k == 0 {
+                        bail!("conv {}: zero kernel", n.name);
+                    }
+                    if n.inputs.len() != 1 {
+                        bail!("conv {} wants 1 input", n.name);
+                    }
+                }
+                Op::Add { .. } => {
+                    if n.inputs.len() != 2 {
+                        bail!("add {} wants 2 inputs", n.name);
+                    }
+                }
+                Op::Concat => {
+                    if n.inputs.len() < 2 {
+                        bail!("concat {} wants >=2 inputs", n.name);
+                    }
+                }
+                _ => {}
+            }
+        }
+        // full shape inference as the final consistency check
+        self.infer_shapes()?;
+        Ok(())
+    }
+
+    /// Infer the [H, W, C] (or [C] after gap/dense) shape of every tensor
+    /// for batch-size-agnostic evaluation. Returns name -> shape.
+    pub fn infer_shapes(&self) -> Result<HashMap<String, Vec<usize>>> {
+        let mut shapes: HashMap<String, Vec<usize>> = HashMap::new();
+        shapes.insert("input".into(), self.input_shape.to_vec());
+        let out_hw = |h: usize, k: usize, s: usize, p: usize| (h + 2 * p - k) / s + 1;
+        for n in &self.nodes {
+            let get = |i: usize| -> Result<&Vec<usize>> {
+                shapes
+                    .get(&n.inputs[i])
+                    .ok_or_else(|| anyhow::anyhow!("missing shape for {}", n.inputs[i]))
+            };
+            let shape = match &n.op {
+                Op::Conv { k, stride, pad, in_ch, out_ch, .. } => {
+                    let s = get(0)?;
+                    if s.len() != 3 || s[2] != *in_ch {
+                        bail!("conv {}: input shape {:?} != in_ch {}", n.name, s, in_ch);
+                    }
+                    vec![out_hw(s[0], *k, *stride, *pad), out_hw(s[1], *k, *stride, *pad), *out_ch]
+                }
+                Op::Pool { k, stride, pad, .. } => {
+                    let s = get(0)?;
+                    vec![out_hw(s[0], *k, *stride, *pad), out_hw(s[1], *k, *stride, *pad), s[2]]
+                }
+                Op::Gap => {
+                    let s = get(0)?;
+                    vec![s[2]]
+                }
+                Op::Add { .. } => {
+                    let (a, b) = (get(0)?.clone(), get(1)?.clone());
+                    if a != b {
+                        bail!("add {}: shape mismatch {:?} vs {:?}", n.name, a, b);
+                    }
+                    a
+                }
+                Op::Concat => {
+                    let first = get(0)?.clone();
+                    let mut c = 0;
+                    for i in 0..n.inputs.len() {
+                        let s = get(i)?;
+                        if s[..2] != first[..2] {
+                            bail!("concat {}: spatial mismatch", n.name);
+                        }
+                        c += s[2];
+                    }
+                    vec![first[0], first[1], c]
+                }
+                Op::Shuffle { groups } => {
+                    let s = get(0)?.clone();
+                    if s[2] % groups != 0 {
+                        bail!("shuffle {}: {} % {} != 0", n.name, s[2], groups);
+                    }
+                    s
+                }
+                Op::Dense { in_dim, out_dim } => {
+                    let s = get(0)?;
+                    if s.len() != 1 || s[0] != *in_dim {
+                        bail!("dense {}: input {:?} != in_dim {}", n.name, s, in_dim);
+                    }
+                    vec![*out_dim]
+                }
+            };
+            shapes.insert(n.name.clone(), shape);
+        }
+        Ok(shapes)
+    }
+
+    /// Quantization-point tensor names: "input" + quant-op outputs,
+    /// in evaluation order (matches specs.quant_points / act_params rows).
+    pub fn quant_points(&self) -> Vec<String> {
+        let mut out = vec!["input".to_string()];
+        out.extend(
+            self.nodes.iter().filter(|n| n.is_quant_point()).map(|n| n.name.clone()),
+        );
+        out
+    }
+
+    /// Weight tensor names in the flat ABI order (w then b per layer).
+    pub fn weight_names(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for n in &self.nodes {
+            if n.has_weights() {
+                out.push(format!("{}_w", n.name));
+                out.push(format!("{}_b", n.name));
+            }
+        }
+        out
+    }
+
+    /// Weighted layers in graph order (mixed precision keeps first+last fp32).
+    pub fn layers(&self) -> Vec<String> {
+        self.nodes.iter().filter(|n| n.has_weights()).map(|n| n.name.clone()).collect()
+    }
+
+    /// Name of the output (last) node.
+    pub fn output(&self) -> &str {
+        &self.nodes.last().expect("empty graph").name
+    }
+
+    pub fn node(&self, name: &str) -> Option<&Node> {
+        self.nodes.iter().find(|n| n.name == name)
+    }
+
+    /// Multiply-accumulate count for one input image.
+    pub fn macs(&self) -> Result<u64> {
+        let shapes = self.infer_shapes()?;
+        let mut total: u64 = 0;
+        for n in &self.nodes {
+            match &n.op {
+                Op::Conv { k, in_ch, out_ch, groups, .. } => {
+                    let s = &shapes[&n.name];
+                    let per_out = (k * k * in_ch / groups) as u64;
+                    total += per_out * (s[0] * s[1] * out_ch) as u64;
+                }
+                Op::Dense { in_dim, out_dim } => {
+                    total += (*in_dim * *out_dim) as u64;
+                }
+                _ => {}
+            }
+        }
+        Ok(total)
+    }
+
+    /// Total parameter element count.
+    pub fn num_params(&self) -> u64 {
+        let mut total = 0u64;
+        for n in &self.nodes {
+            match &n.op {
+                Op::Conv { k, in_ch, out_ch, groups, .. } => {
+                    total += (k * k * (in_ch / groups) * out_ch + out_ch) as u64;
+                }
+                Op::Dense { in_dim, out_dim } => {
+                    total += (in_dim * out_dim + out_dim) as u64;
+                }
+                _ => {}
+            }
+        }
+        total
+    }
+}
+
+fn parse_node(n: &Json) -> Result<Node> {
+    let name = n.get("name")?.as_str()?.to_string();
+    let op_s = n.get("op")?.as_str()?;
+    let inputs: Vec<String> = n
+        .get("inputs")?
+        .as_arr()?
+        .iter()
+        .map(|i| Ok(i.as_str()?.to_string()))
+        .collect::<Result<_>>()?;
+    let op = match op_s {
+        "conv" => Op::Conv {
+            k: n.get("k")?.as_usize()?,
+            stride: n.get("stride")?.as_usize()?,
+            pad: n.get("pad")?.as_usize()?,
+            in_ch: n.get("in_ch")?.as_usize()?,
+            out_ch: n.get("out_ch")?.as_usize()?,
+            groups: n.get("groups")?.as_usize()?,
+            act: Act::parse(n.get("act")?.as_str()?)?,
+        },
+        "pool" => Op::Pool {
+            kind: match n.get("kind")?.as_str()? {
+                "max" => PoolKind::Max,
+                "avg" => PoolKind::Avg,
+                other => bail!("unknown pool kind {other:?}"),
+            },
+            k: n.get("k")?.as_usize()?,
+            stride: n.get("stride")?.as_usize()?,
+            pad: n.get("pad")?.as_usize()?,
+        },
+        "gap" => Op::Gap,
+        "add" => Op::Add {
+            act: Act::parse(n.get_or("act", &Json::Str("none".into())).as_str()?)?,
+        },
+        "concat" => Op::Concat,
+        "shuffle" => Op::Shuffle { groups: n.get("groups")?.as_usize()? },
+        "dense" => Op::Dense {
+            in_dim: n.get("in_dim")?.as_usize()?,
+            out_dim: n.get("out_dim")?.as_usize()?,
+        },
+        other => bail!("unknown op {other:?}"),
+    };
+    Ok(Node { name, op, inputs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> Graph {
+        let meta = Json::parse(
+            r#"{
+            "name": "tiny", "input_shape": [8, 8, 3], "num_classes": 4,
+            "nodes": [
+              {"name": "c1", "op": "conv", "inputs": ["input"],
+               "k": 3, "stride": 1, "pad": 1, "in_ch": 3, "out_ch": 8,
+               "groups": 1, "act": "relu"},
+              {"name": "p1", "op": "pool", "inputs": ["c1"],
+               "kind": "max", "k": 2, "stride": 2, "pad": 0},
+              {"name": "g1", "op": "gap", "inputs": ["p1"]},
+              {"name": "d1", "op": "dense", "inputs": ["g1"],
+               "in_dim": 8, "out_dim": 4}
+            ]}"#,
+        )
+        .unwrap();
+        Graph::from_meta(&meta).unwrap()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let g = tiny_graph();
+        assert_eq!(g.nodes.len(), 4);
+        assert_eq!(g.output(), "d1");
+    }
+
+    #[test]
+    fn shape_inference() {
+        let g = tiny_graph();
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes["c1"], vec![8, 8, 8]);
+        assert_eq!(shapes["p1"], vec![4, 4, 8]);
+        assert_eq!(shapes["g1"], vec![8]);
+        assert_eq!(shapes["d1"], vec![4]);
+    }
+
+    #[test]
+    fn quant_points_and_weights() {
+        let g = tiny_graph();
+        assert_eq!(g.quant_points(), vec!["input", "c1", "g1", "d1"]);
+        assert_eq!(g.weight_names(), vec!["c1_w", "c1_b", "d1_w", "d1_b"]);
+        assert_eq!(g.layers(), vec!["c1", "d1"]);
+    }
+
+    #[test]
+    fn macs_and_params() {
+        let g = tiny_graph();
+        // conv: 3*3*3*8 per pixel * 64 px = 13824; dense: 8*4 = 32
+        assert_eq!(g.macs().unwrap(), 13824 + 32);
+        // conv: 216 w + 8 b; dense: 32 w + 4 b
+        assert_eq!(g.num_params(), 216 + 8 + 32 + 4);
+    }
+
+    #[test]
+    fn rejects_undefined_input() {
+        let meta = Json::parse(
+            r#"{"name": "bad", "input_shape": [4,4,3], "num_classes": 2,
+            "nodes": [{"name": "g", "op": "gap", "inputs": ["nope"]}]}"#,
+        )
+        .unwrap();
+        assert!(Graph::from_meta(&meta).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_channel_math() {
+        let meta = Json::parse(
+            r#"{"name": "bad", "input_shape": [4,4,3], "num_classes": 2,
+            "nodes": [{"name": "c", "op": "conv", "inputs": ["input"],
+              "k": 3, "stride": 1, "pad": 1, "in_ch": 5, "out_ch": 8,
+              "groups": 1, "act": "relu"}]}"#,
+        )
+        .unwrap();
+        assert!(Graph::from_meta(&meta).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Graph IR: tensors, operators, model graphs, shape inference.
+//!
+//! This is the rust half of the shared architecture spec -- see
+//! python/compile/specs.py for the single source of truth and
+//! `Graph::from_meta` for the loader.
+
+pub mod graph;
+pub mod tensor;
+
+pub use graph::{Act, Graph, Node, Op, PoolKind};
+pub use tensor::{I32Tensor, QTensor, Tensor};

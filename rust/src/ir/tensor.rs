@@ -1,0 +1,138 @@
+//! Dense f32 / i8 / i32 tensors (NHWC layout for images).
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Min and max of the data (0.0,0.0 for empty).
+    pub fn range(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in &self.data {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        if lo > hi {
+            (0.0, 0.0)
+        } else {
+            (lo, hi)
+        }
+    }
+
+    /// Reshape in place (element count must match).
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {:?}: element count mismatch", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+}
+
+/// Quantized int8 tensor with its affine grid parameters.
+///
+/// `scales`/`zero_points` have one entry for per-tensor granularity or
+/// `out_channels` entries for per-channel (weights only).
+#[derive(Clone, Debug)]
+pub struct QTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+    pub scales: Vec<f32>,
+    pub zero_points: Vec<i32>,
+}
+
+impl QTensor {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Dequantize to f32 (per-tensor params only).
+    pub fn dequantize(&self) -> Tensor {
+        assert_eq!(self.scales.len(), 1, "per-tensor dequantize only");
+        let s = self.scales[0];
+        let zp = self.zero_points[0];
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&q| (q as i32 - zp) as f32 * s).collect(),
+        }
+    }
+}
+
+/// Int32 accumulator tensor (VTA simulator).
+#[derive(Clone, Debug)]
+pub struct I32Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl I32Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        I32Tensor { shape: shape.to_vec(), data: vec![0; n] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_checks_len() {
+        assert!(Tensor::from_vec(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::from_vec(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn range() {
+        let t = Tensor::from_vec(&[4], vec![-1.0, 5.0, 0.0, 2.0]).unwrap();
+        assert_eq!(t.range(), (-1.0, 5.0));
+    }
+
+    #[test]
+    fn dequantize_roundtrip() {
+        let q = QTensor {
+            shape: vec![3],
+            data: vec![-10, 0, 50],
+            scales: vec![0.5],
+            zero_points: vec![10],
+        };
+        let t = q.dequantize();
+        assert_eq!(t.data, vec![-10.0, -5.0, 20.0]);
+    }
+}

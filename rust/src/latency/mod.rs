@@ -1,0 +1,114 @@
+//! End-to-end latency measurement (paper §6.5, Fig 9).
+//!
+//! Measures real single-image inference wallclock of the fp32 vs
+//! fake-quantized HLO executables on PJRT-CPU (the `_b1` artifacts), and
+//! VTA cycle counts for the integer-only path. The paper's cross-device
+//! story (A53 / i7 / 2080ti) is modeled by `coordinator::devices`.
+
+use anyhow::Result;
+
+use crate::calib::{calibrate, CalibBackend};
+use crate::coordinator::{act_params_tensor, prepare, Quantune};
+use crate::quant::QuantConfig;
+use crate::runtime::{tensor_to_literal, Runtime};
+use crate::util::{stats::LatencyStats, Timer};
+use crate::zoo::ZooModel;
+
+/// fp32-vs-quantized latency of one model.
+#[derive(Clone, Debug)]
+pub struct LatencyReport {
+    pub model: String,
+    pub fp32_ms: f64,
+    pub fq_ms: f64,
+    pub fp32_stats: LatencyStats,
+    pub fq_stats: LatencyStats,
+}
+
+impl LatencyReport {
+    /// >1 means the quantized model is faster (the paper finds it mostly
+    /// is NOT, for naive kernels).
+    pub fn speedup(&self) -> f64 {
+        self.fp32_ms / self.fq_ms
+    }
+}
+
+/// Measure single-image (batch=1 artifacts) latency for `model` using the
+/// best-known (or default) config's quantization parameters.
+pub fn fp32_vs_fq_b1(
+    q: &Quantune,
+    model: &ZooModel,
+    runtime: &Runtime,
+    reps: usize,
+) -> Result<LatencyReport> {
+    let cfg = q
+        .db
+        .best_for(&model.name)
+        .map(|(c, _)| c)
+        .unwrap_or_else(Quantune::tensorrt_like_baseline);
+    let cache = calibrate(
+        model,
+        &q.calib_pool,
+        cfg.calib,
+        &CalibBackend::Hlo { runtime, artifacts: &q.artifacts },
+        q.seed,
+    )?;
+    let setup = prepare(model, &cache, &cfg)?;
+
+    let fp32 = runtime.load(&q.artifacts.join(format!("{}_fp32_b1.hlo.txt", model.name)))?;
+    let fq = runtime.load(&q.artifacts.join(format!("{}_fq_b1.hlo.txt", model.name)))?;
+
+    let x = q.eval.batch(&[0]);
+    let x_lit = tensor_to_literal(&x)?;
+    let ap = act_params_tensor(&setup);
+    let ap_lit = tensor_to_literal(&ap)?;
+    let w_raw: Vec<xla::Literal> = model
+        .weights
+        .flat()
+        .iter()
+        .map(|t| tensor_to_literal(t))
+        .collect::<Result<_>>()?;
+    let w_fq: Vec<xla::Literal> = setup
+        .weights
+        .iter()
+        .map(tensor_to_literal)
+        .collect::<Result<_>>()?;
+
+    let mut fp32_args: Vec<&xla::Literal> = vec![&x_lit];
+    fp32_args.extend(w_raw.iter());
+    let mut fq_args: Vec<&xla::Literal> = vec![&x_lit, &ap_lit];
+    fq_args.extend(w_fq.iter());
+
+    let time_exe = |exe: &crate::runtime::Executable,
+                    args: &[&xla::Literal]|
+     -> Result<LatencyStats> {
+        // warmup
+        for _ in 0..3 {
+            exe.run_literals(args)?;
+        }
+        let mut samples = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t = Timer::start();
+            exe.run_literals(args)?;
+            samples.push(t.ms());
+        }
+        Ok(LatencyStats::from_samples(&samples))
+    };
+
+    let fp32_stats = time_exe(&fp32, &fp32_args)?;
+    let fq_stats = time_exe(&fq, &fq_args)?;
+    Ok(LatencyReport {
+        model: model.name.clone(),
+        fp32_ms: fp32_stats.p50_ms,
+        fq_ms: fq_stats.p50_ms,
+        fp32_stats,
+        fq_stats,
+    })
+}
+
+/// QuantConfig whose latency is being measured (exposed for reports).
+pub fn latency_config(q: &Quantune, model: &ZooModel) -> QuantConfig {
+    q.db
+        .best_for(&model.name)
+        .map(|(c, _)| c)
+        .unwrap_or_else(Quantune::tensorrt_like_baseline)
+}

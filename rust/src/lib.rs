@@ -1,0 +1,34 @@
+//! Quantune: post-training quantization auto-tuning for CNNs.
+//!
+//! Reproduction of "Quantune: Post-training Quantization of Convolutional
+//! Neural Networks using Extreme Gradient Boosting for Fast Deployment"
+//! (Lee et al., FGCS 2022) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layers:
+//! - L3 (this crate): the Quantune coordinator — quantization config search
+//!   (XGBoost cost model + transfer learning), calibration, the quantization
+//!   substrate (our mini-Glow graph IR + quantizers), the VTA integer-only
+//!   simulator, and the PJRT runtime that executes AOT-lowered JAX models.
+//! - L2 (python/compile/model.py): JAX forward graphs for the six CNN
+//!   models, fp32 + fake-quant parameterized variants, AOT-lowered to HLO
+//!   text artifacts at build time.
+//! - L1 (python/compile/kernels/): Pallas kernels for the quantization
+//!   hot-spot (fake-quant elementwise + int8 GEMM requantization), checked
+//!   against pure-jnp oracles.
+
+pub mod calib;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod interp;
+pub mod ir;
+pub mod latency;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod search;
+pub mod util;
+pub mod vta;
+pub mod xgb;
+pub mod zoo;

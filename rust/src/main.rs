@@ -1,0 +1,264 @@
+//! quantune CLI: the user-facing driver.
+//!
+//! ```text
+//! quantune info      [--artifacts DIR]
+//! quantune sweep     [--models mn,..] [--backend hlo|interp] [--force]
+//! quantune search    [--models mn,..] [--algo xgb_t] [--seed N] [--budget N]
+//! quantune quantize  [--models mn,..] [--config IDX]   # deploy report
+//! quantune vta       [--models mn,..]                  # integer-only path
+//! quantune latency   [--models mn,..] [--reps N]
+//! ```
+//!
+//! Everything the CLI does is also exposed as library API; the benches in
+//! rust/benches regenerate the paper's tables and figures.
+
+use anyhow::{Context, Result};
+
+use quantune::calib::{calibrate, CalibBackend};
+use quantune::config::Cli;
+use quantune::coordinator::{
+    Evaluator, HloEvaluator, InterpEvaluator, OracleEvaluator, Quantune, ALGORITHMS,
+};
+use quantune::quant::{
+    model_size_bytes, model_size_fp32, Granularity, QuantConfig, VtaConfig,
+};
+use quantune::runtime::Runtime;
+use quantune::util::{fmt_duration, Timer};
+use quantune::vta::VtaModel;
+use quantune::zoo;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        print_help();
+        std::process::exit(2);
+    }
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    eprintln!(
+        "quantune -- post-training quantization auto-tuner (paper reproduction)\n\
+         commands: info | sweep | search | quantize | vta | latency\n\
+         common options: --artifacts DIR --models mn,shn,... --seed N\n\
+         see README.md for details"
+    );
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cli = Cli::parse(args)?;
+    match cli.command.as_str() {
+        "info" => cmd_info(&cli),
+        "sweep" => cmd_sweep(&cli),
+        "search" => cmd_search(&cli),
+        "quantize" => cmd_quantize(&cli),
+        "vta" => cmd_vta(&cli),
+        "latency" => cmd_latency(&cli),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}"),
+    }
+}
+
+fn cmd_info(cli: &Cli) -> Result<()> {
+    let q = Quantune::open(cli.artifacts())?;
+    println!("artifacts: {}", q.artifacts.display());
+    println!("eval images: {}, calib pool: {}", q.eval.n, q.calib_pool.n);
+    println!("database records: {}", q.db.records.len());
+    println!("search space: {} configs (Eq. 1)", QuantConfig::SPACE_SIZE);
+    for name in cli.models() {
+        match q.load_model(&name) {
+            Ok(m) => println!(
+                "  {:4} {:18} {:>8} params {:>11} MACs fp32 top1 {:.2}% [{} quant points]",
+                m.name,
+                zoo::full_name(&m.name),
+                m.graph.num_params(),
+                m.graph.macs()?,
+                m.fp32_top1 * 100.0,
+                m.graph.quant_points().len(),
+            ),
+            Err(e) => println!("  {name:4} unavailable: {e}"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep(cli: &Cli) -> Result<()> {
+    let mut q = Quantune::open(cli.artifacts())?;
+    let backend = cli.opt_or("backend", "hlo");
+    let runtime = if backend == "hlo" { Some(Runtime::cpu()?) } else { None };
+    for name in cli.models() {
+        let model = q.load_model(&name)?;
+        let timer = Timer::start();
+        let artifacts = q.artifacts.clone();
+        let (calib_pool, eval) = (q.calib_pool.clone(), q.eval.clone());
+        let mut evaluator: Box<dyn Evaluator> = match &runtime {
+            Some(rt) => Box::new(HloEvaluator::new(
+                &model, rt, artifacts, &calib_pool, &eval, q.seed,
+            )),
+            None => Box::new(InterpEvaluator::new(&model, &calib_pool, &eval, q.seed)),
+        };
+        let table = q.sweep(&model, evaluator.as_mut(), cli.flag("force"), |i, acc| {
+            if i % 16 == 15 {
+                println!("  [{name}] {}/96 latest top1 {:.2}%", i + 1, acc * 100.0);
+            }
+        })?;
+        let best = table
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        println!(
+            "{name}: best {} top1 {:.2}% (fp32 {:.2}%) in {}",
+            QuantConfig::from_index(best.0)?,
+            best.1 * 100.0,
+            model.fp32_top1 * 100.0,
+            fmt_duration(timer.secs()),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_search(cli: &Cli) -> Result<()> {
+    let mut q = Quantune::open(cli.artifacts())?;
+    let algo = cli.opt_or("algo", "xgb_t");
+    anyhow::ensure!(
+        ALGORITHMS.contains(&algo.as_str()),
+        "--algo must be one of {ALGORITHMS:?}"
+    );
+    let budget = cli.opt_usize("budget", QuantConfig::SPACE_SIZE)?;
+    let seed = cli.opt_u64("seed", 7)?;
+    for name in cli.models() {
+        let model = q.load_model(&name)?;
+        // search against the sweep oracle when available (fast, identical
+        // ground truth); the benches also support live HLO measurement
+        let table = q.db.accuracy_table(&model.name, QuantConfig::SPACE_SIZE);
+        anyhow::ensure!(
+            table.iter().any(|a| !a.is_nan()),
+            "{name}: no sweep in database -- run `quantune sweep` first"
+        );
+        let mut oracle = OracleEvaluator::new(table);
+        let trace = q.search(&model, &algo, &mut oracle, budget, seed)?;
+        let best_cfg = QuantConfig::from_index(trace.best_config)?;
+        println!(
+            "{name}: {algo} best {} top1 {:.2}% after {} trials (budget {budget})",
+            best_cfg,
+            trace.best_accuracy * 100.0,
+            trace
+                .trials_to_reach(trace.best_accuracy, 1e-9)
+                .unwrap_or(trace.trials.len()),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_quantize(cli: &Cli) -> Result<()> {
+    let q = Quantune::open(cli.artifacts())?;
+    for name in cli.models() {
+        let model = q.load_model(&name)?;
+        let cfg = match cli.opt("config") {
+            Some(idx) => QuantConfig::from_index(idx.parse()?)?,
+            None => {
+                q.db.best_for(&name)
+                    .map(|(c, _)| c)
+                    .context("no sweep/search results; pass --config IDX")?
+            }
+        };
+        let weight_dims = |layer: &str| {
+            let w = model.weights.get(&format!("{layer}_w")).unwrap();
+            let b = model.weights.get(&format!("{layer}_b")).unwrap();
+            (w.len(), b.len())
+        };
+        let sizes =
+            |gran, mixed| model_size_bytes(&model.graph, &weight_dims, gran, mixed);
+        let orig = model_size_fp32(&model.graph, &weight_dims);
+        println!(
+            "{name}: config {cfg} | size {:.2} KiB -> {:.2} KiB ({:.1}x smaller)",
+            orig as f64 / 1024.0,
+            sizes(cfg.gran, cfg.mixed) as f64 / 1024.0,
+            orig as f64 / sizes(cfg.gran, cfg.mixed) as f64,
+        );
+        println!(
+            "       size grid: tensor {:.2} KiB | channel {:.2} KiB | \
+             tensor+mixed {:.2} KiB | channel+mixed {:.2} KiB",
+            sizes(Granularity::Tensor, false) as f64 / 1024.0,
+            sizes(Granularity::Channel, false) as f64 / 1024.0,
+            sizes(Granularity::Tensor, true) as f64 / 1024.0,
+            sizes(Granularity::Channel, true) as f64 / 1024.0,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_vta(cli: &Cli) -> Result<()> {
+    let q = Quantune::open(cli.artifacts())?;
+    for name in cli.models() {
+        let model = q.load_model(&name)?;
+        println!("{name}: VTA integer-only deployment (12-config space, Eq. 23)");
+        let mut best: Option<(VtaConfig, f64)> = None;
+        for cfg in VtaConfig::space() {
+            let cache = calibrate(
+                &model,
+                &q.calib_pool,
+                cfg.calib,
+                &CalibBackend::Interp,
+                q.seed,
+            )?;
+            let vm =
+                VtaModel::build(&model.graph, model.weights_map(), &cache.hists, &cfg)?;
+            let mut hits = 0;
+            let mut cycles = 0u64;
+            let idx: Vec<usize> = (0..q.eval.n).collect();
+            for chunk in idx.chunks(64) {
+                let x = q.eval.batch(chunk);
+                let (_, preds, cyc) = vm.forward(&x)?;
+                let labels = q.eval.labels_for(chunk);
+                hits += preds
+                    .iter()
+                    .zip(&labels)
+                    .filter(|(&p, &l)| p == l as usize)
+                    .count();
+                cycles += cyc.total();
+            }
+            let acc = hits as f64 / q.eval.n as f64;
+            println!(
+                "  {:28} top1 {:5.2}%  {:>12} cycles",
+                cfg.slug(),
+                acc * 100.0,
+                cycles
+            );
+            if best.map_or(true, |(_, a)| acc > a) {
+                best = Some((cfg, acc));
+            }
+        }
+        let (cfg, acc) = best.unwrap();
+        println!(
+            "  => best {} top1 {:.2}% (fp32 {:.2}%)",
+            cfg.slug(),
+            acc * 100.0,
+            model.fp32_top1 * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_latency(cli: &Cli) -> Result<()> {
+    let q = Quantune::open(cli.artifacts())?;
+    let runtime = Runtime::cpu()?;
+    let reps = cli.opt_usize("reps", 30)?;
+    println!("single-image latency on PJRT-CPU ({reps} reps, warm)");
+    for name in cli.models() {
+        let model = q.load_model(&name)?;
+        let report = quantune::latency::fp32_vs_fq_b1(&q, &model, &runtime, reps)?;
+        println!(
+            "  {name}: fp32 {:.2} ms | int8(fq) {:.2} ms | speedup {:.2}x",
+            report.fp32_ms, report.fq_ms, report.speedup()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Result analysis: Top-1 bookkeeping and the Shannon-entropy diversity
+//! analysis of Table 4.
+
+use crate::quant::QuantConfig;
+use crate::util::stats::shannon_entropy;
+
+/// Per-dimension Shannon entropy of the configs whose accuracy is within
+/// `threshold` of the fp32 baseline (the paper uses the MLPerf 1% margin).
+#[derive(Clone, Debug)]
+pub struct DiversityAnalysis {
+    pub precision: f64,
+    pub calibration: f64,
+    pub granularity: f64,
+    pub clipping: f64,
+    pub scheme: f64,
+    pub num_samples: usize,
+}
+
+impl DiversityAnalysis {
+    /// `tables`: per model, (fp32 accuracy, per-config accuracies).
+    /// Configs within `threshold` (absolute accuracy drop) qualify.
+    pub fn compute(tables: &[(f64, Vec<f64>)], threshold: f64) -> DiversityAnalysis {
+        let mut calib = Vec::new();
+        let mut scheme = Vec::new();
+        let mut clip = Vec::new();
+        let mut gran = Vec::new();
+        let mut mixed = Vec::new();
+        for (fp32, accs) in tables {
+            for (i, &a) in accs.iter().enumerate() {
+                if a.is_nan() || a < fp32 - threshold {
+                    continue;
+                }
+                let c = QuantConfig::from_index(i).expect("index in space");
+                calib.push(c.calib.index());
+                scheme.push(c.scheme.name());
+                clip.push(c.clip == crate::quant::Clipping::Kl);
+                gran.push(c.gran == crate::quant::Granularity::Channel);
+                mixed.push(c.mixed);
+            }
+        }
+        DiversityAnalysis {
+            precision: shannon_entropy(&mixed),
+            calibration: shannon_entropy(&calib),
+            granularity: shannon_entropy(&gran),
+            clipping: shannon_entropy(&clip),
+            scheme: shannon_entropy(&scheme),
+            num_samples: calib.len(),
+        }
+    }
+
+    /// All dimensions carry non-zero entropy => no universal config
+    /// (the paper's Table 4 takeaway).
+    pub fn no_universal_config(&self) -> bool {
+        self.precision > 0.0
+            && self.calibration > 0.0
+            && self.granularity > 0.0
+            && self.clipping > 0.0
+            && self.scheme > 0.0
+    }
+}
+
+/// Summary row of one model's sweep (Table 1).
+#[derive(Clone, Debug)]
+pub struct BestConfigRow {
+    pub model: String,
+    pub fp32_top1: f64,
+    pub best: QuantConfig,
+    pub best_top1: f64,
+}
+
+impl BestConfigRow {
+    pub fn error_vs_fp32(&self) -> f64 {
+        self.best_top1 - self.fp32_top1
+    }
+
+    /// Formatted like the paper's Table 1 accuracy column.
+    pub fn accuracy_cell(&self) -> String {
+        format!(
+            "{:.2}({:+.2})%",
+            self.best_top1 * 100.0,
+            self.error_vs_fp32() * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diversity_zero_when_one_config_wins() {
+        // only config 0 is good in a single table -> all entropies zero
+        let mut accs = vec![0.0; QuantConfig::SPACE_SIZE];
+        accs[0] = 0.9;
+        let d = DiversityAnalysis::compute(&[(0.9, accs)], 0.01);
+        assert_eq!(d.num_samples, 1);
+        assert!(!d.no_universal_config());
+        assert_eq!(d.scheme, 0.0);
+    }
+
+    #[test]
+    fn diversity_positive_when_many_configs_qualify() {
+        // every config within 1%: entropies equal the marginal entropies
+        let accs = vec![0.9; QuantConfig::SPACE_SIZE];
+        let d = DiversityAnalysis::compute(&[(0.9, accs)], 0.01);
+        assert_eq!(d.num_samples, 96);
+        assert!(d.no_universal_config());
+        // scheme is uniform over 4 -> ln 4
+        assert!((d.scheme - 4f64.ln()).abs() < 1e-9);
+        assert!((d.clipping - 2f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_cell_format() {
+        let row = BestConfigRow {
+            model: "mn".into(),
+            fp32_top1: 0.7181,
+            best: QuantConfig::from_index(0).unwrap(),
+            best_top1: 0.7123,
+        };
+        assert_eq!(row.accuracy_cell(), "71.23(-0.58)%");
+    }
+}

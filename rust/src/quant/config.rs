@@ -1,0 +1,317 @@
+//! Quantization configuration spaces (paper Eq. 1 and Eq. 23).
+//!
+//! `QuantConfig` is one point of the 96-element general-purpose space:
+//!
+//! ```text
+//! SearchSpace(96) = CalibrationCache(3) x Scheme(4) x Clipping(2)
+//!                   x Granularity(2) x MixedPrecision(2)
+//! ```
+//!
+//! `VtaConfig` is one point of the 12-element integer-only space (Eq. 23):
+//! scheme is pinned to pow2, granularity to tensor, and the free choice
+//! becomes conv+ReLU fusion.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use super::scheme::{Scheme, ALL_SCHEMES};
+
+/// Number of calibration images. Paper: {1, 1000, 10000} of ImageNet
+/// train; here {1, 64, 512} of the synthetic calibration pool (DESIGN.md
+/// §2 explains the scaling).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CalibCount {
+    C1,
+    C64,
+    C512,
+}
+
+pub const ALL_CALIB: [CalibCount; 3] = [CalibCount::C1, CalibCount::C64, CalibCount::C512];
+
+impl CalibCount {
+    pub fn images(self) -> usize {
+        match self {
+            CalibCount::C1 => 1,
+            CalibCount::C64 => 64,
+            CalibCount::C512 => 512,
+        }
+    }
+
+    /// The count the paper reports for the equivalent cache.
+    pub fn paper_images(self) -> usize {
+        match self {
+            CalibCount::C1 => 1,
+            CalibCount::C64 => 1_000,
+            CalibCount::C512 => 10_000,
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            CalibCount::C1 => 0,
+            CalibCount::C64 => 1,
+            CalibCount::C512 => 2,
+        }
+    }
+}
+
+/// Range clipping policy (paper §4.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Clipping {
+    /// Use the raw observed min/max.
+    Max,
+    /// KL-divergence threshold search (TensorRT/Glow procedure).
+    Kl,
+}
+
+pub const ALL_CLIP: [Clipping; 2] = [Clipping::Max, Clipping::Kl];
+
+/// Scale sharing granularity for *weights* (paper §4.4; activations are
+/// always per-tensor, as in Glow).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Granularity {
+    Tensor,
+    Channel,
+}
+
+pub const ALL_GRAN: [Granularity; 2] = [Granularity::Tensor, Granularity::Channel];
+
+/// One point of the 96-element search space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct QuantConfig {
+    pub calib: CalibCount,
+    pub scheme: Scheme,
+    pub clip: Clipping,
+    pub gran: Granularity,
+    /// keep first and last weighted layers in fp32 (paper §4.5)
+    pub mixed: bool,
+}
+
+impl QuantConfig {
+    /// The full space, in a fixed deterministic order (index 0..96).
+    pub fn space() -> Vec<QuantConfig> {
+        let mut out = Vec::with_capacity(96);
+        for calib in ALL_CALIB {
+            for scheme in ALL_SCHEMES {
+                for clip in ALL_CLIP {
+                    for gran in ALL_GRAN {
+                        for mixed in [false, true] {
+                            out.push(QuantConfig { calib, scheme, clip, gran, mixed });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub const SPACE_SIZE: usize = 96;
+
+    /// Position in `space()` order.
+    pub fn index(&self) -> usize {
+        let s = ALL_SCHEMES.iter().position(|x| x == &self.scheme).unwrap();
+        (((self.calib.index() * 4 + s) * 2 + (self.clip == Clipping::Kl) as usize) * 2
+            + (self.gran == Granularity::Channel) as usize)
+            * 2
+            + self.mixed as usize
+    }
+
+    pub fn from_index(i: usize) -> Result<QuantConfig> {
+        if i >= Self::SPACE_SIZE {
+            bail!("config index {i} out of range");
+        }
+        Ok(Self::space()[i])
+    }
+
+    /// Binary-ish genome for the genetic algorithm: 7 bits
+    /// (2 calib, 2 scheme, 1 clip, 1 gran, 1 mixed). Calib/scheme use
+    /// 2-bit fields where value 3 wraps (the GA package's binary
+    /// encoding does the same for non-power-of-two cardinalities).
+    pub fn from_genome(bits: &[bool; 7]) -> QuantConfig {
+        let calib = ALL_CALIB[((bits[0] as usize) * 2 + bits[1] as usize) % 3];
+        let scheme = ALL_SCHEMES[(bits[2] as usize) * 2 + bits[3] as usize];
+        QuantConfig {
+            calib,
+            scheme,
+            clip: if bits[4] { Clipping::Kl } else { Clipping::Max },
+            gran: if bits[5] { Granularity::Channel } else { Granularity::Tensor },
+            mixed: bits[6],
+        }
+    }
+
+    pub fn to_genome(&self) -> [bool; 7] {
+        let c = self.calib.index();
+        let s = ALL_SCHEMES.iter().position(|x| x == &self.scheme).unwrap();
+        [
+            c / 2 == 1,
+            c % 2 == 1,
+            s / 2 == 1,
+            s % 2 == 1,
+            self.clip == Clipping::Kl,
+            self.gran == Granularity::Channel,
+            self.mixed,
+        ]
+    }
+
+    /// One-hot feature encoding for the XGBoost cost model (13 features:
+    /// 3 calib + 4 scheme + 2 clip + 2 gran + 2 mixed). One-hot (not
+    /// ordinal) matches the paper's preprocessing choice (§5.2.2).
+    pub fn one_hot(&self) -> Vec<f32> {
+        let mut v = vec![0.0f32; 13];
+        v[self.calib.index()] = 1.0;
+        v[3 + ALL_SCHEMES.iter().position(|x| x == &self.scheme).unwrap()] = 1.0;
+        v[7 + (self.clip == Clipping::Kl) as usize] = 1.0;
+        v[9 + (self.gran == Granularity::Channel) as usize] = 1.0;
+        v[11 + self.mixed as usize] = 1.0;
+        v
+    }
+
+    pub const ONE_HOT_DIM: usize = 13;
+
+    /// Categorical (ordinal) feature encoding: one integer-valued feature
+    /// per axis. The paper (§5.2.2) compared this against one-hot and
+    /// found one-hot better; `bench_ablation` reproduces that comparison.
+    pub fn categorical(&self) -> Vec<f32> {
+        vec![
+            self.calib.index() as f32,
+            ALL_SCHEMES.iter().position(|x| x == &self.scheme).unwrap() as f32,
+            (self.clip == Clipping::Kl) as u8 as f32,
+            (self.gran == Granularity::Channel) as u8 as f32,
+            self.mixed as u8 as f32,
+        ]
+    }
+
+    pub const CATEGORICAL_DIM: usize = 5;
+    pub const FEATURE_NAMES: [&'static str; 13] = [
+        "calib_1", "calib_64", "calib_512",
+        "scheme_asym", "scheme_sym", "scheme_sym_u8", "scheme_pow2",
+        "clip_max", "clip_kl",
+        "gran_tensor", "gran_channel",
+        "mixed_off", "mixed_on",
+    ];
+
+    pub fn slug(&self) -> String {
+        format!(
+            "c{}_{}_{}_{}_{}",
+            self.calib.images(),
+            self.scheme.name(),
+            match self.clip {
+                Clipping::Max => "max",
+                Clipping::Kl => "kl",
+            },
+            match self.gran {
+                Granularity::Tensor => "tensor",
+                Granularity::Channel => "channel",
+            },
+            if self.mixed { "mixed" } else { "int8" },
+        )
+    }
+}
+
+impl fmt::Display for QuantConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.slug())
+    }
+}
+
+/// One point of the VTA integer-only space (Eq. 23, |space| = 12).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct VtaConfig {
+    pub calib: CalibCount,
+    pub clip: Clipping,
+    /// execute conv+ReLU as one fused accelerator op
+    pub fusion: bool,
+}
+
+impl VtaConfig {
+    pub fn space() -> Vec<VtaConfig> {
+        let mut out = Vec::with_capacity(12);
+        for calib in ALL_CALIB {
+            for clip in ALL_CLIP {
+                for fusion in [false, true] {
+                    out.push(VtaConfig { calib, clip, fusion });
+                }
+            }
+        }
+        out
+    }
+
+    pub const SPACE_SIZE: usize = 12;
+
+    pub fn index(&self) -> usize {
+        (self.calib.index() * 2 + (self.clip == Clipping::Kl) as usize) * 2
+            + self.fusion as usize
+    }
+
+    /// The equivalent general config (pow2 / tensor / no mixed).
+    pub fn as_quant_config(&self) -> QuantConfig {
+        QuantConfig {
+            calib: self.calib,
+            scheme: Scheme::Pow2,
+            clip: self.clip,
+            gran: Granularity::Tensor,
+            mixed: false,
+        }
+    }
+
+    pub fn slug(&self) -> String {
+        format!(
+            "vta_c{}_{}_{}",
+            self.calib.images(),
+            match self.clip {
+                Clipping::Max => "max",
+                Clipping::Kl => "kl",
+            },
+            if self.fusion { "fused" } else { "unfused" },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn space_is_96_distinct() {
+        let space = QuantConfig::space();
+        assert_eq!(space.len(), 96);
+        let set: std::collections::HashSet<_> = space.iter().collect();
+        assert_eq!(set.len(), 96);
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        for (i, cfg) in QuantConfig::space().iter().enumerate() {
+            assert_eq!(cfg.index(), i);
+            assert_eq!(&QuantConfig::from_index(i).unwrap(), cfg);
+        }
+    }
+
+    #[test]
+    fn genome_roundtrip() {
+        for cfg in QuantConfig::space() {
+            let g = cfg.to_genome();
+            assert_eq!(QuantConfig::from_genome(&g), cfg);
+        }
+    }
+
+    #[test]
+    fn one_hot_shape() {
+        for cfg in QuantConfig::space() {
+            let v = cfg.one_hot();
+            assert_eq!(v.len(), QuantConfig::ONE_HOT_DIM);
+            assert_eq!(v.iter().filter(|&&x| x == 1.0).count(), 5);
+        }
+    }
+
+    #[test]
+    fn vta_space_is_12() {
+        let space = VtaConfig::space();
+        assert_eq!(space.len(), 12);
+        for (i, cfg) in space.iter().enumerate() {
+            assert_eq!(cfg.index(), i);
+            assert!(cfg.as_quant_config().scheme.integer_only());
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Activation histograms and KL-divergence clipping (paper §4.3).
+//!
+//! During calibration every quantization-point tensor accumulates a
+//! 2048-bin histogram (Glow-style expanding range: when a new batch
+//! exceeds the current range the histogram is rebinned into a doubled
+//! range, so one pass suffices). Clipping then either uses the raw
+//! min/max ("max") or searches a threshold minimizing the KL divergence
+//! between the clipped distribution and its 128-level quantized
+//! approximation (the TensorRT/Glow procedure the paper builds on).
+
+pub const NUM_BINS: usize = 2048;
+const QUANT_LEVELS: usize = 128;
+
+/// Reusable buffers for the KL threshold scan.
+struct KlScratch {
+    p: Vec<f64>,
+    raw: Vec<f64>,
+    q: Vec<f64>,
+}
+
+impl KlScratch {
+    fn new() -> Self {
+        KlScratch {
+            p: Vec::with_capacity(NUM_BINS),
+            raw: Vec::with_capacity(NUM_BINS),
+            q: Vec::with_capacity(NUM_BINS),
+        }
+    }
+}
+
+/// Expanding-range histogram over the absolute values of a tensor stream,
+/// plus exact running min/max of the raw values.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// bin i counts |x| in [i*width, (i+1)*width)
+    pub bins: Vec<u64>,
+    /// current |x| range covered: [0, limit)
+    pub limit: f32,
+    pub min: f32,
+    pub max: f32,
+    pub count: u64,
+    /// memoized KL threshold (§Perf: the 96-config sweep asks for the
+    /// same histogram's threshold once per KL config; the search is
+    /// ~5 ms/tensor, so recomputing dominated `prepare`)
+    kl_cache: std::cell::Cell<Option<f32>>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            bins: vec![0; NUM_BINS],
+            limit: 0.0,
+            min: f32::INFINITY,
+            max: f32::NEG_INFINITY,
+            count: 0,
+            kl_cache: std::cell::Cell::new(None),
+        }
+    }
+
+    /// Accumulate a batch of values.
+    pub fn update(&mut self, xs: &[f32]) {
+        if xs.is_empty() {
+            return;
+        }
+        self.kl_cache.set(None);
+        let mut absmax = 0f32;
+        for &x in xs {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+            absmax = absmax.max(x.abs());
+        }
+        if absmax > self.limit {
+            self.grow_to(absmax);
+        }
+        let inv_width = NUM_BINS as f32 / self.limit;
+        for &x in xs {
+            let b = ((x.abs() * inv_width) as usize).min(NUM_BINS - 1);
+            self.bins[b] += 1;
+        }
+        self.count += xs.len() as u64;
+    }
+
+    /// Double the covered range until `absmax` fits, merging bin pairs.
+    fn grow_to(&mut self, absmax: f32) {
+        if self.limit == 0.0 {
+            // first batch: set the range directly (slightly padded)
+            self.limit = absmax * 1.0001;
+            return;
+        }
+        while self.limit < absmax {
+            for i in 0..NUM_BINS / 2 {
+                self.bins[i] = self.bins[2 * i] + self.bins[2 * i + 1];
+            }
+            for b in self.bins[NUM_BINS / 2..].iter_mut() {
+                *b = 0;
+            }
+            self.limit *= 2.0;
+        }
+    }
+
+    /// Raw observed range.
+    pub fn range(&self) -> (f32, f32) {
+        if self.count == 0 {
+            (0.0, 0.0)
+        } else {
+            (self.min, self.max)
+        }
+    }
+
+    /// Clipped range after KL-threshold selection: the observed range
+    /// intersected with [-T, T] where T minimizes the KL divergence.
+    pub fn kl_clipped_range(&self) -> (f32, f32) {
+        if self.count == 0 {
+            return (0.0, 0.0);
+        }
+        let t = self.kl_threshold();
+        (self.min.max(-t), self.max.min(t))
+    }
+
+    /// TensorRT-style KL threshold search over the |x| histogram
+    /// (memoized; see §Perf in EXPERIMENTS.md).
+    pub fn kl_threshold(&self) -> f32 {
+        if let Some(t) = self.kl_cache.get() {
+            return t;
+        }
+        let width = self.limit / NUM_BINS as f32;
+        let total: u64 = self.bins.iter().sum();
+        if total == 0 {
+            return self.limit.max(1e-12);
+        }
+        let mut best_i = NUM_BINS;
+        let mut best_kl = f64::INFINITY;
+        // candidate thresholds: clip after bin i (i quantization source
+        // bins); allocations are hoisted out of the scan
+        let mut scratch = KlScratch::new();
+        let mut i = QUANT_LEVELS;
+        while i <= NUM_BINS {
+            let kl = self.kl_for_clip(i, &mut scratch);
+            if kl < best_kl {
+                best_kl = kl;
+                best_i = i;
+            }
+            i += 8; // stride-8 scan: 240 candidates (see DESIGN.md §9)
+        }
+        let t = (best_i as f32 + 0.5) * width;
+        self.kl_cache.set(Some(t));
+        t
+    }
+
+    /// KL(P || Q) when clipping the histogram to its first `m` bins.
+    ///
+    /// Bin 0 is excluded from both distributions: post-ReLU activations
+    /// are zero-inflated and the huge zero bin would otherwise dominate
+    /// the divergence and drive the threshold toward pathological
+    /// over-clipping (the MXNet/TensorRT implementations do the same).
+    fn kl_for_clip(&self, m: usize, scratch: &mut KlScratch) -> f64 {
+        // P: first m bins, outliers added to the last bin.
+        let outliers: u64 = self.bins[m..].iter().sum();
+        let p = &mut scratch.p;
+        p.clear();
+        p.extend(self.bins[..m].iter().map(|&c| c as f64));
+        p[0] = 0.0;
+        *p.last_mut().unwrap() += outliers as f64;
+
+        // Q: the *raw* first m bins (without the outlier mass -- this is
+        // what an int8 grid over the clipped range actually represents)
+        // re-binned to QUANT_LEVELS levels then expanded back, preserving
+        // which source bins were empty. raw == p except the last bin.
+        let raw = &mut scratch.raw;
+        raw.clear();
+        raw.extend_from_slice(p);
+        *raw.last_mut().unwrap() -= outliers as f64;
+        let group = m as f64 / QUANT_LEVELS as f64;
+        let q = &mut scratch.q;
+        q.clear();
+        q.resize(m, 0f64);
+        for level in 0..QUANT_LEVELS {
+            let start = (level as f64 * group).floor() as usize;
+            let end = (((level + 1) as f64 * group).floor() as usize).min(m).max(start + 1);
+            let slice = &raw[start..end];
+            let sum: f64 = slice.iter().sum();
+            let nonzero = slice.iter().filter(|&&x| x > 0.0).count();
+            if nonzero > 0 {
+                let avg = sum / nonzero as f64;
+                for (j, &val) in slice.iter().enumerate() {
+                    if val > 0.0 {
+                        q[start + j] = avg;
+                    }
+                }
+            }
+        }
+
+        let (p, q) = (&scratch.p, &scratch.q);
+        let psum: f64 = p.iter().sum();
+        let qsum: f64 = q.iter().sum();
+        if psum == 0.0 || qsum == 0.0 {
+            return f64::INFINITY;
+        }
+        let mut kl = 0.0;
+        for (pi, qi) in p.iter().zip(q.iter()) {
+            if *pi > 0.0 {
+                let pp = pi / psum;
+                let qq = (qi / qsum).max(1e-12);
+                kl += pp * (pp / qq).ln();
+            }
+        }
+        kl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn tracks_min_max() {
+        let mut h = Histogram::new();
+        h.update(&[-1.0, 2.0, 0.5]);
+        assert_eq!(h.range(), (-1.0, 2.0));
+        assert_eq!(h.count, 3);
+    }
+
+    #[test]
+    fn grows_range_preserving_counts() {
+        let mut h = Histogram::new();
+        h.update(&[1.0; 100]);
+        let before: u64 = h.bins.iter().sum();
+        h.update(&[8.0; 10]); // forces multiple doublings
+        let after: u64 = h.bins.iter().sum();
+        assert_eq!(before + 10, after);
+        assert!(h.limit >= 8.0);
+    }
+
+    #[test]
+    fn kl_threshold_clips_outliers() {
+        // gaussian bulk + a few extreme outliers: threshold should land
+        // well below the outliers
+        let mut rng = Pcg32::seeded(1);
+        let mut xs: Vec<f32> = (0..100_000).map(|_| rng.normal()).collect();
+        xs.extend([50.0; 5]);
+        let mut h = Histogram::new();
+        h.update(&xs);
+        let t = h.kl_threshold();
+        assert!(t < 25.0, "threshold {t} did not clip outliers");
+        assert!(t > 1.0, "threshold {t} clipped the bulk");
+        let (lo, hi) = h.kl_clipped_range();
+        assert!(lo >= -25.0 && hi <= 25.0);
+    }
+
+    #[test]
+    fn kl_keeps_clean_range() {
+        // no outliers: threshold stays near the true max
+        let mut rng = Pcg32::seeded(2);
+        let xs: Vec<f32> = (0..50_000).map(|_| rng.range_f32(-3.0, 3.0)).collect();
+        let mut h = Histogram::new();
+        h.update(&xs);
+        let t = h.kl_threshold();
+        assert!(t > 2.0, "threshold {t} over-clipped a uniform distribution");
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.range(), (0.0, 0.0));
+        assert_eq!(h.kl_clipped_range(), (0.0, 0.0));
+    }
+}

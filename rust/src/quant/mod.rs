@@ -1,0 +1,115 @@
+//! Quantization substrate: schemes, histograms + KL clipping,
+//! configuration spaces, and weight quantization.
+//!
+//! This module is the "Glow extension" half of the paper (§4): everything
+//! needed to turn calibration statistics + a `QuantConfig` into concrete
+//! quantization parameters for every tensor of a model.
+
+pub mod config;
+pub mod histogram;
+pub mod scheme;
+pub mod weights;
+
+pub use config::{
+    CalibCount, Clipping, Granularity, QuantConfig, VtaConfig, ALL_CALIB, ALL_CLIP,
+    ALL_GRAN,
+};
+pub use histogram::Histogram;
+pub use scheme::{QParams, Scheme, ALL_SCHEMES};
+pub use weights::{
+    channel_params, fake_quant_weights, model_size_bytes, model_size_fp32,
+    quantize_weights_int8, tensor_params, weight_mse,
+};
+
+use anyhow::Result;
+
+/// Activation quantization parameters for every quantization point of a
+/// model, derived from calibration histograms + a config. This is the
+/// [L, 5] `act_params` array the fq HLO executables take (rows:
+/// scale, zero_point, qmin, qmax, bypass).
+#[derive(Clone, Debug)]
+pub struct ActQuantization {
+    pub rows: Vec<[f32; 5]>,
+}
+
+impl ActQuantization {
+    /// Build from per-quant-point histograms (same order as
+    /// `Graph::quant_points`).
+    ///
+    /// `bypass` marks rows that stay fp32: for mixed precision the caller
+    /// passes the set of quant points adjacent to the first/last layers.
+    pub fn from_histograms(
+        hists: &[Histogram],
+        scheme: Scheme,
+        clip: Clipping,
+        bypass: &[bool],
+    ) -> Result<ActQuantization> {
+        anyhow::ensure!(hists.len() == bypass.len(), "bypass arity mismatch");
+        let mut rows = Vec::with_capacity(hists.len());
+        for (h, &by) in hists.iter().zip(bypass) {
+            if by {
+                rows.push([1.0, 0.0, -128.0, 127.0, 1.0]);
+                continue;
+            }
+            let (lo, hi) = match clip {
+                Clipping::Max => h.range(),
+                Clipping::Kl => h.kl_clipped_range(),
+            };
+            let p = scheme.params_from_range(lo, hi);
+            rows.push([p.scale, p.zero_point as f32, p.qmin, p.qmax, 0.0]);
+        }
+        Ok(ActQuantization { rows })
+    }
+
+    /// Flatten to the [L*5] f32 buffer the runtime feeds to PJRT.
+    pub fn flat(&self) -> Vec<f32> {
+        self.rows.iter().flatten().copied().collect()
+    }
+
+    /// QParams view of row `i` (bypassed rows return identity).
+    pub fn params(&self, i: usize) -> QParams {
+        let r = &self.rows[i];
+        QParams { scale: r[0], zero_point: r[1] as i32, qmin: r[2], qmax: r[3] }
+    }
+
+    pub fn is_bypassed(&self, i: usize) -> bool {
+        self.rows[i][4] > 0.5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn act_quantization_rows() {
+        let mut h = Histogram::new();
+        h.update(&[-1.0, 0.5, 2.0]);
+        let hists = vec![h.clone(), h];
+        let aq = ActQuantization::from_histograms(
+            &hists,
+            Scheme::Asymmetric,
+            Clipping::Max,
+            &[false, true],
+        )
+        .unwrap();
+        assert_eq!(aq.rows.len(), 2);
+        assert!(!aq.is_bypassed(0));
+        assert!(aq.is_bypassed(1));
+        assert_eq!(aq.flat().len(), 10);
+        let p = aq.params(0);
+        assert!((p.scale - 3.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn arity_checked() {
+        let hists = vec![Histogram::new()];
+        assert!(ActQuantization::from_histograms(
+            &hists,
+            Scheme::Symmetric,
+            Clipping::Max,
+            &[false, false]
+        )
+        .is_err());
+    }
+}

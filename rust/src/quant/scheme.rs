@@ -1,0 +1,241 @@
+//! The four uniform int8 quantization schemes (paper §4.2, Eq. 2-13).
+//!
+//! A scheme maps an observed float range [min, max] to affine grid
+//! parameters (scale, zero_point, qmin, qmax). The fake-quant evaluation
+//! path and the HLO graphs consume these as plain numbers, so all four
+//! schemes share one quantizer kernel.
+
+use std::fmt;
+
+/// Uniform quantization scheme.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Affine: full int8 range, arbitrary zero point (Eq. 2-5).
+    Asymmetric,
+    /// Zero maps to zero; scale from the absolute maximum (Eq. 6-8).
+    Symmetric,
+    /// Glow's "symmetric with uint8" (Eq. 9-12): all-positive ranges use
+    /// the uint8 grid (zero_point = -128); ranges with negatives fall
+    /// back to symmetric.
+    SymmetricUint8,
+    /// Symmetric with the scale rounded to a power of two (Eq. 13);
+    /// requantization becomes a bit-shift -- the only scheme an
+    /// integer-only accelerator (VTA) can execute.
+    Pow2,
+}
+
+pub const ALL_SCHEMES: [Scheme; 4] =
+    [Scheme::Asymmetric, Scheme::Symmetric, Scheme::SymmetricUint8, Scheme::Pow2];
+
+impl Scheme {
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Asymmetric => "asymmetric",
+            Scheme::Symmetric => "symmetric",
+            Scheme::SymmetricUint8 => "symmetric_uint8",
+            Scheme::Pow2 => "pow2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scheme> {
+        ALL_SCHEMES.iter().copied().find(|x| x.name() == s)
+    }
+
+    /// Can the whole inference run with integer multiply/add/shift only?
+    pub fn integer_only(self) -> bool {
+        matches!(self, Scheme::Pow2)
+    }
+
+    /// Grid parameters for an observed range (paper Eq. 3/4, 7, 10/11, 13).
+    pub fn params_from_range(self, min: f32, max: f32) -> QParams {
+        // guard degenerate ranges; include zero like every practical
+        // quantizer so that zero is exactly representable
+        let min = min.min(0.0);
+        let max = max.max(0.0);
+        let absmax = min.abs().max(max.abs()).max(1e-12);
+        match self {
+            Scheme::Asymmetric => {
+                let scale = ((max - min) / 255.0).max(1e-12);
+                let zero_point = (-(min / scale)).round_ties_even() as i32 - 128;
+                QParams { scale, zero_point, qmin: -128.0, qmax: 127.0 }
+            }
+            Scheme::Symmetric => QParams {
+                scale: absmax / 127.0,
+                zero_point: 0,
+                qmin: -128.0,
+                qmax: 127.0,
+            },
+            Scheme::SymmetricUint8 => {
+                if min >= 0.0 {
+                    // uint8 grid stored in int8 with offset -128
+                    QParams {
+                        scale: (max / 255.0).max(1e-12),
+                        zero_point: -128,
+                        qmin: -128.0,
+                        qmax: 127.0,
+                    }
+                } else {
+                    QParams {
+                        scale: absmax / 127.0,
+                        zero_point: 0,
+                        qmin: -128.0,
+                        qmax: 127.0,
+                    }
+                }
+            }
+            Scheme::Pow2 => {
+                let exp = (absmax / 127.0).log2().round().clamp(-31.0, 31.0);
+                QParams {
+                    scale: exp.exp2(),
+                    zero_point: 0,
+                    qmin: -128.0,
+                    qmax: 127.0,
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Display for Scheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Affine int8 grid parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero_point: i32,
+    pub qmin: f32,
+    pub qmax: f32,
+}
+
+impl QParams {
+    /// Identity parameters (used for bypassed fp32 tensors).
+    pub fn identity() -> QParams {
+        QParams { scale: 1.0, zero_point: 0, qmin: -128.0, qmax: 127.0 }
+    }
+
+    /// Quantize one value to the int grid (round-half-to-even, matching
+    /// XLA RoundNearestEven and jnp.round).
+    pub fn quantize(&self, x: f32) -> i32 {
+        let q = (x / self.scale + self.zero_point as f32).round_ties_even();
+        q.clamp(self.qmin, self.qmax) as i32
+    }
+
+    /// Dequantize an int grid value.
+    pub fn dequantize(&self, q: i32) -> f32 {
+        (q - self.zero_point) as f32 * self.scale
+    }
+
+    /// Quantize-dequantize (the fake-quant the HLO graphs apply).
+    pub fn fake_quant(&self, x: f32) -> f32 {
+        self.dequantize(self.quantize(x))
+    }
+
+    /// Worst-case absolute rounding error inside the clipped range.
+    pub fn step(&self) -> f32 {
+        self.scale * 0.5
+    }
+
+    /// The representable float interval.
+    pub fn float_range(&self) -> (f32, f32) {
+        (
+            self.dequantize(self.qmin as i32),
+            self.dequantize(self.qmax as i32),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asymmetric_uses_full_range() {
+        let p = Scheme::Asymmetric.params_from_range(-1.0, 3.0);
+        let (lo, hi) = p.float_range();
+        assert!((lo - -1.0).abs() < p.scale, "lo {lo}");
+        assert!((hi - 3.0).abs() < p.scale, "hi {hi}");
+        // zero is representable exactly
+        assert!(p.fake_quant(0.0).abs() <= p.scale * 0.5 + 1e-9);
+    }
+
+    #[test]
+    fn symmetric_zero_maps_to_zero() {
+        let p = Scheme::Symmetric.params_from_range(-2.0, 1.0);
+        assert_eq!(p.zero_point, 0);
+        assert_eq!(p.fake_quant(0.0), 0.0);
+        assert!((p.scale - 2.0 / 127.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn symmetric_uint8_switches_on_sign() {
+        let pos = Scheme::SymmetricUint8.params_from_range(0.0, 6.0);
+        assert_eq!(pos.zero_point, -128);
+        assert!((pos.scale - 6.0 / 255.0).abs() < 1e-9);
+        let neg = Scheme::SymmetricUint8.params_from_range(-1.0, 6.0);
+        assert_eq!(neg.zero_point, 0);
+        assert!((neg.scale - 6.0 / 127.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pow2_scale_is_power_of_two() {
+        let p = Scheme::Pow2.params_from_range(-3.0, 3.0);
+        let exp = p.scale.log2();
+        assert_eq!(exp, exp.round());
+        assert_eq!(p.zero_point, 0);
+    }
+
+    #[test]
+    fn quantize_clamps() {
+        let p = Scheme::Symmetric.params_from_range(-1.0, 1.0);
+        assert_eq!(p.quantize(100.0), 127);
+        assert_eq!(p.quantize(-100.0), -128);
+    }
+
+    #[test]
+    fn fake_quant_error_bounded() {
+        for scheme in ALL_SCHEMES {
+            let p = scheme.params_from_range(-4.0, 4.0);
+            let (lo, hi) = p.float_range();
+            for i in -40..=40 {
+                let x = i as f32 / 10.0;
+                let err = (p.fake_quant(x) - x).abs();
+                // inside the representable interval: rounding error only;
+                // at the edges (pow2 rounds the scale down) saturation can
+                // add up to one extra step
+                let bound = if x >= lo && x <= hi {
+                    p.scale * 0.5
+                } else {
+                    p.scale
+                };
+                assert!(
+                    err <= bound + 1e-6,
+                    "{scheme}: x={x} err={err} scale={}",
+                    p.scale
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_range_is_safe() {
+        for scheme in ALL_SCHEMES {
+            let p = scheme.params_from_range(0.0, 0.0);
+            assert!(p.scale > 0.0);
+            let y = p.fake_quant(0.0);
+            assert!(y.is_finite());
+        }
+    }
+
+    #[test]
+    fn round_ties_even_convention() {
+        // scale 1, zp 0: 0.5 rounds to 0, 1.5 rounds to 2
+        let p = QParams { scale: 1.0, zero_point: 0, qmin: -128.0, qmax: 127.0 };
+        assert_eq!(p.quantize(0.5), 0);
+        assert_eq!(p.quantize(1.5), 2);
+        assert_eq!(p.quantize(-0.5), 0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Weight quantization: fake-quant for the HLO evaluation path, true int8
+//! for the VTA path, and model-size accounting (paper Table 5).
+//!
+//! Weights are quantized from their raw min/max (clipping applies to
+//! activations, whose statistics come from calibration; Glow does the
+//! same). Granularity selects between one scale per tensor and one scale
+//! per output channel -- the output channel is the last axis for both
+//! conv HWIO and dense [in, out] tensors.
+
+use crate::ir::{Graph, QTensor, Tensor};
+
+use super::config::Granularity;
+use super::scheme::{QParams, Scheme};
+
+/// Per-channel slices: yields (channel, stride view) over the last axis.
+fn channel_dim(shape: &[usize]) -> usize {
+    *shape.last().expect("scalar weight")
+}
+
+/// Compute quantization params per channel (last axis) of a weight tensor.
+pub fn channel_params(w: &Tensor, scheme: Scheme) -> Vec<QParams> {
+    let c = channel_dim(&w.shape);
+    let mut mins = vec![f32::INFINITY; c];
+    let mut maxs = vec![f32::NEG_INFINITY; c];
+    for (i, &x) in w.data.iter().enumerate() {
+        let ch = i % c;
+        mins[ch] = mins[ch].min(x);
+        maxs[ch] = maxs[ch].max(x);
+    }
+    (0..c).map(|ch| scheme.params_from_range(mins[ch], maxs[ch])).collect()
+}
+
+/// Compute a single per-tensor param set.
+pub fn tensor_params(w: &Tensor, scheme: Scheme) -> QParams {
+    let (lo, hi) = w.range();
+    scheme.params_from_range(lo, hi)
+}
+
+/// Fake-quantize a weight tensor (what the rust coordinator feeds to the
+/// `{model}_fq.hlo.txt` executables).
+pub fn fake_quant_weights(w: &Tensor, scheme: Scheme, gran: Granularity) -> Tensor {
+    match gran {
+        Granularity::Tensor => {
+            let p = tensor_params(w, scheme);
+            Tensor {
+                shape: w.shape.clone(),
+                data: w.data.iter().map(|&x| p.fake_quant(x)).collect(),
+            }
+        }
+        Granularity::Channel => {
+            let params = channel_params(w, scheme);
+            let c = params.len();
+            Tensor {
+                shape: w.shape.clone(),
+                data: w
+                    .data
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &x)| params[i % c].fake_quant(x))
+                    .collect(),
+            }
+        }
+    }
+}
+
+/// True int8 quantization (VTA path; per-tensor only -- the accelerator
+/// has a single shift register per GEMM).
+pub fn quantize_weights_int8(w: &Tensor, scheme: Scheme) -> QTensor {
+    let p = tensor_params(w, scheme);
+    QTensor {
+        shape: w.shape.clone(),
+        data: w.data.iter().map(|&x| p.quantize(x) as i8).collect(),
+        scales: vec![p.scale],
+        zero_points: vec![p.zero_point],
+    }
+}
+
+/// Mean squared fake-quant error of a weight tensor under a scheme+gran
+/// (used by Table 3's "fine-grained mapping" metric and by tests).
+pub fn weight_mse(w: &Tensor, scheme: Scheme, gran: Granularity) -> f64 {
+    let fq = fake_quant_weights(w, scheme, gran);
+    let n = w.data.len().max(1);
+    w.data
+        .iter()
+        .zip(&fq.data)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / n as f64
+}
+
+/// Serialized size in bytes of a quantized model (paper Table 5).
+///
+/// Accounting (matches Glow's serialized format in spirit):
+/// - int8 layer: 1 byte per weight element, biases as int32 (4B/elem),
+///   plus (scale f32 + zero_point i32) = 8B per scale group
+///   (1 group per tensor, or out_channels groups per channel).
+/// - fp32 layer (mixed precision first/last): 4 bytes per element.
+pub fn model_size_bytes(
+    graph: &Graph,
+    weights: &dyn Fn(&str) -> (usize, usize), // name -> (w elems, channels)
+    gran: Granularity,
+    mixed: bool,
+) -> u64 {
+    let layers = graph.layers();
+    let mut total = 0u64;
+    for (i, layer) in layers.iter().enumerate() {
+        let (w_elems, channels) = weights(layer);
+        let bias_elems = channels;
+        let fp32 = mixed && (i == 0 || i == layers.len() - 1);
+        if fp32 {
+            total += 4 * (w_elems + bias_elems) as u64;
+        } else {
+            let groups = match gran {
+                Granularity::Tensor => 1,
+                Granularity::Channel => channels,
+            };
+            total += w_elems as u64; // int8 weights
+            total += 4 * bias_elems as u64; // int32 biases
+            total += 8 * groups as u64; // scale + zero point
+        }
+    }
+    total
+}
+
+/// fp32 (original) model size in bytes.
+pub fn model_size_fp32(graph: &Graph, weights: &dyn Fn(&str) -> (usize, usize)) -> u64 {
+    graph
+        .layers()
+        .iter()
+        .map(|l| {
+            let (w, c) = weights(l);
+            4 * (w + c) as u64
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn rand_weight(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Pcg32::seeded(seed);
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| rng.normal() * 0.1).collect(),
+        }
+    }
+
+    #[test]
+    fn channel_beats_tensor_on_spread_channels() {
+        // channel 0 tiny values, channel 1 large: per-channel scales must
+        // quantize the tiny channel far better (this is exactly why
+        // depthwise-conv models are "fragile" under tensor granularity)
+        let mut w = rand_weight(&[3, 3, 4, 2], 1);
+        for (i, x) in w.data.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *x *= 0.01;
+            } else {
+                *x *= 10.0;
+            }
+        }
+        let fq_t = fake_quant_weights(&w, Scheme::Symmetric, Granularity::Tensor);
+        let fq_c = fake_quant_weights(&w, Scheme::Symmetric, Granularity::Channel);
+        // measure the error on the tiny channel only (channel 0)
+        let ch0_mse = |fq: &Tensor| -> f64 {
+            w.data
+                .iter()
+                .zip(&fq.data)
+                .enumerate()
+                .filter(|(i, _)| i % 2 == 0)
+                .map(|(_, (&a, &b))| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        };
+        let (t0, c0) = (ch0_mse(&fq_t), ch0_mse(&fq_c));
+        assert!(
+            c0 < t0 / 100.0,
+            "channel-gran ch0 err {c0} should be orders below tensor-gran {t0}"
+        );
+    }
+
+    #[test]
+    fn int8_quantization_roundtrip_error() {
+        let w = rand_weight(&[3, 3, 8, 16], 2);
+        let q = quantize_weights_int8(&w, Scheme::Symmetric);
+        let dq = q.dequantize();
+        let max_err = w
+            .data
+            .iter()
+            .zip(&dq.data)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err <= q.scales[0] * 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn fake_quant_matches_true_quant() {
+        let w = rand_weight(&[4, 4], 3);
+        let fq = fake_quant_weights(&w, Scheme::Symmetric, Granularity::Tensor);
+        let q = quantize_weights_int8(&w, Scheme::Symmetric);
+        let dq = q.dequantize();
+        for (a, b) in fq.data.iter().zip(&dq.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn channel_param_count() {
+        let w = rand_weight(&[3, 3, 4, 7], 4);
+        assert_eq!(channel_params(&w, Scheme::Asymmetric).len(), 7);
+    }
+}

@@ -1,0 +1,142 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! python/compile/aot.py, compiles them once on the CPU PJRT client, and
+//! executes them from the coordinator's hot path.
+//!
+//! Interchange is HLO *text* (not serialized HloModuleProto): jax >= 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md). All
+//! lowered functions return a tuple (return_tuple=True), so results are
+//! decomposed with `to_tuple`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::ir::Tensor;
+
+/// A compiled model executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl Executable {
+    /// Execute with f32 tensor inputs; returns the output tuple as tensors.
+    pub fn run_f32(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.run_literals(&refs)
+    }
+
+    /// Execute with pre-built literals (mixed dtypes allowed). Taking
+    /// borrows lets callers keep constant operands (weights) alive across
+    /// batches without re-uploading.
+    pub fn run_literals(&self, literals: &[&xla::Literal]) -> Result<Vec<Tensor>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(literals)
+            .map_err(|e| anyhow!("pjrt execute: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("pjrt fetch: {e}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        parts.iter().map(literal_to_tensor).collect()
+    }
+
+    /// Execute and return i32 outputs (used by the int8 GEMM kernel
+    /// artifact whose ABI is i32).
+    pub fn run_literals_i32(&self, literals: &[&xla::Literal]) -> Result<Vec<Vec<i32>>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(literals)
+            .map_err(|e| anyhow!("pjrt execute: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("pjrt fetch: {e}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        parts
+            .iter()
+            .map(|l| l.to_vec::<i32>().map_err(|e| anyhow!("literal to i32: {e}")))
+            .collect()
+    }
+}
+
+/// Convert an f32 tensor to a device literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(&t.data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("literal reshape {:?}: {e}", t.shape))
+}
+
+/// Convert an i32 slice to a literal of the given shape.
+pub fn i32_to_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("literal reshape {shape:?}: {e}"))
+}
+
+fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape().map_err(|e| anyhow!("literal shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    // some outputs (logits) are f32; convert anything else
+    let data = match l.ty().map_err(|e| anyhow!("{e}"))? {
+        xla::ElementType::F32 => l.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+        _ => {
+            let conv = l
+                .convert(xla::PrimitiveType::F32)
+                .map_err(|e| anyhow!("convert: {e}"))?;
+            conv.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?
+        }
+    };
+    Tensor::from_vec(&dims, data)
+}
+
+/// PJRT client + executable cache. Compiling an HLO module takes hundreds
+/// of ms; the cache makes the 96-config sweep compile each artifact once.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Runtime { client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached by path).
+    pub fn load(&self, path: &Path) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(path) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))
+            .with_context(|| "is the artifact stale? re-run `make artifacts`")?;
+        let exe = Rc::new(Executable { exe, path: path.to_path_buf() });
+        self.cache.borrow_mut().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,0 +1,504 @@
+//! Configuration search algorithms (paper §5-6.2, Fig 5/6).
+//!
+//! Five algorithms share one driver interface: given the history of
+//! (config index, measured accuracy) pairs, propose the next config to
+//! measure. `random`, `grid`, and `genetic` are the paper's baselines;
+//! `xgb` is the cost-model search (Algorithm 1), and `xgb_t` adds
+//! transfer learning from other models' trial databases.
+
+use crate::quant::QuantConfig;
+use crate::util::Pcg32;
+use crate::xgb::{XgbModel, XgbParams};
+
+/// One measured trial.
+#[derive(Clone, Copy, Debug)]
+pub struct Trial {
+    pub config: usize,
+    pub accuracy: f64,
+}
+
+/// A search algorithm proposing config indices in `0..space`.
+pub trait SearchAlgo {
+    fn name(&self) -> &'static str;
+    /// Propose the next config to measure. `history` holds every prior
+    /// trial in order. Returning `None` ends the search early.
+    fn propose(&mut self, history: &[Trial]) -> Option<usize>;
+}
+
+// ---------------------------------------------------------------------------
+// Random search
+// ---------------------------------------------------------------------------
+
+/// Uniform random draw without replacement.
+pub struct RandomSearch {
+    order: Vec<usize>,
+    next: usize,
+}
+
+impl RandomSearch {
+    pub fn new(space: usize, seed: u64) -> Self {
+        let mut order: Vec<usize> = (0..space).collect();
+        Pcg32::new(seed, 11).shuffle(&mut order);
+        RandomSearch { order, next: 0 }
+    }
+}
+
+impl SearchAlgo for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn propose(&mut self, _history: &[Trial]) -> Option<usize> {
+        let i = self.next;
+        self.next += 1;
+        self.order.get(i).copied()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Grid search
+// ---------------------------------------------------------------------------
+
+/// Deterministic enumeration of the grid in axis-major order, starting
+/// from a seed-dependent offset (the paper samples grid points; a fixed
+/// origin would make the comparison depend on an arbitrary enumeration
+/// choice).
+pub struct GridSearch {
+    space: usize,
+    offset: usize,
+    next: usize,
+}
+
+impl GridSearch {
+    pub fn new(space: usize, seed: u64) -> Self {
+        let offset = Pcg32::new(seed, 13).below(space.max(1));
+        GridSearch { space, offset, next: 0 }
+    }
+}
+
+impl SearchAlgo for GridSearch {
+    fn name(&self) -> &'static str {
+        "grid"
+    }
+
+    fn propose(&mut self, _history: &[Trial]) -> Option<usize> {
+        if self.next >= self.space {
+            return None;
+        }
+        let i = (self.offset + self.next) % self.space;
+        self.next += 1;
+        Some(i)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Genetic algorithm
+// ---------------------------------------------------------------------------
+
+/// Binary-encoded GA over the 7-bit QuantConfig genome, mirroring the R
+/// `GA` package defaults the paper used: fitness = Top-1 accuracy,
+/// tournament-of-2 selection, single-point crossover (p=0.8), bit-flip
+/// mutation (p=0.1), elitism of 1.
+pub struct GeneticSearch {
+    rng: Pcg32,
+    population: Vec<[bool; 7]>,
+    pending: Vec<usize>, // population members not yet proposed this gen
+    pop_size: usize,
+}
+
+impl GeneticSearch {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 17);
+        let pop_size = 8;
+        let population: Vec<[bool; 7]> = (0..pop_size)
+            .map(|_| {
+                let mut g = [false; 7];
+                for b in &mut g {
+                    *b = rng.chance(0.5);
+                }
+                g
+            })
+            .collect();
+        GeneticSearch { rng, population, pending: (0..pop_size).rev().collect(), pop_size }
+    }
+
+    fn fitness_of(genome: &[bool; 7], history: &[Trial]) -> f64 {
+        let idx = QuantConfig::from_genome(genome).index();
+        history
+            .iter()
+            .rev()
+            .find(|t| t.config == idx)
+            .map(|t| t.accuracy)
+            .unwrap_or(0.0)
+    }
+
+    fn evolve(&mut self, history: &[Trial]) {
+        let fit: Vec<f64> =
+            self.population.iter().map(|g| Self::fitness_of(g, history)).collect();
+        // elitism: keep the best genome
+        let best = (0..self.pop_size)
+            .max_by(|&a, &b| fit[a].partial_cmp(&fit[b]).unwrap())
+            .unwrap();
+        let mut next = vec![self.population[best]];
+        while next.len() < self.pop_size {
+            let pa = self.tournament(&fit);
+            let pb = self.tournament(&fit);
+            let (mut ca, mut cb) = (self.population[pa], self.population[pb]);
+            if self.rng.chance(0.8) {
+                let cut = 1 + self.rng.below(6);
+                for i in cut..7 {
+                    std::mem::swap(&mut ca[i], &mut cb[i]);
+                }
+            }
+            for g in [&mut ca, &mut cb] {
+                for bit in g.iter_mut() {
+                    if self.rng.chance(0.1) {
+                        *bit = !*bit;
+                    }
+                }
+            }
+            next.push(ca);
+            if next.len() < self.pop_size {
+                next.push(cb);
+            }
+        }
+        self.population = next;
+        self.pending = (0..self.pop_size).rev().collect();
+    }
+
+    fn tournament(&mut self, fit: &[f64]) -> usize {
+        let a = self.rng.below(fit.len());
+        let b = self.rng.below(fit.len());
+        if fit[a] >= fit[b] {
+            a
+        } else {
+            b
+        }
+    }
+}
+
+impl SearchAlgo for GeneticSearch {
+    fn name(&self) -> &'static str {
+        "genetic"
+    }
+
+    fn propose(&mut self, history: &[Trial]) -> Option<usize> {
+        if self.pending.is_empty() {
+            self.evolve(history);
+        }
+        let member = self.pending.pop()?;
+        Some(QuantConfig::from_genome(&self.population[member]).index())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XGBoost search (Algorithm 1) + transfer learning
+// ---------------------------------------------------------------------------
+
+/// A historical record for transfer learning: features + accuracy from
+/// another model's tuning run (the database D of §5.2).
+#[derive(Clone, Debug)]
+pub struct TransferRecord {
+    pub features: Vec<f32>,
+    pub accuracy: f32,
+}
+
+/// Cost-model search: refit XGBoost on everything measured so far (plus
+/// transfer records), then propose the unexplored config with the highest
+/// predicted accuracy (§5.2.3: "enumerate the entire space of S_e and
+/// pick the top candidate ... not explored in the previous step").
+pub struct XgbSearch {
+    /// features of every config in the space (arch features ++ one-hot)
+    space_features: Vec<Vec<f32>>,
+    transfer: Vec<TransferRecord>,
+    /// cost-model hyper-parameters (public for the ablation bench)
+    pub params: XgbParams,
+    rng: Pcg32,
+    name: &'static str,
+}
+
+impl XgbSearch {
+    /// Individual learning (cold start).
+    pub fn new(space_features: Vec<Vec<f32>>, seed: u64) -> Self {
+        XgbSearch {
+            space_features,
+            transfer: Vec::new(),
+            params: XgbParams::default(),
+            rng: Pcg32::new(seed, 23),
+            name: "xgb",
+        }
+    }
+
+    /// Transfer learning: warm-start from other models' databases.
+    pub fn with_transfer(
+        space_features: Vec<Vec<f32>>,
+        transfer: Vec<TransferRecord>,
+        seed: u64,
+    ) -> Self {
+        XgbSearch {
+            space_features,
+            transfer,
+            params: XgbParams::default(),
+            rng: Pcg32::new(seed, 23),
+            name: "xgb_t",
+        }
+    }
+
+    /// The fitted cost model for the current history (also used by the
+    /// Fig 3 feature-importance bench).
+    pub fn fit_cost_model(&self, history: &[Trial]) -> Option<XgbModel> {
+        let mut xs: Vec<Vec<f32>> = Vec::new();
+        let mut ys: Vec<f32> = Vec::new();
+        for r in &self.transfer {
+            xs.push(r.features.clone());
+            ys.push(r.accuracy);
+        }
+        for t in history {
+            xs.push(self.space_features[t.config].clone());
+            ys.push(t.accuracy as f32);
+        }
+        if xs.is_empty() {
+            return None;
+        }
+        // scale model capacity with the sample count: deep ensembles on a
+        // handful of rows memorize them and generalize arbitrarily to the
+        // unexplored region, which stalls the search
+        let mut params = self.params;
+        params.max_depth = params.max_depth.min(1 + xs.len() / 6).max(1);
+        params.n_trees = params.n_trees.min(10 + 3 * xs.len());
+        XgbModel::fit(&xs, &ys, params).ok()
+    }
+}
+
+impl SearchAlgo for XgbSearch {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn propose(&mut self, history: &[Trial]) -> Option<usize> {
+        let explored: std::collections::HashSet<usize> =
+            history.iter().map(|t| t.config).collect();
+        let unexplored: Vec<usize> = (0..self.space_features.len())
+            .filter(|i| !explored.contains(i))
+            .collect();
+        if unexplored.is_empty() {
+            return None;
+        }
+        match self.fit_cost_model(history) {
+            None => {
+                // cold start with no data at all: random first probe
+                Some(unexplored[self.rng.below(unexplored.len())])
+            }
+            Some(model) => {
+                // "pick the top candidate ... considering diversity"
+                // (§5.2.3): break prediction ties uniformly at random
+                // instead of by index, so plateaus of the young cost
+                // model spread probes across the space
+                let preds: Vec<f32> = unexplored
+                    .iter()
+                    .map(|&i| model.predict(&self.space_features[i]))
+                    .collect();
+                let best = preds.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let ties: Vec<usize> = unexplored
+                    .iter()
+                    .copied()
+                    .zip(&preds)
+                    .filter(|(_, &p)| p >= best - 1e-6)
+                    .map(|(i, _)| i)
+                    .collect();
+                Some(ties[self.rng.below(ties.len())])
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Search driver
+// ---------------------------------------------------------------------------
+
+/// Full trace of one search run.
+#[derive(Clone, Debug)]
+pub struct SearchTrace {
+    pub algo: String,
+    pub trials: Vec<Trial>,
+    pub best_accuracy: f64,
+    pub best_config: usize,
+}
+
+impl SearchTrace {
+    /// First trial index (1-based) whose accuracy is within `eps` of
+    /// `target`. `None` if never reached.
+    pub fn trials_to_reach(&self, target: f64, eps: f64) -> Option<usize> {
+        self.trials
+            .iter()
+            .position(|t| t.accuracy >= target - eps)
+            .map(|i| i + 1)
+    }
+
+    /// Best accuracy after the first `n` trials.
+    pub fn best_after(&self, n: usize) -> f64 {
+        self.trials
+            .iter()
+            .take(n)
+            .map(|t| t.accuracy)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// Run a search algorithm for `budget` proposals, measuring via
+/// `measure` (which may serve cached values -- duplicate proposals from
+/// the GA still count as trials, as they would on real hardware).
+pub fn run_search(
+    algo: &mut dyn SearchAlgo,
+    budget: usize,
+    mut measure: impl FnMut(usize) -> anyhow::Result<f64>,
+) -> anyhow::Result<SearchTrace> {
+    let mut trials = Vec::with_capacity(budget);
+    for _ in 0..budget {
+        let Some(config) = algo.propose(&trials) else { break };
+        let accuracy = measure(config)?;
+        trials.push(Trial { config, accuracy });
+    }
+    let best = trials
+        .iter()
+        .copied()
+        .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+        .expect("no trials run");
+    Ok(SearchTrace {
+        algo: algo.name().to_string(),
+        trials,
+        best_accuracy: best.accuracy,
+        best_config: best.config,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic oracle with one sharp optimum.
+    fn oracle(i: usize) -> f64 {
+        let peak = 61;
+        1.0 - ((i as f64 - peak as f64).abs() / 96.0)
+    }
+
+    fn features(space: usize) -> Vec<Vec<f32>> {
+        (0..space).map(|i| QuantConfig::from_index(i).unwrap().one_hot()).collect()
+    }
+
+    #[test]
+    fn random_covers_space_without_repeats() {
+        let mut s = RandomSearch::new(96, 1);
+        let mut seen = std::collections::HashSet::new();
+        let mut hist = Vec::new();
+        for _ in 0..96 {
+            let i = s.propose(&hist).unwrap();
+            assert!(seen.insert(i), "repeat {i}");
+            hist.push(Trial { config: i, accuracy: 0.0 });
+        }
+        assert_eq!(seen.len(), 96);
+        assert!(s.propose(&hist).is_none());
+    }
+
+    #[test]
+    fn grid_enumerates_all() {
+        let mut s = GridSearch::new(12, 5);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..12 {
+            seen.insert(s.propose(&[]).unwrap());
+        }
+        assert_eq!(seen.len(), 12);
+    }
+
+    #[test]
+    fn genetic_improves_over_generations() {
+        let mut s = GeneticSearch::new(3);
+        let trace = run_search(&mut s, 96, |i| Ok(oracle(i))).unwrap();
+        // after 12 generations the GA should be near the optimum
+        assert!(
+            trace.best_accuracy > 0.9,
+            "GA best {} too far from optimum",
+            trace.best_accuracy
+        );
+    }
+
+    #[test]
+    fn xgb_converges_faster_than_random_on_structured_oracle() {
+        // structured oracle: accuracy depends additively on config axes,
+        // which is the structure the cost model exploits
+        let structured = |i: usize| {
+            let c = QuantConfig::from_index(i).unwrap();
+            let mut a = 0.5;
+            if c.scheme == crate::quant::Scheme::Asymmetric {
+                a += 0.2;
+            }
+            if c.clip == crate::quant::Clipping::Kl {
+                a += 0.15;
+            }
+            if c.calib == crate::quant::CalibCount::C512 {
+                a += 0.1;
+            }
+            a
+        };
+        let target = 0.95;
+        let n_seeds = 20;
+        let mut best_xgb = Vec::new();
+        let mut best_rnd = Vec::new();
+        for seed in 0..n_seeds {
+            let mut x = XgbSearch::new(features(96), seed);
+            let tx = run_search(&mut x, 96, |i| Ok(structured(i))).unwrap();
+            best_xgb.push(tx.trials_to_reach(target, 1e-9).unwrap() as f64);
+            let mut r = RandomSearch::new(96, seed);
+            let tr = run_search(&mut r, 96, |i| Ok(structured(i))).unwrap();
+            best_rnd.push(tr.trials_to_reach(target, 1e-9).unwrap() as f64);
+        }
+        let mx: f64 = best_xgb.iter().sum::<f64>() / n_seeds as f64;
+        let mr: f64 = best_rnd.iter().sum::<f64>() / n_seeds as f64;
+        assert!(mx < mr, "xgb mean {mx} should beat random mean {mr}");
+    }
+
+    #[test]
+    fn transfer_warm_start_proposes_good_first_config() {
+        // transfer database from a "different model" with the same
+        // structure: xgb_t's FIRST proposal should already be good
+        let structured = |i: usize| {
+            let c = QuantConfig::from_index(i).unwrap();
+            if c.clip == crate::quant::Clipping::Kl {
+                0.9
+            } else {
+                0.5
+            }
+        };
+        let feats = features(96);
+        let transfer: Vec<TransferRecord> = (0..96)
+            .map(|i| TransferRecord {
+                features: feats[i].clone(),
+                accuracy: structured(i) as f32,
+            })
+            .collect();
+        let mut s = XgbSearch::with_transfer(feats.clone(), transfer, 1);
+        let first = s.propose(&[]).unwrap();
+        assert_eq!(
+            QuantConfig::from_index(first).unwrap().clip,
+            crate::quant::Clipping::Kl
+        );
+    }
+
+    #[test]
+    fn trace_metrics() {
+        let trace = SearchTrace {
+            algo: "x".into(),
+            trials: vec![
+                Trial { config: 0, accuracy: 0.2 },
+                Trial { config: 1, accuracy: 0.8 },
+                Trial { config: 2, accuracy: 0.5 },
+            ],
+            best_accuracy: 0.8,
+            best_config: 1,
+        };
+        assert_eq!(trace.trials_to_reach(0.8, 0.0), Some(2));
+        assert_eq!(trace.trials_to_reach(0.9, 0.0), None);
+        assert_eq!(trace.best_after(1), 0.2);
+        assert_eq!(trace.best_after(3), 0.8);
+    }
+}

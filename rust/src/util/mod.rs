@@ -1,0 +1,97 @@
+//! Shared utilities: seeded RNG, minimal JSON, statistics, timing, CSV.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Pcg32;
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch returning milliseconds.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Minimal CSV writer (no quoting needs beyond our numeric/slug payloads).
+pub struct Csv {
+    out: String,
+    cols: usize,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv { out: header.join(",") + "\n", cols: header.len() }
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(fields.len(), self.cols, "csv row arity mismatch");
+        self.out.push_str(&fields.join(","));
+        self.out.push('\n');
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+
+    pub fn write_file(self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.finish())?;
+        Ok(())
+    }
+}
+
+/// Format seconds as "1.2s" / "340ms".
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else {
+        format!("{:.1}ms", secs * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_shape() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".into(), "2".into()]);
+        assert_eq!(c.finish(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn csv_arity_checked() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".into()]);
+    }
+
+    #[test]
+    fn duration_fmt() {
+        assert_eq!(fmt_duration(2.0), "2.00s");
+        assert_eq!(fmt_duration(0.1234), "123.4ms");
+    }
+}

@@ -1,0 +1,119 @@
+//! Small statistics helpers: summary stats, Shannon entropy (Table 4),
+//! and latency aggregation.
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// p-th percentile (0..=100) with linear interpolation.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Shannon entropy (natural log, as in the paper's Eq. 22) of a sample of
+/// categorical observations.
+pub fn shannon_entropy<T: Eq + std::hash::Hash>(obs: &[T]) -> f64 {
+    if obs.is_empty() {
+        return 0.0;
+    }
+    let mut counts = std::collections::HashMap::new();
+    for o in obs {
+        *counts.entry(o).or_insert(0usize) += 1;
+    }
+    let n = obs.len() as f64;
+    -counts
+        .values()
+        .map(|&c| {
+            let p = c as f64 / n;
+            p * p.ln()
+        })
+        .sum::<f64>()
+}
+
+/// Latency summary in milliseconds.
+#[derive(Clone, Debug)]
+pub struct LatencyStats {
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    pub n: usize,
+}
+
+impl LatencyStats {
+    pub fn from_samples(samples_ms: &[f64]) -> Self {
+        assert!(!samples_ms.is_empty());
+        LatencyStats {
+            mean_ms: mean(samples_ms),
+            p50_ms: percentile(samples_ms, 50.0),
+            p99_ms: percentile(samples_ms, 99.0),
+            min_ms: samples_ms.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_ms: samples_ms.iter().cloned().fold(0.0, f64::max),
+            n: samples_ms.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_stddev() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn entropy_uniform_vs_constant() {
+        // constant -> zero entropy
+        assert_eq!(shannon_entropy(&[1, 1, 1, 1]), 0.0);
+        // uniform over 4 -> ln(4)
+        let h = shannon_entropy(&[0, 1, 2, 3]);
+        assert!((h - 4f64.ln()).abs() < 1e-12);
+        // skewed is in between
+        let h2 = shannon_entropy(&[0, 0, 0, 1]);
+        assert!(h2 > 0.0 && h2 < h);
+    }
+
+    #[test]
+    fn latency_stats() {
+        let s = LatencyStats::from_samples(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.mean_ms, 2.0);
+        assert_eq!(s.min_ms, 1.0);
+        assert_eq!(s.max_ms, 3.0);
+        assert_eq!(s.n, 3);
+    }
+}

@@ -1,0 +1,90 @@
+//! VTA cycle cost model.
+//!
+//! Models the published VTA micro-architecture (Moreau et al., IEEE Micro
+//! 2019) closely enough for the paper's latency-shape claims: a 1x16x16
+//! int8 GEMM core (one input vector times a 16x16 weight tile per cycle),
+//! a 16-lane vector ALU, and DMA load/store at 16 bytes/cycle. Fusion of
+//! conv+ReLU removes the intermediate store + load + separate ALU pass
+//! (the paper: "executed in consecutive cycles without extra off-chip
+//! memory access").
+
+/// Cycle counters per functional unit.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Cycles {
+    pub gemm: u64,
+    pub alu: u64,
+    pub load: u64,
+    pub store: u64,
+}
+
+pub const GEMM_BATCH: u64 = 1;
+pub const GEMM_IN: u64 = 16;
+pub const GEMM_OUT: u64 = 16;
+pub const ALU_LANES: u64 = 16;
+pub const DMA_BYTES_PER_CYCLE: u64 = 16;
+
+impl Cycles {
+    pub fn total(&self) -> u64 {
+        self.gemm + self.alu + self.load + self.store
+    }
+
+    /// GEMM of [m, k] x [k, n] int8 operands.
+    pub fn add_gemm(&mut self, m: u64, k: u64, n: u64) {
+        self.gemm += m.div_ceil(GEMM_BATCH)
+            * k.div_ceil(GEMM_IN)
+            * n.div_ceil(GEMM_OUT);
+    }
+
+    /// Elementwise ALU pass over `elems` values (shift/add/min/max).
+    pub fn add_alu(&mut self, elems: u64) {
+        self.alu += elems.div_ceil(ALU_LANES);
+    }
+
+    pub fn add_load(&mut self, bytes: u64) {
+        self.load += bytes.div_ceil(DMA_BYTES_PER_CYCLE);
+    }
+
+    pub fn add_store(&mut self, bytes: u64) {
+        self.store += bytes.div_ceil(DMA_BYTES_PER_CYCLE);
+    }
+
+    pub fn add(&mut self, other: Cycles) {
+        self.gemm += other.gemm;
+        self.alu += other.alu;
+        self.load += other.load;
+        self.store += other.store;
+    }
+
+    /// Wall-clock estimate at the canonical 100 MHz VTA PYNQ clock.
+    pub fn ms_at_100mhz(&self) -> f64 {
+        self.total() as f64 / 100e6 * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_tiles_round_up() {
+        let mut c = Cycles::default();
+        c.add_gemm(1, 17, 16); // k=17 -> 2 tiles
+        assert_eq!(c.gemm, 2);
+    }
+
+    #[test]
+    fn alu_lanes_round_up() {
+        let mut c = Cycles::default();
+        c.add_alu(17);
+        assert_eq!(c.alu, 2);
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let mut c = Cycles::default();
+        c.add_gemm(16, 16, 16);
+        c.add_load(32);
+        c.add_store(15);
+        assert_eq!(c.total(), 16 + 2 + 1);
+    }
+}

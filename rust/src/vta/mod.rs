@@ -1,0 +1,681 @@
+//! VTA integer-only execution (paper §6.3, Fig 8).
+//!
+//! Simulates deploying a quantized model on the Versatile Tensor
+//! Accelerator: every tensor is int8 with a power-of-two scale (stored as
+//! the exponent e, scale = 2^e), accumulators are int32, and all
+//! requantization is multiply-free (rounding arithmetic shifts). The
+//! cycle model lives in [`cycles`].
+//!
+//! Two quantizers are provided:
+//! - [`VtaModel::build`]: per-layer exponents from calibration
+//!   histograms (Quantune's approach);
+//! - [`VtaModel::build_global_scale`]: a single activation exponent for
+//!   the whole network (the TVM-VTA baseline the paper reports a ~33%
+//!   accuracy drop for).
+//!
+//! Fusion (the 12-config space's last axis) executes conv+ReLU in
+//! consecutive GEMM/ALU cycles without the intermediate store+load; it
+//! changes cycle counts, not numerics (with zero-point-0 pow2 grids,
+//! relu(requant(x)) == requant(relu(x)) exactly -- DESIGN.md §5 Fig 8).
+
+pub mod cycles;
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::interp::gemm::gemm_i32;
+use crate::ir::{Act, Graph, Op, PoolKind, Tensor};
+use crate::quant::{Clipping, Histogram, Scheme, VtaConfig};
+
+pub use cycles::Cycles;
+
+/// int8 tensor + its power-of-two exponent (scale = 2^exp).
+#[derive(Clone, Debug)]
+pub struct VTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+    pub exp: i32,
+}
+
+/// Rounding arithmetic right shift (negative = left shift). This is the
+/// only requantization primitive the simulated hardware has.
+#[inline]
+pub fn rshift_round(acc: i64, shift: i32) -> i64 {
+    if shift > 0 {
+        (acc + (1i64 << (shift - 1))) >> shift
+    } else {
+        acc << (-shift)
+    }
+}
+
+#[inline]
+fn sat_i8(v: i64) -> i8 {
+    v.clamp(-128, 127) as i8
+}
+
+/// Exponent of a pow2 scheme scale for a range.
+fn exp_for_range(lo: f32, hi: f32) -> i32 {
+    let p = Scheme::Pow2.params_from_range(lo, hi);
+    p.scale.log2().round() as i32
+}
+
+/// A VTA-deployable integer-only model.
+pub struct VtaModel {
+    pub graph: Graph,
+    /// per weighted layer: int8 weights (HWIO / [in,out]) + exponent
+    qweights: HashMap<String, (Vec<i8>, Vec<usize>, i32)>,
+    /// per weighted layer: int32 bias at scale 2^(e_in + e_w)
+    qbiases: HashMap<String, Vec<i32>>,
+    /// exponent of every tensor in the graph (quant points calibrated,
+    /// pass-through ops inherit their input's)
+    exps: HashMap<String, i32>,
+    pub fusion: bool,
+}
+
+impl VtaModel {
+    /// Per-layer exponents from calibration histograms (Quantune).
+    /// `hists` rows follow `graph.quant_points()` order.
+    pub fn build(
+        graph: &Graph,
+        weights: &HashMap<String, Tensor>,
+        hists: &[Histogram],
+        cfg: &VtaConfig,
+    ) -> Result<VtaModel> {
+        let qpoints = graph.quant_points();
+        ensure!(hists.len() == qpoints.len(), "histogram arity mismatch");
+        let mut point_exp = HashMap::new();
+        for (name, h) in qpoints.iter().zip(hists) {
+            let (lo, hi) = match cfg.clip {
+                Clipping::Max => h.range(),
+                Clipping::Kl => h.kl_clipped_range(),
+            };
+            point_exp.insert(name.clone(), exp_for_range(lo, hi));
+        }
+        Self::build_with_exponents(graph, weights, point_exp, cfg.fusion)
+    }
+
+    /// Single global scale for the whole network -- the TVM-VTA baseline
+    /// of Fig 8 ("the choice of a quantization scale for the whole
+    /// network ... can be imprecise for small values and truncate large
+    /// values"). One fixed-point format serves every tensor INCLUDING
+    /// the weights, so small weight values collapse to a handful of
+    /// quantization levels while wide activations saturate.
+    pub fn build_global_scale(
+        graph: &Graph,
+        weights: &HashMap<String, Tensor>,
+        hists: &[Histogram],
+        fusion: bool,
+    ) -> Result<VtaModel> {
+        let qpoints = graph.quant_points();
+        ensure!(hists.len() == qpoints.len(), "histogram arity mismatch");
+        let mut lo = 0f32;
+        let mut hi = 0f32;
+        for h in hists {
+            let (l, m) = h.range();
+            lo = lo.min(l);
+            hi = hi.max(m);
+        }
+        for name in graph.weight_names() {
+            if name.ends_with("_w") {
+                if let Some(w) = weights.get(&name) {
+                    let (l, m) = w.range();
+                    lo = lo.min(l);
+                    hi = hi.max(m);
+                }
+            }
+        }
+        let e = exp_for_range(lo, hi);
+        let point_exp = qpoints.iter().map(|n| (n.clone(), e)).collect();
+        Self::build_with_exponents_impl(graph, weights, point_exp, fusion, Some(e))
+    }
+
+    fn build_with_exponents(
+        graph: &Graph,
+        weights: &HashMap<String, Tensor>,
+        point_exp: HashMap<String, i32>,
+        fusion: bool,
+    ) -> Result<VtaModel> {
+        Self::build_with_exponents_impl(graph, weights, point_exp, fusion, None)
+    }
+
+    fn build_with_exponents_impl(
+        graph: &Graph,
+        weights: &HashMap<String, Tensor>,
+        point_exp: HashMap<String, i32>,
+        fusion: bool,
+        weight_exp_override: Option<i32>,
+    ) -> Result<VtaModel> {
+        // propagate exponents to non-quant-point tensors
+        let mut exps: HashMap<String, i32> = HashMap::new();
+        exps.insert(
+            "input".into(),
+            *point_exp.get("input").ok_or_else(|| anyhow!("missing input exp"))?,
+        );
+        for n in &graph.nodes {
+            let e = if let Some(&e) = point_exp.get(&n.name) {
+                e
+            } else {
+                // pass-through ops (pool, shuffle) inherit input exponent
+                exps[&n.inputs[0]]
+            };
+            exps.insert(n.name.clone(), e);
+        }
+
+        // quantize weights + biases
+        let mut qweights = HashMap::new();
+        let mut qbiases = HashMap::new();
+        for n in &graph.nodes {
+            if !n.has_weights() {
+                continue;
+            }
+            let w = weights
+                .get(&format!("{}_w", n.name))
+                .ok_or_else(|| anyhow!("missing weight {}_w", n.name))?;
+            let b = weights
+                .get(&format!("{}_b", n.name))
+                .ok_or_else(|| anyhow!("missing weight {}_b", n.name))?;
+            let (lo, hi) = w.range();
+            let ew = weight_exp_override.unwrap_or_else(|| exp_for_range(lo, hi));
+            let sw = (ew as f32).exp2();
+            let qw: Vec<i8> = w
+                .data
+                .iter()
+                .map(|&x| sat_i8((x / sw).round_ties_even() as i64))
+                .collect();
+            let e_in = exps[&n.inputs[0]];
+            // bias lives at the accumulator scale 2^(e_in + e_w)
+            let sb = ((e_in + ew) as f32).exp2();
+            let qb: Vec<i32> = b
+                .data
+                .iter()
+                .map(|&x| (x / sb).round_ties_even() as i32)
+                .collect();
+            qweights.insert(n.name.clone(), (qw, w.shape.clone(), ew));
+            qbiases.insert(n.name.clone(), qb);
+        }
+
+        Ok(VtaModel { graph: graph.clone(), qweights, qbiases, exps, fusion })
+    }
+
+    /// Quantize a normalized f32 input batch to the input grid.
+    pub fn quantize_input(&self, x: &Tensor) -> VTensor {
+        let e = self.exps["input"];
+        let s = (e as f32).exp2();
+        VTensor {
+            shape: x.shape.clone(),
+            data: x
+                .data
+                .iter()
+                .map(|&v| sat_i8((v / s).round_ties_even() as i64))
+                .collect(),
+            exp: e,
+        }
+    }
+
+    /// Integer-only forward. Returns int32 logits [N, classes] and the
+    /// cycle count for one batch.
+    pub fn forward(&self, x: &Tensor) -> Result<(Vec<i32>, Vec<usize>, Cycles)> {
+        let mut cyc = Cycles::default();
+        let qx = self.quantize_input(x);
+        cyc.add_load(qx.data.len() as u64);
+
+        let mut env: HashMap<&str, VTensor> = HashMap::new();
+        let mut logits: Option<(Vec<i32>, Vec<usize>)> = None;
+        env.insert("input", qx);
+
+        for node in &self.graph.nodes {
+            let ins: Vec<&VTensor> = node
+                .inputs
+                .iter()
+                .map(|i| env.get(i.as_str()).ok_or_else(|| anyhow!("missing {i}")))
+                .collect::<Result<_>>()?;
+            let e_out = self.exps[&node.name];
+            let t = match &node.op {
+                Op::Conv { k, stride, pad, in_ch, out_ch, groups, act } => self
+                    .conv_int(
+                        ins[0], node, *k, *stride, *pad, *in_ch, *out_ch, *groups,
+                        *act, e_out, &mut cyc,
+                    )?,
+                Op::Pool { kind, k, stride, pad } => {
+                    pool_int(ins[0], *kind, *k, *stride, *pad, &mut cyc)
+                }
+                Op::Gap => gap_int(ins[0], e_out, &mut cyc),
+                Op::Add { act } => add_int(ins[0], ins[1], *act, e_out, &mut cyc),
+                Op::Concat => concat_int(&ins, e_out, &mut cyc),
+                Op::Shuffle { groups } => shuffle_int(ins[0], *groups, &mut cyc),
+                Op::Dense { in_dim, out_dim } => {
+                    let (acc, n) = self.dense_int(ins[0], node, *in_dim, *out_dim, &mut cyc)?;
+                    // final layer: argmax over the int32 accumulator
+                    let preds = acc
+                        .chunks_exact(*out_dim)
+                        .map(|row| {
+                            row.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0
+                        })
+                        .collect();
+                    logits = Some((acc, preds));
+                    let _ = n;
+                    // dense is the last node in all our graphs
+                    VTensor { shape: vec![0], data: vec![], exp: e_out }
+                }
+            };
+            env.insert(node.name.as_str(), t);
+        }
+
+        let (acc, preds) =
+            logits.ok_or_else(|| anyhow!("graph has no dense output layer"))?;
+        Ok((acc, preds, cyc))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn conv_int(
+        &self,
+        x: &VTensor,
+        node: &crate::ir::Node,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        in_ch: usize,
+        out_ch: usize,
+        groups: usize,
+        act: Act,
+        e_out: i32,
+        cyc: &mut Cycles,
+    ) -> Result<VTensor> {
+        let (n, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+        ensure!(x.shape[3] == in_ch, "conv {}: channel mismatch", node.name);
+        let (qw, wshape, ew) = &self.qweights[&node.name];
+        let bias = &self.qbiases[&node.name];
+        let cg = in_ch / groups;
+        let outg = out_ch / groups;
+        let oh = (h + 2 * pad - k) / stride + 1;
+        let ow = (w + 2 * pad - k) / stride + 1;
+        let m = n * oh * ow;
+        let cols = k * k * cg;
+
+        cyc.add_load(qw.len() as u64 + 4 * bias.len() as u64);
+        cyc.add_load(x.data.len() as u64);
+
+        // shift from accumulator scale 2^(e_x + e_w) to output 2^(e_out)
+        let shift = e_out - x.exp - ew;
+        let relu6_cap = (6.0 / (e_out as f32).exp2()).round_ties_even() as i64;
+
+        let mut out = vec![0i8; m * out_ch];
+        let mut patches = vec![0i32; m * cols];
+        let mut wm = vec![0i32; cols * outg];
+        let mut acc = vec![0i32; m * outg];
+        for g in 0..groups {
+            // im2col into i32 operands
+            patches.iter_mut().for_each(|v| *v = 0);
+            for ni in 0..n {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let row = ((ni * oh + oy) * ow + ox) * cols;
+                        for ky in 0..k {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..k {
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                let src = ((ni * h + iy as usize) * w + ix as usize)
+                                    * in_ch
+                                    + g * cg;
+                                let dst = row + (ky * k + kx) * cg;
+                                for i in 0..cg {
+                                    patches[dst + i] = x.data[src + i] as i32;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // weight matrix [cols, outg] for this group
+            let (_k1, _k2, _cg, oc) = (wshape[0], wshape[1], wshape[2], wshape[3]);
+            for r in 0..cols {
+                for j in 0..outg {
+                    wm[r * outg + j] = qw[r * oc + g * outg + j] as i32;
+                }
+            }
+            acc.iter_mut().for_each(|v| *v = 0);
+            gemm_i32(m, cols, outg, &patches, &wm, &mut acc);
+            cyc.add_gemm(m as u64, cols as u64, outg as u64);
+
+            // epilogue: bias, activation (fused or separate), requantize
+            for r in 0..m {
+                for j in 0..outg {
+                    let mut a = acc[r * outg + j] as i64 + bias[g * outg + j] as i64;
+                    if self.fusion {
+                        // activation on the int32 accumulator, then requant
+                        a = match act {
+                            Act::None => a,
+                            Act::Relu => a.max(0),
+                            Act::Relu6 => a, // capped after requant below
+                        };
+                    }
+                    let mut q = rshift_round(a, shift);
+                    match act {
+                        Act::None => {}
+                        Act::Relu => q = q.max(0),
+                        Act::Relu6 => q = q.clamp(0, relu6_cap),
+                    }
+                    out[r * out_ch + g * outg + j] = sat_i8(q);
+                }
+            }
+        }
+        // epilogue cycle cost: fused = one ALU pass; unfused = store the
+        // int32 accumulator, reload, separate ALU pass, store again
+        let elems = (m * out_ch) as u64;
+        cyc.add_alu(elems); // requant shift pass
+        if act != Act::None {
+            if self.fusion {
+                cyc.add_alu(elems); // relu in consecutive cycles, no DMA
+            } else {
+                cyc.add_store(4 * elems);
+                cyc.add_load(4 * elems);
+                cyc.add_alu(elems);
+            }
+        }
+        cyc.add_store(elems);
+        Ok(VTensor { shape: vec![n, oh, ow, out_ch], data: out, exp: e_out })
+    }
+
+    fn dense_int(
+        &self,
+        x: &VTensor,
+        node: &crate::ir::Node,
+        in_dim: usize,
+        out_dim: usize,
+        cyc: &mut Cycles,
+    ) -> Result<(Vec<i32>, usize)> {
+        let n = x.shape[0];
+        ensure!(x.data.len() == n * in_dim, "dense input shape");
+        let (qw, _shape, _ew) = &self.qweights[&node.name];
+        let bias = &self.qbiases[&node.name];
+        cyc.add_load(qw.len() as u64 + 4 * bias.len() as u64 + x.data.len() as u64);
+        let a: Vec<i32> = x.data.iter().map(|&v| v as i32).collect();
+        let b: Vec<i32> = qw.iter().map(|&v| v as i32).collect();
+        let mut acc = vec![0i32; n * out_dim];
+        for row in acc.chunks_exact_mut(out_dim) {
+            row.copy_from_slice(bias);
+        }
+        gemm_i32(n, in_dim, out_dim, &a, &b, &mut acc);
+        cyc.add_gemm(n as u64, in_dim as u64, out_dim as u64);
+        cyc.add_store(4 * acc.len() as u64);
+        Ok((acc, n))
+    }
+}
+
+fn pool_int(
+    x: &VTensor,
+    kind: PoolKind,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    cyc: &mut Cycles,
+) -> VTensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let mut data = vec![0i8; n * oh * ow * c];
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ci in 0..c {
+                    let mut mx = i32::MIN;
+                    let mut sum = 0i64;
+                    let mut cnt = 0i64;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let v = x.data
+                                [((ni * h + iy as usize) * w + ix as usize) * c + ci]
+                                as i32;
+                            mx = mx.max(v);
+                            sum += v as i64;
+                            cnt += 1;
+                        }
+                    }
+                    let out = match kind {
+                        PoolKind::Max => mx as i64,
+                        PoolKind::Avg => {
+                            // integer reciprocal multiply: round(2^16/cnt)
+                            let recip = ((1i64 << 16) + cnt / 2) / cnt;
+                            rshift_round(sum * recip, 16)
+                        }
+                    };
+                    data[((ni * oh + oy) * ow + ox) * c + ci] = sat_i8(out);
+                }
+            }
+        }
+    }
+    cyc.add_alu((n * oh * ow * c * k * k) as u64);
+    VTensor { shape: vec![n, oh, ow, c], data, exp: x.exp }
+}
+
+fn gap_int(x: &VTensor, e_out: i32, cyc: &mut Cycles) -> VTensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let hw = (h * w) as i64;
+    let mut data = vec![0i8; n * c];
+    // out = sum * 2^(e_in - e_out) / hw, as fixed-point multiply-shift
+    let mult = (((x.exp - e_out) as f64).exp2() / hw as f64 * (1i64 << 20) as f64)
+        .round() as i64;
+    for ni in 0..n {
+        for ci in 0..c {
+            let mut sum = 0i64;
+            for p in 0..h * w {
+                sum += x.data[(ni * h * w + p) * c + ci] as i64;
+            }
+            data[ni * c + ci] = sat_i8(rshift_round(sum * mult, 20));
+        }
+    }
+    cyc.add_alu((n * h * w * c) as u64);
+    VTensor { shape: vec![n, c], data, exp: e_out }
+}
+
+/// Rescale an int8 value between pow2 grids with a rounding shift.
+#[inline]
+fn rescale(q: i8, e_from: i32, e_to: i32) -> i64 {
+    rshift_round(q as i64, e_to - e_from)
+}
+
+fn add_int(a: &VTensor, b: &VTensor, act: Act, e_out: i32, cyc: &mut Cycles) -> VTensor {
+    assert_eq!(a.shape, b.shape, "add shape mismatch");
+    let relu6_cap = (6.0 / (e_out as f32).exp2()).round_ties_even() as i64;
+    let data = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| {
+            let mut v = rescale(x, a.exp, e_out) + rescale(y, b.exp, e_out);
+            match act {
+                Act::None => {}
+                Act::Relu => v = v.max(0),
+                Act::Relu6 => v = v.clamp(0, relu6_cap),
+            }
+            sat_i8(v)
+        })
+        .collect();
+    cyc.add_alu(3 * a.data.len() as u64);
+    VTensor { shape: a.shape.clone(), data, exp: e_out }
+}
+
+fn concat_int(ins: &[&VTensor], e_out: i32, cyc: &mut Cycles) -> VTensor {
+    let (n, h, w) = (ins[0].shape[0], ins[0].shape[1], ins[0].shape[2]);
+    let cs: Vec<usize> = ins.iter().map(|t| t.shape[3]).collect();
+    let c_total: usize = cs.iter().sum();
+    let mut data = vec![0i8; n * h * w * c_total];
+    let rows = n * h * w;
+    for r in 0..rows {
+        let mut off = 0;
+        for (t, &ct) in ins.iter().zip(&cs) {
+            for i in 0..ct {
+                data[r * c_total + off + i] = sat_i8(rescale(t.data[r * ct + i], t.exp, e_out));
+            }
+            off += ct;
+        }
+    }
+    cyc.add_alu((rows * c_total) as u64);
+    VTensor { shape: vec![n, h, w, c_total], data, exp: e_out }
+}
+
+fn shuffle_int(x: &VTensor, groups: usize, cyc: &mut Cycles) -> VTensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let per = c / groups;
+    let mut data = vec![0i8; x.data.len()];
+    let rows = n * h * w;
+    for r in 0..rows {
+        for g in 0..groups {
+            for p in 0..per {
+                data[r * c + p * groups + g] = x.data[r * c + g * per + p];
+            }
+        }
+    }
+    cyc.add_load(x.data.len() as u64);
+    cyc.add_store(x.data.len() as u64);
+    VTensor { shape: x.shape.clone(), data, exp: x.exp }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::CalibCount;
+    use crate::util::{Json, Pcg32};
+
+    fn tiny_graph() -> Graph {
+        Graph::from_meta(
+            &Json::parse(
+                r#"{"name": "t", "input_shape": [8, 8, 3], "num_classes": 4,
+            "nodes": [
+              {"name": "c1", "op": "conv", "inputs": ["input"], "k": 3,
+               "stride": 1, "pad": 1, "in_ch": 3, "out_ch": 8, "groups": 1,
+               "act": "relu"},
+              {"name": "p1", "op": "pool", "inputs": ["c1"], "kind": "max",
+               "k": 2, "stride": 2, "pad": 0},
+              {"name": "g1", "op": "gap", "inputs": ["p1"]},
+              {"name": "d1", "op": "dense", "inputs": ["g1"], "in_dim": 8,
+               "out_dim": 4}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    fn rand_setup() -> (Graph, HashMap<String, Tensor>, Vec<Histogram>, Tensor) {
+        let g = tiny_graph();
+        let mut rng = Pcg32::seeded(3);
+        let mut weights = HashMap::new();
+        for name in g.weight_names() {
+            let shape = match name.as_str() {
+                "c1_w" => vec![3, 3, 3, 8],
+                "c1_b" => vec![8],
+                "d1_w" => vec![8, 4],
+                "d1_b" => vec![4],
+                _ => unreachable!(),
+            };
+            let n: usize = shape.iter().product();
+            weights.insert(
+                name,
+                Tensor {
+                    shape,
+                    data: (0..n).map(|_| rng.normal() * 0.3).collect(),
+                },
+            );
+        }
+        let x = Tensor {
+            shape: vec![2, 8, 8, 3],
+            data: (0..2 * 8 * 8 * 3).map(|_| rng.range_f32(-1.0, 1.0)).collect(),
+        };
+        // calibrate from a real fp32 pass
+        let interp = crate::interp::Interpreter::new(&g, &weights);
+        let (_, acts) = interp.forward_acts(&x).unwrap();
+        let hists = acts
+            .iter()
+            .map(|t| {
+                let mut h = Histogram::new();
+                h.update(&t.data);
+                h
+            })
+            .collect();
+        (g, weights, hists, x)
+    }
+
+    fn cfg() -> VtaConfig {
+        VtaConfig { calib: CalibCount::C64, clip: Clipping::Max, fusion: true }
+    }
+
+    #[test]
+    fn integer_forward_tracks_fp32() {
+        let (g, weights, hists, x) = rand_setup();
+        let m = VtaModel::build(&g, &weights, &hists, &cfg()).unwrap();
+        let (_, preds, cyc) = m.forward(&x).unwrap();
+        assert_eq!(preds.len(), 2);
+        assert!(cyc.total() > 0);
+
+        // int8 logits should usually agree with fp32 argmax on this easy case
+        let interp = crate::interp::Interpreter::new(&g, &weights);
+        let fp = interp.forward(&x).unwrap();
+        let fp_preds = crate::interp::argmax_batch(&fp);
+        let agree = preds.iter().zip(&fp_preds).filter(|(a, b)| a == b).count();
+        assert!(agree >= 1, "int-only predictions diverged entirely");
+    }
+
+    #[test]
+    fn fusion_changes_cycles_not_numerics() {
+        let (g, weights, hists, x) = rand_setup();
+        let fused = VtaModel::build(&g, &weights, &hists, &cfg()).unwrap();
+        let unfused = VtaModel::build(
+            &g,
+            &weights,
+            &hists,
+            &VtaConfig { fusion: false, ..cfg() },
+        )
+        .unwrap();
+        let (la, pa, ca) = fused.forward(&x).unwrap();
+        let (lb, pb, cb) = unfused.forward(&x).unwrap();
+        assert_eq!(la, lb);
+        assert_eq!(pa, pb);
+        assert!(cb.total() > ca.total(), "unfused must cost extra cycles");
+    }
+
+    #[test]
+    fn global_scale_is_coarser() {
+        let (g, weights, hists, _) = rand_setup();
+        let tuned = VtaModel::build(&g, &weights, &hists, &cfg()).unwrap();
+        let global = VtaModel::build_global_scale(&g, &weights, &hists, true).unwrap();
+        // global exponent must be >= every tuned exponent (coarser grids)
+        for (k, &e) in &tuned.exps {
+            assert!(global.exps[k] >= e, "{k}: global {} < tuned {e}", global.exps[k]);
+        }
+    }
+
+    #[test]
+    fn rshift_round_rounds_half_up() {
+        assert_eq!(rshift_round(5, 1), 3); // 2.5 -> 3
+        assert_eq!(rshift_round(-5, 1), -2); // -2.5 -> -2 (adds +half)
+        assert_eq!(rshift_round(4, 2), 1);
+        assert_eq!(rshift_round(3, 0), 3);
+        assert_eq!(rshift_round(3, -2), 12);
+    }
+
+    #[test]
+    fn quantize_input_saturates() {
+        let (g, weights, hists, _) = rand_setup();
+        let m = VtaModel::build(&g, &weights, &hists, &cfg()).unwrap();
+        let big = Tensor { shape: vec![1, 1, 1, 3], data: vec![1e9, -1e9, 0.0] };
+        let q = m.quantize_input(&big);
+        assert_eq!(q.data[0], 127);
+        assert_eq!(q.data[1], -128);
+        assert_eq!(q.data[2], 0);
+    }
+}

@@ -1,0 +1,180 @@
+//! Model zoo: loads the six mini CNNs exported by python/compile/aot.py
+//! and extracts the macro-architecture block features `e` the XGBoost
+//! cost model consumes (paper §5.1: "the number of layers, convolutions,
+//! activation functions, skip-layers, and depth-wise and pointwise
+//! convolutions").
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::data::Weights;
+use crate::ir::{Graph, Op, Tensor};
+use crate::util::Json;
+
+/// The six paper models, in the paper's order.
+pub const MODELS: [&str; 6] = ["mn", "shn", "sqn", "gn", "rn18", "rn50"];
+
+/// Paper abbreviation -> full name (Table 1).
+pub fn full_name(model: &str) -> &'static str {
+    match model {
+        "mn" => "MobileNetV2-mini",
+        "shn" => "ShuffleNetV1-mini",
+        "sqn" => "SqueezeNetV1-mini",
+        "gn" => "GoogLeNet-mini",
+        "rn18" => "ResNet18-mini",
+        "rn50" => "ResNet50-mini",
+        _ => "unknown",
+    }
+}
+
+/// A loaded model: graph + trained weights + metadata.
+pub struct ZooModel {
+    pub name: String,
+    pub graph: Graph,
+    pub weights: Weights,
+    /// fp32 Top-1 measured by the python trainer on the eval split
+    pub fp32_top1: f64,
+    pub batch: usize,
+}
+
+impl ZooModel {
+    pub fn load(artifacts: &Path, name: &str) -> Result<ZooModel> {
+        let meta = Json::from_file(&artifacts.join(format!("{name}_meta.json")))
+            .with_context(|| format!("loading {name} metadata"))?;
+        let graph = Graph::from_meta(&meta)?;
+        let weights = Weights::load(&artifacts.join(format!("{name}_weights.qtw")))?;
+        // sanity: the weight file must cover the graph ABI, in order
+        let want = graph.weight_names();
+        anyhow::ensure!(
+            weights.order == want,
+            "{name}: weight order mismatch (file {:?}... vs graph {:?}...)",
+            &weights.order[..2.min(weights.order.len())],
+            &want[..2.min(want.len())]
+        );
+        Ok(ZooModel {
+            name: name.to_string(),
+            graph,
+            weights,
+            fp32_top1: meta.get("fp32_top1")?.as_f64()?,
+            batch: meta.get("batch")?.as_usize()?,
+        })
+    }
+
+    pub fn weights_map(&self) -> &HashMap<String, Tensor> {
+        &self.weights.tensors
+    }
+
+    /// Macro-architecture block features `e` (fixed 10-dim vector).
+    pub fn arch_features(&self) -> Vec<f32> {
+        arch_features(&self.graph)
+    }
+}
+
+/// Names of the architecture features (order matches `arch_features`).
+pub const ARCH_FEATURE_NAMES: [&str; 10] = [
+    "num_nodes",
+    "num_convs",
+    "num_depthwise",
+    "num_grouped",
+    "num_pointwise",
+    "num_skip_adds",
+    "num_concats",
+    "log_params",
+    "log_macs",
+    "min_channel",
+];
+
+/// Extract the block-expression features of a graph.
+pub fn arch_features(g: &Graph) -> Vec<f32> {
+    let mut num_convs = 0f32;
+    let mut num_dw = 0f32;
+    let mut num_grouped = 0f32;
+    let mut num_pw = 0f32;
+    let mut num_adds = 0f32;
+    let mut num_concats = 0f32;
+    let mut min_channel = f32::INFINITY;
+    for n in &g.nodes {
+        match &n.op {
+            Op::Conv { k, in_ch, out_ch, groups, .. } => {
+                num_convs += 1.0;
+                if *groups == *in_ch && *groups == *out_ch {
+                    num_dw += 1.0;
+                } else if *groups > 1 {
+                    num_grouped += 1.0;
+                }
+                if *k == 1 {
+                    num_pw += 1.0;
+                }
+                min_channel = min_channel.min(*out_ch as f32);
+            }
+            Op::Add { .. } => num_adds += 1.0,
+            Op::Concat => num_concats += 1.0,
+            _ => {}
+        }
+    }
+    vec![
+        g.nodes.len() as f32,
+        num_convs,
+        num_dw,
+        num_grouped,
+        num_pw,
+        num_adds,
+        num_concats,
+        (g.num_params() as f32).ln(),
+        (g.macs().unwrap_or(1) as f32).ln(),
+        if min_channel.is_finite() { min_channel } else { 0.0 },
+    ]
+}
+
+/// All models found in an artifacts directory (subset of MODELS).
+pub fn load_all(artifacts: &Path) -> Result<Vec<ZooModel>> {
+    let mut out = Vec::new();
+    for m in MODELS {
+        if artifacts.join(format!("{m}_meta.json")).exists() {
+            out.push(ZooModel::load(artifacts, m)?);
+        }
+    }
+    anyhow::ensure!(!out.is_empty(), "no models in {}", artifacts.display());
+    Ok(out)
+}
+
+/// Default artifacts directory: $QUANTUNE_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("QUANTUNE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arch_features_tiny_graph() {
+        let g = Graph::from_meta(
+            &Json::parse(
+                r#"{"name": "t", "input_shape": [8, 8, 4], "num_classes": 2,
+            "nodes": [
+              {"name": "c1", "op": "conv", "inputs": ["input"], "k": 1,
+               "stride": 1, "pad": 0, "in_ch": 4, "out_ch": 4, "groups": 4,
+               "act": "relu"},
+              {"name": "a1", "op": "add", "inputs": ["input", "c1"],
+               "act": "none"},
+              {"name": "g1", "op": "gap", "inputs": ["a1"]},
+              {"name": "d1", "op": "dense", "inputs": ["g1"], "in_dim": 4,
+               "out_dim": 2}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let f = arch_features(&g);
+        assert_eq!(f.len(), ARCH_FEATURE_NAMES.len());
+        assert_eq!(f[0], 4.0); // nodes
+        assert_eq!(f[1], 1.0); // convs
+        assert_eq!(f[2], 1.0); // depthwise (groups == in == out)
+        assert_eq!(f[4], 1.0); // pointwise (k = 1)
+        assert_eq!(f[5], 1.0); // skip add
+    }
+}

@@ -1,0 +1,274 @@
+//! End-to-end integration over the real artifacts: zoo loading,
+//! calibration, quantization, both evaluators, search, and the VTA path.
+//!
+//! Tests skip with a notice when `make artifacts` has not run.
+
+use std::path::PathBuf;
+
+use quantune::calib::{calibrate, CalibBackend};
+use quantune::coordinator::{
+    self, Evaluator, HloEvaluator, InterpEvaluator, OracleEvaluator, Quantune,
+};
+use quantune::quant::{CalibCount, Clipping, Granularity, QuantConfig, Scheme, VtaConfig};
+use quantune::runtime::Runtime;
+use quantune::search::Trial;
+use quantune::vta::VtaModel;
+use quantune::zoo::{self, ZooModel};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = quantune::zoo::artifacts_dir();
+    if dir.join("sqn_meta.json").exists() && dir.join("dataset_eval.qtd").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+fn good_config() -> QuantConfig {
+    QuantConfig {
+        calib: CalibCount::C512,
+        scheme: Scheme::Asymmetric,
+        clip: Clipping::Kl,
+        gran: Granularity::Channel,
+        mixed: false,
+    }
+}
+
+#[test]
+fn all_available_models_load_and_validate() {
+    let Some(dir) = artifacts() else { return };
+    let models = zoo::load_all(&dir).unwrap();
+    assert!(!models.is_empty());
+    for m in &models {
+        // graph validated on load; ABI covered; features well-formed
+        assert_eq!(m.weights.order, m.graph.weight_names());
+        let f = m.arch_features();
+        assert_eq!(f.len(), zoo::ARCH_FEATURE_NAMES.len());
+        assert!(f.iter().all(|x| x.is_finite()));
+        assert!(m.fp32_top1 > 1.0 / 16.0, "{}: fp32 top1 at chance", m.name);
+        assert!(m.graph.macs().unwrap() > 0);
+    }
+}
+
+#[test]
+fn interpreter_reproduces_training_accuracy() {
+    let Some(dir) = artifacts() else { return };
+    let q = Quantune::open(dir).unwrap();
+    let model = q.load_model("sqn").unwrap();
+    let interp = quantune::interp::Interpreter::new(&model.graph, model.weights_map());
+    let mut hits = 0;
+    let idx: Vec<usize> = (0..q.eval.n).collect();
+    for chunk in idx.chunks(64) {
+        let x = q.eval.batch(chunk);
+        let logits = interp.forward(&x).unwrap();
+        let preds = quantune::interp::argmax_batch(&logits);
+        hits += preds
+            .iter()
+            .zip(&q.eval.labels_for(chunk))
+            .filter(|(&p, &l)| p == l as usize)
+            .count();
+    }
+    let top1 = hits as f64 / q.eval.n as f64;
+    // the python trainer measured fp32_top1 on the same eval split with
+    // jax; the rust interpreter must agree to float-noise level
+    assert!(
+        (top1 - model.fp32_top1).abs() < 0.01,
+        "interp {top1} vs python {}",
+        model.fp32_top1
+    );
+}
+
+#[test]
+fn hlo_and_interp_evaluators_agree() {
+    let Some(dir) = artifacts() else { return };
+    let q = Quantune::open(dir).unwrap();
+    let model = q.load_model("sqn").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut hlo = HloEvaluator::new(
+        &model, &rt, q.artifacts.clone(), &q.calib_pool, &q.eval, q.seed,
+    );
+    let mut interp = InterpEvaluator::new(&model, &q.calib_pool, &q.eval, q.seed);
+    for cfg_idx in [0, good_config().index(), 41] {
+        let a = hlo.measure(cfg_idx).unwrap();
+        let b = interp.measure(cfg_idx).unwrap();
+        assert!(
+            (a - b).abs() <= 2.0 / q.eval.n as f64 + 1e-9,
+            "config {cfg_idx}: hlo {a} vs interp {b}"
+        );
+    }
+}
+
+#[test]
+fn good_config_recovers_fp32_accuracy() {
+    let Some(dir) = artifacts() else { return };
+    let q = Quantune::open(dir).unwrap();
+    let model = q.load_model("sqn").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut hlo = HloEvaluator::new(
+        &model, &rt, q.artifacts.clone(), &q.calib_pool, &q.eval, q.seed,
+    );
+    let acc = hlo.measure(good_config().index()).unwrap();
+    assert!(
+        acc >= model.fp32_top1 - 0.05,
+        "well-calibrated int8 lost too much: {acc} vs fp32 {}",
+        model.fp32_top1
+    );
+}
+
+#[test]
+fn mixed_precision_bypass_rows() {
+    let Some(dir) = artifacts() else { return };
+    let model = ZooModel::load(&dir, "sqn").unwrap();
+    let bypass = coordinator::mixed_precision_bypass(&model, true);
+    let qpoints = model.graph.quant_points();
+    assert_eq!(bypass.len(), qpoints.len());
+    // exactly three bypassed rows: input, first conv, final dense
+    assert_eq!(bypass.iter().filter(|&&b| b).count(), 3);
+    assert!(bypass[0], "input row must be bypassed");
+    let none = coordinator::mixed_precision_bypass(&model, false);
+    assert!(none.iter().all(|&b| !b));
+}
+
+#[test]
+fn calibration_caches_differ_by_size() {
+    let Some(dir) = artifacts() else { return };
+    let q = Quantune::open(dir).unwrap();
+    let model = q.load_model("sqn").unwrap();
+    let c1 = calibrate(&model, &q.calib_pool, CalibCount::C1, &CalibBackend::Interp, 1)
+        .unwrap();
+    let c512 =
+        calibrate(&model, &q.calib_pool, CalibCount::C512, &CalibBackend::Interp, 1)
+            .unwrap();
+    // more images -> wider observed ranges (monotone in the sample)
+    let (lo1, hi1) = c1.hists[1].range();
+    let (lo5, hi5) = c512.hists[1].range();
+    assert!(lo5 <= lo1 && hi5 >= hi1);
+    assert!(c512.hists[0].count > c1.hists[0].count);
+}
+
+#[test]
+fn search_on_oracle_runs_all_algorithms() {
+    let Some(dir) = artifacts() else { return };
+    let mut q = Quantune::open(dir).unwrap();
+    let model = q.load_model("sqn").unwrap();
+    // synthetic oracle so this test does not depend on a prior sweep
+    let table: Vec<f64> = (0..QuantConfig::SPACE_SIZE)
+        .map(|i| {
+            let c = QuantConfig::from_index(i).unwrap();
+            0.4 + 0.1 * (c.clip == Clipping::Kl) as u8 as f64
+                + 0.05 * (c.calib == CalibCount::C512) as u8 as f64
+        })
+        .collect();
+    for algo in ["random", "grid", "genetic", "xgb"] {
+        let mut oracle = OracleEvaluator::new(table.clone());
+        let trace = q.search(&model, algo, &mut oracle, 96, 3).unwrap();
+        assert_eq!(trace.algo, algo);
+        assert!(trace.best_accuracy >= 0.55 - 1e-9, "{algo} missed the optimum");
+        // the trace's best must be the history max
+        let max = trace
+            .trials
+            .iter()
+            .map(|t| t.accuracy)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(trace.best_accuracy, max);
+    }
+}
+
+#[test]
+fn xgb_t_requires_then_uses_transfer() {
+    let Some(dir) = artifacts() else { return };
+    let mut q = Quantune::open(dir).unwrap();
+    let model = q.load_model("sqn").unwrap();
+    let table = vec![0.5; QuantConfig::SPACE_SIZE];
+    // no other-model records in a fresh in-memory db: xgb_t must refuse
+    q.db = coordinator::Database::in_memory();
+    let mut oracle = OracleEvaluator::new(table.clone());
+    assert!(q.search(&model, "xgb_t", &mut oracle, 4, 1).is_err());
+    // seed the db with another model's records -> works
+    for i in 0..QuantConfig::SPACE_SIZE {
+        q.db.add(coordinator::Record {
+            model: "mn".into(),
+            config: i,
+            accuracy: 0.5,
+            measure_secs: 0.0,
+        });
+    }
+    if q.artifacts.join("mn_meta.json").exists() {
+        let mut oracle = OracleEvaluator::new(table);
+        let trace = q.search(&model, "xgb_t", &mut oracle, 4, 1).unwrap();
+        assert_eq!(trace.trials.len(), 4);
+    }
+}
+
+#[test]
+fn vta_per_layer_beats_global_scale() {
+    let Some(dir) = artifacts() else { return };
+    let q = Quantune::open(dir).unwrap();
+    let model = q.load_model("sqn").unwrap();
+    let cfg = VtaConfig { calib: CalibCount::C64, clip: Clipping::Max, fusion: true };
+    let cache =
+        calibrate(&model, &q.calib_pool, cfg.calib, &CalibBackend::Interp, q.seed)
+            .unwrap();
+    let tuned = VtaModel::build(&model.graph, model.weights_map(), &cache.hists, &cfg)
+        .unwrap();
+    let global = VtaModel::build_global_scale(
+        &model.graph,
+        model.weights_map(),
+        &cache.hists,
+        true,
+    )
+    .unwrap();
+    let eval_n = 256.min(q.eval.n);
+    let idx: Vec<usize> = (0..eval_n).collect();
+    let acc = |m: &VtaModel| {
+        let mut hits = 0;
+        for chunk in idx.chunks(64) {
+            let x = q.eval.batch(chunk);
+            let (_, preds, _) = m.forward(&x).unwrap();
+            hits += preds
+                .iter()
+                .zip(&q.eval.labels_for(chunk))
+                .filter(|(&p, &l)| p == l as usize)
+                .count();
+        }
+        hits as f64 / eval_n as f64
+    };
+    let (at, ag) = (acc(&tuned), acc(&global));
+    // Fig 8's claim: per-layer scales are dramatically better than the
+    // single whole-network scale
+    assert!(
+        at > ag + 0.10,
+        "per-layer {at} should beat global {ag} by a wide margin"
+    );
+}
+
+#[test]
+fn sweep_persists_to_database() {
+    let Some(dir) = artifacts() else { return };
+    let mut q = Quantune::open(dir).unwrap();
+    q.db = coordinator::Database::in_memory();
+    let model = q.load_model("sqn").unwrap();
+    // tiny fake sweep via oracle (a full HLO sweep is exercised by the
+    // benches; here we verify the bookkeeping)
+    let table: Vec<f64> =
+        (0..QuantConfig::SPACE_SIZE).map(|i| i as f64 / 100.0).collect();
+    let mut oracle = OracleEvaluator::new(table.clone());
+    let got = q.sweep(&model, &mut oracle, false, |_, _| {}).unwrap();
+    assert_eq!(got, table);
+    assert!(q.db.has_full_sweep("sqn", QuantConfig::SPACE_SIZE));
+    // second call reuses the db (the empty oracle would error otherwise)
+    let mut empty = OracleEvaluator::new(vec![]);
+    let again = q.sweep(&model, &mut empty, false, |_, _| {}).unwrap();
+    assert_eq!(again, table);
+    let (best_cfg, best_acc) = q.db.best_for("sqn").unwrap();
+    assert_eq!(best_cfg.index(), 95);
+    assert!((best_acc - 0.95).abs() < 1e-9);
+}
+
+#[test]
+fn trial_type_is_plain_data() {
+    let t = Trial { config: 3, accuracy: 0.5 };
+    let t2 = t;
+    assert_eq!(t2.config, t.config);
+}

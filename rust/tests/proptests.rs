@@ -1,0 +1,339 @@
+//! Property-based tests over the coordinator's invariants.
+//!
+//! The offline vendor set has no proptest crate, so this file uses a
+//! small seeded-fuzz harness (`props!`): each property runs across many
+//! PCG32-seeded random cases and reports the failing seed, which makes
+//! every failure reproducible by construction.
+
+use quantune::quant::{
+    fake_quant_weights, ALL_SCHEMES, CalibCount, Clipping, Granularity, Histogram,
+    QuantConfig, Scheme, VtaConfig,
+};
+use quantune::search::{
+    run_search, GeneticSearch, GridSearch, RandomSearch, SearchAlgo, Trial, XgbSearch,
+};
+use quantune::util::{Json, Pcg32};
+use quantune::vta::rshift_round;
+use quantune::xgb::{XgbModel, XgbParams};
+
+/// Run `f` across `n` seeded cases.
+fn props(n: u64, mut f: impl FnMut(&mut Pcg32)) {
+    for seed in 0..n {
+        let mut rng = Pcg32::seeded(seed * 7919 + 13);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// quantization math
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fake_quant_error_bounded_all_schemes() {
+    props(200, |rng| {
+        let lo = -rng.range_f32(0.01, 20.0);
+        let hi = rng.range_f32(0.01, 20.0);
+        for scheme in ALL_SCHEMES {
+            let p = scheme.params_from_range(lo, hi);
+            let (flo, fhi) = p.float_range();
+            for _ in 0..32 {
+                let x = rng.range_f32(lo, hi);
+                let err = (p.fake_quant(x) - x).abs();
+                // inside the representable interval the error is pure
+                // rounding (half a step); outside it is saturation --
+                // distance to the nearest representable value plus the
+                // final rounding (pow2 rounds its scale down by up to
+                // sqrt(2), so saturation can be substantial by design)
+                let sat = (flo - x).max(x - fhi).max(0.0);
+                let bound = p.scale * 0.5 + sat;
+                assert!(
+                    err <= bound + 1e-5,
+                    "{scheme}: x={x} err={err} scale={} range=({lo},{hi})",
+                    p.scale
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fake_quant_idempotent() {
+    // quantizing an already-quantized value must be a fixed point
+    props(100, |rng| {
+        let scheme = ALL_SCHEMES[rng.below(4)];
+        let p = scheme.params_from_range(-rng.range_f32(0.1, 8.0), rng.range_f32(0.1, 8.0));
+        for _ in 0..16 {
+            let x = rng.range_f32(-10.0, 10.0);
+            let once = p.fake_quant(x);
+            let twice = p.fake_quant(once);
+            assert!(
+                (once - twice).abs() < 1e-6,
+                "{scheme}: fq not idempotent at {x}: {once} -> {twice}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_weight_fake_quant_preserves_shape_and_bounds() {
+    props(60, |rng| {
+        let c = 1 + rng.below(9);
+        let k = 1 + rng.below(4);
+        let shape = vec![k, k, 1 + rng.below(8), c];
+        let n: usize = shape.iter().product();
+        let w = quantune::ir::Tensor {
+            shape: shape.clone(),
+            data: (0..n).map(|_| rng.normal() * rng.range_f32(0.01, 3.0)).collect(),
+        };
+        let scheme = ALL_SCHEMES[rng.below(4)];
+        for gran in [Granularity::Tensor, Granularity::Channel] {
+            let fq = fake_quant_weights(&w, scheme, gran);
+            assert_eq!(fq.shape, shape);
+            let (lo, hi) = w.range();
+            let slack = (hi - lo).max(1e-3);
+            let (flo, fhi) = fq.range();
+            assert!(flo >= lo - slack && fhi <= hi + slack);
+        }
+    });
+}
+
+#[test]
+fn prop_histogram_count_conserved_under_growth() {
+    props(60, |rng| {
+        let mut h = Histogram::new();
+        let mut total = 0u64;
+        for _ in 0..1 + rng.below(6) {
+            let scale = rng.range_f32(0.01, 100.0);
+            let n = 16 + rng.below(500);
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal() * scale).collect();
+            total += n as u64;
+            h.update(&xs);
+        }
+        assert_eq!(h.count, total);
+        assert_eq!(h.bins.iter().sum::<u64>(), total);
+        let t = h.kl_threshold();
+        assert!(t > 0.0 && t.is_finite());
+        let (lo, hi) = h.kl_clipped_range();
+        let (rlo, rhi) = h.range();
+        assert!(lo >= rlo - 1e-6 && hi <= rhi + 1e-6, "clip must shrink the range");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// configuration space
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_genome_decode_always_valid() {
+    props(200, |rng| {
+        let mut bits = [false; 7];
+        for b in &mut bits {
+            *b = rng.chance(0.5);
+        }
+        let cfg = QuantConfig::from_genome(&bits);
+        assert!(cfg.index() < QuantConfig::SPACE_SIZE);
+        // decoding the canonical genome of the decoded config round-trips
+        let again = QuantConfig::from_genome(&cfg.to_genome());
+        assert_eq!(cfg, again);
+    });
+}
+
+#[test]
+fn prop_one_hot_is_injective() {
+    let mut seen = std::collections::HashMap::new();
+    for cfg in QuantConfig::space() {
+        let key: Vec<u8> = cfg.one_hot().iter().map(|&x| x as u8).collect();
+        assert!(
+            seen.insert(key, cfg).is_none(),
+            "one-hot collision at {cfg}"
+        );
+    }
+    for cfg in VtaConfig::space() {
+        assert!(cfg.index() < VtaConfig::SPACE_SIZE);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// search invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_search_respects_budget_and_returns_history_best() {
+    props(40, |rng| {
+        let seed = rng.next_u64();
+        let budget = 1 + rng.below(96);
+        let table: Vec<f64> = (0..96).map(|_| rng.f64()).collect();
+        let algos: Vec<Box<dyn SearchAlgo>> = vec![
+            Box::new(RandomSearch::new(96, seed)),
+            Box::new(GridSearch::new(96, seed)),
+            Box::new(GeneticSearch::new(seed)),
+            Box::new(XgbSearch::new(
+                (0..96)
+                    .map(|i| QuantConfig::from_index(i).unwrap().one_hot())
+                    .collect(),
+                seed,
+            )),
+        ];
+        for mut algo in algos {
+            let trace =
+                run_search(algo.as_mut(), budget, |i| Ok(table[i])).unwrap();
+            assert!(trace.trials.len() <= budget);
+            let max = trace
+                .trials
+                .iter()
+                .map(|t| t.accuracy)
+                .fold(f64::NEG_INFINITY, f64::max);
+            assert_eq!(trace.best_accuracy, max, "{}", trace.algo);
+            assert!(trace.trials.iter().all(|t| t.config < 96));
+        }
+    });
+}
+
+#[test]
+fn prop_random_and_grid_never_repeat() {
+    props(40, |rng| {
+        let seed = rng.next_u64();
+        for mut algo in [
+            Box::new(RandomSearch::new(96, seed)) as Box<dyn SearchAlgo>,
+            Box::new(GridSearch::new(96, seed)),
+        ] {
+            let mut seen = std::collections::HashSet::new();
+            let mut hist: Vec<Trial> = Vec::new();
+            while let Some(i) = algo.propose(&hist) {
+                assert!(seen.insert(i), "{} repeated {i}", algo.name());
+                hist.push(Trial { config: i, accuracy: 0.0 });
+                if hist.len() > 96 {
+                    panic!("{} exceeded the space", algo.name());
+                }
+            }
+            assert_eq!(seen.len(), 96);
+        }
+    });
+}
+
+#[test]
+fn prop_xgb_never_reproposes_explored() {
+    props(20, |rng| {
+        let seed = rng.next_u64();
+        let feats: Vec<Vec<f32>> =
+            (0..96).map(|i| QuantConfig::from_index(i).unwrap().one_hot()).collect();
+        let mut algo = XgbSearch::new(feats, seed);
+        let mut hist: Vec<Trial> = Vec::new();
+        for _ in 0..30 {
+            let i = algo.propose(&hist).unwrap();
+            assert!(
+                !hist.iter().any(|t| t.config == i),
+                "xgb re-proposed explored config {i}"
+            );
+            hist.push(Trial { config: i, accuracy: rng.f64() });
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// VTA arithmetic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_rshift_round_is_nearest() {
+    // the rounded shift must land within half a step of the true
+    // quotient: |got * 2^s - v| <= 2^(s-1)  (exact halves may go either
+    // way -- the hardware rounds toward +inf, floats round to even)
+    props(200, |rng| {
+        let v = rng.next_u32() as i64 - (u32::MAX / 2) as i64;
+        let shift = rng.below(20) as i32;
+        let got = rshift_round(v, shift);
+        let step = 1i64 << shift;
+        let err = (got * step - v).abs();
+        assert!(
+            err <= step / 2,
+            "v={v} shift={shift}: got {got}, reconstruction error {err} > {}",
+            step / 2
+        );
+    });
+}
+
+#[test]
+fn prop_rshift_round_monotone() {
+    props(100, |rng| {
+        let shift = rng.below(16) as i32;
+        let a = rng.next_u32() as i64 % 100_000;
+        let b = a + rng.below(1000) as i64;
+        assert!(rshift_round(a, shift) <= rshift_round(b, shift));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// XGBoost
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_xgb_fits_within_label_range() {
+    props(30, |rng| {
+        let n = 10 + rng.below(60);
+        let d = 1 + rng.below(6);
+        let x: Vec<Vec<f32>> =
+            (0..n).map(|_| (0..d).map(|_| rng.f32()).collect()).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let m = XgbModel::fit(&x, &y, XgbParams::default()).unwrap();
+        let (lo, hi) = y
+            .iter()
+            .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| (l.min(v), h.max(v)));
+        let span = (hi - lo).max(0.1);
+        for row in &x {
+            let p = m.predict(row);
+            assert!(
+                p >= lo - span && p <= hi + span,
+                "prediction {p} far outside label range [{lo},{hi}]"
+            );
+        }
+        // importance is a distribution (or all-zero)
+        let imp = m.feature_importance();
+        let s: f64 = imp.iter().sum();
+        assert!(s == 0.0 || (s - 1.0).abs() < 1e-9);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// util
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    props(100, |rng| {
+        fn gen(rng: &mut Pcg32, depth: usize) -> Json {
+            match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.chance(0.5)),
+                2 => Json::Num((rng.next_u32() as f64 / 1000.0) - 1000.0),
+                3 => Json::Str(format!("s{}_\"q\"\n", rng.below(1000))),
+                4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth + 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.below(5))
+                        .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen(rng, 0);
+        assert_eq!(Json::parse(&v.dump()).unwrap(), v);
+        assert_eq!(Json::parse(&v.pretty()).unwrap(), v);
+    });
+}
+
+#[test]
+fn prop_calib_count_monotone() {
+    for (a, b) in [(CalibCount::C1, CalibCount::C64), (CalibCount::C64, CalibCount::C512)]
+    {
+        assert!(a.images() < b.images());
+        assert!(a.paper_images() < b.paper_images());
+    }
+    assert_eq!(Clipping::Max, Clipping::Max);
+    assert_ne!(Scheme::Pow2, Scheme::Symmetric);
+}

@@ -1,0 +1,159 @@
+//! Runtime integration: the python-AOT -> rust-PJRT bridge.
+//!
+//! These tests need `make artifacts` to have run; they skip (with a
+//! notice) when the artifacts directory is absent so that pure-rust
+//! development still has a green `cargo test`.
+
+use std::path::PathBuf;
+
+use quantune::interp::{argmax_batch, Interpreter};
+use quantune::ir::Tensor;
+use quantune::quant::QParams;
+use quantune::runtime::{i32_to_literal, Runtime};
+use quantune::util::Pcg32;
+use quantune::zoo::ZooModel;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = quantune::zoo::artifacts_dir();
+    if dir.join("manifest.json").exists() || dir.join("sqn_meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+#[test]
+fn pjrt_client_boots() {
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    assert!(rt.platform().to_lowercase().contains("cpu") || rt.platform() == "Host");
+}
+
+#[test]
+fn kernel_fake_quant_artifact_matches_rust() {
+    let Some(dir) = artifacts() else { return };
+    let path = dir.join("kernel_fake_quant.hlo.txt");
+    if !path.exists() {
+        eprintln!("SKIP: {} missing", path.display());
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&path).unwrap();
+
+    let mut rng = Pcg32::seeded(5);
+    let x = Tensor {
+        shape: vec![128, 32, 32, 16],
+        data: (0..128 * 32 * 32 * 16).map(|_| rng.normal() * 2.0).collect(),
+    };
+    let p = QParams { scale: 0.04, zero_point: 3, qmin: -128.0, qmax: 127.0 };
+    let params = Tensor {
+        shape: vec![5],
+        data: vec![p.scale, p.zero_point as f32, p.qmin, p.qmax, 0.0],
+    };
+    let out = exe.run_f32(&[&x, &params]).unwrap();
+    assert_eq!(out[0].shape, x.shape);
+    // the Pallas kernel (via HLO) must agree bit-for-bit with the rust
+    // QParams::fake_quant (both use round-half-to-even)
+    for (i, (&a, &b)) in out[0].data.iter().zip(&x.data).enumerate() {
+        let want = p.fake_quant(b);
+        assert!(
+            (a - want).abs() < 1e-6,
+            "elem {i}: kernel {a} vs rust {want} (x={b})"
+        );
+    }
+}
+
+#[test]
+fn kernel_int8_gemm_artifact_matches_vta_arithmetic() {
+    let Some(dir) = artifacts() else { return };
+    let path = dir.join("kernel_int8_gemm.hlo.txt");
+    if !path.exists() {
+        eprintln!("SKIP: {} missing", path.display());
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&path).unwrap();
+
+    let (m, k, n) = (64, 96, 48);
+    let mut rng = Pcg32::seeded(6);
+    let a: Vec<i32> = (0..m * k).map(|_| rng.below(256) as i32 - 128).collect();
+    let b: Vec<i32> = (0..k * n).map(|_| rng.below(256) as i32 - 128).collect();
+    let bias: Vec<i32> = (0..n).map(|_| rng.below(2048) as i32 - 1024).collect();
+    let (mul, shift) = (3i32, 9i32);
+
+    let lits = [
+        i32_to_literal(&a, &[m, k]).unwrap(),
+        i32_to_literal(&b, &[k, n]).unwrap(),
+        i32_to_literal(&bias, &[n]).unwrap(),
+        i32_to_literal(&[mul, shift], &[2]).unwrap(),
+    ];
+    let refs: Vec<&xla::Literal> = lits.iter().collect();
+    let out = exe.run_literals_i32(&refs).unwrap();
+    assert_eq!(out[0].len(), m * n);
+
+    // rust VTA-equivalent arithmetic (gemm_i32 + rshift_round)
+    let mut acc = vec![0i32; m * n];
+    quantune::interp::gemm::gemm_i32(m, k, n, &a, &b, &mut acc);
+    for i in 0..m {
+        for j in 0..n {
+            let v = (acc[i * n + j] + bias[j]) as i64 * mul as i64;
+            let want =
+                quantune::vta::rshift_round(v, shift).clamp(-128, 127) as i32;
+            assert_eq!(
+                out[0][i * n + j],
+                want,
+                "({i},{j}): pallas {} vs vta {want}",
+                out[0][i * n + j]
+            );
+        }
+    }
+}
+
+#[test]
+fn fp32_artifact_matches_interpreter() {
+    let Some(dir) = artifacts() else { return };
+    let name = "sqn";
+    if !dir.join(format!("{name}_meta.json")).exists() {
+        eprintln!("SKIP: {name} artifacts missing");
+        return;
+    }
+    let model = ZooModel::load(&dir, name).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&dir.join(format!("{name}_fp32_b1.hlo.txt"))).unwrap();
+
+    let mut rng = Pcg32::seeded(7);
+    let x = Tensor {
+        shape: vec![1, 32, 32, 3],
+        data: (0..32 * 32 * 3).map(|_| rng.range_f32(-1.0, 1.0)).collect(),
+    };
+    let mut inputs: Vec<&Tensor> = vec![&x];
+    let flat = model.weights.flat();
+    inputs.extend(flat.iter().copied());
+    let hlo_logits = &exe.run_f32(&inputs).unwrap()[0];
+
+    let interp = Interpreter::new(&model.graph, model.weights_map());
+    let rust_logits = interp.forward(&x).unwrap();
+
+    assert_eq!(hlo_logits.shape, rust_logits.shape);
+    for (i, (&a, &b)) in hlo_logits.data.iter().zip(&rust_logits.data).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-2 + 1e-3 * b.abs().max(1.0),
+            "logit {i}: hlo {a} vs interp {b}"
+        );
+    }
+    assert_eq!(argmax_batch(hlo_logits), argmax_batch(&rust_logits));
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(dir) = artifacts() else { return };
+    let path = dir.join("kernel_fake_quant.hlo.txt");
+    if !path.exists() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let a = rt.load(&path).unwrap();
+    let b = rt.load(&path).unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+    assert_eq!(rt.cached(), 1);
+}
