@@ -20,29 +20,33 @@ use quantune::coordinator::Quantune;
 use quantune::quant::QuantConfig;
 use quantune::search::{run_search, XgbSearch};
 use quantune::util::stats::mean;
-use quantune::util::Csv;
+use quantune::util::{pool, Csv, Pool};
 use quantune::zoo;
 
 /// Mean trials-to-optimum for an XGB search with custom space features.
+/// The per-seed runs are independent and fan out across the worker pool;
+/// the mean reduces in seed order, so the number matches a serial run.
 fn measure_xgb(
     table: &[f64],
     feats: &[Vec<f32>],
     seeds: &[u64],
     eps: f64,
-    mutate: impl Fn(&mut XgbSearch),
+    mutate: impl Fn(&mut XgbSearch) + Sync,
 ) -> f64 {
     let best = table.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-    let mut out = Vec::new();
-    for &seed in seeds {
-        let mut algo = XgbSearch::new(feats.to_vec(), seed);
-        mutate(&mut algo);
-        let trace = run_search(&mut algo, table.len(), |i| Ok(table[i])).unwrap();
-        out.push(trace.trials_to_reach(best, eps).unwrap_or(table.len()) as f64);
-    }
+    let out = Pool::auto()
+        .map(seeds, |&seed| {
+            let mut algo = XgbSearch::new(feats.to_vec(), seed);
+            mutate(&mut algo);
+            let trace = run_search(&mut algo, table.len(), |i| Ok(table[i])).unwrap();
+            trace.trials_to_reach(best, eps).unwrap_or(table.len()) as f64
+        })
+        .expect("ablation search pool");
     mean(&out)
 }
 
 fn main() -> Result<()> {
+    println!("worker pool: {} threads (QUANTUNE_THREADS)\n", pool::default_threads());
     let q = Quantune::open(zoo::artifacts_dir())?;
     let seeds: Vec<u64> = (0..7).collect();
     let eps = 1e-3;

@@ -6,6 +6,10 @@
 //! ```
 //!
 //! Output: stdout + CSVs under results/ (one series per figure).
+//! `QUANTUNE_THREADS` sizes the worker pool behind the sweep, search
+//! fan-out, and VTA config exploration. Figures that measure through
+//! PJRT are skipped with a notice when the backend is unavailable; the
+//! interpreter-backed fig8 always runs.
 
 use anyhow::Result;
 
@@ -14,99 +18,128 @@ use quantune::experiments as exp;
 use quantune::runtime::Runtime;
 use quantune::zoo;
 
+fn need_rt<'a>(runtime: Option<&'a Runtime>, what: &str) -> Option<&'a Runtime> {
+    if runtime.is_none() {
+        eprintln!("[skip] {what}: needs the PJRT backend");
+    }
+    runtime
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let want = |t: &str| {
         args.iter().all(|a| a.starts_with("--")) || args.iter().any(|a| a == t)
     };
     let mut q = Quantune::open(zoo::artifacts_dir())?;
-    let runtime = Runtime::cpu()?;
-
-    if want("fig2") {
-        println!("== Fig 2: Top-1 across all 96 configs ==");
-        let tables = exp::fig2(&mut q, &runtime)?;
-        let mut names: Vec<&String> = tables.keys().collect();
-        names.sort();
-        for name in names {
-            let t = &tables[name];
-            let min = t.iter().cloned().fold(f64::INFINITY, f64::min);
-            let max = t.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-            let fp32 = q.load_model(name)?.fp32_top1;
-            println!(
-                "  {name:>5}: top1 range {:.2}%..{:.2}% (fp32 {:.2}%); relative \
-                 error {:+.2}%..{:+.2}%",
-                min * 100.0,
-                max * 100.0,
-                fp32 * 100.0,
-                (min - fp32) * 100.0,
-                (max - fp32) * 100.0
-            );
+    println!(
+        "worker pool: {} threads (QUANTUNE_THREADS)",
+        quantune::util::pool::default_threads()
+    );
+    // figures 2/3/5/6/7/9 measure through PJRT; fig8 (VTA) is
+    // interpreter-backed and still runs when the backend is unavailable
+    let runtime = match Runtime::cpu() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("PJRT unavailable ({e})");
+            None
         }
-        q.db.save()?;
+    };
+    if want("fig2") {
+        if let Some(rt) = need_rt(runtime.as_ref(), "fig2") {
+            println!("== Fig 2: Top-1 across all 96 configs ==");
+            let tables = exp::fig2(&mut q, rt)?;
+            let mut names: Vec<&String> = tables.keys().collect();
+            names.sort();
+            for name in names {
+                let t = &tables[name];
+                let min = t.iter().cloned().fold(f64::INFINITY, f64::min);
+                let max = t.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let fp32 = q.load_model(name)?.fp32_top1;
+                println!(
+                    "  {name:>5}: top1 range {:.2}%..{:.2}% (fp32 {:.2}%); relative \
+                     error {:+.2}%..{:+.2}%",
+                    min * 100.0,
+                    max * 100.0,
+                    fp32 * 100.0,
+                    (min - fp32) * 100.0,
+                    (max - fp32) * 100.0
+                );
+            }
+            q.db.save()?;
+        }
     }
 
     if want("fig3") {
-        println!("\n== Fig 3: XGBoost feature importance (gain) ==");
-        for (i, (name, gain)) in exp::fig3(&mut q, &runtime)?.iter().take(12).enumerate()
-        {
-            println!("  {:>2}. {name:<16} {:.3}", i + 1, gain);
+        if let Some(rt) = need_rt(runtime.as_ref(), "fig3") {
+            println!("\n== Fig 3: XGBoost feature importance (gain) ==");
+            for (i, (name, gain)) in exp::fig3(&mut q, rt)?.iter().take(12).enumerate() {
+                println!("  {:>2}. {name:<16} {:.3}", i + 1, gain);
+            }
+            q.db.save()?;
         }
-        q.db.save()?;
     }
 
     let mut fig5_results = None;
     if want("fig5") || want("fig6") {
-        println!("\n== Fig 5: convergence of the five search algorithms ==");
-        let seeds: Vec<u64> = (0..7).collect();
-        let results = exp::fig5(&mut q, &runtime, &seeds, 1e-3)?;
-        let mut models: Vec<String> = results.iter().map(|r| r.model.clone()).collect();
-        models.dedup();
-        print!("{:>8} |", "algo");
-        for m in &models {
-            print!(" {m:>6}");
-        }
-        println!("   (mean trials to sweep-best, {} seeds)", seeds.len());
-        for algo in quantune::coordinator::ALGORITHMS {
-            print!("{algo:>8} |");
+        if let Some(rt) = need_rt(runtime.as_ref(), "fig5") {
+            println!("\n== Fig 5: convergence of the five search algorithms ==");
+            let seeds: Vec<u64> = (0..7).collect();
+            let results = exp::fig5(&mut q, rt, &seeds, 1e-3)?;
+            let mut models: Vec<String> =
+                results.iter().map(|r| r.model.clone()).collect();
+            models.dedup();
+            print!("{:>8} |", "algo");
             for m in &models {
-                match results.iter().find(|r| &r.model == m && r.algo == algo) {
-                    Some(r) => print!(" {:>6.1}", r.trials_to_best),
-                    None => print!(" {:>6}", "-"),
-                }
+                print!(" {m:>6}");
             }
-            println!();
+            println!("   (mean trials to sweep-best, {} seeds)", seeds.len());
+            for algo in quantune::coordinator::ALGORITHMS {
+                print!("{algo:>8} |");
+                for m in &models {
+                    match results.iter().find(|r| &r.model == m && r.algo == algo) {
+                        Some(r) => print!(" {:>6.1}", r.trials_to_best),
+                        None => print!(" {:>6}", "-"),
+                    }
+                }
+                println!();
+            }
+            fig5_results = Some(results);
+            q.db.save()?;
         }
-        fig5_results = Some(results);
-        q.db.save()?;
     }
 
     if want("fig6") {
-        println!("\n== Fig 6: convergence speedup over random ==");
-        let results = fig5_results.as_ref().expect("fig5 ran");
-        for (model, algo, speedup) in exp::fig6(results)? {
-            if algo != "random" {
-                println!("  {model:>5} {algo:>8}: {speedup:.2}x");
+        if let Some(results) = fig5_results.as_ref() {
+            println!("\n== Fig 6: convergence speedup over random ==");
+            for (model, algo, speedup) in exp::fig6(results)? {
+                if algo != "random" {
+                    println!("  {model:>5} {algo:>8}: {speedup:.2}x");
+                }
             }
+        } else {
+            eprintln!("[skip] fig6: needs the fig5 results (PJRT backend)");
         }
     }
 
     if want("fig7") {
-        println!("\n== Fig 7: Quantune vs fixed vendor-default baseline ==");
-        println!(
-            "{:>5} | {:>8} | {:>10} | {:>9} | delta",
-            "model", "fp32", "baseline", "quantune"
-        );
-        for r in exp::fig7(&mut q, &runtime)? {
+        if let Some(rt) = need_rt(runtime.as_ref(), "fig7") {
+            println!("\n== Fig 7: Quantune vs fixed vendor-default baseline ==");
             println!(
-                "{:>5} | {:>7.2}% | {:>9.2}% | {:>8.2}% | {:+.2}%",
-                r.model,
-                r.fp32 * 100.0,
-                r.baseline * 100.0,
-                r.quantune * 100.0,
-                (r.quantune - r.baseline) * 100.0
+                "{:>5} | {:>8} | {:>10} | {:>9} | delta",
+                "model", "fp32", "baseline", "quantune"
             );
+            for r in exp::fig7(&mut q, rt)? {
+                println!(
+                    "{:>5} | {:>7.2}% | {:>9.2}% | {:>8.2}% | {:+.2}%",
+                    r.model,
+                    r.fp32 * 100.0,
+                    r.baseline * 100.0,
+                    r.quantune * 100.0,
+                    (r.quantune - r.baseline) * 100.0
+                );
+            }
+            q.db.save()?;
         }
-        q.db.save()?;
     }
 
     if want("fig8") {
@@ -129,22 +162,24 @@ fn main() -> Result<()> {
     }
 
     if want("fig9") {
-        println!("\n== Fig 9: fp32 vs quantized latency (PJRT-CPU, batch 1) ==");
-        println!(
-            "{:>5} | {:>9} | {:>9} | {:>9} | modeled a53/i7/gpu",
-            "model", "fp32 ms", "int8 ms", "speedup"
-        );
-        for r in exp::fig9(&q, &runtime, 30)? {
+        if let Some(rt) = need_rt(runtime.as_ref(), "fig9") {
+            println!("\n== Fig 9: fp32 vs quantized latency (PJRT-CPU, batch 1) ==");
             println!(
-                "{:>5} | {:>9.2} | {:>9.2} | {:>8.2}x | {:.2}/{:.2}/{:.2}",
-                r.model,
-                r.fp32_ms,
-                r.fq_ms,
-                r.speedup,
-                r.modeled_speedups[0],
-                r.modeled_speedups[1],
-                r.modeled_speedups[2]
+                "{:>5} | {:>9} | {:>9} | {:>9} | modeled a53/i7/gpu",
+                "model", "fp32 ms", "int8 ms", "speedup"
             );
+            for r in exp::fig9(&q, rt, 30)? {
+                println!(
+                    "{:>5} | {:>9.2} | {:>9.2} | {:>8.2}x | {:.2}/{:.2}/{:.2}",
+                    r.model,
+                    r.fp32_ms,
+                    r.fq_ms,
+                    r.speedup,
+                    r.modeled_speedups[0],
+                    r.modeled_speedups[1],
+                    r.modeled_speedups[2]
+                );
+            }
         }
     }
 

@@ -1,25 +1,43 @@
 //! Hot-path micro benchmarks (EXPERIMENTS.md §Perf).
 //!
 //! No criterion in the offline vendor set: this is a small warmup+reps
-//! harness reporting median / mean wall-clock per operation for each
-//! layer's hot path:
-//!   L3  interpreter conv GEMM, VTA int-GEMM forward, KL threshold
-//!       search, XGBoost refit, fake-quant weight prep
-//!   RT  PJRT execute (fp32 + fq, batch 128 and batch 1)
+//! harness reporting median / mean wall-clock per operation.
+//!
+//! Two tiers:
+//! - **synthetic** (always runs, no artifacts needed): the GEMM A/B
+//!   (reference vs serial-unrolled vs row-tiled) and the parallel
+//!   evaluation path -- a full `InterpEvaluator` Top-1 measurement over
+//!   512 synthetic images at 1 thread vs the configured pool width.
+//! - **artifact-backed** (skipped with a notice when `make artifacts`
+//!   has not run): interpreter forwards, KL search, quantized-setup
+//!   preparation with and without the weight cache, XGBoost refit, VTA
+//!   forward, and -- when PJRT is available -- executable timing.
 //!
 //! ```bash
-//! cargo bench --offline --bench bench_perf
+//! QUANTUNE_THREADS=1 cargo bench --offline --bench bench_perf
+//! QUANTUNE_THREADS=4 cargo bench --offline --bench bench_perf
 //! ```
+//!
+//! Compare the "interp evaluator measure" rows of the two runs for the
+//! evaluation-path speedup (see rust/BENCHMARKS.md).
 
 use anyhow::Result;
 
 use quantune::calib::{calibrate, CalibBackend};
-use quantune::coordinator::{act_params_tensor, prepare, Quantune};
+use quantune::coordinator::{
+    act_params_tensor, prepare, prepare_cached, InterpEvaluator, Quantune,
+    QuantizedSetup, SharedEvaluator, WeightCache,
+};
+use quantune::data::synthetic_dataset;
+use quantune::interp::gemm::gemm_f32_tiled;
 use quantune::ir::Tensor;
-use quantune::quant::{fake_quant_weights, Granularity, QuantConfig, Scheme};
+use quantune::quant::{
+    fake_quant_weights, CalibCount, Clipping, Granularity, QuantConfig, Scheme,
+};
 use quantune::runtime::{tensor_to_literal, Runtime};
-use quantune::util::{stats::percentile, Pcg32, Timer};
-use quantune::zoo;
+use quantune::util::stats::percentile;
+use quantune::util::{pool, Pcg32, Timer};
+use quantune::zoo::{self, synthetic_model, ZooModel};
 
 fn bench<F: FnMut() -> Result<()>>(name: &str, reps: usize, mut f: F) -> Result<f64> {
     // warmup
@@ -57,10 +75,90 @@ fn gemm_f32_reference(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mu
 }
 
 fn main() -> Result<()> {
+    println!(
+        "worker pool: {} threads (QUANTUNE_THREADS overrides; run once with \
+         QUANTUNE_THREADS=1 and once with =4 for the speedup A/B)\n",
+        pool::default_threads()
+    );
+    synthetic_benches()?;
+    if let Err(e) = artifact_benches() {
+        eprintln!("\n[skip] artifact-backed benches: {e:#} (run `make artifacts`)");
+    }
+    Ok(())
+}
+
+fn synthetic_benches() -> Result<()> {
+    println!("== synthetic (no artifacts needed) ==");
+
+    // ---- GEMM A/B: reference vs serial unroll vs row-tiled ----
+    let mut rng = Pcg32::seeded(3);
+    // rn18 stage-2 shape: M = 32 imgs * 16*16 px, K = 3*3*16, N = 32
+    let (m, k, n) = (32 * 256, 144, 32);
+    let a: Vec<f32> = (0..m * k)
+        .map(|_| if rng.chance(0.5) { 0.0 } else { rng.normal() })
+        .collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+    let mut c = vec![0.0f32; m * n];
+    bench("gemm_f32 reference (8192x144x32)", 20, || {
+        c.iter_mut().for_each(|v| *v = 0.0);
+        gemm_f32_reference(m, k, n, &a, &b, &mut c);
+        std::hint::black_box(&c);
+        Ok(())
+    })?;
+    bench("gemm_f32 serial unrolled (8192x144x32)", 20, || {
+        c.iter_mut().for_each(|v| *v = 0.0);
+        gemm_f32_tiled(m, k, n, &a, &b, &mut c, 1);
+        std::hint::black_box(&c);
+        Ok(())
+    })?;
+    let threads = pool::default_threads();
+    bench(&format!("gemm_f32 row-tiled x{threads} (8192x144x32)"), 20, || {
+        c.iter_mut().for_each(|v| *v = 0.0);
+        gemm_f32_tiled(m, k, n, &a, &b, &mut c, threads);
+        std::hint::black_box(&c);
+        Ok(())
+    })?;
+
+    // ---- evaluation path: full Top-1 measurement, 1 thread vs pool ----
+    let model = synthetic_model(16, 8, 8, 7)?;
+    let calib = synthetic_dataset(64, 16, 16, 8, 8, 21);
+    let eval = synthetic_dataset(512, 16, 16, 8, 8, 22);
+    let cfg_idx = QuantConfig {
+        calib: CalibCount::C1,
+        scheme: Scheme::Asymmetric,
+        clip: Clipping::Max,
+        gran: Granularity::Tensor,
+        mixed: false,
+    }
+    .index();
+    for threads in [1usize, pool::default_threads()] {
+        // the override pins every level (batch pool AND inner GEMM), so
+        // the 1-thread row is a true serial baseline even when the env
+        // requests a wide pool; restore it before propagating any error
+        pool::set_thread_override(Some(threads));
+        let r = bench(
+            &format!("interp evaluator measure (512 imgs, {threads} thr)"),
+            5,
+            || {
+                let ev = InterpEvaluator::new(&model, &calib, &eval, 1);
+                std::hint::black_box(ev.measure_shared(cfg_idx)?);
+                Ok(())
+            },
+        );
+        pool::set_thread_override(None);
+        r?;
+    }
+    Ok(())
+}
+
+fn artifact_benches() -> Result<()> {
     let q = Quantune::open(zoo::artifacts_dir())?;
-    let runtime = Runtime::cpu()?;
     let model = q.load_model("rn18")?;
-    println!("perf harness on {} ({} MACs/img)\n", model.name, model.graph.macs()?);
+    println!(
+        "\n== artifact-backed: {} ({} MACs/img) ==",
+        model.name,
+        model.graph.macs()?
+    );
 
     // ---- L3 interpreter conv (im2col + gemm) ----
     let interp = quantune::interp::Interpreter::new(&model.graph, model.weights_map());
@@ -69,35 +167,11 @@ fn main() -> Result<()> {
         interp.forward(&x32).map(|_| ())
     })?;
 
-    // ---- GEMM A/B: reference (pre-opt) vs current k-by-4 unroll ----
-    {
-        let mut rng = Pcg32::seeded(3);
-        // rn18 stage-2 shape: M = 32 imgs * 16*16 px, K = 3*3*16, N = 32
-        let (m, k, n) = (32 * 256, 144, 32);
-        let a: Vec<f32> = (0..m * k)
-            .map(|_| if rng.chance(0.5) { 0.0 } else { rng.normal() })
-            .collect();
-        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
-        let mut c = vec![0.0f32; m * n];
-        bench("gemm_f32 reference (8192x144x32)", 20, || {
-            c.iter_mut().for_each(|v| *v = 0.0);
-            gemm_f32_reference(m, k, n, &a, &b, &mut c);
-            std::hint::black_box(&c);
-            Ok(())
-        })?;
-        bench("gemm_f32 unrolled  (8192x144x32)", 20, || {
-            c.iter_mut().for_each(|v| *v = 0.0);
-            quantune::interp::gemm::gemm_f32(m, k, n, &a, &b, &mut c);
-            std::hint::black_box(&c);
-            Ok(())
-        })?;
-    }
-
     // ---- calibration + KL ----
     let cache = calibrate(
         &model,
         &q.calib_pool,
-        quantune::quant::CalibCount::C64,
+        CalibCount::C64,
         &CalibBackend::Interp,
         q.seed,
     )?;
@@ -118,10 +192,16 @@ fn main() -> Result<()> {
         Ok(())
     })?;
 
-    // ---- quantized-model preparation ----
+    // ---- quantized-model preparation: cold vs warm weight cache ----
     let cfg = QuantConfig::from_index(70)?;
-    bench("prepare quantized setup (weights+acts)", 20, || {
+    bench("prepare quantized setup (no cache)", 20, || {
         std::hint::black_box(prepare(&model, &cache, &cfg)?);
+        Ok(())
+    })?;
+    let wcache = WeightCache::new();
+    prepare_cached(&model, &cache, &cfg, &wcache)?;
+    bench("prepare quantized setup (warm cache)", 20, || {
+        std::hint::black_box(prepare_cached(&model, &cache, &cfg, &wcache)?);
         Ok(())
     })?;
     let w = model.weights.get("conv10_w").or_else(|_| {
@@ -153,8 +233,8 @@ fn main() -> Result<()> {
 
     // ---- VTA integer forward ----
     let vcfg = quantune::quant::VtaConfig {
-        calib: quantune::quant::CalibCount::C64,
-        clip: quantune::quant::Clipping::Max,
+        calib: CalibCount::C64,
+        clip: Clipping::Max,
         fusion: true,
     };
     let vm = quantune::vta::VtaModel::build(
@@ -167,13 +247,40 @@ fn main() -> Result<()> {
         vm.forward(&x32).map(|_| ())
     })?;
 
-    // ---- PJRT execution ----
+    // ---- interpreter fq forward via full setup ----
     let setup = prepare(&model, &cache, &cfg)?;
+    let aq = &setup.aq;
+    let weights_fq: std::collections::HashMap<String, std::sync::Arc<Tensor>> = model
+        .weights
+        .order
+        .iter()
+        .cloned()
+        .zip(setup.weights.iter().cloned())
+        .collect();
+    let interp_fq = quantune::interp::Interpreter::new(&model.graph, &weights_fq);
+    bench("interp fq forward (batch 32)", 10, || {
+        interp_fq.forward_fq(&x32, aq).map(|_| ())
+    })?;
+
+    // ---- PJRT execution (skipped when the backend is unavailable) ----
+    match Runtime::cpu() {
+        Ok(runtime) => pjrt_benches(&q, &model, &runtime, &setup)?,
+        Err(e) => eprintln!("[skip] PJRT benches: {e}"),
+    }
+    Ok(())
+}
+
+fn pjrt_benches(
+    q: &Quantune,
+    model: &ZooModel,
+    runtime: &Runtime,
+    setup: &QuantizedSetup,
+) -> Result<()> {
     let exe_fp32 = runtime.load(&q.artifacts.join(format!("{}_fp32.hlo.txt", model.name)))?;
     let exe_fq = runtime.load(&q.artifacts.join(format!("{}_fq.hlo.txt", model.name)))?;
     let x128 = q.eval.batch(&(0..q.eval.n.min(128)).collect::<Vec<_>>());
     let x_lit = tensor_to_literal(&x128)?;
-    let ap = act_params_tensor(&setup);
+    let ap = act_params_tensor(setup);
     let ap_lit = tensor_to_literal(&ap)?;
     let w_raw: Vec<xla::Literal> = model
         .weights
@@ -181,8 +288,11 @@ fn main() -> Result<()> {
         .iter()
         .map(|t| tensor_to_literal(t))
         .collect::<Result<_>>()?;
-    let w_fq: Vec<xla::Literal> =
-        setup.weights.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+    let w_fq: Vec<xla::Literal> = setup
+        .weights
+        .iter()
+        .map(|t| tensor_to_literal(t))
+        .collect::<Result<_>>()?;
 
     let mut fp32_args: Vec<&xla::Literal> = vec![&x_lit];
     fp32_args.extend(w_raw.iter());
@@ -202,20 +312,5 @@ fn main() -> Result<()> {
         }
         Ok(())
     })?;
-
-    // interpreter single hot conv via full fq forward
-    let aq = &setup.aq;
-    let weights_fq: std::collections::HashMap<String, Tensor> = model
-        .weights
-        .order
-        .iter()
-        .cloned()
-        .zip(setup.weights.iter().cloned())
-        .collect();
-    let interp_fq = quantune::interp::Interpreter::new(&model.graph, &weights_fq);
-    bench("interp fq forward (batch 32)", 10, || {
-        interp_fq.forward_fq(&x32, aq).map(|_| ())
-    })?;
-
     Ok(())
 }

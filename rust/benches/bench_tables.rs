@@ -5,7 +5,9 @@
 //! cargo bench --offline --bench bench_tables -- table1  # one table
 //! ```
 //!
-//! Output: stdout + CSVs under results/.
+//! Output: stdout + CSVs under results/. `QUANTUNE_THREADS` sizes the
+//! worker pool. Tables 1/2/4 measure through PJRT and are skipped with a
+//! notice when the backend is unavailable; tables 3/5 always run.
 
 use anyhow::Result;
 
@@ -14,50 +16,70 @@ use quantune::experiments as exp;
 use quantune::runtime::Runtime;
 use quantune::zoo;
 
+fn need_rt<'a>(runtime: Option<&'a Runtime>, what: &str) -> Option<&'a Runtime> {
+    if runtime.is_none() {
+        eprintln!("[skip] {what}: needs the PJRT backend");
+    }
+    runtime
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let want = |t: &str| {
         args.iter().all(|a| a.starts_with("--")) || args.iter().any(|a| a == t)
     };
     let mut q = Quantune::open(zoo::artifacts_dir())?;
-    let runtime = Runtime::cpu()?;
-
-    if want("table1") {
-        println!("== Table 1: best configuration per model ==");
-        println!(
-            "{:>5} | {:>9} | {:>7} | {:>8} | {:>4} | {:>15} | accuracy",
-            "model", "precision", "#calib", "gran", "clip", "scheme"
-        );
-        for r in exp::table1(&mut q, &runtime)? {
-            println!(
-                "{:>5} | {:>9} | {:>7} | {:>8} | {:>4} | {:>15} | {}",
-                r.model,
-                if r.best.mixed { "int8+fp32" } else { "int8" },
-                r.best.calib.paper_images(),
-                format!("{:?}", r.best.gran),
-                format!("{:?}", r.best.clip),
-                r.best.scheme.name(),
-                r.accuracy_cell(),
-            );
+    println!(
+        "worker pool: {} threads (QUANTUNE_THREADS)",
+        quantune::util::pool::default_threads()
+    );
+    let runtime = match Runtime::cpu() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("PJRT unavailable ({e})");
+            None
         }
-        q.db.save()?;
+    };
+    if want("table1") {
+        if let Some(rt) = need_rt(runtime.as_ref(), "table1") {
+            println!("== Table 1: best configuration per model ==");
+            println!(
+                "{:>5} | {:>9} | {:>7} | {:>8} | {:>4} | {:>15} | accuracy",
+                "model", "precision", "#calib", "gran", "clip", "scheme"
+            );
+            for r in exp::table1(&mut q, rt)? {
+                println!(
+                    "{:>5} | {:>9} | {:>7} | {:>8} | {:>4} | {:>15} | {}",
+                    r.model,
+                    if r.best.mixed { "int8+fp32" } else { "int8" },
+                    r.best.calib.paper_images(),
+                    format!("{:?}", r.best.gran),
+                    format!("{:?}", r.best.clip),
+                    r.best.scheme.name(),
+                    r.accuracy_cell(),
+                );
+            }
+            q.db.save()?;
+        }
     }
 
     if want("table2") {
-        println!("\n== Table 2: accuracy-measurement cost ==");
-        println!(
-            "{:>5} | {:>12} | {:>10} | {:>10} | {:>10}",
-            "model", "host (s)", "a53 (h)", "i7 (h)", "2080ti (h)"
-        );
-        for r in exp::table2(&mut q, &runtime)? {
+        if let Some(rt) = need_rt(runtime.as_ref(), "table2") {
+            println!("\n== Table 2: accuracy-measurement cost ==");
             println!(
-                "{:>5} | {:>12.2} | {:>10.2} | {:>10.3} | {:>10.4}",
-                r.model,
-                r.measured_host_secs,
-                r.modeled_hours[0],
-                r.modeled_hours[1],
-                r.modeled_hours[2]
+                "{:>5} | {:>12} | {:>10} | {:>10} | {:>10}",
+                "model", "host (s)", "a53 (h)", "i7 (h)", "2080ti (h)"
             );
+            for r in exp::table2(&mut q, rt)? {
+                println!(
+                    "{:>5} | {:>12.2} | {:>10.2} | {:>10.3} | {:>10.4}",
+                    r.model,
+                    r.measured_host_secs,
+                    r.modeled_hours[0],
+                    r.modeled_hours[1],
+                    r.modeled_hours[2]
+                );
+            }
         }
     }
 
@@ -80,16 +102,18 @@ fn main() -> Result<()> {
     }
 
     if want("table4") {
-        println!("\n== Table 4: diversity (Shannon entropy) of <=1%-loss configs ==");
-        let d = exp::table4(&mut q, &runtime, 0.01)?;
-        println!(
-            "precision {:.2} | calibration {:.2} | granularity {:.2} | \
-             clipping {:.2} | scheme {:.2} | samples {}",
-            d.precision, d.calibration, d.granularity, d.clipping, d.scheme,
-            d.num_samples
-        );
-        println!("no universal config: {}", d.no_universal_config());
-        q.db.save()?;
+        if let Some(rt) = need_rt(runtime.as_ref(), "table4") {
+            println!("\n== Table 4: diversity (Shannon entropy) of <=1%-loss configs ==");
+            let d = exp::table4(&mut q, rt, 0.01)?;
+            println!(
+                "precision {:.2} | calibration {:.2} | granularity {:.2} | \
+                 clipping {:.2} | scheme {:.2} | samples {}",
+                d.precision, d.calibration, d.granularity, d.clipping, d.scheme,
+                d.num_samples
+            );
+            println!("no universal config: {}", d.no_universal_config());
+            q.db.save()?;
+        }
     }
 
     if want("table5") {

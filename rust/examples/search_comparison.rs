@@ -14,7 +14,7 @@ use quantune::util::stats::mean;
 use quantune::zoo;
 
 fn main() -> Result<()> {
-    let mut q = Quantune::open(zoo::artifacts_dir())?;
+    let q = Quantune::open(zoo::artifacts_dir())?;
     let model_name =
         std::env::args().nth(1).unwrap_or_else(|| "mn".to_string());
     let model = q.load_model(&model_name)?;

@@ -53,12 +53,26 @@ pub fn calibrate(
     match backend {
         CalibBackend::Interp => {
             let interp = crate::interp::Interpreter::new(&model.graph, model.weights_map());
-            // interpreter batches of 32 keep memory modest
-            for chunk in idx.chunks(32) {
-                let x = pool.batch(chunk);
-                let (_, acts) = interp.forward_acts(&x)?;
-                for (h, t) in hists.iter_mut().zip(&acts) {
-                    h.update(&t.data);
+            // interpreter batches of 32 keep memory modest; the forwards
+            // fan out across the worker pool while histogram updates stay
+            // in chunk order, so the cache is bit-identical to a serial
+            // run. Fan out one window at a time: only ~2 chunks per
+            // worker of captured activations are ever resident at once.
+            let workers = crate::util::pool::Pool::auto();
+            let chunks: Vec<&[usize]> = idx.chunks(32).collect();
+            for window in chunks.chunks(workers.threads().saturating_mul(2).max(1)) {
+                let acts_per = workers.map(
+                    window,
+                    |chunk| -> Result<Vec<crate::ir::Tensor>> {
+                        let x = pool.batch(chunk);
+                        let (_, acts) = interp.forward_acts(&x)?;
+                        Ok(acts)
+                    },
+                )?;
+                for acts in acts_per {
+                    for (h, t) in hists.iter_mut().zip(&acts?) {
+                        h.update(&t.data);
+                    }
                 }
             }
         }

@@ -12,21 +12,31 @@
 //!
 //! All evaluators memoize per config index: re-measuring an explored
 //! config is free, which matches how the search driver accounts trials.
+//! Memoization, the calibration-cache store, and the prepared-weight
+//! cache are interior-mutable (`Mutex`/`Arc`), so one evaluator can be
+//! shared by the worker pool; [`SharedEvaluator`] is the thread-safe
+//! measurement entry point the parallel sweep drives. `InterpEvaluator`
+//! additionally fans its per-batch Top-1 counting out across the pool,
+//! reducing hit counts in input order so the measured accuracy is
+//! identical at any thread count.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::calib::{calibrate, CalibBackend, CalibrationCache};
 use crate::data::Dataset;
 use crate::interp::{argmax_batch, Interpreter};
+use crate::ir::Tensor;
 use crate::quant::{CalibCount, QuantConfig};
 use crate::runtime::{tensor_to_literal, Runtime};
+use crate::util::pool::Pool;
 use crate::util::Timer;
 use crate::zoo::ZooModel;
 
-use super::quantizer::{act_params_tensor, prepare};
+use super::quantizer::{act_params_tensor, prepare_cached, WeightCache};
 
 /// Top-1 accuracy measurement of one config of one model.
 pub trait Evaluator {
@@ -36,29 +46,55 @@ pub trait Evaluator {
     fn mean_measure_secs(&self) -> f64;
 }
 
-/// Shared calibration-cache store (3 caches per model, built lazily).
+/// Thread-safe measurement: evaluators whose `measure` may be called
+/// from several pool workers at once (the parallel sweep and the
+/// experiment fan-outs). `HloEvaluator` is excluded: the PJRT client is
+/// single-threaded on our side.
+pub trait SharedEvaluator: Sync {
+    /// Measure (or return the memoized) Top-1 for a config index.
+    fn measure_shared(&self, config: usize) -> Result<f64>;
+}
+
+/// One calibration cache slot: its own lock so a count is built exactly
+/// once while requesters of *other* counts proceed unblocked.
+type CalibSlot = Arc<Mutex<Option<Arc<CalibrationCache>>>>;
+
+/// Shared calibration-cache store (3 caches per model, built lazily,
+/// shareable across worker threads).
 pub struct CalibStore {
-    caches: HashMap<CalibCount, CalibrationCache>,
+    caches: Mutex<HashMap<CalibCount, CalibSlot>>,
     pub seed: u64,
 }
 
 impl CalibStore {
     pub fn new(seed: u64) -> Self {
-        CalibStore { caches: HashMap::new(), seed }
+        CalibStore { caches: Mutex::new(HashMap::new()), seed }
     }
 
     pub fn get(
-        &mut self,
+        &self,
         model: &ZooModel,
-        pool: &Dataset,
+        calib_pool: &Dataset,
         count: CalibCount,
         backend: &CalibBackend,
-    ) -> Result<&CalibrationCache> {
-        if !self.caches.contains_key(&count) {
-            let cache = calibrate(model, pool, count, backend, self.seed)?;
-            self.caches.insert(count, cache);
+    ) -> Result<Arc<CalibrationCache>> {
+        let slot: CalibSlot = self
+            .caches
+            .lock()
+            .unwrap()
+            .entry(count)
+            .or_insert_with(|| Arc::new(Mutex::new(None)))
+            .clone();
+        // per-count lock: concurrent workers wanting this count wait for
+        // the one build instead of each recalibrating (a failed build
+        // leaves the slot empty so the next caller retries)
+        let mut guard = slot.lock().unwrap();
+        if let Some(c) = guard.as_ref() {
+            return Ok(c.clone());
         }
-        Ok(&self.caches[&count])
+        let built = Arc::new(calibrate(model, calib_pool, count, backend, self.seed)?);
+        *guard = Some(built.clone());
+        Ok(built)
     }
 }
 
@@ -70,8 +106,9 @@ pub struct HloEvaluator<'a> {
     pub calib_pool: &'a Dataset,
     pub eval: &'a Dataset,
     calib: CalibStore,
-    memo: HashMap<usize, f64>,
-    measure_times: Vec<f64>,
+    wcache: WeightCache,
+    memo: Mutex<HashMap<usize, f64>>,
+    measure_times: Mutex<Vec<f64>>,
 }
 
 impl<'a> HloEvaluator<'a> {
@@ -90,16 +127,17 @@ impl<'a> HloEvaluator<'a> {
             calib_pool,
             eval,
             calib: CalibStore::new(seed),
-            memo: HashMap::new(),
-            measure_times: Vec::new(),
+            wcache: WeightCache::new(),
+            memo: Mutex::new(HashMap::new()),
+            measure_times: Mutex::new(Vec::new()),
         }
     }
 
-    fn top1_fq(&mut self, cfg: &QuantConfig) -> Result<f64> {
+    fn top1_fq(&self, cfg: &QuantConfig) -> Result<f64> {
         let backend =
             CalibBackend::Hlo { runtime: self.runtime, artifacts: &self.artifacts };
         let cache = self.calib.get(self.model, self.calib_pool, cfg.calib, &backend)?;
-        let setup = prepare(self.model, cache, cfg)?;
+        let setup = prepare_cached(self.model, cache.as_ref(), cfg, &self.wcache)?;
         let exe = self
             .runtime
             .load(&self.artifacts.join(format!("{}_fq.hlo.txt", self.model.name)))?;
@@ -111,61 +149,84 @@ impl<'a> HloEvaluator<'a> {
         let w_lits: Vec<xla::Literal> = setup
             .weights
             .iter()
-            .map(tensor_to_literal)
+            .map(|t| tensor_to_literal(t))
             .collect::<Result<_>>()?;
 
+        // batch preparation (index gather + u8 -> padded f32 normalize)
+        // fans out across the pool one window at a time, so only a few
+        // prepared f32 batches are resident while execution drains them
+        // on this thread (the PJRT client is not Sync and has its own
+        // intra-op parallelism)
         let batch = self.model.batch;
+        let idx_all: Vec<usize> = (0..self.eval.n).collect();
+        let chunks: Vec<&[usize]> = idx_all.chunks(batch).collect();
+        // borrow only the dataset into the closure: `self` holds the
+        // non-Sync PJRT runtime handle
+        let eval = self.eval;
+        let workers = Pool::auto();
         let mut hits = 0usize;
         let mut total = 0usize;
-        let idx_all: Vec<usize> = (0..self.eval.n).collect();
-        for chunk in idx_all.chunks(batch) {
-            let (x, valid) = self.eval.batch_padded(chunk, batch);
-            let x_lit = tensor_to_literal(&x)?;
-            let mut literals: Vec<&xla::Literal> = Vec::with_capacity(2 + w_lits.len());
-            literals.push(&x_lit);
-            literals.push(&ap_lit);
-            literals.extend(w_lits.iter());
-            let out = exe.run_literals(&literals)?;
-            let preds = argmax_batch(&out[0]);
-            let labels = self.eval.labels_for(chunk);
-            hits += preds
-                .iter()
-                .take(valid)
-                .zip(&labels)
-                .filter(|(&p, &l)| p == l as usize)
-                .count();
-            total += valid;
+        for window in chunks.chunks(workers.threads().saturating_mul(2).max(1)) {
+            let prepped: Vec<(Tensor, usize, Vec<u8>)> = workers.map(window, |chunk| {
+                let (x, valid) = eval.batch_padded(chunk, batch);
+                let labels = eval.labels_for(chunk);
+                (x, valid, labels)
+            })?;
+            for (x, valid, labels) in &prepped {
+                let x_lit = tensor_to_literal(x)?;
+                let mut literals: Vec<&xla::Literal> =
+                    Vec::with_capacity(2 + w_lits.len());
+                literals.push(&x_lit);
+                literals.push(&ap_lit);
+                literals.extend(w_lits.iter());
+                let out = exe.run_literals(&literals)?;
+                let preds = argmax_batch(&out[0]);
+                hits += preds
+                    .iter()
+                    .take(*valid)
+                    .zip(labels)
+                    .filter(|(&p, &l)| p == l as usize)
+                    .count();
+                total += valid;
+            }
         }
-        Ok(hits as f64 / total as f64)
+        Ok(hits as f64 / total.max(1) as f64)
     }
-}
 
-impl Evaluator for HloEvaluator<'_> {
-    fn measure(&mut self, config: usize) -> Result<f64> {
-        if let Some(&a) = self.memo.get(&config) {
+    fn measure_at(&self, config: usize) -> Result<f64> {
+        if let Some(&a) = self.memo.lock().unwrap().get(&config) {
             return Ok(a);
         }
         let cfg = QuantConfig::from_index(config)?;
         let t = Timer::start();
         let acc = self.top1_fq(&cfg)?;
-        self.measure_times.push(t.secs());
-        self.memo.insert(config, acc);
+        self.measure_times.lock().unwrap().push(t.secs());
+        self.memo.lock().unwrap().insert(config, acc);
         Ok(acc)
-    }
-
-    fn mean_measure_secs(&self) -> f64 {
-        crate::util::stats::mean(&self.measure_times)
     }
 }
 
-/// Interpreter-backed evaluator (identical pipeline, no PJRT).
+impl Evaluator for HloEvaluator<'_> {
+    fn measure(&mut self, config: usize) -> Result<f64> {
+        self.measure_at(config)
+    }
+
+    fn mean_measure_secs(&self) -> f64 {
+        crate::util::stats::mean(&self.measure_times.lock().unwrap())
+    }
+}
+
+/// Interpreter-backed evaluator (identical pipeline, no PJRT). Batch
+/// Top-1 counting fans out across the worker pool.
 pub struct InterpEvaluator<'a> {
     pub model: &'a ZooModel,
     pub calib_pool: &'a Dataset,
     pub eval: &'a Dataset,
     calib: CalibStore,
-    memo: HashMap<usize, f64>,
-    measure_times: Vec<f64>,
+    wcache: WeightCache,
+    memo: Mutex<HashMap<usize, f64>>,
+    measure_times: Mutex<Vec<f64>>,
+    workers: Pool,
 }
 
 impl<'a> InterpEvaluator<'a> {
@@ -180,15 +241,24 @@ impl<'a> InterpEvaluator<'a> {
             calib_pool,
             eval,
             calib: CalibStore::new(seed),
-            memo: HashMap::new(),
-            measure_times: Vec::new(),
+            wcache: WeightCache::new(),
+            memo: Mutex::new(HashMap::new()),
+            measure_times: Mutex::new(Vec::new()),
+            workers: Pool::auto(),
         }
+    }
+
+    /// Pin the batch-level worker count (parity/determinism tests; the
+    /// default follows `QUANTUNE_THREADS`).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.workers = Pool::new(threads);
+        self
     }
 }
 
-impl Evaluator for InterpEvaluator<'_> {
-    fn measure(&mut self, config: usize) -> Result<f64> {
-        if let Some(&a) = self.memo.get(&config) {
+impl SharedEvaluator for InterpEvaluator<'_> {
+    fn measure_shared(&self, config: usize) -> Result<f64> {
+        if let Some(&a) = self.memo.lock().unwrap().get(&config) {
             return Ok(a);
         }
         let cfg = QuantConfig::from_index(config)?;
@@ -199,8 +269,10 @@ impl Evaluator for InterpEvaluator<'_> {
             cfg.calib,
             &CalibBackend::Interp,
         )?;
-        let setup = prepare(self.model, cache, &cfg)?;
-        let weights: HashMap<String, crate::ir::Tensor> = self
+        let setup = prepare_cached(self.model, cache.as_ref(), &cfg, &self.wcache)?;
+        // Arc clones only: warm weight-cache hits share tensor storage
+        // with the cache instead of copying it per measurement
+        let weights: HashMap<String, Arc<Tensor>> = self
             .model
             .weights
             .order
@@ -209,24 +281,42 @@ impl Evaluator for InterpEvaluator<'_> {
             .zip(setup.weights.iter().cloned())
             .collect();
         let interp = Interpreter::new(&self.model.graph, &weights);
-        let mut hits = 0;
         let idx_all: Vec<usize> = (0..self.eval.n).collect();
-        for chunk in idx_all.chunks(64) {
+        let chunks: Vec<&[usize]> = idx_all.chunks(64).collect();
+        // per-batch hit counts fan out, then reduce in input order: the
+        // integer sum is identical at any thread count. When this
+        // measurement itself runs on a pool worker (parallel sweep), the
+        // batch level serializes instead of oversubscribing.
+        let workers = if crate::util::pool::in_worker() {
+            Pool::new(1)
+        } else {
+            self.workers
+        };
+        let hits_per = workers.map(&chunks, |chunk| -> Result<usize> {
             let x = self.eval.batch(chunk);
             let logits = interp.forward_fq(&x, &setup.aq)?;
             let preds = argmax_batch(&logits);
             let labels = self.eval.labels_for(chunk);
-            hits +=
-                preds.iter().zip(&labels).filter(|(&p, &l)| p == l as usize).count();
+            Ok(preds.iter().zip(&labels).filter(|(&p, &l)| p == l as usize).count())
+        })?;
+        let mut hits = 0usize;
+        for h in hits_per {
+            hits += h?;
         }
-        let acc = hits as f64 / self.eval.n as f64;
-        self.measure_times.push(t.secs());
-        self.memo.insert(config, acc);
+        let acc = hits as f64 / self.eval.n.max(1) as f64;
+        self.measure_times.lock().unwrap().push(t.secs());
+        self.memo.lock().unwrap().insert(config, acc);
         Ok(acc)
+    }
+}
+
+impl Evaluator for InterpEvaluator<'_> {
+    fn measure(&mut self, config: usize) -> Result<f64> {
+        self.measure_shared(config)
     }
 
     fn mean_measure_secs(&self) -> f64 {
-        crate::util::stats::mean(&self.measure_times)
+        crate::util::stats::mean(&self.measure_times.lock().unwrap())
     }
 }
 
@@ -241,19 +331,29 @@ impl OracleEvaluator {
     pub fn new(table: Vec<f64>) -> Self {
         OracleEvaluator { table, secs_per_measure: 0.0 }
     }
-}
 
-impl Evaluator for OracleEvaluator {
-    fn measure(&mut self, config: usize) -> Result<f64> {
+    fn lookup(&self, config: usize) -> Result<f64> {
         self.table
             .get(config)
             .copied()
             .filter(|a| !a.is_nan())
             .ok_or_else(|| anyhow::anyhow!("oracle has no entry for config {config}"))
     }
+}
+
+impl Evaluator for OracleEvaluator {
+    fn measure(&mut self, config: usize) -> Result<f64> {
+        self.lookup(config)
+    }
 
     fn mean_measure_secs(&self) -> f64 {
         self.secs_per_measure
+    }
+}
+
+impl SharedEvaluator for OracleEvaluator {
+    fn measure_shared(&self, config: usize) -> Result<f64> {
+        self.lookup(config)
     }
 }
 
@@ -266,5 +366,7 @@ mod tests {
         let mut o = OracleEvaluator::new(vec![0.1, 0.9]);
         assert_eq!(o.measure(1).unwrap(), 0.9);
         assert!(o.measure(5).is_err());
+        // shared entry point agrees with the &mut one
+        assert_eq!(o.measure_shared(0).unwrap(), 0.1);
     }
 }

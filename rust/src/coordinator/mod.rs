@@ -13,8 +13,13 @@ pub mod quantizer;
 
 pub use database::{Database, Record};
 pub use devices::{DeviceProfile, DEVICES};
-pub use evaluator::{Evaluator, HloEvaluator, InterpEvaluator, OracleEvaluator};
-pub use quantizer::{act_params_tensor, mixed_precision_bypass, prepare, QuantizedSetup};
+pub use evaluator::{
+    Evaluator, HloEvaluator, InterpEvaluator, OracleEvaluator, SharedEvaluator,
+};
+pub use quantizer::{
+    act_params_tensor, mixed_precision_bypass, prepare, prepare_cached, QuantizedSetup,
+    WeightCache, WeightVariant,
+};
 
 use std::path::PathBuf;
 
@@ -26,6 +31,7 @@ use crate::search::{
     run_search, GeneticSearch, GridSearch, RandomSearch, SearchAlgo, SearchTrace,
     TransferRecord, XgbSearch,
 };
+use crate::util::pool::Pool;
 use crate::util::Timer;
 use crate::zoo::{self, ZooModel};
 
@@ -118,6 +124,50 @@ impl Quantune {
         Ok(table)
     }
 
+    /// Exhaustive sweep through a thread-safe evaluator: the 96 configs
+    /// fan out across `workers`, and results land in the database in
+    /// config order (0..95), so the table and the persisted records are
+    /// identical to the serial [`Quantune::sweep`] at any thread count.
+    ///
+    /// `progress(done, acc)` is called from worker threads with the
+    /// *completed-measurement count* (configs finish out of order, so
+    /// unlike [`Quantune::sweep`] it does not receive the config index).
+    pub fn sweep_parallel<E: SharedEvaluator + ?Sized>(
+        &mut self,
+        model: &ZooModel,
+        evaluator: &E,
+        force: bool,
+        workers: &Pool,
+        progress: impl Fn(usize, f64) + Sync,
+    ) -> Result<Vec<f64>> {
+        if !force && self.db.has_full_sweep(&model.name, QuantConfig::SPACE_SIZE) {
+            return Ok(self.db.accuracy_table(&model.name, QuantConfig::SPACE_SIZE));
+        }
+        let done = std::sync::atomic::AtomicUsize::new(0);
+        let measured = workers.run(QuantConfig::SPACE_SIZE, |i| {
+            let t = Timer::start();
+            let r = evaluator.measure_shared(i).map(|acc| (acc, t.secs()));
+            if let Ok((acc, _)) = &r {
+                let n = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+                progress(n, *acc);
+            }
+            r
+        })?;
+        let mut table = vec![f64::NAN; QuantConfig::SPACE_SIZE];
+        for (i, r) in measured.into_iter().enumerate() {
+            let (acc, secs) = r?;
+            table[i] = acc;
+            self.db.add(Record {
+                model: model.name.clone(),
+                config: i,
+                accuracy: acc,
+                measure_secs: secs,
+            });
+        }
+        self.db.save()?;
+        Ok(table)
+    }
+
     /// Transfer records from every other model's sweep (database D).
     pub fn transfer_for(&self, target: &ZooModel) -> Result<Vec<TransferRecord>> {
         let mut feats: std::collections::HashMap<String, Vec<f32>> = Default::default();
@@ -141,9 +191,10 @@ impl Quantune {
     }
 
     /// Run one search algorithm against an evaluator (Algorithm 1 when
-    /// the algorithm is xgb/xgb_t).
+    /// the algorithm is xgb/xgb_t). `&self`: independent runs (algorithm
+    /// x seed) may fan out across workers sharing one `Quantune`.
     pub fn search(
-        &mut self,
+        &self,
         model: &ZooModel,
         algo_name: &str,
         evaluator: &mut dyn Evaluator,

@@ -4,20 +4,78 @@
 //!
 //! This is the rust side of the paper's `g(e, s)` -- the Glow-extension
 //! model generator of Eq. 14.
+//!
+//! Weight preparation is memoized in a [`WeightCache`]: calibration count
+//! and clipping policy only shape *activation* ranges, so the 96-config
+//! space reuses at most one fake-quantized tensor per (layer, scheme,
+//! granularity) plus one fp32 passthrough per tensor. Configs that share
+//! a layer's setting skip requantization entirely, and the cache is
+//! interior-mutable so the parallel sweep's workers share it.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::calib::CalibrationCache;
 use crate::ir::Tensor;
-use crate::quant::{fake_quant_weights, ActQuantization, QuantConfig};
+use crate::quant::{fake_quant_weights, ActQuantization, Granularity, QuantConfig, Scheme};
 use crate::zoo::ZooModel;
 
 /// Everything needed to evaluate one quantized model variant.
 pub struct QuantizedSetup {
     pub aq: ActQuantization,
-    /// weights in ABI order (fake-quantized, except fp32 mixed layers)
-    pub weights: Vec<Tensor>,
+    /// weights in ABI order (fake-quantized, except fp32 mixed layers);
+    /// `Arc`d so cache hits share storage instead of copying tensors
+    pub weights: Vec<Arc<Tensor>>,
     pub config: QuantConfig,
+}
+
+/// How one weight tensor is prepared for evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WeightVariant {
+    /// fp32 passthrough (biases; first/last layers under mixed precision)
+    Fp32,
+    /// fake-quantized onto the int8 grid of (scheme, granularity)
+    Quant(Scheme, Granularity),
+}
+
+/// Cache of prepared weight tensors keyed by (weight name, variant).
+#[derive(Default)]
+pub struct WeightCache {
+    cached: Mutex<HashMap<(String, WeightVariant), Arc<Tensor>>>,
+}
+
+impl WeightCache {
+    pub fn new() -> WeightCache {
+        WeightCache::default()
+    }
+
+    /// Number of distinct prepared tensors held.
+    pub fn entries(&self) -> usize {
+        self.cached.lock().unwrap().len()
+    }
+
+    fn get_or_build(
+        &self,
+        name: &str,
+        variant: WeightVariant,
+        build: impl FnOnce() -> Tensor,
+    ) -> Arc<Tensor> {
+        if let Some(t) = self.cached.lock().unwrap().get(&(name.to_string(), variant)) {
+            return t.clone();
+        }
+        // build outside the lock so concurrent workers never serialize on
+        // the quantization math; racers produce identical tensors (the
+        // build is deterministic) and the first insert wins
+        let built = Arc::new(build());
+        self.cached
+            .lock()
+            .unwrap()
+            .entry((name.to_string(), variant))
+            .or_insert(built)
+            .clone()
+    }
 }
 
 /// Quant-point bypass rows for mixed precision: the network input (which
@@ -40,11 +98,13 @@ pub fn mixed_precision_bypass(model: &ZooModel, mixed: bool) -> Vec<bool> {
     bypass
 }
 
-/// Build the evaluation setup for one configuration.
-pub fn prepare(
+/// Build the evaluation setup for one configuration, reusing prepared
+/// weights from `wcache` when a previous config shared the layer setting.
+pub fn prepare_cached(
     model: &ZooModel,
     cache: &CalibrationCache,
     cfg: &QuantConfig,
+    wcache: &WeightCache,
 ) -> Result<QuantizedSetup> {
     anyhow::ensure!(cache.model == model.name, "calibration cache model mismatch");
     let bypass = mixed_precision_bypass(model, cfg.mixed);
@@ -59,16 +119,29 @@ pub fn prepare(
         let t = model.weights.get(name)?;
         let layer = name.trim_end_matches("_w").trim_end_matches("_b");
         let keep_fp32 = cfg.mixed && (layer == first || layer == last);
-        if name.ends_with("_w") && !keep_fp32 {
-            weights.push(fake_quant_weights(t, cfg.scheme, cfg.gran));
+        // biases stay fp32 in the fake-quant evaluation (they are int32
+        // at accumulator scale on true integer hardware, which the VTA
+        // path models exactly)
+        let variant = if name.ends_with("_w") && !keep_fp32 {
+            WeightVariant::Quant(cfg.scheme, cfg.gran)
         } else {
-            // biases stay fp32 in the fake-quant evaluation (they are
-            // int32 at accumulator scale on true integer hardware, which
-            // the VTA path models exactly)
-            weights.push(t.clone());
-        }
+            WeightVariant::Fp32
+        };
+        weights.push(wcache.get_or_build(name, variant, || match variant {
+            WeightVariant::Quant(scheme, gran) => fake_quant_weights(t, scheme, gran),
+            WeightVariant::Fp32 => t.clone(),
+        }));
     }
     Ok(QuantizedSetup { aq, weights, config: *cfg })
+}
+
+/// Build the evaluation setup for one configuration (uncached form).
+pub fn prepare(
+    model: &ZooModel,
+    cache: &CalibrationCache,
+    cfg: &QuantConfig,
+) -> Result<QuantizedSetup> {
+    prepare_cached(model, cache, cfg, &WeightCache::new())
 }
 
 /// The act_params tensor ([L, 5]) for a setup.
@@ -82,10 +155,33 @@ mod tests {
     use super::*;
 
     // integration-level tests live in rust/tests; here we only cover the
-    // bypass-row logic which needs no artifacts
+    // pieces that need no artifacts
     #[test]
     fn bypass_arity_matches_quant_points() {
         // see rust/tests/integration.rs::mixed_precision_bypass_rows for
         // the artifact-backed version of this test
+    }
+
+    #[test]
+    fn weight_cache_shares_entries() {
+        let wcache = WeightCache::new();
+        let build_count = std::sync::atomic::AtomicUsize::new(0);
+        let build = || {
+            build_count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            Tensor { shape: vec![2], data: vec![1.0, 2.0] }
+        };
+        let variant = WeightVariant::Quant(Scheme::Symmetric, Granularity::Tensor);
+        let a = wcache.get_or_build("l1_w", variant, build);
+        let b = wcache.get_or_build("l1_w", variant, build);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+        assert_eq!(build_count.load(std::sync::atomic::Ordering::Relaxed), 1);
+        // a different variant of the same tensor is a distinct entry
+        let c = wcache.get_or_build(
+            "l1_w",
+            WeightVariant::Quant(Scheme::Pow2, Granularity::Tensor),
+            build,
+        );
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(wcache.entries(), 2);
     }
 }

@@ -95,6 +95,28 @@ pub fn select_calibration_images(
     rng.sample_indices(pool_size, count)
 }
 
+/// A seeded random dataset (no files needed). Used by the perf bench and
+/// the parallel engine's parity/determinism tests; `n == 0` is a valid
+/// empty split.
+pub fn synthetic_dataset(
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    classes: usize,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Pcg32::new(seed, 31);
+    Dataset {
+        images: (0..n * h * w * c).map(|_| rng.below(256) as u8).collect(),
+        labels: (0..n).map(|_| rng.below(classes.max(1)) as u8).collect(),
+        n,
+        h,
+        w,
+        c,
+    }
+}
+
 /// Named weight tensors loaded from a `.qtw` file.
 pub struct Weights {
     pub tensors: HashMap<String, Tensor>,

@@ -19,6 +19,7 @@ use crate::quant::{
 };
 use crate::runtime::Runtime;
 use crate::search::SearchTrace;
+use crate::util::pool::Pool;
 use crate::util::{stats::mean, Csv, Pcg32, Timer};
 use crate::vta::VtaModel;
 use crate::zoo::{self, ZooModel};
@@ -360,19 +361,38 @@ pub fn fig5(
 ) -> Result<Vec<ConvergenceResult>> {
     let mut results = Vec::new();
     let mut curve_csv = Csv::new(&["model", "algo", "seed", "trial", "best_so_far"]);
+    let workers = Pool::auto();
     for name in available_models(q) {
         let model = q.load_model(&name)?;
         let table = ensure_sweep(q, runtime, &model)?;
         let best = table.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut algos: Vec<&'static str> = Vec::new();
         for algo in crate::coordinator::ALGORITHMS {
             if algo == "xgb_t" && q.transfer_for(&model)?.is_empty() {
                 continue;
             }
+            algos.push(algo);
+        }
+        // the (algorithm x seed) runs are independent given the sweep
+        // table: fan them out, then reduce in the original loop order so
+        // the CSVs and seed-averages match a serial run exactly
+        let jobs: Vec<(&str, u64)> = algos
+            .iter()
+            .flat_map(|&a| seeds.iter().map(move |&s| (a, s)))
+            .collect();
+        let q_ref: &Quantune = q;
+        let model_ref = &model;
+        let table_ref = &table;
+        let traces = workers.map(&jobs, |&(algo, seed)| {
+            let mut oracle = OracleEvaluator::new(table_ref.clone());
+            q_ref.search(model_ref, algo, &mut oracle, 96, seed)
+        })?;
+        let mut trace_it = traces.into_iter();
+        for algo in algos {
             let mut per_seed = Vec::new();
             let mut first_trace = None;
             for &seed in seeds {
-                let mut oracle = OracleEvaluator::new(table.clone());
-                let trace = q.search(&model, algo, &mut oracle, 96, seed)?;
+                let trace = trace_it.next().expect("one trace per job")?;
                 per_seed.push(trace.trials_to_reach(best, eps).unwrap_or(96) as f64);
                 let mut running = f64::NEG_INFINITY;
                 for (t, trial) in trace.trials.iter().enumerate() {
@@ -520,8 +540,11 @@ pub fn fig8(q: &Quantune, eval_n: usize) -> Result<Vec<Fig8Row>> {
         )?;
         let (gacc, _) = measure(&global)?;
 
-        let mut best: Option<(VtaConfig, f64, u64)> = None;
-        for cfg in VtaConfig::space() {
+        // the 12 integer-only configs are independent (calibrate + build
+        // + measure); fan out, then pick the best in config order so
+        // tie-breaking matches the serial loop
+        let cfgs = VtaConfig::space();
+        let measured = Pool::auto().map(&cfgs, |cfg| -> Result<(f64, u64)> {
             let cache = calibrate(
                 &model,
                 &q.calib_pool,
@@ -530,10 +553,14 @@ pub fn fig8(q: &Quantune, eval_n: usize) -> Result<Vec<Fig8Row>> {
                 q.seed,
             )?;
             let vm =
-                VtaModel::build(&model.graph, model.weights_map(), &cache.hists, &cfg)?;
-            let (acc, cyc) = measure(&vm)?;
+                VtaModel::build(&model.graph, model.weights_map(), &cache.hists, cfg)?;
+            measure(&vm)
+        })?;
+        let mut best: Option<(VtaConfig, f64, u64)> = None;
+        for (cfg, r) in cfgs.iter().zip(measured) {
+            let (acc, cyc) = r?;
             if best.map_or(true, |(_, a, c)| acc > a || (acc == a && cyc < c)) {
-                best = Some((cfg, acc, cyc));
+                best = Some((*cfg, acc, cyc));
             }
         }
         let (cfg, acc, cyc) = best.unwrap();

@@ -3,17 +3,64 @@
 //! C[M,N] += A[M,K] * B[K,N], row-major. The m-k-n loop order keeps the
 //! inner loop a contiguous FMA over C/B rows, which LLVM auto-vectorizes;
 //! this is the interpreter's hot path (see EXPERIMENTS.md §Perf).
+//!
+//! Large GEMMs are row-tiled across the worker pool
+//! (`util::pool`): each worker owns a disjoint block of C rows and runs
+//! the identical serial kernel over it, so the parallel result is
+//! bit-exact against the serial one at any thread count. Inside a pool
+//! worker (e.g. under the batch-parallel evaluator) the kernel stays
+//! serial -- `pool::effective_threads` reports 1 there -- to avoid
+//! oversubscription.
 
-/// C += A * B.
-///
+use crate::util::pool;
+
+/// MACs below which row tiling is pure overhead: a ~2M-MAC GEMM runs in
+/// about a millisecond single-core, ~100x the cost of spawning workers.
+const PAR_MIN_MACS: usize = 1 << 21;
+
+/// C += A * B over f32. Automatically row-tiles across the worker pool
+/// when the problem is large enough (see [`gemm_f32_tiled`]).
+pub fn gemm_f32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    let macs = m.saturating_mul(k).saturating_mul(n);
+    let threads = if macs >= PAR_MIN_MACS { pool::effective_threads() } else { 1 };
+    gemm_f32_tiled(m, k, n, a, b, c, threads);
+}
+
+/// C += A * B with an explicit worker count. `threads == 1` is exactly
+/// the serial kernel; `threads > 1` splits C's rows into contiguous
+/// blocks, one scoped thread per block. Exposed so the parity tests and
+/// the perf bench can pin the tiling.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f32_tiled(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let threads = threads.clamp(1, m.max(1));
+    if threads <= 1 || k == 0 || n == 0 {
+        gemm_f32_serial(m, k, n, a, b, c);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (ab, cb) in a.chunks(rows_per * k).zip(c.chunks_mut(rows_per * n)) {
+            scope.spawn(move || gemm_f32_serial(cb.len() / n, k, n, ab, b, cb));
+        }
+    });
+}
+
 /// k is unrolled by 4 (§Perf): each pass over the C row applies four
 /// rank-1 updates, which quarters the C-row traffic and gives the
 /// autovectorizer four independent FMA streams. Post-ReLU activation
 /// rows are zero-heavy, so an all-zero quad still short-circuits.
-pub fn gemm_f32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
+fn gemm_f32_serial(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     let k4 = k / 4 * 4;
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
@@ -48,12 +95,43 @@ pub fn gemm_f32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32
 
 /// C += A * B over i32 (VTA accumulator semantics; no saturation --
 /// accumulators are 32-bit like the hardware's register file and our
-/// operand magnitudes cannot overflow them). Same k-by-4 unroll as the
-/// f32 kernel.
+/// operand magnitudes cannot overflow them). Row-tiled like the f32
+/// kernel.
 pub fn gemm_i32(m: usize, k: usize, n: usize, a: &[i32], b: &[i32], c: &mut [i32]) {
+    let macs = m.saturating_mul(k).saturating_mul(n);
+    let threads = if macs >= PAR_MIN_MACS { pool::effective_threads() } else { 1 };
+    gemm_i32_tiled(m, k, n, a, b, c, threads);
+}
+
+/// Integer counterpart of [`gemm_f32_tiled`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i32_tiled(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i32],
+    b: &[i32],
+    c: &mut [i32],
+    threads: usize,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
+    let threads = threads.clamp(1, m.max(1));
+    if threads <= 1 || k == 0 || n == 0 {
+        gemm_i32_serial(m, k, n, a, b, c);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (ab, cb) in a.chunks(rows_per * k).zip(c.chunks_mut(rows_per * n)) {
+            scope.spawn(move || gemm_i32_serial(cb.len() / n, k, n, ab, b, cb));
+        }
+    });
+}
+
+/// Same k-by-4 unroll as the f32 kernel.
+fn gemm_i32_serial(m: usize, k: usize, n: usize, a: &[i32], b: &[i32], c: &mut [i32]) {
     let k4 = k / 4 * 4;
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
@@ -125,5 +203,32 @@ mod tests {
         let mut c = vec![1.0; 1];
         gemm_f32(1, 1, 1, &[2.0], &[3.0], &mut c);
         assert_eq!(c[0], 7.0);
+    }
+
+    #[test]
+    fn tiled_is_bit_exact_on_ragged_rows() {
+        // m = 5 rows over 8 requested workers: more workers than rows
+        let (m, k, n) = (5, 7, 3);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mut serial = vec![0.5f32; m * n];
+        gemm_f32_tiled(m, k, n, &a, &b, &mut serial, 1);
+        for threads in [2, 3, 8] {
+            let mut par = vec![0.5f32; m * n];
+            gemm_f32_tiled(m, k, n, &a, &b, &mut par, threads);
+            for (x, y) in par.iter().zip(&serial) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_handles_empty() {
+        let mut c: Vec<f32> = Vec::new();
+        gemm_f32_tiled(0, 4, 0, &[], &[], &mut c, 8);
+        assert!(c.is_empty());
+        let mut c1 = vec![1.0f32; 2];
+        gemm_f32_tiled(1, 0, 2, &[], &[], &mut c1, 8);
+        assert_eq!(c1, vec![1.0, 1.0]);
     }
 }

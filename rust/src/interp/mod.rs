@@ -80,9 +80,13 @@ fn weight_matrix(wt: &Tensor, g: usize, groups: usize) -> (Vec<f32>, usize, usiz
     (m, rows, outg)
 }
 
-pub struct Interpreter<'a> {
+/// Generic over the map's value type so callers can hand either owned
+/// tensors (`HashMap<String, Tensor>`, e.g. a model's weight file) or
+/// shared cache entries (`HashMap<String, Arc<Tensor>>` from the
+/// quantizer's weight cache) without copying tensor data.
+pub struct Interpreter<'a, W: std::borrow::Borrow<Tensor> = Tensor> {
     pub graph: &'a Graph,
-    weights: &'a HashMap<String, Tensor>,
+    weights: &'a HashMap<String, W>,
 }
 
 /// Which evaluation semantics to apply.
@@ -92,10 +96,10 @@ enum Mode<'q> {
     Acts(Vec<Tensor>),
 }
 
-impl<'a> Interpreter<'a> {
+impl<'a, W: std::borrow::Borrow<Tensor>> Interpreter<'a, W> {
     /// `weights` must contain every `{layer}_w` / `{layer}_b`. For the
     /// fake-quant mode pass weights already fake-quantized per config.
-    pub fn new(graph: &'a Graph, weights: &'a HashMap<String, Tensor>) -> Self {
+    pub fn new(graph: &'a Graph, weights: &'a HashMap<String, W>) -> Self {
         Interpreter { graph, weights }
     }
 
@@ -124,7 +128,10 @@ impl<'a> Interpreter<'a> {
     }
 
     fn weight(&self, name: &str) -> Result<&Tensor> {
-        self.weights.get(name).ok_or_else(|| anyhow!("missing weight {name}"))
+        self.weights
+            .get(name)
+            .map(std::borrow::Borrow::borrow)
+            .ok_or_else(|| anyhow!("missing weight {name}"))
     }
 
     fn run(&self, x: &Tensor, mut mode: Mode) -> Result<(Tensor, Option<Vec<Tensor>>)> {

@@ -70,7 +70,7 @@ pub fn fp32_vs_fq_b1(
     let w_fq: Vec<xla::Literal> = setup
         .weights
         .iter()
-        .map(tensor_to_literal)
+        .map(|t| tensor_to_literal(t))
         .collect::<Result<_>>()?;
 
     let mut fp32_args: Vec<&xla::Literal> = vec![&x_lit];

@@ -15,6 +15,17 @@
 //! - L1 (python/compile/kernels/): Pallas kernels for the quantization
 //!   hot-spot (fake-quant elementwise + int8 GEMM requantization), checked
 //!   against pure-jnp oracles.
+//!
+//! Parallel evaluation engine: [`util::pool`] is a dependency-free
+//! worker pool (std scoped threads, `QUANTUNE_THREADS` knob) that three
+//! layers of the accuracy-measurement path schedule through -- the
+//! row-tiled GEMM in [`interp::gemm`], batch-level Top-1 measurement in
+//! [`coordinator::InterpEvaluator`] (plus the parallel sweep
+//! `Quantune::sweep_parallel` over its `SharedEvaluator` form), and the
+//! (algorithm x seed) / (VTA config) fan-outs in [`experiments`]. All
+//! parallel paths reduce in input order, so results are bit-identical to
+//! the serial ones at any thread count (rust/tests/parallel.rs enforces
+//! this); see rust/BENCHMARKS.md for the speedup methodology.
 
 pub mod calib;
 pub mod config;

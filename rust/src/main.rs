@@ -17,13 +17,13 @@ use anyhow::{Context, Result};
 use quantune::calib::{calibrate, CalibBackend};
 use quantune::config::Cli;
 use quantune::coordinator::{
-    Evaluator, HloEvaluator, InterpEvaluator, OracleEvaluator, Quantune, ALGORITHMS,
+    HloEvaluator, InterpEvaluator, OracleEvaluator, Quantune, ALGORITHMS,
 };
 use quantune::quant::{
     model_size_bytes, model_size_fp32, Granularity, QuantConfig, VtaConfig,
 };
 use quantune::runtime::Runtime;
-use quantune::util::{fmt_duration, Timer};
+use quantune::util::{fmt_duration, Pool, Timer};
 use quantune::vta::VtaModel;
 use quantune::zoo;
 
@@ -44,7 +44,8 @@ fn print_help() {
         "quantune -- post-training quantization auto-tuner (paper reproduction)\n\
          commands: info | sweep | search | quantize | vta | latency\n\
          common options: --artifacts DIR --models mn,shn,... --seed N\n\
-         see README.md for details"
+         env: QUANTUNE_THREADS=N sizes the worker pool (default: all cores)\n\
+         see README.md and rust/BENCHMARKS.md for details"
     );
 }
 
@@ -97,17 +98,39 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
         let timer = Timer::start();
         let artifacts = q.artifacts.clone();
         let (calib_pool, eval) = (q.calib_pool.clone(), q.eval.clone());
-        let mut evaluator: Box<dyn Evaluator> = match &runtime {
-            Some(rt) => Box::new(HloEvaluator::new(
-                &model, rt, artifacts, &calib_pool, &eval, q.seed,
-            )),
-            None => Box::new(InterpEvaluator::new(&model, &calib_pool, &eval, q.seed)),
-        };
-        let table = q.sweep(&model, evaluator.as_mut(), cli.flag("force"), |i, acc| {
-            if i % 16 == 15 {
-                println!("  [{name}] {}/96 latest top1 {:.2}%", i + 1, acc * 100.0);
+        let table = match &runtime {
+            Some(rt) => {
+                let mut evaluator =
+                    HloEvaluator::new(&model, rt, artifacts, &calib_pool, &eval, q.seed);
+                q.sweep(&model, &mut evaluator, cli.flag("force"), |i, acc| {
+                    if i % 16 == 15 {
+                        println!(
+                            "  [{name}] {}/96 latest top1 {:.2}%",
+                            i + 1,
+                            acc * 100.0
+                        );
+                    }
+                })?
             }
-        })?;
+            None => {
+                // interp backend: the 96 configs fan out across the pool
+                let evaluator = InterpEvaluator::new(&model, &calib_pool, &eval, q.seed);
+                q.sweep_parallel(
+                    &model,
+                    &evaluator,
+                    cli.flag("force"),
+                    &Pool::auto(),
+                    |done, acc| {
+                        if done % 16 == 0 {
+                            println!(
+                                "  [{name}] {done}/96 latest top1 {:.2}%",
+                                acc * 100.0
+                            );
+                        }
+                    },
+                )?
+            }
+        };
         let best = table
             .iter()
             .enumerate()
@@ -125,7 +148,7 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_search(cli: &Cli) -> Result<()> {
-    let mut q = Quantune::open(cli.artifacts())?;
+    let q = Quantune::open(cli.artifacts())?;
     let algo = cli.opt_or("algo", "xgb_t");
     anyhow::ensure!(
         ALGORITHMS.contains(&algo.as_str()),

@@ -41,8 +41,10 @@ pub struct Histogram {
     pub count: u64,
     /// memoized KL threshold (§Perf: the 96-config sweep asks for the
     /// same histogram's threshold once per KL config; the search is
-    /// ~5 ms/tensor, so recomputing dominated `prepare`)
-    kl_cache: std::cell::Cell<Option<f32>>,
+    /// ~5 ms/tensor, so recomputing dominated `prepare`). `OnceLock`
+    /// rather than `Cell` so calibration caches are `Sync` and shareable
+    /// across the worker pool; racing fills compute the same value.
+    kl_cache: std::sync::OnceLock<f32>,
 }
 
 impl Default for Histogram {
@@ -59,7 +61,7 @@ impl Histogram {
             min: f32::INFINITY,
             max: f32::NEG_INFINITY,
             count: 0,
-            kl_cache: std::cell::Cell::new(None),
+            kl_cache: std::sync::OnceLock::new(),
         }
     }
 
@@ -68,7 +70,7 @@ impl Histogram {
         if xs.is_empty() {
             return;
         }
-        self.kl_cache.set(None);
+        self.kl_cache.take();
         let mut absmax = 0f32;
         for &x in xs {
             self.min = self.min.min(x);
@@ -126,7 +128,7 @@ impl Histogram {
     /// TensorRT-style KL threshold search over the |x| histogram
     /// (memoized; see §Perf in EXPERIMENTS.md).
     pub fn kl_threshold(&self) -> f32 {
-        if let Some(t) = self.kl_cache.get() {
+        if let Some(&t) = self.kl_cache.get() {
             return t;
         }
         let width = self.limit / NUM_BINS as f32;
@@ -149,7 +151,8 @@ impl Histogram {
             i += 8; // stride-8 scan: 240 candidates (see DESIGN.md §9)
         }
         let t = (best_i as f32 + 0.5) * width;
-        self.kl_cache.set(Some(t));
+        // a racing worker may have filled it with the same value; ignore
+        let _ = self.kl_cache.set(t);
         t
     }
 

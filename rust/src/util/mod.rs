@@ -1,10 +1,13 @@
-//! Shared utilities: seeded RNG, minimal JSON, statistics, timing, CSV.
+//! Shared utilities: seeded RNG, minimal JSON, statistics, timing, CSV,
+//! and the data-parallel worker pool ([`pool`]).
 
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 
 pub use json::Json;
+pub use pool::Pool;
 pub use rng::Pcg32;
 
 use std::time::Instant;

@@ -1,0 +1,287 @@
+//! Dependency-free data-parallel worker pool over std scoped threads.
+//!
+//! This is the engine behind the parallel evaluation path: the row-tiled
+//! GEMM, the batch-level Top-1 measurement, and the (algorithm x seed x
+//! config) fan-outs in the experiment drivers all schedule through here.
+//!
+//! Design rules (enforced by rust/tests/parallel.rs):
+//! - **Deterministic ordering**: `run`/`map` return results in input
+//!   order no matter which worker produced them, so a parallel reduction
+//!   performed in that order is bit-identical to the serial loop.
+//! - **Panic safety**: a panicking task poisons the pool, remaining
+//!   workers drain, and the call returns an error instead of hanging or
+//!   aborting the process.
+//! - **No nesting**: work items running on a pool worker see
+//!   [`effective_threads`] `== 1`, so nested data parallelism (e.g. the
+//!   tiled GEMM inside a batch-parallel evaluator) serializes instead of
+//!   oversubscribing the machine.
+//!
+//! The worker count comes from `QUANTUNE_THREADS` (or the machine's
+//! available parallelism); threads are spawned per call, which keeps the
+//! pool free of shutdown logic and is noise-level overhead for the
+//! coarse-grained work it schedules (whole eval batches, whole search
+//! runs, multi-ms GEMM tiles).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+thread_local! {
+    static IN_POOL_WORKER: std::cell::Cell<bool> = std::cell::Cell::new(false);
+}
+
+/// Process-wide thread-count override (0 = none). Used by benches that
+/// A/B the engine within one process; takes precedence over the env.
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Set (or clear) the process-wide thread-count override. Intended for
+/// single-threaded harness code (benches); not synchronized with pools
+/// already running.
+pub fn set_thread_override(threads: Option<usize>) {
+    OVERRIDE.store(threads.unwrap_or(0), Ordering::Relaxed);
+}
+
+/// True on a thread currently executing pool work.
+pub fn in_worker() -> bool {
+    IN_POOL_WORKER.with(|w| w.get())
+}
+
+/// Configured worker count: the `set_thread_override` value if any, else
+/// `QUANTUNE_THREADS`, else the machine's available parallelism.
+pub fn default_threads() -> usize {
+    let forced = OVERRIDE.load(Ordering::Relaxed);
+    if forced > 0 {
+        return forced;
+    }
+    if let Some(n) = std::env::var("QUANTUNE_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+    {
+        if n >= 1 {
+            return n;
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Worker count data-parallel code should use *right now*: 1 on a pool
+/// worker (the outer level owns the cores), else [`default_threads`].
+pub fn effective_threads() -> usize {
+    if in_worker() {
+        1
+    } else {
+        default_threads()
+    }
+}
+
+/// A worker-pool configuration. `Copy`-cheap: threads are spawned per
+/// `run`/`map` call as scoped threads.
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// Pool with an explicit worker count (clamped to >= 1).
+    pub fn new(threads: usize) -> Pool {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// Pool sized by [`effective_threads`] (env knob, nesting-aware).
+    pub fn auto() -> Pool {
+        Pool::new(effective_threads())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Apply `f` to every index in `0..n`, returning the outputs in index
+    /// order. Worker panics surface as an `Err`.
+    pub fn run<R, F>(&self, n: usize, f: F) -> Result<Vec<R>>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            // the inline path still marks this thread as a worker so a
+            // 1-thread pool is *fully* serial: nested Pool::auto() and
+            // the tiled GEMM see effective_threads() == 1, same as on a
+            // spawned worker
+            let _guard = WorkerFlag::enter();
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                    Ok(r) => out.push(r),
+                    Err(p) => {
+                        return Err(anyhow!(
+                            "pool worker panicked: {}",
+                            panic_message(p.as_ref())
+                        ))
+                    }
+                }
+            }
+            return Ok(out);
+        }
+
+        let next = AtomicUsize::new(0);
+        let poisoned = AtomicBool::new(false);
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let failure: Mutex<Option<String>> = Mutex::new(None);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    IN_POOL_WORKER.with(|w| w.set(true));
+                    loop {
+                        if poisoned.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                            Ok(r) => *slots[i].lock().unwrap() = Some(r),
+                            Err(p) => {
+                                poisoned.store(true, Ordering::Relaxed);
+                                let mut note = failure.lock().unwrap();
+                                if note.is_none() {
+                                    *note = Some(panic_message(p.as_ref()));
+                                }
+                                break;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        if poisoned.load(Ordering::Relaxed) {
+            let note = failure
+                .lock()
+                .unwrap()
+                .take()
+                .unwrap_or_else(|| "unknown panic".to_string());
+            return Err(anyhow!("pool worker panicked: {note}"));
+        }
+        let mut out = Vec::with_capacity(n);
+        for slot in slots {
+            match slot.into_inner().unwrap() {
+                Some(r) => out.push(r),
+                None => return Err(anyhow!("pool dropped an item (internal bug)")),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Apply `f` to every item of `items`, outputs in input order.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Result<Vec<R>>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        self.run(items.len(), |i| f(&items[i]))
+    }
+}
+
+/// RAII flag for the inline path: marks the calling thread as a pool
+/// worker and restores the previous state on drop (spawned workers just
+/// set the flag — their thread dies with the scope).
+struct WorkerFlag {
+    prev: bool,
+}
+
+impl WorkerFlag {
+    fn enter() -> WorkerFlag {
+        WorkerFlag { prev: IN_POOL_WORKER.with(|w| w.replace(true)) }
+    }
+}
+
+impl Drop for WorkerFlag {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        IN_POOL_WORKER.with(|w| w.set(prev));
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_returns_input_order() {
+        for threads in [1, 2, 5] {
+            let out = Pool::new(threads).run(17, |i| i * 2).unwrap();
+            assert_eq!(out, (0..17).map(|i| i * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn map_over_items() {
+        let items = vec![3u32, 1, 4, 1, 5];
+        let out = Pool::new(4).map(&items, |x| x + 1).unwrap();
+        assert_eq!(out, vec![4, 2, 5, 2, 6]);
+    }
+
+    #[test]
+    fn zero_items_is_empty_ok() {
+        let items: Vec<u32> = Vec::new();
+        assert!(Pool::new(4).map(&items, |x| *x).unwrap().is_empty());
+        assert!(Pool::new(1).run(0, |i| i).unwrap().is_empty());
+    }
+
+    #[test]
+    fn nested_pools_serialize() {
+        let out = Pool::new(4)
+            .run(8, |i| {
+                assert!(in_worker());
+                assert_eq!(effective_threads(), 1);
+                Pool::auto().run(3, move |j| i * 10 + j).unwrap()
+            })
+            .unwrap();
+        assert_eq!(out[2], vec![20, 21, 22]);
+        assert!(!in_worker());
+    }
+
+    #[test]
+    fn single_thread_pool_marks_worker_inline() {
+        let out = Pool::new(1).run(2, |i| (i, in_worker())).unwrap();
+        assert_eq!(out, vec![(0, true), (1, true)]);
+        assert!(!in_worker(), "flag must be restored after the inline run");
+    }
+
+    #[test]
+    fn panic_is_error_not_hang() {
+        for threads in [1, 4] {
+            let err = Pool::new(threads)
+                .run(32, |i| {
+                    assert!(i != 9, "kaboom");
+                    i
+                })
+                .unwrap_err();
+            assert!(format!("{err}").contains("panicked"), "got: {err}");
+        }
+    }
+
+    #[test]
+    fn zero_thread_request_clamps_to_one() {
+        assert_eq!(Pool::new(0).threads(), 1);
+        assert!(default_threads() >= 1);
+    }
+}

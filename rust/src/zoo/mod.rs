@@ -11,7 +11,7 @@ use anyhow::{Context, Result};
 
 use crate::data::Weights;
 use crate::ir::{Graph, Op, Tensor};
-use crate::util::Json;
+use crate::util::{Json, Pcg32};
 
 /// The six paper models, in the paper's order.
 pub const MODELS: [&str; 6] = ["mn", "shn", "sqn", "gn", "rn18", "rn50"];
@@ -138,6 +138,57 @@ pub fn load_all(artifacts: &Path) -> Result<Vec<ZooModel>> {
     }
     anyhow::ensure!(!out.is_empty(), "no models in {}", artifacts.display());
     Ok(out)
+}
+
+/// A small self-contained model (graph + seeded random weights) that
+/// needs no artifact files: conv(3x3, c->2c, relu) -> conv(3x3, 2c->2c,
+/// relu) -> gap -> dense(2c -> classes) on a `hw`x`hw`x`c` input. Used
+/// by the perf bench and the parallel engine's parity/determinism tests.
+pub fn synthetic_model(hw: usize, c: usize, classes: usize, seed: u64) -> Result<ZooModel> {
+    let c2 = 2 * c;
+    let meta_text = format!(
+        r#"{{"name": "syn", "input_shape": [{hw}, {hw}, {c}], "num_classes": {classes},
+        "nodes": [
+          {{"name": "c1", "op": "conv", "inputs": ["input"], "k": 3, "stride": 1,
+           "pad": 1, "in_ch": {c}, "out_ch": {c2}, "groups": 1, "act": "relu"}},
+          {{"name": "c2", "op": "conv", "inputs": ["c1"], "k": 3, "stride": 1,
+           "pad": 1, "in_ch": {c2}, "out_ch": {c2}, "groups": 1, "act": "relu"}},
+          {{"name": "g", "op": "gap", "inputs": ["c2"]}},
+          {{"name": "d", "op": "dense", "inputs": ["g"], "in_dim": {c2},
+           "out_dim": {classes}}}]}}"#
+    );
+    let graph = Graph::from_meta(&Json::parse(&meta_text)?)?;
+    let mut rng = Pcg32::new(seed, 41);
+    let mut tensors = HashMap::new();
+    let mut order = Vec::new();
+    for node in &graph.nodes {
+        let (w_shape, b_len): (Vec<usize>, usize) = match &node.op {
+            Op::Conv { k, in_ch, out_ch, groups, .. } => {
+                (vec![*k, *k, in_ch / groups, *out_ch], *out_ch)
+            }
+            Op::Dense { in_dim, out_dim } => (vec![*in_dim, *out_dim], *out_dim),
+            _ => continue,
+        };
+        let fan_in: usize = w_shape[..w_shape.len() - 1].iter().product();
+        let scale = (2.0 / fan_in.max(1) as f32).sqrt();
+        let wn: usize = w_shape.iter().product();
+        let w = Tensor {
+            shape: w_shape,
+            data: (0..wn).map(|_| rng.normal() * scale).collect(),
+        };
+        let b = Tensor {
+            shape: vec![b_len],
+            data: (0..b_len).map(|_| rng.normal() * 0.05).collect(),
+        };
+        for (suffix, t) in [("w", w), ("b", b)] {
+            let name = format!("{}_{suffix}", node.name);
+            order.push(name.clone());
+            tensors.insert(name, t);
+        }
+    }
+    let weights = Weights { tensors, order };
+    debug_assert_eq!(weights.order, graph.weight_names());
+    Ok(ZooModel { name: "syn".to_string(), graph, weights, fp32_top1: 0.5, batch: 16 })
 }
 
 /// Default artifacts directory: $QUANTUNE_ARTIFACTS or ./artifacts.

@@ -12,7 +12,7 @@ use quantune::quant::{
 use quantune::search::{
     run_search, GeneticSearch, GridSearch, RandomSearch, SearchAlgo, Trial, XgbSearch,
 };
-use quantune::util::{Json, Pcg32};
+use quantune::util::{Json, Pcg32, Pool};
 use quantune::vta::rshift_round;
 use quantune::xgb::{XgbModel, XgbParams};
 
@@ -297,6 +297,57 @@ fn prop_xgb_fits_within_label_range() {
         let imp = m.feature_importance();
         let s: f64 = imp.iter().sum();
         assert!(s == 0.0 || (s - 1.0).abs() < 1e-9);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// worker pool (util::pool)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pool_processes_each_item_exactly_once_in_order() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    props(25, |rng| {
+        let n = rng.below(120);
+        let threads = 1 + rng.below(9);
+        let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let out = Pool::new(threads)
+            .run(n, |i| {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+                i * 3
+            })
+            .unwrap();
+        // output order matches input order...
+        assert_eq!(out, (0..n).map(|i| i * 3).collect::<Vec<_>>());
+        // ...and every item ran exactly once
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    });
+}
+
+#[test]
+fn prop_pool_zero_items_is_empty_ok() {
+    for threads in [1, 2, 8] {
+        assert!(Pool::new(threads).run(0, |i| i).unwrap().is_empty());
+        let none: Vec<u8> = Vec::new();
+        assert!(Pool::new(threads).map(&none, |x| *x).unwrap().is_empty());
+    }
+}
+
+#[test]
+fn prop_pool_worker_panic_surfaces_as_error() {
+    props(10, |rng| {
+        let threads = 1 + rng.below(8);
+        let bad = rng.below(24);
+        let err = Pool::new(threads)
+            .run(24, |i| {
+                assert!(i != bad, "injected failure");
+                i
+            })
+            .unwrap_err();
+        assert!(
+            format!("{err}").contains("panicked"),
+            "threads {threads}: unexpected error {err}"
+        );
     });
 }
 

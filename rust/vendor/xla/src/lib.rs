@@ -1,0 +1,302 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The quantune crate's HLO accuracy-measurement backend drives XLA
+//! through the `xla` bindings (PJRT CPU client, literal upload, compiled
+//! HLO-text executables). Those bindings link a native `xla_extension`
+//! library that is not available in the offline build environment, so
+//! this stub provides the exact API surface quantune uses:
+//!
+//! - host-side [`Literal`] construction (`vec1`, `reshape`, `to_vec`,
+//!   `convert`, `array_shape`, `ty`) is fully functional, so tensor
+//!   marshalling code runs and is testable;
+//! - device entry points ([`PjRtClient::cpu`],
+//!   [`HloModuleProto::from_text_file`], execution) return a descriptive
+//!   error, so every PJRT-dependent path fails fast with a clear message
+//!   instead of breaking the build.
+//!
+//! To enable the real backend, replace the `xla = { path = ... }`
+//! dependency in rust/Cargo.toml with the actual bindings; no quantune
+//! source changes are required.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error: carries a human-readable message, like the real crate.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT is not available in this build (the vendored `xla` \
+         crate is an offline stub; swap rust/vendor/xla for the real bindings \
+         to enable the HLO backend)"
+    ))
+}
+
+/// Element type of a literal (subset the coordinator inspects).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U8,
+    F32,
+    F64,
+}
+
+/// Conversion target type (subset the coordinator requests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    Pred,
+    S32,
+    S64,
+    U8,
+    F32,
+    F64,
+}
+
+/// Typed storage behind a literal. Public only so [`NativeType`] can name
+/// it; treat as an implementation detail.
+#[doc(hidden)]
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    U8(Vec<u8>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::F64(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::I64(v) => v.len(),
+            Data::U8(v) => v.len(),
+        }
+    }
+
+    fn ty(&self) -> ElementType {
+        match self {
+            Data::F32(_) => ElementType::F32,
+            Data::F64(_) => ElementType::F64,
+            Data::I32(_) => ElementType::S32,
+            Data::I64(_) => ElementType::S64,
+            Data::U8(_) => ElementType::U8,
+        }
+    }
+}
+
+/// Rust scalar types a literal can hold.
+pub trait NativeType: Sized + Copy {
+    #[doc(hidden)]
+    fn wrap(data: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn unwrap(data: &Data) -> Option<Vec<Self>>;
+}
+
+macro_rules! native {
+    ($t:ty, $variant:ident) => {
+        impl NativeType for $t {
+            fn wrap(data: Vec<Self>) -> Data {
+                Data::$variant(data)
+            }
+            fn unwrap(data: &Data) -> Option<Vec<Self>> {
+                match data {
+                    Data::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32);
+native!(f64, F64);
+native!(i32, I32);
+native!(i64, I64);
+native!(u8, U8);
+
+/// Host-side array shape (dims only; layout is irrelevant here).
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host-side tensor literal. Fully functional in the stub.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Same data, new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape to {dims:?}: want {want} elements, literal has {}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| Error(format!("to_vec: literal holds {:?}", self.data.ty())))
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (they
+    /// only come back from device execution), so this always errors.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("to_tuple"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(self.data.ty())
+    }
+
+    /// Element-type conversion (host side; f32 target only, which is all
+    /// the coordinator requests).
+    pub fn convert(&self, ty: PrimitiveType) -> Result<Literal> {
+        match ty {
+            PrimitiveType::F32 => {
+                let data = match &self.data {
+                    Data::F32(v) => v.clone(),
+                    Data::F64(v) => v.iter().map(|&x| x as f32).collect(),
+                    Data::I32(v) => v.iter().map(|&x| x as f32).collect(),
+                    Data::I64(v) => v.iter().map(|&x| x as f32).collect(),
+                    Data::U8(v) => v.iter().map(|&x| x as f32).collect(),
+                };
+                Ok(Literal { data: Data::F32(data), dims: self.dims.clone() })
+            }
+            other => Err(Error(format!("convert to {other:?}: unsupported in stub"))),
+        }
+    }
+}
+
+/// Device buffer handle returned by execution. Unconstructible in the
+/// stub (execution always errors first).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle. Unconstructible in the stub.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute"))
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+}
+
+/// Parsed HLO module handle.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("parsing HLO text {path}")))
+    }
+}
+
+/// Computation wrapper around a parsed module.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.ty().unwrap(), ElementType::F32);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn convert_to_f32() {
+        let l = Literal::vec1(&[1i32, -2, 3]);
+        let f = l.convert(PrimitiveType::F32).unwrap();
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![1.0, -2.0, 3.0]);
+    }
+
+    #[test]
+    fn device_paths_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
