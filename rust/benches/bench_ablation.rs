@@ -1,5 +1,8 @@
 //! Ablations of the design choices the paper discusses in §5.2.2:
 //!
+//!   0. search spaces: the same five algorithms over the general (96),
+//!      VTA (12), and a layer-wise mixed-precision space through the one
+//!      generic `run_search` path (always runs, no artifacts needed);
 //!   1. feature preprocessing: one-hot vs categorical encoding (the paper
 //!      picked one-hot because "it shows better accuracy than the
 //!      categorical ones");
@@ -7,7 +10,7 @@
 //!   3. calibration-seed sensitivity of the measured accuracy (how noisy
 //!      is f(g(e, s)) itself).
 //!
-//! All searches run against the sweep ground truth in the database
+//! Ablations 1-3 run against the sweep ground truth in the database
 //! (`quantune sweep` first), so this bench takes seconds.
 //!
 //! ```bash
@@ -16,12 +19,16 @@
 
 use anyhow::Result;
 
-use quantune::coordinator::Quantune;
-use quantune::quant::QuantConfig;
-use quantune::search::{run_search, XgbSearch};
+use quantune::calib::{calibrate, CalibBackend};
+use quantune::coordinator::{self, Quantune, GENERAL_SPACE_TAG};
+use quantune::data::synthetic_dataset;
+use quantune::quant::{
+    general_space, vta_space, ConfigSpace, LayerwiseSpace, QuantConfig, SpaceRef,
+};
+use quantune::search::{run_search, TransferRecord, XgbSearch};
 use quantune::util::stats::mean;
 use quantune::util::{pool, Csv, Pool};
-use quantune::zoo;
+use quantune::zoo::{self, synthetic_model};
 
 /// Mean trials-to-optimum for an XGB search with custom space features.
 /// The per-seed runs are independent and fan out across the worker pool;
@@ -45,15 +52,112 @@ fn measure_xgb(
     mean(&out)
 }
 
+/// Ablation 0: the five algorithms over all three spaces through the one
+/// generic `run_search` path, on an analytic oracle derived from each
+/// space's decoded plan (clip, calib, and the fp32-layer count move the
+/// score). Prints mean trials-to-optimum per (space, algorithm).
+fn space_ablation(seeds: &[u64], eps: f64) -> Result<()> {
+    let model = synthetic_model(8, 4, 4, 3)?;
+    let calib = synthetic_dataset(64, 8, 8, 4, 4, 5);
+    let cache = calibrate(
+        &model,
+        &calib,
+        quantune::quant::CalibCount::C64,
+        &CalibBackend::Interp,
+        1,
+    )?;
+    let base = QuantConfig {
+        calib: quantune::quant::CalibCount::C64,
+        scheme: quantune::quant::Scheme::Symmetric,
+        clip: quantune::quant::Clipping::Max,
+        gran: quantune::quant::Granularity::Tensor,
+        mixed: false,
+    };
+    let layerwise: SpaceRef = std::sync::Arc::new(LayerwiseSpace::rank(
+        &model.name,
+        &model.graph,
+        model.weights_map(),
+        &cache.hists,
+        base,
+        3,
+    )?);
+    let n_layers = model.graph.layers().len();
+    let spaces: Vec<SpaceRef> = vec![general_space(), vta_space(), layerwise];
+
+    println!("== Ablation: search spaces through the generic driver ==");
+    println!(
+        "{:>32} | {:>4} | {:>6} | {:>6} | {:>7} | {:>6} | {:>6}",
+        "space", "|S|", "random", "grid", "genetic", "xgb", "xgb_t"
+    );
+    let mut csv = Csv::new(&["space", "size", "algo", "mean_trials"]);
+    for space in &spaces {
+        // analytic oracle over the decoded plan: every space shares it,
+        // so convergence numbers are comparable across spaces
+        let oracle = |i: usize| -> Result<f64> {
+            let plan = space.plan(i)?;
+            let mask = plan.resolve_mask(n_layers)?;
+            let fp32 = mask.iter().filter(|&&b| b).count();
+            Ok(0.5
+                + 0.15 * (plan.base.clip == quantune::quant::Clipping::Kl) as u8 as f64
+                + 0.1
+                    * (plan.base.calib == quantune::quant::CalibCount::C512) as u8
+                        as f64
+                + 0.04 * fp32 as f64)
+        };
+        let best = (0..space.size())
+            .map(|i| oracle(i).unwrap())
+            .fold(f64::NEG_INFINITY, f64::max);
+        // xgb_t warm-starts from a full "other model's" run of the same
+        // oracle (the content only matters to xgb_t)
+        let transfer: Vec<TransferRecord> = (0..space.size())
+            .map(|i| {
+                Ok(TransferRecord {
+                    features: coordinator::features_for(&model, space.as_ref(), i)?,
+                    accuracy: oracle(i)? as f32,
+                })
+            })
+            .collect::<Result<_>>()?;
+        print!("{:>32} | {:>4} |", space.tag(), space.size());
+        for algo in ["random", "grid", "genetic", "xgb", "xgb_t"] {
+            let per_seed = Pool::auto().map(seeds, |&seed| -> Result<f64> {
+                let t = if algo == "xgb_t" { transfer.clone() } else { Vec::new() };
+                let mut s = coordinator::make_algorithm(algo, &model, space, t, seed)?;
+                let trace = run_search(s.as_mut(), space.size(), &oracle)?;
+                Ok(trace.trials_to_reach(best, eps).unwrap_or(space.size()) as f64)
+            })?;
+            let per_seed: Vec<f64> = per_seed.into_iter().collect::<Result<_>>()?;
+            let m = mean(&per_seed);
+            print!(" {m:>6.1} |");
+            csv.row(&[
+                space.tag(),
+                space.size().to_string(),
+                algo.to_string(),
+                format!("{m:.1}"),
+            ]);
+        }
+        println!();
+    }
+    csv.write_file(&quantune::experiments::result_path("ablation_spaces.csv"))?;
+    Ok(())
+}
+
 fn main() -> Result<()> {
     println!("worker pool: {} threads (QUANTUNE_THREADS)\n", pool::default_threads());
-    let q = Quantune::open(zoo::artifacts_dir())?;
     let seeds: Vec<u64> = (0..7).collect();
     let eps = 1e-3;
+    space_ablation(&seeds, eps)?;
+
+    let q = match Quantune::open(zoo::artifacts_dir()) {
+        Ok(q) => q,
+        Err(e) => {
+            eprintln!("\n[skip] artifact-backed ablations: {e:#} (run `make artifacts`)");
+            return Ok(());
+        }
+    };
     let models: Vec<String> = zoo::MODELS
         .iter()
         .filter(|m| {
-            q.db.has_full_sweep(m, QuantConfig::SPACE_SIZE)
+            q.db.has_full_sweep(m, GENERAL_SPACE_TAG, QuantConfig::SPACE_SIZE)
                 && q.artifacts.join(format!("{m}_meta.json")).exists()
         })
         .map(|s| s.to_string())
@@ -69,7 +173,7 @@ fn main() -> Result<()> {
     let mut csv = Csv::new(&["model", "one_hot_trials", "categorical_trials"]);
     for name in &models {
         let model = q.load_model(name)?;
-        let table = q.db.accuracy_table(name, QuantConfig::SPACE_SIZE);
+        let table = q.db.accuracy_table(name, GENERAL_SPACE_TAG, QuantConfig::SPACE_SIZE);
         let arch = model.arch_features();
         let one_hot: Vec<Vec<f32>> = (0..96)
             .map(|i| {
@@ -110,7 +214,7 @@ fn main() -> Result<()> {
         for depth in [2usize, 4, 6] {
             let mut per_model = Vec::new();
             for name in &models {
-                let table = q.db.accuracy_table(name, QuantConfig::SPACE_SIZE);
+                let table = q.db.accuracy_table(name, GENERAL_SPACE_TAG, QuantConfig::SPACE_SIZE);
                 let feats = feats_for(name)?;
                 per_model.push(measure_xgb(&table, &feats, &seeds, eps, |a| {
                     a.params.eta = eta;
@@ -130,7 +234,7 @@ fn main() -> Result<()> {
     for e in [0.0f64, 1e-3, 5e-3, 1e-2] {
         let mut per_model = Vec::new();
         for name in &models {
-            let table = q.db.accuracy_table(name, QuantConfig::SPACE_SIZE);
+            let table = q.db.accuracy_table(name, GENERAL_SPACE_TAG, QuantConfig::SPACE_SIZE);
             let feats = feats_for(name)?;
             per_model.push(measure_xgb(&table, &feats, &seeds, e, |_| {}));
         }

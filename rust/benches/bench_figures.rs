@@ -1,15 +1,18 @@
-//! Regenerates the paper's Figures 2, 3, 5, 6, 7, 8, 9 (DESIGN.md §5).
+//! Regenerates the paper's Figures 2, 3, 5, 6, 7, 8, 9 (DESIGN.md §5)
+//! plus the layer-wise mixed-precision Pareto series (`pareto`).
 //!
 //! ```bash
 //! cargo bench --offline --bench bench_figures           # all figures
 //! cargo bench --offline --bench bench_figures -- fig5   # one figure
+//! cargo bench --offline --bench bench_figures -- pareto # layer-wise series
 //! ```
 //!
 //! Output: stdout + CSVs under results/ (one series per figure).
 //! `QUANTUNE_THREADS` sizes the worker pool behind the sweep, search
 //! fan-out, and VTA config exploration. Figures that measure through
 //! PJRT are skipped with a notice when the backend is unavailable; the
-//! interpreter-backed fig8 always runs.
+//! interpreter-backed fig8 and the synthetic `pareto` series always run
+//! (the latter even without artifacts).
 
 use anyhow::Result;
 
@@ -25,16 +28,69 @@ fn need_rt<'a>(runtime: Option<&'a Runtime>, what: &str) -> Option<&'a Runtime> 
     runtime
 }
 
+fn print_pareto(rows: &[exp::LayerwiseParetoRow]) {
+    println!(
+        "{:>28} | {:>9} | {:>9} | {:>11} | frontier",
+        "mask", "fp32/all", "top1", "quant bytes"
+    );
+    for r in rows {
+        println!(
+            "{:>28} | {:>4}/{:<4} | {:>8.2}% | {:>11} | {}",
+            r.label,
+            r.fp32_layers,
+            r.total_layers,
+            r.accuracy * 100.0,
+            r.quant_bytes,
+            if r.on_frontier { "*" } else { "" }
+        );
+    }
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let want = |t: &str| {
         args.iter().all(|a| a.starts_with("--")) || args.iter().any(|a| a == t)
     };
-    let mut q = Quantune::open(zoo::artifacts_dir())?;
+
+    if want("pareto") {
+        println!("== Layer-wise Pareto: synthetic fragile model (no artifacts) ==");
+        print_pareto(&exp::pareto_layerwise_synthetic()?);
+    }
+
+    let mut q = match Quantune::open(zoo::artifacts_dir()) {
+        Ok(q) => q,
+        Err(e) => {
+            eprintln!("[skip] artifact-backed figures: {e:#} (run `make artifacts`)");
+            return Ok(());
+        }
+    };
     println!(
         "worker pool: {} threads (QUANTUNE_THREADS)",
         quantune::util::pool::default_threads()
     );
+
+    if want("pareto") {
+        println!("\n== Layer-wise Pareto per model (interpreter-backed) ==");
+        for name in exp::available_models(&q) {
+            let model = q.load_model(&name)?;
+            let base = q
+                .db
+                .best_for(&name)
+                .map(|(c, _)| c)
+                .unwrap_or_else(Quantune::tensorrt_like_baseline);
+            println!("-- {name} (base {}) --", base.slug());
+            let rows = exp::pareto_layerwise(
+                &model,
+                &q.calib_pool,
+                &q.eval,
+                base,
+                4,
+                q.seed,
+                &format!("pareto_layerwise_{name}.csv"),
+            )?;
+            print_pareto(&rows);
+        }
+    }
     // figures 2/3/5/6/7/9 measure through PJRT; fig8 (VTA) is
     // interpreter-backed and still runs when the backend is unavailable
     let runtime = match Runtime::cpu() {

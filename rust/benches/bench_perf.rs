@@ -193,15 +193,15 @@ fn artifact_benches() -> Result<()> {
     })?;
 
     // ---- quantized-model preparation: cold vs warm weight cache ----
-    let cfg = QuantConfig::from_index(70)?;
+    let plan: quantune::quant::QuantPlan = QuantConfig::from_index(70)?.into();
     bench("prepare quantized setup (no cache)", 20, || {
-        std::hint::black_box(prepare(&model, &cache, &cfg)?);
+        std::hint::black_box(prepare(&model, &cache, &plan)?);
         Ok(())
     })?;
     let wcache = WeightCache::new();
-    prepare_cached(&model, &cache, &cfg, &wcache)?;
+    prepare_cached(&model, &cache, &plan, &wcache)?;
     bench("prepare quantized setup (warm cache)", 20, || {
-        std::hint::black_box(prepare_cached(&model, &cache, &cfg, &wcache)?);
+        std::hint::black_box(prepare_cached(&model, &cache, &plan, &wcache)?);
         Ok(())
     })?;
     let w = model.weights.get("conv10_w").or_else(|_| {
@@ -248,7 +248,7 @@ fn artifact_benches() -> Result<()> {
     })?;
 
     // ---- interpreter fq forward via full setup ----
-    let setup = prepare(&model, &cache, &cfg)?;
+    let setup = prepare(&model, &cache, &plan)?;
     let aq = &setup.aq;
     let weights_fq: std::collections::HashMap<String, std::sync::Arc<Tensor>> = model
         .weights

@@ -8,8 +8,8 @@
 
 use anyhow::{Context, Result};
 
-use quantune::coordinator::{OracleEvaluator, Quantune, ALGORITHMS};
-use quantune::quant::QuantConfig;
+use quantune::coordinator::{OracleEvaluator, Quantune, ALGORITHMS, GENERAL_SPACE_TAG};
+use quantune::quant::{general_space, QuantConfig};
 use quantune::util::stats::mean;
 use quantune::zoo;
 
@@ -18,7 +18,9 @@ fn main() -> Result<()> {
     let model_name =
         std::env::args().nth(1).unwrap_or_else(|| "mn".to_string());
     let model = q.load_model(&model_name)?;
-    let table = q.db.accuracy_table(&model.name, QuantConfig::SPACE_SIZE);
+    let space = general_space();
+    let table =
+        q.db.accuracy_table(&model.name, GENERAL_SPACE_TAG, QuantConfig::SPACE_SIZE);
     anyhow::ensure!(
         table.iter().all(|a| !a.is_nan()),
         "no full sweep for {model_name}; run `quantune sweep --models {model_name}`"
@@ -32,7 +34,7 @@ fn main() -> Result<()> {
 
     // xgb_t needs other models' sweeps
     let transfer_ready = !q
-        .transfer_for(&model)
+        .transfer_for(&model, space.as_ref())
         .context("loading transfer records")?
         .is_empty();
 
@@ -48,7 +50,7 @@ fn main() -> Result<()> {
         let mut curves = [0.0f64; 4];
         for &seed in &seeds {
             let mut oracle = OracleEvaluator::new(table.clone());
-            let trace = q.search(&model, algo, &mut oracle, 96, seed)?;
+            let trace = q.search(&model, &space, algo, &mut oracle, 96, seed)?;
             let t = trace.trials_to_reach(best, 1e-3).unwrap_or(96) as f64;
             to_best.push(t);
             for (i, &n) in [1usize, 4, 16, 48].iter().enumerate() {

@@ -1,8 +1,12 @@
 //! The trial database D = {(e_i, s_i, c_i)} (paper §5.2).
 //!
-//! Every measured (model, config, accuracy) triple is appended here; the
-//! transfer-learning search (XGB-T) warm-starts from the records of
-//! *other* models. Persisted as JSON so runs accumulate across processes.
+//! Every measured (model, space, config, accuracy) record is appended
+//! here; the transfer-learning search (XGB-T) warm-starts from the
+//! records of *other* models measured in the *same* space -- the space
+//! tag keeps feature vectors from incompatible spaces (general vs VTA vs
+//! a layer-wise space) from ever being mixed into one cost model.
+//! Persisted as JSON so runs accumulate across processes; records
+//! written before the space tag existed load as the general space.
 
 use std::path::{Path, PathBuf};
 
@@ -12,9 +16,14 @@ use crate::quant::QuantConfig;
 use crate::search::TransferRecord;
 use crate::util::Json;
 
+/// Space tag of the 96-element general space (the pre-tag default).
+pub const GENERAL_SPACE_TAG: &str = "general";
+
 #[derive(Clone, Debug)]
 pub struct Record {
     pub model: String,
+    /// `ConfigSpace::tag()` of the space `config` indexes into.
+    pub space: String,
     pub config: usize,
     pub accuracy: f64,
     /// seconds it took to measure (Table 2 bookkeeping)
@@ -39,9 +48,11 @@ impl Database {
         }
         let json = Json::from_file(path)?;
         let mut records = Vec::new();
+        let default_space = Json::Str(GENERAL_SPACE_TAG.to_string());
         for r in json.get("records")?.as_arr()? {
             records.push(Record {
                 model: r.get("model")?.as_str()?.to_string(),
+                space: r.get_or("space", &default_space).as_str()?.to_string(),
                 config: r.get("config")?.as_usize()?,
                 accuracy: r.get("accuracy")?.as_f64()?,
                 measure_secs: r.get("measure_secs")?.as_f64()?,
@@ -62,6 +73,7 @@ impl Database {
             .map(|r| {
                 Json::obj(vec![
                     ("model", Json::str(r.model.clone())),
+                    ("space", Json::str(r.space.clone())),
                     ("config", Json::num(r.config as f64)),
                     ("accuracy", Json::num(r.accuracy)),
                     ("measure_secs", Json::num(r.measure_secs)),
@@ -71,33 +83,39 @@ impl Database {
         Json::obj(vec![("records", Json::Arr(records))]).write_file(path)
     }
 
-    /// Accuracy table (index -> best-known accuracy) for one model; holes
-    /// are NaN.
-    pub fn accuracy_table(&self, model: &str, space: usize) -> Vec<f64> {
-        let mut t = vec![f64::NAN; space];
-        for r in self.records.iter().filter(|r| r.model == model) {
-            if r.config < space {
+    /// Accuracy table (index -> best-known accuracy) for one model in
+    /// one space; holes are NaN. Duplicate (model, config) records keep
+    /// the maximum measured accuracy, so a re-measured config can only
+    /// improve the table.
+    pub fn accuracy_table(&self, model: &str, space: &str, size: usize) -> Vec<f64> {
+        let mut t = vec![f64::NAN; size];
+        for r in
+            self.records.iter().filter(|r| r.model == model && r.space == space)
+        {
+            if r.config < size && (t[r.config].is_nan() || r.accuracy > t[r.config]) {
                 t[r.config] = r.accuracy;
             }
         }
         t
     }
 
-    /// Does the database hold a full sweep for `model`?
-    pub fn has_full_sweep(&self, model: &str, space: usize) -> bool {
-        self.accuracy_table(model, space).iter().all(|a| !a.is_nan())
+    /// Does the database hold a full sweep for `model` in `space`?
+    pub fn has_full_sweep(&self, model: &str, space: &str, size: usize) -> bool {
+        self.accuracy_table(model, space, size).iter().all(|a| !a.is_nan())
     }
 
-    /// Transfer-learning records from every model EXCEPT `exclude`.
-    /// `features` maps (model, config index) -> feature vector.
+    /// Transfer-learning records in `space` from every model EXCEPT
+    /// `exclude`. `features` maps (model, config index) -> feature
+    /// vector.
     pub fn transfer_records(
         &self,
         exclude: &str,
+        space: &str,
         mut features: impl FnMut(&str, usize) -> Option<Vec<f32>>,
     ) -> Vec<TransferRecord> {
         let mut out = Vec::new();
         for r in &self.records {
-            if r.model == exclude {
+            if r.model == exclude || r.space != space {
                 continue;
             }
             if let Some(f) = features(&r.model, r.config) {
@@ -107,11 +125,11 @@ impl Database {
         out
     }
 
-    /// Best (config, accuracy) for a model.
+    /// Best (config, accuracy) for a model in the general space.
     pub fn best_for(&self, model: &str) -> Option<(QuantConfig, f64)> {
         self.records
             .iter()
-            .filter(|r| r.model == model)
+            .filter(|r| r.model == model && r.space == GENERAL_SPACE_TAG)
             .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
             .and_then(|r| QuantConfig::from_index(r.config).ok().map(|c| (c, r.accuracy)))
     }
@@ -122,7 +140,13 @@ mod tests {
     use super::*;
 
     fn rec(model: &str, config: usize, acc: f64) -> Record {
-        Record { model: model.into(), config, accuracy: acc, measure_secs: 0.1 }
+        Record {
+            model: model.into(),
+            space: GENERAL_SPACE_TAG.into(),
+            config,
+            accuracy: acc,
+            measure_secs: 0.1,
+        }
     }
 
     #[test]
@@ -134,23 +158,47 @@ mod tests {
         {
             let mut db = Database::open(&path).unwrap();
             db.add(rec("mn", 3, 0.7));
-            db.add(rec("shn", 5, 0.6));
+            db.add(Record { space: "vta".into(), ..rec("shn", 5, 0.6) });
             db.save().unwrap();
         }
         let db = Database::open(&path).unwrap();
         assert_eq!(db.records.len(), 2);
         assert_eq!(db.records[0].model, "mn");
         assert_eq!(db.records[0].config, 3);
+        assert_eq!(db.records[0].space, GENERAL_SPACE_TAG);
+        assert_eq!(db.records[1].space, "vta");
     }
 
     #[test]
-    fn transfer_excludes_target_model() {
+    fn legacy_records_without_space_load_as_general() {
+        let dir = std::env::temp_dir().join("quantune_db_legacy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("db.json");
+        std::fs::write(
+            &path,
+            r#"{"records": [{"model": "mn", "config": 4, "accuracy": 0.5,
+                "measure_secs": 0.1}]}"#,
+        )
+        .unwrap();
+        let db = Database::open(&path).unwrap();
+        assert_eq!(db.records.len(), 1);
+        assert_eq!(db.records[0].space, GENERAL_SPACE_TAG);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn transfer_excludes_target_model_and_other_spaces() {
         let mut db = Database::in_memory();
         db.add(rec("mn", 0, 0.5));
         db.add(rec("shn", 1, 0.6));
-        let recs = db.transfer_records("mn", |_, i| Some(vec![i as f32]));
+        db.add(Record { space: "vta".into(), ..rec("shn", 2, 0.9) });
+        let recs =
+            db.transfer_records("mn", GENERAL_SPACE_TAG, |_, i| Some(vec![i as f32]));
         assert_eq!(recs.len(), 1);
         assert_eq!(recs[0].accuracy, 0.6);
+        let vta = db.transfer_records("mn", "vta", |_, i| Some(vec![i as f32]));
+        assert_eq!(vta.len(), 1);
+        assert_eq!(vta[0].accuracy, 0.9);
     }
 
     #[test]
@@ -158,13 +206,39 @@ mod tests {
         let mut db = Database::in_memory();
         db.add(rec("mn", 0, 0.5));
         db.add(rec("mn", 2, 0.9));
-        let t = db.accuracy_table("mn", 4);
+        let t = db.accuracy_table("mn", GENERAL_SPACE_TAG, 4);
         assert_eq!(t[0], 0.5);
         assert!(t[1].is_nan());
         assert_eq!(t[2], 0.9);
-        assert!(!db.has_full_sweep("mn", 4));
+        assert!(!db.has_full_sweep("mn", GENERAL_SPACE_TAG, 4));
         let (cfg, acc) = db.best_for("mn").unwrap();
         assert_eq!(cfg.index(), 2);
         assert_eq!(acc, 0.9);
+    }
+
+    #[test]
+    fn accuracy_table_keeps_the_max_on_duplicates() {
+        // a re-measured config must never degrade the table ("best-known
+        // accuracy"), regardless of record order
+        let mut db = Database::in_memory();
+        db.add(rec("mn", 1, 0.8));
+        db.add(rec("mn", 1, 0.3)); // noisy re-measurement, later in time
+        db.add(rec("mn", 0, 0.1));
+        db.add(rec("mn", 0, 0.4));
+        let t = db.accuracy_table("mn", GENERAL_SPACE_TAG, 2);
+        assert_eq!(t[0], 0.4);
+        assert_eq!(t[1], 0.8);
+    }
+
+    #[test]
+    fn tables_are_separated_by_space() {
+        let mut db = Database::in_memory();
+        db.add(rec("mn", 0, 0.5));
+        db.add(Record { space: "vta".into(), ..rec("mn", 0, 0.9) });
+        let g = db.accuracy_table("mn", GENERAL_SPACE_TAG, 1);
+        let v = db.accuracy_table("mn", "vta", 1);
+        assert_eq!(g[0], 0.5);
+        assert_eq!(v[0], 0.9);
+        assert!(db.has_full_sweep("mn", "vta", 1));
     }
 }

@@ -30,7 +30,7 @@ use crate::calib::{calibrate, CalibBackend, CalibrationCache};
 use crate::data::Dataset;
 use crate::interp::{argmax_batch, Interpreter};
 use crate::ir::Tensor;
-use crate::quant::{CalibCount, QuantConfig};
+use crate::quant::{general_space, CalibCount, ConfigSpace, QuantPlan, SpaceRef};
 use crate::runtime::{tensor_to_literal, Runtime};
 use crate::util::pool::Pool;
 use crate::util::Timer;
@@ -96,6 +96,20 @@ impl CalibStore {
         *guard = Some(built.clone());
         Ok(built)
     }
+
+    /// Seed a prebuilt cache so the first measurement at `count` reuses
+    /// it instead of recalibrating (callers that already calibrated --
+    /// e.g. to rank layer sensitivity -- hand their cache over here).
+    pub fn put(&self, count: CalibCount, cache: Arc<CalibrationCache>) {
+        let slot: CalibSlot = self
+            .caches
+            .lock()
+            .unwrap()
+            .entry(count)
+            .or_insert_with(|| Arc::new(Mutex::new(None)))
+            .clone();
+        *slot.lock().unwrap() = Some(cache);
+    }
 }
 
 /// PJRT-backed evaluator (the production path).
@@ -105,6 +119,7 @@ pub struct HloEvaluator<'a> {
     pub artifacts: PathBuf,
     pub calib_pool: &'a Dataset,
     pub eval: &'a Dataset,
+    space: SpaceRef,
     calib: CalibStore,
     wcache: WeightCache,
     memo: Mutex<HashMap<usize, f64>>,
@@ -126,6 +141,7 @@ impl<'a> HloEvaluator<'a> {
             artifacts,
             calib_pool,
             eval,
+            space: general_space(),
             calib: CalibStore::new(seed),
             wcache: WeightCache::new(),
             memo: Mutex::new(HashMap::new()),
@@ -133,11 +149,19 @@ impl<'a> HloEvaluator<'a> {
         }
     }
 
-    fn top1_fq(&self, cfg: &QuantConfig) -> Result<f64> {
+    /// Measure configs of `space` instead of the default general space
+    /// (config indices passed to `measure` are then indices into it).
+    pub fn with_space(mut self, space: SpaceRef) -> Self {
+        self.space = space;
+        self
+    }
+
+    fn top1_fq(&self, plan: &QuantPlan) -> Result<f64> {
         let backend =
             CalibBackend::Hlo { runtime: self.runtime, artifacts: &self.artifacts };
-        let cache = self.calib.get(self.model, self.calib_pool, cfg.calib, &backend)?;
-        let setup = prepare_cached(self.model, cache.as_ref(), cfg, &self.wcache)?;
+        let cache =
+            self.calib.get(self.model, self.calib_pool, plan.base.calib, &backend)?;
+        let setup = prepare_cached(self.model, cache.as_ref(), plan, &self.wcache)?;
         let exe = self
             .runtime
             .load(&self.artifacts.join(format!("{}_fq.hlo.txt", self.model.name)))?;
@@ -197,9 +221,9 @@ impl<'a> HloEvaluator<'a> {
         if let Some(&a) = self.memo.lock().unwrap().get(&config) {
             return Ok(a);
         }
-        let cfg = QuantConfig::from_index(config)?;
+        let plan = self.space.plan(config)?;
         let t = Timer::start();
-        let acc = self.top1_fq(&cfg)?;
+        let acc = self.top1_fq(&plan)?;
         self.measure_times.lock().unwrap().push(t.secs());
         self.memo.lock().unwrap().insert(config, acc);
         Ok(acc)
@@ -222,6 +246,7 @@ pub struct InterpEvaluator<'a> {
     pub model: &'a ZooModel,
     pub calib_pool: &'a Dataset,
     pub eval: &'a Dataset,
+    space: SpaceRef,
     calib: CalibStore,
     wcache: WeightCache,
     memo: Mutex<HashMap<usize, f64>>,
@@ -240,6 +265,7 @@ impl<'a> InterpEvaluator<'a> {
             model,
             calib_pool,
             eval,
+            space: general_space(),
             calib: CalibStore::new(seed),
             wcache: WeightCache::new(),
             memo: Mutex::new(HashMap::new()),
@@ -254,6 +280,20 @@ impl<'a> InterpEvaluator<'a> {
         self.workers = Pool::new(threads);
         self
     }
+
+    /// Measure configs of `space` instead of the default general space
+    /// (config indices passed to `measure` are then indices into it).
+    pub fn with_space(mut self, space: SpaceRef) -> Self {
+        self.space = space;
+        self
+    }
+
+    /// Seed a prebuilt calibration cache (must match this evaluator's
+    /// model and seed) so measurements at `count` skip recalibration.
+    pub fn with_calibration(self, count: CalibCount, cache: Arc<CalibrationCache>) -> Self {
+        self.calib.put(count, cache);
+        self
+    }
 }
 
 impl SharedEvaluator for InterpEvaluator<'_> {
@@ -261,15 +301,15 @@ impl SharedEvaluator for InterpEvaluator<'_> {
         if let Some(&a) = self.memo.lock().unwrap().get(&config) {
             return Ok(a);
         }
-        let cfg = QuantConfig::from_index(config)?;
+        let plan = self.space.plan(config)?;
         let t = Timer::start();
         let cache = self.calib.get(
             self.model,
             self.calib_pool,
-            cfg.calib,
+            plan.base.calib,
             &CalibBackend::Interp,
         )?;
-        let setup = prepare_cached(self.model, cache.as_ref(), &cfg, &self.wcache)?;
+        let setup = prepare_cached(self.model, cache.as_ref(), &plan, &self.wcache)?;
         // Arc clones only: warm weight-cache hits share tensor storage
         // with the cache instead of copying it per measurement
         let weights: HashMap<String, Arc<Tensor>> = self

@@ -5,28 +5,35 @@
 //! search loop, the trial database `D`, and accuracy measurement through
 //! the PJRT runtime / interpreter / VTA simulator backends. Python never
 //! appears here -- the HLO artifacts are self-contained.
+//!
+//! Everything is generic over a [`ConfigSpace`]: the same sweep, search,
+//! transfer-learning, and database plumbing drives the 96-element
+//! general space, the 12-element VTA space, and per-model layer-wise
+//! mixed-precision spaces (`Quantune::layerwise_space`).
 
 pub mod database;
 pub mod devices;
 pub mod evaluator;
 pub mod quantizer;
 
-pub use database::{Database, Record};
+pub use database::{Database, Record, GENERAL_SPACE_TAG};
 pub use devices::{DeviceProfile, DEVICES};
 pub use evaluator::{
     Evaluator, HloEvaluator, InterpEvaluator, OracleEvaluator, SharedEvaluator,
 };
 pub use quantizer::{
-    act_params_tensor, mixed_precision_bypass, prepare, prepare_cached, QuantizedSetup,
-    WeightCache, WeightVariant,
+    act_params_tensor, fp32_layer_bypass, mixed_precision_bypass, prepare,
+    prepare_cached, QuantizedSetup, WeightCache, WeightVariant,
 };
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::calib::{calibrate, CalibBackend};
 use crate::data::Dataset;
-use crate::quant::QuantConfig;
+use crate::quant::{ConfigSpace, LayerwiseSpace, QuantConfig, SpaceRef};
 use crate::search::{
     run_search, GeneticSearch, GridSearch, RandomSearch, SearchAlgo, SearchTrace,
     TransferRecord, XgbSearch,
@@ -38,35 +45,43 @@ use crate::zoo::{self, ZooModel};
 /// The five search algorithms of Fig 5/6, by CLI name.
 pub const ALGORITHMS: [&str; 5] = ["random", "grid", "genetic", "xgb", "xgb_t"];
 
-/// Feature vector of (model, config): arch blocks `e` ++ config one-hot
-/// `s` (paper §5.1; 10 + 13 = 23 dims).
-pub fn features_for(model: &ZooModel, config: usize) -> Result<Vec<f32>> {
+/// Feature vector of (model, config): arch blocks `e` ++ the space's
+/// config features `s` (paper §5.1; 10 + 13 = 23 dims for the general
+/// space).
+pub fn features_for(
+    model: &ZooModel,
+    space: &dyn ConfigSpace,
+    config: usize,
+) -> Result<Vec<f32>> {
     let mut f = model.arch_features();
-    f.extend(QuantConfig::from_index(config)?.one_hot());
+    f.extend(space.features(config)?);
     Ok(f)
 }
 
 /// Feature vectors for the whole space of one model.
-pub fn space_features(model: &ZooModel) -> Result<Vec<Vec<f32>>> {
-    (0..QuantConfig::SPACE_SIZE).map(|i| features_for(model, i)).collect()
+pub fn space_features(model: &ZooModel, space: &dyn ConfigSpace) -> Result<Vec<Vec<f32>>> {
+    (0..space.size()).map(|i| features_for(model, space, i)).collect()
 }
 
-/// Construct a search algorithm by name. `transfer` is only consumed by
-/// `xgb_t` (the paper's XGB+transfer-learning variant).
+/// Construct a search algorithm by name over `space`. `transfer` is only
+/// consumed by `xgb_t` (the paper's XGB+transfer-learning variant).
 pub fn make_algorithm(
     name: &str,
     model: &ZooModel,
+    space: &SpaceRef,
     transfer: Vec<TransferRecord>,
     seed: u64,
 ) -> Result<Box<dyn SearchAlgo>> {
     Ok(match name {
-        "random" => Box::new(RandomSearch::new(QuantConfig::SPACE_SIZE, seed)),
-        "grid" => Box::new(GridSearch::new(QuantConfig::SPACE_SIZE, seed)),
-        "genetic" => Box::new(GeneticSearch::new(seed)),
-        "xgb" => Box::new(XgbSearch::new(space_features(model)?, seed)),
-        "xgb_t" => {
-            Box::new(XgbSearch::with_transfer(space_features(model)?, transfer, seed))
-        }
+        "random" => Box::new(RandomSearch::new(space.size(), seed)),
+        "grid" => Box::new(GridSearch::new(space.size(), seed)),
+        "genetic" => Box::new(GeneticSearch::new(space.clone(), seed)),
+        "xgb" => Box::new(XgbSearch::new(space_features(model, space.as_ref())?, seed)),
+        "xgb_t" => Box::new(XgbSearch::with_transfer(
+            space_features(model, space.as_ref())?,
+            transfer,
+            seed,
+        )),
         other => anyhow::bail!("unknown algorithm {other:?} (try {ALGORITHMS:?})"),
     })
 }
@@ -94,26 +109,57 @@ impl Quantune {
         zoo::ZooModel::load(&self.artifacts, name)
     }
 
-    /// Exhaustive sweep of the 96-config space for one model (Table 1 /
-    /// Fig 2 ground truth). Results are persisted in the database; an
-    /// existing full sweep is reused unless `force`.
+    /// Build the layer-wise mixed-precision space for `model` on top of
+    /// `base`: calibrate through the interpreter, rank every weighted
+    /// layer's quantization fragility, and free the top-`k` layers.
+    pub fn layerwise_space(
+        &self,
+        model: &ZooModel,
+        base: QuantConfig,
+        k: usize,
+    ) -> Result<SpaceRef> {
+        let cache = calibrate(
+            model,
+            &self.calib_pool,
+            base.calib,
+            &CalibBackend::Interp,
+            self.seed,
+        )?;
+        Ok(Arc::new(LayerwiseSpace::rank(
+            &model.name,
+            &model.graph,
+            model.weights_map(),
+            &cache.hists,
+            base,
+            k,
+        )?))
+    }
+
+    /// Exhaustive sweep of `space` for one model (Table 1 / Fig 2 ground
+    /// truth for the general space). Results are persisted in the
+    /// database under the space's tag; an existing full sweep is reused
+    /// unless `force`.
     pub fn sweep(
         &mut self,
         model: &ZooModel,
+        space: &dyn ConfigSpace,
         evaluator: &mut dyn Evaluator,
         force: bool,
         mut progress: impl FnMut(usize, f64),
     ) -> Result<Vec<f64>> {
-        if !force && self.db.has_full_sweep(&model.name, QuantConfig::SPACE_SIZE) {
-            return Ok(self.db.accuracy_table(&model.name, QuantConfig::SPACE_SIZE));
+        let tag = space.tag();
+        let size = space.size();
+        if !force && self.db.has_full_sweep(&model.name, &tag, size) {
+            return Ok(self.db.accuracy_table(&model.name, &tag, size));
         }
-        let mut table = vec![f64::NAN; QuantConfig::SPACE_SIZE];
-        for i in 0..QuantConfig::SPACE_SIZE {
+        let mut table = vec![f64::NAN; size];
+        for (i, slot) in table.iter_mut().enumerate() {
             let t = Timer::start();
             let acc = evaluator.measure(i)?;
-            table[i] = acc;
+            *slot = acc;
             self.db.add(Record {
                 model: model.name.clone(),
+                space: tag.clone(),
                 config: i,
                 accuracy: acc,
                 measure_secs: t.secs(),
@@ -124,9 +170,9 @@ impl Quantune {
         Ok(table)
     }
 
-    /// Exhaustive sweep through a thread-safe evaluator: the 96 configs
-    /// fan out across `workers`, and results land in the database in
-    /// config order (0..95), so the table and the persisted records are
+    /// Exhaustive sweep through a thread-safe evaluator: the configs fan
+    /// out across `workers`, and results land in the database in config
+    /// order (0..size), so the table and the persisted records are
     /// identical to the serial [`Quantune::sweep`] at any thread count.
     ///
     /// `progress(done, acc)` is called from worker threads with the
@@ -135,16 +181,19 @@ impl Quantune {
     pub fn sweep_parallel<E: SharedEvaluator + ?Sized>(
         &mut self,
         model: &ZooModel,
+        space: &dyn ConfigSpace,
         evaluator: &E,
         force: bool,
         workers: &Pool,
         progress: impl Fn(usize, f64) + Sync,
     ) -> Result<Vec<f64>> {
-        if !force && self.db.has_full_sweep(&model.name, QuantConfig::SPACE_SIZE) {
-            return Ok(self.db.accuracy_table(&model.name, QuantConfig::SPACE_SIZE));
+        let tag = space.tag();
+        let size = space.size();
+        if !force && self.db.has_full_sweep(&model.name, &tag, size) {
+            return Ok(self.db.accuracy_table(&model.name, &tag, size));
         }
         let done = std::sync::atomic::AtomicUsize::new(0);
-        let measured = workers.run(QuantConfig::SPACE_SIZE, |i| {
+        let measured = workers.run(size, |i| {
             let t = Timer::start();
             let r = evaluator.measure_shared(i).map(|acc| (acc, t.secs()));
             if let Ok((acc, _)) = &r {
@@ -153,12 +202,13 @@ impl Quantune {
             }
             r
         })?;
-        let mut table = vec![f64::NAN; QuantConfig::SPACE_SIZE];
+        let mut table = vec![f64::NAN; size];
         for (i, r) in measured.into_iter().enumerate() {
             let (acc, secs) = r?;
             table[i] = acc;
             self.db.add(Record {
                 model: model.name.clone(),
+                space: tag.clone(),
                 config: i,
                 accuracy: acc,
                 measure_secs: secs,
@@ -168,8 +218,14 @@ impl Quantune {
         Ok(table)
     }
 
-    /// Transfer records from every other model's sweep (database D).
-    pub fn transfer_for(&self, target: &ZooModel) -> Result<Vec<TransferRecord>> {
+    /// Transfer records from every other model's trials in `space` (the
+    /// database D, filtered to the space's tag so feature vectors stay
+    /// compatible).
+    pub fn transfer_for(
+        &self,
+        target: &ZooModel,
+        space: &dyn ConfigSpace,
+    ) -> Result<Vec<TransferRecord>> {
         let mut feats: std::collections::HashMap<String, Vec<f32>> = Default::default();
         for name in zoo::MODELS {
             if name == target.name {
@@ -182,35 +238,39 @@ impl Quantune {
                 );
             }
         }
-        Ok(self.db.transfer_records(&target.name, |m, cfg| {
+        Ok(self.db.transfer_records(&target.name, &space.tag(), |m, cfg| {
             let arch = feats.get(m)?;
             let mut f = arch.clone();
-            f.extend(QuantConfig::from_index(cfg).ok()?.one_hot());
+            f.extend(space.features(cfg).ok()?);
             Some(f)
         }))
     }
 
-    /// Run one search algorithm against an evaluator (Algorithm 1 when
-    /// the algorithm is xgb/xgb_t). `&self`: independent runs (algorithm
-    /// x seed) may fan out across workers sharing one `Quantune`.
+    /// Run one search algorithm over `space` against an evaluator
+    /// (Algorithm 1 when the algorithm is xgb/xgb_t). The evaluator must
+    /// measure indices of the same space (see `with_space`). `&self`:
+    /// independent runs (algorithm x seed) may fan out across workers
+    /// sharing one `Quantune`.
     pub fn search(
         &self,
         model: &ZooModel,
+        space: &SpaceRef,
         algo_name: &str,
         evaluator: &mut dyn Evaluator,
         budget: usize,
         seed: u64,
     ) -> Result<SearchTrace> {
         let transfer = if algo_name == "xgb_t" {
-            self.transfer_for(model)?
+            self.transfer_for(model, space.as_ref())?
         } else {
             Vec::new()
         };
         anyhow::ensure!(
             algo_name != "xgb_t" || !transfer.is_empty(),
-            "xgb_t needs sweeps of other models in the database first"
+            "xgb_t needs trials of other models in the {:?} space first",
+            space.tag()
         );
-        let mut algo = make_algorithm(algo_name, model, transfer, seed)?;
+        let mut algo = make_algorithm(algo_name, model, space, transfer, seed)?;
         run_search(algo.as_mut(), budget, |cfg| evaluator.measure(cfg))
     }
 
@@ -231,6 +291,7 @@ impl Quantune {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::{general_space, vta_space};
 
     #[test]
     fn algorithm_names_construct() {
@@ -244,5 +305,17 @@ mod tests {
         let cfg = Quantune::tensorrt_like_baseline();
         let idx = cfg.index();
         assert_eq!(QuantConfig::from_index(idx).unwrap(), cfg);
+    }
+
+    #[test]
+    fn features_concat_arch_and_space() {
+        let model = zoo::synthetic_model(8, 4, 4, 3).unwrap();
+        let g = general_space();
+        let f = features_for(&model, g.as_ref(), 0).unwrap();
+        assert_eq!(f.len(), 10 + QuantConfig::ONE_HOT_DIM);
+        let v = vta_space();
+        let fv = features_for(&model, v.as_ref(), 0).unwrap();
+        assert_eq!(fv.len(), 10 + 7);
+        assert_eq!(space_features(&model, v.as_ref()).unwrap().len(), 12);
     }
 }

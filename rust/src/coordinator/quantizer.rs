@@ -1,15 +1,18 @@
-//! Turns (model, calibration cache, QuantConfig) into the concrete
+//! Turns (model, calibration cache, QuantPlan) into the concrete
 //! quantization artifacts the evaluators consume: the activation
 //! parameter rows and the fake-quantized weight set.
 //!
 //! This is the rust side of the paper's `g(e, s)` -- the Glow-extension
-//! model generator of Eq. 14.
+//! model generator of Eq. 14. A [`QuantPlan`] is the decoded form of one
+//! point of any [`crate::quant::ConfigSpace`]: the base axes plus an
+//! fp32-layer mask (the general space derives its mask from the `mixed`
+//! bit; the layer-wise space supplies an arbitrary one).
 //!
 //! Weight preparation is memoized in a [`WeightCache`]: calibration count
-//! and clipping policy only shape *activation* ranges, so the 96-config
-//! space reuses at most one fake-quantized tensor per (layer, scheme,
-//! granularity) plus one fp32 passthrough per tensor. Configs that share
-//! a layer's setting skip requantization entirely, and the cache is
+//! and clipping policy only shape *activation* ranges, so a sweep reuses
+//! at most one fake-quantized tensor per (layer, scheme, granularity)
+//! plus one fp32 passthrough per tensor. Configs that share a layer's
+//! setting skip requantization entirely, and the cache is
 //! interior-mutable so the parallel sweep's workers share it.
 
 use std::collections::HashMap;
@@ -19,7 +22,9 @@ use anyhow::Result;
 
 use crate::calib::CalibrationCache;
 use crate::ir::Tensor;
-use crate::quant::{fake_quant_weights, ActQuantization, Granularity, QuantConfig, Scheme};
+use crate::quant::{
+    fake_quant_weights, ActQuantization, Granularity, QuantPlan, Scheme,
+};
 use crate::zoo::ZooModel;
 
 /// Everything needed to evaluate one quantized model variant.
@@ -28,13 +33,13 @@ pub struct QuantizedSetup {
     /// weights in ABI order (fake-quantized, except fp32 mixed layers);
     /// `Arc`d so cache hits share storage instead of copying tensors
     pub weights: Vec<Arc<Tensor>>,
-    pub config: QuantConfig,
+    pub plan: QuantPlan,
 }
 
 /// How one weight tensor is prepared for evaluation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum WeightVariant {
-    /// fp32 passthrough (biases; first/last layers under mixed precision)
+    /// fp32 passthrough (biases; masked fp32 layers under mixed precision)
     Fp32,
     /// fake-quantized onto the int8 grid of (scheme, granularity)
     Quant(Scheme, Granularity),
@@ -78,52 +83,67 @@ impl WeightCache {
     }
 }
 
-/// Quant-point bypass rows for mixed precision: the network input (which
-/// feeds the first layer), the first weighted layer's output, and the
-/// last weighted layer's output stay fp32 (paper §4.5).
-pub fn mixed_precision_bypass(model: &ZooModel, mixed: bool) -> Vec<bool> {
+/// Quant-point bypass rows for an arbitrary fp32-layer mask (`mask`
+/// follows `graph.layers()` order): each fp32 layer's output quant point
+/// stays fp32, and the network input does too when the first weighted
+/// layer is fp32 (the input row feeds that layer).
+pub fn fp32_layer_bypass(model: &ZooModel, mask: &[bool]) -> Vec<bool> {
     let qpoints = model.graph.quant_points();
-    let mut bypass = vec![false; qpoints.len()];
-    if !mixed {
-        return bypass;
-    }
     let layers = model.graph.layers();
-    let first = layers.first().cloned().unwrap_or_default();
-    let last = layers.last().cloned().unwrap_or_default();
-    for (i, q) in qpoints.iter().enumerate() {
-        if q == "input" || *q == first || *q == last {
-            bypass[i] = true;
-        }
-    }
-    bypass
+    let fp32: std::collections::HashSet<&str> = layers
+        .iter()
+        .zip(mask)
+        .filter(|(_, &m)| m)
+        .map(|(l, _)| l.as_str())
+        .collect();
+    let first_fp32 = mask.first().copied().unwrap_or(false);
+    qpoints
+        .iter()
+        .map(|q| (q == "input" && first_fp32) || fp32.contains(q.as_str()))
+        .collect()
 }
 
-/// Build the evaluation setup for one configuration, reusing prepared
-/// weights from `wcache` when a previous config shared the layer setting.
+/// Quant-point bypass rows for the paper's §4.5 mixed precision: the
+/// network input, the first weighted layer's output, and the last
+/// weighted layer's output stay fp32.
+pub fn mixed_precision_bypass(model: &ZooModel, mixed: bool) -> Vec<bool> {
+    let n = model.graph.layers().len();
+    let mask: Vec<bool> =
+        (0..n).map(|i| mixed && (i == 0 || i == n.saturating_sub(1))).collect();
+    fp32_layer_bypass(model, &mask)
+}
+
+/// Build the evaluation setup for one plan, reusing prepared weights
+/// from `wcache` when a previous config shared the layer setting.
 pub fn prepare_cached(
     model: &ZooModel,
     cache: &CalibrationCache,
-    cfg: &QuantConfig,
+    plan: &QuantPlan,
     wcache: &WeightCache,
 ) -> Result<QuantizedSetup> {
     anyhow::ensure!(cache.model == model.name, "calibration cache model mismatch");
-    let bypass = mixed_precision_bypass(model, cfg.mixed);
-    let aq =
-        ActQuantization::from_histograms(&cache.hists, cfg.scheme, cfg.clip, &bypass)?;
-
     let layers = model.graph.layers();
-    let first = layers.first().cloned().unwrap_or_default();
-    let last = layers.last().cloned().unwrap_or_default();
+    let mask = plan.resolve_mask(layers.len())?;
+    let bypass = fp32_layer_bypass(model, &mask);
+    let aq = ActQuantization::from_histograms(
+        &cache.hists,
+        plan.base.scheme,
+        plan.base.clip,
+        &bypass,
+    )?;
+
+    let layer_pos: HashMap<&str, usize> =
+        layers.iter().enumerate().map(|(i, l)| (l.as_str(), i)).collect();
     let mut weights = Vec::new();
     for name in &model.weights.order {
         let t = model.weights.get(name)?;
         let layer = name.trim_end_matches("_w").trim_end_matches("_b");
-        let keep_fp32 = cfg.mixed && (layer == first || layer == last);
+        let keep_fp32 = layer_pos.get(layer).is_some_and(|&i| mask[i]);
         // biases stay fp32 in the fake-quant evaluation (they are int32
         // at accumulator scale on true integer hardware, which the VTA
         // path models exactly)
         let variant = if name.ends_with("_w") && !keep_fp32 {
-            WeightVariant::Quant(cfg.scheme, cfg.gran)
+            WeightVariant::Quant(plan.base.scheme, plan.base.gran)
         } else {
             WeightVariant::Fp32
         };
@@ -132,16 +152,16 @@ pub fn prepare_cached(
             WeightVariant::Fp32 => t.clone(),
         }));
     }
-    Ok(QuantizedSetup { aq, weights, config: *cfg })
+    Ok(QuantizedSetup { aq, weights, plan: plan.clone() })
 }
 
-/// Build the evaluation setup for one configuration (uncached form).
+/// Build the evaluation setup for one plan (uncached form).
 pub fn prepare(
     model: &ZooModel,
     cache: &CalibrationCache,
-    cfg: &QuantConfig,
+    plan: &QuantPlan,
 ) -> Result<QuantizedSetup> {
-    prepare_cached(model, cache, cfg, &WeightCache::new())
+    prepare_cached(model, cache, plan, &WeightCache::new())
 }
 
 /// The act_params tensor ([L, 5]) for a setup.

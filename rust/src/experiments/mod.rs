@@ -10,19 +10,23 @@ use anyhow::{Context, Result};
 
 use crate::calib::{calibrate, CalibBackend};
 use crate::coordinator::{
-    Evaluator, HloEvaluator, OracleEvaluator, Quantune, DEVICES,
+    Evaluator, HloEvaluator, InterpEvaluator, OracleEvaluator, Quantune,
+    SharedEvaluator, DEVICES, GENERAL_SPACE_TAG,
 };
+use crate::data::{synthetic_dataset, Dataset};
+use crate::interp::{argmax_batch, Interpreter};
 use crate::metrics::{BestConfigRow, DiversityAnalysis};
 use crate::quant::{
-    model_size_bytes, model_size_fp32, weight_mse, CalibCount, Granularity,
-    QuantConfig, Scheme, VtaConfig, ALL_SCHEMES,
+    general_space, model_size_bytes, model_size_bytes_masked, model_size_fp32,
+    weight_mse, CalibCount, Clipping, ConfigSpace, Granularity, LayerwiseSpace,
+    QuantConfig, Scheme, SpaceRef, VtaConfig, ALL_SCHEMES,
 };
 use crate::runtime::Runtime;
 use crate::search::SearchTrace;
 use crate::util::pool::Pool;
 use crate::util::{stats::mean, Csv, Pcg32, Timer};
 use crate::vta::VtaModel;
-use crate::zoo::{self, ZooModel};
+use crate::zoo::{self, synthetic_model, ZooModel};
 
 /// Models that actually have artifacts, in paper order.
 pub fn available_models(q: &Quantune) -> Vec<String> {
@@ -39,22 +43,28 @@ pub fn results_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("results"))
 }
 
-/// Ensure the database holds a full sweep for `model`, measuring through
-/// the HLO backend when missing. Returns the 96-entry accuracy table.
+/// Ensure the database holds a full general-space sweep for `model`,
+/// measuring through the HLO backend when missing. Returns the 96-entry
+/// accuracy table.
 pub fn ensure_sweep(
     q: &mut Quantune,
     runtime: &Runtime,
     model: &ZooModel,
 ) -> Result<Vec<f64>> {
-    if q.db.has_full_sweep(&model.name, QuantConfig::SPACE_SIZE) {
-        return Ok(q.db.accuracy_table(&model.name, QuantConfig::SPACE_SIZE));
+    if q.db.has_full_sweep(&model.name, GENERAL_SPACE_TAG, QuantConfig::SPACE_SIZE) {
+        return Ok(q.db.accuracy_table(
+            &model.name,
+            GENERAL_SPACE_TAG,
+            QuantConfig::SPACE_SIZE,
+        ));
     }
     eprintln!("[sweep] measuring {} (96 configs)...", model.name);
     let artifacts = q.artifacts.clone();
     let (calib_pool, eval) = (q.calib_pool.clone(), q.eval.clone());
     let mut evaluator =
         HloEvaluator::new(model, runtime, artifacts, &calib_pool, &eval, q.seed);
-    q.sweep(model, &mut evaluator, false, |_, _| {})
+    let space = general_space();
+    q.sweep(model, space.as_ref(), &mut evaluator, false, |_, _| {})
 }
 
 // ---------------------------------------------------------------------------
@@ -368,7 +378,9 @@ pub fn fig5(
         let best = table.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
         let mut algos: Vec<&'static str> = Vec::new();
         for algo in crate::coordinator::ALGORITHMS {
-            if algo == "xgb_t" && q.transfer_for(&model)?.is_empty() {
+            if algo == "xgb_t"
+                && q.transfer_for(&model, general_space().as_ref())?.is_empty()
+            {
                 continue;
             }
             algos.push(algo);
@@ -383,9 +395,11 @@ pub fn fig5(
         let q_ref: &Quantune = q;
         let model_ref = &model;
         let table_ref = &table;
+        let space = general_space();
+        let space_ref = &space;
         let traces = workers.map(&jobs, |&(algo, seed)| {
             let mut oracle = OracleEvaluator::new(table_ref.clone());
-            q_ref.search(model_ref, algo, &mut oracle, 96, seed)
+            q_ref.search(model_ref, space_ref, algo, &mut oracle, 96, seed)
         })?;
         let mut trace_it = traces.into_iter();
         for algo in algos {
@@ -640,6 +654,181 @@ pub fn fig9(q: &Quantune, runtime: &Runtime, reps: usize) -> Result<Vec<Fig9Row>
     }
     csv.write_file(&results_dir().join("fig9_latency.csv"))?;
     Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Layer-wise mixed-precision Pareto experiment (accuracy vs quantized
+// weight bytes; the §4.5 scenario generalized to arbitrary layer masks)
+// ---------------------------------------------------------------------------
+
+/// One measured point of a layer-wise space: a layer mask, its accuracy,
+/// and the serialized weight bytes it costs.
+pub struct LayerwiseParetoRow {
+    pub config: usize,
+    pub label: String,
+    pub fp32_layers: usize,
+    pub total_layers: usize,
+    pub accuracy: f64,
+    pub quant_bytes: u64,
+    /// true when no other point has both higher-or-equal accuracy and
+    /// lower-or-equal bytes (with at least one strict)
+    pub on_frontier: bool,
+}
+
+fn mark_frontier(rows: &mut [LayerwiseParetoRow]) {
+    let points: Vec<(f64, u64)> = rows.iter().map(|r| (r.accuracy, r.quant_bytes)).collect();
+    for (i, r) in rows.iter_mut().enumerate() {
+        r.on_frontier = !points.iter().enumerate().any(|(j, &(a, b))| {
+            j != i
+                && a >= r.accuracy
+                && b <= r.quant_bytes
+                && (a > r.accuracy || b < r.quant_bytes)
+        });
+    }
+}
+
+/// Enumerate a layer-wise space exhaustively (2^K configs fan out across
+/// the worker pool), measuring Top-1 through the interpreter and model
+/// size through the masked Table-5 accounting. `csv_name` lands under
+/// `results/`.
+pub fn pareto_layerwise(
+    model: &ZooModel,
+    calib: &Dataset,
+    eval: &Dataset,
+    base: QuantConfig,
+    k: usize,
+    seed: u64,
+    csv_name: &str,
+) -> Result<Vec<LayerwiseParetoRow>> {
+    let cache =
+        std::sync::Arc::new(calibrate(model, calib, base.calib, &CalibBackend::Interp, seed)?);
+    let space = std::sync::Arc::new(LayerwiseSpace::rank(
+        &model.name,
+        &model.graph,
+        model.weights_map(),
+        &cache.hists,
+        base,
+        k,
+    )?);
+    let space_ref: SpaceRef = space.clone();
+    // the sensitivity calibration is reused by the evaluator instead of
+    // recalibrating on the first measurement
+    let ev = InterpEvaluator::new(model, calib, eval, seed)
+        .with_space(space_ref)
+        .with_calibration(base.calib, cache);
+    let configs: Vec<usize> = (0..space.size()).collect();
+    let accs = Pool::auto().map(&configs, |&i| ev.measure_shared(i))?;
+
+    let dims = |layer: &str| {
+        let w = model.weights.get(&format!("{layer}_w")).unwrap();
+        let b = model.weights.get(&format!("{layer}_b")).unwrap();
+        (w.len(), b.len())
+    };
+    let total_layers = model.graph.layers().len();
+    let mut rows = Vec::with_capacity(space.size());
+    for (i, acc) in configs.iter().zip(accs) {
+        let mask = space.mask_of(*i);
+        rows.push(LayerwiseParetoRow {
+            config: *i,
+            label: space.describe(*i)?,
+            fp32_layers: mask.iter().filter(|&&b| b).count(),
+            total_layers,
+            accuracy: acc?,
+            quant_bytes: model_size_bytes_masked(&model.graph, &dims, base.gran, &mask),
+            on_frontier: false,
+        });
+    }
+    mark_frontier(&mut rows);
+
+    let mut csv = Csv::new(&[
+        "config", "label", "fp32_layers", "total_layers", "top1", "quant_bytes",
+        "on_frontier",
+    ]);
+    for r in &rows {
+        csv.row(&[
+            r.config.to_string(),
+            r.label.clone(),
+            r.fp32_layers.to_string(),
+            r.total_layers.to_string(),
+            format!("{:.4}", r.accuracy),
+            r.quant_bytes.to_string(),
+            r.on_frontier.to_string(),
+        ]);
+    }
+    csv.write_file(&results_dir().join(csv_name))?;
+    Ok(rows)
+}
+
+/// The base config the synthetic Pareto experiment stresses: per-tensor
+/// symmetric int8, which a channel-spread layer handles badly.
+pub fn pareto_synthetic_base() -> QuantConfig {
+    QuantConfig {
+        calib: CalibCount::C64,
+        scheme: Scheme::Symmetric,
+        clip: Clipping::Max,
+        gran: Granularity::Tensor,
+        mixed: false,
+    }
+}
+
+/// Self-contained layer-wise Pareto experiment (no artifacts needed):
+/// a synthetic model whose middle conv gets a planted per-channel weight
+/// spread (the paper's "fragile depthwise layer" failure mode), labels
+/// taken from the fp32 model's own predictions so accuracy measures
+/// quantization fidelity, and the full 2^K mask space measured through
+/// the interpreter. The expected shape: un-quantizing the fragile layer
+/// recovers most of the accuracy for a fraction of the fp32 bytes.
+pub fn pareto_layerwise_synthetic() -> Result<Vec<LayerwiseParetoRow>> {
+    let mut model = synthetic_model(10, 4, 8, 9)?;
+    model.name = "syn_fragile".to_string();
+    // Function-preserving channel rescaling (the fragile-layer pathology
+    // of the paper's depthwise models, distilled): divide c2's output
+    // channel j (weights + bias) by s_j and multiply the dense row that
+    // consumes it by s_j. ReLU and global-average-pool are positively
+    // homogeneous, so the fp32 function -- and therefore the self-labels
+    // below -- is unchanged; but per-tensor int8 quantization of c2 now
+    // faces a 32x per-channel scale spread and crushes the small
+    // channels, which the layer-wise search can repair by keeping c2
+    // fp32 while everything else stays int8.
+    {
+        let spread = |j: usize| (2.0f32).powf(5.0 * j as f32 / 7.0); // 1..32
+        let w = model.weights.tensors.get_mut("c2_w").unwrap();
+        let c = *w.shape.last().unwrap();
+        for (i, x) in w.data.iter_mut().enumerate() {
+            *x /= spread(i % c);
+        }
+        let b = model.weights.tensors.get_mut("c2_b").unwrap();
+        for (j, x) in b.data.iter_mut().enumerate() {
+            *x /= spread(j);
+        }
+        let d = model.weights.tensors.get_mut("d_w").unwrap();
+        let out = d.shape[1];
+        for (i, x) in d.data.iter_mut().enumerate() {
+            *x *= spread(i / out);
+        }
+    }
+    let calib = synthetic_dataset(128, 10, 10, 4, 8, 33);
+    let mut eval = synthetic_dataset(384, 10, 10, 4, 8, 34);
+    // label the eval split with the fp32 model's own argmax: accuracy
+    // then reads as agreement with fp32 (1.0 = lossless quantization)
+    let interp = Interpreter::new(&model.graph, model.weights_map());
+    let idx: Vec<usize> = (0..eval.n).collect();
+    let mut labels = Vec::with_capacity(eval.n);
+    for chunk in idx.chunks(64) {
+        let logits = interp.forward(&eval.batch(chunk))?;
+        labels.extend(argmax_batch(&logits).into_iter().map(|p| p as u8));
+    }
+    eval.labels = labels;
+
+    pareto_layerwise(
+        &model,
+        &calib,
+        &eval,
+        pareto_synthetic_base(),
+        3,
+        41,
+        "pareto_layerwise_synthetic.csv",
+    )
 }
 
 /// Write a text report file alongside the CSVs.

@@ -52,7 +52,7 @@ pub fn fp32_vs_fq_b1(
         &CalibBackend::Hlo { runtime, artifacts: &q.artifacts },
         q.seed,
     )?;
-    let setup = prepare(model, &cache, &cfg)?;
+    let setup = prepare(model, &cache, &cfg.into())?;
 
     let fp32 = runtime.load(&q.artifacts.join(format!("{}_fp32_b1.hlo.txt", model.name)))?;
     let fq = runtime.load(&q.artifacts.join(format!("{}_fq_b1.hlo.txt", model.name)))?;

@@ -9,6 +9,12 @@
 //!   (XGBoost cost model + transfer learning), calibration, the quantization
 //!   substrate (our mini-Glow graph IR + quantizers), the VTA integer-only
 //!   simulator, and the PJRT runtime that executes AOT-lowered JAX models.
+//!   Search, sweep, and the trial database are generic over a
+//!   [`quant::ConfigSpace`]: the 96-element general space (Eq. 1), the
+//!   12-element VTA integer-only space (Eq. 23), and per-model layer-wise
+//!   mixed-precision spaces ([`quant::LayerwiseSpace`]) all flow through
+//!   the same driver, and database records carry a space tag so transfer
+//!   learning never mixes incompatible feature vectors.
 //! - L2 (python/compile/model.py): JAX forward graphs for the six CNN
 //!   models, fp32 + fake-quant parameterized variants, AOT-lowered to HLO
 //!   text artifacts at build time.

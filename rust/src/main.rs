@@ -3,11 +3,19 @@
 //! ```text
 //! quantune info      [--artifacts DIR]
 //! quantune sweep     [--models mn,..] [--backend hlo|interp] [--force]
+//!                    [--space general|vta|layerwise] [--layers K]
 //! quantune search    [--models mn,..] [--algo xgb_t] [--seed N] [--budget N]
+//!                    [--space general|vta|layerwise] [--layers K]
 //! quantune quantize  [--models mn,..] [--config IDX]   # deploy report
 //! quantune vta       [--models mn,..]                  # integer-only path
 //! quantune latency   [--models mn,..] [--reps N]
 //! ```
+//!
+//! `--space` selects the quantization search space: the 96-element
+//! general space (Eq. 1), the 12-element VTA integer-only space (Eq. 23),
+//! or a per-model layer-wise mixed-precision space built from a
+//! calibration-driven fragility ranking of the top `--layers K` weighted
+//! layers on top of the model's best known base config.
 //!
 //! Everything the CLI does is also exposed as library API; the benches in
 //! rust/benches regenerate the paper's tables and figures.
@@ -17,10 +25,12 @@ use anyhow::{Context, Result};
 use quantune::calib::{calibrate, CalibBackend};
 use quantune::config::Cli;
 use quantune::coordinator::{
-    HloEvaluator, InterpEvaluator, OracleEvaluator, Quantune, ALGORITHMS,
+    Evaluator, HloEvaluator, InterpEvaluator, OracleEvaluator, Quantune, ALGORITHMS,
+    GENERAL_SPACE_TAG,
 };
 use quantune::quant::{
-    model_size_bytes, model_size_fp32, Granularity, QuantConfig, VtaConfig,
+    general_space, model_size_bytes, model_size_fp32, vta_space, ConfigSpace,
+    Granularity, QuantConfig, SpaceRef, VtaConfig,
 };
 use quantune::runtime::Runtime;
 use quantune::util::{fmt_duration, Pool, Timer};
@@ -44,9 +54,37 @@ fn print_help() {
         "quantune -- post-training quantization auto-tuner (paper reproduction)\n\
          commands: info | sweep | search | quantize | vta | latency\n\
          common options: --artifacts DIR --models mn,shn,... --seed N\n\
+         space options:  --space general|vta|layerwise --layers K (layerwise cap)\n\
          env: QUANTUNE_THREADS=N sizes the worker pool (default: all cores)\n\
          see README.md and rust/BENCHMARKS.md for details"
     );
+}
+
+/// Resolve `--space` for one model. The layer-wise space builds on the
+/// model's best known general config (falling back to the TensorRT-like
+/// baseline when no sweep/search ran yet), freeing the `--layers K`
+/// most fragile layers.
+fn resolve_space(cli: &Cli, q: &Quantune, model: &zoo::ZooModel) -> Result<SpaceRef> {
+    match cli.opt_or("space", "general").as_str() {
+        "general" => Ok(general_space()),
+        "vta" => Ok(vta_space()),
+        "layerwise" => {
+            let base = match q.db.best_for(&model.name) {
+                Some((cfg, _)) => cfg,
+                None => {
+                    eprintln!(
+                        "[{}] no general-space trials in the database; building the \
+                         layer-wise space on the TensorRT-like baseline",
+                        model.name
+                    );
+                    Quantune::tensorrt_like_baseline()
+                }
+            };
+            let k = cli.opt_usize("layers", 4)?;
+            q.layerwise_space(model, base, k)
+        }
+        other => anyhow::bail!("unknown space {other:?} (try general|vta|layerwise)"),
+    }
 }
 
 fn run(args: &[String]) -> Result<()> {
@@ -95,17 +133,20 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
     let runtime = if backend == "hlo" { Some(Runtime::cpu()?) } else { None };
     for name in cli.models() {
         let model = q.load_model(&name)?;
+        let space = resolve_space(cli, &q, &model)?;
+        let size = space.size();
         let timer = Timer::start();
         let artifacts = q.artifacts.clone();
         let (calib_pool, eval) = (q.calib_pool.clone(), q.eval.clone());
         let table = match &runtime {
             Some(rt) => {
                 let mut evaluator =
-                    HloEvaluator::new(&model, rt, artifacts, &calib_pool, &eval, q.seed);
-                q.sweep(&model, &mut evaluator, cli.flag("force"), |i, acc| {
+                    HloEvaluator::new(&model, rt, artifacts, &calib_pool, &eval, q.seed)
+                        .with_space(space.clone());
+                q.sweep(&model, space.as_ref(), &mut evaluator, cli.flag("force"), |i, acc| {
                     if i % 16 == 15 {
                         println!(
-                            "  [{name}] {}/96 latest top1 {:.2}%",
+                            "  [{name}] {}/{size} latest top1 {:.2}%",
                             i + 1,
                             acc * 100.0
                         );
@@ -113,17 +154,19 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
                 })?
             }
             None => {
-                // interp backend: the 96 configs fan out across the pool
-                let evaluator = InterpEvaluator::new(&model, &calib_pool, &eval, q.seed);
+                // interp backend: the configs fan out across the pool
+                let evaluator = InterpEvaluator::new(&model, &calib_pool, &eval, q.seed)
+                    .with_space(space.clone());
                 q.sweep_parallel(
                     &model,
+                    space.as_ref(),
                     &evaluator,
                     cli.flag("force"),
                     &Pool::auto(),
                     |done, acc| {
                         if done % 16 == 0 {
                             println!(
-                                "  [{name}] {done}/96 latest top1 {:.2}%",
+                                "  [{name}] {done}/{size} latest top1 {:.2}%",
                                 acc * 100.0
                             );
                         }
@@ -138,7 +181,7 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
             .unwrap();
         println!(
             "{name}: best {} top1 {:.2}% (fp32 {:.2}%) in {}",
-            QuantConfig::from_index(best.0)?,
+            space.describe(best.0)?,
             best.1 * 100.0,
             model.fp32_top1 * 100.0,
             fmt_duration(timer.secs()),
@@ -154,27 +197,41 @@ fn cmd_search(cli: &Cli) -> Result<()> {
         ALGORITHMS.contains(&algo.as_str()),
         "--algo must be one of {ALGORITHMS:?}"
     );
-    let budget = cli.opt_usize("budget", QuantConfig::SPACE_SIZE)?;
     let seed = cli.opt_u64("seed", 7)?;
     for name in cli.models() {
         let model = q.load_model(&name)?;
-        // search against the sweep oracle when available (fast, identical
-        // ground truth); the benches also support live HLO measurement
-        let table = q.db.accuracy_table(&model.name, QuantConfig::SPACE_SIZE);
+        let space = resolve_space(cli, &q, &model)?;
+        let budget = cli.opt_usize("budget", space.size())?;
+        // search against the sweep oracle when this space's ground truth
+        // is in the database (fast, identical ground truth); fall back to
+        // live interpreter measurement otherwise
+        let table = q.db.accuracy_table(&model.name, &space.tag(), space.size());
+        let have_oracle = table.iter().any(|a| !a.is_nan());
         anyhow::ensure!(
-            table.iter().any(|a| !a.is_nan()),
+            have_oracle || space.tag() != GENERAL_SPACE_TAG,
             "{name}: no sweep in database -- run `quantune sweep` first"
         );
-        let mut oracle = OracleEvaluator::new(table);
-        let trace = q.search(&model, &algo, &mut oracle, budget, seed)?;
-        let best_cfg = QuantConfig::from_index(trace.best_config)?;
+        let (calib_pool, eval) = (q.calib_pool.clone(), q.eval.clone());
+        let mut oracle;
+        let mut interp;
+        let evaluator: &mut dyn Evaluator = if have_oracle {
+            oracle = OracleEvaluator::new(table);
+            &mut oracle
+        } else {
+            interp = InterpEvaluator::new(&model, &calib_pool, &eval, q.seed)
+                .with_space(space.clone());
+            &mut interp
+        };
+        let trace = q.search(&model, &space, &algo, evaluator, budget, seed)?;
         println!(
-            "{name}: {algo} best {} top1 {:.2}% after {} trials (budget {budget})",
-            best_cfg,
+            "{name}: {algo} best {} top1 {:.2}% after {} trials (budget {budget}, \
+             space {})",
+            space.describe(trace.best_config)?,
             trace.best_accuracy * 100.0,
             trace
                 .trials_to_reach(trace.best_accuracy, 1e-9)
                 .unwrap_or(trace.trials.len()),
+            space.tag(),
         );
     }
     Ok(())

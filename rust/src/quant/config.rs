@@ -244,6 +244,13 @@ impl VtaConfig {
             + self.fusion as usize
     }
 
+    pub fn from_index(i: usize) -> Result<VtaConfig> {
+        if i >= Self::SPACE_SIZE {
+            bail!("vta config index {i} out of range");
+        }
+        Ok(Self::space()[i])
+    }
+
     /// The equivalent general config (pow2 / tensor / no mixed).
     pub fn as_quant_config(&self) -> QuantConfig {
         QuantConfig {

@@ -106,6 +106,24 @@ impl Histogram {
         }
     }
 
+    /// Mean of |x|^2 over everything accumulated, estimated from the
+    /// bins (bin centers weight the counts). Used by the layer-wise
+    /// sensitivity ranking to normalize activation quantization noise.
+    pub fn mean_sq(&self) -> f64 {
+        if self.count == 0 || self.limit <= 0.0 {
+            return 0.0;
+        }
+        let width = self.limit as f64 / NUM_BINS as f64;
+        let mut acc = 0.0f64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            if c > 0 {
+                let center = (i as f64 + 0.5) * width;
+                acc += c as f64 * center * center;
+            }
+        }
+        acc / self.count as f64
+    }
+
     /// Raw observed range.
     pub fn range(&self) -> (f32, f32) {
         if self.count == 0 {

@@ -8,6 +8,7 @@
 pub mod config;
 pub mod histogram;
 pub mod scheme;
+pub mod space;
 pub mod weights;
 
 pub use config::{
@@ -16,9 +17,13 @@ pub use config::{
 };
 pub use histogram::Histogram;
 pub use scheme::{QParams, Scheme, ALL_SCHEMES};
+pub use space::{
+    general_space, vta_space, ConfigSpace, GeneralSpace, LayerCandidate,
+    LayerwiseSpace, QuantPlan, SpaceRef, VtaSpace, MAX_LAYERWISE_BITS,
+};
 pub use weights::{
-    channel_params, fake_quant_weights, model_size_bytes, model_size_fp32,
-    quantize_weights_int8, tensor_params, weight_mse,
+    channel_params, fake_quant_weights, model_size_bytes, model_size_bytes_masked,
+    model_size_fp32, quantize_weights_int8, tensor_params, weight_mse,
 };
 
 use anyhow::Result;

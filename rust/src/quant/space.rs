@@ -1,0 +1,692 @@
+//! Search-space abstraction: the `ConfigSpace` trait and its three
+//! implementations.
+//!
+//! The paper's claim is that the XGB cost model accelerates search over
+//! *whatever* quantization space the compiler exposes (Eq. 1 is just one
+//! instance). This module makes that literal: a space is anything that
+//! can enumerate its points, decode a point into a concrete
+//! [`QuantPlan`] for the evaluators, featurize points for the cost
+//! model, and encode/decode a binary genome for the GA.
+//!
+//! - [`GeneralSpace`]: the 96-element space of Eq. 1 ([`QuantConfig`]);
+//! - [`VtaSpace`]: the 12-element integer-only space of Eq. 23
+//!   ([`VtaConfig`]);
+//! - [`LayerwiseSpace`]: per-layer mixed precision (paper §4.5,
+//!   generalized): starting from a fixed base config, each of the top-K
+//!   most quantization-fragile weighted layers independently chooses
+//!   {int8, fp32}. K is capped so the 2^K space stays enumerable, and
+//!   the fragility ranking is calibration-driven (weight fake-quant MSE
+//!   plus activation quantization noise from the calibration
+//!   histograms).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::ir::{Graph, Op, Tensor};
+
+use super::config::{QuantConfig, VtaConfig, ALL_CALIB};
+use super::histogram::Histogram;
+use super::weights::weight_mse;
+use super::Clipping;
+
+/// Everything an evaluator needs to realize one configuration: the base
+/// axes (calibration count, scheme, clipping, granularity) plus which
+/// weighted layers stay fp32.
+#[derive(Clone, Debug)]
+pub struct QuantPlan {
+    pub base: QuantConfig,
+    /// Explicit fp32 mask over `graph.layers()` order. `None` derives
+    /// the mask from `base.mixed` (first+last, paper §4.5).
+    pub fp32_mask: Option<Vec<bool>>,
+}
+
+impl QuantPlan {
+    pub fn from_config(base: QuantConfig) -> QuantPlan {
+        QuantPlan { base, fp32_mask: None }
+    }
+
+    /// Resolve the fp32-layer mask for a model with `n_layers` weighted
+    /// layers.
+    pub fn resolve_mask(&self, n_layers: usize) -> Result<Vec<bool>> {
+        if let Some(m) = &self.fp32_mask {
+            anyhow::ensure!(
+                m.len() == n_layers,
+                "fp32 mask covers {} layers but the model has {n_layers}",
+                m.len()
+            );
+            return Ok(m.clone());
+        }
+        let mut mask = vec![false; n_layers];
+        if self.base.mixed && n_layers > 0 {
+            mask[0] = true;
+            mask[n_layers - 1] = true;
+        }
+        Ok(mask)
+    }
+}
+
+impl From<QuantConfig> for QuantPlan {
+    fn from(base: QuantConfig) -> QuantPlan {
+        QuantPlan::from_config(base)
+    }
+}
+
+/// A quantization search space: an indexed, featurized, genome-encoded
+/// set of configurations the generic search/sweep/database plumbing
+/// operates on.
+pub trait ConfigSpace: Send + Sync {
+    /// Stable identifier stored with database records so transfer
+    /// learning never mixes feature vectors from incompatible spaces.
+    fn tag(&self) -> String;
+
+    /// Number of configurations (indices are `0..size()`).
+    fn size(&self) -> usize;
+
+    /// Decode an index into the concrete evaluation plan.
+    fn plan(&self, i: usize) -> Result<QuantPlan>;
+
+    /// Human-readable slug for an index.
+    fn describe(&self, i: usize) -> Result<String>;
+
+    /// Config-feature vector for the XGBoost cost model (the `s` half of
+    /// the paper's §5.1 features; the model's arch features `e` are
+    /// prepended by the coordinator).
+    fn features(&self, i: usize) -> Result<Vec<f32>>;
+
+    /// Names of the `features()` dimensions, for importance reports.
+    fn feature_names(&self) -> Vec<String>;
+
+    /// Genome length for the binary GA.
+    fn genome_bits(&self) -> usize;
+
+    /// Encode an index as a genome of `genome_bits()` bits.
+    fn encode(&self, i: usize) -> Result<Vec<bool>>;
+
+    /// Decode a genome to a valid index. Missing trailing bits read as
+    /// 0 and out-of-range field values wrap (the GA package's binary
+    /// encoding does the same for non-power-of-two cardinalities), so
+    /// every genome decodes to some point of the space.
+    fn decode(&self, bits: &[bool]) -> usize;
+}
+
+/// Shared handle to a space (search algorithms and evaluators hold one).
+pub type SpaceRef = Arc<dyn ConfigSpace>;
+
+fn bit(bits: &[bool], j: usize) -> bool {
+    bits.get(j).copied().unwrap_or(false)
+}
+
+// ---------------------------------------------------------------------------
+// General space (Eq. 1, |S| = 96)
+// ---------------------------------------------------------------------------
+
+/// The 96-element general-purpose space of [`QuantConfig`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GeneralSpace;
+
+/// Shared handle to the general space.
+pub fn general_space() -> SpaceRef {
+    Arc::new(GeneralSpace)
+}
+
+impl ConfigSpace for GeneralSpace {
+    fn tag(&self) -> String {
+        "general".to_string()
+    }
+
+    fn size(&self) -> usize {
+        QuantConfig::SPACE_SIZE
+    }
+
+    fn plan(&self, i: usize) -> Result<QuantPlan> {
+        Ok(QuantPlan::from_config(QuantConfig::from_index(i)?))
+    }
+
+    fn describe(&self, i: usize) -> Result<String> {
+        Ok(QuantConfig::from_index(i)?.slug())
+    }
+
+    fn features(&self, i: usize) -> Result<Vec<f32>> {
+        Ok(QuantConfig::from_index(i)?.one_hot())
+    }
+
+    fn feature_names(&self) -> Vec<String> {
+        QuantConfig::FEATURE_NAMES.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn genome_bits(&self) -> usize {
+        7
+    }
+
+    fn encode(&self, i: usize) -> Result<Vec<bool>> {
+        Ok(QuantConfig::from_index(i)?.to_genome().to_vec())
+    }
+
+    fn decode(&self, bits: &[bool]) -> usize {
+        let mut g = [false; 7];
+        for (j, b) in g.iter_mut().enumerate() {
+            *b = bit(bits, j);
+        }
+        QuantConfig::from_genome(&g).index()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// VTA integer-only space (Eq. 23, |S| = 12)
+// ---------------------------------------------------------------------------
+
+/// The 12-element integer-only space of [`VtaConfig`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VtaSpace;
+
+/// Shared handle to the VTA space.
+pub fn vta_space() -> SpaceRef {
+    Arc::new(VtaSpace)
+}
+
+impl VtaSpace {
+    /// Feature dimension names: 3 calib + 2 clip + 2 fusion (one-hot).
+    pub const FEATURE_NAMES: [&'static str; 7] = [
+        "calib_1", "calib_64", "calib_512", "clip_max", "clip_kl", "fusion_off",
+        "fusion_on",
+    ];
+}
+
+impl ConfigSpace for VtaSpace {
+    fn tag(&self) -> String {
+        "vta".to_string()
+    }
+
+    fn size(&self) -> usize {
+        VtaConfig::SPACE_SIZE
+    }
+
+    fn plan(&self, i: usize) -> Result<QuantPlan> {
+        Ok(QuantPlan::from_config(VtaConfig::from_index(i)?.as_quant_config()))
+    }
+
+    fn describe(&self, i: usize) -> Result<String> {
+        Ok(VtaConfig::from_index(i)?.slug())
+    }
+
+    fn features(&self, i: usize) -> Result<Vec<f32>> {
+        let c = VtaConfig::from_index(i)?;
+        let mut v = vec![0.0f32; 7];
+        v[c.calib.index()] = 1.0;
+        v[3 + (c.clip == Clipping::Kl) as usize] = 1.0;
+        v[5 + c.fusion as usize] = 1.0;
+        Ok(v)
+    }
+
+    fn feature_names(&self) -> Vec<String> {
+        Self::FEATURE_NAMES.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn genome_bits(&self) -> usize {
+        4
+    }
+
+    fn encode(&self, i: usize) -> Result<Vec<bool>> {
+        let c = VtaConfig::from_index(i)?;
+        let ci = c.calib.index();
+        Ok(vec![ci / 2 == 1, ci % 2 == 1, c.clip == Clipping::Kl, c.fusion])
+    }
+
+    fn decode(&self, bits: &[bool]) -> usize {
+        let calib = ALL_CALIB[((bit(bits, 0) as usize) * 2 + bit(bits, 1) as usize) % 3];
+        let cfg = VtaConfig {
+            calib,
+            clip: if bit(bits, 2) { Clipping::Kl } else { Clipping::Max },
+            fusion: bit(bits, 3),
+        };
+        cfg.index()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Layer-wise mixed-precision space
+// ---------------------------------------------------------------------------
+
+/// Cap on the number of free layers: 2^12 = 4096 configs keeps an
+/// exhaustive interpreter sweep tractable.
+pub const MAX_LAYERWISE_BITS: usize = 12;
+
+/// One candidate layer of a [`LayerwiseSpace`], with the per-layer
+/// features the XGB cost model consumes and the sensitivity score that
+/// selected it.
+#[derive(Clone, Debug)]
+pub struct LayerCandidate {
+    /// Index into `graph.layers()`.
+    pub layer_index: usize,
+    pub name: String,
+    /// Position in the weighted-layer sequence, scaled to [0, 1].
+    pub depth_frac: f32,
+    /// ln(weight element count).
+    pub log_params: f32,
+    /// Layer kind: 0 = dense conv, 1 = depthwise/grouped conv, 2 = dense.
+    pub kind: f32,
+    /// Calibration-driven fragility score (higher = more fragile).
+    pub sensitivity: f32,
+}
+
+/// Per-layer {int8, fp32} choice over the top-K most fragile weighted
+/// layers, on top of a fixed base [`QuantConfig`]. Index 0 is the
+/// all-int8 base config; bit `j` of an index keeps candidate `j` fp32.
+pub struct LayerwiseSpace {
+    base: QuantConfig,
+    model: String,
+    n_layers: usize,
+    /// Top-K fragile layers, ascending by `layer_index` (stable bit order).
+    candidates: Vec<LayerCandidate>,
+}
+
+impl LayerwiseSpace {
+    /// Build the space from calibration statistics: rank every weighted
+    /// layer by fragility under `base`, keep the `k` most fragile.
+    ///
+    /// The fragility score has two calibration-driven parts:
+    /// - relative weight fake-quant MSE under the base scheme and
+    ///   granularity (fine-grained channel spread shows up here);
+    /// - relative activation quantization noise: `scale^2 / 12` of the
+    ///   layer output's int8 grid (from its calibration histogram and
+    ///   the base clipping policy) over the histogram's mean square.
+    ///
+    /// `weights` maps `{layer}_w` names to tensors; `hists` is one
+    /// histogram per `graph.quant_points()` entry. `base.mixed` is
+    /// ignored (the explicit mask supersedes it).
+    pub fn rank(
+        model: &str,
+        graph: &Graph,
+        weights: &HashMap<String, Tensor>,
+        hists: &[Histogram],
+        base: QuantConfig,
+        k: usize,
+    ) -> Result<LayerwiseSpace> {
+        let qpoints = graph.quant_points();
+        anyhow::ensure!(
+            hists.len() == qpoints.len(),
+            "{} histograms for {} quant points",
+            hists.len(),
+            qpoints.len()
+        );
+        let layers = graph.layers();
+        if layers.is_empty() {
+            bail!("{model}: no weighted layers to choose precision for");
+        }
+        let base = QuantConfig { mixed: false, ..base };
+        let k = k.clamp(1, layers.len()).min(MAX_LAYERWISE_BITS);
+
+        let mut scored: Vec<LayerCandidate> = Vec::with_capacity(layers.len());
+        for (li, name) in layers.iter().enumerate() {
+            let w = weights
+                .get(&format!("{name}_w"))
+                .ok_or_else(|| anyhow::anyhow!("{model}: missing weight {name}_w"))?;
+            let mean_sq_w = w.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+                / w.data.len().max(1) as f64;
+            let wq_rel =
+                weight_mse(w, base.scheme, base.gran) / (mean_sq_w + 1e-12);
+
+            let qi = qpoints
+                .iter()
+                .position(|q| q == name)
+                .ok_or_else(|| anyhow::anyhow!("{name} is not a quant point"))?;
+            let h = &hists[qi];
+            let (lo, hi) = match base.clip {
+                Clipping::Max => h.range(),
+                Clipping::Kl => h.kl_clipped_range(),
+            };
+            let scale = base.scheme.params_from_range(lo, hi).scale as f64;
+            let act_rel = (scale * scale / 12.0) / (h.mean_sq() + 1e-12);
+
+            let kind = match graph.node(name).map(|n| &n.op) {
+                Some(Op::Conv { groups, .. }) => {
+                    if *groups > 1 {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+                Some(Op::Dense { .. }) => 2.0,
+                _ => 0.0,
+            };
+            scored.push(LayerCandidate {
+                layer_index: li,
+                name: name.clone(),
+                depth_frac: li as f32 / (layers.len() - 1).max(1) as f32,
+                log_params: (w.data.len().max(1) as f32).ln(),
+                kind,
+                sensitivity: (wq_rel + act_rel) as f32,
+            });
+        }
+        // most fragile first; ties break by depth so the order is total
+        scored.sort_by(|a, b| {
+            b.sensitivity
+                .partial_cmp(&a.sensitivity)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.layer_index.cmp(&b.layer_index))
+        });
+        scored.truncate(k);
+        // stable bit order: ascending layer position
+        scored.sort_by_key(|c| c.layer_index);
+        Ok(LayerwiseSpace {
+            base,
+            model: model.to_string(),
+            n_layers: layers.len(),
+            candidates: scored,
+        })
+    }
+
+    pub fn base(&self) -> QuantConfig {
+        self.base
+    }
+
+    pub fn candidates(&self) -> &[LayerCandidate] {
+        &self.candidates
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// fp32 mask over all weighted layers for index `i`.
+    pub fn mask_of(&self, i: usize) -> Vec<bool> {
+        let mut mask = vec![false; self.n_layers];
+        for (j, c) in self.candidates.iter().enumerate() {
+            if (i >> j) & 1 == 1 {
+                mask[c.layer_index] = true;
+            }
+        }
+        mask
+    }
+
+    /// Names of the layers index `i` keeps fp32.
+    pub fn fp32_layer_names(&self, i: usize) -> Vec<String> {
+        self.candidates
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| (i >> j) & 1 == 1)
+            .map(|(_, c)| c.name.clone())
+            .collect()
+    }
+
+    /// Number of layers index `i` quantizes (the complement of the mask).
+    pub fn quantized_layers(&self, i: usize) -> usize {
+        self.n_layers - self.mask_of(i).iter().filter(|&&b| b).count()
+    }
+}
+
+impl ConfigSpace for LayerwiseSpace {
+    fn tag(&self) -> String {
+        let cands: Vec<String> =
+            self.candidates.iter().map(|c| c.layer_index.to_string()).collect();
+        format!("layerwise/{}/b{}/{}", self.model, self.base.index(), cands.join("."))
+    }
+
+    fn size(&self) -> usize {
+        1usize << self.candidates.len()
+    }
+
+    fn plan(&self, i: usize) -> Result<QuantPlan> {
+        if i >= self.size() {
+            bail!("layerwise config index {i} out of range {}", self.size());
+        }
+        Ok(QuantPlan { base: self.base, fp32_mask: Some(self.mask_of(i)) })
+    }
+
+    fn describe(&self, i: usize) -> Result<String> {
+        if i >= self.size() {
+            bail!("layerwise config index {i} out of range {}", self.size());
+        }
+        let names = self.fp32_layer_names(i);
+        Ok(if names.is_empty() {
+            "lw_all_int8".to_string()
+        } else {
+            format!("lw_fp32_{}", names.join("+"))
+        })
+    }
+
+    /// Per-candidate blocks of 4: the fp32 bit gated with the layer's
+    /// depth fraction, log param count, and kind -- so the cost model
+    /// sees *which kind of layer* was bypassed, not just how many.
+    fn features(&self, i: usize) -> Result<Vec<f32>> {
+        if i >= self.size() {
+            bail!("layerwise config index {i} out of range {}", self.size());
+        }
+        let mut v = Vec::with_capacity(4 * self.candidates.len());
+        for (j, c) in self.candidates.iter().enumerate() {
+            if (i >> j) & 1 == 1 {
+                v.extend([1.0, c.depth_frac, c.log_params, c.kind]);
+            } else {
+                v.extend([0.0, 0.0, 0.0, 0.0]);
+            }
+        }
+        Ok(v)
+    }
+
+    fn feature_names(&self) -> Vec<String> {
+        self.candidates
+            .iter()
+            .flat_map(|c| {
+                [
+                    format!("fp32_{}", c.name),
+                    format!("fp32_depth_{}", c.name),
+                    format!("fp32_logp_{}", c.name),
+                    format!("fp32_kind_{}", c.name),
+                ]
+            })
+            .collect()
+    }
+
+    fn genome_bits(&self) -> usize {
+        self.candidates.len()
+    }
+
+    fn encode(&self, i: usize) -> Result<Vec<bool>> {
+        if i >= self.size() {
+            bail!("layerwise config index {i} out of range {}", self.size());
+        }
+        Ok((0..self.candidates.len()).map(|j| (i >> j) & 1 == 1).collect())
+    }
+
+    fn decode(&self, bits: &[bool]) -> usize {
+        let mut i = 0usize;
+        for j in 0..self.candidates.len() {
+            if bit(bits, j) {
+                i |= 1 << j;
+            }
+        }
+        i
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::config::{CalibCount, Granularity};
+    use super::super::scheme::Scheme;
+    use super::*;
+    use crate::util::Json;
+
+    fn space_roundtrips(space: &dyn ConfigSpace) {
+        let dim = space.features(0).unwrap().len();
+        assert_eq!(space.feature_names().len(), dim, "{}", space.tag());
+        for i in 0..space.size() {
+            let g = space.encode(i).unwrap();
+            assert_eq!(g.len(), space.genome_bits(), "{} index {i}", space.tag());
+            assert_eq!(space.decode(&g), i, "{} genome roundtrip {i}", space.tag());
+            assert_eq!(space.features(i).unwrap().len(), dim);
+            assert!(!space.describe(i).unwrap().is_empty());
+            let plan = space.plan(i).unwrap();
+            assert!(plan.base.index() < QuantConfig::SPACE_SIZE);
+        }
+        assert!(space.plan(space.size()).is_err());
+        assert!(space.describe(space.size()).is_err());
+    }
+
+    #[test]
+    fn general_space_roundtrips() {
+        let s = GeneralSpace;
+        assert_eq!(s.size(), 96);
+        space_roundtrips(&s);
+        // decode matches QuantConfig's own genome decode for every point
+        for i in 0..s.size() {
+            let cfg = QuantConfig::from_index(i).unwrap();
+            assert_eq!(s.decode(&cfg.to_genome()), i);
+        }
+    }
+
+    #[test]
+    fn vta_space_roundtrips() {
+        let s = VtaSpace;
+        assert_eq!(s.size(), 12);
+        space_roundtrips(&s);
+        // every plan is integer-only (pow2/tensor, no mixed)
+        for i in 0..s.size() {
+            let p = s.plan(i).unwrap();
+            assert_eq!(p.base.scheme, Scheme::Pow2);
+            assert_eq!(p.base.gran, Granularity::Tensor);
+            assert!(!p.base.mixed);
+        }
+        // genome wrap: an out-of-range 2-bit calib field still decodes
+        let wrapped = s.decode(&[true, true, false, false]);
+        assert!(wrapped < s.size());
+    }
+
+    fn tiny_graph() -> Graph {
+        Graph::from_meta(
+            &Json::parse(
+                r#"{"name": "t", "input_shape": [8, 8, 2], "num_classes": 3,
+            "nodes": [
+              {"name": "c1", "op": "conv", "inputs": ["input"], "k": 3,
+               "stride": 1, "pad": 1, "in_ch": 2, "out_ch": 4, "groups": 1,
+               "act": "relu"},
+              {"name": "c2", "op": "conv", "inputs": ["c1"], "k": 3,
+               "stride": 1, "pad": 1, "in_ch": 4, "out_ch": 4, "groups": 1,
+               "act": "relu"},
+              {"name": "g", "op": "gap", "inputs": ["c2"]},
+              {"name": "d", "op": "dense", "inputs": ["g"], "in_dim": 4,
+               "out_dim": 3}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    fn tiny_weights(graph: &Graph, fragile: &str) -> HashMap<String, Tensor> {
+        let mut rng = crate::util::Pcg32::seeded(5);
+        let mut out = HashMap::new();
+        for n in &graph.nodes {
+            let (w_shape, b_len): (Vec<usize>, usize) = match &n.op {
+                Op::Conv { k, in_ch, out_ch, groups, .. } => {
+                    (vec![*k, *k, in_ch / groups, *out_ch], *out_ch)
+                }
+                Op::Dense { in_dim, out_dim } => (vec![*in_dim, *out_dim], *out_dim),
+                _ => continue,
+            };
+            let wn: usize = w_shape.iter().product();
+            let c = *w_shape.last().unwrap();
+            let spread = n.name == fragile;
+            let data: Vec<f32> = (0..wn)
+                .map(|i| {
+                    let x = rng.normal() * 0.1;
+                    // the fragile layer gets a huge per-channel spread,
+                    // which per-tensor int8 quantization handles badly
+                    if spread && i % c == 0 {
+                        x * 100.0
+                    } else {
+                        x
+                    }
+                })
+                .collect();
+            out.insert(format!("{}_w", n.name), Tensor { shape: w_shape, data });
+            out.insert(
+                format!("{}_b", n.name),
+                Tensor { shape: vec![b_len], data: vec![0.0; b_len] },
+            );
+        }
+        out
+    }
+
+    fn tiny_hists(graph: &Graph) -> Vec<Histogram> {
+        let mut rng = crate::util::Pcg32::seeded(6);
+        graph
+            .quant_points()
+            .iter()
+            .map(|_| {
+                let mut h = Histogram::new();
+                let xs: Vec<f32> = (0..512).map(|_| rng.normal()).collect();
+                h.update(&xs);
+                h
+            })
+            .collect()
+    }
+
+    fn base() -> QuantConfig {
+        QuantConfig {
+            calib: CalibCount::C64,
+            scheme: Scheme::Symmetric,
+            clip: Clipping::Max,
+            gran: Granularity::Tensor,
+            mixed: false,
+        }
+    }
+
+    #[test]
+    fn layerwise_space_roundtrips_and_masks() {
+        let g = tiny_graph();
+        let w = tiny_weights(&g, "c2");
+        let h = tiny_hists(&g);
+        let s = LayerwiseSpace::rank("t", &g, &w, &h, base(), 3).unwrap();
+        assert_eq!(s.size(), 8);
+        assert_eq!(s.n_layers(), 3);
+        space_roundtrips(&s);
+        // index 0 is the all-int8 base plan
+        let p0 = s.plan(0).unwrap();
+        assert_eq!(p0.resolve_mask(3).unwrap(), vec![false; 3]);
+        assert_eq!(s.quantized_layers(0), 3);
+        // the full mask keeps every candidate fp32
+        let full = s.size() - 1;
+        assert_eq!(s.quantized_layers(full), 0);
+        assert_eq!(s.fp32_layer_names(full).len(), 3);
+    }
+
+    #[test]
+    fn layerwise_ranking_finds_the_fragile_layer() {
+        let g = tiny_graph();
+        let w = tiny_weights(&g, "c2");
+        let h = tiny_hists(&g);
+        // K = 1: only the most fragile layer is free, and the channel
+        // spread planted in c2 must dominate the ranking
+        let s = LayerwiseSpace::rank("t", &g, &w, &h, base(), 1).unwrap();
+        assert_eq!(s.size(), 2);
+        assert_eq!(s.candidates()[0].name, "c2");
+        assert_eq!(s.fp32_layer_names(1), vec!["c2".to_string()]);
+    }
+
+    #[test]
+    fn layerwise_k_is_capped() {
+        let g = tiny_graph();
+        let w = tiny_weights(&g, "c2");
+        let h = tiny_hists(&g);
+        let s = LayerwiseSpace::rank("t", &g, &w, &h, base(), 99).unwrap();
+        assert_eq!(s.genome_bits(), 3); // only 3 weighted layers exist
+        // base.mixed is always neutralized by the explicit mask
+        let mixed = QuantConfig { mixed: true, ..base() };
+        let s = LayerwiseSpace::rank("t", &g, &w, &h, mixed, 2).unwrap();
+        assert!(!s.base().mixed);
+        let p = s.plan(0).unwrap();
+        assert_eq!(p.resolve_mask(3).unwrap(), vec![false; 3]);
+    }
+
+    #[test]
+    fn plan_mask_resolution() {
+        let p = QuantPlan::from_config(QuantConfig { mixed: true, ..base() });
+        assert_eq!(p.resolve_mask(4).unwrap(), vec![true, false, false, true]);
+        let p = QuantPlan::from_config(base());
+        assert_eq!(p.resolve_mask(2).unwrap(), vec![false, false]);
+        let p = QuantPlan { base: base(), fp32_mask: Some(vec![true, false]) };
+        assert_eq!(p.resolve_mask(2).unwrap(), vec![true, false]);
+        assert!(p.resolve_mask(3).is_err());
+    }
+}

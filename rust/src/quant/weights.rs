@@ -101,13 +101,27 @@ pub fn model_size_bytes(
     gran: Granularity,
     mixed: bool,
 ) -> u64 {
+    let n = graph.layers().len();
+    let mask: Vec<bool> =
+        (0..n).map(|i| mixed && (i == 0 || i == n.saturating_sub(1))).collect();
+    model_size_bytes_masked(graph, weights, gran, &mask)
+}
+
+/// Serialized size under an arbitrary fp32-layer mask (layer-wise mixed
+/// precision; `mask` follows `graph.layers()` order, same accounting as
+/// [`model_size_bytes`]).
+pub fn model_size_bytes_masked(
+    graph: &Graph,
+    weights: &dyn Fn(&str) -> (usize, usize), // name -> (w elems, channels)
+    gran: Granularity,
+    mask: &[bool],
+) -> u64 {
     let layers = graph.layers();
     let mut total = 0u64;
     for (i, layer) in layers.iter().enumerate() {
         let (w_elems, channels) = weights(layer);
         let bias_elems = channels;
-        let fp32 = mixed && (i == 0 || i == layers.len() - 1);
-        if fp32 {
+        if mask.get(i).copied().unwrap_or(false) {
             total += 4 * (w_elems + bias_elems) as u64;
         } else {
             let groups = match gran {

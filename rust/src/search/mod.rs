@@ -6,7 +6,7 @@
 //! `xgb` is the cost-model search (Algorithm 1), and `xgb_t` adds
 //! transfer learning from other models' trial databases.
 
-use crate::quant::QuantConfig;
+use crate::quant::{ConfigSpace, SpaceRef};
 use crate::util::Pcg32;
 use crate::xgb::{XgbModel, XgbParams};
 
@@ -95,35 +95,40 @@ impl SearchAlgo for GridSearch {
 // Genetic algorithm
 // ---------------------------------------------------------------------------
 
-/// Binary-encoded GA over the 7-bit QuantConfig genome, mirroring the R
-/// `GA` package defaults the paper used: fitness = Top-1 accuracy,
-/// tournament-of-2 selection, single-point crossover (p=0.8), bit-flip
-/// mutation (p=0.1), elitism of 1.
+/// Binary-encoded GA over a [`crate::quant::ConfigSpace`] genome (7 bits
+/// for the general QuantConfig space), mirroring the R `GA` package
+/// defaults the paper used: fitness = Top-1 accuracy, tournament-of-2
+/// selection, single-point crossover (p=0.8), bit-flip mutation (p=0.1),
+/// elitism of 1.
 pub struct GeneticSearch {
     rng: Pcg32,
-    population: Vec<[bool; 7]>,
+    space: SpaceRef,
+    bits: usize,
+    population: Vec<Vec<bool>>,
     pending: Vec<usize>, // population members not yet proposed this gen
     pop_size: usize,
 }
 
 impl GeneticSearch {
-    pub fn new(seed: u64) -> Self {
+    pub fn new(space: SpaceRef, seed: u64) -> Self {
         let mut rng = Pcg32::new(seed, 17);
         let pop_size = 8;
-        let population: Vec<[bool; 7]> = (0..pop_size)
-            .map(|_| {
-                let mut g = [false; 7];
-                for b in &mut g {
-                    *b = rng.chance(0.5);
-                }
-                g
-            })
+        let bits = space.genome_bits().max(1);
+        let population: Vec<Vec<bool>> = (0..pop_size)
+            .map(|_| (0..bits).map(|_| rng.chance(0.5)).collect())
             .collect();
-        GeneticSearch { rng, population, pending: (0..pop_size).rev().collect(), pop_size }
+        GeneticSearch {
+            rng,
+            space,
+            bits,
+            population,
+            pending: (0..pop_size).rev().collect(),
+            pop_size,
+        }
     }
 
-    fn fitness_of(genome: &[bool; 7], history: &[Trial]) -> f64 {
-        let idx = QuantConfig::from_genome(genome).index();
+    fn fitness_of(space: &dyn ConfigSpace, genome: &[bool], history: &[Trial]) -> f64 {
+        let idx = space.decode(genome);
         history
             .iter()
             .rev()
@@ -133,20 +138,24 @@ impl GeneticSearch {
     }
 
     fn evolve(&mut self, history: &[Trial]) {
-        let fit: Vec<f64> =
-            self.population.iter().map(|g| Self::fitness_of(g, history)).collect();
+        let fit: Vec<f64> = self
+            .population
+            .iter()
+            .map(|g| Self::fitness_of(self.space.as_ref(), g, history))
+            .collect();
         // elitism: keep the best genome
         let best = (0..self.pop_size)
             .max_by(|&a, &b| fit[a].partial_cmp(&fit[b]).unwrap())
             .unwrap();
-        let mut next = vec![self.population[best]];
+        let mut next = vec![self.population[best].clone()];
         while next.len() < self.pop_size {
             let pa = self.tournament(&fit);
             let pb = self.tournament(&fit);
-            let (mut ca, mut cb) = (self.population[pa], self.population[pb]);
-            if self.rng.chance(0.8) {
-                let cut = 1 + self.rng.below(6);
-                for i in cut..7 {
+            let (mut ca, mut cb) =
+                (self.population[pa].clone(), self.population[pb].clone());
+            if self.bits > 1 && self.rng.chance(0.8) {
+                let cut = 1 + self.rng.below(self.bits - 1);
+                for i in cut..self.bits {
                     std::mem::swap(&mut ca[i], &mut cb[i]);
                 }
             }
@@ -187,7 +196,7 @@ impl SearchAlgo for GeneticSearch {
             self.evolve(history);
         }
         let member = self.pending.pop()?;
-        Some(QuantConfig::from_genome(&self.population[member]).index())
+        Some(self.space.decode(&self.population[member]))
     }
 }
 
@@ -348,6 +357,10 @@ impl SearchTrace {
 /// Run a search algorithm for `budget` proposals, measuring via
 /// `measure` (which may serve cached values -- duplicate proposals from
 /// the GA still count as trials, as they would on real hardware).
+///
+/// Errors when no trial ran at all (a zero budget, or an algorithm that
+/// declines its very first proposal) -- there is no best config to
+/// report in that case.
 pub fn run_search(
     algo: &mut dyn SearchAlgo,
     budget: usize,
@@ -359,11 +372,17 @@ pub fn run_search(
         let accuracy = measure(config)?;
         trials.push(Trial { config, accuracy });
     }
-    let best = trials
+    let Some(best) = trials
         .iter()
         .copied()
         .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
-        .expect("no trials run");
+    else {
+        anyhow::bail!(
+            "search {:?} ran no trials (budget {budget}); raise the budget or check \
+             why the algorithm declined to propose",
+            algo.name()
+        );
+    };
     Ok(SearchTrace {
         algo: algo.name().to_string(),
         trials,
@@ -375,6 +394,7 @@ pub fn run_search(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::{general_space, vta_space, QuantConfig};
 
     /// Synthetic oracle with one sharp optimum.
     fn oracle(i: usize) -> f64 {
@@ -412,7 +432,7 @@ mod tests {
 
     #[test]
     fn genetic_improves_over_generations() {
-        let mut s = GeneticSearch::new(3);
+        let mut s = GeneticSearch::new(general_space(), 3);
         let trace = run_search(&mut s, 96, |i| Ok(oracle(i))).unwrap();
         // after 12 generations the GA should be near the optimum
         assert!(
@@ -420,6 +440,43 @@ mod tests {
             "GA best {} too far from optimum",
             trace.best_accuracy
         );
+    }
+
+    #[test]
+    fn genetic_stays_in_range_on_small_spaces() {
+        // the 4-bit VTA genome wraps its calib field; every proposal must
+        // still land inside the 12-element space
+        let space = vta_space();
+        let mut s = GeneticSearch::new(space.clone(), 5);
+        let trace = run_search(&mut s, 40, |i| {
+            assert!(i < space.size(), "GA proposed {i} outside the VTA space");
+            Ok(oracle(i))
+        })
+        .unwrap();
+        assert_eq!(trace.trials.len(), 40);
+    }
+
+    #[test]
+    fn zero_budget_is_an_error_not_a_panic() {
+        let mut s = RandomSearch::new(96, 1);
+        let err = run_search(&mut s, 0, |_| Ok(0.5)).unwrap_err();
+        assert!(err.to_string().contains("no trials"), "{err}");
+    }
+
+    #[test]
+    fn declining_first_proposal_is_an_error_not_a_panic() {
+        // an exhausted random search proposes None immediately
+        struct Never;
+        impl SearchAlgo for Never {
+            fn name(&self) -> &'static str {
+                "never"
+            }
+            fn propose(&mut self, _history: &[Trial]) -> Option<usize> {
+                None
+            }
+        }
+        let err = run_search(&mut Never, 10, |_| Ok(0.5)).unwrap_err();
+        assert!(err.to_string().contains("never"), "{err}");
     }
 
     #[test]

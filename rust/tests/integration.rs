@@ -8,8 +8,11 @@ use std::path::PathBuf;
 use quantune::calib::{calibrate, CalibBackend};
 use quantune::coordinator::{
     self, Evaluator, HloEvaluator, InterpEvaluator, OracleEvaluator, Quantune,
+    GENERAL_SPACE_TAG,
 };
-use quantune::quant::{CalibCount, Clipping, Granularity, QuantConfig, Scheme, VtaConfig};
+use quantune::quant::{
+    general_space, CalibCount, Clipping, Granularity, QuantConfig, Scheme, VtaConfig,
+};
 use quantune::runtime::Runtime;
 use quantune::search::Trial;
 use quantune::vta::VtaModel;
@@ -172,9 +175,10 @@ fn search_on_oracle_runs_all_algorithms() {
                 + 0.05 * (c.calib == CalibCount::C512) as u8 as f64
         })
         .collect();
+    let space = general_space();
     for algo in ["random", "grid", "genetic", "xgb"] {
         let mut oracle = OracleEvaluator::new(table.clone());
-        let trace = q.search(&model, algo, &mut oracle, 96, 3).unwrap();
+        let trace = q.search(&model, &space, algo, &mut oracle, 96, 3).unwrap();
         assert_eq!(trace.algo, algo);
         assert!(trace.best_accuracy >= 0.55 - 1e-9, "{algo} missed the optimum");
         // the trace's best must be the history max
@@ -193,14 +197,16 @@ fn xgb_t_requires_then_uses_transfer() {
     let mut q = Quantune::open(dir).unwrap();
     let model = q.load_model("sqn").unwrap();
     let table = vec![0.5; QuantConfig::SPACE_SIZE];
+    let space = general_space();
     // no other-model records in a fresh in-memory db: xgb_t must refuse
     q.db = coordinator::Database::in_memory();
     let mut oracle = OracleEvaluator::new(table.clone());
-    assert!(q.search(&model, "xgb_t", &mut oracle, 4, 1).is_err());
+    assert!(q.search(&model, &space, "xgb_t", &mut oracle, 4, 1).is_err());
     // seed the db with another model's records -> works
     for i in 0..QuantConfig::SPACE_SIZE {
         q.db.add(coordinator::Record {
             model: "mn".into(),
+            space: GENERAL_SPACE_TAG.into(),
             config: i,
             accuracy: 0.5,
             measure_secs: 0.0,
@@ -208,7 +214,7 @@ fn xgb_t_requires_then_uses_transfer() {
     }
     if q.artifacts.join("mn_meta.json").exists() {
         let mut oracle = OracleEvaluator::new(table);
-        let trace = q.search(&model, "xgb_t", &mut oracle, 4, 1).unwrap();
+        let trace = q.search(&model, &space, "xgb_t", &mut oracle, 4, 1).unwrap();
         assert_eq!(trace.trials.len(), 4);
     }
 }
@@ -263,15 +269,17 @@ fn sweep_persists_to_database() {
     let model = q.load_model("sqn").unwrap();
     // tiny fake sweep via oracle (a full HLO sweep is exercised by the
     // benches; here we verify the bookkeeping)
+    let space = general_space();
     let table: Vec<f64> =
         (0..QuantConfig::SPACE_SIZE).map(|i| i as f64 / 100.0).collect();
     let mut oracle = OracleEvaluator::new(table.clone());
-    let got = q.sweep(&model, &mut oracle, false, |_, _| {}).unwrap();
+    let got = q.sweep(&model, space.as_ref(), &mut oracle, false, |_, _| {}).unwrap();
     assert_eq!(got, table);
-    assert!(q.db.has_full_sweep("sqn", QuantConfig::SPACE_SIZE));
+    assert!(q.db.has_full_sweep("sqn", GENERAL_SPACE_TAG, QuantConfig::SPACE_SIZE));
     // second call reuses the db (the empty oracle would error otherwise)
     let mut empty = OracleEvaluator::new(vec![]);
-    let again = q.sweep(&model, &mut empty, false, |_, _| {}).unwrap();
+    let again =
+        q.sweep(&model, space.as_ref(), &mut empty, false, |_, _| {}).unwrap();
     assert_eq!(again, table);
     let (best_cfg, best_acc) = q.db.best_for("sqn").unwrap();
     assert_eq!(best_cfg.index(), 95);

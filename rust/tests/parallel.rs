@@ -10,11 +10,12 @@
 //! Everything runs on synthetic models/datasets (no artifacts needed),
 //! so this suite is always active.
 
-use quantune::coordinator::{self, InterpEvaluator, SharedEvaluator};
+use quantune::coordinator::{self, InterpEvaluator, Quantune, SharedEvaluator};
 use quantune::data::synthetic_dataset;
 use quantune::interp::gemm::{gemm_f32, gemm_f32_tiled, gemm_i32, gemm_i32_tiled};
+use quantune::quant::{general_space, vta_space, ConfigSpace};
 use quantune::search::{run_search, SearchTrace, TransferRecord};
-use quantune::util::Pcg32;
+use quantune::util::{Pcg32, Pool};
 use quantune::zoo::synthetic_model;
 
 const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
@@ -142,6 +143,63 @@ fn trace_bytes(t: &SearchTrace) -> Vec<(usize, u64)> {
     t.trials.iter().map(|tr| (tr.config, tr.accuracy.to_bits())).collect()
 }
 
+/// `sweep_parallel` over a non-96 space (the 12-element VTA space) is
+/// bit-identical to the serial `sweep` -- same accuracy table, same
+/// persisted records in config order, same space tag.
+#[test]
+fn sweep_parallel_non_general_space_matches_serial() {
+    let model = synthetic_model(8, 4, 4, 3).unwrap();
+    let calib = synthetic_dataset(32, 8, 8, 4, 4, 5);
+    let eval = synthetic_dataset(96, 8, 8, 4, 4, 6);
+    let space = vta_space();
+    let make_q = || Quantune {
+        artifacts: std::path::PathBuf::from("."),
+        calib_pool: calib.clone(),
+        eval: eval.clone(),
+        db: coordinator::Database::in_memory(),
+        seed: 1,
+    };
+
+    let mut q_serial = make_q();
+    let serial = {
+        let mut ev = InterpEvaluator::new(&model, &calib, &eval, 1)
+            .with_threads(1)
+            .with_space(space.clone());
+        q_serial
+            .sweep(&model, space.as_ref(), &mut ev, false, |_, _| {})
+            .unwrap()
+    };
+    assert_eq!(serial.len(), 12);
+
+    for threads in [2usize, 4, 8] {
+        let mut q_par = make_q();
+        let ev = InterpEvaluator::new(&model, &calib, &eval, 1)
+            .with_threads(1)
+            .with_space(space.clone());
+        let parallel = q_par
+            .sweep_parallel(
+                &model,
+                space.as_ref(),
+                &ev,
+                false,
+                &Pool::new(threads),
+                |_, _| {},
+            )
+            .unwrap();
+        let bits = |t: &[f64]| -> Vec<u64> { t.iter().map(|a| a.to_bits()).collect() };
+        assert_eq!(bits(&serial), bits(&parallel), "{threads} threads");
+        // the persisted records match the serial run in order and content
+        assert_eq!(q_par.db.records.len(), q_serial.db.records.len());
+        for (a, b) in q_serial.db.records.iter().zip(&q_par.db.records) {
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.space, b.space);
+            assert_eq!(a.config, b.config);
+            assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+        }
+        assert!(q_par.db.has_full_sweep(&model.name, &space.tag(), 12));
+    }
+}
+
 /// Identical seed => byte-identical SearchTrace at QUANTUNE_THREADS=1 vs
 /// 8 (here pinned per-evaluator rather than via the env so the test is
 /// immune to process-global races). Covers all five algorithms,
@@ -153,9 +211,10 @@ fn search_traces_identical_across_thread_counts() {
     let eval = synthetic_dataset(96, 8, 8, 4, 4, 6);
     // transfer database for xgb_t: features of the full space with a
     // synthetic accuracy pattern (content is irrelevant to determinism)
+    let space = general_space();
     let transfer: Vec<TransferRecord> = (0..96)
         .map(|i| TransferRecord {
-            features: coordinator::features_for(&model, i).unwrap(),
+            features: coordinator::features_for(&model, space.as_ref(), i).unwrap(),
             accuracy: 0.4 + (i % 7) as f32 * 0.05,
         })
         .collect();
@@ -165,7 +224,8 @@ fn search_traces_identical_across_thread_counts() {
         let run_at = |threads: usize| -> SearchTrace {
             let ev = InterpEvaluator::new(&model, &calib, &eval, seed).with_threads(threads);
             let mut search =
-                coordinator::make_algorithm(algo, &model, transfer.clone(), seed).unwrap();
+                coordinator::make_algorithm(algo, &model, &space, transfer.clone(), seed)
+                    .unwrap();
             run_search(search.as_mut(), budget, |cfg| ev.measure_shared(cfg)).unwrap()
         };
         let serial = run_at(1);

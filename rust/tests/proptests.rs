@@ -6,8 +6,8 @@
 //! every failure reproducible by construction.
 
 use quantune::quant::{
-    fake_quant_weights, ALL_SCHEMES, CalibCount, Clipping, Granularity, Histogram,
-    QuantConfig, Scheme, VtaConfig,
+    fake_quant_weights, general_space, vta_space, ALL_SCHEMES, CalibCount, Clipping,
+    ConfigSpace, Granularity, Histogram, QuantConfig, Scheme, VtaConfig,
 };
 use quantune::search::{
     run_search, GeneticSearch, GridSearch, RandomSearch, SearchAlgo, Trial, XgbSearch,
@@ -156,7 +156,25 @@ fn prop_one_hot_is_injective() {
     }
     for cfg in VtaConfig::space() {
         assert!(cfg.index() < VtaConfig::SPACE_SIZE);
+        assert_eq!(VtaConfig::from_index(cfg.index()).unwrap(), cfg);
     }
+}
+
+#[test]
+fn prop_space_decode_total_on_random_genomes() {
+    // any random bit string decodes to a valid index of the space, and
+    // re-encoding the decoded index is a fixed point of decode
+    let spaces = [general_space(), vta_space()];
+    props(200, |rng| {
+        for space in &spaces {
+            let bits: Vec<bool> =
+                (0..space.genome_bits()).map(|_| rng.chance(0.5)).collect();
+            let i = space.decode(&bits);
+            assert!(i < space.size(), "{}", space.tag());
+            let canon = space.encode(i).unwrap();
+            assert_eq!(space.decode(&canon), i, "{}", space.tag());
+        }
+    });
 }
 
 // ---------------------------------------------------------------------------
@@ -172,7 +190,7 @@ fn prop_search_respects_budget_and_returns_history_best() {
         let algos: Vec<Box<dyn SearchAlgo>> = vec![
             Box::new(RandomSearch::new(96, seed)),
             Box::new(GridSearch::new(96, seed)),
-            Box::new(GeneticSearch::new(seed)),
+            Box::new(GeneticSearch::new(general_space(), seed)),
             Box::new(XgbSearch::new(
                 (0..96)
                     .map(|i| QuantConfig::from_index(i).unwrap().one_hot())

@@ -1,0 +1,161 @@
+//! End-to-end guarantees of the ConfigSpace abstraction, on synthetic
+//! models/datasets (no artifacts needed, so this suite is always active):
+//!
+//! - `xgb` (and the other algorithms) run unmodified over all three
+//!   spaces through the same generic `Quantune::search` path;
+//! - the layer-wise Pareto experiment recovers accuracy lost by a
+//!   fragile layer while still quantizing at least half the layers;
+//! - index <-> genome <-> features roundtrips hold for every space
+//!   (the per-space unit tests cover the details; here we drive them
+//!   through the shared trait object path the search driver uses).
+
+use std::path::PathBuf;
+
+use quantune::coordinator::{Database, InterpEvaluator, Quantune};
+use quantune::data::{synthetic_dataset, Dataset};
+use quantune::experiments;
+use quantune::quant::{
+    general_space, vta_space, CalibCount, Clipping, ConfigSpace, Granularity,
+    QuantConfig, Scheme, SpaceRef,
+};
+use quantune::zoo::{synthetic_model, ZooModel};
+
+fn fixtures() -> (ZooModel, Dataset, Dataset) {
+    let model = synthetic_model(8, 4, 4, 3).unwrap();
+    let calib = synthetic_dataset(32, 8, 8, 4, 4, 5);
+    let eval = synthetic_dataset(96, 8, 8, 4, 4, 6);
+    (model, calib, eval)
+}
+
+fn quantune_with(calib: &Dataset, eval: &Dataset) -> Quantune {
+    Quantune {
+        artifacts: PathBuf::from("."),
+        calib_pool: calib.clone(),
+        eval: eval.clone(),
+        db: Database::in_memory(),
+        seed: 1,
+    }
+}
+
+#[test]
+fn roundtrips_through_the_trait_object() {
+    let (model, calib, eval) = fixtures();
+    let q = quantune_with(&calib, &eval);
+    let base = QuantConfig {
+        calib: CalibCount::C64,
+        scheme: Scheme::Symmetric,
+        clip: Clipping::Max,
+        gran: Granularity::Tensor,
+        mixed: false,
+    };
+    let spaces: Vec<SpaceRef> = vec![
+        general_space(),
+        vta_space(),
+        q.layerwise_space(&model, base, 3).unwrap(),
+    ];
+    for space in &spaces {
+        let space: &dyn ConfigSpace = space.as_ref();
+        let dim = space.features(0).unwrap().len();
+        for i in 0..space.size() {
+            let g = space.encode(i).unwrap();
+            assert_eq!(space.decode(&g), i, "{} index {i}", space.tag());
+            assert_eq!(space.features(i).unwrap().len(), dim, "{}", space.tag());
+            space.plan(i).unwrap();
+        }
+    }
+}
+
+#[test]
+fn xgb_searches_all_three_spaces_through_one_generic_path() {
+    let (model, calib, eval) = fixtures();
+    let q = quantune_with(&calib, &eval);
+    let base = QuantConfig {
+        calib: CalibCount::C1,
+        scheme: Scheme::Symmetric,
+        clip: Clipping::Max,
+        gran: Granularity::Tensor,
+        mixed: false,
+    };
+    let spaces: Vec<SpaceRef> = vec![
+        general_space(),
+        vta_space(),
+        q.layerwise_space(&model, base, 3).unwrap(),
+    ];
+    for space in &spaces {
+        let budget = 6.min(space.size());
+        let mut ev = InterpEvaluator::new(&model, &calib, &eval, q.seed)
+            .with_threads(1)
+            .with_space(space.clone());
+        let trace = q.search(&model, space, "xgb", &mut ev, budget, 7).unwrap();
+        assert_eq!(trace.algo, "xgb", "{}", space.tag());
+        assert_eq!(trace.trials.len(), budget, "{}", space.tag());
+        assert!(trace.best_config < space.size(), "{}", space.tag());
+        assert!(trace.trials.iter().all(|t| t.config < space.size()));
+        // the trace's best must be the history max
+        let max = trace
+            .trials
+            .iter()
+            .map(|t| t.accuracy)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(trace.best_accuracy, max, "{}", space.tag());
+    }
+}
+
+#[test]
+fn layerwise_pareto_beats_the_all_int8_base() {
+    let rows = experiments::pareto_layerwise_synthetic().unwrap();
+    assert_eq!(rows.len(), 8, "2^3 masks over the top-3 fragile layers");
+    let base = rows.iter().find(|r| r.config == 0).unwrap();
+    assert_eq!(base.fp32_layers, 0, "index 0 is the all-int8 base config");
+    // every mask costs at least the all-int8 bytes
+    assert!(rows.iter().all(|r| r.quant_bytes >= base.quant_bytes));
+    // the planted fragile layer destroys the all-int8 agreement with
+    // fp32, and un-quantizing it recovers it: some mask that still
+    // quantizes >= 50% of the weighted layers must beat the base
+    let winner = rows
+        .iter()
+        .filter(|r| 2 * (r.total_layers - r.fp32_layers) >= r.total_layers)
+        .filter(|r| r.accuracy > base.accuracy)
+        .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap());
+    assert!(
+        winner.is_some(),
+        "no >=50%-quantized mask beat the base accuracy {:.4} (rows: {:?})",
+        base.accuracy,
+        rows.iter().map(|r| (r.label.clone(), r.accuracy)).collect::<Vec<_>>()
+    );
+    // the base point and at least one improving mask are both measured,
+    // so the frontier is non-trivial
+    assert!(rows.iter().filter(|r| r.on_frontier).count() >= 2);
+}
+
+#[test]
+fn layerwise_sweep_persists_under_its_own_tag() {
+    let (model, calib, eval) = fixtures();
+    let mut q = quantune_with(&calib, &eval);
+    let base = QuantConfig {
+        calib: CalibCount::C1,
+        scheme: Scheme::Symmetric,
+        clip: Clipping::Max,
+        gran: Granularity::Tensor,
+        mixed: false,
+    };
+    let space = q.layerwise_space(&model, base, 2).unwrap();
+    let ev = InterpEvaluator::new(&model, &calib, &eval, q.seed)
+        .with_threads(1)
+        .with_space(space.clone());
+    let table = q
+        .sweep_parallel(
+            &model,
+            space.as_ref(),
+            &ev,
+            false,
+            &quantune::util::Pool::new(2),
+            |_, _| {},
+        )
+        .unwrap();
+    assert_eq!(table.len(), 4);
+    assert!(q.db.has_full_sweep(&model.name, &space.tag(), 4));
+    // the general-space table is untouched by layer-wise records
+    assert!(!q.db.has_full_sweep(&model.name, "general", 96));
+    assert!(q.db.records.iter().all(|r| r.space == space.tag()));
+}
