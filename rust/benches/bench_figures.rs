@@ -46,6 +46,24 @@ fn print_pareto(rows: &[exp::LayerwiseParetoRow]) {
     }
 }
 
+fn print_objective_pareto(rows: &[exp::ObjectiveParetoRow]) {
+    println!(
+        "{:>28} | {:>8} | {:>10} | {:>10} | frontier | picked by",
+        "config", "top1", "latency ms", "bytes"
+    );
+    for r in rows {
+        println!(
+            "{:>28} | {:>7.2}% | {:>10.4} | {:>10.0} | {:>8} | {}",
+            r.label,
+            r.accuracy * 100.0,
+            r.latency_ms,
+            r.size_bytes,
+            if r.on_frontier { "*" } else { "" },
+            r.picked_by.join("+")
+        );
+    }
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let want = |t: &str| {
@@ -55,6 +73,11 @@ fn main() -> Result<()> {
     if want("pareto") {
         println!("== Layer-wise Pareto: synthetic fragile model (no artifacts) ==");
         print_pareto(&exp::pareto_layerwise_synthetic()?);
+        println!(
+            "\n== Multi-objective Pareto: accuracy vs latency vs bytes \
+             (synthetic, i7 profile) =="
+        );
+        print_objective_pareto(&exp::pareto_objectives_synthetic()?);
     }
 
     let mut q = match Quantune::open(zoo::artifacts_dir()) {
@@ -225,12 +248,15 @@ fn main() -> Result<()> {
                 "model", "fp32 ms", "int8 ms", "speedup"
             );
             for r in exp::fig9(&q, rt, 30)? {
+                let speedup = r
+                    .speedup
+                    .map_or_else(|| "n/a".to_string(), |s| format!("{s:.2}x"));
                 println!(
-                    "{:>5} | {:>9.2} | {:>9.2} | {:>8.2}x | {:.2}/{:.2}/{:.2}",
+                    "{:>5} | {:>9.2} | {:>9.2} | {:>9} | {:.2}/{:.2}/{:.2}",
                     r.model,
                     r.fp32_ms,
                     r.fq_ms,
-                    r.speedup,
+                    speedup,
                     r.modeled_speedups[0],
                     r.modeled_speedups[1],
                     r.modeled_speedups[2]

@@ -6,7 +6,15 @@
 //! tag keeps feature vectors from incompatible spaces (general vs VTA vs
 //! a layer-wise space) from ever being mixed into one cost model.
 //! Persisted as JSON so runs accumulate across processes; records
-//! written before the space tag existed load as the general space.
+//! written before the space tag existed load as the general space (and
+//! records written before the multi-objective fields existed load with
+//! unknown latency/size components).
+//!
+//! Ranking over records is NaN-safe: `accuracy_table` explicitly fills
+//! holes with NaN, so everything that sorts or maxes accuracies treats
+//! NaN as "worse than any measurement" instead of panicking.
+
+#![deny(clippy::unwrap_used)]
 
 use std::path::{Path, PathBuf};
 
@@ -14,7 +22,7 @@ use anyhow::Result;
 
 use crate::quant::QuantConfig;
 use crate::search::TransferRecord;
-use crate::util::Json;
+use crate::util::{nan_min_cmp, Json};
 
 /// Space tag of the 96-element general space (the pre-tag default).
 pub const GENERAL_SPACE_TAG: &str = "general";
@@ -28,6 +36,38 @@ pub struct Record {
     pub accuracy: f64,
     /// seconds it took to measure (Table 2 bookkeeping)
     pub measure_secs: f64,
+    /// Modeled per-image deployment latency (ms) on `device`; `None`
+    /// for legacy and accuracy-only records.
+    pub latency_ms: Option<f64>,
+    /// The latency pricing source ("CPU(i7-8700)", "VTA@100MHz", ...):
+    /// latencies from different devices are NOT comparable, so every
+    /// priced record says which table it belongs to.
+    pub device: Option<String>,
+    /// Serialized quantized model bytes (Table 5 accounting); `None`
+    /// for legacy records.
+    pub size_bytes: Option<f64>,
+}
+
+impl Record {
+    /// Accuracy-only record (no deployment-cost components).
+    pub fn new(
+        model: String,
+        space: String,
+        config: usize,
+        accuracy: f64,
+        measure_secs: f64,
+    ) -> Record {
+        Record {
+            model,
+            space,
+            config,
+            accuracy,
+            measure_secs,
+            latency_ms: None,
+            size_bytes: None,
+            device: None,
+        }
+    }
 }
 
 #[derive(Default)]
@@ -50,12 +90,28 @@ impl Database {
         let mut records = Vec::new();
         let default_space = Json::Str(GENERAL_SPACE_TAG.to_string());
         for r in json.get("records")?.as_arr()? {
+            // optional component fields: absent on legacy records
+            let opt = |key: &str| -> Option<f64> {
+                r.get(key).ok().and_then(|v| v.as_f64().ok())
+            };
             records.push(Record {
                 model: r.get("model")?.as_str()?.to_string(),
                 space: r.get_or("space", &default_space).as_str()?.to_string(),
                 config: r.get("config")?.as_usize()?,
-                accuracy: r.get("accuracy")?.as_f64()?,
+                // a null accuracy is a persisted poisoned measurement;
+                // it loads as NaN and degrades in every ranking site
+                accuracy: match r.get("accuracy")? {
+                    Json::Null => f64::NAN,
+                    v => v.as_f64()?,
+                },
                 measure_secs: r.get("measure_secs")?.as_f64()?,
+                latency_ms: opt("latency_ms"),
+                size_bytes: opt("size_bytes"),
+                device: r
+                    .get("device")
+                    .ok()
+                    .and_then(|v| v.as_str().ok())
+                    .map(str::to_string),
             });
         }
         Ok(Database { records, path: Some(path.to_path_buf()) })
@@ -71,13 +127,33 @@ impl Database {
             .records
             .iter()
             .map(|r| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("model", Json::str(r.model.clone())),
                     ("space", Json::str(r.space.clone())),
                     ("config", Json::num(r.config as f64)),
-                    ("accuracy", Json::num(r.accuracy)),
+                    // JSON has no NaN: a poisoned accuracy persists as
+                    // null and round-trips back to NaN on load
+                    (
+                        "accuracy",
+                        if r.accuracy.is_finite() {
+                            Json::num(r.accuracy)
+                        } else {
+                            Json::Null
+                        },
+                    ),
                     ("measure_secs", Json::num(r.measure_secs)),
-                ])
+                ];
+                // only finite components serialize (JSON has no NaN)
+                if let Some(l) = r.latency_ms.filter(|l| l.is_finite()) {
+                    fields.push(("latency_ms", Json::num(l)));
+                }
+                if let Some(b) = r.size_bytes.filter(|b| b.is_finite()) {
+                    fields.push(("size_bytes", Json::num(b)));
+                }
+                if let Some(d) = &r.device {
+                    fields.push(("device", Json::str(d.clone())));
+                }
+                Json::obj(fields)
             })
             .collect();
         Json::obj(vec![("records", Json::Arr(records))]).write_file(path)
@@ -104,6 +180,15 @@ impl Database {
         self.accuracy_table(model, space, size).iter().all(|a| !a.is_nan())
     }
 
+    /// Are there any records from models other than `exclude` in
+    /// `space`? Cheap pre-check for xgb_t's transfer requirement (a
+    /// `true` can still yield no transfer records when the other
+    /// models' feature metadata is missing -- the search then errors
+    /// descriptively, which is the right surface for that broken state).
+    pub fn has_transfer_records(&self, exclude: &str, space: &str) -> bool {
+        self.records.iter().any(|r| r.model != exclude && r.space == space)
+    }
+
     /// Transfer-learning records in `space` from every model EXCEPT
     /// `exclude`. `features` maps (model, config index) -> feature
     /// vector.
@@ -125,28 +210,28 @@ impl Database {
         out
     }
 
-    /// Best (config, accuracy) for a model in the general space.
+    /// Best (config, accuracy) for a model in the general space. NaN
+    /// accuracies (holes re-persisted from a table, poisoned
+    /// measurements) are skipped entirely: a database of only-NaN
+    /// records reports `None` instead of panicking mid-comparison.
     pub fn best_for(&self, model: &str) -> Option<(QuantConfig, f64)> {
         self.records
             .iter()
-            .filter(|r| r.model == model && r.space == GENERAL_SPACE_TAG)
-            .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+            .filter(|r| {
+                r.model == model && r.space == GENERAL_SPACE_TAG && !r.accuracy.is_nan()
+            })
+            .max_by(|a, b| nan_min_cmp(&a.accuracy, &b.accuracy))
             .and_then(|r| QuantConfig::from_index(r.config).ok().map(|c| (c, r.accuracy)))
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 
     fn rec(model: &str, config: usize, acc: f64) -> Record {
-        Record {
-            model: model.into(),
-            space: GENERAL_SPACE_TAG.into(),
-            config,
-            accuracy: acc,
-            measure_secs: 0.1,
-        }
+        Record::new(model.into(), GENERAL_SPACE_TAG.into(), config, acc, 0.1)
     }
 
     #[test]
@@ -199,6 +284,11 @@ mod tests {
         let vta = db.transfer_records("mn", "vta", |_, i| Some(vec![i as f32]));
         assert_eq!(vta.len(), 1);
         assert_eq!(vta[0].accuracy, 0.9);
+        // the cheap pre-check agrees with the full extraction
+        assert!(db.has_transfer_records("mn", GENERAL_SPACE_TAG));
+        assert!(db.has_transfer_records("mn", "vta"));
+        assert!(!db.has_transfer_records("shn", "vta"));
+        assert!(!db.has_transfer_records("mn", "layerwise/x"));
     }
 
     #[test]
@@ -228,6 +318,80 @@ mod tests {
         let t = db.accuracy_table("mn", GENERAL_SPACE_TAG, 2);
         assert_eq!(t[0], 0.4);
         assert_eq!(t[1], 0.8);
+    }
+
+    #[test]
+    fn nan_records_degrade_instead_of_panicking() {
+        // a NaN accuracy record (a re-persisted table hole, a poisoned
+        // measurement) used to panic best_for's comparator
+        let mut db = Database::in_memory();
+        db.add(rec("mn", 0, f64::NAN));
+        db.add(rec("mn", 2, 0.9));
+        db.add(rec("mn", 1, f64::NAN));
+        let (cfg, acc) = db.best_for("mn").unwrap();
+        assert_eq!(cfg.index(), 2);
+        assert_eq!(acc, 0.9);
+        // table keeps the real value for config 2 and NaN elsewhere
+        let t = db.accuracy_table("mn", GENERAL_SPACE_TAG, 3);
+        assert!(t[0].is_nan() && t[1].is_nan());
+        assert_eq!(t[2], 0.9);
+        // all-NaN: no best, not a panic
+        let mut only_nan = Database::in_memory();
+        only_nan.add(rec("shn", 0, f64::NAN));
+        assert!(only_nan.best_for("shn").is_none());
+    }
+
+    #[test]
+    fn component_fields_roundtrip_and_skip_nonfinite() {
+        let dir = std::env::temp_dir().join("quantune_db_components_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("db.json");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut db = Database::open(&path).unwrap();
+            db.add(Record {
+                latency_ms: Some(3.25),
+                size_bytes: Some(1944.0),
+                device: Some("CPU(i7-8700)".into()),
+                ..rec("mn", 7, 0.8)
+            });
+            db.add(Record {
+                latency_ms: Some(f64::NAN), // must not serialize as NaN
+                size_bytes: None,
+                ..rec("mn", 8, 0.7)
+            });
+            db.add(rec("mn", 9, 0.6));
+            db.save().unwrap();
+        }
+        let db = Database::open(&path).unwrap();
+        assert_eq!(db.records[0].latency_ms, Some(3.25));
+        assert_eq!(db.records[0].size_bytes, Some(1944.0));
+        assert_eq!(db.records[0].device.as_deref(), Some("CPU(i7-8700)"));
+        assert_eq!(db.records[1].latency_ms, None);
+        assert_eq!(db.records[1].device, None);
+        assert_eq!(db.records[2].latency_ms, None);
+        assert_eq!(db.records[2].size_bytes, None);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn nan_accuracy_persists_as_null_and_reloads_as_nan() {
+        let dir = std::env::temp_dir().join("quantune_db_nan_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("db.json");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut db = Database::open(&path).unwrap();
+            db.add(rec("mn", 1, f64::NAN));
+            db.add(rec("mn", 2, 0.7));
+            db.save().unwrap();
+        }
+        let db = Database::open(&path).unwrap();
+        assert!(db.records[0].accuracy.is_nan());
+        assert_eq!(db.records[1].accuracy, 0.7);
+        let (cfg, _) = db.best_for("mn").unwrap();
+        assert_eq!(cfg.index(), 2);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

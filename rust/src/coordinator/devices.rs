@@ -48,6 +48,23 @@ pub const DEVICES: [DeviceProfile; 3] = [
 ];
 
 impl DeviceProfile {
+    /// Short CLI keys for [`DEVICES`], in the same order.
+    pub const KEYS: [&'static str; 3] = ["a53", "i7", "2080ti"];
+
+    /// Look a profile up by its short CLI key (`a53` / `i7` / `2080ti`).
+    pub fn by_key(key: &str) -> Option<&'static DeviceProfile> {
+        Self::KEYS.iter().position(|&k| k == key).map(|i| &DEVICES[i])
+    }
+
+    /// The short CLI key of this profile.
+    pub fn key(&self) -> &'static str {
+        DEVICES
+            .iter()
+            .position(|d| d.name == self.name)
+            .map(|i| Self::KEYS[i])
+            .unwrap_or("custom")
+    }
+
     /// Modeled fp32 per-image latency (seconds).
     pub fn fp32_latency_s(&self, macs: u64, layers: usize) -> f64 {
         2.0 * macs as f64 / (self.gflops_fp32 * 1e9) + layers as f64 * self.layer_overhead_s
@@ -58,6 +75,26 @@ impl DeviceProfile {
     pub fn int8_latency_s(&self, macs: u64, layers: usize) -> f64 {
         2.0 * macs as f64 / (self.gflops_fp32 * self.int8_naive_factor * 1e9)
             + layers as f64 * self.layer_overhead_s * 1.4
+    }
+
+    /// Per-image latency (milliseconds) of a mixed-precision deployment:
+    /// layer `i` of `layer_macs` runs in fp32 when `fp32_mask[i]`, naive
+    /// int8 otherwise. With an all-true mask this sums to exactly
+    /// [`DeviceProfile::fp32_latency_s`] of the summed MACs; with an
+    /// all-false mask, to [`DeviceProfile::int8_latency_s`].
+    pub fn masked_latency_ms(&self, layer_macs: &[u64], fp32_mask: &[bool]) -> f64 {
+        let s: f64 = layer_macs
+            .iter()
+            .enumerate()
+            .map(|(i, &macs)| {
+                if fp32_mask.get(i).copied().unwrap_or(false) {
+                    self.fp32_latency_s(macs, 1)
+                } else {
+                    self.int8_latency_s(macs, 1)
+                }
+            })
+            .sum();
+        s * 1e3
     }
 
     /// Modeled time to measure Top-1 over `images` images (Table 2),
@@ -98,6 +135,36 @@ mod tests {
         let gpu = DEVICES[2];
         let big = 20_000_000_000u64;
         assert!(gpu.int8_latency_s(big, layers) < gpu.fp32_latency_s(big, layers));
+    }
+
+    #[test]
+    fn masked_latency_interpolates_between_the_pure_paths() {
+        let macs = [400_000_000u64, 900_000_000, 30_000_000];
+        let total: u64 = macs.iter().sum();
+        for d in &DEVICES {
+            let all_fp32 = d.masked_latency_ms(&macs, &[true; 3]);
+            let all_int8 = d.masked_latency_ms(&macs, &[false; 3]);
+            assert!((all_fp32 - d.fp32_latency_s(total, 3) * 1e3).abs() < 1e-9);
+            assert!((all_int8 - d.int8_latency_s(total, 3) * 1e3).abs() < 1e-9);
+            let mixed = d.masked_latency_ms(&macs, &[false, true, false]);
+            let (lo, hi) = if all_fp32 < all_int8 {
+                (all_fp32, all_int8)
+            } else {
+                (all_int8, all_fp32)
+            };
+            assert!(mixed >= lo && mixed <= hi, "{}: {mixed} vs [{lo}, {hi}]", d.name);
+        }
+    }
+
+    #[test]
+    fn device_lookup_by_key() {
+        assert_eq!(DeviceProfile::by_key("a53").unwrap().name, "CPU(a53)");
+        assert_eq!(DeviceProfile::by_key("i7").unwrap().name, "CPU(i7-8700)");
+        assert_eq!(DeviceProfile::by_key("2080ti").unwrap().name, "GPU(2080ti)");
+        assert!(DeviceProfile::by_key("m1").is_none());
+        for d in &DEVICES {
+            assert_eq!(DeviceProfile::by_key(d.key()).unwrap().name, d.name);
+        }
     }
 
     #[test]

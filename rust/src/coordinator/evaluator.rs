@@ -19,6 +19,11 @@
 //! additionally fans its per-batch Top-1 counting out across the pool,
 //! reducing hit counts in input order so the measured accuracy is
 //! identical at any thread count.
+//!
+//! [`ObjectiveEvaluator`] wraps any of them for multi-objective tuning:
+//! accuracy is measured, predicted latency and model bytes come from the
+//! static per-config [`CostModel`](super::objective::CostModel), and the
+//! weighted scalarization is what the search maximizes.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -53,6 +58,39 @@ pub trait Evaluator {
 pub trait SharedEvaluator: Sync {
     /// Measure (or return the memoized) Top-1 for a config index.
     fn measure_shared(&self, config: usize) -> Result<f64>;
+}
+
+/// Objective-aware measurement: Top-1 accuracy comes from the wrapped
+/// evaluator, predicted latency and serialized bytes from the static
+/// [`CostModel`](super::objective::CostModel), and the three fold into
+/// the scalar the search maximizes via
+/// [`ObjectiveWeights::score`](super::objective::ObjectiveWeights).
+/// This is what `Quantune::search_objective` drives, and why all five
+/// algorithms and all three spaces tune any objective unchanged: they
+/// only ever see the scalar.
+pub struct ObjectiveEvaluator<'a> {
+    pub inner: &'a mut dyn Evaluator,
+    pub cost: &'a super::objective::CostModel,
+    pub weights: super::objective::ObjectiveWeights,
+}
+
+impl ObjectiveEvaluator<'_> {
+    /// Measure config `i` and return (scalar score, component breakdown)
+    /// in the shape `run_search` consumes.
+    pub fn measure_scored(
+        &mut self,
+        config: usize,
+    ) -> Result<(f64, crate::search::Components)> {
+        let accuracy = self.inner.measure(config)?;
+        let cost = self.cost.cost(config)?;
+        let score = self.weights.score(accuracy, cost, &self.cost.refs);
+        let components = crate::search::Components {
+            accuracy,
+            latency_ms: cost.latency_ms,
+            size_bytes: cost.size_bytes,
+        };
+        Ok((score, components))
+    }
 }
 
 /// One calibration cache slot: its own lock so a count is built exactly
@@ -372,11 +410,15 @@ impl OracleEvaluator {
         OracleEvaluator { table, secs_per_measure: 0.0 }
     }
 
+    /// Out-of-range indices are an error (the caller paired the wrong
+    /// space with this table); a NaN entry -- an unmeasured hole of
+    /// `Database::accuracy_table` -- is returned as NaN so a search over
+    /// a partial table degrades (NaN ranks below every real score)
+    /// instead of aborting.
     fn lookup(&self, config: usize) -> Result<f64> {
         self.table
             .get(config)
             .copied()
-            .filter(|a| !a.is_nan())
             .ok_or_else(|| anyhow::anyhow!("oracle has no entry for config {config}"))
     }
 }
@@ -403,9 +445,11 @@ mod tests {
 
     #[test]
     fn oracle_returns_table_values() {
-        let mut o = OracleEvaluator::new(vec![0.1, 0.9]);
+        let mut o = OracleEvaluator::new(vec![0.1, 0.9, f64::NAN]);
         assert_eq!(o.measure(1).unwrap(), 0.9);
         assert!(o.measure(5).is_err());
+        // a NaN hole degrades (ranks last downstream) instead of erroring
+        assert!(o.measure(2).unwrap().is_nan());
         // shared entry point agrees with the &mut one
         assert_eq!(o.measure_shared(0).unwrap(), 0.1);
     }

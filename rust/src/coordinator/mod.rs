@@ -9,18 +9,24 @@
 //! Everything is generic over a [`ConfigSpace`]: the same sweep, search,
 //! transfer-learning, and database plumbing drives the 96-element
 //! general space, the 12-element VTA space, and per-model layer-wise
-//! mixed-precision spaces (`Quantune::layerwise_space`).
+//! mixed-precision spaces (`Quantune::layerwise_space`). It is also
+//! generic over the objective: [`objective`] scalarizes (Top-1, modeled
+//! latency, serialized bytes) so `Quantune::search_objective` tunes
+//! deployment trade-offs through the identical driver.
 
 pub mod database;
 pub mod devices;
 pub mod evaluator;
+pub mod objective;
 pub mod quantizer;
 
 pub use database::{Database, Record, GENERAL_SPACE_TAG};
 pub use devices::{DeviceProfile, DEVICES};
 pub use evaluator::{
-    Evaluator, HloEvaluator, InterpEvaluator, OracleEvaluator, SharedEvaluator,
+    Evaluator, HloEvaluator, InterpEvaluator, ObjectiveEvaluator, OracleEvaluator,
+    SharedEvaluator,
 };
+pub use objective::{ConfigCost, CostModel, ObjectiveWeights, OBJECTIVES};
 pub use quantizer::{
     act_params_tensor, fp32_layer_bypass, mixed_precision_bypass, prepare,
     prepare_cached, QuantizedSetup, WeightCache, WeightVariant,
@@ -86,13 +92,17 @@ pub fn make_algorithm(
     })
 }
 
-/// Holds the shared experiment state: artifacts dir, datasets, database.
+/// Holds the shared experiment state: artifacts dir, datasets, database,
+/// and the deployment device the latency-aware objective prices against.
 pub struct Quantune {
     pub artifacts: PathBuf,
     pub calib_pool: Dataset,
     pub eval: Dataset,
     pub db: Database,
     pub seed: u64,
+    /// Deploy target for modeled latency (general / layer-wise spaces;
+    /// the VTA space always prices by cycle counts). Default: i7-8700.
+    pub device: DeviceProfile,
 }
 
 impl Quantune {
@@ -102,7 +112,34 @@ impl Quantune {
             .context("calibration pool (run `make artifacts`)")?;
         let eval = Dataset::load(&artifacts.join("dataset_eval.qtd"))?;
         let db = Database::open(&artifacts.join("database.json"))?;
-        Ok(Quantune { artifacts, calib_pool, eval, db, seed: 20220205 })
+        Ok(Quantune {
+            artifacts,
+            calib_pool,
+            eval,
+            db,
+            seed: 20220205,
+            device: DEVICES[1],
+        })
+    }
+
+    /// A self-contained instance over the synthetic model's datasets and
+    /// an in-memory database -- every search path works without artifact
+    /// files (the CLI falls back to this so `quantune search` runs from
+    /// a clean checkout).
+    pub fn synthetic() -> Quantune {
+        Quantune {
+            artifacts: PathBuf::from("."),
+            calib_pool: crate::data::synthetic_dataset(64, 8, 8, 4, 4, 5),
+            eval: crate::data::synthetic_dataset(256, 8, 8, 4, 4, 6),
+            db: Database::in_memory(),
+            seed: 20220205,
+            device: DEVICES[1],
+        }
+    }
+
+    /// The model `Quantune::synthetic()`'s datasets are shaped for.
+    pub fn synthetic_model() -> Result<ZooModel> {
+        zoo::synthetic_model(8, 4, 4, 3)
     }
 
     pub fn load_model(&self, name: &str) -> Result<ZooModel> {
@@ -152,17 +189,22 @@ impl Quantune {
         if !force && self.db.has_full_sweep(&model.name, &tag, size) {
             return Ok(self.db.accuracy_table(&model.name, &tag, size));
         }
+        let cost = CostModel::build(model, space, &self.device, crate::vta::PYNQ_CLOCK_MHZ)?;
         let mut table = vec![f64::NAN; size];
         for (i, slot) in table.iter_mut().enumerate() {
             let t = Timer::start();
             let acc = evaluator.measure(i)?;
             *slot = acc;
+            let c = cost.cost(i)?;
             self.db.add(Record {
                 model: model.name.clone(),
                 space: tag.clone(),
                 config: i,
                 accuracy: acc,
                 measure_secs: t.secs(),
+                latency_ms: Some(c.latency_ms),
+                size_bytes: Some(c.size_bytes),
+                device: Some(cost.target.clone()),
             });
             progress(i, acc);
         }
@@ -202,16 +244,21 @@ impl Quantune {
             }
             r
         })?;
+        let cost = CostModel::build(model, space, &self.device, crate::vta::PYNQ_CLOCK_MHZ)?;
         let mut table = vec![f64::NAN; size];
         for (i, r) in measured.into_iter().enumerate() {
             let (acc, secs) = r?;
             table[i] = acc;
+            let c = cost.cost(i)?;
             self.db.add(Record {
                 model: model.name.clone(),
                 space: tag.clone(),
                 config: i,
                 accuracy: acc,
                 measure_secs: secs,
+                latency_ms: Some(c.latency_ms),
+                size_bytes: Some(c.size_bytes),
+                device: Some(cost.target.clone()),
             });
         }
         self.db.save()?;
@@ -250,7 +297,8 @@ impl Quantune {
     /// (Algorithm 1 when the algorithm is xgb/xgb_t). The evaluator must
     /// measure indices of the same space (see `with_space`). `&self`:
     /// independent runs (algorithm x seed) may fan out across workers
-    /// sharing one `Quantune`.
+    /// sharing one `Quantune`. Tunes plain Top-1 accuracy; see
+    /// [`Quantune::search_objective`] for multi-objective tuning.
     pub fn search(
         &self,
         model: &ZooModel,
@@ -260,6 +308,44 @@ impl Quantune {
         budget: usize,
         seed: u64,
     ) -> Result<SearchTrace> {
+        let mut algo = self.make_algo(model, space, algo_name, seed)?;
+        run_search(algo.as_mut(), budget, |cfg| evaluator.measure(cfg))
+    }
+
+    /// Multi-objective search: same driver, but every measurement is
+    /// scalarized from (measured accuracy, modeled latency, serialized
+    /// bytes) under `weights`, with latency priced on [`Quantune::device`]
+    /// (general / layer-wise spaces) or VTA cycle totals (VTA space).
+    /// The returned trace's trials carry the per-component breakdown.
+    ///
+    /// All five algorithms tune the scalar unchanged -- including the
+    /// XGB cost model, which then learns to *predict the objective*, not
+    /// accuracy.
+    #[allow(clippy::too_many_arguments)]
+    pub fn search_objective(
+        &self,
+        model: &ZooModel,
+        space: &SpaceRef,
+        algo_name: &str,
+        evaluator: &mut dyn Evaluator,
+        budget: usize,
+        seed: u64,
+        weights: ObjectiveWeights,
+    ) -> Result<SearchTrace> {
+        let cost =
+            CostModel::build(model, space.as_ref(), &self.device, crate::vta::PYNQ_CLOCK_MHZ)?;
+        let mut scored = ObjectiveEvaluator { inner: evaluator, cost: &cost, weights };
+        let mut algo = self.make_algo(model, space, algo_name, seed)?;
+        run_search(algo.as_mut(), budget, |cfg| scored.measure_scored(cfg))
+    }
+
+    fn make_algo(
+        &self,
+        model: &ZooModel,
+        space: &SpaceRef,
+        algo_name: &str,
+        seed: u64,
+    ) -> Result<Box<dyn SearchAlgo>> {
         let transfer = if algo_name == "xgb_t" {
             self.transfer_for(model, space.as_ref())?
         } else {
@@ -270,8 +356,7 @@ impl Quantune {
             "xgb_t needs trials of other models in the {:?} space first",
             space.tag()
         );
-        let mut algo = make_algorithm(algo_name, model, space, transfer, seed)?;
-        run_search(algo.as_mut(), budget, |cfg| evaluator.measure(cfg))
+        make_algorithm(algo_name, model, space, transfer, seed)
     }
 
     /// The fixed vendor-default PTQ baseline standing in for TensorRT

@@ -1,0 +1,298 @@
+//! Multi-objective evaluation layer: weighted scalarization of Top-1
+//! accuracy, predicted deployment latency, and quantized model bytes.
+//!
+//! The paper tunes for accuracy alone, but its deployment story (§6.5
+//! latency, the VTA integer-only path, Table 5 sizes) only pays off when
+//! the tuner can trade the three against each other. This module keeps
+//! the search algorithms objective-agnostic: a [`CostModel`] precomputes
+//! the static (latency, bytes) cost of every config in a space, and
+//! [`ObjectiveWeights::score`] folds a measured accuracy and that cost
+//! into the single scalar `run_search` maximizes. Trials then carry the
+//! full [`crate::search::Components`] breakdown, so traces, database
+//! records, and the Pareto experiment can all report per-axis numbers.
+//!
+//! Latency sources:
+//! - general / layer-wise spaces: the analytical
+//!   [`DeviceProfile`](super::devices::DeviceProfile) cost model, at
+//!   per-layer resolution (fp32 layers take the fp32 path, quantized
+//!   layers the naive-int8 path -- on CPUs the latter is *slower*, the
+//!   paper's own finding);
+//! - VTA space: [`crate::vta::estimate_cycles`] totals at the deploy
+//!   clock, which exactly replay the simulator's cycle counters.
+//!
+//! Size is the serialized-bytes accounting of Table 5
+//! ([`crate::quant::model_size_bytes_masked`]), mask-aware for
+//! layer-wise mixed precision.
+//!
+//! Scalarization: `w_acc * acc - w_lat * lat/lat_ref - w_size *
+//! size/size_ref`, with the fp32 deployment as the reference point, so
+//! all three terms live on comparable O(1) scales and a NaN accuracy
+//! propagates to a NaN score (which every ranking site degrades on
+//! instead of panicking).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::quant::{model_size_bytes_masked, model_size_fp32, ConfigSpace, VtaConfig};
+use crate::vta::estimate_cycles;
+use crate::zoo::ZooModel;
+
+use super::devices::DeviceProfile;
+
+/// The objective presets the CLI exposes (`--objective`).
+pub const OBJECTIVES: [&str; 4] = ["acc", "lat", "size", "balanced"];
+
+/// Non-negative weights of the scalarized objective. `accuracy` weighs
+/// the measured Top-1; `latency` and `size` weigh the *relative* cost
+/// against the fp32 deployment (so a weight of 1 means "one accuracy
+/// point is worth the entire fp32 latency/size budget").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ObjectiveWeights {
+    pub accuracy: f64,
+    pub latency: f64,
+    pub size: f64,
+}
+
+impl ObjectiveWeights {
+    /// Accuracy-only tuning (the paper's objective).
+    pub fn accuracy_only() -> ObjectiveWeights {
+        ObjectiveWeights { accuracy: 1.0, latency: 0.0, size: 0.0 }
+    }
+
+    /// Parse a CLI preset. Unknown names are a descriptive error, not a
+    /// silent default.
+    pub fn parse(name: &str) -> Result<ObjectiveWeights> {
+        Ok(match name {
+            "acc" => Self::accuracy_only(),
+            "lat" => ObjectiveWeights { accuracy: 0.6, latency: 0.4, size: 0.0 },
+            "size" => ObjectiveWeights { accuracy: 0.6, latency: 0.0, size: 0.4 },
+            "balanced" => ObjectiveWeights { accuracy: 0.6, latency: 0.2, size: 0.2 },
+            other => {
+                anyhow::bail!("unknown objective {other:?} (try one of {OBJECTIVES:?})")
+            }
+        })
+    }
+
+    /// Is this plain accuracy tuning (no cost model needed)?
+    pub fn is_accuracy_only(&self) -> bool {
+        self.latency == 0.0 && self.size == 0.0
+    }
+
+    /// Compact label for CSVs and logs.
+    pub fn slug(&self) -> String {
+        format!("a{:.2}_l{:.2}_s{:.2}", self.accuracy, self.latency, self.size)
+    }
+
+    /// Fold a measured accuracy and a config's static cost into the
+    /// scalar the search maximizes (see the module docs for the formula).
+    pub fn score(&self, accuracy: f64, cost: ConfigCost, refs: &CostRefs) -> f64 {
+        self.accuracy * accuracy
+            - self.latency * (cost.latency_ms / refs.latency_ms)
+            - self.size * (cost.size_bytes / refs.size_bytes)
+    }
+}
+
+/// Static per-config deployment cost (accuracy is measured, these two
+/// are modeled).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ConfigCost {
+    pub latency_ms: f64,
+    pub size_bytes: f64,
+}
+
+/// Reference (fp32) costs the relative terms normalize against.
+#[derive(Clone, Copy, Debug)]
+pub struct CostRefs {
+    pub latency_ms: f64,
+    pub size_bytes: f64,
+}
+
+/// Per-config (latency, bytes) table for one (model, space, device):
+/// built once per search, O(|S|) cheap shape arithmetic, no measurement.
+pub struct CostModel {
+    costs: Vec<ConfigCost>,
+    pub refs: CostRefs,
+    /// Human-readable latency source ("CPU(i7-8700)" or "VTA@100MHz").
+    pub target: String,
+}
+
+impl CostModel {
+    /// Build the cost table for every config of `space`. The latency
+    /// source is the space-appropriate one: VTA cycle totals for the
+    /// integer-only space (`device` is ignored there -- the model
+    /// deploys on the accelerator, not the CPU/GPU), the analytical
+    /// `device` profile at per-layer resolution otherwise.
+    pub fn build(
+        model: &ZooModel,
+        space: &dyn ConfigSpace,
+        device: &DeviceProfile,
+        vta_clock_mhz: f64,
+    ) -> Result<CostModel> {
+        let graph = &model.graph;
+        let layer_macs = graph.layer_macs()?;
+        let n_layers = layer_macs.len();
+        // resolve every layer's weight/bias element counts up front so a
+        // model with a broken weight map fails loudly here instead of
+        // silently pricing size_bytes = 0 (the size accounting callbacks
+        // below are infallible by signature)
+        let mut layer_dims: HashMap<String, (usize, usize)> = HashMap::new();
+        for layer in graph.layers() {
+            let w = model.weights.get(&format!("{layer}_w"))?.len();
+            let b = model.weights.get(&format!("{layer}_b"))?.len();
+            layer_dims.insert(layer, (w, b));
+        }
+        let dims = |layer: &str| layer_dims[layer];
+        let is_vta = space.tag() == "vta";
+
+        // VTA latency depends only on the fusion bit: walk the graph
+        // twice up front instead of once per config
+        let vta_ms = if is_vta {
+            Some((
+                estimate_cycles(graph, true, 1)?.ms_at(vta_clock_mhz),
+                estimate_cycles(graph, false, 1)?.ms_at(vta_clock_mhz),
+            ))
+        } else {
+            None
+        };
+        let refs = CostRefs {
+            latency_ms: match vta_ms {
+                // the VTA reference is the slower (unfused) deployment;
+                // there is no fp32 path on the integer-only accelerator
+                Some((_, unfused)) => unfused,
+                None => device.fp32_latency_s(graph.macs()?, n_layers) * 1e3,
+            },
+            size_bytes: model_size_fp32(graph, &dims).max(1) as f64,
+        };
+
+        let mut costs = Vec::with_capacity(space.size());
+        for i in 0..space.size() {
+            let plan = space.plan(i)?;
+            let mask = plan.resolve_mask(n_layers)?;
+            let latency_ms = match vta_ms {
+                Some((fused, unfused)) => {
+                    if VtaConfig::from_index(i)?.fusion {
+                        fused
+                    } else {
+                        unfused
+                    }
+                }
+                None => device.masked_latency_ms(&layer_macs, &mask),
+            };
+            let size_bytes =
+                model_size_bytes_masked(graph, &dims, plan.base.gran, &mask) as f64;
+            costs.push(ConfigCost { latency_ms, size_bytes });
+        }
+        Ok(CostModel {
+            costs,
+            refs,
+            target: if is_vta {
+                format!("VTA@{vta_clock_mhz}MHz")
+            } else {
+                device.name.to_string()
+            },
+        })
+    }
+
+    /// Static cost of config `i`.
+    pub fn cost(&self, i: usize) -> Result<ConfigCost> {
+        self.costs
+            .get(i)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("no cost entry for config {i}"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.costs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.costs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::vta_space;
+    use crate::zoo::synthetic_model;
+
+    #[test]
+    fn presets_parse_and_unknowns_error() {
+        for name in OBJECTIVES {
+            let w = ObjectiveWeights::parse(name).unwrap();
+            assert!(w.accuracy > 0.0, "{name} must keep accuracy in the loop");
+        }
+        assert!(ObjectiveWeights::parse("acc").unwrap().is_accuracy_only());
+        assert!(!ObjectiveWeights::parse("balanced").unwrap().is_accuracy_only());
+        let err = ObjectiveWeights::parse("speed").unwrap_err().to_string();
+        assert!(err.contains("speed") && err.contains("balanced"), "{err}");
+    }
+
+    #[test]
+    fn vta_cost_model_prices_fusion() {
+        let model = synthetic_model(8, 4, 4, 3).unwrap();
+        let space = vta_space();
+        let cm = CostModel::build(&model, space.as_ref(), &super::super::DEVICES[1], 100.0)
+            .unwrap();
+        assert_eq!(cm.len(), 12);
+        assert!(cm.target.starts_with("VTA@"));
+        for i in 0..space.size() {
+            let cfg = VtaConfig::from_index(i).unwrap();
+            let cost = cm.cost(i).unwrap();
+            // size is fusion/calib-independent on the VTA (same int8 tensors)
+            assert_eq!(cost.size_bytes, cm.cost(0).unwrap().size_bytes);
+            // fused configs are strictly faster, and nothing beats the
+            // unfused reference
+            if cfg.fusion {
+                assert!(cost.latency_ms < cm.refs.latency_ms);
+            } else {
+                assert_eq!(cost.latency_ms, cm.refs.latency_ms);
+            }
+        }
+        assert!(cm.cost(12).is_err());
+    }
+
+    #[test]
+    fn device_cost_model_prices_fp32_layers() {
+        let model = synthetic_model(8, 4, 4, 3).unwrap();
+        let space = crate::quant::general_space();
+        let dev = &super::super::DEVICES[1]; // i7: naive int8 slower than fp32
+        let cm = CostModel::build(&model, space.as_ref(), dev, 100.0).unwrap();
+        assert_eq!(cm.len(), 96);
+        for i in 0..space.size() {
+            let plan = space.plan(i).unwrap();
+            let cost = cm.cost(i).unwrap();
+            if plan.base.mixed {
+                // mixed precision keeps first+last fp32: cheaper latency
+                // on naive-int8 CPUs, bigger serialized size than the
+                // same config without the bypass
+                let int8_twin = crate::quant::QuantConfig {
+                    mixed: false,
+                    ..plan.base
+                };
+                let base = cm.cost(int8_twin.index()).unwrap();
+                assert!(cost.latency_ms < base.latency_ms, "config {i}");
+                assert!(cost.size_bytes > base.size_bytes, "config {i}");
+            }
+            assert!(cost.size_bytes < cm.refs.size_bytes, "int8 must shrink");
+        }
+    }
+
+    #[test]
+    fn scalarization_trades_accuracy_against_cost() {
+        let w = ObjectiveWeights::parse("balanced").unwrap();
+        let refs = CostRefs { latency_ms: 10.0, size_bytes: 1000.0 };
+        let cheap = ConfigCost { latency_ms: 5.0, size_bytes: 250.0 };
+        let dear = ConfigCost { latency_ms: 20.0, size_bytes: 1000.0 };
+        // equal accuracy: the cheaper deployment must score higher
+        assert!(w.score(0.7, cheap, &refs) > w.score(0.7, dear, &refs));
+        // a big enough accuracy edge outweighs the cost gap
+        assert!(w.score(0.95, dear, &refs) > w.score(0.2, cheap, &refs));
+        // NaN accuracy propagates instead of masquerading as a number
+        assert!(w.score(f64::NAN, cheap, &refs).is_nan());
+        // accuracy-only ignores cost entirely
+        let a = ObjectiveWeights::accuracy_only();
+        assert_eq!(a.score(0.5, dear, &refs), 0.5);
+    }
+}

@@ -1,7 +1,12 @@
 //! Experiment drivers that regenerate every table and figure of the
-//! paper (the index lives in DESIGN.md §5). The bench binaries
-//! (rust/benches/*) are thin CLIs over this module; results are printed
-//! and also written as CSV under `results/`.
+//! paper (the index lives in DESIGN.md §5), plus the multi-objective
+//! Pareto experiments the deployment story adds on top. The bench
+//! binaries (rust/benches/*) are thin CLIs over this module; results
+//! are printed and also written as CSV under `results/`.
+//!
+//! Ranking in this module is NaN-safe (`accuracy_table` holes are NaN).
+
+#![deny(clippy::unwrap_used)]
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -10,8 +15,8 @@ use anyhow::{Context, Result};
 
 use crate::calib::{calibrate, CalibBackend};
 use crate::coordinator::{
-    Evaluator, HloEvaluator, InterpEvaluator, OracleEvaluator, Quantune,
-    SharedEvaluator, DEVICES, GENERAL_SPACE_TAG,
+    CostModel, Evaluator, HloEvaluator, InterpEvaluator, ObjectiveWeights,
+    OracleEvaluator, Quantune, SharedEvaluator, DEVICES, GENERAL_SPACE_TAG,
 };
 use crate::data::{synthetic_dataset, Dataset};
 use crate::interp::{argmax_batch, Interpreter};
@@ -24,7 +29,7 @@ use crate::quant::{
 use crate::runtime::Runtime;
 use crate::search::SearchTrace;
 use crate::util::pool::Pool;
-use crate::util::{stats::mean, Csv, Pcg32, Timer};
+use crate::util::{nan_min_cmp, stats::mean, Csv, Pcg32, Timer};
 use crate::vta::VtaModel;
 use crate::zoo::{self, synthetic_model, ZooModel};
 
@@ -79,8 +84,12 @@ pub fn table1(q: &mut Quantune, runtime: &Runtime) -> Result<Vec<BestConfigRow>>
         let (best_i, best_acc) = table
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
+            .max_by(|a, b| nan_min_cmp(a.1, b.1))
+            .ok_or_else(|| anyhow::anyhow!("empty sweep table for {name}"))?;
+        anyhow::ensure!(
+            !best_acc.is_nan(),
+            "{name}: sweep table is all NaN -- no measured config to rank"
+        );
         rows.push(BestConfigRow {
             model: name,
             fp32_top1: model.fp32_top1,
@@ -257,8 +266,8 @@ pub fn table5(q: &Quantune) -> Result<Vec<Table5Row>> {
     for name in available_models(q) {
         let model = q.load_model(&name)?;
         let dims = |layer: &str| {
-            let w = model.weights.get(&format!("{layer}_w")).unwrap();
-            let b = model.weights.get(&format!("{layer}_b")).unwrap();
+            let w = model.weights.get(&format!("{layer}_w")).expect("layer weight");
+            let b = model.weights.get(&format!("{layer}_b")).expect("layer bias");
             (w.len(), b.len())
         };
         let sz = |g, m| model_size_bytes(&model.graph, &dims, g, m);
@@ -341,7 +350,7 @@ pub fn fig3(q: &mut Quantune, runtime: &Runtime) -> Result<Vec<(String, f64)>> {
         .collect();
     let mut ranked: Vec<(String, f64)> =
         names.into_iter().zip(imp.iter().copied()).collect();
-    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    ranked.sort_by(|a, b| nan_min_cmp(&b.1, &a.1));
     let mut csv = Csv::new(&["feature", "gain_importance"]);
     for (n, g) in &ranked {
         csv.row(&[n.clone(), format!("{g:.4}")]);
@@ -410,7 +419,7 @@ pub fn fig5(
                 per_seed.push(trace.trials_to_reach(best, eps).unwrap_or(96) as f64);
                 let mut running = f64::NEG_INFINITY;
                 for (t, trial) in trace.trials.iter().enumerate() {
-                    running = running.max(trial.accuracy);
+                    running = running.max(trial.score);
                     curve_csv.row(&[
                         name.clone(),
                         algo.to_string(),
@@ -427,7 +436,7 @@ pub fn fig5(
                 model: name.clone(),
                 algo: algo.to_string(),
                 trials_to_best: mean(&per_seed),
-                trace: first_trace.unwrap(),
+                trace: first_trace.expect("seeds is non-empty"),
             });
         }
     }
@@ -577,7 +586,8 @@ pub fn fig8(q: &Quantune, eval_n: usize) -> Result<Vec<Fig8Row>> {
                 best = Some((*cfg, acc, cyc));
             }
         }
-        let (cfg, acc, cyc) = best.unwrap();
+        let (cfg, acc, cyc) =
+            best.ok_or_else(|| anyhow::anyhow!("empty VTA config space"))?;
         rows.push(Fig8Row {
             model: name,
             fp32: model.fp32_top1,
@@ -612,7 +622,8 @@ pub struct Fig9Row {
     pub model: String,
     pub fp32_ms: f64,
     pub fq_ms: f64,
-    pub speedup: f64,
+    /// `None` when a timing was degenerate (zero / non-finite)
+    pub speedup: Option<f64>,
     /// modeled relative speedups on (a53, i7, 2080ti)
     pub modeled_speedups: [f64; 3],
 }
@@ -646,7 +657,7 @@ pub fn fig9(q: &Quantune, runtime: &Runtime, reps: usize) -> Result<Vec<Fig9Row>
             r.model.clone(),
             format!("{:.3}", r.fp32_ms),
             format!("{:.3}", r.fq_ms),
-            format!("{:.3}", r.speedup),
+            r.speedup.map_or_else(|| "n/a".to_string(), |s| format!("{s:.3}")),
             format!("{:.3}", r.modeled_speedups[0]),
             format!("{:.3}", r.modeled_speedups[1]),
             format!("{:.3}", r.modeled_speedups[2]),
@@ -720,8 +731,8 @@ pub fn pareto_layerwise(
     let accs = Pool::auto().map(&configs, |&i| ev.measure_shared(i))?;
 
     let dims = |layer: &str| {
-        let w = model.weights.get(&format!("{layer}_w")).unwrap();
-        let b = model.weights.get(&format!("{layer}_b")).unwrap();
+        let w = model.weights.get(&format!("{layer}_w")).expect("layer weight");
+        let b = model.weights.get(&format!("{layer}_b")).expect("layer bias");
         (w.len(), b.len())
     };
     let total_layers = model.graph.layers().len();
@@ -771,14 +782,13 @@ pub fn pareto_synthetic_base() -> QuantConfig {
     }
 }
 
-/// Self-contained layer-wise Pareto experiment (no artifacts needed):
-/// a synthetic model whose middle conv gets a planted per-channel weight
-/// spread (the paper's "fragile depthwise layer" failure mode), labels
-/// taken from the fp32 model's own predictions so accuracy measures
-/// quantization fidelity, and the full 2^K mask space measured through
-/// the interpreter. The expected shape: un-quantizing the fragile layer
-/// recovers most of the accuracy for a fraction of the fp32 bytes.
-pub fn pareto_layerwise_synthetic() -> Result<Vec<LayerwiseParetoRow>> {
+/// The fragile synthetic setup shared by the Pareto experiments: a
+/// synthetic model whose middle conv gets a planted per-channel weight
+/// spread (the paper's "fragile depthwise layer" failure mode), a
+/// calibration pool, and an eval split labeled with the fp32 model's
+/// own predictions so accuracy measures quantization fidelity
+/// (1.0 = lossless).
+pub fn fragile_synthetic_setup() -> Result<(ZooModel, Dataset, Dataset)> {
     let mut model = synthetic_model(10, 4, 8, 9)?;
     model.name = "syn_fragile".to_string();
     // Function-preserving channel rescaling (the fragile-layer pathology
@@ -792,16 +802,16 @@ pub fn pareto_layerwise_synthetic() -> Result<Vec<LayerwiseParetoRow>> {
     // fp32 while everything else stays int8.
     {
         let spread = |j: usize| (2.0f32).powf(5.0 * j as f32 / 7.0); // 1..32
-        let w = model.weights.tensors.get_mut("c2_w").unwrap();
-        let c = *w.shape.last().unwrap();
+        let w = model.weights.tensors.get_mut("c2_w").expect("c2_w exists");
+        let c = *w.shape.last().expect("c2_w has a channel axis");
         for (i, x) in w.data.iter_mut().enumerate() {
             *x /= spread(i % c);
         }
-        let b = model.weights.tensors.get_mut("c2_b").unwrap();
+        let b = model.weights.tensors.get_mut("c2_b").expect("c2_b exists");
         for (j, x) in b.data.iter_mut().enumerate() {
             *x /= spread(j);
         }
-        let d = model.weights.tensors.get_mut("d_w").unwrap();
+        let d = model.weights.tensors.get_mut("d_w").expect("d_w exists");
         let out = d.shape[1];
         for (i, x) in d.data.iter_mut().enumerate() {
             *x *= spread(i / out);
@@ -819,7 +829,16 @@ pub fn pareto_layerwise_synthetic() -> Result<Vec<LayerwiseParetoRow>> {
         labels.extend(argmax_batch(&logits).into_iter().map(|p| p as u8));
     }
     eval.labels = labels;
+    Ok((model, calib, eval))
+}
 
+/// Self-contained layer-wise Pareto experiment (no artifacts needed):
+/// the [`fragile_synthetic_setup`] model over the full 2^K mask space,
+/// measured through the interpreter. The expected shape: un-quantizing
+/// the fragile layer recovers most of the accuracy for a fraction of
+/// the fp32 bytes.
+pub fn pareto_layerwise_synthetic() -> Result<Vec<LayerwiseParetoRow>> {
+    let (model, calib, eval) = fragile_synthetic_setup()?;
     pareto_layerwise(
         &model,
         &calib,
@@ -828,6 +847,171 @@ pub fn pareto_layerwise_synthetic() -> Result<Vec<LayerwiseParetoRow>> {
         3,
         41,
         "pareto_layerwise_synthetic.csv",
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Multi-objective Pareto experiment: accuracy vs latency vs bytes over a
+// grid of objective weights (the deployment trade-off the tuner now
+// searches directly)
+// ---------------------------------------------------------------------------
+
+/// One measured point of a space under the three deployment objectives.
+pub struct ObjectiveParetoRow {
+    pub config: usize,
+    pub label: String,
+    pub accuracy: f64,
+    pub latency_ms: f64,
+    pub size_bytes: f64,
+    /// true when no other point is at least as good on all of
+    /// (accuracy, latency, bytes) and strictly better on one
+    pub on_frontier: bool,
+    /// weight settings (by slug) whose scalarized argmax is this config
+    pub picked_by: Vec<String>,
+}
+
+/// 3D dominance marking: maximize accuracy, minimize latency and bytes.
+fn mark_frontier3(rows: &mut [ObjectiveParetoRow]) {
+    let pts: Vec<(f64, f64, f64)> =
+        rows.iter().map(|r| (r.accuracy, r.latency_ms, r.size_bytes)).collect();
+    for (i, r) in rows.iter_mut().enumerate() {
+        r.on_frontier = !pts.iter().enumerate().any(|(j, &(a, l, b))| {
+            j != i
+                && a >= r.accuracy
+                && l <= r.latency_ms
+                && b <= r.size_bytes
+                && (a > r.accuracy || l < r.latency_ms || b < r.size_bytes)
+        });
+    }
+}
+
+/// The weight grid the Pareto experiment scans: the four CLI presets
+/// plus strictly-positive mixtures (whose argmax provably lies on the
+/// frontier -- a dominated point can never maximize a positive-weight
+/// scalarization).
+pub fn objective_weight_grid() -> Vec<ObjectiveWeights> {
+    let mut grid: Vec<ObjectiveWeights> = crate::coordinator::OBJECTIVES
+        .iter()
+        .filter_map(|name| ObjectiveWeights::parse(name).ok())
+        .collect();
+    grid.push(ObjectiveWeights { accuracy: 0.5, latency: 0.4, size: 0.1 });
+    grid.push(ObjectiveWeights { accuracy: 0.5, latency: 0.1, size: 0.4 });
+    grid.push(ObjectiveWeights { accuracy: 0.34, latency: 0.33, size: 0.33 });
+    grid
+}
+
+/// Enumerate `space` exhaustively, measure Top-1 through the interpreter
+/// (configs fan out across the worker pool), price every config with the
+/// static [`CostModel`], mark the 3D Pareto frontier, and record which
+/// weight settings of `weight_grid` pick which config. `csv_name` lands
+/// under `results/`.
+#[allow(clippy::too_many_arguments)]
+pub fn pareto_objectives(
+    model: &ZooModel,
+    calib: &Dataset,
+    eval: &Dataset,
+    space: SpaceRef,
+    device: &crate::coordinator::DeviceProfile,
+    weight_grid: &[ObjectiveWeights],
+    seed: u64,
+    calibration: Option<(CalibCount, std::sync::Arc<crate::calib::CalibrationCache>)>,
+    csv_name: &str,
+) -> Result<Vec<ObjectiveParetoRow>> {
+    let mut ev = InterpEvaluator::new(model, calib, eval, seed).with_space(space.clone());
+    // callers that already calibrated (e.g. to rank a layer-wise space)
+    // hand their cache over instead of recalibrating on first measure
+    if let Some((count, cache)) = calibration {
+        ev = ev.with_calibration(count, cache);
+    }
+    let cost =
+        CostModel::build(model, space.as_ref(), device, crate::vta::PYNQ_CLOCK_MHZ)?;
+    let configs: Vec<usize> = (0..space.size()).collect();
+    let accs = Pool::auto().map(&configs, |&i| ev.measure_shared(i))?;
+
+    let mut rows = Vec::with_capacity(space.size());
+    for (&i, acc) in configs.iter().zip(accs) {
+        let c = cost.cost(i)?;
+        rows.push(ObjectiveParetoRow {
+            config: i,
+            label: space.describe(i)?,
+            accuracy: acc?,
+            latency_ms: c.latency_ms,
+            size_bytes: c.size_bytes,
+            on_frontier: false,
+            picked_by: Vec::new(),
+        });
+    }
+    mark_frontier3(&mut rows);
+    let row_score = |w: &ObjectiveWeights, r: &ObjectiveParetoRow| {
+        let c = crate::coordinator::ConfigCost {
+            latency_ms: r.latency_ms,
+            size_bytes: r.size_bytes,
+        };
+        w.score(r.accuracy, c, &cost.refs)
+    };
+    for w in weight_grid {
+        let winner = rows
+            .iter()
+            .enumerate()
+            .map(|(j, r)| (j, row_score(w, r)))
+            .max_by(|a, b| nan_min_cmp(&a.1, &b.1))
+            .map(|(j, _)| j);
+        if let Some(j) = winner {
+            rows[j].picked_by.push(w.slug());
+        }
+    }
+
+    let mut csv = Csv::new(&[
+        "config", "label", "top1", "latency_ms", "size_bytes", "on_frontier",
+        "picked_by",
+    ]);
+    for r in &rows {
+        csv.row(&[
+            r.config.to_string(),
+            r.label.clone(),
+            format!("{:.4}", r.accuracy),
+            format!("{:.4}", r.latency_ms),
+            format!("{:.0}", r.size_bytes),
+            r.on_frontier.to_string(),
+            r.picked_by.join("+"),
+        ]);
+    }
+    csv.write_file(&results_dir().join(csv_name))?;
+    Ok(rows)
+}
+
+/// Self-contained multi-objective Pareto experiment (no artifacts): the
+/// [`fragile_synthetic_setup`] model's layer-wise space, priced on the
+/// i7 device profile, scanned over [`objective_weight_grid`]. Emits
+/// `results/pareto_objectives_synthetic.csv`.
+pub fn pareto_objectives_synthetic() -> Result<Vec<ObjectiveParetoRow>> {
+    let (model, calib, eval) = fragile_synthetic_setup()?;
+    let base = pareto_synthetic_base();
+    let cache = std::sync::Arc::new(calibrate(
+        &model,
+        &calib,
+        base.calib,
+        &CalibBackend::Interp,
+        41,
+    )?);
+    let space: SpaceRef = std::sync::Arc::new(LayerwiseSpace::rank(
+        &model.name,
+        &model.graph,
+        model.weights_map(),
+        &cache.hists,
+        base,
+        3,
+    )?);
+    pareto_objectives(
+        &model,
+        &calib,
+        &eval,
+        space,
+        &DEVICES[1],
+        &objective_weight_grid(),
+        41,
+        Some((base.calib, cache)),
+        "pareto_objectives_synthetic.csv",
     )
 }
 

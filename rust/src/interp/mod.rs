@@ -384,9 +384,12 @@ pub fn argmax_batch(logits: &Tensor) -> Vec<usize> {
         .map(|row| {
             row.iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0
+                // NaN-lowest: a NaN logit (overflowed activation) loses
+                // to every real logit instead of panicking mid-batch or
+                // (under a bare total_cmp) winning the argmax
+                .max_by(|a, b| crate::util::stats::nan_min_cmp_f32(a.1, b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0)
         })
         .collect()
 }

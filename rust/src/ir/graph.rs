@@ -297,6 +297,29 @@ impl Graph {
         Ok(total)
     }
 
+    /// Multiply-accumulate count per weighted layer, in [`Graph::layers`]
+    /// order (the per-layer resolution the mixed-precision latency model
+    /// needs: each layer runs in fp32 or int8 independently). Sums to
+    /// [`Graph::macs`] -- only conv/dense nodes do MACs.
+    pub fn layer_macs(&self) -> Result<Vec<u64>> {
+        let shapes = self.infer_shapes()?;
+        let mut out = Vec::new();
+        for n in &self.nodes {
+            match &n.op {
+                Op::Conv { k, in_ch, out_ch, groups, .. } => {
+                    let s = &shapes[&n.name];
+                    let per_out = (k * k * in_ch / groups) as u64;
+                    out.push(per_out * (s[0] * s[1] * out_ch) as u64);
+                }
+                Op::Dense { in_dim, out_dim } => {
+                    out.push((*in_dim * *out_dim) as u64);
+                }
+                _ => {}
+            }
+        }
+        Ok(out)
+    }
+
     /// Total parameter element count.
     pub fn num_params(&self) -> u64 {
         let mut total = 0u64;
@@ -414,6 +437,15 @@ mod tests {
         assert_eq!(g.macs().unwrap(), 13824 + 32);
         // conv: 216 w + 8 b; dense: 32 w + 4 b
         assert_eq!(g.num_params(), 216 + 8 + 32 + 4);
+    }
+
+    #[test]
+    fn layer_macs_align_with_layers_and_sum_to_macs() {
+        let g = tiny_graph();
+        let per_layer = g.layer_macs().unwrap();
+        assert_eq!(per_layer.len(), g.layers().len());
+        assert_eq!(per_layer, vec![13824, 32]);
+        assert_eq!(per_layer.iter().sum::<u64>(), g.macs().unwrap());
     }
 
     #[test]

@@ -25,10 +25,47 @@ pub struct LatencyReport {
 }
 
 impl LatencyReport {
-    /// >1 means the quantized model is faster (the paper finds it mostly
-    /// is NOT, for naive kernels).
-    pub fn speedup(&self) -> f64 {
-        self.fp32_ms / self.fq_ms
+    /// fp32-over-quantized speedup: >1 means the quantized model is
+    /// faster (the paper finds it mostly is NOT, for naive kernels).
+    /// `None` when either side is unmeasured, non-finite, or zero --
+    /// a 0 ms `fq_ms` (e.g. a clock too coarse for a tiny model) would
+    /// otherwise report an infinite speedup, and NaN would poison every
+    /// ranking downstream.
+    pub fn speedup(&self) -> Option<f64> {
+        let ratio = self.fp32_ms / self.fq_ms;
+        (self.fp32_ms.is_finite()
+            && self.fq_ms.is_finite()
+            && self.fp32_ms > 0.0
+            && self.fq_ms > 0.0
+            && ratio.is_finite())
+        .then_some(ratio)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::LatencyStats;
+
+    fn report(fp32_ms: f64, fq_ms: f64) -> LatencyReport {
+        let stats = LatencyStats::from_samples(&[1.0]);
+        LatencyReport {
+            model: "t".into(),
+            fp32_ms,
+            fq_ms,
+            fp32_stats: stats.clone(),
+            fq_stats: stats,
+        }
+    }
+
+    #[test]
+    fn speedup_guards_degenerate_measurements() {
+        assert_eq!(report(2.0, 1.0).speedup(), Some(2.0));
+        assert_eq!(report(1.0, 4.0).speedup(), Some(0.25));
+        assert_eq!(report(2.0, 0.0).speedup(), None, "zero fq would be inf");
+        assert_eq!(report(0.0, 1.0).speedup(), None);
+        assert_eq!(report(f64::NAN, 1.0).speedup(), None);
+        assert_eq!(report(2.0, f64::INFINITY).speedup(), None);
     }
 }
 

@@ -14,7 +14,11 @@
 //!   12-element VTA integer-only space (Eq. 23), and per-model layer-wise
 //!   mixed-precision spaces ([`quant::LayerwiseSpace`]) all flow through
 //!   the same driver, and database records carry a space tag so transfer
-//!   learning never mixes incompatible feature vectors.
+//!   learning never mixes incompatible feature vectors. The driver is
+//!   also objective-agnostic: [`coordinator::objective`] scalarizes
+//!   (Top-1, modeled latency, serialized bytes) so every algorithm and
+//!   space tunes deployment trade-offs unchanged, with trials, traces,
+//!   and records carrying the per-component breakdown.
 //! - L2 (python/compile/model.py): JAX forward graphs for the six CNN
 //!   models, fp32 + fake-quant parameterized variants, AOT-lowered to HLO
 //!   text artifacts at build time.

@@ -6,6 +6,7 @@
 //!                    [--space general|vta|layerwise] [--layers K]
 //! quantune search    [--models mn,..] [--algo xgb_t] [--seed N] [--budget N]
 //!                    [--space general|vta|layerwise] [--layers K]
+//!                    [--objective acc|lat|size|balanced] [--device a53|i7|2080ti]
 //! quantune quantize  [--models mn,..] [--config IDX]   # deploy report
 //! quantune vta       [--models mn,..]                  # integer-only path
 //! quantune latency   [--models mn,..] [--reps N]
@@ -17,6 +18,15 @@
 //! calibration-driven fragility ranking of the top `--layers K` weighted
 //! layers on top of the model's best known base config.
 //!
+//! `--objective` selects what the search maximizes: plain Top-1
+//! accuracy (`acc`, the paper's objective) or a weighted scalarization
+//! that also prices modeled deployment latency (`lat`), serialized
+//! model bytes (`size`), or both (`balanced`). Latency comes from the
+//! `--device` profile for the general/layer-wise spaces and from VTA
+//! cycle totals for the VTA space. Without an artifacts directory,
+//! `search` falls back to the self-contained synthetic model, so the
+//! multi-objective path runs from a clean checkout.
+//!
 //! Everything the CLI does is also exposed as library API; the benches in
 //! rust/benches regenerate the paper's tables and figures.
 
@@ -25,12 +35,12 @@ use anyhow::{Context, Result};
 use quantune::calib::{calibrate, CalibBackend};
 use quantune::config::Cli;
 use quantune::coordinator::{
-    Evaluator, HloEvaluator, InterpEvaluator, OracleEvaluator, Quantune, ALGORITHMS,
-    GENERAL_SPACE_TAG,
+    DeviceProfile, Evaluator, HloEvaluator, InterpEvaluator, ObjectiveWeights,
+    OracleEvaluator, Quantune, ALGORITHMS, DEVICES, GENERAL_SPACE_TAG,
 };
 use quantune::quant::{
     general_space, model_size_bytes, model_size_fp32, vta_space, ConfigSpace,
-    Granularity, QuantConfig, SpaceRef, VtaConfig,
+    Granularity, QuantConfig, SpaceRef, VtaConfig, MAX_LAYERWISE_BITS,
 };
 use quantune::runtime::Runtime;
 use quantune::util::{fmt_duration, Pool, Timer};
@@ -55,6 +65,7 @@ fn print_help() {
          commands: info | sweep | search | quantize | vta | latency\n\
          common options: --artifacts DIR --models mn,shn,... --seed N\n\
          space options:  --space general|vta|layerwise --layers K (layerwise cap)\n\
+         objectives:     --objective acc|lat|size|balanced --device a53|i7|2080ti\n\
          env: QUANTUNE_THREADS=N sizes the worker pool (default: all cores)\n\
          see README.md and rust/BENCHMARKS.md for details"
     );
@@ -81,6 +92,11 @@ fn resolve_space(cli: &Cli, q: &Quantune, model: &zoo::ZooModel) -> Result<Space
                 }
             };
             let k = cli.opt_usize("layers", 4)?;
+            anyhow::ensure!(
+                (1..=MAX_LAYERWISE_BITS).contains(&k),
+                "--layers {k} is out of range: the layer-wise space enumerates 2^K \
+                 configs, so K must be in 1..={MAX_LAYERWISE_BITS}"
+            );
             q.layerwise_space(model, base, k)
         }
         other => anyhow::bail!("unknown space {other:?} (try general|vta|layerwise)"),
@@ -129,6 +145,7 @@ fn cmd_info(cli: &Cli) -> Result<()> {
 
 fn cmd_sweep(cli: &Cli) -> Result<()> {
     let mut q = Quantune::open(cli.artifacts())?;
+    q.device = parse_device(cli)?; // prices the per-record latency column
     let backend = cli.opt_or("backend", "hlo");
     let runtime = if backend == "hlo" { Some(Runtime::cpu()?) } else { None };
     for name in cli.models() {
@@ -177,8 +194,8 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
         let best = table
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
+            .max_by(|a, b| quantune::util::nan_min_cmp(a.1, b.1))
+            .context("empty sweep table")?;
         println!(
             "{name}: best {} top1 {:.2}% (fp32 {:.2}%) in {}",
             space.describe(best.0)?,
@@ -190,25 +207,67 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--device` (deploy target of the latency objective).
+fn parse_device(cli: &Cli) -> Result<DeviceProfile> {
+    match cli.opt("device") {
+        None => Ok(DEVICES[1]), // i7-8700
+        Some(key) => DeviceProfile::by_key(key).copied().ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown device {key:?} (try one of {:?})",
+                DeviceProfile::KEYS
+            )
+        }),
+    }
+}
+
 fn cmd_search(cli: &Cli) -> Result<()> {
-    let q = Quantune::open(cli.artifacts())?;
     let algo = cli.opt_or("algo", "xgb_t");
     anyhow::ensure!(
         ALGORITHMS.contains(&algo.as_str()),
         "--algo must be one of {ALGORITHMS:?}"
     );
+    let weights = ObjectiveWeights::parse(&cli.opt_or("objective", "acc"))?;
+    let device = parse_device(cli)?;
     let seed = cli.opt_u64("seed", 7)?;
-    for name in cli.models() {
-        let model = q.load_model(&name)?;
-        let space = resolve_space(cli, &q, &model)?;
+    // the synthetic fallback covers exactly the clean-checkout case: the
+    // DEFAULT artifacts directory is absent. An explicit --artifacts
+    // path (typo) or a present-but-broken directory (corrupt database)
+    // must stay a hard error, not a silent switch to a different model.
+    let artifacts = cli.artifacts();
+    let synthetic = cli.opt("artifacts").is_none() && !artifacts.exists();
+    let (mut q, models) = if synthetic {
+        if cli.opt("models").is_some() {
+            eprintln!("[search] no artifacts; ignoring --models");
+        }
+        eprintln!(
+            "[search] no artifacts at {}; tuning the self-contained synthetic model",
+            artifacts.display()
+        );
+        (Quantune::synthetic(), vec![Quantune::synthetic_model()?])
+    } else {
+        let q = Quantune::open(artifacts)?;
+        let models = cli
+            .models()
+            .iter()
+            .map(|n| q.load_model(n))
+            .collect::<Result<Vec<_>>>()?;
+        (q, models)
+    };
+    q.device = device;
+    for model in &models {
+        let name = &model.name;
+        let space = resolve_space(cli, &q, model)?;
         let budget = cli.opt_usize("budget", space.size())?;
         // search against the sweep oracle when this space's ground truth
         // is in the database (fast, identical ground truth); fall back to
         // live interpreter measurement otherwise
-        let table = q.db.accuracy_table(&model.name, &space.tag(), space.size());
+        let table = q.db.accuracy_table(name, &space.tag(), space.size());
         let have_oracle = table.iter().any(|a| !a.is_nan());
+        // real models measure the general space through the sweep oracle
+        // only (a live 96-config HLO pass belongs to `sweep`); the
+        // synthetic fallback measures any space through the interpreter
         anyhow::ensure!(
-            have_oracle || space.tag() != GENERAL_SPACE_TAG,
+            have_oracle || synthetic || space.tag() != GENERAL_SPACE_TAG,
             "{name}: no sweep in database -- run `quantune sweep` first"
         );
         let (calib_pool, eval) = (q.calib_pool.clone(), q.eval.clone());
@@ -218,21 +277,57 @@ fn cmd_search(cli: &Cli) -> Result<()> {
             oracle = OracleEvaluator::new(table);
             &mut oracle
         } else {
-            interp = InterpEvaluator::new(&model, &calib_pool, &eval, q.seed)
+            interp = InterpEvaluator::new(model, &calib_pool, &eval, q.seed)
                 .with_space(space.clone());
             &mut interp
         };
-        let trace = q.search(&model, &space, &algo, evaluator, budget, seed)?;
-        println!(
-            "{name}: {algo} best {} top1 {:.2}% after {} trials (budget {budget}, \
-             space {})",
-            space.describe(trace.best_config)?,
-            trace.best_accuracy * 100.0,
-            trace
-                .trials_to_reach(trace.best_accuracy, 1e-9)
-                .unwrap_or(trace.trials.len()),
-            space.tag(),
-        );
+        // xgb_t with nothing to transfer from is an error in the library
+        // (the experiment drivers must not silently change algorithm);
+        // the CLI degrades to cold-start xgb with a notice instead
+        let algo = if algo == "xgb_t"
+            && !q.db.has_transfer_records(name, &space.tag())
+        {
+            eprintln!(
+                "[{name}] no other-model trials in the {:?} space; \
+                 falling back to cold-start xgb",
+                space.tag()
+            );
+            "xgb"
+        } else {
+            algo.as_str()
+        };
+        let trace = if weights.is_accuracy_only() {
+            q.search(model, &space, algo, evaluator, budget, seed)?
+        } else {
+            q.search_objective(model, &space, algo, evaluator, budget, seed, weights)?
+        };
+        match trace.best_components {
+            None => println!(
+                "{name}: {algo} best {} top1 {:.2}% after {} trials (budget {budget}, \
+                 space {})",
+                space.describe(trace.best_config)?,
+                trace.best_score * 100.0,
+                trace
+                    .trials_to_reach(trace.best_score, 1e-9)
+                    .unwrap_or(trace.trials.len()),
+                space.tag(),
+            ),
+            Some(c) => println!(
+                "{name}: {algo} best {} score {:.4} [{}] after {} trials \
+                 (top1 {:.2}% | latency {:.3} ms | {:.1} KiB; budget {budget}, \
+                 space {})",
+                space.describe(trace.best_config)?,
+                trace.best_score,
+                weights.slug(),
+                trace
+                    .trials_to_reach(trace.best_score, 1e-9)
+                    .unwrap_or(trace.trials.len()),
+                c.accuracy * 100.0,
+                c.latency_ms,
+                c.size_bytes / 1024.0,
+                space.tag(),
+            ),
+        }
     }
     Ok(())
 }
@@ -335,9 +430,12 @@ fn cmd_latency(cli: &Cli) -> Result<()> {
     for name in cli.models() {
         let model = q.load_model(&name)?;
         let report = quantune::latency::fp32_vs_fq_b1(&q, &model, &runtime, reps)?;
+        let speedup = report
+            .speedup()
+            .map_or_else(|| "n/a (degenerate timing)".into(), |s| format!("{s:.2}x"));
         println!(
-            "  {name}: fp32 {:.2} ms | int8(fq) {:.2} ms | speedup {:.2}x",
-            report.fp32_ms, report.fq_ms, report.speedup()
+            "  {name}: fp32 {:.2} ms | int8(fq) {:.2} ms | speedup {speedup}",
+            report.fp32_ms, report.fq_ms
         );
     }
     Ok(())

@@ -1,20 +1,82 @@
 //! Configuration search algorithms (paper §5-6.2, Fig 5/6).
 //!
 //! Five algorithms share one driver interface: given the history of
-//! (config index, measured accuracy) pairs, propose the next config to
+//! (config index, measured score) pairs, propose the next config to
 //! measure. `random`, `grid`, and `genetic` are the paper's baselines;
 //! `xgb` is the cost-model search (Algorithm 1), and `xgb_t` adds
 //! transfer learning from other models' trial databases.
+//!
+//! The score every algorithm maximizes is whatever the measure closure
+//! returns: plain Top-1 accuracy for the paper's experiments, or a
+//! scalarized multi-objective value (accuracy / predicted latency /
+//! model bytes, see `coordinator::objective`) -- the algorithms are
+//! objective-agnostic. A [`Measured`] result optionally carries the
+//! per-component breakdown, which [`SearchTrace`] preserves per trial.
+//!
+//! Ranking is NaN-safe throughout: a NaN score (e.g. a database hole
+//! propagated through an oracle table) degrades to "worst" instead of
+//! panicking in a comparator (see [`crate::util::nan_min_cmp`]).
+
+#![deny(clippy::unwrap_used)]
 
 use crate::quant::{ConfigSpace, SpaceRef};
-use crate::util::Pcg32;
+use crate::util::{nan_min_cmp, Pcg32};
 use crate::xgb::{XgbModel, XgbParams};
+
+/// Per-component breakdown of one measurement (the three objective axes
+/// of the deployment story: Top-1 accuracy, predicted per-image latency
+/// on the deploy target, and serialized quantized model bytes).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Components {
+    pub accuracy: f64,
+    pub latency_ms: f64,
+    pub size_bytes: f64,
+}
+
+/// What a measure closure hands back to [`run_search`]: the scalar the
+/// algorithms maximize, plus (for multi-objective runs) the component
+/// breakdown behind it. A bare `f64` converts to an accuracy-only
+/// measurement, so existing accuracy-tuning closures work unchanged.
+#[derive(Clone, Copy, Debug)]
+pub struct Measured {
+    pub score: f64,
+    pub components: Option<Components>,
+}
+
+impl From<f64> for Measured {
+    fn from(score: f64) -> Measured {
+        Measured { score, components: None }
+    }
+}
+
+impl From<(f64, Components)> for Measured {
+    fn from((score, components): (f64, Components)) -> Measured {
+        Measured { score, components: Some(components) }
+    }
+}
 
 /// One measured trial.
 #[derive(Clone, Copy, Debug)]
 pub struct Trial {
     pub config: usize,
-    pub accuracy: f64,
+    /// The scalar objective value being maximized (Top-1 accuracy when
+    /// tuning accuracy alone).
+    pub score: f64,
+    /// Component breakdown when the measurement was multi-objective.
+    pub components: Option<Components>,
+}
+
+impl Trial {
+    /// Accuracy-only trial (score IS the Top-1 accuracy).
+    pub fn of(config: usize, score: f64) -> Trial {
+        Trial { config, score, components: None }
+    }
+
+    /// The measured Top-1 accuracy: the component breakdown's when one
+    /// was recorded, the scalar score otherwise.
+    pub fn accuracy(&self) -> f64 {
+        self.components.map_or(self.score, |c| c.accuracy)
+    }
 }
 
 /// A search algorithm proposing config indices in `0..space`.
@@ -97,9 +159,10 @@ impl SearchAlgo for GridSearch {
 
 /// Binary-encoded GA over a [`crate::quant::ConfigSpace`] genome (7 bits
 /// for the general QuantConfig space), mirroring the R `GA` package
-/// defaults the paper used: fitness = Top-1 accuracy, tournament-of-2
+/// defaults the paper used: fitness = the measured score, tournament-of-2
 /// selection, single-point crossover (p=0.8), bit-flip mutation (p=0.1),
-/// elitism of 1.
+/// elitism of 1. A NaN score counts as the worst possible fitness, so a
+/// poisoned trial can never be selected as the elite.
 pub struct GeneticSearch {
     rng: Pcg32,
     space: SpaceRef,
@@ -133,8 +196,13 @@ impl GeneticSearch {
             .iter()
             .rev()
             .find(|t| t.config == idx)
-            .map(|t| t.accuracy)
-            .unwrap_or(0.0)
+            // a NaN measurement degrades to the worst fitness instead of
+            // poisoning the elitism/tournament comparisons below; an
+            // unmeasured genome ranks the same -- a 0.0 default would
+            // OUTRANK measured genomes under objectives whose scores go
+            // negative (latency/size penalties), inverting selection
+            .map(|t| if t.score.is_nan() { f64::NEG_INFINITY } else { t.score })
+            .unwrap_or(f64::NEG_INFINITY)
     }
 
     fn evolve(&mut self, history: &[Trial]) {
@@ -143,10 +211,10 @@ impl GeneticSearch {
             .iter()
             .map(|g| Self::fitness_of(self.space.as_ref(), g, history))
             .collect();
-        // elitism: keep the best genome
+        // elitism: keep the best genome (population is never empty)
         let best = (0..self.pop_size)
-            .max_by(|&a, &b| fit[a].partial_cmp(&fit[b]).unwrap())
-            .unwrap();
+            .max_by(|&a, &b| nan_min_cmp(&fit[a], &fit[b]))
+            .expect("non-empty GA population");
         let mut next = vec![self.population[best].clone()];
         while next.len() < self.pop_size {
             let pa = self.tournament(&fit);
@@ -258,13 +326,21 @@ impl XgbSearch {
     pub fn fit_cost_model(&self, history: &[Trial]) -> Option<XgbModel> {
         let mut xs: Vec<Vec<f32>> = Vec::new();
         let mut ys: Vec<f32> = Vec::new();
+        // NaN rows would poison every gradient of the fit: skip them (the
+        // trial still counts against the budget, it just teaches nothing)
         for r in &self.transfer {
+            if r.accuracy.is_nan() {
+                continue;
+            }
             xs.push(r.features.clone());
             ys.push(r.accuracy);
         }
         for t in history {
+            if t.score.is_nan() {
+                continue;
+            }
             xs.push(self.space_features[t.config].clone());
-            ys.push(t.accuracy as f32);
+            ys.push(t.score as f32);
         }
         if xs.is_empty() {
             return None;
@@ -325,57 +401,63 @@ impl SearchAlgo for XgbSearch {
 // Search driver
 // ---------------------------------------------------------------------------
 
-/// Full trace of one search run.
+/// Full trace of one search run. `best_score` is the maximum measured
+/// scalar (Top-1 accuracy for accuracy-only runs); `best_components` is
+/// its breakdown when the run was multi-objective.
 #[derive(Clone, Debug)]
 pub struct SearchTrace {
     pub algo: String,
     pub trials: Vec<Trial>,
-    pub best_accuracy: f64,
+    pub best_score: f64,
     pub best_config: usize,
+    pub best_components: Option<Components>,
 }
 
 impl SearchTrace {
-    /// First trial index (1-based) whose accuracy is within `eps` of
+    /// First trial index (1-based) whose score is within `eps` of
     /// `target`. `None` if never reached.
     pub fn trials_to_reach(&self, target: f64, eps: f64) -> Option<usize> {
         self.trials
             .iter()
-            .position(|t| t.accuracy >= target - eps)
+            .position(|t| t.score >= target - eps)
             .map(|i| i + 1)
     }
 
-    /// Best accuracy after the first `n` trials.
+    /// Best score after the first `n` trials.
     pub fn best_after(&self, n: usize) -> f64 {
         self.trials
             .iter()
             .take(n)
-            .map(|t| t.accuracy)
+            .map(|t| t.score)
             .fold(f64::NEG_INFINITY, f64::max)
     }
 }
 
 /// Run a search algorithm for `budget` proposals, measuring via
 /// `measure` (which may serve cached values -- duplicate proposals from
-/// the GA still count as trials, as they would on real hardware).
+/// the GA still count as trials, as they would on real hardware). The
+/// closure may return a bare `f64` (accuracy-only tuning) or a
+/// `(score, Components)` pair / [`Measured`] for multi-objective runs.
 ///
 /// Errors when no trial ran at all (a zero budget, or an algorithm that
 /// declines its very first proposal) -- there is no best config to
-/// report in that case.
-pub fn run_search(
+/// report in that case. A NaN score is kept in the trace but ranks
+/// below every real measurement, so it can never become the best.
+pub fn run_search<M: Into<Measured>>(
     algo: &mut dyn SearchAlgo,
     budget: usize,
-    mut measure: impl FnMut(usize) -> anyhow::Result<f64>,
+    mut measure: impl FnMut(usize) -> anyhow::Result<M>,
 ) -> anyhow::Result<SearchTrace> {
     let mut trials = Vec::with_capacity(budget);
     for _ in 0..budget {
         let Some(config) = algo.propose(&trials) else { break };
-        let accuracy = measure(config)?;
-        trials.push(Trial { config, accuracy });
+        let m: Measured = measure(config)?.into();
+        trials.push(Trial { config, score: m.score, components: m.components });
     }
     let Some(best) = trials
         .iter()
         .copied()
-        .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+        .max_by(|a, b| nan_min_cmp(&a.score, &b.score))
     else {
         anyhow::bail!(
             "search {:?} ran no trials (budget {budget}); raise the budget or check \
@@ -386,12 +468,14 @@ pub fn run_search(
     Ok(SearchTrace {
         algo: algo.name().to_string(),
         trials,
-        best_accuracy: best.accuracy,
+        best_score: best.score,
         best_config: best.config,
+        best_components: best.components,
     })
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::quant::{general_space, vta_space, QuantConfig};
@@ -414,7 +498,7 @@ mod tests {
         for _ in 0..96 {
             let i = s.propose(&hist).unwrap();
             assert!(seen.insert(i), "repeat {i}");
-            hist.push(Trial { config: i, accuracy: 0.0 });
+            hist.push(Trial::of(i, 0.0));
         }
         assert_eq!(seen.len(), 96);
         assert!(s.propose(&hist).is_none());
@@ -436,9 +520,9 @@ mod tests {
         let trace = run_search(&mut s, 96, |i| Ok(oracle(i))).unwrap();
         // after 12 generations the GA should be near the optimum
         assert!(
-            trace.best_accuracy > 0.9,
+            trace.best_score > 0.9,
             "GA best {} too far from optimum",
-            trace.best_accuracy
+            trace.best_score
         );
     }
 
@@ -477,6 +561,66 @@ mod tests {
         }
         let err = run_search(&mut Never, 10, |_| Ok(0.5)).unwrap_err();
         assert!(err.to_string().contains("never"), "{err}");
+    }
+
+    #[test]
+    fn nan_measurements_never_win_the_trace() {
+        // every odd config measures NaN: the search must not panic, and
+        // the best must come from the real measurements only
+        let mut s = GridSearch::new(12, 0);
+        let trace = run_search(&mut s, 12, |i| {
+            Ok(if i % 2 == 1 { f64::NAN } else { oracle(i) })
+        })
+        .unwrap();
+        assert_eq!(trace.trials.len(), 12);
+        assert!(!trace.best_score.is_nan());
+        assert_eq!(trace.best_config % 2, 0);
+    }
+
+    #[test]
+    fn genetic_survives_nan_fitness() {
+        // a NaN score in the history flows through elitism + tournament
+        // selection on every generation; 40 trials = 5 generations
+        let space = vta_space();
+        let mut s = GeneticSearch::new(space, 9);
+        let trace = run_search(&mut s, 40, |i| {
+            Ok(if i % 3 == 0 { f64::NAN } else { oracle(i) })
+        })
+        .unwrap();
+        assert_eq!(trace.trials.len(), 40);
+        // the elite genome is never a NaN-scored one (NEG_INFINITY fitness)
+        assert!(trace.best_config % 3 != 0, "NaN config won: {}", trace.best_config);
+    }
+
+    #[test]
+    fn all_nan_degrades_to_a_nan_best_without_panicking() {
+        let mut s = GridSearch::new(4, 0);
+        let trace = run_search(&mut s, 4, |_| Ok(f64::NAN)).unwrap();
+        assert!(trace.best_score.is_nan());
+    }
+
+    #[test]
+    fn measured_components_flow_into_the_trace() {
+        let comp = |i: usize| Components {
+            accuracy: oracle(i),
+            latency_ms: 2.0 + i as f64,
+            size_bytes: 1000.0 - i as f64,
+        };
+        let mut s = GridSearch::new(8, 0);
+        let trace =
+            run_search(&mut s, 8, |i| Ok((oracle(i) - 0.01 * i as f64, comp(i)))).unwrap();
+        for t in &trace.trials {
+            let c = t.components.expect("multi-objective trial keeps components");
+            assert_eq!(c.accuracy, oracle(t.config));
+            assert_eq!(t.accuracy(), oracle(t.config));
+        }
+        let best = trace.best_components.unwrap();
+        assert_eq!(best.accuracy, oracle(trace.best_config));
+        // accuracy-only closures leave components empty
+        let mut s2 = GridSearch::new(4, 0);
+        let t2 = run_search(&mut s2, 4, |i| Ok(oracle(i))).unwrap();
+        assert!(t2.trials.iter().all(|t| t.components.is_none()));
+        assert!(t2.best_components.is_none());
     }
 
     #[test]
@@ -546,12 +690,13 @@ mod tests {
         let trace = SearchTrace {
             algo: "x".into(),
             trials: vec![
-                Trial { config: 0, accuracy: 0.2 },
-                Trial { config: 1, accuracy: 0.8 },
-                Trial { config: 2, accuracy: 0.5 },
+                Trial::of(0, 0.2),
+                Trial::of(1, 0.8),
+                Trial::of(2, 0.5),
             ],
-            best_accuracy: 0.8,
+            best_score: 0.8,
             best_config: 1,
+            best_components: None,
         };
         assert_eq!(trace.trials_to_reach(0.8, 0.0), Some(2));
         assert_eq!(trace.trials_to_reach(0.9, 0.0), None);

@@ -9,6 +9,7 @@ pub mod stats;
 pub use json::Json;
 pub use pool::Pool;
 pub use rng::Pcg32;
+pub use stats::nan_min_cmp;
 
 use std::time::Instant;
 

@@ -1,5 +1,32 @@
 //! Small statistics helpers: summary stats, Shannon entropy (Table 4),
-//! and latency aggregation.
+//! latency aggregation, and NaN-safe ranking comparators.
+
+/// Total order on f64 that ranks NaN BELOW every real number (including
+/// -inf). `max_by(nan_min_cmp)` therefore never selects a NaN entry
+/// unless every entry is NaN, and `sort_by(nan_min_cmp)` sinks NaN to
+/// the front instead of panicking. This is the one comparator every
+/// ranking site uses: `Database::accuracy_table` fills holes with NaN,
+/// so a bare `partial_cmp().unwrap()` on anything downstream of it is a
+/// latent panic.
+pub fn nan_min_cmp(a: &f64, b: &f64) -> std::cmp::Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => std::cmp::Ordering::Equal,
+        (true, false) => std::cmp::Ordering::Less,
+        (false, true) => std::cmp::Ordering::Greater,
+        (false, false) => a.total_cmp(b),
+    }
+}
+
+/// [`nan_min_cmp`] for f32 (a bare `total_cmp` would rank positive NaN
+/// ABOVE +inf, so a NaN logit would win an argmax).
+pub fn nan_min_cmp_f32(a: &f32, b: &f32) -> std::cmp::Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => std::cmp::Ordering::Equal,
+        (true, false) => std::cmp::Ordering::Less,
+        (false, true) => std::cmp::Ordering::Greater,
+        (false, false) => a.total_cmp(b),
+    }
+}
 
 /// Mean of a slice (0.0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
@@ -22,7 +49,7 @@ pub fn stddev(xs: &[f64]) -> f64 {
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(nan_min_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -81,6 +108,37 @@ impl LatencyStats {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn nan_ranks_below_everything() {
+        use std::cmp::Ordering;
+        assert_eq!(nan_min_cmp(&f64::NAN, &f64::NEG_INFINITY), Ordering::Less);
+        assert_eq!(nan_min_cmp(&0.0, &f64::NAN), Ordering::Greater);
+        assert_eq!(nan_min_cmp(&f64::NAN, &f64::NAN), Ordering::Equal);
+        assert_eq!(nan_min_cmp(&1.0, &2.0), Ordering::Less);
+        // max_by over a NaN-holed table picks the real maximum
+        let t = [0.3, f64::NAN, 0.9, f64::NAN, 0.5];
+        let best = t
+            .iter()
+            .enumerate()
+            .max_by(|a, b| nan_min_cmp(a.1, b.1))
+            .map(|(i, _)| i);
+        assert_eq!(best, Some(2));
+        // percentile no longer panics on NaN samples
+        let _ = percentile(&[1.0, f64::NAN, 3.0], 50.0);
+        // the f32 variant agrees (bare total_cmp would rank NaN above inf)
+        assert_eq!(
+            nan_min_cmp_f32(&f32::NAN, &f32::INFINITY),
+            Ordering::Less
+        );
+        let row = [0.1f32, f32::NAN, 0.9];
+        let best = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| nan_min_cmp_f32(a.1, b.1))
+            .map(|(i, _)| i);
+        assert_eq!(best, Some(2));
+    }
 
     #[test]
     fn mean_stddev() {

@@ -55,11 +55,22 @@ impl Cycles {
         self.store += other.store;
     }
 
-    /// Wall-clock estimate at the canonical 100 MHz VTA PYNQ clock.
-    pub fn ms_at_100mhz(&self) -> f64 {
-        self.total() as f64 / 100e6 * 1e3
+    /// Wall-clock estimate (milliseconds) at a fabric clock in MHz.
+    /// Device profiles with different clocks (the PYNQ's canonical
+    /// [`PYNQ_CLOCK_MHZ`], an Ultra96 at 333 MHz, ...) all reuse this
+    /// instead of hard-coding 100 MHz. Panics on a non-positive or
+    /// non-finite clock -- those are configuration bugs, not data.
+    pub fn ms_at(&self, clock_mhz: f64) -> f64 {
+        assert!(
+            clock_mhz.is_finite() && clock_mhz > 0.0,
+            "clock must be a positive frequency in MHz, got {clock_mhz}"
+        );
+        self.total() as f64 / (clock_mhz * 1e6) * 1e3
     }
 }
+
+/// The canonical VTA PYNQ fabric clock (MHz).
+pub const PYNQ_CLOCK_MHZ: f64 = 100.0;
 
 #[cfg(test)]
 mod tests {
@@ -86,5 +97,19 @@ mod tests {
         c.add_load(32);
         c.add_store(15);
         assert_eq!(c.total(), 16 + 2 + 1);
+    }
+
+    #[test]
+    fn wallclock_scales_with_the_clock() {
+        let mut c = Cycles::default();
+        c.add_load(16 * 100_000); // 100k cycles
+        assert!((c.ms_at(PYNQ_CLOCK_MHZ) - 1.0).abs() < 1e-12);
+        assert!((c.ms_at(200.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive frequency")]
+    fn zero_clock_is_a_configuration_bug() {
+        let _ = Cycles::default().ms_at(0.0);
     }
 }

@@ -28,7 +28,7 @@ use crate::interp::gemm::gemm_i32;
 use crate::ir::{Act, Graph, Op, PoolKind, Tensor};
 use crate::quant::{Clipping, Histogram, Scheme, VtaConfig};
 
-pub use cycles::Cycles;
+pub use cycles::{Cycles, PYNQ_CLOCK_MHZ};
 
 /// int8 tensor + its power-of-two exponent (scale = 2^exp).
 #[derive(Clone, Debug)]
@@ -409,6 +409,68 @@ impl VtaModel {
     }
 }
 
+/// Static cycle estimate of one integer-only forward pass: replays the
+/// exact cycle accounting of [`VtaModel::forward`] from inferred shapes
+/// alone, without weights, calibration, or input data. The estimate is
+/// *equal* to the counters a real `forward` of a `batch`-image input
+/// reports (the accounting depends only on shapes), which makes it the
+/// VTA latency model for the multi-objective search: configs only differ
+/// in cycles through `fusion`.
+pub fn estimate_cycles(graph: &Graph, fusion: bool, batch: usize) -> Result<Cycles> {
+    let shapes = graph.infer_shapes()?;
+    let elems = |name: &str| -> u64 {
+        (batch * shapes[name].iter().product::<usize>()) as u64
+    };
+    let mut cyc = Cycles::default();
+    cyc.add_load(elems("input"));
+    for node in &graph.nodes {
+        let x = node.inputs[0].as_str();
+        match &node.op {
+            Op::Conv { k, in_ch, out_ch, groups, act, .. } => {
+                let out = &shapes[&node.name];
+                let (oh, ow) = (out[0], out[1]);
+                let cg = in_ch / groups;
+                let outg = out_ch / groups;
+                let m = (batch * oh * ow) as u64;
+                let cols = (k * k * cg) as u64;
+                let qw = (k * k * cg * out_ch) as u64;
+                cyc.add_load(qw + 4 * *out_ch as u64);
+                cyc.add_load(elems(x));
+                for _ in 0..*groups {
+                    cyc.add_gemm(m, cols, outg as u64);
+                }
+                let n_out = m * *out_ch as u64;
+                cyc.add_alu(n_out); // requant shift pass
+                if *act != Act::None {
+                    if fusion {
+                        cyc.add_alu(n_out);
+                    } else {
+                        cyc.add_store(4 * n_out);
+                        cyc.add_load(4 * n_out);
+                        cyc.add_alu(n_out);
+                    }
+                }
+                cyc.add_store(n_out);
+            }
+            Op::Pool { k, .. } => cyc.add_alu(elems(&node.name) * (k * k) as u64),
+            Op::Gap => cyc.add_alu(elems(x)),
+            Op::Add { .. } => cyc.add_alu(3 * elems(&node.name)),
+            Op::Concat => cyc.add_alu(elems(&node.name)),
+            Op::Shuffle { .. } => {
+                cyc.add_load(elems(&node.name));
+                cyc.add_store(elems(&node.name));
+            }
+            Op::Dense { in_dim, out_dim } => {
+                let qw = (in_dim * out_dim) as u64;
+                cyc.add_load(qw + 4 * *out_dim as u64 + (batch * in_dim) as u64);
+                cyc.add_gemm(batch as u64, *in_dim as u64, *out_dim as u64);
+                cyc.add_store(4 * (batch * out_dim) as u64);
+            }
+        }
+    }
+    Ok(cyc)
+}
+
 fn pool_int(
     x: &VTensor,
     kind: PoolKind,
@@ -657,6 +719,29 @@ mod tests {
         for (k, &e) in &tuned.exps {
             assert!(global.exps[k] >= e, "{k}: global {} < tuned {e}", global.exps[k]);
         }
+    }
+
+    #[test]
+    fn static_cycle_estimate_matches_the_real_forward() {
+        // the estimator must replay forward()'s accounting exactly --
+        // it is the VTA latency model of the multi-objective search
+        let (g, weights, hists, x) = rand_setup();
+        for fusion in [true, false] {
+            let m = VtaModel::build(
+                &g,
+                &weights,
+                &hists,
+                &VtaConfig { fusion, ..cfg() },
+            )
+            .unwrap();
+            let (_, _, measured) = m.forward(&x).unwrap();
+            let estimated = estimate_cycles(&g, fusion, x.shape[0]).unwrap();
+            assert_eq!(estimated, measured, "fusion={fusion}");
+        }
+        // fused estimates are strictly cheaper, as in Fig 8
+        let fused = estimate_cycles(&g, true, 1).unwrap();
+        let unfused = estimate_cycles(&g, false, 1).unwrap();
+        assert!(fused.total() < unfused.total());
     }
 
     #[test]

@@ -15,6 +15,11 @@
 //! Our datasets are ≤ a few hundred rows of one-hot + block features, so
 //! the exact greedy algorithm (not the histogram approximation) is the
 //! right tool.
+//!
+//! The split-candidate sort is NaN-safe (`total_cmp`): a NaN feature
+//! value sorts deterministically instead of panicking the comparator.
+
+#![deny(clippy::unwrap_used)]
 
 use anyhow::{ensure, Result};
 
@@ -194,9 +199,7 @@ impl TreeBuilder<'_> {
 
         for f in 0..self.x[0].len() {
             let mut order: Vec<usize> = idx.to_vec();
-            order.sort_by(|&a, &b| {
-                self.x[a][f].partial_cmp(&self.x[b][f]).unwrap()
-            });
+            order.sort_by(|&a, &b| self.x[a][f].total_cmp(&self.x[b][f]));
             let mut gl = 0f32;
             let mut hl = 0f32;
             for w in order.windows(2) {
@@ -225,6 +228,7 @@ impl TreeBuilder<'_> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::util::Pcg32;

@@ -180,14 +180,14 @@ fn search_on_oracle_runs_all_algorithms() {
         let mut oracle = OracleEvaluator::new(table.clone());
         let trace = q.search(&model, &space, algo, &mut oracle, 96, 3).unwrap();
         assert_eq!(trace.algo, algo);
-        assert!(trace.best_accuracy >= 0.55 - 1e-9, "{algo} missed the optimum");
+        assert!(trace.best_score >= 0.55 - 1e-9, "{algo} missed the optimum");
         // the trace's best must be the history max
         let max = trace
             .trials
             .iter()
-            .map(|t| t.accuracy)
+            .map(|t| t.score)
             .fold(f64::NEG_INFINITY, f64::max);
-        assert_eq!(trace.best_accuracy, max);
+        assert_eq!(trace.best_score, max);
     }
 }
 
@@ -204,13 +204,13 @@ fn xgb_t_requires_then_uses_transfer() {
     assert!(q.search(&model, &space, "xgb_t", &mut oracle, 4, 1).is_err());
     // seed the db with another model's records -> works
     for i in 0..QuantConfig::SPACE_SIZE {
-        q.db.add(coordinator::Record {
-            model: "mn".into(),
-            space: GENERAL_SPACE_TAG.into(),
-            config: i,
-            accuracy: 0.5,
-            measure_secs: 0.0,
-        });
+        q.db.add(coordinator::Record::new(
+            "mn".into(),
+            GENERAL_SPACE_TAG.into(),
+            i,
+            0.5,
+            0.0,
+        ));
     }
     if q.artifacts.join("mn_meta.json").exists() {
         let mut oracle = OracleEvaluator::new(table);
@@ -288,7 +288,9 @@ fn sweep_persists_to_database() {
 
 #[test]
 fn trial_type_is_plain_data() {
-    let t = Trial { config: 3, accuracy: 0.5 };
+    let t = Trial::of(3, 0.5);
     let t2 = t;
     assert_eq!(t2.config, t.config);
+    assert_eq!(t2.accuracy(), 0.5);
+    assert!(t2.components.is_none());
 }

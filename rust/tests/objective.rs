@@ -1,0 +1,131 @@
+//! End-to-end guarantees of the multi-objective layer and the NaN-safe
+//! ranking it rides on (synthetic models only, so always active):
+//!
+//! - the Pareto-objectives experiment marks a frontier where no point is
+//!   dominated on (accuracy, latency, bytes), checked independently;
+//! - every strictly-positive weight setting picks a frontier point
+//!   (a dominated point can never maximize a positive scalarization);
+//! - a NaN accuracy record in the database degrades `best_for` and a
+//!   full search instead of panicking;
+//! - `search_objective` over the VTA space prices latency from cycle
+//!   counts and prefers fused configs when accuracy ties.
+
+use quantune::coordinator::{
+    self, Database, InterpEvaluator, ObjectiveWeights, Quantune, Record,
+    GENERAL_SPACE_TAG,
+};
+use quantune::experiments;
+use quantune::quant::{general_space, vta_space, VtaConfig};
+use quantune::search::Trial;
+
+#[test]
+fn objective_pareto_frontier_has_no_dominated_points() {
+    let rows = experiments::pareto_objectives_synthetic().unwrap();
+    assert_eq!(rows.len(), 8, "2^3 masks over the top-3 fragile layers");
+    // independent dominance check (reimplemented, not the library's)
+    let dominated = |i: usize| {
+        rows.iter().enumerate().any(|(j, o)| {
+            j != i
+                && o.accuracy >= rows[i].accuracy
+                && o.latency_ms <= rows[i].latency_ms
+                && o.size_bytes <= rows[i].size_bytes
+                && (o.accuracy > rows[i].accuracy
+                    || o.latency_ms < rows[i].latency_ms
+                    || o.size_bytes < rows[i].size_bytes)
+        })
+    };
+    for (i, r) in rows.iter().enumerate() {
+        assert_eq!(
+            r.on_frontier,
+            !dominated(i),
+            "config {} frontier flag disagrees with independent dominance",
+            r.config
+        );
+    }
+    assert!(rows.iter().any(|r| r.on_frontier), "frontier cannot be empty");
+
+    // strictly-positive weights can only pick non-dominated points
+    let positive_slugs: Vec<String> = experiments::objective_weight_grid()
+        .iter()
+        .filter(|w| w.accuracy > 0.0 && w.latency > 0.0 && w.size > 0.0)
+        .map(|w| w.slug())
+        .collect();
+    assert!(!positive_slugs.is_empty());
+    for slug in &positive_slugs {
+        let picked: Vec<_> =
+            rows.iter().filter(|r| r.picked_by.contains(slug)).collect();
+        assert_eq!(picked.len(), 1, "{slug} must pick exactly one config");
+        assert!(
+            picked[0].on_frontier,
+            "{slug} picked dominated config {}",
+            picked[0].config
+        );
+    }
+}
+
+#[test]
+fn nan_database_record_degrades_best_for_and_search() {
+    let mut q = Quantune::synthetic();
+    let model = Quantune::synthetic_model().unwrap();
+    // a poisoned record (NaN accuracy) next to real ones
+    q.db = Database::in_memory();
+    q.db.add(Record::new(model.name.clone(), GENERAL_SPACE_TAG.into(), 3, f64::NAN, 0.0));
+    q.db.add(Record::new(model.name.clone(), GENERAL_SPACE_TAG.into(), 7, 0.8, 0.0));
+    let (cfg, acc) = q.db.best_for(&model.name).expect("real record survives");
+    assert_eq!(cfg.index(), 7);
+    assert_eq!(acc, 0.8);
+
+    // a search over the NaN-holed oracle table completes and never
+    // reports a NaN-hole as best
+    let space = general_space();
+    let table = q.db.accuracy_table(&model.name, &space.tag(), space.size());
+    assert!(table[3].is_nan() && !table[7].is_nan());
+    let mut oracle = coordinator::OracleEvaluator::new(table);
+    let trace = q.search(&model, &space, "grid", &mut oracle, 96, 5).unwrap();
+    assert_eq!(trace.trials.len(), 96);
+    assert_eq!(trace.best_config, 7);
+    assert_eq!(trace.best_score, 0.8);
+
+    // the genetic selector also survives NaN fitness end-to-end
+    let trace = q.search(&model, &space, "genetic", &mut oracle, 32, 5).unwrap();
+    assert_eq!(trace.trials.len(), 32);
+    assert!(!trace.best_score.is_nan() || trace.trials.iter().all(|t: &Trial| t.score.is_nan()));
+}
+
+#[test]
+fn vta_objective_search_prefers_fused_configs() {
+    let q = Quantune::synthetic();
+    let model = Quantune::synthetic_model().unwrap();
+    let space = vta_space();
+    let weights = ObjectiveWeights::parse("balanced").unwrap();
+    let mut ev = InterpEvaluator::new(&model, &q.calib_pool, &q.eval, q.seed)
+        .with_threads(1)
+        .with_space(space.clone());
+    let trace = q
+        .search_objective(&model, &space, "grid", &mut ev, space.size(), 3, weights)
+        .unwrap();
+    assert_eq!(trace.trials.len(), 12);
+    let best = trace.best_components.expect("objective run keeps components");
+    // fusion changes cycles, not numerics: for the best config's (calib,
+    // clip) twin pair, the fused one has the same accuracy and strictly
+    // fewer cycles, so the winner must be fused
+    let best_cfg = VtaConfig::from_index(trace.best_config).unwrap();
+    assert!(best_cfg.fusion, "unfused config won a latency-aware objective");
+    assert!(best.latency_ms > 0.0 && best.size_bytes > 0.0);
+    // every trial's breakdown matches its own config's fusion pricing
+    let fused_ms = trace
+        .trials
+        .iter()
+        .find(|t| VtaConfig::from_index(t.config).unwrap().fusion)
+        .and_then(|t| t.components)
+        .unwrap()
+        .latency_ms;
+    let unfused_ms = trace
+        .trials
+        .iter()
+        .find(|t| !VtaConfig::from_index(t.config).unwrap().fusion)
+        .and_then(|t| t.components)
+        .unwrap()
+        .latency_ms;
+    assert!(fused_ms < unfused_ms);
+}

@@ -10,7 +10,9 @@
 //! Everything runs on synthetic models/datasets (no artifacts needed),
 //! so this suite is always active.
 
-use quantune::coordinator::{self, InterpEvaluator, Quantune, SharedEvaluator};
+use quantune::coordinator::{
+    self, InterpEvaluator, ObjectiveWeights, Quantune, SharedEvaluator,
+};
 use quantune::data::synthetic_dataset;
 use quantune::interp::gemm::{gemm_f32, gemm_f32_tiled, gemm_i32, gemm_i32_tiled};
 use quantune::quant::{general_space, vta_space, ConfigSpace};
@@ -139,8 +141,24 @@ fn interp_evaluator_handles_empty_eval_split() {
     }
 }
 
-fn trace_bytes(t: &SearchTrace) -> Vec<(usize, u64)> {
-    t.trials.iter().map(|tr| (tr.config, tr.accuracy.to_bits())).collect()
+fn trace_bytes(t: &SearchTrace) -> Vec<(usize, u64, u64, u64, u64)> {
+    t.trials
+        .iter()
+        .map(|tr| {
+            let c = tr.components.unwrap_or(quantune::search::Components {
+                accuracy: f64::NAN,
+                latency_ms: f64::NAN,
+                size_bytes: f64::NAN,
+            });
+            (
+                tr.config,
+                tr.score.to_bits(),
+                c.accuracy.to_bits(),
+                c.latency_ms.to_bits(),
+                c.size_bytes.to_bits(),
+            )
+        })
+        .collect()
 }
 
 /// `sweep_parallel` over a non-96 space (the 12-element VTA space) is
@@ -158,6 +176,7 @@ fn sweep_parallel_non_general_space_matches_serial() {
         eval: eval.clone(),
         db: coordinator::Database::in_memory(),
         seed: 1,
+        device: coordinator::DEVICES[1],
     };
 
     let mut q_serial = make_q();
@@ -195,6 +214,10 @@ fn sweep_parallel_non_general_space_matches_serial() {
             assert_eq!(a.space, b.space);
             assert_eq!(a.config, b.config);
             assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+            // static cost components are identical too (and present)
+            assert_eq!(a.latency_ms, b.latency_ms);
+            assert_eq!(a.size_bytes, b.size_bytes);
+            assert!(a.latency_ms.is_some() && a.size_bytes.is_some());
         }
         assert!(q_par.db.has_full_sweep(&model.name, &space.tag(), 12));
     }
@@ -238,9 +261,57 @@ fn search_traces_identical_across_thread_counts() {
         );
         assert_eq!(serial.best_config, parallel.best_config, "{algo}");
         assert_eq!(
-            serial.best_accuracy.to_bits(),
-            parallel.best_accuracy.to_bits(),
+            serial.best_score.to_bits(),
+            parallel.best_score.to_bits(),
             "{algo}"
         );
+    }
+}
+
+/// Multi-objective determinism: the same (seed, weights, device) must
+/// reproduce a byte-identical SearchTrace -- scores AND per-component
+/// breakdowns -- at 1/2/4/8 evaluator threads, for every algorithm and
+/// for both a device-priced space and the cycle-priced VTA space.
+#[test]
+fn objective_search_traces_identical_across_thread_counts() {
+    let model = synthetic_model(8, 4, 4, 3).unwrap();
+    let calib = synthetic_dataset(32, 8, 8, 4, 4, 5);
+    let eval = synthetic_dataset(96, 8, 8, 4, 4, 6);
+    let q = Quantune {
+        artifacts: std::path::PathBuf::from("."),
+        calib_pool: calib.clone(),
+        eval: eval.clone(),
+        db: coordinator::Database::in_memory(),
+        seed: 1,
+        device: coordinator::DEVICES[0], // a53: strongest latency penalty
+    };
+    let weights = ObjectiveWeights::parse("balanced").unwrap();
+    let seed = 20220205u64;
+    for space in [general_space(), vta_space()] {
+        for algo in ["random", "genetic", "xgb"] {
+            let run_at = |threads: usize| -> SearchTrace {
+                let mut ev = InterpEvaluator::new(&model, &calib, &eval, seed)
+                    .with_threads(threads)
+                    .with_space(space.clone());
+                q.search_objective(&model, &space, algo, &mut ev, 6, seed, weights)
+                    .unwrap()
+            };
+            let base = run_at(1);
+            assert!(
+                base.trials.iter().all(|t| t.components.is_some()),
+                "{algo}: objective trials must carry components"
+            );
+            for threads in [2usize, 4, 8] {
+                let t = run_at(threads);
+                assert_eq!(
+                    trace_bytes(&base),
+                    trace_bytes(&t),
+                    "{} {algo}: objective trace diverged at {threads} threads",
+                    space.tag()
+                );
+                assert_eq!(base.best_config, t.best_config);
+                assert_eq!(base.best_score.to_bits(), t.best_score.to_bits());
+            }
+        }
     }
 }

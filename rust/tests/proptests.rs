@@ -205,9 +205,9 @@ fn prop_search_respects_budget_and_returns_history_best() {
             let max = trace
                 .trials
                 .iter()
-                .map(|t| t.accuracy)
+                .map(|t| t.score)
                 .fold(f64::NEG_INFINITY, f64::max);
-            assert_eq!(trace.best_accuracy, max, "{}", trace.algo);
+            assert_eq!(trace.best_score, max, "{}", trace.algo);
             assert!(trace.trials.iter().all(|t| t.config < 96));
         }
     });
@@ -225,7 +225,7 @@ fn prop_random_and_grid_never_repeat() {
             let mut hist: Vec<Trial> = Vec::new();
             while let Some(i) = algo.propose(&hist) {
                 assert!(seen.insert(i), "{} repeated {i}", algo.name());
-                hist.push(Trial { config: i, accuracy: 0.0 });
+                hist.push(Trial::of(i, 0.0));
                 if hist.len() > 96 {
                     panic!("{} exceeded the space", algo.name());
                 }
@@ -249,7 +249,7 @@ fn prop_xgb_never_reproposes_explored() {
                 !hist.iter().any(|t| t.config == i),
                 "xgb re-proposed explored config {i}"
             );
-            hist.push(Trial { config: i, accuracy: rng.f64() });
+            hist.push(Trial::of(i, rng.f64()));
         }
     });
 }

@@ -11,7 +11,7 @@
 
 use std::path::PathBuf;
 
-use quantune::coordinator::{Database, InterpEvaluator, Quantune};
+use quantune::coordinator::{Database, InterpEvaluator, Quantune, DEVICES};
 use quantune::data::{synthetic_dataset, Dataset};
 use quantune::experiments;
 use quantune::quant::{
@@ -34,6 +34,7 @@ fn quantune_with(calib: &Dataset, eval: &Dataset) -> Quantune {
         eval: eval.clone(),
         db: Database::in_memory(),
         seed: 1,
+        device: DEVICES[1],
     }
 }
 
@@ -95,9 +96,9 @@ fn xgb_searches_all_three_spaces_through_one_generic_path() {
         let max = trace
             .trials
             .iter()
-            .map(|t| t.accuracy)
+            .map(|t| t.score)
             .fold(f64::NEG_INFINITY, f64::max);
-        assert_eq!(trace.best_accuracy, max, "{}", space.tag());
+        assert_eq!(trace.best_score, max, "{}", space.tag());
     }
 }
 
