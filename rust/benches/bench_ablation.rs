@@ -80,6 +80,7 @@ fn space_ablation(seeds: &[u64], eps: f64) -> Result<()> {
         &cache.hists,
         base,
         3,
+        &quantune::quant::BINARY_WIDTHS,
     )?);
     let n_layers = model.graph.layers().len();
     let spaces: Vec<SpaceRef> = vec![general_space(), vta_space(), layerwise];

@@ -46,6 +46,26 @@ fn print_pareto(rows: &[exp::LayerwiseParetoRow]) {
     }
 }
 
+fn print_radix_pareto(rows: &[exp::RadixParetoRow]) {
+    println!(
+        "{:>6} | {:>28} | {:>4} | {:>4} | {:>9} | {:>11} | frontier | dominates",
+        "space", "widths", "int4", "fp32", "top1", "quant bytes"
+    );
+    for r in rows {
+        println!(
+            "{:>6} | {:>28} | {:>4} | {:>4} | {:>8.2}% | {:>11} | {:>8} | {}",
+            r.space,
+            r.label,
+            r.int4_layers,
+            r.fp32_layers,
+            r.accuracy * 100.0,
+            r.quant_bytes,
+            if r.on_frontier { "*" } else { "" },
+            if r.dominates_best_binary { "yes" } else { "" }
+        );
+    }
+}
+
 fn print_objective_pareto(rows: &[exp::ObjectiveParetoRow]) {
     println!(
         "{:>28} | {:>8} | {:>10} | {:>10} | frontier | picked by",
@@ -73,6 +93,11 @@ fn main() -> Result<()> {
     if want("pareto") {
         println!("== Layer-wise Pareto: synthetic fragile model (no artifacts) ==");
         print_pareto(&exp::pareto_layerwise_synthetic()?);
+        println!(
+            "\n== Radix Pareto: {{int4,int8,int16,fp32}} genome vs binary \
+             {{int8,fp32}} masks (synthetic) =="
+        );
+        print_radix_pareto(&exp::pareto_radix_synthetic()?);
         println!(
             "\n== Multi-objective Pareto: accuracy vs latency vs bytes \
              (synthetic, i7 profile) =="
@@ -108,6 +133,7 @@ fn main() -> Result<()> {
                 &q.eval,
                 base,
                 4,
+                &quantune::quant::BINARY_WIDTHS,
                 q.seed,
                 &format!("pareto_layerwise_{name}.csv"),
             )?;

@@ -1,17 +1,21 @@
-//! Mixed precision on a fragile model (paper §4.5 + Table 5).
+//! Mixed precision on a fragile model (paper §4.5 + Table 5,
+//! generalized to per-layer bit-widths).
 //!
 //! Depthwise/group-conv models (MobileNet, ShuffleNet) are the paper's
 //! "fragile" cases: tiny per-channel weight ranges make tensor-granular
 //! int8 lossy. This example shows how keeping the first/last layers in
-//! fp32 (mixed precision) and switching granularity trades accuracy
-//! against model size.
+//! fp32 (the paper's §4.5 mixed precision, derived from the config's
+//! `mixed` bit) and switching granularity trades accuracy against model
+//! size -- and then how the radix generalization prices arbitrary
+//! per-layer {int4, int8, int16, fp32} assignments, which is the space
+//! `quantune search --space layerwise --bits 4,8,16` actually explores.
 
 use anyhow::Result;
 
 use quantune::coordinator::{Evaluator, InterpEvaluator, Quantune};
 use quantune::quant::{
-    model_size_bytes, model_size_fp32, CalibCount, Clipping, Granularity, QuantConfig,
-    Scheme,
+    model_size_bytes, model_size_bytes_at, model_size_fp32, BitWidth, CalibCount,
+    Clipping, Granularity, QuantConfig, Scheme,
 };
 use quantune::zoo;
 
@@ -67,6 +71,33 @@ fn main() -> Result<()> {
         "\nTable 5's shape: channel granularity costs a few % in size;\n\
          mixed precision costs more (first/last layers stay fp32) but\n\
          recovers accuracy on fragile models."
+    );
+
+    // the radix generalization: instead of the binary first/last-fp32
+    // bypass, every layer carries its own weight bit-width -- here a
+    // hand-built ramp (first layer int16, last fp32, everything else
+    // int4) priced by the same Table-5 accounting
+    let n = model.graph.layers().len();
+    let widths: Vec<BitWidth> = (0..n)
+        .map(|i| {
+            if i == 0 {
+                BitWidth::Int16
+            } else if i == n - 1 {
+                BitWidth::Fp32
+            } else {
+                BitWidth::Int4
+            }
+        })
+        .collect();
+    let radix_size =
+        model_size_bytes_at(&model.graph, &weight_dims, Granularity::Tensor, &widths);
+    println!(
+        "\nper-layer widths (int16 first, int4 middle, fp32 last):\n\
+         {:.2} KiB -- int4 packs two weights per byte, so the radix\n\
+         search can undercut every binary {{int8, fp32}} mask;\n\
+         `quantune search --space layerwise --bits 4,8,16` searches\n\
+         these assignments over the most fragile layers.",
+        radix_size as f64 / 1024.0,
     );
     Ok(())
 }

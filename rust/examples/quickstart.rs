@@ -8,6 +8,12 @@
 //! cache, quantizes it under a hand-picked configuration, measures Top-1
 //! through the PJRT runtime, and compares against fp32 -- the minimal
 //! end-to-end path through all three layers.
+//!
+//! A `QuantConfig` sets the base axes (calibration, scheme, clipping,
+//! granularity) for *every* layer; per-layer precision comes from the
+//! layer-wise space, where each fragile layer picks its own weight
+//! `BitWidth` (int4 / int8 / int16 / fp32) -- see the `mixed_precision`
+//! example and `quantune search --space layerwise --bits 4,8,16`.
 
 use anyhow::Result;
 

@@ -19,8 +19,11 @@ use crate::zoo::ZooModel;
 /// per quantization point, in `graph.quant_points()` order.
 #[derive(Clone)]
 pub struct CalibrationCache {
+    /// Model the cache was collected for.
     pub model: String,
+    /// Calibration image count the cache was built from.
     pub count: CalibCount,
+    /// One activation histogram per quantization point.
     pub hists: Vec<Histogram>,
     /// wall-clock seconds spent building the cache (Table 2 bookkeeping)
     pub build_secs: f64,
@@ -29,7 +32,12 @@ pub struct CalibrationCache {
 /// Which engine runs the instrumented forward.
 pub enum CalibBackend<'a> {
     /// PJRT executable from the artifacts directory.
-    Hlo { runtime: &'a Runtime, artifacts: &'a Path },
+    Hlo {
+        /// PJRT runtime handle.
+        runtime: &'a Runtime,
+        /// Directory holding the `{model}_acts.hlo.txt` artifact.
+        artifacts: &'a Path,
+    },
     /// Pure-rust interpreter.
     Interp,
 }

@@ -9,6 +9,7 @@ use anyhow::{bail, Result};
 /// Parsed command line: a subcommand plus options.
 #[derive(Debug, Default)]
 pub struct Cli {
+    /// The subcommand (first positional argument).
     pub command: String,
     opts: HashMap<String, String>,
     flags: Vec<String>,
@@ -39,14 +40,17 @@ impl Cli {
         Ok(cli)
     }
 
+    /// Value of `--key value`, if present.
     pub fn opt(&self, key: &str) -> Option<&str> {
         self.opts.get(key).map(String::as_str)
     }
 
+    /// Value of `--key value`, or `default` when absent.
     pub fn opt_or(&self, key: &str, default: &str) -> String {
         self.opt(key).unwrap_or(default).to_string()
     }
 
+    /// `--key N` parsed as usize, or `default` when absent.
     pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.opt(key) {
             None => Ok(default),
@@ -54,6 +58,7 @@ impl Cli {
         }
     }
 
+    /// `--key N` parsed as u64, or `default` when absent.
     pub fn opt_u64(&self, key: &str, default: u64) -> Result<u64> {
         match self.opt(key) {
             None => Ok(default),
@@ -61,6 +66,7 @@ impl Cli {
         }
     }
 
+    /// Was the bare `--key` flag passed?
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }

@@ -27,12 +27,17 @@ use crate::util::{nan_min_cmp, Json};
 /// Space tag of the 96-element general space (the pre-tag default).
 pub const GENERAL_SPACE_TAG: &str = "general";
 
+/// One measured trial: a (model, space, config) triple with its Top-1
+/// accuracy and optional deployment-cost components.
 #[derive(Clone, Debug)]
 pub struct Record {
+    /// Model the trial measured.
     pub model: String,
     /// `ConfigSpace::tag()` of the space `config` indexes into.
     pub space: String,
+    /// Config index within the space.
     pub config: usize,
+    /// Measured Top-1 (NaN = poisoned measurement).
     pub accuracy: f64,
     /// seconds it took to measure (Table 2 bookkeeping)
     pub measure_secs: f64,
@@ -70,13 +75,17 @@ impl Record {
     }
 }
 
+/// The trial database `D`: an append-only record list, optionally
+/// JSON-backed.
 #[derive(Default)]
 pub struct Database {
+    /// Every measured trial, in insertion order.
     pub records: Vec<Record>,
     path: Option<PathBuf>,
 }
 
 impl Database {
+    /// A database with no backing file (`save` is a no-op).
     pub fn in_memory() -> Database {
         Database::default()
     }
@@ -117,10 +126,12 @@ impl Database {
         Ok(Database { records, path: Some(path.to_path_buf()) })
     }
 
+    /// Append one record.
     pub fn add(&mut self, r: Record) {
         self.records.push(r);
     }
 
+    /// Persist to the backing file (no-op for in-memory databases).
     pub fn save(&self) -> Result<()> {
         let Some(path) = &self.path else { return Ok(()) };
         let records: Vec<Json> = self

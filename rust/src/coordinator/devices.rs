@@ -11,9 +11,12 @@
 //! Real wallclock numbers for Fig 9 come from actual PJRT / VTA-simulator
 //! runs; this model only supplies the cross-device scaling story.
 
+use crate::quant::BitWidth;
+
 /// Effective single-stream inference characteristics of one target.
 #[derive(Clone, Copy, Debug)]
 pub struct DeviceProfile {
+    /// Display name ("CPU(i7-8700)", ...).
     pub name: &'static str,
     /// effective GFLOP/s sustained on conv workloads (fp32)
     pub gflops_fp32: f64,
@@ -70,31 +73,69 @@ impl DeviceProfile {
         2.0 * macs as f64 / (self.gflops_fp32 * 1e9) + layers as f64 * self.layer_overhead_s
     }
 
-    /// Modeled naive-int8 per-image latency (seconds); includes the
-    /// quantize/dequantize epilogues that make naive kernels slower.
-    pub fn int8_latency_s(&self, macs: u64, layers: usize) -> f64 {
-        2.0 * macs as f64 / (self.gflops_fp32 * self.int8_naive_factor * 1e9)
+    /// Naive integer-kernel latency (seconds) at an explicit throughput
+    /// factor; the shared body behind the per-width pricing.
+    fn int_latency_at(&self, macs: u64, layers: usize, factor: f64) -> f64 {
+        2.0 * macs as f64 / (self.gflops_fp32 * factor * 1e9)
             + layers as f64 * self.layer_overhead_s * 1.4
     }
 
+    /// Modeled naive-int8 per-image latency (seconds); includes the
+    /// quantize/dequantize epilogues that make naive kernels slower.
+    pub fn int8_latency_s(&self, macs: u64, layers: usize) -> f64 {
+        self.int_latency_at(macs, layers, self.int8_naive_factor)
+    }
+
+    /// Throughput multiplier of a naive integer kernel at `width`,
+    /// relative to fp32. Anchored at [`DeviceProfile::int8_naive_factor`]
+    /// and scaled by `sqrt(8 / bits)`: narrower grids move half as many
+    /// bytes per MAC (memory-bound win) but pay unpack/requantize cost,
+    /// so int4 is modestly faster than int8 and int16 modestly slower --
+    /// the MACs themselves run on the same ALUs either way. fp32 is 1.0
+    /// by definition.
+    pub fn width_factor(&self, width: BitWidth) -> f64 {
+        match width {
+            BitWidth::Fp32 => 1.0,
+            w => self.int8_naive_factor * (8.0 / w.bits() as f64).sqrt(),
+        }
+    }
+
     /// Per-image latency (milliseconds) of a mixed-precision deployment:
-    /// layer `i` of `layer_macs` runs in fp32 when `fp32_mask[i]`, naive
-    /// int8 otherwise. With an all-true mask this sums to exactly
-    /// [`DeviceProfile::fp32_latency_s`] of the summed MACs; with an
-    /// all-false mask, to [`DeviceProfile::int8_latency_s`].
-    pub fn masked_latency_ms(&self, layer_macs: &[u64], fp32_mask: &[bool]) -> f64 {
+    /// layer `i` of `layer_macs` runs at `widths[i]` (fp32 layers take
+    /// the fp32 path, integer layers the naive kernel at that width's
+    /// [`DeviceProfile::width_factor`]). With an all-fp32 vector this
+    /// sums to exactly [`DeviceProfile::fp32_latency_s`] of the summed
+    /// MACs; with an all-int8 vector, to
+    /// [`DeviceProfile::int8_latency_s`].
+    pub fn widths_latency_ms(&self, layer_macs: &[u64], widths: &[BitWidth]) -> f64 {
         let s: f64 = layer_macs
             .iter()
             .enumerate()
             .map(|(i, &macs)| {
-                if fp32_mask.get(i).copied().unwrap_or(false) {
-                    self.fp32_latency_s(macs, 1)
-                } else {
-                    self.int8_latency_s(macs, 1)
+                match widths.get(i).copied().unwrap_or(BitWidth::Int8) {
+                    BitWidth::Fp32 => self.fp32_latency_s(macs, 1),
+                    w => self.int_latency_at(macs, 1, self.width_factor(w)),
                 }
             })
             .sum();
         s * 1e3
+    }
+
+    /// Per-image latency (milliseconds) of a binary {int8, fp32}
+    /// deployment: layer `i` runs in fp32 when `fp32_mask[i]`, naive
+    /// int8 otherwise (the width-vector form is
+    /// [`DeviceProfile::widths_latency_ms`]).
+    pub fn masked_latency_ms(&self, layer_macs: &[u64], fp32_mask: &[bool]) -> f64 {
+        let widths: Vec<BitWidth> = (0..layer_macs.len())
+            .map(|i| {
+                if fp32_mask.get(i).copied().unwrap_or(false) {
+                    BitWidth::Fp32
+                } else {
+                    BitWidth::Int8
+                }
+            })
+            .collect();
+        self.widths_latency_ms(layer_macs, &widths)
     }
 
     /// Modeled time to measure Top-1 over `images` images (Table 2),
@@ -153,6 +194,29 @@ mod tests {
                 (all_int8, all_fp32)
             };
             assert!(mixed >= lo && mixed <= hi, "{}: {mixed} vs [{lo}, {hi}]", d.name);
+        }
+    }
+
+    #[test]
+    fn width_pricing_is_monotone_in_bits() {
+        let macs = [400_000_000u64, 900_000_000, 30_000_000];
+        for d in &DEVICES {
+            // narrower integer grids are faster: int4 < int8 < int16
+            let t4 = d.widths_latency_ms(&macs, &[BitWidth::Int4; 3]);
+            let t8 = d.widths_latency_ms(&macs, &[BitWidth::Int8; 3]);
+            let t16 = d.widths_latency_ms(&macs, &[BitWidth::Int16; 3]);
+            assert!(t4 < t8 && t8 < t16, "{}: {t4} {t8} {t16}", d.name);
+            // the all-int8 vector reproduces the legacy mask pricing
+            assert_eq!(t8, d.masked_latency_ms(&macs, &[false; 3]));
+            let all_fp32 = d.widths_latency_ms(&macs, &[BitWidth::Fp32; 3]);
+            assert_eq!(all_fp32, d.masked_latency_ms(&macs, &[true; 3]));
+            // a mixed vector lands strictly between its extremes
+            let mix = d.widths_latency_ms(
+                &macs,
+                &[BitWidth::Int4, BitWidth::Fp32, BitWidth::Int16],
+            );
+            assert!(mix > t4.min(all_fp32) && mix < t16.max(all_fp32), "{}", d.name);
+            assert_eq!(d.width_factor(BitWidth::Fp32), 1.0);
         }
     }
 

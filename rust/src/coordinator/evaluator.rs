@@ -69,8 +69,11 @@ pub trait SharedEvaluator: Sync {
 /// algorithms and all three spaces tune any objective unchanged: they
 /// only ever see the scalar.
 pub struct ObjectiveEvaluator<'a> {
+    /// The accuracy-measuring evaluator being wrapped.
     pub inner: &'a mut dyn Evaluator,
+    /// Static per-config (latency, bytes) table.
     pub cost: &'a super::objective::CostModel,
+    /// Scalarization weights.
     pub weights: super::objective::ObjectiveWeights,
 }
 
@@ -101,14 +104,18 @@ type CalibSlot = Arc<Mutex<Option<Arc<CalibrationCache>>>>;
 /// shareable across worker threads).
 pub struct CalibStore {
     caches: Mutex<HashMap<CalibCount, CalibSlot>>,
+    /// Seed controlling the calibration image draw.
     pub seed: u64,
 }
 
 impl CalibStore {
+    /// An empty store; caches build lazily on first request.
     pub fn new(seed: u64) -> Self {
         CalibStore { caches: Mutex::new(HashMap::new()), seed }
     }
 
+    /// The cache for `count`, building it on first request (concurrent
+    /// requesters of the same count wait for the one build).
     pub fn get(
         &self,
         model: &ZooModel,
@@ -152,10 +159,15 @@ impl CalibStore {
 
 /// PJRT-backed evaluator (the production path).
 pub struct HloEvaluator<'a> {
+    /// Model under measurement.
     pub model: &'a ZooModel,
+    /// PJRT runtime executing the artifacts.
     pub runtime: &'a Runtime,
+    /// Artifacts directory holding the HLO files.
     pub artifacts: PathBuf,
+    /// Calibration image pool.
     pub calib_pool: &'a Dataset,
+    /// Held-out eval split Top-1 is measured on.
     pub eval: &'a Dataset,
     space: SpaceRef,
     calib: CalibStore,
@@ -165,6 +177,7 @@ pub struct HloEvaluator<'a> {
 }
 
 impl<'a> HloEvaluator<'a> {
+    /// Evaluator over the default general space.
     pub fn new(
         model: &'a ZooModel,
         runtime: &'a Runtime,
@@ -281,8 +294,11 @@ impl Evaluator for HloEvaluator<'_> {
 /// Interpreter-backed evaluator (identical pipeline, no PJRT). Batch
 /// Top-1 counting fans out across the worker pool.
 pub struct InterpEvaluator<'a> {
+    /// Model under measurement.
     pub model: &'a ZooModel,
+    /// Calibration image pool.
     pub calib_pool: &'a Dataset,
+    /// Held-out eval split Top-1 is measured on.
     pub eval: &'a Dataset,
     space: SpaceRef,
     calib: CalibStore,
@@ -293,6 +309,7 @@ pub struct InterpEvaluator<'a> {
 }
 
 impl<'a> InterpEvaluator<'a> {
+    /// Evaluator over the default general space.
     pub fn new(
         model: &'a ZooModel,
         calib_pool: &'a Dataset,
@@ -400,12 +417,14 @@ impl Evaluator for InterpEvaluator<'_> {
 
 /// Precomputed accuracy table (search-algorithm comparisons, tests).
 pub struct OracleEvaluator {
+    /// Accuracy per config index (NaN = unmeasured hole).
     pub table: Vec<f64>,
     /// simulated per-measurement cost (for search-time accounting)
     pub secs_per_measure: f64,
 }
 
 impl OracleEvaluator {
+    /// Oracle over a precomputed accuracy table.
     pub fn new(table: Vec<f64>) -> Self {
         OracleEvaluator { table, secs_per_measure: 0.0 }
     }

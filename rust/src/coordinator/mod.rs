@@ -28,7 +28,7 @@ pub use evaluator::{
 };
 pub use objective::{ConfigCost, CostModel, ObjectiveWeights, OBJECTIVES};
 pub use quantizer::{
-    act_params_tensor, fp32_layer_bypass, mixed_precision_bypass, prepare,
+    act_params_tensor, layer_precision_overrides, mixed_precision_bypass, prepare,
     prepare_cached, QuantizedSetup, WeightCache, WeightVariant,
 };
 
@@ -39,7 +39,7 @@ use anyhow::{Context, Result};
 
 use crate::calib::{calibrate, CalibBackend};
 use crate::data::Dataset;
-use crate::quant::{ConfigSpace, LayerwiseSpace, QuantConfig, SpaceRef};
+use crate::quant::{BitWidth, ConfigSpace, LayerwiseSpace, QuantConfig, SpaceRef};
 use crate::search::{
     run_search, GeneticSearch, GridSearch, RandomSearch, SearchAlgo, SearchTrace,
     TransferRecord, XgbSearch,
@@ -95,10 +95,15 @@ pub fn make_algorithm(
 /// Holds the shared experiment state: artifacts dir, datasets, database,
 /// and the deployment device the latency-aware objective prices against.
 pub struct Quantune {
+    /// Artifacts directory (HLO files, datasets, database).
     pub artifacts: PathBuf,
+    /// Calibration image pool.
     pub calib_pool: Dataset,
+    /// Held-out eval split.
     pub eval: Dataset,
+    /// The trial database `D`.
     pub db: Database,
+    /// Seed for calibration draws and searches.
     pub seed: u64,
     /// Deploy target for modeled latency (general / layer-wise spaces;
     /// the VTA space always prices by cycle counts). Default: i7-8700.
@@ -142,18 +147,25 @@ impl Quantune {
         zoo::synthetic_model(8, 4, 4, 3)
     }
 
+    /// Load one zoo model from the artifacts directory.
     pub fn load_model(&self, name: &str) -> Result<ZooModel> {
         zoo::ZooModel::load(&self.artifacts, name)
     }
 
     /// Build the layer-wise mixed-precision space for `model` on top of
     /// `base`: calibrate through the interpreter, rank every weighted
-    /// layer's quantization fragility, and free the top-`k` layers.
+    /// layer's quantization fragility, and free the top-`k` layers to
+    /// each choose a weight bit-width from `widths` (fp32 is always
+    /// available; pass [`crate::quant::BINARY_WIDTHS`] for the legacy
+    /// {int8, fp32} mask space, or e.g. `[Int4, Int8, Int16]` for the
+    /// full radix genome -- see [`crate::quant::max_layers_for`] for the
+    /// `k` cap each menu implies).
     pub fn layerwise_space(
         &self,
         model: &ZooModel,
         base: QuantConfig,
         k: usize,
+        widths: &[BitWidth],
     ) -> Result<SpaceRef> {
         let cache = calibrate(
             model,
@@ -169,6 +181,7 @@ impl Quantune {
             &cache.hists,
             base,
             k,
+            widths,
         )?))
     }
 
@@ -299,6 +312,29 @@ impl Quantune {
     /// independent runs (algorithm x seed) may fan out across workers
     /// sharing one `Quantune`. Tunes plain Top-1 accuracy; see
     /// [`Quantune::search_objective`] for multi-objective tuning.
+    ///
+    /// # Examples
+    ///
+    /// Tune the self-contained synthetic model through the interpreter
+    /// -- runs from a clean checkout, no artifact files needed:
+    ///
+    /// ```
+    /// use quantune::coordinator::{InterpEvaluator, Quantune};
+    /// use quantune::quant::general_space;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let q = Quantune::synthetic();
+    /// let model = Quantune::synthetic_model()?;
+    /// let space = general_space();
+    /// let mut ev = InterpEvaluator::new(&model, &q.calib_pool, &q.eval, q.seed)
+    ///     .with_threads(1)
+    ///     .with_space(space.clone());
+    /// let trace = q.search(&model, &space, "random", &mut ev, 2, 7)?;
+    /// assert_eq!(trace.trials.len(), 2);
+    /// assert!(trace.best_config < space.size());
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn search(
         &self,
         model: &ZooModel,

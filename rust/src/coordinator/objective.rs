@@ -14,15 +14,16 @@
 //! Latency sources:
 //! - general / layer-wise spaces: the analytical
 //!   [`DeviceProfile`](super::devices::DeviceProfile) cost model, at
-//!   per-layer resolution (fp32 layers take the fp32 path, quantized
-//!   layers the naive-int8 path -- on CPUs the latter is *slower*, the
-//!   paper's own finding);
+//!   per-layer resolution and per-layer bit-width (fp32 layers take the
+//!   fp32 path, integer layers the naive kernel at that width's
+//!   throughput factor -- naive int8 is *slower* than fp32 on CPUs, the
+//!   paper's own finding, while int4 claws back a memory-bandwidth win);
 //! - VTA space: [`crate::vta::estimate_cycles`] totals at the deploy
 //!   clock, which exactly replay the simulator's cycle counters.
 //!
 //! Size is the serialized-bytes accounting of Table 5
-//! ([`crate::quant::model_size_bytes_masked`]), mask-aware for
-//! layer-wise mixed precision.
+//! ([`crate::quant::model_size_bytes_at`]), priced per bit-width (int4
+//! packs two weights per byte) so the radix search sees real deltas.
 //!
 //! Scalarization: `w_acc * acc - w_lat * lat/lat_ref - w_size *
 //! size/size_ref`, with the fp32 deployment as the reference point, so
@@ -34,7 +35,7 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
-use crate::quant::{model_size_bytes_masked, model_size_fp32, ConfigSpace, VtaConfig};
+use crate::quant::{model_size_bytes_at, model_size_fp32, ConfigSpace, VtaConfig};
 use crate::vta::estimate_cycles;
 use crate::zoo::ZooModel;
 
@@ -47,10 +48,33 @@ pub const OBJECTIVES: [&str; 4] = ["acc", "lat", "size", "balanced"];
 /// the measured Top-1; `latency` and `size` weigh the *relative* cost
 /// against the fp32 deployment (so a weight of 1 means "one accuracy
 /// point is worth the entire fp32 latency/size budget").
+///
+/// # Examples
+///
+/// ```
+/// use quantune::coordinator::{ConfigCost, ObjectiveWeights};
+/// use quantune::coordinator::objective::CostRefs;
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let w = ObjectiveWeights::parse("balanced")?;
+/// let refs = CostRefs { latency_ms: 10.0, size_bytes: 1000.0 };
+/// let cheap = ConfigCost { latency_ms: 5.0, size_bytes: 250.0 };
+/// let dear = ConfigCost { latency_ms: 20.0, size_bytes: 1000.0 };
+/// // at equal accuracy the cheaper deployment scores higher...
+/// assert!(w.score(0.7, cheap, &refs) > w.score(0.7, dear, &refs));
+/// // ...and accuracy-only tuning ignores cost entirely
+/// let acc = ObjectiveWeights::accuracy_only();
+/// assert_eq!(acc.score(0.5, dear, &refs), 0.5);
+/// # Ok(())
+/// # }
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ObjectiveWeights {
+    /// Weight on measured Top-1.
     pub accuracy: f64,
+    /// Weight on relative modeled latency.
     pub latency: f64,
+    /// Weight on relative serialized bytes.
     pub size: f64,
 }
 
@@ -97,14 +121,18 @@ impl ObjectiveWeights {
 /// are modeled).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ConfigCost {
+    /// Modeled per-image latency (milliseconds).
     pub latency_ms: f64,
+    /// Serialized quantized model bytes.
     pub size_bytes: f64,
 }
 
 /// Reference (fp32) costs the relative terms normalize against.
 #[derive(Clone, Copy, Debug)]
 pub struct CostRefs {
+    /// fp32 per-image latency (milliseconds).
     pub latency_ms: f64,
+    /// fp32 serialized bytes.
     pub size_bytes: f64,
 }
 
@@ -112,6 +140,7 @@ pub struct CostRefs {
 /// built once per search, O(|S|) cheap shape arithmetic, no measurement.
 pub struct CostModel {
     costs: Vec<ConfigCost>,
+    /// Reference costs the relative terms normalize against.
     pub refs: CostRefs,
     /// Human-readable latency source ("CPU(i7-8700)" or "VTA@100MHz").
     pub target: String,
@@ -168,7 +197,7 @@ impl CostModel {
         let mut costs = Vec::with_capacity(space.size());
         for i in 0..space.size() {
             let plan = space.plan(i)?;
-            let mask = plan.resolve_mask(n_layers)?;
+            let widths = plan.resolve_widths(n_layers)?;
             let latency_ms = match vta_ms {
                 Some((fused, unfused)) => {
                     if VtaConfig::from_index(i)?.fusion {
@@ -177,10 +206,10 @@ impl CostModel {
                         unfused
                     }
                 }
-                None => device.masked_latency_ms(&layer_macs, &mask),
+                None => device.widths_latency_ms(&layer_macs, &widths),
             };
             let size_bytes =
-                model_size_bytes_masked(graph, &dims, plan.base.gran, &mask) as f64;
+                model_size_bytes_at(graph, &dims, plan.base.gran, &widths) as f64;
             costs.push(ConfigCost { latency_ms, size_bytes });
         }
         Ok(CostModel {
@@ -202,10 +231,12 @@ impl CostModel {
             .ok_or_else(|| anyhow::anyhow!("no cost entry for config {i}"))
     }
 
+    /// Number of priced configs.
     pub fn len(&self) -> usize {
         self.costs.len()
     }
 
+    /// Is the table empty?
     pub fn is_empty(&self) -> bool {
         self.costs.is_empty()
     }

@@ -4,15 +4,16 @@
 //!
 //! This is the rust side of the paper's `g(e, s)` -- the Glow-extension
 //! model generator of Eq. 14. A [`QuantPlan`] is the decoded form of one
-//! point of any [`crate::quant::ConfigSpace`]: the base axes plus an
-//! fp32-layer mask (the general space derives its mask from the `mixed`
-//! bit; the layer-wise space supplies an arbitrary one).
+//! point of any [`crate::quant::ConfigSpace`]: the base axes plus a
+//! per-layer [`BitWidth`] vector (the general space derives its widths
+//! from the `mixed` bit; the layer-wise space supplies an arbitrary
+//! int4/int8/int16/fp32 assignment).
 //!
 //! Weight preparation is memoized in a [`WeightCache`]: calibration count
 //! and clipping policy only shape *activation* ranges, so a sweep reuses
-//! at most one fake-quantized tensor per (layer, scheme, granularity)
-//! plus one fp32 passthrough per tensor. Configs that share a layer's
-//! setting skip requantization entirely, and the cache is
+//! at most one fake-quantized tensor per (layer, scheme, granularity,
+//! bit-width) plus one fp32 passthrough per tensor. Configs that share a
+//! layer's setting skip requantization entirely, and the cache is
 //! interior-mutable so the parallel sweep's workers share it.
 
 use std::collections::HashMap;
@@ -23,26 +24,30 @@ use anyhow::Result;
 use crate::calib::CalibrationCache;
 use crate::ir::Tensor;
 use crate::quant::{
-    fake_quant_weights, ActQuantization, Granularity, QuantPlan, Scheme,
+    fake_quant_weights_at, ActQuantization, BitWidth, Granularity, QuantPlan,
+    Scheme,
 };
 use crate::zoo::ZooModel;
 
 /// Everything needed to evaluate one quantized model variant.
 pub struct QuantizedSetup {
+    /// Activation quantization rows for every quant point.
     pub aq: ActQuantization,
-    /// weights in ABI order (fake-quantized, except fp32 mixed layers);
-    /// `Arc`d so cache hits share storage instead of copying tensors
+    /// weights in ABI order (fake-quantized at each layer's width,
+    /// except fp32 layers); `Arc`d so cache hits share storage instead
+    /// of copying tensors
     pub weights: Vec<Arc<Tensor>>,
+    /// The plan this setup realizes.
     pub plan: QuantPlan,
 }
 
 /// How one weight tensor is prepared for evaluation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum WeightVariant {
-    /// fp32 passthrough (biases; masked fp32 layers under mixed precision)
+    /// fp32 passthrough (biases; fp32-width layers)
     Fp32,
-    /// fake-quantized onto the int8 grid of (scheme, granularity)
-    Quant(Scheme, Granularity),
+    /// fake-quantized onto the (scheme, granularity, width) grid
+    Quant(Scheme, Granularity, BitWidth),
 }
 
 /// Cache of prepared weight tensors keyed by (weight name, variant).
@@ -52,6 +57,7 @@ pub struct WeightCache {
 }
 
 impl WeightCache {
+    /// An empty cache.
     pub fn new() -> WeightCache {
         WeightCache::default()
     }
@@ -83,20 +89,23 @@ impl WeightCache {
     }
 }
 
-/// Quant-point bypass rows for an arbitrary fp32-layer mask (`mask`
-/// follows `graph.layers()` order): each fp32 layer's output quant point
-/// stays fp32, and the network input does too when the first weighted
-/// layer is fp32 (the input row feeds that layer).
-pub fn fp32_layer_bypass(model: &ZooModel, mask: &[bool]) -> Vec<bool> {
+/// Quant-point bypass rows for an arbitrary per-layer precision
+/// assignment (`widths` follows `graph.layers()` order): each fp32
+/// layer's output quant point stays fp32, and the network input does too
+/// when the first weighted layer is fp32 (the input row feeds that
+/// layer). Integer widths (int4/int8/int16) keep their activations on
+/// the int8 grid -- the radix search is weight-only mixed precision, as
+/// in Banner et al.'s post-training 4-bit setting.
+pub fn layer_precision_overrides(model: &ZooModel, widths: &[BitWidth]) -> Vec<bool> {
     let qpoints = model.graph.quant_points();
     let layers = model.graph.layers();
     let fp32: std::collections::HashSet<&str> = layers
         .iter()
-        .zip(mask)
-        .filter(|(_, &m)| m)
+        .zip(widths)
+        .filter(|(_, w)| w.is_float())
         .map(|(l, _)| l.as_str())
         .collect();
-    let first_fp32 = mask.first().copied().unwrap_or(false);
+    let first_fp32 = widths.first().copied().is_some_and(BitWidth::is_float);
     qpoints
         .iter()
         .map(|q| (q == "input" && first_fp32) || fp32.contains(q.as_str()))
@@ -108,9 +117,16 @@ pub fn fp32_layer_bypass(model: &ZooModel, mask: &[bool]) -> Vec<bool> {
 /// weighted layer's output stay fp32.
 pub fn mixed_precision_bypass(model: &ZooModel, mixed: bool) -> Vec<bool> {
     let n = model.graph.layers().len();
-    let mask: Vec<bool> =
-        (0..n).map(|i| mixed && (i == 0 || i == n.saturating_sub(1))).collect();
-    fp32_layer_bypass(model, &mask)
+    let widths: Vec<BitWidth> = (0..n)
+        .map(|i| {
+            if mixed && (i == 0 || i == n.saturating_sub(1)) {
+                BitWidth::Fp32
+            } else {
+                BitWidth::Int8
+            }
+        })
+        .collect();
+    layer_precision_overrides(model, &widths)
 }
 
 /// Build the evaluation setup for one plan, reusing prepared weights
@@ -123,8 +139,8 @@ pub fn prepare_cached(
 ) -> Result<QuantizedSetup> {
     anyhow::ensure!(cache.model == model.name, "calibration cache model mismatch");
     let layers = model.graph.layers();
-    let mask = plan.resolve_mask(layers.len())?;
-    let bypass = fp32_layer_bypass(model, &mask);
+    let widths = plan.resolve_widths(layers.len())?;
+    let bypass = layer_precision_overrides(model, &widths);
     let aq = ActQuantization::from_histograms(
         &cache.hists,
         plan.base.scheme,
@@ -138,17 +154,21 @@ pub fn prepare_cached(
     for name in &model.weights.order {
         let t = model.weights.get(name)?;
         let layer = name.trim_end_matches("_w").trim_end_matches("_b");
-        let keep_fp32 = layer_pos.get(layer).is_some_and(|&i| mask[i]);
+        let width = layer_pos
+            .get(layer)
+            .map_or(BitWidth::Fp32, |&i| widths[i]);
         // biases stay fp32 in the fake-quant evaluation (they are int32
         // at accumulator scale on true integer hardware, which the VTA
         // path models exactly)
-        let variant = if name.ends_with("_w") && !keep_fp32 {
-            WeightVariant::Quant(plan.base.scheme, plan.base.gran)
+        let variant = if name.ends_with("_w") && !width.is_float() {
+            WeightVariant::Quant(plan.base.scheme, plan.base.gran, width)
         } else {
             WeightVariant::Fp32
         };
         weights.push(wcache.get_or_build(name, variant, || match variant {
-            WeightVariant::Quant(scheme, gran) => fake_quant_weights(t, scheme, gran),
+            WeightVariant::Quant(scheme, gran, width) => {
+                fake_quant_weights_at(t, scheme, gran, width)
+            }
             WeightVariant::Fp32 => t.clone(),
         }));
     }
@@ -190,7 +210,8 @@ mod tests {
             build_count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             Tensor { shape: vec![2], data: vec![1.0, 2.0] }
         };
-        let variant = WeightVariant::Quant(Scheme::Symmetric, Granularity::Tensor);
+        let variant =
+            WeightVariant::Quant(Scheme::Symmetric, Granularity::Tensor, BitWidth::Int8);
         let a = wcache.get_or_build("l1_w", variant, build);
         let b = wcache.get_or_build("l1_w", variant, build);
         assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
@@ -198,10 +219,18 @@ mod tests {
         // a different variant of the same tensor is a distinct entry
         let c = wcache.get_or_build(
             "l1_w",
-            WeightVariant::Quant(Scheme::Pow2, Granularity::Tensor),
+            WeightVariant::Quant(Scheme::Pow2, Granularity::Tensor, BitWidth::Int8),
             build,
         );
         assert!(!Arc::ptr_eq(&a, &c));
         assert_eq!(wcache.entries(), 2);
+        // ...and so is the same scheme at a different bit-width
+        let d = wcache.get_or_build(
+            "l1_w",
+            WeightVariant::Quant(Scheme::Symmetric, Granularity::Tensor, BitWidth::Int4),
+            build,
+        );
+        assert!(!Arc::ptr_eq(&a, &d));
+        assert_eq!(wcache.entries(), 3);
     }
 }

@@ -15,11 +15,17 @@ use crate::util::Pcg32;
 /// An image classification dataset: u8 NHWC pixels + labels.
 #[derive(Clone)]
 pub struct Dataset {
-    pub images: Vec<u8>, // n*h*w*c
+    /// Raw pixels, `n * h * w * c` bytes in NHWC order.
+    pub images: Vec<u8>,
+    /// One class label per image.
     pub labels: Vec<u8>,
+    /// Number of images.
     pub n: usize,
+    /// Image height.
     pub h: usize,
+    /// Image width.
     pub w: usize,
+    /// Channels per pixel.
     pub c: usize,
 }
 
@@ -30,6 +36,7 @@ fn read_u32(r: &mut impl Read) -> Result<u32> {
 }
 
 impl Dataset {
+    /// Load a `.qtd` dataset file (see python/compile/dataset.py).
     pub fn load(path: &Path) -> Result<Dataset> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("opening {}", path.display()))?;
@@ -77,6 +84,7 @@ impl Dataset {
         (self.batch(&padded), idx.len())
     }
 
+    /// Labels of the images at `idx`, in order.
     pub fn labels_for(&self, idx: &[usize]) -> Vec<u8> {
         idx.iter().map(|&i| self.labels[i]).collect()
     }
@@ -119,11 +127,14 @@ pub fn synthetic_dataset(
 
 /// Named weight tensors loaded from a `.qtw` file.
 pub struct Weights {
+    /// Tensors by name.
     pub tensors: HashMap<String, Tensor>,
-    pub order: Vec<String>, // file order == flat ABI order
+    /// Names in file order (== the flat ABI order of the HLO artifacts).
+    pub order: Vec<String>,
 }
 
 impl Weights {
+    /// Load a `.qtw` weight file (see python/compile/aot.py).
     pub fn load(path: &Path) -> Result<Weights> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("opening {}", path.display()))?;
@@ -165,6 +176,7 @@ impl Weights {
         Ok(Weights { tensors, order })
     }
 
+    /// Tensor by name, or a descriptive error.
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.tensors.get(name).ok_or_else(|| anyhow::anyhow!("missing weight {name}"))
     }

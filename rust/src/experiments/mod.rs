@@ -22,9 +22,10 @@ use crate::data::{synthetic_dataset, Dataset};
 use crate::interp::{argmax_batch, Interpreter};
 use crate::metrics::{BestConfigRow, DiversityAnalysis};
 use crate::quant::{
-    general_space, model_size_bytes, model_size_bytes_masked, model_size_fp32,
-    weight_mse, CalibCount, Clipping, ConfigSpace, Granularity, LayerwiseSpace,
-    QuantConfig, Scheme, SpaceRef, VtaConfig, ALL_SCHEMES,
+    general_space, model_size_bytes, model_size_bytes_at, model_size_fp32,
+    weight_mse, BitWidth, CalibCount, Clipping, ConfigSpace, Granularity,
+    LayerwiseSpace, QuantConfig, Scheme, SpaceRef, VtaConfig, ALL_SCHEMES,
+    BINARY_WIDTHS,
 };
 use crate::runtime::Runtime;
 use crate::search::SearchTrace;
@@ -42,6 +43,8 @@ pub fn available_models(q: &Quantune) -> Vec<String> {
         .collect()
 }
 
+/// Output directory for CSVs and reports (`$QUANTUNE_RESULTS`, default
+/// `results/`).
 pub fn results_dir() -> PathBuf {
     std::env::var("QUANTUNE_RESULTS")
         .map(PathBuf::from)
@@ -76,6 +79,7 @@ pub fn ensure_sweep(
 // Table 1: best configuration per model
 // ---------------------------------------------------------------------------
 
+/// Table 1: the best configuration per model, from the full sweep.
 pub fn table1(q: &mut Quantune, runtime: &Runtime) -> Result<Vec<BestConfigRow>> {
     let mut rows = Vec::new();
     for name in available_models(q) {
@@ -121,14 +125,19 @@ pub fn table1(q: &mut Quantune, runtime: &Runtime) -> Result<Vec<BestConfigRow>>
 // Table 2: accuracy-measurement cost per device
 // ---------------------------------------------------------------------------
 
+/// One row of Table 2 (accuracy-measurement cost per device).
 pub struct Table2Row {
+    /// Model name.
     pub model: String,
+    /// Wall-clock seconds of one HLO measurement on this host.
     pub measured_host_secs: f64,
     /// modeled hours on (a53, i7-8700, 2080ti) for a paper-scale
     /// (50 000 image) validation pass
     pub modeled_hours: [f64; 3],
 }
 
+/// Table 2: accuracy-measurement cost, measured on this host and
+/// modeled for the paper's three devices.
 pub fn table2(q: &mut Quantune, runtime: &Runtime) -> Result<Vec<Table2Row>> {
     let mut rows = Vec::new();
     for name in available_models(q) {
@@ -168,7 +177,9 @@ pub fn table2(q: &mut Quantune, runtime: &Runtime) -> Result<Vec<Table2Row>> {
 // Table 3: scheme comparison (computed, not just asserted)
 // ---------------------------------------------------------------------------
 
+/// One row of Table 3 (scheme comparison).
 pub struct Table3Row {
+    /// The scheme under comparison.
     pub scheme: Scheme,
     /// fake-quant MSE on a symmetric gaussian tensor (fine-grained mapping)
     pub mse_gaussian: f64,
@@ -176,9 +187,12 @@ pub struct Table3Row {
     pub mse_skewed: f64,
     /// arithmetic ops per requantized value (low computation)
     pub ops_per_value: u32,
+    /// Can an integer-only accelerator execute it?
     pub integer_only: bool,
 }
 
+/// Table 3: quantitative scheme comparison on synthetic tensors (runs
+/// without artifacts).
 pub fn table3() -> Result<Vec<Table3Row>> {
     let mut rng = Pcg32::seeded(42);
     let gaussian = crate::ir::Tensor {
@@ -225,6 +239,7 @@ pub fn table3() -> Result<Vec<Table3Row>> {
 // Table 4: diversity (entropy) analysis
 // ---------------------------------------------------------------------------
 
+/// Table 4: Shannon-entropy diversity of near-fp32 configurations.
 pub fn table4(q: &mut Quantune, runtime: &Runtime, threshold: f64) -> Result<DiversityAnalysis> {
     let mut tables = Vec::new();
     for name in available_models(q) {
@@ -252,15 +267,23 @@ pub fn table4(q: &mut Quantune, runtime: &Runtime, threshold: f64) -> Result<Div
 // Table 5: model sizes
 // ---------------------------------------------------------------------------
 
+/// One row of Table 5 (serialized model bytes per configuration).
 pub struct Table5Row {
+    /// Model name.
     pub model: String,
+    /// fp32 bytes.
     pub original: u64,
+    /// int8 per-tensor bytes.
     pub tensor: u64,
+    /// int8 per-channel bytes.
     pub channel: u64,
+    /// Per-tensor with first/last layers fp32.
     pub tensor_mixed: u64,
+    /// Per-channel with first/last layers fp32.
     pub channel_mixed: u64,
 }
 
+/// Table 5: serialized model sizes per granularity/mixed setting.
 pub fn table5(q: &Quantune) -> Result<Vec<Table5Row>> {
     let mut rows = Vec::new();
     for name in available_models(q) {
@@ -301,6 +324,7 @@ pub fn table5(q: &Quantune) -> Result<Vec<Table5Row>> {
 // Fig 2: accuracy across all 96 configs
 // ---------------------------------------------------------------------------
 
+/// Fig 2: Top-1 across all 96 general-space configs, per model.
 pub fn fig2(q: &mut Quantune, runtime: &Runtime) -> Result<HashMap<String, Vec<f64>>> {
     let mut out = HashMap::new();
     let mut csv = Csv::new(&["model", "config", "slug", "top1", "fp32_top1"]);
@@ -326,6 +350,7 @@ pub fn fig2(q: &mut Quantune, runtime: &Runtime) -> Result<HashMap<String, Vec<f
 // Fig 3: XGBoost feature importance
 // ---------------------------------------------------------------------------
 
+/// Fig 3: XGBoost feature importance (gain), fitted on every sweep.
 pub fn fig3(q: &mut Quantune, runtime: &Runtime) -> Result<Vec<(String, f64)>> {
     // fit the cost model on every model's sweep (arch + config features)
     let mut xs = Vec::new();
@@ -363,8 +388,11 @@ pub fn fig3(q: &mut Quantune, runtime: &Runtime) -> Result<Vec<(String, f64)>> {
 // Fig 5/6: search-algorithm convergence
 // ---------------------------------------------------------------------------
 
+/// Seed-averaged convergence of one (model, algorithm) pair (Fig 5/6).
 pub struct ConvergenceResult {
+    /// Model name.
     pub model: String,
+    /// Search algorithm name.
     pub algo: String,
     /// mean trials to reach within eps of the sweep best (seed-averaged)
     pub trials_to_best: f64,
@@ -372,6 +400,8 @@ pub struct ConvergenceResult {
     pub trace: SearchTrace,
 }
 
+/// Fig 5: convergence of the five search algorithms against the sweep
+/// oracle, seed-averaged.
 pub fn fig5(
     q: &mut Quantune,
     runtime: &Runtime,
@@ -479,13 +509,19 @@ pub fn fig6(results: &[ConvergenceResult]) -> Result<Vec<(String, String, f64)>>
 // Fig 7: Quantune vs fixed vendor-default baseline ("TensorRT")
 // ---------------------------------------------------------------------------
 
+/// One bar group of Fig 7 (Quantune vs the vendor-default baseline).
 pub struct Fig7Row {
+    /// Model name.
     pub model: String,
+    /// fp32 reference Top-1.
     pub fp32: f64,
+    /// Top-1 of the fixed TensorRT-like config.
     pub baseline: f64,
+    /// Top-1 of the sweep's best config.
     pub quantune: f64,
 }
 
+/// Fig 7: Quantune's sweep-best vs the fixed vendor-default baseline.
 pub fn fig7(q: &mut Quantune, runtime: &Runtime) -> Result<Vec<Fig7Row>> {
     let baseline_cfg = Quantune::tensorrt_like_baseline();
     let mut rows = Vec::new();
@@ -517,15 +553,24 @@ pub fn fig7(q: &mut Quantune, runtime: &Runtime) -> Result<Vec<Fig7Row>> {
 // Fig 8: integer-only accelerator (VTA)
 // ---------------------------------------------------------------------------
 
+/// One row of Fig 8 (integer-only VTA deployment).
 pub struct Fig8Row {
+    /// Model name.
     pub model: String,
+    /// fp32 reference Top-1.
     pub fp32: f64,
+    /// Top-1 of the single-global-scale TVM-style baseline.
     pub tvm_global: f64,
+    /// Top-1 of the best of the 12 integer-only configs.
     pub quantune_best: f64,
+    /// The winning VTA config.
     pub best_cfg: VtaConfig,
+    /// Simulated accelerator cycles per image of the winner.
     pub cycles_per_image: u64,
 }
 
+/// Fig 8: integer-only VTA deployment, per-layer scales vs a single
+/// global scale, over at most `eval_n` eval images.
 pub fn fig8(q: &Quantune, eval_n: usize) -> Result<Vec<Fig8Row>> {
     let mut rows = Vec::new();
     for name in available_models(q) {
@@ -618,9 +663,13 @@ pub fn fig8(q: &Quantune, eval_n: usize) -> Result<Vec<Fig8Row>> {
 // Fig 9: fp32 vs quantized latency
 // ---------------------------------------------------------------------------
 
+/// One row of Fig 9 (fp32 vs quantized latency).
 pub struct Fig9Row {
+    /// Model name.
     pub model: String,
+    /// Measured fp32 batch-1 latency (milliseconds).
     pub fp32_ms: f64,
+    /// Measured fake-quant batch-1 latency (milliseconds).
     pub fq_ms: f64,
     /// `None` when a timing was degenerate (zero / non-finite)
     pub speedup: Option<f64>,
@@ -628,6 +677,8 @@ pub struct Fig9Row {
     pub modeled_speedups: [f64; 3],
 }
 
+/// Fig 9: measured fp32 vs fake-quant latency plus modeled per-device
+/// speedups.
 pub fn fig9(q: &Quantune, runtime: &Runtime, reps: usize) -> Result<Vec<Fig9Row>> {
     let mut rows = Vec::new();
     for name in available_models(q) {
@@ -675,39 +726,58 @@ pub fn fig9(q: &Quantune, runtime: &Runtime, reps: usize) -> Result<Vec<Fig9Row>
 /// One measured point of a layer-wise space: a layer mask, its accuracy,
 /// and the serialized weight bytes it costs.
 pub struct LayerwiseParetoRow {
+    /// Config index within the layer-wise space.
     pub config: usize,
+    /// Human-readable width assignment.
     pub label: String,
+    /// Weighted layers kept fp32.
     pub fp32_layers: usize,
+    /// Total weighted layers in the model.
     pub total_layers: usize,
+    /// Measured Top-1.
     pub accuracy: f64,
+    /// Serialized bytes under the per-width Table-5 accounting.
     pub quant_bytes: u64,
     /// true when no other point has both higher-or-equal accuracy and
     /// lower-or-equal bytes (with at least one strict)
     pub on_frontier: bool,
 }
 
+/// 2D dominance flags over (maximize accuracy, minimize bytes) points:
+/// `true` where no other point is at least as good on both axes and
+/// strictly better on one.
+fn frontier2(points: &[(f64, u64)]) -> Vec<bool> {
+    points
+        .iter()
+        .enumerate()
+        .map(|(i, &(acc, bytes))| {
+            !points.iter().enumerate().any(|(j, &(a, b))| {
+                j != i && a >= acc && b <= bytes && (a > acc || b < bytes)
+            })
+        })
+        .collect()
+}
+
 fn mark_frontier(rows: &mut [LayerwiseParetoRow]) {
     let points: Vec<(f64, u64)> = rows.iter().map(|r| (r.accuracy, r.quant_bytes)).collect();
-    for (i, r) in rows.iter_mut().enumerate() {
-        r.on_frontier = !points.iter().enumerate().any(|(j, &(a, b))| {
-            j != i
-                && a >= r.accuracy
-                && b <= r.quant_bytes
-                && (a > r.accuracy || b < r.quant_bytes)
-        });
+    for (r, f) in rows.iter_mut().zip(frontier2(&points)) {
+        r.on_frontier = f;
     }
 }
 
-/// Enumerate a layer-wise space exhaustively (2^K configs fan out across
+/// Enumerate a layer-wise space exhaustively (R^K configs fan out across
 /// the worker pool), measuring Top-1 through the interpreter and model
-/// size through the masked Table-5 accounting. `csv_name` lands under
-/// `results/`.
+/// size through the per-width Table-5 accounting. `widths` is the
+/// per-layer menu (pass [`BINARY_WIDTHS`] for the classic {int8, fp32}
+/// masks). `csv_name` lands under `results/`.
+#[allow(clippy::too_many_arguments)]
 pub fn pareto_layerwise(
     model: &ZooModel,
     calib: &Dataset,
     eval: &Dataset,
     base: QuantConfig,
     k: usize,
+    widths: &[BitWidth],
     seed: u64,
     csv_name: &str,
 ) -> Result<Vec<LayerwiseParetoRow>> {
@@ -720,6 +790,7 @@ pub fn pareto_layerwise(
         &cache.hists,
         base,
         k,
+        widths,
     )?);
     let space_ref: SpaceRef = space.clone();
     // the sensitivity calibration is reused by the evaluator instead of
@@ -738,14 +809,14 @@ pub fn pareto_layerwise(
     let total_layers = model.graph.layers().len();
     let mut rows = Vec::with_capacity(space.size());
     for (i, acc) in configs.iter().zip(accs) {
-        let mask = space.mask_of(*i);
+        let lw = space.widths_of(*i);
         rows.push(LayerwiseParetoRow {
             config: *i,
             label: space.describe(*i)?,
-            fp32_layers: mask.iter().filter(|&&b| b).count(),
+            fp32_layers: lw.iter().filter(|w| w.is_float()).count(),
             total_layers,
             accuracy: acc?,
-            quant_bytes: model_size_bytes_masked(&model.graph, &dims, base.gran, &mask),
+            quant_bytes: model_size_bytes_at(&model.graph, &dims, base.gran, &lw),
             on_frontier: false,
         });
     }
@@ -845,9 +916,263 @@ pub fn pareto_layerwise_synthetic() -> Result<Vec<LayerwiseParetoRow>> {
         &eval,
         pareto_synthetic_base(),
         3,
+        &BINARY_WIDTHS,
         41,
         "pareto_layerwise_synthetic.csv",
     )
+}
+
+// ---------------------------------------------------------------------------
+// Radix Pareto experiment: does the {int4, int8, int16, fp32} genome
+// dominate the binary {int8, fp32} masks on (size, accuracy)?
+// ---------------------------------------------------------------------------
+
+/// One measured point of the radix-vs-binary comparison.
+pub struct RadixParetoRow {
+    /// Which space the point comes from: `"binary"` ({int8, fp32}) or
+    /// `"radix"` ({int4, int8, int16, fp32}).
+    pub space: &'static str,
+    /// Config index within its space.
+    pub config: usize,
+    /// Human-readable width assignment ([`ConfigSpace::describe`]).
+    pub label: String,
+    /// Candidate layers assigned the int4 width.
+    pub int4_layers: usize,
+    /// Weighted layers kept fp32.
+    pub fp32_layers: usize,
+    /// Top-1 agreement with the fp32 model (1.0 = lossless).
+    pub accuracy: f64,
+    /// Serialized bytes under the per-width Table-5 accounting.
+    pub quant_bytes: u64,
+    /// On the joint (accuracy up, bytes down) frontier over BOTH spaces.
+    pub on_frontier: bool,
+    /// Radix rows only: dominates the best binary config -- the
+    /// highest-accuracy binary mask that quantizes at least one layer,
+    /// ties broken by fewer bytes -- i.e. accuracy at least as high AND
+    /// bytes at most as large, one strict.
+    pub dominates_best_binary: bool,
+}
+
+/// Per-sample (top-1 margin, argmax) of a logits batch.
+fn margins_of(logits: &crate::ir::Tensor) -> Vec<(f64, u8)> {
+    let classes = *logits.shape.last().expect("logits have a class axis");
+    let rows = logits.data.len() / classes.max(1);
+    (0..rows)
+        .map(|r| {
+            let row = &logits.data[r * classes..(r + 1) * classes];
+            let (mut top1, mut top2, mut arg) =
+                (f32::NEG_INFINITY, f32::NEG_INFINITY, 0usize);
+            for (c, &v) in row.iter().enumerate() {
+                if v > top1 {
+                    top2 = top1;
+                    top1 = v;
+                    arg = c;
+                } else if v > top2 {
+                    top2 = v;
+                }
+            }
+            ((top1 - top2) as f64, arg as u8)
+        })
+        .collect()
+}
+
+/// The fragile synthetic setup plus one int4-friendly layer and a
+/// margin-filtered eval split:
+///
+/// - `c1`'s weights are snapped to the ternary grid {-absmax, 0,
+///   +absmax}, which is exactly representable on the symmetric int4,
+///   int8, AND int16 grids -- so `c1`'s fake-quant weights are
+///   *identical* (to float rounding) at every integer width, and
+///   dropping it to int4 saves bytes at zero accuracy cost. This is the
+///   distilled form of Banner et al.'s observation that some layers
+///   tolerate 4-bit weights with no loss while others need more bits.
+/// - the eval split keeps only the quarter of samples with the largest
+///   decision margin under BOTH the fp32 network and the reference
+///   quantized deployment (c2 repaired to fp32, everything else int8),
+///   and only where the two agree -- so the agreement metric responds
+///   to the planted c2 pathology rather than to knife-edge argmax flips
+///   from benign rounding noise.
+///
+/// Also returns the [`pareto_synthetic_base`]-count calibration cache
+/// the filter was built with, so callers measure without recalibrating.
+pub fn radix_synthetic_setup() -> Result<(
+    ZooModel,
+    Dataset,
+    Dataset,
+    std::sync::Arc<crate::calib::CalibrationCache>,
+)> {
+    let (mut model, calib, eval_full) = fragile_synthetic_setup()?;
+    model.name = "syn_radix".to_string();
+    {
+        let w = model.weights.tensors.get_mut("c1_w").expect("c1_w exists");
+        let absmax =
+            w.data.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-12);
+        for x in w.data.iter_mut() {
+            // nearest of {-absmax, 0, +absmax}
+            *x = if x.abs() > absmax / 2.0 { absmax * x.signum() } else { 0.0 };
+        }
+    }
+    // the reference quantized deployment: the fragile c2 repaired to
+    // fp32, c1 and d on the int8 grid of the experiment's base config
+    let base = pareto_synthetic_base();
+    let cache = std::sync::Arc::new(calibrate(
+        &model,
+        &calib,
+        base.calib,
+        &CalibBackend::Interp,
+        41,
+    )?);
+    let plan = crate::quant::QuantPlan {
+        base,
+        layer_widths: Some(vec![BitWidth::Int8, BitWidth::Fp32, BitWidth::Int8]),
+    };
+    let setup = crate::coordinator::prepare(&model, &cache, &plan)?;
+    let qweights: HashMap<String, std::sync::Arc<crate::ir::Tensor>> = model
+        .weights
+        .order
+        .iter()
+        .cloned()
+        .zip(setup.weights.iter().cloned())
+        .collect();
+    let fp32_net = Interpreter::new(&model.graph, model.weights_map());
+    let quant_net = Interpreter::new(&model.graph, &qweights);
+
+    // rank samples by the WORSE of the two margins, keep the agreeing
+    // top quarter, and label with the fp32 argmax
+    let idx: Vec<usize> = (0..eval_full.n).collect();
+    let mut ranked: Vec<(f64, usize, u8)> = Vec::with_capacity(eval_full.n);
+    for chunk in idx.chunks(64) {
+        let x = eval_full.batch(chunk);
+        let fm = margins_of(&fp32_net.forward(&x)?);
+        let qm = margins_of(&quant_net.forward_fq(&x, &setup.aq)?);
+        for ((&i, f), q) in chunk.iter().zip(fm).zip(qm) {
+            if f.1 == q.1 {
+                ranked.push((f.0.min(q.0), i, f.1));
+            }
+        }
+    }
+    ranked.sort_by(|a, b| {
+        nan_min_cmp(&b.0, &a.0).then(a.1.cmp(&b.1)) // widest margin first
+    });
+    ranked.truncate((eval_full.n / 4).max(1));
+    ranked.sort_by_key(|r| r.1); // back to stable dataset order
+    let il = eval_full.h * eval_full.w * eval_full.c;
+    let mut images = Vec::with_capacity(ranked.len() * il);
+    let mut labels = Vec::with_capacity(ranked.len());
+    for &(_, i, label) in &ranked {
+        images.extend_from_slice(&eval_full.images[i * il..(i + 1) * il]);
+        labels.push(label);
+    }
+    let eval = Dataset {
+        images,
+        labels,
+        n: ranked.len(),
+        h: eval_full.h,
+        w: eval_full.w,
+        c: eval_full.c,
+    };
+    Ok((model, calib, eval, cache))
+}
+
+/// Self-contained radix-vs-binary Pareto experiment (no artifacts): the
+/// [`radix_synthetic_setup`] model's layer-wise space enumerated twice
+/// over the same top-3 fragile candidates -- once with the binary
+/// {int8, fp32} menu (8 configs), once with the full {int4, int8,
+/// int16, fp32} radix (64 configs) -- measured through the interpreter
+/// and priced with the per-width byte accounting. The joint (accuracy,
+/// bytes) frontier is marked across both spaces, and each radix row
+/// records whether it dominates the best binary config; the int4-exact
+/// `c1` layer guarantees at least one does. Emits
+/// `results/pareto_radix_synthetic.csv`.
+pub fn pareto_radix_synthetic() -> Result<Vec<RadixParetoRow>> {
+    let (model, calib, eval, cache) = radix_synthetic_setup()?;
+    let base = pareto_synthetic_base();
+    let seed = 41;
+    let dims = |layer: &str| {
+        let w = model.weights.get(&format!("{layer}_w")).expect("layer weight");
+        let b = model.weights.get(&format!("{layer}_b")).expect("layer bias");
+        (w.len(), b.len())
+    };
+    let radix_menu =
+        [BitWidth::Int4, BitWidth::Int8, BitWidth::Int16, BitWidth::Fp32];
+    let mut rows: Vec<RadixParetoRow> = Vec::new();
+    for (space_name, menu) in
+        [("binary", &BINARY_WIDTHS[..]), ("radix", &radix_menu[..])]
+    {
+        let space = std::sync::Arc::new(LayerwiseSpace::rank(
+            &model.name,
+            &model.graph,
+            model.weights_map(),
+            &cache.hists,
+            base,
+            3,
+            menu,
+        )?);
+        let space_ref: SpaceRef = space.clone();
+        let ev = InterpEvaluator::new(&model, &calib, &eval, seed)
+            .with_space(space_ref)
+            .with_calibration(base.calib, cache.clone());
+        let configs: Vec<usize> = (0..space.size()).collect();
+        let accs = Pool::auto().map(&configs, |&i| ev.measure_shared(i))?;
+        for (i, acc) in configs.iter().zip(accs) {
+            let lw = space.widths_of(*i);
+            rows.push(RadixParetoRow {
+                space: space_name,
+                config: *i,
+                label: space.describe(*i)?,
+                int4_layers: space.layers_at(*i, BitWidth::Int4),
+                fp32_layers: lw.iter().filter(|w| w.is_float()).count(),
+                accuracy: acc?,
+                quant_bytes: model_size_bytes_at(&model.graph, &dims, base.gran, &lw),
+                on_frontier: false,
+                dominates_best_binary: false,
+            });
+        }
+    }
+
+    // joint 2D frontier over both spaces (maximize accuracy, minimize
+    // bytes) -- the acceptance question is whether int4-capable points
+    // push it past anything the binary masks can reach
+    let pts: Vec<(f64, u64)> =
+        rows.iter().map(|r| (r.accuracy, r.quant_bytes)).collect();
+    for (r, f) in rows.iter_mut().zip(frontier2(&pts)) {
+        r.on_frontier = f;
+    }
+    // best binary point: highest accuracy among configs that quantize
+    // at least one layer (the all-fp32 mask is the unquantized
+    // reference, not a deployment), ties broken by fewer bytes
+    let n_layers = model.graph.layers().len();
+    let best_binary = rows
+        .iter()
+        .filter(|r| r.space == "binary" && r.fp32_layers < n_layers)
+        .map(|r| (r.accuracy, r.quant_bytes))
+        .max_by(|a, b| nan_min_cmp(&a.0, &b.0).then(b.1.cmp(&a.1)))
+        .ok_or_else(|| anyhow::anyhow!("binary space produced no rows"))?;
+    for r in rows.iter_mut().filter(|r| r.space == "radix") {
+        r.dominates_best_binary = r.accuracy >= best_binary.0
+            && r.quant_bytes <= best_binary.1
+            && (r.accuracy > best_binary.0 || r.quant_bytes < best_binary.1);
+    }
+
+    let mut csv = Csv::new(&[
+        "space", "config", "label", "int4_layers", "fp32_layers", "top1",
+        "quant_bytes", "on_frontier", "dominates_best_binary",
+    ]);
+    for r in &rows {
+        csv.row(&[
+            r.space.to_string(),
+            r.config.to_string(),
+            r.label.clone(),
+            r.int4_layers.to_string(),
+            r.fp32_layers.to_string(),
+            format!("{:.4}", r.accuracy),
+            r.quant_bytes.to_string(),
+            r.on_frontier.to_string(),
+            r.dominates_best_binary.to_string(),
+        ]);
+    }
+    csv.write_file(&results_dir().join("pareto_radix_synthetic.csv"))?;
+    Ok(rows)
 }
 
 // ---------------------------------------------------------------------------
@@ -858,10 +1183,15 @@ pub fn pareto_layerwise_synthetic() -> Result<Vec<LayerwiseParetoRow>> {
 
 /// One measured point of a space under the three deployment objectives.
 pub struct ObjectiveParetoRow {
+    /// Config index within the space.
     pub config: usize,
+    /// Human-readable config slug.
     pub label: String,
+    /// Measured Top-1.
     pub accuracy: f64,
+    /// Modeled per-image latency (milliseconds).
     pub latency_ms: f64,
+    /// Serialized quantized model bytes.
     pub size_bytes: f64,
     /// true when no other point is at least as good on all of
     /// (accuracy, latency, bytes) and strictly better on one
@@ -1001,6 +1331,7 @@ pub fn pareto_objectives_synthetic() -> Result<Vec<ObjectiveParetoRow>> {
         &cache.hists,
         base,
         3,
+        &BINARY_WIDTHS,
     )?);
     pareto_objectives(
         &model,

@@ -80,11 +80,14 @@ fn weight_matrix(wt: &Tensor, g: usize, groups: usize) -> (Vec<f32>, usize, usiz
     (m, rows, outg)
 }
 
+/// Pure-rust reference interpreter for one (graph, weight set) pair.
+///
 /// Generic over the map's value type so callers can hand either owned
 /// tensors (`HashMap<String, Tensor>`, e.g. a model's weight file) or
 /// shared cache entries (`HashMap<String, Arc<Tensor>>` from the
 /// quantizer's weight cache) without copying tensor data.
 pub struct Interpreter<'a, W: std::borrow::Borrow<Tensor> = Tensor> {
+    /// The model graph being evaluated.
     pub graph: &'a Graph,
     weights: &'a HashMap<String, W>,
 }

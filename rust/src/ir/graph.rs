@@ -13,12 +13,16 @@ use crate::util::Json;
 /// Activation fused into a producing node.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Act {
+    /// Identity (no activation).
     None,
+    /// `max(x, 0)`.
     Relu,
+    /// `clamp(x, 0, 6)`.
     Relu6,
 }
 
 impl Act {
+    /// Parse a spec string (`none` / `relu` / `relu6`).
     pub fn parse(s: &str) -> Result<Act> {
         Ok(match s {
             "none" => Act::None,
@@ -28,6 +32,7 @@ impl Act {
         })
     }
 
+    /// Apply the activation to one value.
     pub fn apply(self, x: f32) -> f32 {
         match self {
             Act::None => x,
@@ -37,9 +42,12 @@ impl Act {
     }
 }
 
+/// Pooling flavor of an [`Op::Pool`] node.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PoolKind {
+    /// Window maximum.
     Max,
+    /// Window average.
     Avg,
 }
 
@@ -47,40 +55,65 @@ pub enum PoolKind {
 /// so validation can cross-check shape inference.
 #[derive(Clone, Debug)]
 pub enum Op {
+    /// 2D convolution (HWIO weights) with a fused activation.
     Conv {
+        /// Square kernel size.
         k: usize,
+        /// Stride in both spatial dims.
         stride: usize,
+        /// Zero padding in both spatial dims.
         pad: usize,
+        /// Input channels.
         in_ch: usize,
+        /// Output channels.
         out_ch: usize,
+        /// Channel groups (`in_ch` for depthwise).
         groups: usize,
+        /// Fused activation.
         act: Act,
     },
+    /// Spatial pooling window.
     Pool {
+        /// Max or average.
         kind: PoolKind,
+        /// Square window size.
         k: usize,
+        /// Stride in both spatial dims.
         stride: usize,
+        /// Zero padding in both spatial dims.
         pad: usize,
     },
     /// Global average pool: [N,H,W,C] -> [N,C]
     Gap,
+    /// Elementwise residual add with a fused activation.
     Add {
+        /// Fused activation.
         act: Act,
     },
+    /// Channel concatenation of all inputs.
     Concat,
+    /// ShuffleNet channel shuffle.
     Shuffle {
+        /// Shuffle group count (must divide the channels).
         groups: usize,
     },
+    /// Fully connected layer ([in, out] weights).
     Dense {
+        /// Input features.
         in_dim: usize,
+        /// Output features.
         out_dim: usize,
     },
 }
 
+/// One node of a model graph.
 #[derive(Clone, Debug)]
 pub struct Node {
+    /// Unique node name (also names its output tensor).
     pub name: String,
+    /// The operator.
     pub op: Op,
+    /// Names of the input tensors (`"input"` is the network input).
     pub inputs: Vec<String>,
 }
 
@@ -103,9 +136,13 @@ impl Node {
 /// A CNN model graph plus its ABI metadata.
 #[derive(Clone, Debug)]
 pub struct Graph {
+    /// Model name.
     pub name: String,
+    /// Nodes in evaluation (topological) order.
     pub nodes: Vec<Node>,
-    pub input_shape: [usize; 3], // H, W, C
+    /// Network input shape as [H, W, C].
+    pub input_shape: [usize; 3],
+    /// Classifier output dimension.
     pub num_classes: usize,
 }
 
@@ -273,6 +310,7 @@ impl Graph {
         &self.nodes.last().expect("empty graph").name
     }
 
+    /// Node by name.
     pub fn node(&self, name: &str) -> Option<&Node> {
         self.nodes.iter().find(|n| n.name == name)
     }

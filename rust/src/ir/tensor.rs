@@ -5,16 +5,20 @@ use anyhow::{bail, Result};
 /// Dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Dimensions, outermost first (NHWC for images).
     pub shape: Vec<usize>,
+    /// Row-major elements (`shape.iter().product()` of them).
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// All-zero tensor of `shape`.
     pub fn zeros(shape: &[usize]) -> Self {
         let n = shape.iter().product();
         Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
     }
 
+    /// Tensor from raw elements; errors on a shape/length mismatch.
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -23,14 +27,17 @@ impl Tensor {
         Ok(Tensor { shape: shape.to_vec(), data })
     }
 
+    /// Number of elements.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Is the tensor empty?
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.shape.len()
     }
@@ -67,17 +74,23 @@ impl Tensor {
 /// `out_channels` entries for per-channel (weights only).
 #[derive(Clone, Debug)]
 pub struct QTensor {
+    /// Dimensions, outermost first.
     pub shape: Vec<usize>,
+    /// int8 grid values.
     pub data: Vec<i8>,
+    /// One scale per group (tensor or output channel).
     pub scales: Vec<f32>,
+    /// One zero point per group, aligned with `scales`.
     pub zero_points: Vec<i32>,
 }
 
 impl QTensor {
+    /// Number of elements.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Is the tensor empty?
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -97,11 +110,14 @@ impl QTensor {
 /// Int32 accumulator tensor (VTA simulator).
 #[derive(Clone, Debug)]
 pub struct I32Tensor {
+    /// Dimensions, outermost first.
     pub shape: Vec<usize>,
+    /// Accumulator values.
     pub data: Vec<i32>,
 }
 
 impl I32Tensor {
+    /// All-zero tensor of `shape`.
     pub fn zeros(shape: &[usize]) -> Self {
         let n = shape.iter().product();
         I32Tensor { shape: shape.to_vec(), data: vec![0; n] }

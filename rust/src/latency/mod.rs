@@ -17,10 +17,15 @@ use crate::zoo::ZooModel;
 /// fp32-vs-quantized latency of one model.
 #[derive(Clone, Debug)]
 pub struct LatencyReport {
+    /// Model name.
     pub model: String,
+    /// Median fp32 single-image latency (milliseconds).
     pub fp32_ms: f64,
+    /// Median fake-quantized single-image latency (milliseconds).
     pub fq_ms: f64,
+    /// Full sample statistics behind [`LatencyReport::fp32_ms`].
     pub fp32_stats: LatencyStats,
+    /// Full sample statistics behind [`LatencyReport::fq_ms`].
     pub fq_stats: LatencyStats,
 }
 

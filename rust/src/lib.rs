@@ -3,8 +3,29 @@
 //! Reproduction of "Quantune: Post-training Quantization of Convolutional
 //! Neural Networks using Extreme Gradient Boosting for Fast Deployment"
 //! (Lee et al., FGCS 2022) as a three-layer Rust + JAX + Pallas stack.
+//! See `rust/ARCHITECTURE.md` for the data-flow picture and
+//! `rust/BENCHMARKS.md` for how every table and figure is regenerated.
 //!
-//! Layers:
+//! # Paper-section map
+//!
+//! | Paper section | What it defines | Module |
+//! |---|---|---|
+//! | §4.1 calibration caches | histogram collection over {1, 64, 512} images | [`calib`], [`quant::Histogram`] |
+//! | §4.2 quantization schemes (Eq. 2-13) | asymmetric / symmetric / symmetric-uint8 / pow2 grids | [`quant::scheme`] |
+//! | §4.3 range clipping | max vs KL-divergence thresholds | [`quant::histogram`] |
+//! | §4.4 granularity | per-tensor vs per-channel weight scales | [`quant::weights`] |
+//! | §4.5 mixed precision | fp32 bypass, generalized to per-layer int4/int8/int16/fp32 | [`quant::space`], [`quant::BitWidth`] |
+//! | Eq. 1 / Eq. 23 search spaces | the 96-element general and 12-element VTA spaces | [`quant::config`], [`quant::ConfigSpace`] |
+//! | §5.1 features | arch blocks `e` ++ config features `s` | [`zoo`], [`coordinator::features_for`] |
+//! | §5.2 XGB cost model + transfer | gradient-boosted trees over the trial database | [`xgb`], [`search::XgbSearch`] |
+//! | Algorithm 1 / Fig 5-6 | the five search drivers | [`search`] |
+//! | Fig 4 coordinator | artifact loading, sweeps, database `D`, objectives | [`coordinator`] |
+//! | §6.4 integer-only deployment | VTA simulator + cycle model | [`vta`] |
+//! | §6.5 latency | PJRT batch-1 wallclock | [`latency`], [`runtime`] |
+//! | Tables/Figures | experiment drivers + CSV emitters | [`experiments`] |
+//!
+//! # Layers
+//!
 //! - L3 (this crate): the Quantune coordinator — quantization config search
 //!   (XGBoost cost model + transfer learning), calibration, the quantization
 //!   substrate (our mini-Glow graph IR + quantizers), the VTA integer-only
@@ -14,7 +35,10 @@
 //!   12-element VTA integer-only space (Eq. 23), and per-model layer-wise
 //!   mixed-precision spaces ([`quant::LayerwiseSpace`]) all flow through
 //!   the same driver, and database records carry a space tag so transfer
-//!   learning never mixes incompatible feature vectors. The driver is
+//!   learning never mixes incompatible feature vectors. The layer-wise
+//!   space is a mixed-radix genome: each fragile layer independently
+//!   chooses a weight [`quant::BitWidth`] (int4 / int8 / int16 / fp32),
+//!   with bytes and modeled latency priced per width. The driver is
 //!   also objective-agnostic: [`coordinator::objective`] scalarizes
 //!   (Top-1, modeled latency, serialized bytes) so every algorithm and
 //!   space tunes deployment trade-offs unchanged, with trials, traces,
@@ -26,16 +50,20 @@
 //!   hot-spot (fake-quant elementwise + int8 GEMM requantization), checked
 //!   against pure-jnp oracles.
 //!
-//! Parallel evaluation engine: [`util::pool`] is a dependency-free
-//! worker pool (std scoped threads, `QUANTUNE_THREADS` knob) that three
-//! layers of the accuracy-measurement path schedule through -- the
-//! row-tiled GEMM in [`interp::gemm`], batch-level Top-1 measurement in
-//! [`coordinator::InterpEvaluator`] (plus the parallel sweep
-//! `Quantune::sweep_parallel` over its `SharedEvaluator` form), and the
-//! (algorithm x seed) / (VTA config) fan-outs in [`experiments`]. All
-//! parallel paths reduce in input order, so results are bit-identical to
-//! the serial ones at any thread count (rust/tests/parallel.rs enforces
-//! this); see rust/BENCHMARKS.md for the speedup methodology.
+//! # Parallel evaluation engine
+//!
+//! [`util::pool`] is a dependency-free worker pool (std scoped threads,
+//! `QUANTUNE_THREADS` knob) that three layers of the accuracy-measurement
+//! path schedule through -- the row-tiled GEMM in [`interp::gemm`],
+//! batch-level Top-1 measurement in [`coordinator::InterpEvaluator`]
+//! (plus the parallel sweep `Quantune::sweep_parallel` over its
+//! `SharedEvaluator` form), and the (algorithm x seed) / (VTA config)
+//! fan-outs in [`experiments`]. All parallel paths reduce in input order,
+//! so results are bit-identical to the serial ones at any thread count
+//! (rust/tests/parallel.rs enforces this); see rust/BENCHMARKS.md for
+//! the speedup methodology.
+
+#![warn(missing_docs)]
 
 pub mod calib;
 pub mod config;

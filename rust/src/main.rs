@@ -3,9 +3,9 @@
 //! ```text
 //! quantune info      [--artifacts DIR]
 //! quantune sweep     [--models mn,..] [--backend hlo|interp] [--force]
-//!                    [--space general|vta|layerwise] [--layers K]
+//!                    [--space general|vta|layerwise] [--layers K] [--bits 4,8,16]
 //! quantune search    [--models mn,..] [--algo xgb_t] [--seed N] [--budget N]
-//!                    [--space general|vta|layerwise] [--layers K]
+//!                    [--space general|vta|layerwise] [--layers K] [--bits 4,8,16]
 //!                    [--objective acc|lat|size|balanced] [--device a53|i7|2080ti]
 //! quantune quantize  [--models mn,..] [--config IDX]   # deploy report
 //! quantune vta       [--models mn,..]                  # integer-only path
@@ -17,6 +17,14 @@
 //! or a per-model layer-wise mixed-precision space built from a
 //! calibration-driven fragility ranking of the top `--layers K` weighted
 //! layers on top of the model's best known base config.
+//!
+//! `--bits` sets the per-layer width menu of the layer-wise space: a CSV
+//! of integer weight widths (`4`, `8`, `16`), each free layer choosing
+//! one of them or the fp32 bypass (always included). The default `8`
+//! reproduces the binary {int8, fp32} mask; `--bits 4,8,16` searches the
+//! full mixed-radix genome. Wider menus consume more genome bits, so the
+//! `--layers` cap shrinks (12 free layers for the binary menu, 6 for the
+//! 4-way radix).
 //!
 //! `--objective` selects what the search maximizes: plain Top-1
 //! accuracy (`acc`, the paper's objective) or a weighted scalarization
@@ -39,8 +47,9 @@ use quantune::coordinator::{
     OracleEvaluator, Quantune, ALGORITHMS, DEVICES, GENERAL_SPACE_TAG,
 };
 use quantune::quant::{
-    general_space, model_size_bytes, model_size_fp32, vta_space, ConfigSpace,
-    Granularity, QuantConfig, SpaceRef, VtaConfig, MAX_LAYERWISE_BITS,
+    general_space, max_layers_for, model_size_bytes, model_size_fp32,
+    parse_bits_spec, vta_space, ConfigSpace, Granularity, QuantConfig, SpaceRef,
+    VtaConfig, MAX_LAYERWISE_BITS,
 };
 use quantune::runtime::Runtime;
 use quantune::util::{fmt_duration, Pool, Timer};
@@ -65,6 +74,7 @@ fn print_help() {
          commands: info | sweep | search | quantize | vta | latency\n\
          common options: --artifacts DIR --models mn,shn,... --seed N\n\
          space options:  --space general|vta|layerwise --layers K (layerwise cap)\n\
+                         --bits 4,8,16 (layer-wise width menu; default 8 = {{int8,fp32}})\n\
          objectives:     --objective acc|lat|size|balanced --device a53|i7|2080ti\n\
          env: QUANTUNE_THREADS=N sizes the worker pool (default: all cores)\n\
          see README.md and rust/BENCHMARKS.md for details"
@@ -74,7 +84,7 @@ fn print_help() {
 /// Resolve `--space` for one model. The layer-wise space builds on the
 /// model's best known general config (falling back to the TensorRT-like
 /// baseline when no sweep/search ran yet), freeing the `--layers K`
-/// most fragile layers.
+/// most fragile layers to choose among the `--bits` width menu.
 fn resolve_space(cli: &Cli, q: &Quantune, model: &zoo::ZooModel) -> Result<SpaceRef> {
     match cli.opt_or("space", "general").as_str() {
         "general" => Ok(general_space()),
@@ -91,13 +101,16 @@ fn resolve_space(cli: &Cli, q: &Quantune, model: &zoo::ZooModel) -> Result<Space
                     Quantune::tensorrt_like_baseline()
                 }
             };
-            let k = cli.opt_usize("layers", 4)?;
+            let widths = parse_bits_spec(&cli.opt_or("bits", "8"))?;
+            let max_k = max_layers_for(&widths);
+            let k = cli.opt_usize("layers", 4.min(max_k))?;
             anyhow::ensure!(
-                (1..=MAX_LAYERWISE_BITS).contains(&k),
-                "--layers {k} is out of range: the layer-wise space enumerates 2^K \
-                 configs, so K must be in 1..={MAX_LAYERWISE_BITS}"
+                (1..=max_k).contains(&k),
+                "--layers {k} is out of range for this --bits menu: the layer-wise \
+                 genome is capped at {MAX_LAYERWISE_BITS} bits, so K must be in \
+                 1..={max_k}"
             );
-            q.layerwise_space(model, base, k)
+            q.layerwise_space(model, base, k, &widths)
         }
         other => anyhow::bail!("unknown space {other:?} (try general|vta|layerwise)"),
     }

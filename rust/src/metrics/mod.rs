@@ -8,11 +8,17 @@ use crate::util::stats::shannon_entropy;
 /// `threshold` of the fp32 baseline (the paper uses the MLPerf 1% margin).
 #[derive(Clone, Debug)]
 pub struct DiversityAnalysis {
+    /// Entropy of the mixed-precision bit among qualifying configs.
     pub precision: f64,
+    /// Entropy of the calibration image count.
     pub calibration: f64,
+    /// Entropy of the weight-scale granularity.
     pub granularity: f64,
+    /// Entropy of the clipping policy.
     pub clipping: f64,
+    /// Entropy of the quantization scheme.
     pub scheme: f64,
+    /// Number of (model, config) pairs that qualified.
     pub num_samples: usize,
 }
 
@@ -62,13 +68,18 @@ impl DiversityAnalysis {
 /// Summary row of one model's sweep (Table 1).
 #[derive(Clone, Debug)]
 pub struct BestConfigRow {
+    /// Model name.
     pub model: String,
+    /// fp32 reference Top-1.
     pub fp32_top1: f64,
+    /// The sweep's best configuration.
     pub best: QuantConfig,
+    /// Top-1 of the best configuration.
     pub best_top1: f64,
 }
 
 impl BestConfigRow {
+    /// Signed Top-1 delta of the best config against fp32.
     pub fn error_vs_fp32(&self) -> f64 {
         self.best_top1 - self.fp32_top1
     }

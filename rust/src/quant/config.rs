@@ -22,14 +22,19 @@ use super::scheme::{Scheme, ALL_SCHEMES};
 /// §2 explains the scaling).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum CalibCount {
+    /// One calibration image (paper: 1).
     C1,
+    /// 64 calibration images (paper: 1 000).
     C64,
+    /// 512 calibration images (paper: 10 000).
     C512,
 }
 
+/// Every calibration count, in index order.
 pub const ALL_CALIB: [CalibCount; 3] = [CalibCount::C1, CalibCount::C64, CalibCount::C512];
 
 impl CalibCount {
+    /// Number of calibration images at our scale.
     pub fn images(self) -> usize {
         match self {
             CalibCount::C1 => 1,
@@ -47,6 +52,7 @@ impl CalibCount {
         }
     }
 
+    /// Ordinal position (0..3).
     pub fn index(self) -> usize {
         match self {
             CalibCount::C1 => 0,
@@ -65,24 +71,32 @@ pub enum Clipping {
     Kl,
 }
 
+/// Both clipping policies, in index order.
 pub const ALL_CLIP: [Clipping; 2] = [Clipping::Max, Clipping::Kl];
 
 /// Scale sharing granularity for *weights* (paper §4.4; activations are
 /// always per-tensor, as in Glow).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Granularity {
+    /// One scale per weight tensor.
     Tensor,
+    /// One scale per output channel.
     Channel,
 }
 
+/// Both granularities, in index order.
 pub const ALL_GRAN: [Granularity; 2] = [Granularity::Tensor, Granularity::Channel];
 
 /// One point of the 96-element search space.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct QuantConfig {
+    /// Calibration image count.
     pub calib: CalibCount,
+    /// Quantization scheme.
     pub scheme: Scheme,
+    /// Range clipping policy.
     pub clip: Clipping,
+    /// Weight-scale granularity.
     pub gran: Granularity,
     /// keep first and last weighted layers in fp32 (paper §4.5)
     pub mixed: bool,
@@ -106,6 +120,7 @@ impl QuantConfig {
         out
     }
 
+    /// Number of configurations in the general space.
     pub const SPACE_SIZE: usize = 96;
 
     /// Position in `space()` order.
@@ -117,6 +132,7 @@ impl QuantConfig {
             + self.mixed as usize
     }
 
+    /// Config at position `i` of `space()` order.
     pub fn from_index(i: usize) -> Result<QuantConfig> {
         if i >= Self::SPACE_SIZE {
             bail!("config index {i} out of range");
@@ -140,6 +156,7 @@ impl QuantConfig {
         }
     }
 
+    /// The canonical 7-bit genome of this config (see `from_genome`).
     pub fn to_genome(&self) -> [bool; 7] {
         let c = self.calib.index();
         let s = ALL_SCHEMES.iter().position(|x| x == &self.scheme).unwrap();
@@ -167,6 +184,7 @@ impl QuantConfig {
         v
     }
 
+    /// Width of the one-hot feature encoding.
     pub const ONE_HOT_DIM: usize = 13;
 
     /// Categorical (ordinal) feature encoding: one integer-valued feature
@@ -182,7 +200,9 @@ impl QuantConfig {
         ]
     }
 
+    /// Width of the categorical feature encoding.
     pub const CATEGORICAL_DIM: usize = 5;
+    /// Names of the one-hot feature dimensions, in order.
     pub const FEATURE_NAMES: [&'static str; 13] = [
         "calib_1", "calib_64", "calib_512",
         "scheme_asym", "scheme_sym", "scheme_sym_u8", "scheme_pow2",
@@ -191,6 +211,7 @@ impl QuantConfig {
         "mixed_off", "mixed_on",
     ];
 
+    /// Compact human-readable label ("c512_symmetric_kl_channel_int8").
     pub fn slug(&self) -> String {
         format!(
             "c{}_{}_{}_{}_{}",
@@ -218,13 +239,16 @@ impl fmt::Display for QuantConfig {
 /// One point of the VTA integer-only space (Eq. 23, |space| = 12).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct VtaConfig {
+    /// Calibration image count.
     pub calib: CalibCount,
+    /// Range clipping policy.
     pub clip: Clipping,
     /// execute conv+ReLU as one fused accelerator op
     pub fusion: bool,
 }
 
 impl VtaConfig {
+    /// The full space, in a fixed deterministic order (index 0..12).
     pub fn space() -> Vec<VtaConfig> {
         let mut out = Vec::with_capacity(12);
         for calib in ALL_CALIB {
@@ -237,13 +261,16 @@ impl VtaConfig {
         out
     }
 
+    /// Number of configurations in the VTA space.
     pub const SPACE_SIZE: usize = 12;
 
+    /// Position in `space()` order.
     pub fn index(&self) -> usize {
         (self.calib.index() * 2 + (self.clip == Clipping::Kl) as usize) * 2
             + self.fusion as usize
     }
 
+    /// Config at position `i` of `space()` order.
     pub fn from_index(i: usize) -> Result<VtaConfig> {
         if i >= Self::SPACE_SIZE {
             bail!("vta config index {i} out of range");
@@ -262,6 +289,7 @@ impl VtaConfig {
         }
     }
 
+    /// Compact human-readable label ("vta_c512_kl_fused").
     pub fn slug(&self) -> String {
         format!(
             "vta_c{}_{}_{}",

@@ -8,6 +8,7 @@
 //! between the clipped distribution and its 128-level quantized
 //! approximation (the TensorRT/Glow procedure the paper builds on).
 
+/// Histogram resolution (Glow's default bin count).
 pub const NUM_BINS: usize = 2048;
 const QUANT_LEVELS: usize = 128;
 
@@ -36,8 +37,11 @@ pub struct Histogram {
     pub bins: Vec<u64>,
     /// current |x| range covered: [0, limit)
     pub limit: f32,
+    /// Smallest raw value observed.
     pub min: f32,
+    /// Largest raw value observed.
     pub max: f32,
+    /// Total values accumulated.
     pub count: u64,
     /// memoized KL threshold (§Perf: the 96-config sweep asks for the
     /// same histogram's threshold once per KL config; the search is
@@ -54,6 +58,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram.
     pub fn new() -> Histogram {
         Histogram {
             bins: vec![0; NUM_BINS],

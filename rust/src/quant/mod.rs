@@ -16,14 +16,20 @@ pub use config::{
     ALL_GRAN,
 };
 pub use histogram::Histogram;
-pub use scheme::{QParams, Scheme, ALL_SCHEMES};
+pub use scheme::{
+    parse_bits_spec, BitWidth, QParams, Scheme, ALL_SCHEMES, ALL_WIDTHS,
+    BINARY_WIDTHS,
+};
 pub use space::{
-    general_space, vta_space, ConfigSpace, GeneralSpace, LayerCandidate,
-    LayerwiseSpace, QuantPlan, SpaceRef, VtaSpace, MAX_LAYERWISE_BITS,
+    general_space, max_layers_for, vta_space, ConfigSpace, GeneralSpace,
+    LayerCandidate, LayerwiseSpace, QuantPlan, SpaceRef, VtaSpace,
+    MAX_LAYERWISE_BITS,
 };
 pub use weights::{
-    channel_params, fake_quant_weights, model_size_bytes, model_size_bytes_masked,
-    model_size_fp32, quantize_weights_int8, tensor_params, weight_mse,
+    channel_params, channel_params_at, fake_quant_weights, fake_quant_weights_at,
+    model_size_bytes, model_size_bytes_at, model_size_bytes_masked, model_size_fp32,
+    quantize_weights_int8, tensor_params, tensor_params_at, weight_mse,
+    weight_mse_at,
 };
 
 use anyhow::Result;
@@ -34,6 +40,7 @@ use anyhow::Result;
 /// scale, zero_point, qmin, qmax, bypass).
 #[derive(Clone, Debug)]
 pub struct ActQuantization {
+    /// One [scale, zero_point, qmin, qmax, bypass] row per quant point.
     pub rows: Vec<[f32; 5]>,
 }
 
@@ -77,6 +84,7 @@ impl ActQuantization {
         QParams { scale: r[0], zero_point: r[1] as i32, qmin: r[2], qmax: r[3] }
     }
 
+    /// Does row `i` stay fp32 (the mixed-precision bypass)?
     pub fn is_bypassed(&self, i: usize) -> bool {
         self.rows[i][4] > 0.5
     }

@@ -1,11 +1,150 @@
-//! The four uniform int8 quantization schemes (paper §4.2, Eq. 2-13).
+//! The four uniform quantization schemes (paper §4.2, Eq. 2-13) and the
+//! [`BitWidth`] grid they are instantiated on.
 //!
 //! A scheme maps an observed float range [min, max] to affine grid
 //! parameters (scale, zero_point, qmin, qmax). The fake-quant evaluation
 //! path and the HLO graphs consume these as plain numbers, so all four
-//! schemes share one quantizer kernel.
+//! schemes share one quantizer kernel. The paper works on the int8 grid;
+//! [`Scheme::params_for`] generalizes the same equations to saturating
+//! int4 and int16 grids for the per-layer radix search
+//! ([`crate::quant::LayerwiseSpace`]).
 
 use std::fmt;
+
+use anyhow::Result;
+
+/// Per-layer numeric precision of a weight tensor: a saturating signed
+/// integer grid (int4 / int8 / int16) or the fp32 bypass.
+///
+/// The radix genome of [`crate::quant::LayerwiseSpace`] chooses one of
+/// these per weighted layer. Integer widths fake-quantize the weights
+/// onto the `2^bits`-level grid of the base scheme (activations stay on
+/// the int8 grid, as in weight-only mixed-precision PTQ); [`Fp32`]
+/// bypasses both the weight and the layer's activation quantization.
+///
+/// [`Fp32`]: BitWidth::Fp32
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BitWidth {
+    /// 4-bit signed grid (16 levels, saturating at ±(2^3 - 1) under
+    /// symmetric schemes) -- the aggressive end of Banner et al.'s
+    /// post-training 4-bit regime.
+    Int4,
+    /// 8-bit signed grid (the paper's default precision).
+    Int8,
+    /// 16-bit signed grid (near-lossless fallback for fragile layers
+    /// that is still half the fp32 bytes).
+    Int16,
+    /// No quantization: the layer's weights and output activations stay
+    /// fp32 (the §4.5 mixed-precision bypass).
+    Fp32,
+}
+
+/// Every width, ascending by bits.
+pub const ALL_WIDTHS: [BitWidth; 4] =
+    [BitWidth::Int4, BitWidth::Int8, BitWidth::Int16, BitWidth::Fp32];
+
+/// The legacy binary menu of PR 2's layer mask: {int8, fp32}.
+pub const BINARY_WIDTHS: [BitWidth; 2] = [BitWidth::Int8, BitWidth::Fp32];
+
+impl BitWidth {
+    /// Bits per stored weight element (fp32 counts its full 32).
+    pub fn bits(self) -> u32 {
+        match self {
+            BitWidth::Int4 => 4,
+            BitWidth::Int8 => 8,
+            BitWidth::Int16 => 16,
+            BitWidth::Fp32 => 32,
+        }
+    }
+
+    /// Is this the fp32 (no-quantization) bypass?
+    pub fn is_float(self) -> bool {
+        self == BitWidth::Fp32
+    }
+
+    /// Largest representable positive grid value (`2^(bits-1) - 1`);
+    /// `None` for fp32.
+    pub fn qmax(self) -> Option<f32> {
+        match self {
+            BitWidth::Fp32 => None,
+            w => Some(((1u32 << (w.bits() - 1)) - 1) as f32),
+        }
+    }
+
+    /// Serialized bytes of `elems` weight elements at this width. int4
+    /// packs two elements per byte (odd counts round up); int8/int16/
+    /// fp32 are 1/2/4 bytes per element.
+    pub fn weight_bytes(self, elems: usize) -> u64 {
+        match self {
+            BitWidth::Int4 => elems.div_ceil(2) as u64,
+            BitWidth::Int8 => elems as u64,
+            BitWidth::Int16 => 2 * elems as u64,
+            BitWidth::Fp32 => 4 * elems as u64,
+        }
+    }
+
+    /// Canonical name (`int4` / `int8` / `int16` / `fp32`).
+    pub fn name(self) -> &'static str {
+        match self {
+            BitWidth::Int4 => "int4",
+            BitWidth::Int8 => "int8",
+            BitWidth::Int16 => "int16",
+            BitWidth::Fp32 => "fp32",
+        }
+    }
+
+    /// Parse a width spec: a bare bit count (`4`, `8`, `16`, `32`) or a
+    /// canonical name (`int4`, ..., `fp32`).
+    pub fn parse(s: &str) -> Option<BitWidth> {
+        match s.trim() {
+            "4" | "int4" => Some(BitWidth::Int4),
+            "8" | "int8" => Some(BitWidth::Int8),
+            "16" | "int16" => Some(BitWidth::Int16),
+            "32" | "fp32" => Some(BitWidth::Fp32),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for BitWidth {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Parse a `--bits` CSV spec (e.g. `"4,8,16"`) into a width list.
+/// Duplicates are an error; fp32 may be listed but is implied (the
+/// layer-wise space always appends it as the bypass choice).
+///
+/// # Examples
+///
+/// ```
+/// use quantune::quant::{parse_bits_spec, BitWidth};
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let menu = parse_bits_spec("4,8,16")?;
+/// assert_eq!(menu, vec![BitWidth::Int4, BitWidth::Int8, BitWidth::Int16]);
+/// assert!(parse_bits_spec("fp32").is_err(), "needs an integer width");
+/// # Ok(())
+/// # }
+/// ```
+pub fn parse_bits_spec(spec: &str) -> Result<Vec<BitWidth>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let w = BitWidth::parse(part).ok_or_else(|| {
+            anyhow::anyhow!(
+                "bad bit-width {part:?} in {spec:?} (try a CSV of 4|8|16|fp32)"
+            )
+        })?;
+        anyhow::ensure!(!out.contains(&w), "duplicate bit-width {w} in {spec:?}");
+        out.push(w);
+    }
+    anyhow::ensure!(
+        out.iter().any(|w| !w.is_float()),
+        "{spec:?} needs at least one integer width (4, 8, or 16)"
+    );
+    Ok(out)
+}
 
 /// Uniform quantization scheme.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -24,10 +163,12 @@ pub enum Scheme {
     Pow2,
 }
 
+/// Every scheme, in index order.
 pub const ALL_SCHEMES: [Scheme; 4] =
     [Scheme::Asymmetric, Scheme::Symmetric, Scheme::SymmetricUint8, Scheme::Pow2];
 
 impl Scheme {
+    /// Canonical name ("asymmetric", ...).
     pub fn name(self) -> &'static str {
         match self {
             Scheme::Asymmetric => "asymmetric",
@@ -37,6 +178,7 @@ impl Scheme {
         }
     }
 
+    /// Parse a canonical scheme name.
     pub fn parse(s: &str) -> Option<Scheme> {
         ALL_SCHEMES.iter().copied().find(|x| x.name() == s)
     }
@@ -46,8 +188,29 @@ impl Scheme {
         matches!(self, Scheme::Pow2)
     }
 
-    /// Grid parameters for an observed range (paper Eq. 3/4, 7, 10/11, 13).
+    /// int8 grid parameters for an observed range (paper Eq. 3/4, 7,
+    /// 10/11, 13). Shorthand for [`Scheme::params_for`] at
+    /// [`BitWidth::Int8`].
     pub fn params_from_range(self, min: f32, max: f32) -> QParams {
+        self.params_for(min, max, BitWidth::Int8)
+    }
+
+    /// Grid parameters for an observed range on an arbitrary integer
+    /// grid: the paper's int8 equations with 127/128/255 replaced by
+    /// the `width` grid's `qmax`/`|qmin|`/level count. Narrow grids
+    /// saturate (values round then clamp to [qmin, qmax]), which is
+    /// what makes the int4 path well-defined on outlier-heavy tensors.
+    ///
+    /// [`BitWidth::Fp32`] returns [`QParams::identity`] -- the bypass
+    /// row the activation tables use. Callers must branch on
+    /// [`BitWidth::is_float`] instead of fake-quantizing through it
+    /// (the identity row still rounds; bypass is a flag, not a grid).
+    pub fn params_for(self, min: f32, max: f32, width: BitWidth) -> QParams {
+        let Some(qmax) = width.qmax() else {
+            return QParams::identity();
+        };
+        let qmin = -(qmax + 1.0);
+        let levels = 2.0 * qmax + 1.0; // full signed range, e.g. 255 at int8
         // guard degenerate ranges; include zero like every practical
         // quantizer so that zero is exactly representable
         let min = min.min(0.0);
@@ -55,42 +218,31 @@ impl Scheme {
         let absmax = min.abs().max(max.abs()).max(1e-12);
         match self {
             Scheme::Asymmetric => {
-                let scale = ((max - min) / 255.0).max(1e-12);
-                let zero_point = (-(min / scale)).round_ties_even() as i32 - 128;
-                QParams { scale, zero_point, qmin: -128.0, qmax: 127.0 }
+                let scale = ((max - min) / levels).max(1e-12);
+                let zero_point =
+                    (-(min / scale)).round_ties_even() as i32 + qmin as i32;
+                QParams { scale, zero_point, qmin, qmax }
             }
-            Scheme::Symmetric => QParams {
-                scale: absmax / 127.0,
-                zero_point: 0,
-                qmin: -128.0,
-                qmax: 127.0,
-            },
+            Scheme::Symmetric => {
+                QParams { scale: absmax / qmax, zero_point: 0, qmin, qmax }
+            }
             Scheme::SymmetricUint8 => {
                 if min >= 0.0 {
-                    // uint8 grid stored in int8 with offset -128
+                    // unsigned grid stored in the signed range with a
+                    // -2^(bits-1) offset (Glow's uint8 trick, per width)
                     QParams {
-                        scale: (max / 255.0).max(1e-12),
-                        zero_point: -128,
-                        qmin: -128.0,
-                        qmax: 127.0,
+                        scale: (max / levels).max(1e-12),
+                        zero_point: qmin as i32,
+                        qmin,
+                        qmax,
                     }
                 } else {
-                    QParams {
-                        scale: absmax / 127.0,
-                        zero_point: 0,
-                        qmin: -128.0,
-                        qmax: 127.0,
-                    }
+                    QParams { scale: absmax / qmax, zero_point: 0, qmin, qmax }
                 }
             }
             Scheme::Pow2 => {
-                let exp = (absmax / 127.0).log2().round().clamp(-31.0, 31.0);
-                QParams {
-                    scale: exp.exp2(),
-                    zero_point: 0,
-                    qmin: -128.0,
-                    qmax: 127.0,
-                }
+                let exp = (absmax / qmax).log2().round().clamp(-31.0, 31.0);
+                QParams { scale: exp.exp2(), zero_point: 0, qmin, qmax }
             }
         }
     }
@@ -105,9 +257,13 @@ impl fmt::Display for Scheme {
 /// Affine int8 grid parameters.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct QParams {
+    /// Float value of one grid step.
     pub scale: f32,
+    /// Grid value that represents float zero.
     pub zero_point: i32,
+    /// Smallest grid value (saturation floor).
     pub qmin: f32,
+    /// Largest grid value (saturation ceiling).
     pub qmax: f32,
 }
 
@@ -228,6 +384,81 @@ mod tests {
             let y = p.fake_quant(0.0);
             assert!(y.is_finite());
         }
+    }
+
+    #[test]
+    fn width_grid_constants() {
+        assert_eq!(BitWidth::Int4.qmax(), Some(7.0));
+        assert_eq!(BitWidth::Int8.qmax(), Some(127.0));
+        assert_eq!(BitWidth::Int16.qmax(), Some(32767.0));
+        assert_eq!(BitWidth::Fp32.qmax(), None);
+        // int4 packs two elements per byte, odd counts round up
+        assert_eq!(BitWidth::Int4.weight_bytes(9), 5);
+        assert_eq!(BitWidth::Int8.weight_bytes(9), 9);
+        assert_eq!(BitWidth::Int16.weight_bytes(9), 18);
+        assert_eq!(BitWidth::Fp32.weight_bytes(9), 36);
+        for w in ALL_WIDTHS {
+            assert_eq!(BitWidth::parse(w.name()), Some(w));
+            assert_eq!(BitWidth::parse(&w.bits().to_string()), Some(w));
+        }
+        assert_eq!(BitWidth::parse("int12"), None);
+    }
+
+    #[test]
+    fn bits_spec_parses_and_rejects() {
+        assert_eq!(
+            parse_bits_spec("4,8,16").unwrap(),
+            vec![BitWidth::Int4, BitWidth::Int8, BitWidth::Int16]
+        );
+        assert_eq!(
+            parse_bits_spec("8,fp32").unwrap(),
+            vec![BitWidth::Int8, BitWidth::Fp32]
+        );
+        assert!(parse_bits_spec("4,4").is_err(), "duplicates rejected");
+        assert!(parse_bits_spec("fp32").is_err(), "needs an integer width");
+        assert!(parse_bits_spec("4,7").is_err(), "unknown width rejected");
+    }
+
+    #[test]
+    fn params_for_int8_matches_legacy_grid() {
+        for scheme in ALL_SCHEMES {
+            for (lo, hi) in [(-1.0f32, 3.0f32), (0.0, 6.0), (-2.5, 0.5)] {
+                assert_eq!(
+                    scheme.params_for(lo, hi, BitWidth::Int8),
+                    scheme.params_from_range(lo, hi),
+                    "{scheme} [{lo}, {hi}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int4_grid_saturates_and_bounds_error() {
+        let p = Scheme::Symmetric.params_for(-1.0, 1.0, BitWidth::Int4);
+        assert_eq!((p.qmin, p.qmax), (-8.0, 7.0));
+        assert!((p.scale - 1.0 / 7.0).abs() < 1e-7);
+        // saturating grid: outliers clamp instead of wrapping
+        assert_eq!(p.quantize(100.0), 7);
+        assert_eq!(p.quantize(-100.0), -8);
+        // inside the representable interval the error is half a step
+        for i in -10..=10 {
+            let x = i as f32 / 10.0;
+            assert!((p.fake_quant(x) - x).abs() <= p.scale * 0.5 + 1e-6, "x={x}");
+        }
+    }
+
+    #[test]
+    fn wider_grids_are_monotonically_finer() {
+        // for every scheme, the int16 step is below int8 is below int4
+        for scheme in ALL_SCHEMES {
+            let s4 = scheme.params_for(-3.0, 2.0, BitWidth::Int4).scale;
+            let s8 = scheme.params_for(-3.0, 2.0, BitWidth::Int8).scale;
+            let s16 = scheme.params_for(-3.0, 2.0, BitWidth::Int16).scale;
+            assert!(s16 < s8 && s8 < s4, "{scheme}: {s16} {s8} {s4}");
+        }
+        // fp32 maps to the bypass row convention
+        let id = Scheme::Symmetric.params_for(-3.0, 2.0, BitWidth::Fp32);
+        assert_eq!(id, QParams::identity());
     }
 
     #[test]

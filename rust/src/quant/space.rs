@@ -13,11 +13,12 @@
 //!   ([`VtaConfig`]);
 //! - [`LayerwiseSpace`]: per-layer mixed precision (paper §4.5,
 //!   generalized): starting from a fixed base config, each of the top-K
-//!   most quantization-fragile weighted layers independently chooses
-//!   {int8, fp32}. K is capped so the 2^K space stays enumerable, and
-//!   the fragility ranking is calibration-driven (weight fake-quant MSE
-//!   plus activation quantization noise from the calibration
-//!   histograms).
+//!   most quantization-fragile weighted layers independently chooses a
+//!   [`BitWidth`] from a configurable menu (int4 / int8 / int16 / fp32),
+//!   making the genome a mixed-radix number rather than a bitmask. K is
+//!   capped so the R^K space stays enumerable, and the fragility ranking
+//!   is calibration-driven (weight fake-quant MSE plus activation
+//!   quantization noise from the calibration histograms).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -28,42 +29,58 @@ use crate::ir::{Graph, Op, Tensor};
 
 use super::config::{QuantConfig, VtaConfig, ALL_CALIB};
 use super::histogram::Histogram;
+use super::scheme::BitWidth;
 use super::weights::weight_mse;
 use super::Clipping;
 
 /// Everything an evaluator needs to realize one configuration: the base
-/// axes (calibration count, scheme, clipping, granularity) plus which
-/// weighted layers stay fp32.
+/// axes (calibration count, scheme, clipping, granularity) plus the
+/// per-layer weight bit-widths.
 #[derive(Clone, Debug)]
 pub struct QuantPlan {
+    /// The base configuration (calibration count, scheme, clipping,
+    /// granularity, and the legacy `mixed` bit).
     pub base: QuantConfig,
-    /// Explicit fp32 mask over `graph.layers()` order. `None` derives
-    /// the mask from `base.mixed` (first+last, paper §4.5).
-    pub fp32_mask: Option<Vec<bool>>,
+    /// Explicit per-layer bit-widths over `graph.layers()` order.
+    /// `None` derives the widths from `base.mixed` (int8 everywhere,
+    /// fp32 first+last when mixed -- paper §4.5).
+    pub layer_widths: Option<Vec<BitWidth>>,
 }
 
 impl QuantPlan {
+    /// Plan with no per-layer overrides (widths derive from the config).
     pub fn from_config(base: QuantConfig) -> QuantPlan {
-        QuantPlan { base, fp32_mask: None }
+        QuantPlan { base, layer_widths: None }
     }
 
-    /// Resolve the fp32-layer mask for a model with `n_layers` weighted
-    /// layers.
-    pub fn resolve_mask(&self, n_layers: usize) -> Result<Vec<bool>> {
-        if let Some(m) = &self.fp32_mask {
+    /// Resolve the per-layer bit-widths for a model with `n_layers`
+    /// weighted layers.
+    pub fn resolve_widths(&self, n_layers: usize) -> Result<Vec<BitWidth>> {
+        if let Some(w) = &self.layer_widths {
             anyhow::ensure!(
-                m.len() == n_layers,
-                "fp32 mask covers {} layers but the model has {n_layers}",
-                m.len()
+                w.len() == n_layers,
+                "width vector covers {} layers but the model has {n_layers}",
+                w.len()
             );
-            return Ok(m.clone());
+            return Ok(w.clone());
         }
-        let mut mask = vec![false; n_layers];
+        let mut widths = vec![BitWidth::Int8; n_layers];
         if self.base.mixed && n_layers > 0 {
-            mask[0] = true;
-            mask[n_layers - 1] = true;
+            widths[0] = BitWidth::Fp32;
+            widths[n_layers - 1] = BitWidth::Fp32;
         }
-        Ok(mask)
+        Ok(widths)
+    }
+
+    /// Resolve the fp32-layer mask (`width == fp32` per layer) for a
+    /// model with `n_layers` weighted layers. This is the projection the
+    /// activation bypass rows and the legacy size accounting consume.
+    pub fn resolve_mask(&self, n_layers: usize) -> Result<Vec<bool>> {
+        Ok(self
+            .resolve_widths(n_layers)?
+            .into_iter()
+            .map(BitWidth::is_float)
+            .collect())
     }
 }
 
@@ -108,6 +125,34 @@ pub trait ConfigSpace: Send + Sync {
     /// 0 and out-of-range field values wrap (the GA package's binary
     /// encoding does the same for non-power-of-two cardinalities), so
     /// every genome decodes to some point of the space.
+    ///
+    /// # Examples
+    ///
+    /// Every space round-trips `encode`/`decode`; the layer-wise space
+    /// does it over mixed-radix width digits:
+    ///
+    /// ```
+    /// use quantune::coordinator::Quantune;
+    /// use quantune::quant::{general_space, BitWidth, ConfigSpace};
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let g = general_space();
+    /// assert_eq!(g.decode(&g.encode(42)?), 42);
+    ///
+    /// // a radix genome over zoo::synthetic_model: each of the 2 freed
+    /// // layers picks one of {int4, int8, int16, fp32}
+    /// let q = Quantune::synthetic();
+    /// let model = Quantune::synthetic_model()?;
+    /// let base = Quantune::tensorrt_like_baseline();
+    /// let menu = [BitWidth::Int4, BitWidth::Int8, BitWidth::Int16];
+    /// let lw = q.layerwise_space(&model, base, 2, &menu)?;
+    /// assert_eq!(lw.size(), 16); // 4 widths ^ 2 layers
+    /// for i in 0..lw.size() {
+    ///     assert_eq!(lw.decode(&lw.encode(i)?), i);
+    /// }
+    /// # Ok(())
+    /// # }
+    /// ```
     fn decode(&self, bits: &[bool]) -> usize;
 }
 
@@ -249,9 +294,51 @@ impl ConfigSpace for VtaSpace {
 // Layer-wise mixed-precision space
 // ---------------------------------------------------------------------------
 
-/// Cap on the number of free layers: 2^12 = 4096 configs keeps an
-/// exhaustive interpreter sweep tractable.
+/// Cap on the genome length in bits: at most 2^12 = 4096 configs, which
+/// keeps an exhaustive interpreter sweep tractable. Each free layer
+/// consumes `ceil(log2(R))` genome bits for a menu of R widths, so the
+/// cap bounds K at 12 free layers for the binary {int8, fp32} menu and
+/// 6 for the full {int4, int8, int16, fp32} radix.
 pub const MAX_LAYERWISE_BITS: usize = 12;
+
+/// Genome bits one digit of an R-way width menu consumes
+/// (`ceil(log2(R))`; R is at least 2 after normalization).
+fn digit_bits(radix: usize) -> usize {
+    usize::BITS as usize - (radix - 1).leading_zeros() as usize
+}
+
+/// Largest `--layers K` a width menu admits under
+/// [`MAX_LAYERWISE_BITS`] (the genome budget divided by the bits one
+/// mixed-radix digit consumes).
+pub fn max_layers_for(widths: &[BitWidth]) -> usize {
+    (MAX_LAYERWISE_BITS / digit_bits(normalize_menu(widths).len())).max(1)
+}
+
+/// Normalize a width menu to the canonical digit order: int8 first when
+/// present (so digit 0 keeps the base config and index 0 stays the
+/// all-base point), the remaining integer widths ascending, and fp32
+/// (always included -- it is the bypass escape hatch) last.
+fn normalize_menu(widths: &[BitWidth]) -> Vec<BitWidth> {
+    let mut ints: Vec<BitWidth> = Vec::new();
+    for &w in widths {
+        if !w.is_float() && !ints.contains(&w) {
+            ints.push(w);
+        }
+    }
+    ints.sort_by_key(|w| w.bits());
+    if ints.is_empty() {
+        // a menu of only fp32 has nothing to search: fall back to the
+        // binary {int8, fp32} space instead of a degenerate radix of 1
+        ints.push(BitWidth::Int8);
+    }
+    let mut menu = Vec::with_capacity(ints.len() + 1);
+    if ints.contains(&BitWidth::Int8) {
+        menu.push(BitWidth::Int8);
+    }
+    menu.extend(ints.iter().copied().filter(|&w| w != BitWidth::Int8));
+    menu.push(BitWidth::Fp32);
+    menu
+}
 
 /// One candidate layer of a [`LayerwiseSpace`], with the per-layer
 /// features the XGB cost model consumes and the sensitivity score that
@@ -260,6 +347,7 @@ pub const MAX_LAYERWISE_BITS: usize = 12;
 pub struct LayerCandidate {
     /// Index into `graph.layers()`.
     pub layer_index: usize,
+    /// The layer's node name.
     pub name: String,
     /// Position in the weighted-layer sequence, scaled to [0, 1].
     pub depth_frac: f32,
@@ -271,20 +359,31 @@ pub struct LayerCandidate {
     pub sensitivity: f32,
 }
 
-/// Per-layer {int8, fp32} choice over the top-K most fragile weighted
-/// layers, on top of a fixed base [`QuantConfig`]. Index 0 is the
-/// all-int8 base config; bit `j` of an index keeps candidate `j` fp32.
+/// Per-layer [`BitWidth`] choice over the top-K most fragile weighted
+/// layers, on top of a fixed base [`QuantConfig`].
+///
+/// An index is a K-digit mixed-radix number over the width menu: digit
+/// `j` (base R = menu length) selects candidate `j`'s width. Digit 0 is
+/// the menu's base entry (int8 when present), so index 0 is always the
+/// all-base configuration. With the legacy binary menu {int8, fp32}
+/// this degenerates to exactly PR 2's bitmask space.
 pub struct LayerwiseSpace {
     base: QuantConfig,
     model: String,
     n_layers: usize,
-    /// Top-K fragile layers, ascending by `layer_index` (stable bit order).
+    /// Canonical per-layer width menu (the radix; see `normalize_menu`).
+    widths: Vec<BitWidth>,
+    /// Top-K fragile layers, ascending by `layer_index` (stable digit
+    /// order).
     candidates: Vec<LayerCandidate>,
 }
 
 impl LayerwiseSpace {
     /// Build the space from calibration statistics: rank every weighted
-    /// layer by fragility under `base`, keep the `k` most fragile.
+    /// layer by fragility under `base`, keep the `k` most fragile, and
+    /// let each choose among `widths` (normalized: int8-first order,
+    /// fp32 always appended; see [`max_layers_for`] for the K cap the
+    /// menu implies).
     ///
     /// The fragility score has two calibration-driven parts:
     /// - relative weight fake-quant MSE under the base scheme and
@@ -295,7 +394,7 @@ impl LayerwiseSpace {
     ///
     /// `weights` maps `{layer}_w` names to tensors; `hists` is one
     /// histogram per `graph.quant_points()` entry. `base.mixed` is
-    /// ignored (the explicit mask supersedes it).
+    /// ignored (the explicit widths supersede it).
     pub fn rank(
         model: &str,
         graph: &Graph,
@@ -303,7 +402,9 @@ impl LayerwiseSpace {
         hists: &[Histogram],
         base: QuantConfig,
         k: usize,
+        widths: &[BitWidth],
     ) -> Result<LayerwiseSpace> {
+        let menu = normalize_menu(widths);
         let qpoints = graph.quant_points();
         anyhow::ensure!(
             hists.len() == qpoints.len(),
@@ -316,7 +417,9 @@ impl LayerwiseSpace {
             bail!("{model}: no weighted layers to choose precision for");
         }
         let base = QuantConfig { mixed: false, ..base };
-        let k = k.clamp(1, layers.len()).min(MAX_LAYERWISE_BITS);
+        let k = k
+            .clamp(1, layers.len())
+            .min((MAX_LAYERWISE_BITS / digit_bits(menu.len())).max(1));
 
         let mut scored: Vec<LayerCandidate> = Vec::with_capacity(layers.len());
         for (li, name) in layers.iter().enumerate() {
@@ -368,52 +471,84 @@ impl LayerwiseSpace {
                 .then(a.layer_index.cmp(&b.layer_index))
         });
         scored.truncate(k);
-        // stable bit order: ascending layer position
+        // stable digit order: ascending layer position
         scored.sort_by_key(|c| c.layer_index);
         Ok(LayerwiseSpace {
             base,
             model: model.to_string(),
             n_layers: layers.len(),
+            widths: menu,
             candidates: scored,
         })
     }
 
+    /// The fixed base configuration the per-layer widths override.
     pub fn base(&self) -> QuantConfig {
         self.base
     }
 
+    /// The top-K fragile layers, ascending by layer position.
     pub fn candidates(&self) -> &[LayerCandidate] {
         &self.candidates
     }
 
+    /// Number of weighted layers in the model.
     pub fn n_layers(&self) -> usize {
         self.n_layers
     }
 
+    /// The canonical per-layer width menu (the radix of the genome).
+    pub fn width_menu(&self) -> &[BitWidth] {
+        &self.widths
+    }
+
+    /// Mixed-radix digits of index `i`, one per candidate
+    /// (little-endian: digit `j` selects candidate `j`'s width).
+    fn digits_of(&self, i: usize) -> Vec<usize> {
+        let r = self.widths.len();
+        let mut rest = i;
+        (0..self.candidates.len())
+            .map(|_| {
+                let d = rest % r;
+                rest /= r;
+                d
+            })
+            .collect()
+    }
+
+    /// Per-layer bit-widths over all weighted layers for index `i`
+    /// (non-candidate layers stay at the int8 base).
+    pub fn widths_of(&self, i: usize) -> Vec<BitWidth> {
+        let mut out = vec![BitWidth::Int8; self.n_layers];
+        for (c, d) in self.candidates.iter().zip(self.digits_of(i)) {
+            out[c.layer_index] = self.widths[d];
+        }
+        out
+    }
+
     /// fp32 mask over all weighted layers for index `i`.
     pub fn mask_of(&self, i: usize) -> Vec<bool> {
-        let mut mask = vec![false; self.n_layers];
-        for (j, c) in self.candidates.iter().enumerate() {
-            if (i >> j) & 1 == 1 {
-                mask[c.layer_index] = true;
-            }
-        }
-        mask
+        self.widths_of(i).into_iter().map(BitWidth::is_float).collect()
     }
 
     /// Names of the layers index `i` keeps fp32.
     pub fn fp32_layer_names(&self, i: usize) -> Vec<String> {
         self.candidates
             .iter()
-            .enumerate()
-            .filter(|(j, _)| (i >> j) & 1 == 1)
-            .map(|(_, c)| c.name.clone())
+            .zip(self.digits_of(i))
+            .filter(|(_, d)| self.widths[*d].is_float())
+            .map(|(c, _)| c.name.clone())
             .collect()
     }
 
-    /// Number of layers index `i` quantizes (the complement of the mask).
+    /// Number of layers index `i` quantizes (any integer width).
     pub fn quantized_layers(&self, i: usize) -> usize {
         self.n_layers - self.mask_of(i).iter().filter(|&&b| b).count()
+    }
+
+    /// Number of candidate layers index `i` puts at `width`.
+    pub fn layers_at(&self, i: usize, width: BitWidth) -> usize {
+        self.digits_of(i).into_iter().filter(|&d| self.widths[d] == width).count()
     }
 }
 
@@ -421,46 +556,61 @@ impl ConfigSpace for LayerwiseSpace {
     fn tag(&self) -> String {
         let cands: Vec<String> =
             self.candidates.iter().map(|c| c.layer_index.to_string()).collect();
-        format!("layerwise/{}/b{}/{}", self.model, self.base.index(), cands.join("."))
+        let menu: Vec<&str> = self.widths.iter().map(|w| w.name()).collect();
+        format!(
+            "layerwise/{}/b{}/{}/{}",
+            self.model,
+            self.base.index(),
+            menu.join("."),
+            cands.join(".")
+        )
     }
 
     fn size(&self) -> usize {
-        1usize << self.candidates.len()
+        self.widths.len().pow(self.candidates.len() as u32)
     }
 
     fn plan(&self, i: usize) -> Result<QuantPlan> {
         if i >= self.size() {
             bail!("layerwise config index {i} out of range {}", self.size());
         }
-        Ok(QuantPlan { base: self.base, fp32_mask: Some(self.mask_of(i)) })
+        Ok(QuantPlan { base: self.base, layer_widths: Some(self.widths_of(i)) })
     }
 
     fn describe(&self, i: usize) -> Result<String> {
         if i >= self.size() {
             bail!("layerwise config index {i} out of range {}", self.size());
         }
-        let names = self.fp32_layer_names(i);
-        Ok(if names.is_empty() {
-            "lw_all_int8".to_string()
+        let overrides: Vec<String> = self
+            .candidates
+            .iter()
+            .zip(self.digits_of(i))
+            .filter(|(_, d)| *d != 0)
+            .map(|(c, d)| format!("{}:{}", c.name, self.widths[d]))
+            .collect();
+        Ok(if overrides.is_empty() {
+            format!("lw_all_{}", self.widths[0])
         } else {
-            format!("lw_fp32_{}", names.join("+"))
+            format!("lw_{}", overrides.join("+"))
         })
     }
 
-    /// Per-candidate blocks of 4: the fp32 bit gated with the layer's
-    /// depth fraction, log param count, and kind -- so the cost model
-    /// sees *which kind of layer* was bypassed, not just how many.
+    /// Per-candidate blocks of R + 3: a one-hot over the width menu,
+    /// then the layer's depth fraction, log param count, and kind gated
+    /// by "deviates from the int8 base" -- so the cost model sees *which
+    /// kind of layer* changed precision and to what, not just how many.
     fn features(&self, i: usize) -> Result<Vec<f32>> {
         if i >= self.size() {
             bail!("layerwise config index {i} out of range {}", self.size());
         }
-        let mut v = Vec::with_capacity(4 * self.candidates.len());
-        for (j, c) in self.candidates.iter().enumerate() {
-            if (i >> j) & 1 == 1 {
-                v.extend([1.0, c.depth_frac, c.log_params, c.kind]);
-            } else {
-                v.extend([0.0, 0.0, 0.0, 0.0]);
+        let r = self.widths.len();
+        let mut v = Vec::with_capacity((r + 3) * self.candidates.len());
+        for (c, d) in self.candidates.iter().zip(self.digits_of(i)) {
+            for slot in 0..r {
+                v.push((slot == d) as u8 as f32);
             }
+            let dev = (self.widths[d] != BitWidth::Int8) as u8 as f32;
+            v.extend([c.depth_frac * dev, c.log_params * dev, c.kind * dev]);
         }
         Ok(v)
     }
@@ -469,33 +619,56 @@ impl ConfigSpace for LayerwiseSpace {
         self.candidates
             .iter()
             .flat_map(|c| {
-                [
-                    format!("fp32_{}", c.name),
-                    format!("fp32_depth_{}", c.name),
-                    format!("fp32_logp_{}", c.name),
-                    format!("fp32_kind_{}", c.name),
-                ]
+                self.widths
+                    .iter()
+                    .map(|w| format!("{}_{}", w, c.name))
+                    .chain([
+                        format!("dev_depth_{}", c.name),
+                        format!("dev_logp_{}", c.name),
+                        format!("dev_kind_{}", c.name),
+                    ])
+                    .collect::<Vec<_>>()
             })
             .collect()
     }
 
     fn genome_bits(&self) -> usize {
-        self.candidates.len()
+        self.candidates.len() * digit_bits(self.widths.len())
     }
 
+    /// Mixed-radix encoding: each digit takes `ceil(log2(R))` bits,
+    /// little-endian within the digit.
     fn encode(&self, i: usize) -> Result<Vec<bool>> {
         if i >= self.size() {
             bail!("layerwise config index {i} out of range {}", self.size());
         }
-        Ok((0..self.candidates.len()).map(|j| (i >> j) & 1 == 1).collect())
+        let db = digit_bits(self.widths.len());
+        let mut out = Vec::with_capacity(self.genome_bits());
+        for d in self.digits_of(i) {
+            for b in 0..db {
+                out.push((d >> b) & 1 == 1);
+            }
+        }
+        Ok(out)
     }
 
+    /// Digits read back from their bit fields; a field value at or above
+    /// the radix wraps (mod R), so every genome decodes to a valid index
+    /// -- the same convention the general space's calibration field uses.
     fn decode(&self, bits: &[bool]) -> usize {
+        let r = self.widths.len();
+        let db = digit_bits(r);
         let mut i = 0usize;
+        let mut place = 1usize;
         for j in 0..self.candidates.len() {
-            if bit(bits, j) {
-                i |= 1 << j;
+            let mut d = 0usize;
+            for b in 0..db {
+                if bit(bits, j * db + b) {
+                    d |= 1 << b;
+                }
             }
+            i += (d % r) * place;
+            place *= r;
         }
         i
     }
@@ -504,9 +677,12 @@ impl ConfigSpace for LayerwiseSpace {
 #[cfg(test)]
 mod tests {
     use super::super::config::{CalibCount, Granularity};
-    use super::super::scheme::Scheme;
+    use super::super::scheme::{Scheme, BINARY_WIDTHS};
     use super::*;
     use crate::util::Json;
+
+    const RADIX_WIDTHS: [BitWidth; 4] =
+        [BitWidth::Int4, BitWidth::Int8, BitWidth::Int16, BitWidth::Fp32];
 
     fn space_roundtrips(space: &dyn ConfigSpace) {
         let dim = space.features(0).unwrap().len();
@@ -637,18 +813,72 @@ mod tests {
         let g = tiny_graph();
         let w = tiny_weights(&g, "c2");
         let h = tiny_hists(&g);
-        let s = LayerwiseSpace::rank("t", &g, &w, &h, base(), 3).unwrap();
+        let s = LayerwiseSpace::rank("t", &g, &w, &h, base(), 3, &BINARY_WIDTHS)
+            .unwrap();
         assert_eq!(s.size(), 8);
         assert_eq!(s.n_layers(), 3);
+        assert_eq!(s.width_menu(), &BINARY_WIDTHS);
         space_roundtrips(&s);
         // index 0 is the all-int8 base plan
         let p0 = s.plan(0).unwrap();
         assert_eq!(p0.resolve_mask(3).unwrap(), vec![false; 3]);
+        assert_eq!(p0.resolve_widths(3).unwrap(), vec![BitWidth::Int8; 3]);
         assert_eq!(s.quantized_layers(0), 3);
         // the full mask keeps every candidate fp32
         let full = s.size() - 1;
         assert_eq!(s.quantized_layers(full), 0);
         assert_eq!(s.fp32_layer_names(full).len(), 3);
+    }
+
+    #[test]
+    fn layerwise_radix_space_roundtrips() {
+        let g = tiny_graph();
+        let w = tiny_weights(&g, "c2");
+        let h = tiny_hists(&g);
+        let s = LayerwiseSpace::rank("t", &g, &w, &h, base(), 3, &RADIX_WIDTHS)
+            .unwrap();
+        // 4 widths over 3 candidates: 64 configs, 2 genome bits per digit
+        assert_eq!(s.size(), 64);
+        assert_eq!(s.genome_bits(), 6);
+        assert_eq!(
+            s.width_menu(),
+            &[BitWidth::Int8, BitWidth::Int4, BitWidth::Int16, BitWidth::Fp32],
+            "canonical order: int8 first, ints ascending, fp32 last"
+        );
+        space_roundtrips(&s);
+        // index 0 is the all-int8 base; the menu's digit arithmetic holds
+        assert_eq!(s.widths_of(0), vec![BitWidth::Int8; 3]);
+        assert_eq!(s.describe(0).unwrap(), "lw_all_int8");
+        // digit 1 on candidate 0 alone = index 1 -> int4 on that layer
+        let w1 = s.widths_of(1);
+        assert_eq!(w1.iter().filter(|&&x| x == BitWidth::Int4).count(), 1);
+        assert_eq!(s.layers_at(1, BitWidth::Int4), 1);
+        assert!(s.describe(1).unwrap().contains(":int4"));
+        // the all-fp32 point is the last index (digit R-1 everywhere)
+        let full = s.size() - 1;
+        assert_eq!(s.widths_of(full), vec![BitWidth::Fp32; 3]);
+        assert_eq!(s.quantized_layers(full), 0);
+        // plans carry the width vector through to the evaluators
+        let p = s.plan(1).unwrap();
+        assert_eq!(p.resolve_widths(3).unwrap(), w1);
+    }
+
+    #[test]
+    fn layerwise_radix_genome_wraps_to_valid_indices() {
+        let g = tiny_graph();
+        let w = tiny_weights(&g, "c2");
+        let h = tiny_hists(&g);
+        // a 3-way menu ({int4, int8} + fp32) uses 2-bit digit fields
+        // whose value 3 must wrap instead of escaping the space
+        let menu = [BitWidth::Int4, BitWidth::Int8];
+        let s = LayerwiseSpace::rank("t", &g, &w, &h, base(), 2, &menu).unwrap();
+        assert_eq!(s.size(), 9);
+        assert_eq!(s.genome_bits(), 4);
+        let wrapped = s.decode(&[true, true, true, true]); // digits (3, 3)
+        assert!(wrapped < s.size());
+        for i in 0..s.size() {
+            assert_eq!(s.decode(&s.encode(i).unwrap()), i);
+        }
     }
 
     #[test]
@@ -658,7 +888,8 @@ mod tests {
         let h = tiny_hists(&g);
         // K = 1: only the most fragile layer is free, and the channel
         // spread planted in c2 must dominate the ranking
-        let s = LayerwiseSpace::rank("t", &g, &w, &h, base(), 1).unwrap();
+        let s = LayerwiseSpace::rank("t", &g, &w, &h, base(), 1, &BINARY_WIDTHS)
+            .unwrap();
         assert_eq!(s.size(), 2);
         assert_eq!(s.candidates()[0].name, "c2");
         assert_eq!(s.fp32_layer_names(1), vec!["c2".to_string()]);
@@ -669,11 +900,17 @@ mod tests {
         let g = tiny_graph();
         let w = tiny_weights(&g, "c2");
         let h = tiny_hists(&g);
-        let s = LayerwiseSpace::rank("t", &g, &w, &h, base(), 99).unwrap();
+        let s = LayerwiseSpace::rank("t", &g, &w, &h, base(), 99, &BINARY_WIDTHS)
+            .unwrap();
         assert_eq!(s.genome_bits(), 3); // only 3 weighted layers exist
-        // base.mixed is always neutralized by the explicit mask
+        // the 4-way radix menu halves the genome budget per layer:
+        // max_layers_for reports the cap rank enforces
+        assert_eq!(max_layers_for(&BINARY_WIDTHS), 12);
+        assert_eq!(max_layers_for(&RADIX_WIDTHS), 6);
+        // base.mixed is always neutralized by the explicit widths
         let mixed = QuantConfig { mixed: true, ..base() };
-        let s = LayerwiseSpace::rank("t", &g, &w, &h, mixed, 2).unwrap();
+        let s = LayerwiseSpace::rank("t", &g, &w, &h, mixed, 2, &BINARY_WIDTHS)
+            .unwrap();
         assert!(!s.base().mixed);
         let p = s.plan(0).unwrap();
         assert_eq!(p.resolve_mask(3).unwrap(), vec![false; 3]);
@@ -685,8 +922,26 @@ mod tests {
         assert_eq!(p.resolve_mask(4).unwrap(), vec![true, false, false, true]);
         let p = QuantPlan::from_config(base());
         assert_eq!(p.resolve_mask(2).unwrap(), vec![false, false]);
-        let p = QuantPlan { base: base(), fp32_mask: Some(vec![true, false]) };
+        let p = QuantPlan {
+            base: base(),
+            layer_widths: Some(vec![BitWidth::Fp32, BitWidth::Int8]),
+        };
         assert_eq!(p.resolve_mask(2).unwrap(), vec![true, false]);
         assert!(p.resolve_mask(3).is_err());
+        // width vectors flow through untouched, and int4/int16 are not
+        // part of the fp32 mask projection
+        let p = QuantPlan {
+            base: base(),
+            layer_widths: Some(vec![
+                BitWidth::Int4,
+                BitWidth::Int16,
+                BitWidth::Fp32,
+            ]),
+        };
+        assert_eq!(
+            p.resolve_widths(3).unwrap(),
+            vec![BitWidth::Int4, BitWidth::Int16, BitWidth::Fp32]
+        );
+        assert_eq!(p.resolve_mask(3).unwrap(), vec![false, false, true]);
     }
 }

@@ -5,20 +5,23 @@
 //! activations, whose statistics come from calibration; Glow does the
 //! same). Granularity selects between one scale per tensor and one scale
 //! per output channel -- the output channel is the last axis for both
-//! conv HWIO and dense [in, out] tensors.
+//! conv HWIO and dense [in, out] tensors. Every entry point comes in an
+//! int8 form (the paper's grid) and a `_at` form generalized over a
+//! [`BitWidth`] for the per-layer radix search.
 
 use crate::ir::{Graph, QTensor, Tensor};
 
 use super::config::Granularity;
-use super::scheme::{QParams, Scheme};
+use super::scheme::{BitWidth, QParams, Scheme};
 
 /// Per-channel slices: yields (channel, stride view) over the last axis.
 fn channel_dim(shape: &[usize]) -> usize {
     *shape.last().expect("scalar weight")
 }
 
-/// Compute quantization params per channel (last axis) of a weight tensor.
-pub fn channel_params(w: &Tensor, scheme: Scheme) -> Vec<QParams> {
+/// Compute quantization params per channel (last axis) of a weight
+/// tensor, on the `width` grid.
+pub fn channel_params_at(w: &Tensor, scheme: Scheme, width: BitWidth) -> Vec<QParams> {
     let c = channel_dim(&w.shape);
     let mut mins = vec![f32::INFINITY; c];
     let mut maxs = vec![f32::NEG_INFINITY; c];
@@ -27,28 +30,48 @@ pub fn channel_params(w: &Tensor, scheme: Scheme) -> Vec<QParams> {
         mins[ch] = mins[ch].min(x);
         maxs[ch] = maxs[ch].max(x);
     }
-    (0..c).map(|ch| scheme.params_from_range(mins[ch], maxs[ch])).collect()
+    (0..c).map(|ch| scheme.params_for(mins[ch], maxs[ch], width)).collect()
 }
 
-/// Compute a single per-tensor param set.
-pub fn tensor_params(w: &Tensor, scheme: Scheme) -> QParams {
+/// Compute quantization params per channel (last axis) of a weight
+/// tensor, on the int8 grid.
+pub fn channel_params(w: &Tensor, scheme: Scheme) -> Vec<QParams> {
+    channel_params_at(w, scheme, BitWidth::Int8)
+}
+
+/// Compute a single per-tensor param set on the `width` grid.
+pub fn tensor_params_at(w: &Tensor, scheme: Scheme, width: BitWidth) -> QParams {
     let (lo, hi) = w.range();
-    scheme.params_from_range(lo, hi)
+    scheme.params_for(lo, hi, width)
 }
 
-/// Fake-quantize a weight tensor (what the rust coordinator feeds to the
-/// `{model}_fq.hlo.txt` executables).
-pub fn fake_quant_weights(w: &Tensor, scheme: Scheme, gran: Granularity) -> Tensor {
+/// Compute a single per-tensor param set on the int8 grid.
+pub fn tensor_params(w: &Tensor, scheme: Scheme) -> QParams {
+    tensor_params_at(w, scheme, BitWidth::Int8)
+}
+
+/// Fake-quantize a weight tensor onto the `width` grid.
+/// [`BitWidth::Fp32`] is the identity (an untouched copy), so a
+/// per-layer width vector can drive one uniform preparation loop.
+pub fn fake_quant_weights_at(
+    w: &Tensor,
+    scheme: Scheme,
+    gran: Granularity,
+    width: BitWidth,
+) -> Tensor {
+    if width.is_float() {
+        return w.clone();
+    }
     match gran {
         Granularity::Tensor => {
-            let p = tensor_params(w, scheme);
+            let p = tensor_params_at(w, scheme, width);
             Tensor {
                 shape: w.shape.clone(),
                 data: w.data.iter().map(|&x| p.fake_quant(x)).collect(),
             }
         }
         Granularity::Channel => {
-            let params = channel_params(w, scheme);
+            let params = channel_params_at(w, scheme, width);
             let c = params.len();
             Tensor {
                 shape: w.shape.clone(),
@@ -63,6 +86,12 @@ pub fn fake_quant_weights(w: &Tensor, scheme: Scheme, gran: Granularity) -> Tens
     }
 }
 
+/// Fake-quantize a weight tensor onto the int8 grid (what the rust
+/// coordinator feeds to the `{model}_fq.hlo.txt` executables).
+pub fn fake_quant_weights(w: &Tensor, scheme: Scheme, gran: Granularity) -> Tensor {
+    fake_quant_weights_at(w, scheme, gran, BitWidth::Int8)
+}
+
 /// True int8 quantization (VTA path; per-tensor only -- the accelerator
 /// has a single shift register per GEMM).
 pub fn quantize_weights_int8(w: &Tensor, scheme: Scheme) -> QTensor {
@@ -75,10 +104,15 @@ pub fn quantize_weights_int8(w: &Tensor, scheme: Scheme) -> QTensor {
     }
 }
 
-/// Mean squared fake-quant error of a weight tensor under a scheme+gran
-/// (used by Table 3's "fine-grained mapping" metric and by tests).
-pub fn weight_mse(w: &Tensor, scheme: Scheme, gran: Granularity) -> f64 {
-    let fq = fake_quant_weights(w, scheme, gran);
+/// Mean squared fake-quant error of a weight tensor on the `width` grid
+/// (zero for [`BitWidth::Fp32`]).
+pub fn weight_mse_at(
+    w: &Tensor,
+    scheme: Scheme,
+    gran: Granularity,
+    width: BitWidth,
+) -> f64 {
+    let fq = fake_quant_weights_at(w, scheme, gran, width);
     let n = w.data.len().max(1);
     w.data
         .iter()
@@ -86,6 +120,12 @@ pub fn weight_mse(w: &Tensor, scheme: Scheme, gran: Granularity) -> f64 {
         .map(|(&a, &b)| ((a - b) as f64).powi(2))
         .sum::<f64>()
         / n as f64
+}
+
+/// Mean squared int8 fake-quant error of a weight tensor (used by Table
+/// 3's "fine-grained mapping" metric and by tests).
+pub fn weight_mse(w: &Tensor, scheme: Scheme, gran: Granularity) -> f64 {
+    weight_mse_at(w, scheme, gran, BitWidth::Int8)
 }
 
 /// Serialized size in bytes of a quantized model (paper Table 5).
@@ -109,26 +149,54 @@ pub fn model_size_bytes(
 
 /// Serialized size under an arbitrary fp32-layer mask (layer-wise mixed
 /// precision; `mask` follows `graph.layers()` order, same accounting as
-/// [`model_size_bytes`]).
+/// [`model_size_bytes`]). Masked layers are fp32, the rest int8.
 pub fn model_size_bytes_masked(
     graph: &Graph,
     weights: &dyn Fn(&str) -> (usize, usize), // name -> (w elems, channels)
     gran: Granularity,
     mask: &[bool],
 ) -> u64 {
+    let widths: Vec<BitWidth> = (0..graph.layers().len())
+        .map(|i| {
+            if mask.get(i).copied().unwrap_or(false) {
+                BitWidth::Fp32
+            } else {
+                BitWidth::Int8
+            }
+        })
+        .collect();
+    model_size_bytes_at(graph, weights, gran, &widths)
+}
+
+/// Serialized size under a per-layer bit-width vector (`widths` follows
+/// `graph.layers()` order; missing trailing entries read as int8).
+///
+/// Accounting per layer at width `w`:
+/// - fp32: 4 bytes per weight and bias element, no scale overhead;
+/// - integer: [`BitWidth::weight_bytes`] for the weights (int4 packs two
+///   per byte), biases as int32 (4B/elem), plus (scale f32 + zero_point
+///   i32) = 8B per scale group (1 per tensor, or `channels` per layer at
+///   channel granularity).
+pub fn model_size_bytes_at(
+    graph: &Graph,
+    weights: &dyn Fn(&str) -> (usize, usize), // name -> (w elems, channels)
+    gran: Granularity,
+    widths: &[BitWidth],
+) -> u64 {
     let layers = graph.layers();
     let mut total = 0u64;
     for (i, layer) in layers.iter().enumerate() {
         let (w_elems, channels) = weights(layer);
         let bias_elems = channels;
-        if mask.get(i).copied().unwrap_or(false) {
+        let width = widths.get(i).copied().unwrap_or(BitWidth::Int8);
+        if width.is_float() {
             total += 4 * (w_elems + bias_elems) as u64;
         } else {
             let groups = match gran {
                 Granularity::Tensor => 1,
                 Granularity::Channel => channels,
             };
-            total += w_elems as u64; // int8 weights
+            total += width.weight_bytes(w_elems); // packed integer weights
             total += 4 * bias_elems as u64; // int32 biases
             total += 8 * groups as u64; // scale + zero point
         }
@@ -223,5 +291,54 @@ mod tests {
     fn channel_param_count() {
         let w = rand_weight(&[3, 3, 4, 7], 4);
         assert_eq!(channel_params(&w, Scheme::Asymmetric).len(), 7);
+    }
+
+    #[test]
+    fn width_roundtrip_error_bounds() {
+        // quantize -> dequantize error is bounded by half the grid step
+        // at every width, and the bound shrinks monotonically with bits
+        let w = rand_weight(&[3, 3, 8, 16], 11);
+        let mut last_max_err = f64::INFINITY;
+        for width in [BitWidth::Int4, BitWidth::Int8, BitWidth::Int16] {
+            let p = tensor_params_at(&w, Scheme::Symmetric, width);
+            let fq = fake_quant_weights_at(
+                &w,
+                Scheme::Symmetric,
+                Granularity::Tensor,
+                width,
+            );
+            let max_err = w
+                .data
+                .iter()
+                .zip(&fq.data)
+                .map(|(&a, &b)| (a - b).abs() as f64)
+                .fold(0f64, f64::max);
+            assert!(
+                max_err <= p.scale as f64 * 0.5 + 1e-9,
+                "{width}: err {max_err} vs step {}",
+                p.scale
+            );
+            assert!(max_err < last_max_err, "{width} must refine the grid");
+            last_max_err = max_err;
+        }
+        // fp32 is exactly the identity
+        let fq = fake_quant_weights_at(
+            &w,
+            Scheme::Symmetric,
+            Granularity::Tensor,
+            BitWidth::Fp32,
+        );
+        assert_eq!(fq.data, w.data);
+        assert_eq!(weight_mse_at(&w, Scheme::Symmetric, Granularity::Tensor, BitWidth::Fp32), 0.0);
+    }
+
+    #[test]
+    fn int4_mse_orders_below_int16() {
+        let w = rand_weight(&[128], 12);
+        let m4 = weight_mse_at(&w, Scheme::Symmetric, Granularity::Tensor, BitWidth::Int4);
+        let m8 = weight_mse(&w, Scheme::Symmetric, Granularity::Tensor);
+        let m16 =
+            weight_mse_at(&w, Scheme::Symmetric, Granularity::Tensor, BitWidth::Int16);
+        assert!(m16 < m8 && m8 < m4, "{m16} {m8} {m4}");
     }
 }

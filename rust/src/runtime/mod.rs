@@ -20,6 +20,7 @@ use crate::ir::Tensor;
 /// A compiled model executable.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// The HLO artifact this executable was compiled from.
     pub path: PathBuf,
 }
 
@@ -105,12 +106,14 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Runtime> {
         let client =
             xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
         Ok(Runtime { client, cache: RefCell::new(HashMap::new()) })
     }
 
+    /// Platform name reported by the PJRT client.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -28,8 +28,11 @@ use crate::xgb::{XgbModel, XgbParams};
 /// on the deploy target, and serialized quantized model bytes).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Components {
+    /// Measured Top-1 accuracy.
     pub accuracy: f64,
+    /// Modeled per-image latency on the deploy target (milliseconds).
     pub latency_ms: f64,
+    /// Serialized quantized model bytes.
     pub size_bytes: f64,
 }
 
@@ -39,7 +42,9 @@ pub struct Components {
 /// measurement, so existing accuracy-tuning closures work unchanged.
 #[derive(Clone, Copy, Debug)]
 pub struct Measured {
+    /// The scalar the search maximizes.
     pub score: f64,
+    /// Per-axis breakdown for multi-objective measurements.
     pub components: Option<Components>,
 }
 
@@ -58,6 +63,7 @@ impl From<(f64, Components)> for Measured {
 /// One measured trial.
 #[derive(Clone, Copy, Debug)]
 pub struct Trial {
+    /// Config index within the space being searched.
     pub config: usize,
     /// The scalar objective value being maximized (Top-1 accuracy when
     /// tuning accuracy alone).
@@ -81,6 +87,7 @@ impl Trial {
 
 /// A search algorithm proposing config indices in `0..space`.
 pub trait SearchAlgo {
+    /// CLI name of the algorithm ("random", "xgb", ...).
     fn name(&self) -> &'static str;
     /// Propose the next config to measure. `history` holds every prior
     /// trial in order. Returning `None` ends the search early.
@@ -98,6 +105,7 @@ pub struct RandomSearch {
 }
 
 impl RandomSearch {
+    /// Random search over a space of `space` configs.
     pub fn new(space: usize, seed: u64) -> Self {
         let mut order: Vec<usize> = (0..space).collect();
         Pcg32::new(seed, 11).shuffle(&mut order);
@@ -132,6 +140,7 @@ pub struct GridSearch {
 }
 
 impl GridSearch {
+    /// Grid enumeration over a space of `space` configs.
     pub fn new(space: usize, seed: u64) -> Self {
         let offset = Pcg32::new(seed, 13).below(space.max(1));
         GridSearch { space, offset, next: 0 }
@@ -173,6 +182,9 @@ pub struct GeneticSearch {
 }
 
 impl GeneticSearch {
+    /// GA over `space`'s genome (binary bits or wrapped mixed-radix
+    /// digit fields -- the layer-wise radix space encodes each width
+    /// digit in `ceil(log2 R)` bits, and out-of-range fields wrap).
     pub fn new(space: SpaceRef, seed: u64) -> Self {
         let mut rng = Pcg32::new(seed, 17);
         let pop_size = 8;
@@ -276,7 +288,9 @@ impl SearchAlgo for GeneticSearch {
 /// another model's tuning run (the database D of §5.2).
 #[derive(Clone, Debug)]
 pub struct TransferRecord {
+    /// Arch features ++ config features of the historical trial.
     pub features: Vec<f32>,
+    /// Its measured accuracy.
     pub accuracy: f32,
 }
 
@@ -406,10 +420,15 @@ impl SearchAlgo for XgbSearch {
 /// its breakdown when the run was multi-objective.
 #[derive(Clone, Debug)]
 pub struct SearchTrace {
+    /// Name of the algorithm that ran.
     pub algo: String,
+    /// Every trial, in measurement order.
     pub trials: Vec<Trial>,
+    /// Maximum measured scalar score.
     pub best_score: f64,
+    /// Config index achieving [`SearchTrace::best_score`].
     pub best_config: usize,
+    /// Component breakdown of the best trial (multi-objective runs).
     pub best_components: Option<Components>,
 }
 

@@ -13,15 +13,22 @@ use anyhow::{anyhow, bail, Result};
 /// A JSON value. Numbers are kept as f64 (adequate for our payloads).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys, so serialization is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -33,12 +40,14 @@ impl Json {
         Ok(v)
     }
 
+    /// Parse the JSON document at `path`.
     pub fn from_file(path: &std::path::Path) -> Result<Json> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
         Json::parse(&text)
     }
 
+    /// Write the pretty-printed document to `path`.
     pub fn write_file(&self, path: &std::path::Path) -> Result<()> {
         std::fs::write(path, self.pretty())?;
         Ok(())
@@ -46,6 +55,7 @@ impl Json {
 
     // ---- accessors ----
 
+    /// The value as a number, or an error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -53,10 +63,12 @@ impl Json {
         }
     }
 
+    /// The value as a usize (truncating), or an error.
     pub fn as_usize(&self) -> Result<usize> {
         Ok(self.as_f64()? as usize)
     }
 
+    /// The value as a string slice, or an error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -64,6 +76,7 @@ impl Json {
         }
     }
 
+    /// The value as a bool, or an error.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -71,6 +84,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice, or an error.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),
@@ -78,6 +92,7 @@ impl Json {
         }
     }
 
+    /// The value as an object map, or an error.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Ok(o),
@@ -102,34 +117,41 @@ impl Json {
 
     // ---- constructors ----
 
+    /// Object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Number value.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
 
+    /// String value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Array of numbers from an f64 slice.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// Array of numbers from an f32 slice.
     pub fn arr_f32(xs: &[f32]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
     // ---- serialization ----
 
+    /// Compact single-line serialization.
     pub fn dump(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, None, 0);
         s
     }
 
+    /// Indented serialization (stable across runs: object keys sort).
     pub fn pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, Some(1), 0);

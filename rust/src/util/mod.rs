@@ -17,14 +17,17 @@ use std::time::Instant;
 pub struct Timer(Instant);
 
 impl Timer {
+    /// Start the stopwatch now.
     pub fn start() -> Self {
         Timer(Instant::now())
     }
 
+    /// Elapsed milliseconds.
     pub fn ms(&self) -> f64 {
         self.0.elapsed().as_secs_f64() * 1e3
     }
 
+    /// Elapsed seconds.
     pub fn secs(&self) -> f64 {
         self.0.elapsed().as_secs_f64()
     }
@@ -43,20 +46,24 @@ pub struct Csv {
 }
 
 impl Csv {
+    /// Start a CSV with the given header row.
     pub fn new(header: &[&str]) -> Self {
         Csv { out: header.join(",") + "\n", cols: header.len() }
     }
 
+    /// Append one row (arity must match the header).
     pub fn row(&mut self, fields: &[String]) {
         assert_eq!(fields.len(), self.cols, "csv row arity mismatch");
         self.out.push_str(&fields.join(","));
         self.out.push('\n');
     }
 
+    /// The accumulated CSV text.
     pub fn finish(self) -> String {
         self.out
     }
 
+    /// Write the CSV to `path`, creating parent directories.
     pub fn write_file(self, path: &std::path::Path) -> anyhow::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;

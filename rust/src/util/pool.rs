@@ -94,6 +94,7 @@ impl Pool {
         Pool::new(effective_threads())
     }
 
+    /// Configured worker count.
     pub fn threads(&self) -> usize {
         self.threads
     }

@@ -28,6 +28,7 @@ impl Pcg32 {
         Self::new(seed, 54)
     }
 
+    /// Next uniform u32.
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -36,6 +37,7 @@ impl Pcg32 {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next uniform u64 (two u32 draws).
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
     }

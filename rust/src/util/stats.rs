@@ -83,15 +83,22 @@ pub fn shannon_entropy<T: Eq + std::hash::Hash>(obs: &[T]) -> f64 {
 /// Latency summary in milliseconds.
 #[derive(Clone, Debug)]
 pub struct LatencyStats {
+    /// Sample mean.
     pub mean_ms: f64,
+    /// Median.
     pub p50_ms: f64,
+    /// 99th percentile.
     pub p99_ms: f64,
+    /// Fastest sample.
     pub min_ms: f64,
+    /// Slowest sample.
     pub max_ms: f64,
+    /// Sample count.
     pub n: usize,
 }
 
 impl LatencyStats {
+    /// Summarize a non-empty sample of millisecond timings.
     pub fn from_samples(samples_ms: &[f64]) -> Self {
         assert!(!samples_ms.is_empty());
         LatencyStats {

@@ -11,19 +11,29 @@
 /// Cycle counters per functional unit.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Cycles {
+    /// GEMM-core cycles.
     pub gemm: u64,
+    /// Vector-ALU cycles.
     pub alu: u64,
+    /// DMA load cycles.
     pub load: u64,
+    /// DMA store cycles.
     pub store: u64,
 }
 
+/// GEMM-core batch dimension (input vectors per cycle).
 pub const GEMM_BATCH: u64 = 1;
+/// GEMM-core input-channel tile width.
 pub const GEMM_IN: u64 = 16;
+/// GEMM-core output-channel tile width.
 pub const GEMM_OUT: u64 = 16;
+/// Vector-ALU lane count.
 pub const ALU_LANES: u64 = 16;
+/// DMA throughput (bytes per cycle).
 pub const DMA_BYTES_PER_CYCLE: u64 = 16;
 
 impl Cycles {
+    /// Sum over all functional units.
     pub fn total(&self) -> u64 {
         self.gemm + self.alu + self.load + self.store
     }
@@ -40,14 +50,17 @@ impl Cycles {
         self.alu += elems.div_ceil(ALU_LANES);
     }
 
+    /// DMA load of `bytes`.
     pub fn add_load(&mut self, bytes: u64) {
         self.load += bytes.div_ceil(DMA_BYTES_PER_CYCLE);
     }
 
+    /// DMA store of `bytes`.
     pub fn add_store(&mut self, bytes: u64) {
         self.store += bytes.div_ceil(DMA_BYTES_PER_CYCLE);
     }
 
+    /// Accumulate another counter set.
     pub fn add(&mut self, other: Cycles) {
         self.gemm += other.gemm;
         self.alu += other.alu;

@@ -33,8 +33,11 @@ pub use cycles::{Cycles, PYNQ_CLOCK_MHZ};
 /// int8 tensor + its power-of-two exponent (scale = 2^exp).
 #[derive(Clone, Debug)]
 pub struct VTensor {
+    /// Dimensions, outermost first.
     pub shape: Vec<usize>,
+    /// int8 grid values.
     pub data: Vec<i8>,
+    /// Power-of-two scale exponent (scale = 2^exp).
     pub exp: i32,
 }
 
@@ -62,6 +65,7 @@ fn exp_for_range(lo: f32, hi: f32) -> i32 {
 
 /// A VTA-deployable integer-only model.
 pub struct VtaModel {
+    /// The model graph being simulated.
     pub graph: Graph,
     /// per weighted layer: int8 weights (HWIO / [in,out]) + exponent
     qweights: HashMap<String, (Vec<i8>, Vec<usize>, i32)>,
@@ -70,6 +74,7 @@ pub struct VtaModel {
     /// exponent of every tensor in the graph (quant points calibrated,
     /// pass-through ops inherit their input's)
     exps: HashMap<String, i32>,
+    /// Execute conv+ReLU as one fused accelerator op.
     pub fusion: bool,
 }
 

@@ -26,11 +26,17 @@ use anyhow::{ensure, Result};
 /// Training hyper-parameters (paper §5.2.2 tunes eta and gamma).
 #[derive(Clone, Copy, Debug)]
 pub struct XgbParams {
+    /// Boosting rounds (trees in the ensemble).
     pub n_trees: usize,
+    /// Maximum tree depth.
     pub max_depth: usize,
+    /// Learning rate (shrinkage) η.
     pub eta: f32,
+    /// Leaf L2 regularizer λ (Eq. 17).
     pub lambda: f32,
+    /// Minimum split gain γ (Eq. 17).
     pub gamma: f32,
+    /// Minimum hessian sum per child.
     pub min_child_weight: f32,
 }
 
@@ -60,6 +66,7 @@ pub struct Tree {
 }
 
 impl Tree {
+    /// The tree's output for one feature row.
     pub fn predict(&self, row: &[f32]) -> f32 {
         let mut i = 0;
         loop {
@@ -72,6 +79,7 @@ impl Tree {
         }
     }
 
+    /// Number of leaf nodes.
     pub fn num_leaves(&self) -> usize {
         self.nodes.iter().filter(|n| matches!(n, TreeNode::Leaf { .. })).count()
     }
@@ -80,11 +88,15 @@ impl Tree {
 /// A fitted gradient-boosted ensemble: ŷ = base + Σ_k f_k(x) (Eq. 15).
 #[derive(Clone, Debug)]
 pub struct XgbModel {
+    /// The fitted trees, in boosting order.
     pub trees: Vec<Tree>,
+    /// The constant base prediction (label mean).
     pub base_score: f32,
+    /// Feature-vector width the model was fitted on.
     pub n_features: usize,
     /// total split gain per feature (Fig 3's importance metric)
     pub feature_gain: Vec<f64>,
+    /// Hyper-parameters the model was fitted with.
     pub params: XgbParams,
 }
 
@@ -124,6 +136,7 @@ impl XgbModel {
         Ok(XgbModel { trees, base_score, n_features, feature_gain, params })
     }
 
+    /// Ensemble prediction for one feature row.
     pub fn predict(&self, row: &[f32]) -> f32 {
         let mut p = self.base_score;
         for t in &self.trees {

@@ -31,15 +31,20 @@ pub fn full_name(model: &str) -> &'static str {
 
 /// A loaded model: graph + trained weights + metadata.
 pub struct ZooModel {
+    /// Paper abbreviation ("mn", "rn18", ...).
     pub name: String,
+    /// The model graph.
     pub graph: Graph,
+    /// Trained weights in ABI order.
     pub weights: Weights,
     /// fp32 Top-1 measured by the python trainer on the eval split
     pub fp32_top1: f64,
+    /// Batch dimension the HLO artifacts were lowered with.
     pub batch: usize,
 }
 
 impl ZooModel {
+    /// Load `{name}_meta.json` + `{name}_weights.qtw` from `artifacts`.
     pub fn load(artifacts: &Path, name: &str) -> Result<ZooModel> {
         let meta = Json::from_file(&artifacts.join(format!("{name}_meta.json")))
             .with_context(|| format!("loading {name} metadata"))?;
@@ -62,6 +67,7 @@ impl ZooModel {
         })
     }
 
+    /// The weight tensors as a name-keyed map.
     pub fn weights_map(&self) -> &HashMap<String, Tensor> {
         &self.weights.tensors
     }

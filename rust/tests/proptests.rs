@@ -6,8 +6,9 @@
 //! every failure reproducible by construction.
 
 use quantune::quant::{
-    fake_quant_weights, general_space, vta_space, ALL_SCHEMES, CalibCount, Clipping,
-    ConfigSpace, Granularity, Histogram, QuantConfig, Scheme, VtaConfig,
+    fake_quant_weights, general_space, vta_space, ALL_SCHEMES, BitWidth, CalibCount,
+    Clipping, ConfigSpace, Granularity, Histogram, QuantConfig, Scheme, SpaceRef,
+    VtaConfig,
 };
 use quantune::search::{
     run_search, GeneticSearch, GridSearch, RandomSearch, SearchAlgo, Trial, XgbSearch,
@@ -173,6 +174,101 @@ fn prop_space_decode_total_on_random_genomes() {
             assert!(i < space.size(), "{}", space.tag());
             let canon = space.encode(i).unwrap();
             assert_eq!(space.decode(&canon), i, "{}", space.tag());
+        }
+    });
+}
+
+/// Layer-wise spaces over width menus of radix 2, 3, and 4, built once
+/// on the synthetic model (the properties below fuzz genomes, not the
+/// construction).
+fn radix_spaces() -> Vec<SpaceRef> {
+    let model = quantune::zoo::synthetic_model(8, 4, 4, 3).unwrap();
+    let calib = quantune::data::synthetic_dataset(32, 8, 8, 4, 4, 5);
+    let cache = quantune::calib::calibrate(
+        &model,
+        &calib,
+        CalibCount::C1,
+        &quantune::calib::CalibBackend::Interp,
+        1,
+    )
+    .unwrap();
+    let base = QuantConfig {
+        calib: CalibCount::C1,
+        scheme: Scheme::Symmetric,
+        clip: Clipping::Max,
+        gran: Granularity::Tensor,
+        mixed: false,
+    };
+    [
+        &[BitWidth::Int8][..],                                  // radix 2 (+fp32)
+        &[BitWidth::Int4, BitWidth::Int8][..],                  // radix 3
+        &[BitWidth::Int4, BitWidth::Int8, BitWidth::Int16][..], // radix 4
+    ]
+    .into_iter()
+    .map(|menu| -> SpaceRef {
+        std::sync::Arc::new(
+            quantune::quant::LayerwiseSpace::rank(
+                &model.name,
+                &model.graph,
+                model.weights_map(),
+                &cache.hists,
+                base,
+                3,
+                menu,
+            )
+            .unwrap(),
+        )
+    })
+    .collect()
+}
+
+#[test]
+fn prop_radix_genome_roundtrips_and_decode_total() {
+    let spaces = radix_spaces();
+    // exhaustive roundtrip per radix
+    for space in &spaces {
+        for i in 0..space.size() {
+            assert_eq!(space.decode(&space.encode(i).unwrap()), i, "{}", space.tag());
+        }
+    }
+    // random genomes always land inside the space (digit fields wrap),
+    // truncated genomes read missing bits as zero
+    props(200, |rng| {
+        for space in &spaces {
+            let bits: Vec<bool> =
+                (0..space.genome_bits()).map(|_| rng.chance(0.5)).collect();
+            let i = space.decode(&bits);
+            assert!(i < space.size(), "{}", space.tag());
+            assert_eq!(space.decode(&space.encode(i).unwrap()), i, "{}", space.tag());
+            let cut = rng.below(bits.len() + 1);
+            let j = space.decode(&bits[..cut]);
+            assert!(j < space.size(), "{} truncated", space.tag());
+        }
+    });
+}
+
+#[test]
+fn prop_width_grids_bound_roundtrip_error() {
+    // quantize -> dequantize on every (scheme, width) grid stays within
+    // half a step inside the representable interval, saturates outside
+    props(100, |rng| {
+        let lo = -rng.range_f32(0.01, 20.0);
+        let hi = rng.range_f32(0.01, 20.0);
+        for scheme in ALL_SCHEMES {
+            for width in [BitWidth::Int4, BitWidth::Int8, BitWidth::Int16] {
+                let p = scheme.params_for(lo, hi, width);
+                let (flo, fhi) = p.float_range();
+                for _ in 0..16 {
+                    let x = rng.range_f32(lo, hi);
+                    let sat = (flo - x).max(x - fhi).max(0.0);
+                    let err = (p.fake_quant(x) - x).abs();
+                    assert!(
+                        err <= p.scale * 0.5 + sat + 1e-5,
+                        "{scheme}/{width}: x={x} err={err} scale={}",
+                        p.scale
+                    );
+                }
+            }
         }
     });
 }

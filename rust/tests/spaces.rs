@@ -15,8 +15,8 @@ use quantune::coordinator::{Database, InterpEvaluator, Quantune, DEVICES};
 use quantune::data::{synthetic_dataset, Dataset};
 use quantune::experiments;
 use quantune::quant::{
-    general_space, vta_space, CalibCount, Clipping, ConfigSpace, Granularity,
-    QuantConfig, Scheme, SpaceRef,
+    general_space, vta_space, BitWidth, CalibCount, Clipping, ConfigSpace,
+    Granularity, QuantConfig, Scheme, SpaceRef, BINARY_WIDTHS,
 };
 use quantune::zoo::{synthetic_model, ZooModel};
 
@@ -52,7 +52,14 @@ fn roundtrips_through_the_trait_object() {
     let spaces: Vec<SpaceRef> = vec![
         general_space(),
         vta_space(),
-        q.layerwise_space(&model, base, 3).unwrap(),
+        q.layerwise_space(&model, base, 3, &BINARY_WIDTHS).unwrap(),
+        q.layerwise_space(
+            &model,
+            base,
+            3,
+            &[BitWidth::Int4, BitWidth::Int8, BitWidth::Int16],
+        )
+        .unwrap(),
     ];
     for space in &spaces {
         let space: &dyn ConfigSpace = space.as_ref();
@@ -80,7 +87,14 @@ fn xgb_searches_all_three_spaces_through_one_generic_path() {
     let spaces: Vec<SpaceRef> = vec![
         general_space(),
         vta_space(),
-        q.layerwise_space(&model, base, 3).unwrap(),
+        q.layerwise_space(&model, base, 3, &BINARY_WIDTHS).unwrap(),
+        q.layerwise_space(
+            &model,
+            base,
+            2,
+            &[BitWidth::Int4, BitWidth::Int8, BitWidth::Int16],
+        )
+        .unwrap(),
     ];
     for space in &spaces {
         let budget = 6.min(space.size());
@@ -130,6 +144,70 @@ fn layerwise_pareto_beats_the_all_int8_base() {
 }
 
 #[test]
+fn byte_accounting_matches_a_hand_computed_sum() {
+    use quantune::quant::{model_size_bytes_at, model_size_bytes_masked};
+    // synthetic model: c1 [3,3,4,8] = 288 w + 8 b, c2 [3,3,8,8] = 576 w
+    // + 8 b, d [8,4] = 32 w + 4 b
+    let model = synthetic_model(8, 4, 4, 3).unwrap();
+    let dims = |layer: &str| {
+        let w = model.weights.get(&format!("{layer}_w")).unwrap();
+        let b = model.weights.get(&format!("{layer}_b")).unwrap();
+        (w.len(), b.len())
+    };
+    let widths = [BitWidth::Int4, BitWidth::Fp32, BitWidth::Int16];
+    // per-layer, tensor granularity (1 scale group of 8 bytes):
+    //   c1 int4: ceil(288/2) + 4*8 + 8 = 144 + 32 + 8        = 184
+    //   c2 fp32: 4 * (576 + 8)                               = 2336
+    //   d int16: 2*32 + 4*4 + 8 = 64 + 16 + 8                = 88
+    let got =
+        model_size_bytes_at(&model.graph, &dims, Granularity::Tensor, &widths);
+    assert_eq!(got, 184 + 2336 + 88);
+    // channel granularity prices one 8-byte scale group per channel
+    let got_ch =
+        model_size_bytes_at(&model.graph, &dims, Granularity::Channel, &widths);
+    assert_eq!(got_ch, (184 + 8 * 7) + 2336 + (88 + 8 * 3));
+    // the legacy mask accounting is exactly the {int8, fp32} projection
+    let mask = [false, true, false];
+    let as_widths = [BitWidth::Int8, BitWidth::Fp32, BitWidth::Int8];
+    assert_eq!(
+        model_size_bytes_masked(&model.graph, &dims, Granularity::Tensor, &mask),
+        model_size_bytes_at(&model.graph, &dims, Granularity::Tensor, &as_widths),
+    );
+}
+
+#[test]
+fn radix_frontier_dominates_the_binary_masks() {
+    // the ISSUE-4 acceptance shape: enumerating the same top-3 fragile
+    // layers under the binary {int8, fp32} menu and the full {int4,
+    // int8, int16, fp32} radix, at least one int4-bearing radix config
+    // must dominate the best quantizing binary config on (size,
+    // accuracy) -- and sit on the joint frontier
+    let rows = experiments::pareto_radix_synthetic().unwrap();
+    let binary: Vec<_> = rows.iter().filter(|r| r.space == "binary").collect();
+    let radix: Vec<_> = rows.iter().filter(|r| r.space == "radix").collect();
+    assert_eq!(binary.len(), 8, "2^3 binary masks");
+    assert_eq!(radix.len(), 64, "4^3 radix assignments");
+    // binary rows never use int4 (the menu forbids it)
+    assert!(binary.iter().all(|r| r.int4_layers == 0));
+    let dominator = radix
+        .iter()
+        .find(|r| r.int4_layers >= 1 && r.dominates_best_binary && r.on_frontier);
+    assert!(
+        dominator.is_some(),
+        "no int4-bearing radix config dominates the best binary mask; radix rows: {:?}",
+        radix
+            .iter()
+            .map(|r| (r.label.clone(), r.accuracy, r.quant_bytes))
+            .collect::<Vec<_>>()
+    );
+    // the dominator is a genuine mixed-width point: it names an int4
+    // override and still quantizes at least one layer
+    let d = dominator.unwrap();
+    assert!(d.label.contains(":int4"), "{}", d.label);
+    assert!(d.fp32_layers < 3, "{}", d.label);
+}
+
+#[test]
 fn layerwise_sweep_persists_under_its_own_tag() {
     let (model, calib, eval) = fixtures();
     let mut q = quantune_with(&calib, &eval);
@@ -140,7 +218,7 @@ fn layerwise_sweep_persists_under_its_own_tag() {
         gran: Granularity::Tensor,
         mixed: false,
     };
-    let space = q.layerwise_space(&model, base, 2).unwrap();
+    let space = q.layerwise_space(&model, base, 2, &BINARY_WIDTHS).unwrap();
     let ev = InterpEvaluator::new(&model, &calib, &eval, q.seed)
         .with_threads(1)
         .with_space(space.clone());
