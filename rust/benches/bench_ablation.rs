@@ -1,8 +1,10 @@
 //! Ablations of the design choices the paper discusses in §5.2.2:
 //!
-//!   0. search spaces: the same five algorithms over the general (96),
-//!      VTA (12), and a layer-wise mixed-precision space through the one
-//!      generic `run_search` path (always runs, no artifacts needed);
+//!   0. search spaces: the same six algorithms (including the NSGA-II
+//!      Pareto search, scored here by its scalar trace) over the general
+//!      (96), VTA (12), and a layer-wise mixed-precision space through
+//!      the one generic `run_search` path (always runs, no artifacts
+//!      needed);
 //!   1. feature preprocessing: one-hot vs categorical encoding (the paper
 //!      picked one-hot because "it shows better accuracy than the
 //!      categorical ones");
@@ -52,7 +54,7 @@ fn measure_xgb(
     mean(&out)
 }
 
-/// Ablation 0: the five algorithms over all three spaces through the one
+/// Ablation 0: the six algorithms over all three spaces through the one
 /// generic `run_search` path, on an analytic oracle derived from each
 /// space's decoded plan (clip, calib, and the fp32-layer count move the
 /// score). Prints mean trials-to-optimum per (space, algorithm).
@@ -87,8 +89,8 @@ fn space_ablation(seeds: &[u64], eps: f64) -> Result<()> {
 
     println!("== Ablation: search spaces through the generic driver ==");
     println!(
-        "{:>32} | {:>4} | {:>6} | {:>6} | {:>7} | {:>6} | {:>6}",
-        "space", "|S|", "random", "grid", "genetic", "xgb", "xgb_t"
+        "{:>32} | {:>4} | {:>6} | {:>6} | {:>7} | {:>6} | {:>6} | {:>6}",
+        "space", "|S|", "random", "grid", "genetic", "xgb", "xgb_t", "nsga2"
     );
     let mut csv = Csv::new(&["space", "size", "algo", "mean_trials"]);
     for space in &spaces {
@@ -119,7 +121,7 @@ fn space_ablation(seeds: &[u64], eps: f64) -> Result<()> {
             })
             .collect::<Result<_>>()?;
         print!("{:>32} | {:>4} |", space.tag(), space.size());
-        for algo in ["random", "grid", "genetic", "xgb", "xgb_t"] {
+        for algo in ["random", "grid", "genetic", "xgb", "xgb_t", "nsga2"] {
             let per_seed = Pool::auto().map(seeds, |&seed| -> Result<f64> {
                 let t = if algo == "xgb_t" { transfer.clone() } else { Vec::new() };
                 let mut s = coordinator::make_algorithm(algo, &model, space, t, seed)?;

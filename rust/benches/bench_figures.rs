@@ -66,6 +66,40 @@ fn print_radix_pareto(rows: &[exp::RadixParetoRow]) {
     }
 }
 
+fn print_pareto_search(s: &exp::ParetoSearchSummary) {
+    println!(
+        "exhaustive: {} evaluations | nsga2: {} evaluations ({}% of exhaustive)",
+        s.exhaustive_evals,
+        s.nsga2_evals,
+        100 * s.nsga2_evals / s.exhaustive_evals.max(1),
+    );
+    println!(
+        "hypervolume: true {:.4} | nsga2 {:.4} | recovered {:.1}%",
+        s.hv_true,
+        s.hv_nsga2,
+        s.hv_ratio * 100.0,
+    );
+    println!(
+        "true-front configs found: {:.1}%",
+        s.true_front_fraction * 100.0
+    );
+    println!(
+        "{:>28} | {:>8} | {:>10} | {:>10} | true front | nsga2 front",
+        "config", "top1", "latency ms", "bytes"
+    );
+    for r in s.rows.iter().filter(|r| r.on_true_front || r.on_nsga2_front) {
+        println!(
+            "{:>28} | {:>7.2}% | {:>10.4} | {:>10.0} | {:>10} | {}",
+            r.label,
+            r.accuracy * 100.0,
+            r.latency_ms,
+            r.size_bytes,
+            if r.on_true_front { "*" } else { "" },
+            if r.on_nsga2_front { "*" } else { "" }
+        );
+    }
+}
+
 fn print_objective_pareto(rows: &[exp::ObjectiveParetoRow]) {
     println!(
         "{:>28} | {:>8} | {:>10} | {:>10} | frontier | picked by",
@@ -103,6 +137,11 @@ fn main() -> Result<()> {
              (synthetic, i7 profile) =="
         );
         print_objective_pareto(&exp::pareto_objectives_synthetic()?);
+        println!(
+            "\n== Pareto-front search: NSGA-II vs exhaustive frontier \
+             (synthetic radix space) =="
+        );
+        print_pareto_search(&exp::pareto_search_synthetic()?);
     }
 
     let mut q = match Quantune::open(zoo::artifacts_dir()) {
@@ -187,7 +226,7 @@ fn main() -> Result<()> {
     let mut fig5_results = None;
     if want("fig5") || want("fig6") {
         if let Some(rt) = need_rt(runtime.as_ref(), "fig5") {
-            println!("\n== Fig 5: convergence of the five search algorithms ==");
+            println!("\n== Fig 5: convergence of the search algorithms ==");
             let seeds: Vec<u64> = (0..7).collect();
             let results = exp::fig5(&mut q, rt, &seeds, 1e-3)?;
             let mut models: Vec<String> =

@@ -1,10 +1,12 @@
 //! Search-algorithm comparison on one model (a single-model slice of the
 //! paper's Fig 5).
 //!
-//! Runs the five algorithms -- random, grid, genetic, XGB, XGB-T --
-//! against the sweep ground truth in the trial database and prints each
-//! one's accuracy-vs-trials convergence. Requires `quantune sweep` (the
-//! bench harness runs it automatically; this example asks politely).
+//! Runs all six algorithms -- random, grid, genetic, XGB, XGB-T, and
+//! the NSGA-II Pareto search (scored here by its scalar trace; see
+//! rust/SEARCH.md) -- against the sweep ground truth in the trial
+//! database and prints each one's accuracy-vs-trials convergence.
+//! Requires `quantune sweep` (the bench harness runs it automatically;
+//! this example asks politely).
 
 use anyhow::{Context, Result};
 

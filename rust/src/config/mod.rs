@@ -66,6 +66,32 @@ impl Cli {
         }
     }
 
+    /// `--key X` parsed as a finite positive f64, or `None` when absent
+    /// (budget caps: zero, negative, NaN, or inf caps are user errors,
+    /// and so is the bare flag -- silently dropping a mistyped
+    /// constraint would run the search unconstrained).
+    pub fn opt_budget_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.opt(key) {
+            None => {
+                anyhow::ensure!(
+                    !self.flag(key),
+                    "--{key} needs a value (e.g. --{key} 2.5)"
+                );
+                Ok(None)
+            }
+            Some(v) => {
+                let x: f64 = v
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}"))?;
+                anyhow::ensure!(
+                    x.is_finite() && x > 0.0,
+                    "--{key} must be a finite positive number, got {v:?}"
+                );
+                Ok(Some(x))
+            }
+        }
+    }
+
     /// Was the bare `--key` flag passed?
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
@@ -117,5 +143,27 @@ mod tests {
         let c = parse("eval").unwrap();
         assert_eq!(c.models().len(), 6);
         assert_eq!(c.opt_or("algo", "xgb_t"), "xgb_t");
+    }
+
+    #[test]
+    fn budget_caps_parse_and_validate() {
+        let c = parse("search --budget-lat-ms 2.5").unwrap();
+        assert_eq!(c.opt_budget_f64("budget-lat-ms").unwrap(), Some(2.5));
+        assert_eq!(c.opt_budget_f64("budget-bytes").unwrap(), None);
+        for bad in ["0", "-3", "NaN", "inf", "twelve"] {
+            let c = parse(&format!("search --budget-bytes {bad}")).unwrap();
+            assert!(
+                c.opt_budget_f64("budget-bytes").is_err(),
+                "{bad:?} must be rejected"
+            );
+        }
+        // a bare flag (value swallowed by the next --flag, or missing
+        // entirely) must be an error, not a silently dropped constraint
+        for cmd in ["search --budget-lat-ms", "search --budget-lat-ms --budget-bytes 5"]
+        {
+            let c = parse(cmd).unwrap();
+            let err = c.opt_budget_f64("budget-lat-ms").unwrap_err().to_string();
+            assert!(err.contains("needs a value"), "{cmd}: {err}");
+        }
     }
 }

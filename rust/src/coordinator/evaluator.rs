@@ -65,9 +65,16 @@ pub trait SharedEvaluator: Sync {
 /// [`CostModel`](super::objective::CostModel), and the three fold into
 /// the scalar the search maximizes via
 /// [`ObjectiveWeights::score`](super::objective::ObjectiveWeights).
-/// This is what `Quantune::search_objective` drives, and why all five
-/// algorithms and all three spaces tune any objective unchanged: they
-/// only ever see the scalar.
+/// This is what `Quantune::search_objective` drives, and why every
+/// algorithm and space tunes any objective unchanged: they only ever
+/// see the scalar.
+///
+/// Constrained search: when a [`Budget`](super::objective::Budget) is
+/// set, a config whose static cost exceeds it is rejected **without
+/// measuring accuracy** -- the trial is recorded with a `-inf` score
+/// (never the best) and a NaN-accuracy component vector (ranked last by
+/// every dominance/ranking site), and the wrapped evaluator is never
+/// called. The epsilon-constraint therefore costs zero evaluations.
 pub struct ObjectiveEvaluator<'a> {
     /// The accuracy-measuring evaluator being wrapped.
     pub inner: &'a mut dyn Evaluator,
@@ -75,17 +82,32 @@ pub struct ObjectiveEvaluator<'a> {
     pub cost: &'a super::objective::CostModel,
     /// Scalarization weights.
     pub weights: super::objective::ObjectiveWeights,
+    /// Hard latency/size budgets
+    /// ([`Budget::unlimited`](super::objective::Budget::unlimited)
+    /// admits all).
+    pub budget: super::objective::Budget,
 }
 
 impl ObjectiveEvaluator<'_> {
     /// Measure config `i` and return (scalar score, component breakdown)
-    /// in the shape `run_search` consumes.
+    /// in the shape `run_search` consumes. Over-budget configs short-
+    /// circuit before the accuracy measurement (see the type docs).
     pub fn measure_scored(
         &mut self,
         config: usize,
     ) -> Result<(f64, crate::search::Components)> {
-        let accuracy = self.inner.measure(config)?;
         let cost = self.cost.cost(config)?;
+        if !self.budget.admits(cost) {
+            return Ok((
+                f64::NEG_INFINITY,
+                crate::search::Components {
+                    accuracy: f64::NAN,
+                    latency_ms: cost.latency_ms,
+                    size_bytes: cost.size_bytes,
+                },
+            ));
+        }
+        let accuracy = self.inner.measure(config)?;
         let score = self.weights.score(accuracy, cost, &self.cost.refs);
         let components = crate::search::Components {
             accuracy,

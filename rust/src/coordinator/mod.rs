@@ -26,7 +26,7 @@ pub use evaluator::{
     Evaluator, HloEvaluator, InterpEvaluator, ObjectiveEvaluator, OracleEvaluator,
     SharedEvaluator,
 };
-pub use objective::{ConfigCost, CostModel, ObjectiveWeights, OBJECTIVES};
+pub use objective::{Budget, ConfigCost, CostModel, ObjectiveWeights, OBJECTIVES};
 pub use quantizer::{
     act_params_tensor, layer_precision_overrides, mixed_precision_bypass, prepare,
     prepare_cached, QuantizedSetup, WeightCache, WeightVariant,
@@ -41,15 +41,17 @@ use crate::calib::{calibrate, CalibBackend};
 use crate::data::Dataset;
 use crate::quant::{BitWidth, ConfigSpace, LayerwiseSpace, QuantConfig, SpaceRef};
 use crate::search::{
-    run_search, GeneticSearch, GridSearch, RandomSearch, SearchAlgo, SearchTrace,
-    TransferRecord, XgbSearch,
+    run_search, GeneticSearch, GridSearch, ParetoSearch, ParetoTrace, RandomSearch,
+    SearchAlgo, SearchTrace, TransferRecord, XgbSearch,
 };
 use crate::util::pool::Pool;
 use crate::util::Timer;
 use crate::zoo::{self, ZooModel};
 
-/// The five search algorithms of Fig 5/6, by CLI name.
-pub const ALGORITHMS: [&str; 5] = ["random", "grid", "genetic", "xgb", "xgb_t"];
+/// The search algorithms by CLI name: the paper's five (Fig 5/6) plus
+/// the NSGA-II Pareto-front search (`nsga2`, see
+/// [`crate::search::ParetoSearch`] and rust/SEARCH.md).
+pub const ALGORITHMS: [&str; 6] = ["random", "grid", "genetic", "xgb", "xgb_t", "nsga2"];
 
 /// Feature vector of (model, config): arch blocks `e` ++ the space's
 /// config features `s` (paper §5.1; 10 + 13 = 23 dims for the general
@@ -88,6 +90,7 @@ pub fn make_algorithm(
             transfer,
             seed,
         )),
+        "nsga2" => Box::new(ParetoSearch::new(space.clone(), seed)),
         other => anyhow::bail!("unknown algorithm {other:?} (try {ALGORITHMS:?})"),
     })
 }
@@ -354,9 +357,16 @@ impl Quantune {
     /// (general / layer-wise spaces) or VTA cycle totals (VTA space).
     /// The returned trace's trials carry the per-component breakdown.
     ///
-    /// All five algorithms tune the scalar unchanged -- including the
-    /// XGB cost model, which then learns to *predict the objective*, not
+    /// Every algorithm tunes the scalar unchanged -- including the XGB
+    /// cost model, which then learns to *predict the objective*, not
     /// accuracy.
+    ///
+    /// `limits` is the epsilon-constraint: configs whose static cost
+    /// exceeds it are rejected before their accuracy is measured (they
+    /// appear in the trace with a `-inf` score and NaN accuracy). Pass
+    /// [`Budget::unlimited`] for unconstrained tuning. An unsatisfiable
+    /// budget -- no config of the space fits -- is a descriptive error
+    /// up front, not a search that silently measures nothing.
     #[allow(clippy::too_many_arguments)]
     pub fn search_objective(
         &self,
@@ -367,12 +377,107 @@ impl Quantune {
         budget: usize,
         seed: u64,
         weights: ObjectiveWeights,
+        limits: Budget,
     ) -> Result<SearchTrace> {
         let cost =
             CostModel::build(model, space.as_ref(), &self.device, crate::vta::PYNQ_CLOCK_MHZ)?;
-        let mut scored = ObjectiveEvaluator { inner: evaluator, cost: &cost, weights };
+        Self::ensure_feasible(&cost, &limits, &space.tag())?;
+        let mut scored =
+            ObjectiveEvaluator { inner: evaluator, cost: &cost, weights, budget: limits };
         let mut algo = self.make_algo(model, space, algo_name, seed)?;
-        run_search(algo.as_mut(), budget, |cfg| scored.measure_scored(cfg))
+        let trace = run_search(algo.as_mut(), budget, |cfg| scored.measure_scored(cfg))?;
+        Self::ensure_measured(&trace, &limits)?;
+        Ok(trace)
+    }
+
+    /// Pareto-front search: NSGA-II ([`ParetoSearch`]) evolves `space`'s
+    /// genome by non-dominated sorting + crowding distance over the
+    /// (accuracy, latency, bytes) component vectors, under the same
+    /// epsilon-constraint semantics as [`Quantune::search_objective`].
+    /// Returns the scalar [`SearchTrace`] (whose `best_*` fields rank by
+    /// the `weights` scalarization, for parity with the other
+    /// algorithms) alongside the [`ParetoTrace`] frontier view.
+    ///
+    /// # Examples
+    ///
+    /// Recover a latency/size/accuracy frontier of the self-contained
+    /// synthetic model -- runs from a clean checkout:
+    ///
+    /// ```
+    /// use quantune::coordinator::{Budget, InterpEvaluator, ObjectiveWeights, Quantune};
+    /// use quantune::quant::vta_space;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let q = Quantune::synthetic();
+    /// let model = Quantune::synthetic_model()?;
+    /// let space = vta_space();
+    /// let mut ev = InterpEvaluator::new(&model, &q.calib_pool, &q.eval, q.seed)
+    ///     .with_threads(1)
+    ///     .with_space(space.clone());
+    /// let (trace, pareto) = q.search_pareto(
+    ///     &model,
+    ///     &space,
+    ///     &mut ev,
+    ///     8,
+    ///     7,
+    ///     ObjectiveWeights::parse("balanced")?,
+    ///     Budget::unlimited(),
+    /// )?;
+    /// assert_eq!(trace.trials.len(), 8);
+    /// assert!(!pareto.front.is_empty());
+    /// // every frontier member is a measured trial of the trace
+    /// for f in &pareto.front {
+    ///     assert!(trace.trials.iter().any(|t| t.config == f.config));
+    /// }
+    /// # Ok(())
+    /// # }
+    /// ```
+    #[allow(clippy::too_many_arguments)]
+    pub fn search_pareto(
+        &self,
+        model: &ZooModel,
+        space: &SpaceRef,
+        evaluator: &mut dyn Evaluator,
+        budget: usize,
+        seed: u64,
+        weights: ObjectiveWeights,
+        limits: Budget,
+    ) -> Result<(SearchTrace, ParetoTrace)> {
+        // one orchestration pipeline for every algorithm: this IS
+        // search_objective with the nsga2 driver, plus the frontier view
+        let trace = self
+            .search_objective(model, space, "nsga2", evaluator, budget, seed, weights, limits)?;
+        let pareto = ParetoTrace::from_trials(&trace.algo, &trace.trials);
+        Ok((trace, pareto))
+    }
+
+    /// Constrained searches over an empty feasible set would measure
+    /// nothing; fail with the budget and space spelled out instead.
+    fn ensure_feasible(cost: &CostModel, limits: &Budget, tag: &str) -> Result<()> {
+        anyhow::ensure!(
+            !limits.is_limited() || cost.feasible_count(limits) > 0,
+            "budget {} admits no config of the {tag:?} space on {} -- relax \
+             --budget-lat-ms / --budget-bytes",
+            limits.slug(),
+            cost.target,
+        );
+        Ok(())
+    }
+
+    /// A constrained search whose every proposal was rejected never
+    /// measured anything: its "best" would be an over-budget config with
+    /// a `-inf` score and NaN accuracy. Refuse to report that as a
+    /// result (only a budget can produce an all-`-inf` trace: without
+    /// one, scores are finite or NaN).
+    fn ensure_measured(trace: &SearchTrace, limits: &Budget) -> Result<()> {
+        anyhow::ensure!(
+            !(limits.is_limited() && trace.best_score == f64::NEG_INFINITY),
+            "all {} trial(s) were over budget ({}) -- the feasible region was never \
+             sampled; raise --budget (trial count) or relax the constraint",
+            trace.trials.len(),
+            limits.slug(),
+        );
+        Ok(())
     }
 
     fn make_algo(

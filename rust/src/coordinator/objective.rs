@@ -117,6 +117,76 @@ impl ObjectiveWeights {
     }
 }
 
+/// Hard deployment budgets for constrained search (the epsilon-constraint
+/// formulation: optimize accuracy subject to `latency <= eps_lat` and
+/// `bytes <= eps_size`, as in the integer-programming layer-wise
+/// calibration setting of Hubara et al.). A config whose *static*
+/// [`ConfigCost`] exceeds either bound is rejected **before** its
+/// accuracy is measured -- see
+/// [`ObjectiveEvaluator`](super::evaluator::ObjectiveEvaluator) -- so an
+/// over-budget config never costs an evaluation. `None` on an axis means
+/// unconstrained; [`Budget::unlimited`] (the default) admits everything.
+///
+/// # Examples
+///
+/// ```
+/// use quantune::coordinator::{Budget, ConfigCost};
+///
+/// let budget = Budget { max_latency_ms: Some(10.0), max_size_bytes: None };
+/// assert!(budget.admits(ConfigCost { latency_ms: 9.0, size_bytes: 1e9 }));
+/// assert!(!budget.admits(ConfigCost { latency_ms: 10.5, size_bytes: 1.0 }));
+/// // boundary costs are within budget (<=, not <)
+/// assert!(budget.admits(ConfigCost { latency_ms: 10.0, size_bytes: 0.0 }));
+/// assert!(Budget::unlimited().admits(ConfigCost {
+///     latency_ms: f64::INFINITY,
+///     size_bytes: f64::INFINITY,
+/// }));
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Budget {
+    /// Hard cap on modeled per-image latency (milliseconds), if any.
+    pub max_latency_ms: Option<f64>,
+    /// Hard cap on serialized model bytes, if any.
+    pub max_size_bytes: Option<f64>,
+}
+
+impl Budget {
+    /// No constraints: every config is admitted.
+    pub fn unlimited() -> Budget {
+        Budget::default()
+    }
+
+    /// Is any axis actually constrained?
+    pub fn is_limited(&self) -> bool {
+        self.max_latency_ms.is_some() || self.max_size_bytes.is_some()
+    }
+
+    /// Does `cost` fit inside the budget (inclusive bounds)? A NaN cost
+    /// component never fits a constrained axis (`NaN <= cap` is false),
+    /// so an unpriceable config cannot sneak under a budget.
+    pub fn admits(&self, cost: ConfigCost) -> bool {
+        self.max_latency_ms.map_or(true, |cap| cost.latency_ms <= cap)
+            && self.max_size_bytes.map_or(true, |cap| cost.size_bytes <= cap)
+    }
+
+    /// Compact label for CSVs and logs ("lat<=10ms,bytes<=4096" or
+    /// "unlimited").
+    pub fn slug(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(l) = self.max_latency_ms {
+            parts.push(format!("lat<={l}ms"));
+        }
+        if let Some(b) = self.max_size_bytes {
+            parts.push(format!("bytes<={b}"));
+        }
+        if parts.is_empty() {
+            "unlimited".to_string()
+        } else {
+            parts.join(",")
+        }
+    }
+}
+
 /// Static per-config deployment cost (accuracy is measured, these two
 /// are modeled).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -231,6 +301,14 @@ impl CostModel {
             .ok_or_else(|| anyhow::anyhow!("no cost entry for config {i}"))
     }
 
+    /// How many configs of the priced space fit inside `budget` (the
+    /// feasible-set size of a constrained search). Zero means the budget
+    /// is unsatisfiable for this (model, space, device) and a search
+    /// under it would measure nothing.
+    pub fn feasible_count(&self, budget: &Budget) -> usize {
+        self.costs.iter().filter(|&&c| budget.admits(c)).count()
+    }
+
     /// Number of priced configs.
     pub fn len(&self) -> usize {
         self.costs.len()
@@ -308,6 +386,46 @@ mod tests {
             }
             assert!(cost.size_bytes < cm.refs.size_bytes, "int8 must shrink");
         }
+    }
+
+    #[test]
+    fn budget_admission_and_feasible_count() {
+        let cheap = ConfigCost { latency_ms: 1.0, size_bytes: 100.0 };
+        let dear = ConfigCost { latency_ms: 20.0, size_bytes: 4000.0 };
+        assert!(Budget::unlimited().admits(dear));
+        assert!(!Budget::unlimited().is_limited());
+        let lat = Budget { max_latency_ms: Some(5.0), max_size_bytes: None };
+        assert!(lat.is_limited() && lat.admits(cheap) && !lat.admits(dear));
+        let both =
+            Budget { max_latency_ms: Some(5.0), max_size_bytes: Some(50.0) };
+        assert!(!both.admits(cheap), "size axis must also bind");
+        // NaN costs never fit a constrained axis
+        let nan = ConfigCost { latency_ms: f64::NAN, size_bytes: 1.0 };
+        assert!(!lat.admits(nan));
+        assert!(Budget::unlimited().admits(nan), "unconstrained axes ignore NaN");
+        assert_eq!(both.slug(), "lat<=5ms,bytes<=50");
+        assert_eq!(Budget::unlimited().slug(), "unlimited");
+
+        // feasible_count over a real cost table: tightening the latency
+        // budget below the fused VTA cycle time keeps only fused configs
+        let model = synthetic_model(8, 4, 4, 3).unwrap();
+        let space = vta_space();
+        let cm = CostModel::build(&model, space.as_ref(), &super::super::DEVICES[1], 100.0)
+            .unwrap();
+        assert_eq!(cm.feasible_count(&Budget::unlimited()), 12);
+        let fused_ms = (0..12)
+            .map(|i| cm.cost(i).unwrap().latency_ms)
+            .fold(f64::INFINITY, f64::min);
+        let tight = Budget {
+            max_latency_ms: Some(fused_ms),
+            max_size_bytes: None,
+        };
+        assert_eq!(cm.feasible_count(&tight), 6, "half the space is fused");
+        let impossible = Budget {
+            max_latency_ms: Some(fused_ms / 2.0),
+            max_size_bytes: None,
+        };
+        assert_eq!(cm.feasible_count(&impossible), 0);
     }
 
     #[test]

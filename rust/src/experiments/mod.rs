@@ -400,8 +400,8 @@ pub struct ConvergenceResult {
     pub trace: SearchTrace,
 }
 
-/// Fig 5: convergence of the five search algorithms against the sweep
-/// oracle, seed-averaged.
+/// Fig 5: convergence of the search algorithms (the paper's five plus
+/// nsga2's scalar trace) against the sweep oracle, seed-averaged.
 pub fn fig5(
     q: &mut Quantune,
     runtime: &Runtime,
@@ -1344,6 +1344,215 @@ pub fn pareto_objectives_synthetic() -> Result<Vec<ObjectiveParetoRow>> {
         Some((base.calib, cache)),
         "pareto_objectives_synthetic.csv",
     )
+}
+
+// ---------------------------------------------------------------------------
+// Pareto-front *search*: does NSGA-II recover the exhaustive frontier at
+// a fraction of its evaluation cost?
+// ---------------------------------------------------------------------------
+
+/// One point of the NSGA-II-vs-exhaustive frontier comparison.
+pub struct ParetoSearchRow {
+    /// Config index within the radix layer-wise space.
+    pub config: usize,
+    /// Human-readable width assignment.
+    pub label: String,
+    /// Measured Top-1 (agreement with fp32 on the synthetic setup).
+    pub accuracy: f64,
+    /// Modeled per-image latency (milliseconds).
+    pub latency_ms: f64,
+    /// Serialized quantized model bytes.
+    pub size_bytes: f64,
+    /// On the exhaustive (true) 3D frontier.
+    pub on_true_front: bool,
+    /// Measured by the NSGA-II run.
+    pub evaluated_by_nsga2: bool,
+    /// On the front NSGA-II recovered.
+    pub on_nsga2_front: bool,
+}
+
+/// Summary of the frontier-recovery comparison
+/// ([`pareto_search_synthetic`]).
+pub struct ParetoSearchSummary {
+    /// Every config of the space, with true-front / searched-front flags.
+    pub rows: Vec<ParetoSearchRow>,
+    /// Exhaustive evaluation count (= space size).
+    pub exhaustive_evals: usize,
+    /// Unique configs the NSGA-II run measured.
+    pub nsga2_evals: usize,
+    /// Hypervolume of the exhaustive frontier.
+    pub hv_true: f64,
+    /// Hypervolume of the NSGA-II frontier (same reference point).
+    pub hv_nsga2: f64,
+    /// `hv_nsga2 / hv_true` -- the frontier-recovery metric.
+    pub hv_ratio: f64,
+    /// Fraction of true-front configs the NSGA-II front contains.
+    pub true_front_fraction: f64,
+}
+
+/// Self-contained Pareto-front *search* experiment (no artifacts): the
+/// [`radix_synthetic_setup`] model's {int4, int8, int16, fp32}^3
+/// layer-wise space (64 configs) is enumerated exhaustively -- the same
+/// ground truth [`pareto_objectives`] marks -- and NSGA-II
+/// (`Quantune::search_pareto`) gets a 16-proposal budget: 25% of the
+/// exhaustive evaluation cost. Recovery is scored two ways:
+///
+/// - **hypervolume ratio** `hv(searched front) / hv(true front)` w.r.t.
+///   a common reference point (zero accuracy, worst latency/bytes of
+///   the space) -- the standard frontier-quality metric, and the one
+///   the acceptance test thresholds at >= 0.8;
+/// - **fraction of the true front** -- how many of the exhaustively
+///   non-dominated configs the search actually measured and kept.
+///
+/// Emits `results/pareto_search_synthetic.csv`; asserted in
+/// `rust/tests/objective.rs`.
+pub fn pareto_search_synthetic() -> Result<ParetoSearchSummary> {
+    let (model, calib, eval, cache) = radix_synthetic_setup()?;
+    let base = pareto_synthetic_base();
+    let seed = 41;
+    let menu = [BitWidth::Int4, BitWidth::Int8, BitWidth::Int16, BitWidth::Fp32];
+    let space: SpaceRef = std::sync::Arc::new(LayerwiseSpace::rank(
+        &model.name,
+        &model.graph,
+        model.weights_map(),
+        &cache.hists,
+        base,
+        3,
+        &menu,
+    )?);
+
+    // exhaustive ground truth: every config measured once, 3D frontier
+    // marked (this is the pareto_objectives machinery over the same
+    // space, kept as its own CSV)
+    let exhaustive = pareto_objectives(
+        &model,
+        &calib,
+        &eval,
+        space.clone(),
+        &DEVICES[1],
+        &objective_weight_grid(),
+        seed,
+        Some((base.calib, cache.clone())),
+        "pareto_search_exhaustive.csv",
+    )?;
+
+    // NSGA-II under 25% of the exhaustive budget: 16 proposals over the
+    // 64-config space; unique evaluations can only be fewer (repeat
+    // proposals hit the evaluator memo)
+    let q = Quantune {
+        artifacts: PathBuf::from("."),
+        calib_pool: calib.clone(),
+        eval: eval.clone(),
+        db: crate::coordinator::Database::in_memory(),
+        seed,
+        device: DEVICES[1],
+    };
+    let nsga_budget = space.size() / 4;
+    let mut ev = InterpEvaluator::new(&model, &calib, &eval, seed)
+        .with_space(space.clone())
+        .with_calibration(base.calib, cache);
+    let (trace, pareto) = q.search_pareto(
+        &model,
+        &space,
+        &mut ev,
+        nsga_budget,
+        seed,
+        ObjectiveWeights::parse("balanced")?,
+        crate::coordinator::Budget::unlimited(),
+    )?;
+    let evaluated: std::collections::HashSet<usize> =
+        trace.trials.iter().map(|t| t.config).collect();
+    let nsga_front: std::collections::HashSet<usize> =
+        pareto.front_configs().into_iter().collect();
+
+    // common frontier representation: (accuracy, latency, bytes) of the
+    // exhaustive table, so both hypervolumes price identical points
+    let comp = |r: &ObjectiveParetoRow| crate::search::Components {
+        accuracy: r.accuracy,
+        latency_ms: r.latency_ms,
+        size_bytes: r.size_bytes,
+    };
+    let reference = crate::search::Components {
+        accuracy: 0.0,
+        latency_ms: exhaustive
+            .iter()
+            .map(|r| r.latency_ms)
+            .fold(f64::NEG_INFINITY, f64::max)
+            * 1.01,
+        size_bytes: exhaustive
+            .iter()
+            .map(|r| r.size_bytes)
+            .fold(f64::NEG_INFINITY, f64::max)
+            * 1.01,
+    };
+    let all_trials: Vec<crate::search::Trial> = exhaustive
+        .iter()
+        .map(|r| crate::search::Trial {
+            config: r.config,
+            score: r.accuracy,
+            components: Some(comp(r)),
+        })
+        .collect();
+    let true_trace = crate::search::ParetoTrace::from_trials("exhaustive", &all_trials);
+    let hv_true = true_trace.hypervolume(reference);
+    let hv_nsga2 = pareto.hypervolume(reference);
+
+    // the true front reuses the flags pareto_objectives already marked
+    // (one dominance source of truth across both CSVs); the trace above
+    // is only needed for the hypervolume
+    let true_front: std::collections::HashSet<usize> = exhaustive
+        .iter()
+        .filter(|r| r.on_frontier)
+        .map(|r| r.config)
+        .collect();
+    let overlap = true_front.intersection(&nsga_front).count();
+
+    let rows: Vec<ParetoSearchRow> = exhaustive
+        .iter()
+        .map(|r| ParetoSearchRow {
+            config: r.config,
+            label: r.label.clone(),
+            accuracy: r.accuracy,
+            latency_ms: r.latency_ms,
+            size_bytes: r.size_bytes,
+            on_true_front: true_front.contains(&r.config),
+            evaluated_by_nsga2: evaluated.contains(&r.config),
+            on_nsga2_front: nsga_front.contains(&r.config),
+        })
+        .collect();
+
+    let summary = ParetoSearchSummary {
+        exhaustive_evals: space.size(),
+        nsga2_evals: pareto.evaluations,
+        hv_true,
+        hv_nsga2,
+        hv_ratio: if hv_true > 0.0 { hv_nsga2 / hv_true } else { f64::NAN },
+        true_front_fraction: if true_front.is_empty() {
+            f64::NAN
+        } else {
+            overlap as f64 / true_front.len() as f64
+        },
+        rows,
+    };
+
+    let mut csv = Csv::new(&[
+        "config", "label", "top1", "latency_ms", "size_bytes", "on_true_front",
+        "evaluated_by_nsga2", "on_nsga2_front",
+    ]);
+    for r in &summary.rows {
+        csv.row(&[
+            r.config.to_string(),
+            r.label.clone(),
+            format!("{:.4}", r.accuracy),
+            format!("{:.4}", r.latency_ms),
+            format!("{:.0}", r.size_bytes),
+            r.on_true_front.to_string(),
+            r.evaluated_by_nsga2.to_string(),
+            r.on_nsga2_front.to_string(),
+        ]);
+    }
+    csv.write_file(&results_dir().join("pareto_search_synthetic.csv"))?;
+    Ok(summary)
 }
 
 /// Write a text report file alongside the CSVs.

@@ -18,7 +18,7 @@
 //! | Eq. 1 / Eq. 23 search spaces | the 96-element general and 12-element VTA spaces | [`quant::config`], [`quant::ConfigSpace`] |
 //! | §5.1 features | arch blocks `e` ++ config features `s` | [`zoo`], [`coordinator::features_for`] |
 //! | §5.2 XGB cost model + transfer | gradient-boosted trees over the trial database | [`xgb`], [`search::XgbSearch`] |
-//! | Algorithm 1 / Fig 5-6 | the five search drivers | [`search`] |
+//! | Algorithm 1 / Fig 5-6 | the five scalar search drivers + NSGA-II Pareto search | [`search`], [`search::ParetoSearch`] |
 //! | Fig 4 coordinator | artifact loading, sweeps, database `D`, objectives | [`coordinator`] |
 //! | §6.4 integer-only deployment | VTA simulator + cycle model | [`vta`] |
 //! | §6.5 latency | PJRT batch-1 wallclock | [`latency`], [`runtime`] |
@@ -42,7 +42,15 @@
 //!   also objective-agnostic: [`coordinator::objective`] scalarizes
 //!   (Top-1, modeled latency, serialized bytes) so every algorithm and
 //!   space tunes deployment trade-offs unchanged, with trials, traces,
-//!   and records carrying the per-component breakdown.
+//!   and records carrying the per-component breakdown. On top of the
+//!   scalarization sit hard deployment budgets
+//!   ([`coordinator::Budget`], epsilon-constraint: over-budget configs
+//!   are rejected from the static cost table before any accuracy
+//!   measurement) and a Pareto-front search
+//!   ([`search::ParetoSearch`], NSGA-II: non-dominated sorting +
+//!   crowding distance over the component vectors, returning the
+//!   recovered frontier as a [`search::ParetoTrace`]); rust/SEARCH.md
+//!   is the user-facing guide to all six algorithms.
 //! - L2 (python/compile/model.py): JAX forward graphs for the six CNN
 //!   models, fp32 + fake-quant parameterized variants, AOT-lowered to HLO
 //!   text artifacts at build time.

@@ -7,6 +7,7 @@
 //! quantune search    [--models mn,..] [--algo xgb_t] [--seed N] [--budget N]
 //!                    [--space general|vta|layerwise] [--layers K] [--bits 4,8,16]
 //!                    [--objective acc|lat|size|balanced] [--device a53|i7|2080ti]
+//!                    [--budget-lat-ms X] [--budget-bytes X]
 //! quantune quantize  [--models mn,..] [--config IDX]   # deploy report
 //! quantune vta       [--models mn,..]                  # integer-only path
 //! quantune latency   [--models mn,..] [--reps N]
@@ -35,6 +36,14 @@
 //! `search` falls back to the self-contained synthetic model, so the
 //! multi-objective path runs from a clean checkout.
 //!
+//! `--algo nsga2` searches for the whole Pareto *frontier* over
+//! (accuracy, latency, bytes) instead of one scalarized optimum, and
+//! prints the recovered front. `--budget-lat-ms` / `--budget-bytes` add
+//! hard deployment budgets (epsilon-constraint) to any algorithm:
+//! configs whose static cost model exceeds a budget are rejected before
+//! their accuracy is ever measured. See rust/SEARCH.md for the
+//! algorithm-by-algorithm guide.
+//!
 //! Everything the CLI does is also exposed as library API; the benches in
 //! rust/benches regenerate the paper's tables and figures.
 
@@ -43,7 +52,7 @@ use anyhow::{Context, Result};
 use quantune::calib::{calibrate, CalibBackend};
 use quantune::config::Cli;
 use quantune::coordinator::{
-    DeviceProfile, Evaluator, HloEvaluator, InterpEvaluator, ObjectiveWeights,
+    Budget, DeviceProfile, Evaluator, HloEvaluator, InterpEvaluator, ObjectiveWeights,
     OracleEvaluator, Quantune, ALGORITHMS, DEVICES, GENERAL_SPACE_TAG,
 };
 use quantune::quant::{
@@ -76,6 +85,8 @@ fn print_help() {
          space options:  --space general|vta|layerwise --layers K (layerwise cap)\n\
                          --bits 4,8,16 (layer-wise width menu; default 8 = {{int8,fp32}})\n\
          objectives:     --objective acc|lat|size|balanced --device a53|i7|2080ti\n\
+         constraints:    --budget-lat-ms X --budget-bytes X (reject before measuring)\n\
+         frontier:       --algo nsga2 (Pareto-front search; see rust/SEARCH.md)\n\
          env: QUANTUNE_THREADS=N sizes the worker pool (default: all cores)\n\
          see README.md and rust/BENCHMARKS.md for details"
     );
@@ -240,6 +251,10 @@ fn cmd_search(cli: &Cli) -> Result<()> {
         "--algo must be one of {ALGORITHMS:?}"
     );
     let weights = ObjectiveWeights::parse(&cli.opt_or("objective", "acc"))?;
+    let limits = Budget {
+        max_latency_ms: cli.opt_budget_f64("budget-lat-ms")?,
+        max_size_bytes: cli.opt_budget_f64("budget-bytes")?,
+    };
     let device = parse_device(cli)?;
     let seed = cli.opt_u64("seed", 7)?;
     // the synthetic fallback covers exactly the clean-checkout case: the
@@ -309,10 +324,38 @@ fn cmd_search(cli: &Cli) -> Result<()> {
         } else {
             algo.as_str()
         };
-        let trace = if weights.is_accuracy_only() {
+        let trace = if algo == "nsga2" {
+            // Pareto-front search: always objective-aware (the frontier
+            // is over the three components), budget-constrained when set
+            let (trace, pareto) =
+                q.search_pareto(model, &space, evaluator, budget, seed, weights, limits)?;
+            println!(
+                "{name}: nsga2 frontier -- {} point(s) from {} unique evaluations \
+                 (budget {budget} proposals, space {}, constraint {})",
+                pareto.front.len(),
+                pareto.evaluations,
+                space.tag(),
+                limits.slug(),
+            );
+            for t in &pareto.front {
+                let c = t.components.expect("pareto front trials carry components");
+                println!(
+                    "  {:>32} top1 {:>6.2}% | {:>8.3} ms | {:>8.1} KiB",
+                    space.describe(t.config)?,
+                    c.accuracy * 100.0,
+                    c.latency_ms,
+                    c.size_bytes / 1024.0,
+                );
+            }
+            trace
+        } else if weights.is_accuracy_only() && !limits.is_limited() {
             q.search(model, &space, algo, evaluator, budget, seed)?
         } else {
-            q.search_objective(model, &space, algo, evaluator, budget, seed, weights)?
+            // scalarized search; a set budget rides along as the
+            // epsilon-constraint even for the accuracy-only objective
+            q.search_objective(
+                model, &space, algo, evaluator, budget, seed, weights, limits,
+            )?
         };
         match trace.best_components {
             None => println!(

@@ -1,10 +1,13 @@
 //! Configuration search algorithms (paper §5-6.2, Fig 5/6).
 //!
-//! Five algorithms share one driver interface: given the history of
+//! Six algorithms share one driver interface: given the history of
 //! (config index, measured score) pairs, propose the next config to
 //! measure. `random`, `grid`, and `genetic` are the paper's baselines;
-//! `xgb` is the cost-model search (Algorithm 1), and `xgb_t` adds
-//! transfer learning from other models' trial databases.
+//! `xgb` is the cost-model search (Algorithm 1), `xgb_t` adds transfer
+//! learning from other models' trial databases, and `nsga2`
+//! ([`ParetoSearch`], module [`pareto`]) searches for the whole
+//! accuracy/latency/size Pareto frontier instead of a scalar optimum.
+//! rust/SEARCH.md is the user-facing guide to all six.
 //!
 //! The score every algorithm maximizes is whatever the measure closure
 //! returns: plain Top-1 accuracy for the paper's experiments, or a
@@ -18,6 +21,12 @@
 //! panicking in a comparator (see [`crate::util::nan_min_cmp`]).
 
 #![deny(clippy::unwrap_used)]
+
+pub mod pareto;
+
+pub use pareto::{
+    crowding_distance, dominates, non_dominated_sort, ParetoSearch, ParetoTrace,
+};
 
 use crate::quant::{ConfigSpace, SpaceRef};
 use crate::util::{nan_min_cmp, Pcg32};
@@ -166,6 +175,53 @@ impl SearchAlgo for GridSearch {
 // Genetic algorithm
 // ---------------------------------------------------------------------------
 
+/// Uniform random population of `pop_size` genomes of `bits` bits (the
+/// shared initializer of [`GeneticSearch`] and [`ParetoSearch`]).
+fn random_population(rng: &mut Pcg32, pop_size: usize, bits: usize) -> Vec<Vec<bool>> {
+    (0..pop_size)
+        .map(|_| (0..bits).map(|_| rng.chance(0.5)).collect())
+        .collect()
+}
+
+/// Breed `count` children from `parents` with the shared variation
+/// operators of [`GeneticSearch`] and [`ParetoSearch`]: two `select`
+/// draws per pair, single-point crossover (p=0.8), per-bit flip
+/// mutation (p=0.1), children pushed in pairs (the odd trailing child
+/// is mutated before being dropped, so the RNG stream does not depend
+/// on `count`'s parity).
+fn breed(
+    rng: &mut Pcg32,
+    parents: &[Vec<bool>],
+    bits: usize,
+    count: usize,
+    mut select: impl FnMut(&mut Pcg32) -> usize,
+) -> Vec<Vec<bool>> {
+    let mut next: Vec<Vec<bool>> = Vec::with_capacity(count);
+    while next.len() < count {
+        let pa = select(rng);
+        let pb = select(rng);
+        let (mut ca, mut cb) = (parents[pa].clone(), parents[pb].clone());
+        if bits > 1 && rng.chance(0.8) {
+            let cut = 1 + rng.below(bits - 1);
+            for i in cut..bits {
+                std::mem::swap(&mut ca[i], &mut cb[i]);
+            }
+        }
+        for g in [&mut ca, &mut cb] {
+            for bit in g.iter_mut() {
+                if rng.chance(0.1) {
+                    *bit = !*bit;
+                }
+            }
+        }
+        next.push(ca);
+        if next.len() < count {
+            next.push(cb);
+        }
+    }
+    next
+}
+
 /// Binary-encoded GA over a [`crate::quant::ConfigSpace`] genome (7 bits
 /// for the general QuantConfig space), mirroring the R `GA` package
 /// defaults the paper used: fitness = the measured score, tournament-of-2
@@ -189,9 +245,7 @@ impl GeneticSearch {
         let mut rng = Pcg32::new(seed, 17);
         let pop_size = 8;
         let bits = space.genome_bits().max(1);
-        let population: Vec<Vec<bool>> = (0..pop_size)
-            .map(|_| (0..bits).map(|_| rng.chance(0.5)).collect())
-            .collect();
+        let population = random_population(&mut rng, pop_size, bits);
         GeneticSearch {
             rng,
             space,
@@ -228,41 +282,24 @@ impl GeneticSearch {
             .max_by(|&a, &b| nan_min_cmp(&fit[a], &fit[b]))
             .expect("non-empty GA population");
         let mut next = vec![self.population[best].clone()];
-        while next.len() < self.pop_size {
-            let pa = self.tournament(&fit);
-            let pb = self.tournament(&fit);
-            let (mut ca, mut cb) =
-                (self.population[pa].clone(), self.population[pb].clone());
-            if self.bits > 1 && self.rng.chance(0.8) {
-                let cut = 1 + self.rng.below(self.bits - 1);
-                for i in cut..self.bits {
-                    std::mem::swap(&mut ca[i], &mut cb[i]);
+        // tournament-of-2 parent selection on the scalar fitness
+        next.extend(breed(
+            &mut self.rng,
+            &self.population,
+            self.bits,
+            self.pop_size - 1,
+            |rng| {
+                let a = rng.below(fit.len());
+                let b = rng.below(fit.len());
+                if fit[a] >= fit[b] {
+                    a
+                } else {
+                    b
                 }
-            }
-            for g in [&mut ca, &mut cb] {
-                for bit in g.iter_mut() {
-                    if self.rng.chance(0.1) {
-                        *bit = !*bit;
-                    }
-                }
-            }
-            next.push(ca);
-            if next.len() < self.pop_size {
-                next.push(cb);
-            }
-        }
+            },
+        ));
         self.population = next;
         self.pending = (0..self.pop_size).rev().collect();
-    }
-
-    fn tournament(&mut self, fit: &[f64]) -> usize {
-        let a = self.rng.below(fit.len());
-        let b = self.rng.below(fit.len());
-        if fit[a] >= fit[b] {
-            a
-        } else {
-            b
-        }
     }
 }
 
@@ -340,17 +377,19 @@ impl XgbSearch {
     pub fn fit_cost_model(&self, history: &[Trial]) -> Option<XgbModel> {
         let mut xs: Vec<Vec<f32>> = Vec::new();
         let mut ys: Vec<f32> = Vec::new();
-        // NaN rows would poison every gradient of the fit: skip them (the
-        // trial still counts against the budget, it just teaches nothing)
+        // non-finite rows would poison every gradient of the fit -- NaN
+        // from a poisoned measurement, -inf from a budget-rejected
+        // config (see coordinator::Budget): skip them (the trial still
+        // counts against the budget, it just teaches nothing)
         for r in &self.transfer {
-            if r.accuracy.is_nan() {
+            if !r.accuracy.is_finite() {
                 continue;
             }
             xs.push(r.features.clone());
             ys.push(r.accuracy);
         }
         for t in history {
-            if t.score.is_nan() {
+            if !t.score.is_finite() {
                 continue;
             }
             xs.push(self.space_features[t.config].clone());
@@ -435,7 +474,15 @@ pub struct SearchTrace {
 impl SearchTrace {
     /// First trial index (1-based) whose score is within `eps` of
     /// `target`. `None` if never reached.
+    ///
+    /// NaN contract: a NaN `target` is explicitly unreachable (`None`) --
+    /// there is no score "within eps of NaN" -- and NaN trial *scores*
+    /// never satisfy the threshold (every comparison against NaN is
+    /// false), so poisoned trials are skipped rather than matched.
     pub fn trials_to_reach(&self, target: f64, eps: f64) -> Option<usize> {
+        if target.is_nan() {
+            return None;
+        }
         self.trials
             .iter()
             .position(|t| t.score >= target - eps)
@@ -443,6 +490,10 @@ impl SearchTrace {
     }
 
     /// Best score after the first `n` trials.
+    ///
+    /// NaN contract: NaN scores are ignored ([`f64::max`] keeps the
+    /// other operand), so the result is the best *real* score in the
+    /// prefix -- and `-inf` when the prefix is empty or all-NaN.
     pub fn best_after(&self, n: usize) -> f64 {
         self.trials
             .iter()
@@ -678,6 +729,21 @@ mod tests {
     }
 
     #[test]
+    fn xgb_survives_neg_infinity_scores() {
+        // budget-rejected trials score -inf; an unfiltered -inf label
+        // would drive the fit's base score to -inf, every prediction to
+        // NaN, and the tie-break set empty (a below(0) panic)
+        let mut s = XgbSearch::new(features(96), 3);
+        let trace = run_search(&mut s, 40, |i| {
+            Ok(if i % 2 == 0 { f64::NEG_INFINITY } else { oracle(i) })
+        })
+        .unwrap();
+        assert_eq!(trace.trials.len(), 40);
+        assert!(trace.best_score.is_finite());
+        assert_eq!(trace.best_config % 2, 1, "-inf config won: {}", trace.best_config);
+    }
+
+    #[test]
     fn transfer_warm_start_proposes_good_first_config() {
         // transfer database from a "different model" with the same
         // structure: xgb_t's FIRST proposal should already be good
@@ -721,5 +787,30 @@ mod tests {
         assert_eq!(trace.trials_to_reach(0.9, 0.0), None);
         assert_eq!(trace.best_after(1), 0.2);
         assert_eq!(trace.best_after(3), 0.8);
+    }
+
+    #[test]
+    fn trace_metrics_nan_contract() {
+        let trace = SearchTrace {
+            algo: "x".into(),
+            trials: vec![
+                Trial::of(0, f64::NAN),
+                Trial::of(1, 0.6),
+                Trial::of(2, f64::NAN),
+            ],
+            best_score: 0.6,
+            best_config: 1,
+            best_components: None,
+        };
+        // a NaN target is unreachable by contract, even with a huge eps
+        assert_eq!(trace.trials_to_reach(f64::NAN, 0.0), None);
+        assert_eq!(trace.trials_to_reach(f64::NAN, f64::INFINITY), None);
+        // NaN scores never satisfy a real threshold; trial 2 (1-based)
+        // is the first real score that does
+        assert_eq!(trace.trials_to_reach(0.5, 0.0), Some(2));
+        // best_after skips NaN scores instead of propagating them
+        assert_eq!(trace.best_after(1), f64::NEG_INFINITY);
+        assert_eq!(trace.best_after(2), 0.6);
+        assert_eq!(trace.best_after(3), 0.6);
     }
 }

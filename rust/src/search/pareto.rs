@@ -1,0 +1,705 @@
+//! NSGA-II Pareto-front search over the three deployment objectives.
+//!
+//! [`ParetoSearch`] evolves any [`crate::quant::ConfigSpace`] genome --
+//! the same plumbing [`super::GeneticSearch`] uses -- but selects by
+//! *dominance* over the full [`Components`] vector (maximize accuracy,
+//! minimize modeled latency, minimize serialized bytes) instead of a
+//! scalarized score: fast non-dominated sorting ranks the population
+//! into fronts, and crowding distance spreads the survivors along each
+//! front (Deb et al., "A fast and elitist multiobjective genetic
+//! algorithm: NSGA-II", 2002). The paper's tuner scalarizes (PR 3);
+//! this module searches for the whole trade-off frontier in one run.
+//!
+//! NaN / infeasibility contract (constrained domination): a point whose
+//! accuracy is NaN -- a budget-rejected config that was never measured
+//! (see [`crate::coordinator::Budget`]) or a poisoned database hole --
+//! is dominated by every measured point and never enters a
+//! [`ParetoTrace`] front. NaN latency/size components order as +inf on
+//! their axis, mirroring [`crate::util::nan_min_cmp`]'s "NaN ranks
+//! worst" convention. All tie-breaks are by index, so the evolution is
+//! deterministic for a fixed seed at any evaluator thread count
+//! (rust/tests/parallel.rs enforces this end to end).
+
+use crate::quant::{ConfigSpace, SpaceRef};
+use crate::util::Pcg32;
+
+use super::{breed, random_population, Components, SearchAlgo, Trial};
+
+/// Canonical minimization triple of a [`Components`] point: negated
+/// accuracy, latency, bytes, with NaN mapped to +inf on every axis so
+/// comparisons are total.
+fn min_key(c: &Components) -> [f64; 3] {
+    let flip = |v: f64, neg: bool| {
+        if v.is_nan() {
+            f64::INFINITY
+        } else if neg {
+            -v
+        } else {
+            v
+        }
+    };
+    [
+        flip(c.accuracy, true),
+        flip(c.latency_ms, false),
+        flip(c.size_bytes, false),
+    ]
+}
+
+/// Does `a` Pareto-dominate `b`? `a` must be at least as good on all of
+/// (accuracy up, latency down, bytes down) and strictly better on one.
+///
+/// Constrained domination: a point with measured (non-NaN) accuracy
+/// dominates any point whose accuracy is NaN (budget-rejected before
+/// measurement, or a poisoned record), regardless of the cost axes --
+/// so infeasible points always sink to the last front. Two NaN-accuracy
+/// points never dominate each other.
+pub fn dominates(a: &Components, b: &Components) -> bool {
+    match (a.accuracy.is_nan(), b.accuracy.is_nan()) {
+        (false, true) => return true,
+        (true, _) => return false,
+        _ => {}
+    }
+    let (ka, kb) = (min_key(a), min_key(b));
+    ka.iter().zip(&kb).all(|(x, y)| x <= y) && ka.iter().zip(&kb).any(|(x, y)| x < y)
+}
+
+/// Fast non-dominated sorting: partition point indices into fronts,
+/// front 0 holding every non-dominated point, front 1 the points only
+/// dominated by front 0, and so on. Within a front, indices keep their
+/// input order (deterministic). Empty input gives no fronts.
+pub fn non_dominated_sort(pts: &[Components]) -> Vec<Vec<usize>> {
+    let n = pts.len();
+    let mut dominated: Vec<Vec<usize>> = vec![Vec::new(); n]; // i -> set i dominates
+    let mut count = vec![0usize; n]; // how many dominate i
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    // each unordered pair is compared once (dominance is asymmetric, so
+    // at most one direction holds)
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(&pts[i], &pts[j]) {
+                dominated[i].push(j);
+                count[j] += 1;
+            } else if dominates(&pts[j], &pts[i]) {
+                dominated[j].push(i);
+                count[i] += 1;
+            }
+        }
+    }
+    let mut current: Vec<usize> = (0..n).filter(|&i| count[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominated[i] {
+                count[j] -= 1;
+                if count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        next.sort_unstable(); // input order within the front
+        fronts.push(std::mem::replace(&mut current, next));
+    }
+    fronts
+}
+
+/// Crowding distance of each member of `front` (indices into `pts`),
+/// returned in `front` order: per axis, boundary points get +inf and
+/// interior points the normalized gap between their neighbours. Ties in
+/// the per-axis ordering break by position in `front`, so the result is
+/// deterministic under any input permutation of equal points.
+pub fn crowding_distance(pts: &[Components], front: &[usize]) -> Vec<f64> {
+    let m = front.len();
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    let mut dist = vec![0.0f64; m];
+    for axis in 0..3 {
+        let key = |w: usize| min_key(&pts[front[w]])[axis];
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| key(a).total_cmp(&key(b)).then(a.cmp(&b)));
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        let span = key(order[m - 1]) - key(order[0]);
+        if !span.is_finite() || span <= 0.0 {
+            continue;
+        }
+        for w in 1..m - 1 {
+            let gap = (key(order[w + 1]) - key(order[w - 1])) / span;
+            if gap.is_finite() {
+                dist[order[w]] += gap;
+            }
+        }
+    }
+    dist
+}
+
+/// Objective vector of one trial: its component breakdown when the
+/// measurement was multi-objective, else the scalar score standing in
+/// for accuracy with zero costs (so an accuracy-only run degrades to
+/// single-objective dominance = plain ranking).
+fn components_of(t: &Trial) -> Components {
+    t.components.unwrap_or(Components {
+        accuracy: t.score,
+        latency_ms: 0.0,
+        size_bytes: 0.0,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// ParetoTrace
+// ---------------------------------------------------------------------------
+
+/// The multi-objective view of a finished search: the non-dominated
+/// front over every *measured* trial (unique by config, NaN-accuracy
+/// points excluded), plus how the frontier grew while the search ran.
+/// Built by [`ParetoTrace::from_trials`], usually on the trials of the
+/// scalar [`super::SearchTrace`] the same run produced.
+#[derive(Clone, Debug)]
+pub struct ParetoTrace {
+    /// Name of the algorithm that ran ("nsga2" for [`ParetoSearch`]).
+    pub algo: String,
+    /// Non-dominated measured trials, in config-index order. Empty only
+    /// when every trial's accuracy was NaN.
+    pub front: Vec<Trial>,
+    /// Unique configs with a real (non-NaN-accuracy) measurement. This
+    /// -- not the trial count -- is the evaluation cost: memoized repeat
+    /// proposals are free, and budget-rejected proposals never reached
+    /// the evaluator at all (see
+    /// [`crate::coordinator::Budget`]), so neither is counted.
+    pub evaluations: usize,
+    /// Size of the running frontier after each trial, in trial order
+    /// (the convergence curve of the frontier search).
+    pub front_sizes: Vec<usize>,
+}
+
+impl ParetoTrace {
+    /// Compute the frontier view of a trial sequence. Later re-measures
+    /// of the same config replace earlier ones; trials whose accuracy is
+    /// NaN (budget-rejected or poisoned) can never enter the front and
+    /// are not counted as evaluations.
+    ///
+    /// The running front is maintained incrementally -- O(|front|) per
+    /// new point instead of a from-scratch O(k^2) recompute -- falling
+    /// back to a rebuild only when a config is re-measured with a
+    /// *different* value (a removal can resurrect previously-dominated
+    /// points, which the incremental form cannot see).
+    pub fn from_trials(algo: &str, trials: &[Trial]) -> ParetoTrace {
+        let mut seen: std::collections::BTreeMap<usize, Trial> = Default::default();
+        let mut front: Vec<Trial> = Vec::new();
+        let mut front_sizes = Vec::with_capacity(trials.len());
+        for t in trials {
+            match seen.insert(t.config, *t) {
+                None => front_insert(&mut front, t),
+                Some(old) if !same_measurement(&old, t) => {
+                    let unique: Vec<Trial> = seen.values().copied().collect();
+                    front = front_of(&unique);
+                }
+                Some(_) => {} // memoized repeat: front unchanged
+            }
+            front_sizes.push(front.len());
+        }
+        front.sort_by_key(|t| t.config);
+        let evaluations =
+            seen.values().filter(|t| !components_of(t).accuracy.is_nan()).count();
+        ParetoTrace { algo: algo.to_string(), front, evaluations, front_sizes }
+    }
+
+    /// Config indices of the front, ascending.
+    pub fn front_configs(&self) -> Vec<usize> {
+        self.front.iter().map(|t| t.config).collect()
+    }
+
+    /// Exact hypervolume of the front with respect to `reference` --
+    /// the volume of objective space the front dominates, bounded by
+    /// the reference point (a corner at least as bad as every point:
+    /// lower accuracy, higher latency, more bytes). Points not strictly
+    /// better than the reference on all three axes contribute nothing.
+    /// This is the standard frontier-recovery metric: a searched front
+    /// recovering `hv_searched / hv_true` of the exhaustive frontier's
+    /// hypervolume (see `experiments::pareto_search_synthetic`).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use quantune::search::{Components, ParetoTrace, Trial};
+    ///
+    /// let t = |config, acc, lat, bytes| Trial {
+    ///     config,
+    ///     score: acc,
+    ///     components: Some(Components {
+    ///         accuracy: acc,
+    ///         latency_ms: lat,
+    ///         size_bytes: bytes,
+    ///     }),
+    /// };
+    /// // configs 0 and 1 trade accuracy against cost; 2 is dominated
+    /// let trace = ParetoTrace::from_trials(
+    ///     "nsga2",
+    ///     &[t(0, 0.8, 2.0, 100.0), t(1, 0.6, 1.0, 50.0), t(2, 0.5, 3.0, 200.0)],
+    /// );
+    /// assert_eq!(trace.front_configs(), vec![0, 1]);
+    ///
+    /// let reference = Components { accuracy: 0.0, latency_ms: 4.0, size_bytes: 400.0 };
+    /// let hv = trace.hypervolume(reference);
+    /// // dropping a frontier point can only shrink the hypervolume
+    /// let smaller = ParetoTrace::from_trials("nsga2", &[t(1, 0.6, 1.0, 50.0)]);
+    /// assert!(smaller.hypervolume(reference) < hv);
+    /// // a reference the front does not strictly beat contributes nothing
+    /// let inside = Components { accuracy: 0.9, latency_ms: 0.5, size_bytes: 10.0 };
+    /// assert_eq!(trace.hypervolume(inside), 0.0);
+    /// ```
+    pub fn hypervolume(&self, reference: Components) -> f64 {
+        let pts: Vec<[f64; 3]> =
+            self.front.iter().map(|t| min_key(&components_of(t))).collect();
+        hypervolume3(&pts, min_key(&reference))
+    }
+}
+
+/// Did two trials of the same config record bit-identical measurements?
+/// (Memoized re-proposals do; a genuinely re-measured config may not.)
+fn same_measurement(a: &Trial, b: &Trial) -> bool {
+    let comp_bits = |c: Components| {
+        (c.accuracy.to_bits(), c.latency_ms.to_bits(), c.size_bytes.to_bits())
+    };
+    a.score.to_bits() == b.score.to_bits()
+        && comp_bits(components_of(a)) == comp_bits(components_of(b))
+}
+
+/// Insert one measured point into an incrementally-maintained front:
+/// NaN accuracy never enters; a point dominated by a front member is
+/// discarded (transitivity: a dominator outside the front would itself
+/// be dominated by a member, which would then dominate the point); an
+/// entering point evicts the members it dominates.
+fn front_insert(front: &mut Vec<Trial>, t: &Trial) {
+    let p = components_of(t);
+    if p.accuracy.is_nan() {
+        return;
+    }
+    if front.iter().any(|f| dominates(&components_of(f), &p)) {
+        return;
+    }
+    front.retain(|f| !dominates(&p, &components_of(f)));
+    front.push(*t);
+}
+
+/// The non-dominated subset of `trials` (each config assumed unique),
+/// NaN-accuracy points excluded, in input order.
+fn front_of(trials: &[Trial]) -> Vec<Trial> {
+    let pts: Vec<Components> = trials.iter().map(components_of).collect();
+    let mut front = Vec::new();
+    for (i, t) in trials.iter().enumerate() {
+        if pts[i].accuracy.is_nan() {
+            continue;
+        }
+        if !pts.iter().any(|q| dominates(q, &pts[i])) {
+            front.push(*t);
+        }
+    }
+    front
+}
+
+/// Exact 3D hypervolume of minimization points w.r.t. reference `r`:
+/// sweep the first axis, integrating the 2D staircase area of the
+/// prefix over each slab. O(n^2 log n) -- plenty for config spaces.
+fn hypervolume3(pts: &[[f64; 3]], r: [f64; 3]) -> f64 {
+    let mut pts: Vec<[f64; 3]> = pts
+        .iter()
+        .copied()
+        .filter(|p| p[0] < r[0] && p[1] < r[1] && p[2] < r[2])
+        .collect();
+    pts.sort_by(|a, b| {
+        a[0].total_cmp(&b[0]).then(a[1].total_cmp(&b[1])).then(a[2].total_cmp(&b[2]))
+    });
+    let mut hv = 0.0;
+    for i in 0..pts.len() {
+        let z0 = pts[i][0];
+        let z1 = if i + 1 < pts.len() { pts[i + 1][0] } else { r[0] };
+        if z1 <= z0 {
+            continue; // zero-width slab (tied first axis)
+        }
+        hv += staircase_area(&pts[..=i], r[1], r[2]) * (z1 - z0);
+    }
+    hv
+}
+
+/// Area of the union of boxes `[p1, r1] x [p2, r2]` over the (axis 1,
+/// axis 2) projections of `pts`.
+fn staircase_area(pts: &[[f64; 3]], r1: f64, r2: f64) -> f64 {
+    let mut ps: Vec<(f64, f64)> = pts.iter().map(|p| (p[1], p[2])).collect();
+    ps.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    let mut area = 0.0;
+    let mut min2 = f64::INFINITY;
+    for i in 0..ps.len() {
+        let x0 = ps[i].0;
+        let x1 = if i + 1 < ps.len() { ps[i + 1].0 } else { r1 };
+        min2 = min2.min(ps[i].1);
+        if x1 > x0 {
+            area += (x1 - x0) * (r2 - min2);
+        }
+    }
+    area
+}
+
+// ---------------------------------------------------------------------------
+// ParetoSearch (NSGA-II)
+// ---------------------------------------------------------------------------
+
+/// NSGA-II over a [`crate::quant::ConfigSpace`] genome: a (mu + lambda)
+/// generational loop where survivors are selected by (non-domination
+/// rank, crowding distance) over the measured [`Components`] vectors,
+/// and offspring come from crowded binary tournaments with the same
+/// single-point crossover (p=0.8) and bit-flip mutation (p=0.1) the
+/// scalar GA uses. Drive it through [`super::run_search`] with a
+/// measure closure that returns `(score, Components)` -- e.g.
+/// [`crate::coordinator::ObjectiveEvaluator::measure_scored`] -- then
+/// build the frontier view with [`ParetoTrace::from_trials`] (or use
+/// `Quantune::search_pareto`, which does both).
+pub struct ParetoSearch {
+    rng: Pcg32,
+    space: SpaceRef,
+    bits: usize,
+    pop_size: usize,
+    /// survivors of the last environmental selection
+    parents: Vec<Vec<bool>>,
+    /// generation currently being proposed / measured
+    offspring: Vec<Vec<bool>>,
+    pending: Vec<usize>, // offspring not yet proposed this generation
+}
+
+impl ParetoSearch {
+    /// NSGA-II over `space`'s genome. Population size 8 (matching
+    /// [`super::GeneticSearch`]), so a budget of `8 * g` proposals runs
+    /// `g` generations.
+    pub fn new(space: SpaceRef, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 29);
+        let pop_size = 8;
+        let bits = space.genome_bits().max(1);
+        let offspring = random_population(&mut rng, pop_size, bits);
+        ParetoSearch {
+            rng,
+            space,
+            bits,
+            pop_size,
+            parents: Vec::new(),
+            offspring,
+            pending: (0..pop_size).rev().collect(),
+        }
+    }
+
+    /// Objective vector of a genome: the latest measurement of its
+    /// decoded config, or an all-worst point (NaN accuracy, +inf costs)
+    /// when it was never measured -- so unmeasured genomes can never
+    /// displace measured ones in selection.
+    fn objective_of(space: &dyn ConfigSpace, genome: &[bool], history: &[Trial]) -> Components {
+        let idx = space.decode(genome);
+        history
+            .iter()
+            .rev()
+            .find(|t| t.config == idx)
+            .map(components_of)
+            .unwrap_or(Components {
+                accuracy: f64::NAN,
+                latency_ms: f64::INFINITY,
+                size_bytes: f64::INFINITY,
+            })
+    }
+
+    /// Environmental selection + variation: (parents ++ offspring) are
+    /// ranked by non-dominated sorting, fronts fill the next parent set
+    /// in order, the split front is trimmed by descending crowding
+    /// distance (index tie-break), and crowded binary tournaments breed
+    /// the next offspring generation.
+    fn evolve(&mut self, history: &[Trial]) {
+        let mut pool = std::mem::take(&mut self.parents);
+        pool.append(&mut self.offspring);
+        let pts: Vec<Components> = pool
+            .iter()
+            .map(|g| Self::objective_of(self.space.as_ref(), g, history))
+            .collect();
+        let fronts = non_dominated_sort(&pts);
+        let mut rank = vec![0usize; pool.len()];
+        let mut crowd = vec![0.0f64; pool.len()];
+        for (r, front) in fronts.iter().enumerate() {
+            for (&i, d) in front.iter().zip(crowding_distance(&pts, front)) {
+                rank[i] = r;
+                crowd[i] = d;
+            }
+        }
+        let mut survivors: Vec<usize> = Vec::with_capacity(self.pop_size);
+        for front in &fronts {
+            if survivors.len() + front.len() <= self.pop_size {
+                survivors.extend(front.iter().copied());
+            } else {
+                let mut rest = front.clone();
+                rest.sort_by(|&a, &b| crowd[b].total_cmp(&crowd[a]).then(a.cmp(&b)));
+                rest.truncate(self.pop_size - survivors.len());
+                survivors.extend(rest);
+            }
+            if survivors.len() == self.pop_size {
+                break;
+            }
+        }
+        let sel: Vec<(usize, f64)> =
+            survivors.iter().map(|&i| (rank[i], crowd[i])).collect();
+        self.parents = survivors.iter().map(|&i| pool[i].clone()).collect();
+        // crowded binary tournament: lower rank wins; equal rank prefers
+        // the larger crowding distance; full tie keeps the first draw
+        self.offspring = breed(
+            &mut self.rng,
+            &self.parents,
+            self.bits,
+            self.pop_size,
+            |rng| {
+                let a = rng.below(sel.len());
+                let b = rng.below(sel.len());
+                let a_wins = sel[a].0 < sel[b].0
+                    || (sel[a].0 == sel[b].0 && sel[a].1 >= sel[b].1);
+                if a_wins {
+                    a
+                } else {
+                    b
+                }
+            },
+        );
+        self.pending = (0..self.pop_size).rev().collect();
+    }
+}
+
+impl SearchAlgo for ParetoSearch {
+    fn name(&self) -> &'static str {
+        "nsga2"
+    }
+
+    fn propose(&mut self, history: &[Trial]) -> Option<usize> {
+        if self.pending.is_empty() {
+            self.evolve(history);
+        }
+        let member = self.pending.pop()?;
+        Some(self.space.decode(&self.offspring[member]))
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::super::run_search;
+    use super::*;
+    use crate::quant::general_space;
+
+    fn c(acc: f64, lat: f64, size: f64) -> Components {
+        Components { accuracy: acc, latency_ms: lat, size_bytes: size }
+    }
+
+    #[test]
+    fn dominance_is_strict_and_nan_safe() {
+        assert!(dominates(&c(0.9, 1.0, 10.0), &c(0.8, 1.0, 10.0)));
+        assert!(dominates(&c(0.9, 1.0, 10.0), &c(0.9, 2.0, 10.0)));
+        // equal points never dominate each other
+        assert!(!dominates(&c(0.9, 1.0, 10.0), &c(0.9, 1.0, 10.0)));
+        // trade-offs are incomparable
+        assert!(!dominates(&c(0.9, 2.0, 10.0), &c(0.8, 1.0, 10.0)));
+        assert!(!dominates(&c(0.8, 1.0, 10.0), &c(0.9, 2.0, 10.0)));
+        // a measured point dominates any NaN-accuracy point, even one
+        // with better costs; never the other way around
+        assert!(dominates(&c(0.1, 9.0, 99.0), &c(f64::NAN, 0.0, 0.0)));
+        assert!(!dominates(&c(f64::NAN, 0.0, 0.0), &c(0.1, 9.0, 99.0)));
+        assert!(!dominates(&c(f64::NAN, 0.0, 0.0), &c(f64::NAN, 1.0, 1.0)));
+        // NaN costs order as +inf on their axis
+        assert!(dominates(&c(0.9, 1.0, 10.0), &c(0.9, f64::NAN, 10.0)));
+    }
+
+    #[test]
+    fn non_dominated_sort_layers_fronts() {
+        let pts = vec![
+            c(0.9, 1.0, 10.0), // front 0
+            c(0.5, 0.5, 5.0),  // front 0 (cheaper)
+            c(0.8, 2.0, 20.0), // front 1: dominated by 0 only
+            c(0.4, 3.0, 30.0), // front 2
+            c(f64::NAN, 0.1, 1.0), // last front (infeasible)
+        ];
+        let fronts = non_dominated_sort(&pts);
+        assert_eq!(fronts, vec![vec![0, 1], vec![2], vec![3], vec![4]]);
+        // every index appears exactly once
+        let mut all: Vec<usize> = fronts.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..pts.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn crowding_rewards_boundary_and_spread() {
+        // four points on a line: boundaries get +inf, the middle pair
+        // finite positive distances
+        let pts = vec![
+            c(0.9, 1.0, 10.0),
+            c(0.7, 0.8, 8.0),
+            c(0.5, 0.6, 6.0),
+            c(0.1, 0.2, 2.0),
+        ];
+        let front: Vec<usize> = (0..4).collect();
+        let d = crowding_distance(&pts, &front);
+        assert!(d[0].is_infinite() && d[3].is_infinite());
+        assert!(d[1].is_finite() && d[1] > 0.0);
+        assert!(d[2].is_finite() && d[2] > 0.0);
+        // the point next to the big gap (0.5 -> 0.1) is less crowded
+        assert!(d[2] > d[1], "{d:?}");
+        // tiny fronts are all boundary
+        assert_eq!(crowding_distance(&pts, &[0, 1]), vec![f64::INFINITY; 2]);
+    }
+
+    #[test]
+    fn crowding_is_deterministic_under_duplicate_points() {
+        let pts = vec![c(0.5, 1.0, 10.0); 5];
+        let front: Vec<usize> = (0..5).collect();
+        let a = crowding_distance(&pts, &front);
+        let b = crowding_distance(&pts, &front);
+        assert_eq!(a, b);
+        // all gaps are zero-span: only the per-axis boundaries get +inf,
+        // and they are the same members every time (index tie-break)
+        assert!(a[0].is_infinite() && a[4].is_infinite());
+    }
+
+    #[test]
+    fn hypervolume_of_known_boxes() {
+        let t = |config, acc, lat, size| Trial {
+            config,
+            score: acc,
+            components: Some(c(acc, lat, size)),
+        };
+        // one point: volume is the product of its gaps to the reference
+        let one = ParetoTrace::from_trials("nsga2", &[t(0, 0.5, 1.0, 10.0)]);
+        let r = c(0.0, 2.0, 20.0);
+        assert!((one.hypervolume(r) - 0.5 * 1.0 * 10.0).abs() < 1e-12);
+        // two incomparable points: inclusion-exclusion by hand.
+        // a=(0.5,1,10), b=(0.8,1.5,15) vs r=(0,2,20):
+        //   vol(a)=0.5*1*10=5, vol(b)=0.8*0.5*5=2,
+        //   overlap=(min .5,.8)*(2-1.5)*(20-15)=0.5*0.5*5=1.25
+        let two = ParetoTrace::from_trials(
+            "nsga2",
+            &[t(0, 0.5, 1.0, 10.0), t(1, 0.8, 1.5, 15.0)],
+        );
+        assert!((two.hypervolume(r) - (5.0 + 2.0 - 1.25)).abs() < 1e-12);
+        // dominated and NaN points add nothing / are excluded
+        let noisy = ParetoTrace::from_trials(
+            "nsga2",
+            &[
+                t(0, 0.5, 1.0, 10.0),
+                t(1, 0.8, 1.5, 15.0),
+                t(2, 0.4, 1.8, 18.0),            // dominated by both
+                t(3, f64::NAN, 0.0, 0.0),        // infeasible
+            ],
+        );
+        assert_eq!(noisy.front_configs(), vec![0, 1]);
+        assert!((noisy.hypervolume(r) - two.hypervolume(r)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_tracks_front_growth_and_unique_evaluations() {
+        let t = |config, acc, lat, size| Trial {
+            config,
+            score: acc,
+            components: Some(c(acc, lat, size)),
+        };
+        let rejected = |config| Trial {
+            config,
+            score: f64::NEG_INFINITY,
+            components: Some(c(f64::NAN, 5.0, 50.0)),
+        };
+        let trials = [
+            t(3, 0.5, 1.0, 10.0),
+            t(7, 0.8, 2.0, 20.0),
+            t(3, 0.5, 1.0, 10.0), // memoized repeat
+            rejected(5),          // over budget: never measured
+            t(1, 0.4, 3.0, 30.0), // dominated
+        ];
+        let trace = ParetoTrace::from_trials("nsga2", &trials);
+        assert_eq!(
+            trace.evaluations, 3,
+            "repeats are free and budget rejections are never measured"
+        );
+        assert_eq!(trace.front_sizes, vec![1, 2, 2, 2, 2]);
+        assert_eq!(trace.front_configs(), vec![3, 7]);
+    }
+
+    #[test]
+    fn re_measured_config_rebuilds_the_front() {
+        let t = |config, acc, lat, size| Trial {
+            config,
+            score: acc,
+            components: Some(c(acc, lat, size)),
+        };
+        // config 2 first dominates config 0; its re-measure drops below,
+        // which must resurrect config 0 onto the front
+        let trials = [
+            t(0, 0.5, 1.0, 10.0),
+            t(2, 0.6, 1.0, 10.0),
+            t(2, 0.3, 2.0, 20.0),
+        ];
+        let trace = ParetoTrace::from_trials("nsga2", &trials);
+        assert_eq!(trace.front_sizes, vec![1, 1, 1]);
+        assert_eq!(trace.front_configs(), vec![0]);
+        assert_eq!(trace.evaluations, 2);
+    }
+
+    #[test]
+    fn nsga2_front_members_are_never_dominated_by_any_trial() {
+        // synthetic 3-objective landscape over the general space with a
+        // genuine trade-off: accuracy and latency pull opposite ways
+        let measure = |i: usize| {
+            let acc = 0.3 + 0.7 * ((i % 31) as f64 / 31.0);
+            let lat = 1.0 + 9.0 * acc * acc + 0.05 * ((i % 7) as f64);
+            let size = 100.0 + ((i * 13) % 97) as f64;
+            (acc - 0.01 * lat, c(acc, lat, size))
+        };
+        let mut s = ParetoSearch::new(general_space(), 5);
+        let trace = run_search(&mut s, 48, |i| Ok(measure(i))).unwrap();
+        let pareto = ParetoTrace::from_trials("nsga2", &trace.trials);
+        assert!(!pareto.front.is_empty());
+        for f in &pareto.front {
+            let fc = f.components.unwrap();
+            for t in &trace.trials {
+                let tc = t.components.unwrap();
+                assert!(
+                    !dominates(&tc, &fc),
+                    "front config {} dominated by trial config {}",
+                    f.config,
+                    t.config
+                );
+            }
+        }
+        // the running frontier size is monotone in coverage quality but
+        // never exceeds the number of unique configs seen
+        assert!(pareto.front_sizes.iter().all(|&s| s >= 1));
+        assert!(pareto.evaluations <= trace.trials.len());
+    }
+
+    #[test]
+    fn nsga2_is_deterministic_for_a_seed() {
+        let measure = |i: usize| {
+            let acc = (i % 17) as f64 / 17.0;
+            (acc, c(acc, 1.0 + (i % 5) as f64, 10.0 + (i % 3) as f64))
+        };
+        let run = || {
+            let mut s = ParetoSearch::new(general_space(), 11);
+            run_search(&mut s, 40, |i| Ok(measure(i))).unwrap()
+        };
+        let (a, b) = (run(), run());
+        let cfg = |t: &super::super::SearchTrace| {
+            t.trials.iter().map(|x| x.config).collect::<Vec<_>>()
+        };
+        assert_eq!(cfg(&a), cfg(&b));
+    }
+
+    #[test]
+    fn nsga2_survives_all_nan_measurements() {
+        let mut s = ParetoSearch::new(general_space(), 3);
+        let trace = run_search(&mut s, 24, |_| {
+            Ok((f64::NAN, c(f64::NAN, 1.0, 1.0)))
+        })
+        .unwrap();
+        assert_eq!(trace.trials.len(), 24);
+        let pareto = ParetoTrace::from_trials("nsga2", &trace.trials);
+        assert!(pareto.front.is_empty(), "NaN accuracy never enters the front");
+        assert!(pareto.front_sizes.iter().all(|&s| s == 0));
+        assert_eq!(pareto.evaluations, 0, "nothing real was ever measured");
+    }
+}

@@ -4,8 +4,9 @@
 //!   threads, including ragged shapes (rows < threads, empty operands);
 //! - the batch-parallel `InterpEvaluator` measures bit-identical Top-1
 //!   at every thread count, including an empty eval split;
-//! - all five search algorithms produce byte-identical `SearchTrace`s
-//!   for the same seed at 1 vs 8 worker threads.
+//! - all six search algorithms (including the NSGA-II Pareto search and
+//!   its `ParetoTrace` frontier view) produce byte-identical traces for
+//!   the same seed at 1 vs 8 worker threads.
 //!
 //! Everything runs on synthetic models/datasets (no artifacts needed),
 //! so this suite is always active.
@@ -225,7 +226,7 @@ fn sweep_parallel_non_general_space_matches_serial() {
 
 /// Identical seed => byte-identical SearchTrace at QUANTUNE_THREADS=1 vs
 /// 8 (here pinned per-evaluator rather than via the env so the test is
-/// immune to process-global races). Covers all five algorithms,
+/// immune to process-global races). Covers all six algorithms,
 /// measuring through the batch-parallel InterpEvaluator.
 #[test]
 fn search_traces_identical_across_thread_counts() {
@@ -268,6 +269,70 @@ fn search_traces_identical_across_thread_counts() {
     }
 }
 
+/// Pareto-front determinism: `search_pareto` must reproduce a
+/// byte-identical scalar SearchTrace AND an identical ParetoTrace --
+/// front configs, unique-evaluation count, running frontier sizes, and
+/// hypervolume bits -- at 1/2/4/8 evaluator threads, for both a
+/// device-priced space and the cycle-priced VTA space.
+#[test]
+fn pareto_trace_identical_across_thread_counts() {
+    let model = synthetic_model(8, 4, 4, 3).unwrap();
+    let calib = synthetic_dataset(32, 8, 8, 4, 4, 5);
+    let eval = synthetic_dataset(96, 8, 8, 4, 4, 6);
+    let q = Quantune {
+        artifacts: std::path::PathBuf::from("."),
+        calib_pool: calib.clone(),
+        eval: eval.clone(),
+        db: coordinator::Database::in_memory(),
+        seed: 1,
+        device: coordinator::DEVICES[1],
+    };
+    let weights = ObjectiveWeights::parse("balanced").unwrap();
+    let seed = 20220205u64;
+    let reference = quantune::search::Components {
+        accuracy: 0.0,
+        latency_ms: 1e6,
+        size_bytes: 1e12,
+    };
+    for space in [general_space(), vta_space()] {
+        let run_at = |threads: usize| {
+            let mut ev = InterpEvaluator::new(&model, &calib, &eval, seed)
+                .with_threads(threads)
+                .with_space(space.clone());
+            q.search_pareto(
+                &model,
+                &space,
+                &mut ev,
+                16,
+                seed,
+                weights,
+                coordinator::Budget::unlimited(),
+            )
+            .unwrap()
+        };
+        let (base_trace, base_pareto) = run_at(1);
+        assert!(!base_pareto.front.is_empty());
+        for threads in [2usize, 4, 8] {
+            let (t, p) = run_at(threads);
+            assert_eq!(
+                trace_bytes(&base_trace),
+                trace_bytes(&t),
+                "{} nsga2: scalar trace diverged at {threads} threads",
+                space.tag()
+            );
+            assert_eq!(base_pareto.front_configs(), p.front_configs());
+            assert_eq!(base_pareto.evaluations, p.evaluations);
+            assert_eq!(base_pareto.front_sizes, p.front_sizes);
+            assert_eq!(
+                base_pareto.hypervolume(reference).to_bits(),
+                p.hypervolume(reference).to_bits(),
+                "{} nsga2: hypervolume diverged at {threads} threads",
+                space.tag()
+            );
+        }
+    }
+}
+
 /// Multi-objective determinism: the same (seed, weights, device) must
 /// reproduce a byte-identical SearchTrace -- scores AND per-component
 /// breakdowns -- at 1/2/4/8 evaluator threads, for every algorithm and
@@ -293,8 +358,17 @@ fn objective_search_traces_identical_across_thread_counts() {
                 let mut ev = InterpEvaluator::new(&model, &calib, &eval, seed)
                     .with_threads(threads)
                     .with_space(space.clone());
-                q.search_objective(&model, &space, algo, &mut ev, 6, seed, weights)
-                    .unwrap()
+                q.search_objective(
+                    &model,
+                    &space,
+                    algo,
+                    &mut ev,
+                    6,
+                    seed,
+                    weights,
+                    coordinator::Budget::unlimited(),
+                )
+                .unwrap()
             };
             let base = run_at(1);
             assert!(

@@ -11,7 +11,9 @@ use quantune::quant::{
     VtaConfig,
 };
 use quantune::search::{
-    run_search, GeneticSearch, GridSearch, RandomSearch, SearchAlgo, Trial, XgbSearch,
+    crowding_distance, dominates, non_dominated_sort, run_search, Components,
+    GeneticSearch, GridSearch, ParetoSearch, ParetoTrace, RandomSearch, SearchAlgo,
+    Trial, XgbSearch,
 };
 use quantune::util::{Json, Pcg32, Pool};
 use quantune::vta::rshift_round;
@@ -501,4 +503,155 @@ fn prop_calib_count_monotone() {
     }
     assert_eq!(Clipping::Max, Clipping::Max);
     assert_ne!(Scheme::Pow2, Scheme::Symmetric);
+}
+
+// ---------------------------------------------------------------------------
+// Pareto-front machinery (NSGA-II)
+// ---------------------------------------------------------------------------
+
+/// Random objective vector; `nan_p` is the chance of poisoning each
+/// component with NaN (NaN accuracy models a budget-rejected config).
+fn random_components(rng: &mut Pcg32, nan_p: f64) -> Components {
+    let v = |rng: &mut Pcg32, lo: f32, hi: f32| {
+        if rng.chance(nan_p) {
+            f64::NAN
+        } else {
+            rng.range_f32(lo, hi) as f64
+        }
+    };
+    Components {
+        accuracy: v(rng, 0.0, 1.0),
+        latency_ms: v(rng, 0.1, 20.0),
+        size_bytes: v(rng, 100.0, 10_000.0),
+    }
+}
+
+#[test]
+fn prop_non_dominated_sort_partitions_and_front0_is_undominated() {
+    props(120, |rng| {
+        let n = 1 + rng.below(24);
+        let pts: Vec<Components> =
+            (0..n).map(|_| random_components(rng, 0.15)).collect();
+        let fronts = non_dominated_sort(&pts);
+        // partition: every index appears exactly once
+        let mut all: Vec<usize> = fronts.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+        // no front-0 member is dominated by ANY population member
+        for &i in &fronts[0] {
+            for (j, q) in pts.iter().enumerate() {
+                assert!(
+                    i == j || !dominates(q, &pts[i]),
+                    "front-0 point {i} dominated by {j}"
+                );
+            }
+        }
+        // layering: every later-front member is dominated by someone in
+        // the previous front
+        for k in 1..fronts.len() {
+            for &i in &fronts[k] {
+                assert!(
+                    fronts[k - 1].iter().any(|&j| dominates(&pts[j], &pts[i])),
+                    "front-{k} point {i} not dominated by front {}",
+                    k - 1
+                );
+            }
+        }
+        // a NaN-accuracy point never shares a front with a measured one
+        // unless its whole front is NaN (measured points dominate NaN)
+        for front in &fronts {
+            let nan = front.iter().filter(|&&i| pts[i].accuracy.is_nan()).count();
+            assert!(
+                nan == 0 || nan == front.len(),
+                "mixed NaN/measured front: {front:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_crowding_distance_deterministic_nonnegative_boundaries_inf() {
+    props(120, |rng| {
+        let n = 1 + rng.below(16);
+        let pts: Vec<Components> =
+            (0..n).map(|_| random_components(rng, 0.1)).collect();
+        let fronts = non_dominated_sort(&pts);
+        for front in &fronts {
+            let d1 = crowding_distance(&pts, front);
+            let d2 = crowding_distance(&pts, front);
+            assert_eq!(d1, d2, "crowding must be deterministic (tie-break by index)");
+            assert_eq!(d1.len(), front.len());
+            assert!(d1.iter().all(|&x| x >= 0.0), "{d1:?}");
+            if front.len() <= 2 {
+                assert!(d1.iter().all(|x| x.is_infinite()));
+            } else {
+                // at least the two per-axis boundary members are infinite
+                assert!(d1.iter().filter(|x| x.is_infinite()).count() >= 2, "{d1:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pareto_trace_front_never_dominated_and_hv_monotone() {
+    props(60, |rng| {
+        let n = 1 + rng.below(20);
+        let trials: Vec<Trial> = (0..n)
+            .map(|i| {
+                let c = random_components(rng, 0.1);
+                Trial { config: i, score: c.accuracy, components: Some(c) }
+            })
+            .collect();
+        let trace = ParetoTrace::from_trials("nsga2", &trials);
+        for f in &trace.front {
+            let fc = f.components.unwrap();
+            assert!(!fc.accuracy.is_nan(), "NaN accuracy entered the front");
+            for t in &trials {
+                assert!(!dominates(&t.components.unwrap(), &fc));
+            }
+        }
+        // hypervolume is monotone under adding points
+        let reference =
+            Components { accuracy: -0.1, latency_ms: 25.0, size_bytes: 20_000.0 };
+        let half = ParetoTrace::from_trials("nsga2", &trials[..n.div_ceil(2)]);
+        // relative slack: hypervolumes reach ~5e5 here, where absolute
+        // 1e-9 leaves no room for summation rounding between the two
+        // independently-computed fronts
+        let full_hv = trace.hypervolume(reference);
+        assert!(
+            half.hypervolume(reference) <= full_hv + 1e-9 * full_hv.max(1.0),
+            "adding points must not shrink the hypervolume"
+        );
+    });
+}
+
+#[test]
+fn prop_nsga2_proposals_always_in_space_and_deterministic() {
+    for space in [general_space(), vta_space()] {
+        props(12, |rng| {
+            let seed = rng.next_u64();
+            let run = || {
+                let mut s = ParetoSearch::new(space.clone(), seed);
+                run_search(&mut s, 30, |i| {
+                    assert!(i < space.size(), "nsga2 proposed {i} outside the space");
+                    let acc = (i % 13) as f64 / 13.0;
+                    Ok((
+                        acc,
+                        Components {
+                            accuracy: acc,
+                            latency_ms: 1.0 + (i % 5) as f64,
+                            size_bytes: 100.0 + (i % 7) as f64,
+                        },
+                    ))
+                })
+                .unwrap()
+            };
+            let (a, b) = (run(), run());
+            let cfgs =
+                |t: &quantune::search::SearchTrace| -> Vec<usize> {
+                    t.trials.iter().map(|x| x.config).collect()
+                };
+            assert_eq!(cfgs(&a), cfgs(&b), "same seed must replay identically");
+        });
+    }
 }

@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the repo's cross-linked docs.
+
+Verifies every relative markdown link `[text](target)` in the checked
+files points at a file that exists (anchors `#...` are stripped; http(s)
+and mailto links are skipped -- the CI runner is offline), and that
+in-page anchors into other checked markdown files match a real heading.
+
+Usage: python3 tools/check_links.py [file.md ...]
+Defaults to the repo's cross-linked doc set when no files are given.
+Exits non-zero listing every broken link.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DEFAULT_DOCS = [
+    "README.md",
+    "ROADMAP.md",
+    "rust/ARCHITECTURE.md",
+    "rust/BENCHMARKS.md",
+    "rust/SEARCH.md",
+]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def link_target(raw: str) -> str:
+    """The path part of a link target: strips an optional quoted title
+    (`[x](file.md "title")`) and an angle-bracket wrapper
+    (`[x](<path with spaces>)`)."""
+    raw = raw.strip()
+    if raw.startswith("<") and ">" in raw:
+        return raw[1 : raw.index(">")]
+    return raw.split()[0] if raw.split() else raw
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug of a heading."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\- ]", "", slug)  # drop punctuation (&, :, ...)
+    return slug.replace(" ", "-")
+
+
+def strip_fences(text: str) -> str:
+    """Drop fenced code blocks: a `# comment` inside a ```bash fence is
+    not a heading, and an example link inside a fence is not a link."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        if not fenced:
+            out.append(line)
+    return "\n".join(out)
+
+
+def anchors_of(path: Path) -> set:
+    """Anchor slugs of a file's headings, with GitHub's duplicate
+    suffixes: the second 'Examples' heading is addressable as
+    #examples-1, and only the first as #examples."""
+    counts, anchors = {}, set()
+    for h in HEADING_RE.findall(strip_fences(path.read_text())):
+        slug = slugify(h)
+        n = counts.get(slug, 0)
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+        counts[slug] = n + 1
+    return anchors
+
+
+def check(files) -> int:
+    errors = []
+    for name in files:
+        src = REPO / name
+        if not src.exists():
+            errors.append(f"{name}: checked file itself is missing")
+            continue
+        for raw in LINK_RE.findall(strip_fences(src.read_text())):
+            target = link_target(raw)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            raw, _, anchor = target.partition("#")
+            dest = src if not raw else (src.parent / raw)
+            if not dest.exists():
+                errors.append(f"{name}: broken link -> {target}")
+                continue
+            if anchor and dest.suffix == ".md":
+                if slugify(anchor) not in anchors_of(dest):
+                    errors.append(f"{name}: broken anchor -> {target}")
+    for e in errors:
+        print(f"error: {e}", file=sys.stderr)
+    if not errors:
+        print(f"link check OK: {len(files)} file(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1:] or DEFAULT_DOCS))
