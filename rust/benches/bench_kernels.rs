@@ -1,0 +1,260 @@
+//! Quantized kernel engine benchmark (BENCHMARKS.md §Kernel engine).
+//!
+//! A/Bs the four GEMM routes of the interpreter on conv-shaped operands
+//! and persists the numbers to `BENCH_kernels.json`:
+//! - `f32_scalar`   -- the legacy fake-quant route: f32 GEMM over
+//!   dequantized grid values ([`gemm_f32_tiled`], 1 thread);
+//! - `f32_blocked`  -- the packed, register-tiled f32 kernel;
+//! - `i8`           -- the integer path end to end: quantize the
+//!   activation to i8, zero-point-corrected i8 GEMM, dequantize the i32
+//!   accumulator (B packed once per shape, as the interpreter packs once
+//!   per layer call);
+//! - `i4_packed`    -- same with nibble-packed int4 weights consumed
+//!   two-per-byte.
+//!
+//! Every integer kernel is cross-checked against a naive centered
+//! reference on a slice of the operands before any timing, so a wrong
+//! kernel fails the bench instead of reporting a fast lie.
+//!
+//! ```bash
+//! cargo bench --offline --bench bench_kernels            # full shapes
+//! cargo bench --offline --bench bench_kernels -- --smoke # CI smoke
+//! cargo bench --offline --bench bench_kernels -- --out path.json
+//! ```
+
+use anyhow::Result;
+
+use quantune::interp::gemm::gemm_f32_tiled;
+use quantune::interp::kernels::{
+    gemm_f32_blocked_tiled, pack_b_f32, pack_b_i4, pack_b_i8, qgemm_i4_tiled,
+    qgemm_i8_tiled,
+};
+use quantune::quant::QParams;
+use quantune::util::stats::percentile;
+use quantune::util::{Json, Pcg32, Timer};
+
+fn bench<F: FnMut() -> Result<()>>(name: &str, reps: usize, mut f: F) -> Result<(f64, f64)> {
+    for _ in 0..2.max(reps / 10) {
+        f()?;
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        f()?;
+        samples.push(t.ms());
+    }
+    let p50 = percentile(&samples, 50.0);
+    let mean: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
+    println!("{name:<44} p50 {p50:>9.3} ms   mean {mean:>9.3} ms   ({reps} reps)");
+    Ok((p50, mean))
+}
+
+/// One shape's operand set: a quantized activation (raw i8 + its exact
+/// dequantized f32 view) and a weight on the int8 and int4 grids (raw +
+/// dequantized f32 views), mirroring what the two interpreter routes see.
+struct Operands {
+    m: usize,
+    k: usize,
+    n: usize,
+    pa: QParams,
+    qa: Vec<i8>,
+    a_f32: Vec<f32>,
+    zw8: i32,
+    sw8: f32,
+    qb8: Vec<i8>,
+    b8_f32: Vec<f32>,
+    zw4: i32,
+    sw4: f32,
+    qb4: Vec<i8>,
+}
+
+fn operands(m: usize, k: usize, n: usize, seed: u64) -> Operands {
+    let mut rng = Pcg32::seeded(seed);
+    // asymmetric activation grid with ~50% of values at the zero point,
+    // the post-ReLU sparsity the zero-skip path is keyed to
+    let pa = QParams { scale: 0.02, zero_point: -20, qmin: -128.0, qmax: 127.0 };
+    let qa: Vec<i8> = (0..m * k)
+        .map(|_| {
+            if rng.chance(0.5) {
+                pa.zero_point as i8
+            } else {
+                (rng.below(256) as i32 - 128) as i8
+            }
+        })
+        .collect();
+    let a_f32: Vec<f32> =
+        qa.iter().map(|&q| (q as i32 - pa.zero_point) as f32 * pa.scale).collect();
+    let (zw8, sw8) = (3i32, 0.01f32);
+    let qb8: Vec<i8> = (0..k * n).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+    let b8_f32: Vec<f32> = qb8.iter().map(|&q| (q as i32 - zw8) as f32 * sw8).collect();
+    let (zw4, sw4) = (-1i32, 0.1f32);
+    let qb4: Vec<i8> = (0..k * n).map(|_| (rng.below(16) as i32 - 8) as i8).collect();
+    Operands { m, k, n, pa, qa, a_f32, zw8, sw8, qb8, b8_f32, zw4, sw4, qb4 }
+}
+
+/// Naive centered integer reference over the first `rows` rows.
+fn naive_centered(o: &Operands, rows: usize, qb: &[i8], zw: i32) -> Vec<i32> {
+    let (k, n) = (o.k, o.n);
+    let za = o.pa.zero_point;
+    let mut c = vec![0i32; rows * n];
+    for i in 0..rows {
+        for j in 0..n {
+            for p in 0..k {
+                c[i * n + j] +=
+                    (o.qa[i * k + p] as i32 - za) * (qb[p * n + j] as i32 - zw);
+            }
+        }
+    }
+    c
+}
+
+/// Correctness gate: both integer kernels must reproduce the naive
+/// centered product exactly on a slice of the real bench operands.
+fn verify(o: &Operands) -> Result<()> {
+    let rows = o.m.min(32);
+    let a = &o.qa[..rows * o.k];
+    let p8 = pack_b_i8(o.k, o.n, |p, j| o.qb8[p * o.n + j]);
+    let mut c = vec![0i32; rows * o.n];
+    qgemm_i8_tiled(rows, a, o.pa.zero_point, &p8, &[o.zw8], &mut c, 1);
+    anyhow::ensure!(
+        c == naive_centered(o, rows, &o.qb8, o.zw8),
+        "i8 kernel mismatch at {}x{}x{}",
+        o.m,
+        o.k,
+        o.n
+    );
+    let p4 = pack_b_i4(o.k, o.n, |p, j| o.qb4[p * o.n + j]);
+    let mut c = vec![0i32; rows * o.n];
+    qgemm_i4_tiled(rows, a, o.pa.zero_point, &p4, &[o.zw4], &mut c, 1);
+    anyhow::ensure!(
+        c == naive_centered(o, rows, &o.qb4, o.zw4),
+        "i4 kernel mismatch at {}x{}x{}",
+        o.m,
+        o.k,
+        o.n
+    );
+    Ok(())
+}
+
+fn kernel_row(p50: f64, mean: f64, macs: usize) -> Json {
+    Json::obj(vec![
+        ("p50_ms", Json::num(p50)),
+        ("mean_ms", Json::num(mean)),
+        ("gmacs_per_s", Json::num(macs as f64 / (p50 * 1e6))),
+    ])
+}
+
+fn bench_shape(m: usize, k: usize, n: usize, reps: usize, seed: u64) -> Result<Json> {
+    println!("\n-- shape {m}x{k}x{n} --");
+    let o = operands(m, k, n, seed);
+    verify(&o)?;
+    let macs = m * k * n;
+    let mut kernels = Vec::new();
+
+    // legacy route: f32 GEMM over the dequantized (fake-quant) operands
+    let mut c32 = vec![0.0f32; m * n];
+    let (p50_scalar, mean) = bench(&format!("f32_scalar ({m}x{k}x{n})"), reps, || {
+        c32.iter_mut().for_each(|v| *v = 0.0);
+        gemm_f32_tiled(m, k, n, &o.a_f32, &o.b8_f32, &mut c32, 1);
+        std::hint::black_box(&c32);
+        Ok(())
+    })?;
+    kernels.push(("f32_scalar", kernel_row(p50_scalar, mean, macs)));
+
+    let pf = pack_b_f32(k, n, &o.b8_f32);
+    let (p50, mean) = bench(&format!("f32_blocked ({m}x{k}x{n})"), reps, || {
+        c32.iter_mut().for_each(|v| *v = 0.0);
+        gemm_f32_blocked_tiled(m, &o.a_f32, &pf, &mut c32, 1);
+        std::hint::black_box(&c32);
+        Ok(())
+    })?;
+    kernels.push(("f32_blocked", kernel_row(p50, mean, macs)));
+
+    // integer route end to end, as conv_int runs it: quantize the f32
+    // activation to i8, corrected integer GEMM, dequantize the i32
+    // accumulator (B packed once per shape = once per layer call)
+    let p8 = pack_b_i8(k, n, |p, j| o.qb8[p * o.n + j]);
+    let mut acc = vec![0i32; m * n];
+    let mut out = vec![0.0f32; m * n];
+    let acc_scale8 = o.pa.scale * o.sw8;
+    let (p50_i8, mean) = bench("i8 (quant+qgemm+dequant)", reps, || {
+        let xq: Vec<i8> = o.a_f32.iter().map(|&v| o.pa.quantize(v) as i8).collect();
+        qgemm_i8_tiled(m, &xq, o.pa.zero_point, &p8, &[o.zw8], &mut acc, 1);
+        for (ov, &av) in out.iter_mut().zip(&acc) {
+            *ov = av as f32 * acc_scale8;
+        }
+        std::hint::black_box(&out);
+        Ok(())
+    })?;
+    kernels.push(("i8", kernel_row(p50_i8, mean, macs)));
+
+    let p4 = pack_b_i4(k, n, |p, j| o.qb4[p * o.n + j]);
+    let acc_scale4 = o.pa.scale * o.sw4;
+    let (p50, mean) = bench("i4_packed (quant+qgemm+dequant)", reps, || {
+        let xq: Vec<i8> = o.a_f32.iter().map(|&v| o.pa.quantize(v) as i8).collect();
+        qgemm_i4_tiled(m, &xq, o.pa.zero_point, &p4, &[o.zw4], &mut acc, 1);
+        for (ov, &av) in out.iter_mut().zip(&acc) {
+            *ov = av as f32 * acc_scale4;
+        }
+        std::hint::black_box(&out);
+        Ok(())
+    })?;
+    kernels.push(("i4_packed", kernel_row(p50, mean, macs)));
+
+    let speedup = p50_scalar / p50_i8;
+    println!("   i8 speedup vs f32_scalar: {speedup:.2}x");
+    Ok(Json::obj(vec![
+        ("m", Json::num(m as f64)),
+        ("k", Json::num(k as f64)),
+        ("n", Json::num(n as f64)),
+        ("kernels", Json::obj(kernels)),
+        ("speedup_i8_vs_f32", Json::num(speedup)),
+    ]))
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_kernels.json".to_string());
+
+    // conv-shaped GEMMs: m = imgs * out pixels, k = kh*kw*cin, n = cout
+    let shapes: &[(usize, usize, usize)] = if smoke {
+        &[(512, 144, 32), (256, 288, 64)]
+    } else {
+        &[(8192, 144, 32), (2048, 288, 64), (1024, 576, 128), (64, 256, 16)]
+    };
+    let reps = if smoke { 3 } else { 20 };
+    println!(
+        "kernel engine A/B: {} shape(s), {} reps, single-thread (see \
+         BENCHMARKS.md \u{00a7}Kernel engine)",
+        shapes.len(),
+        reps
+    );
+
+    let mut rows = Vec::new();
+    for (i, &(m, k, n)) in shapes.iter().enumerate() {
+        rows.push(bench_shape(m, k, n, reps, 40 + i as u64)?);
+    }
+    let report = Json::obj(vec![
+        ("threads", Json::num(1.0)),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "variants",
+            Json::Arr(
+                ["f32_scalar", "f32_blocked", "i8", "i4_packed"]
+                    .iter()
+                    .map(|v| Json::str(*v))
+                    .collect(),
+            ),
+        ),
+        ("shapes", Json::Arr(rows)),
+    ]);
+    report.write_file(std::path::Path::new(&out_path))?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

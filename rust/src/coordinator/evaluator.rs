@@ -398,6 +398,13 @@ impl SharedEvaluator for InterpEvaluator<'_> {
             .zip(setup.weights.iter().cloned())
             .collect();
         let interp = Interpreter::new(&self.model.graph, &weights);
+        // int4/int8 conv/dense layers run on the packed integer kernels
+        // (QUANTUNE_INT_INTERP=0 forces the legacy f32 fake-quant route)
+        let interp = if crate::interp::int_interp_enabled() {
+            interp.with_int_weights(&setup.int_weights)
+        } else {
+            interp
+        };
         let idx_all: Vec<usize> = (0..self.eval.n).collect();
         let chunks: Vec<&[usize]> = idx_all.chunks(64).collect();
         // per-batch hit counts fan out, then reduce in input order: the

@@ -24,8 +24,8 @@ use anyhow::Result;
 use crate::calib::CalibrationCache;
 use crate::ir::Tensor;
 use crate::quant::{
-    fake_quant_weights_at, ActQuantization, BitWidth, Granularity, QuantPlan,
-    Scheme,
+    fake_quant_weights_at, quantize_weights_int, ActQuantization, BitWidth,
+    Granularity, QuantPlan, QuantWeight, Scheme,
 };
 use crate::zoo::ZooModel;
 
@@ -37,6 +37,11 @@ pub struct QuantizedSetup {
     /// except fp32 layers); `Arc`d so cache hits share storage instead
     /// of copying tensors
     pub weights: Vec<Arc<Tensor>>,
+    /// True-integer weights for the interpreter's integer fast path,
+    /// keyed by *layer* name: present for every int4/int8 `_w` tensor
+    /// (the widths the packed kernels cover), absent for
+    /// fp32/int16 layers, which stay on the f32 fake-quant route.
+    pub int_weights: HashMap<String, Arc<QuantWeight>>,
     /// The plan this setup realizes.
     pub plan: QuantPlan,
 }
@@ -51,9 +56,13 @@ pub enum WeightVariant {
 }
 
 /// Cache of prepared weight tensors keyed by (weight name, variant).
+/// Fake-quantized f32 tensors and their true-integer counterparts are
+/// cached separately: fp32 passthroughs have no integer form, and a
+/// mixed sweep may hit one map without the other.
 #[derive(Default)]
 pub struct WeightCache {
     cached: Mutex<HashMap<(String, WeightVariant), Arc<Tensor>>>,
+    cached_int: Mutex<HashMap<(String, WeightVariant), Arc<QuantWeight>>>,
 }
 
 impl WeightCache {
@@ -65,6 +74,11 @@ impl WeightCache {
     /// Number of distinct prepared tensors held.
     pub fn entries(&self) -> usize {
         self.cached.lock().unwrap().len()
+    }
+
+    /// Number of distinct true-integer weights held.
+    pub fn int_entries(&self) -> usize {
+        self.cached_int.lock().unwrap().len()
     }
 
     fn get_or_build(
@@ -81,6 +95,27 @@ impl WeightCache {
         // build is deterministic) and the first insert wins
         let built = Arc::new(build());
         self.cached
+            .lock()
+            .unwrap()
+            .entry((name.to_string(), variant))
+            .or_insert(built)
+            .clone()
+    }
+
+    fn get_or_build_int(
+        &self,
+        name: &str,
+        variant: WeightVariant,
+        build: impl FnOnce() -> QuantWeight,
+    ) -> Arc<QuantWeight> {
+        if let Some(q) =
+            self.cached_int.lock().unwrap().get(&(name.to_string(), variant))
+        {
+            return q.clone();
+        }
+        // same first-insert-wins protocol as get_or_build
+        let built = Arc::new(build());
+        self.cached_int
             .lock()
             .unwrap()
             .entry((name.to_string(), variant))
@@ -151,6 +186,7 @@ pub fn prepare_cached(
     let layer_pos: HashMap<&str, usize> =
         layers.iter().enumerate().map(|(i, l)| (l.as_str(), i)).collect();
     let mut weights = Vec::new();
+    let mut int_weights = HashMap::new();
     for name in &model.weights.order {
         let t = model.weights.get(name)?;
         let layer = name.trim_end_matches("_w").trim_end_matches("_b");
@@ -171,8 +207,21 @@ pub fn prepare_cached(
             }
             WeightVariant::Fp32 => t.clone(),
         }));
+        // int4/int8 layers additionally get a true-integer weight so the
+        // interpreter can run them on the packed kernels; it shares the
+        // fake-quant tensor's grid exactly (same params), so both routes
+        // see identical quantized values
+        if let WeightVariant::Quant(scheme, gran, width) = variant {
+            if matches!(width, BitWidth::Int4 | BitWidth::Int8) {
+                let qw = wcache.get_or_build_int(name, variant, || {
+                    quantize_weights_int(t, scheme, gran, width)
+                        .expect("int4/int8 widths always quantize")
+                });
+                int_weights.insert(layer.to_string(), qw);
+            }
+        }
     }
-    Ok(QuantizedSetup { aq, weights, plan: plan.clone() })
+    Ok(QuantizedSetup { aq, weights, int_weights, plan: plan.clone() })
 }
 
 /// Build the evaluation setup for one plan (uncached form).
@@ -232,5 +281,23 @@ mod tests {
         );
         assert!(!Arc::ptr_eq(&a, &d));
         assert_eq!(wcache.entries(), 3);
+    }
+
+    #[test]
+    fn int_weight_cache_shares_entries() {
+        let wcache = WeightCache::new();
+        let t = Tensor { shape: vec![4], data: vec![-1.0, -0.25, 0.5, 1.0] };
+        let variant =
+            WeightVariant::Quant(Scheme::Symmetric, Granularity::Tensor, BitWidth::Int8);
+        let build = || {
+            quantize_weights_int(&t, Scheme::Symmetric, Granularity::Tensor, BitWidth::Int8)
+                .unwrap()
+        };
+        let a = wcache.get_or_build_int("l1_w", variant, build);
+        let b = wcache.get_or_build_int("l1_w", variant, build);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the int cache");
+        assert_eq!(wcache.int_entries(), 1);
+        // the integer map is independent of the f32 map
+        assert_eq!(wcache.entries(), 0);
     }
 }

@@ -16,10 +16,30 @@ use crate::util::pool;
 
 /// MACs below which row tiling is pure overhead: a ~2M-MAC GEMM runs in
 /// about a millisecond single-core, ~100x the cost of spawning workers.
-const PAR_MIN_MACS: usize = 1 << 21;
+/// Shared with the packed kernels in [`super::kernels`] so both engines
+/// cross the serial/tiled threshold at the same problem size.
+pub(crate) const PAR_MIN_MACS: usize = 1 << 21;
 
 /// C += A * B over f32. Automatically row-tiles across the worker pool
 /// when the problem is large enough (see [`gemm_f32_tiled`]).
+///
+/// # NaN/Inf propagation contract (zero-skip fast path)
+///
+/// Post-ReLU activation rows are zero-heavy, so the kernel skips work
+/// keyed on **A** values being zero -- and skipped work never touches C,
+/// even when the corresponding B entries are NaN or Inf:
+///
+/// - aligned k-quads (`p < k/4*4`): a quad is skipped only when **all
+///   four** A values are `0.0`. A partially-zero quad still multiplies
+///   through, so a NaN/Inf in B *can* poison C there (`0.0 * NaN` is
+///   NaN, per IEEE-754).
+/// - the k-remainder loop skips individual `a == 0.0` elements, so a
+///   remainder NaN/Inf in B is masked by a zero in A.
+///
+/// In short: `0 * NaN` never poisons C *from a fully-zero quad or a
+/// zero remainder element*; mixed quads follow IEEE-754. The packed
+/// kernels in [`super::kernels`] implement the identical contract, and
+/// the `zero_skip_nan_contract` tests pin it for both engines.
 pub fn gemm_f32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     let macs = m.saturating_mul(k).saturating_mul(n);
     let threads = if macs >= PAR_MIN_MACS { pool::effective_threads() } else { 1 };
@@ -97,6 +117,13 @@ fn gemm_f32_serial(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [
 /// accumulators are 32-bit like the hardware's register file and our
 /// operand magnitudes cannot overflow them). Row-tiled like the f32
 /// kernel.
+///
+/// Zero-skip contract: same shape as [`gemm_f32`] -- an aligned k-quad
+/// is skipped only when all four A values are 0, the remainder loop
+/// skips individual zeros. Integers have no NaN, so here the contract
+/// is purely a performance statement (skipped quads do no work), but
+/// the skip *keying* must stay identical to the f32 kernel so both
+/// engines visit the same (i, p, j) triples.
 pub fn gemm_i32(m: usize, k: usize, n: usize, a: &[i32], b: &[i32], c: &mut [i32]) {
     let macs = m.saturating_mul(k).saturating_mul(n);
     let threads = if macs >= PAR_MIN_MACS { pool::effective_threads() } else { 1 };
@@ -220,6 +247,44 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn zero_skip_nan_contract_f32() {
+        // k = 5: one aligned quad + one remainder element.
+        // Row 0: all-zero quad + zero remainder -> NaN/Inf B fully masked.
+        // Row 1: partially-zero quad -> the quad's NaN poisons C (IEEE).
+        let (m, k, n) = (2, 5, 3);
+        let a = vec![
+            0.0, 0.0, 0.0, 0.0, 0.0, // row 0
+            0.0, 1.0, 0.0, 0.0, 0.0, // row 1: quad has a nonzero
+        ];
+        let mut b = vec![1.0f32; k * n];
+        b[0] = f32::NAN; // quad row 0 of B, column 0
+        b[4 * n] = f32::NAN; // remainder row of B, column 0
+        b[4 * n + 1] = f32::INFINITY; // remainder row, column 1
+        for threads in [1, 2, 4, 8] {
+            let mut c = vec![0.25f32; m * n];
+            gemm_f32_tiled(m, k, n, &a, &b, &mut c, threads);
+            // row 0: everything in A is zero -> C untouched, no NaN
+            assert_eq!(&c[..n], &[0.25; 3], "threads {threads}");
+            // row 1: the quad multiplies through; 0*NaN + 1*b1 + ... is
+            // NaN only where B's poisoned column lands (column 0)
+            assert!(c[n].is_nan(), "threads {threads}: mixed quad must poison");
+            assert_eq!(c[n + 1], 0.25 + 1.0);
+        }
+    }
+
+    #[test]
+    fn zero_skip_keys_on_a_only_i32() {
+        // the i32 kernel skips the same (all-zero quad, zero remainder)
+        // work items; B values under skipped positions never reach C
+        let (m, k, n) = (1, 5, 2);
+        let a = vec![0, 0, 0, 0, 0];
+        let b = vec![i32::MAX; k * n]; // would overflow if touched
+        let mut c = vec![7; m * n];
+        gemm_i32(m, k, n, &a, &b, &mut c);
+        assert_eq!(c, vec![7, 7]);
     }
 
     #[test]

@@ -1,0 +1,735 @@
+//! Packed, register-tiled GEMM kernels: the integer engine behind the
+//! fake-quant interpreter (ROADMAP item 1).
+//!
+//! Three kernel families share one blocking scheme:
+//! - **i8 x i8 -> i32** ([`gemm_i8_i32`] / [`qgemm_i8`]): true int8
+//!   operands, 32-bit accumulators;
+//! - **packed int4 x i8 -> i32** ([`gemm_i4_i32`] / [`qgemm_i4`]):
+//!   B stays in the 2-weights-per-byte representation ([`PanelsI4`])
+//!   and nibbles are sign-extended in-register -- the f32 weights are
+//!   never materialized;
+//! - **blocked f32** ([`gemm_f32_blocked`]): the same tiling contract
+//!   on floats, kept for the bench A/B against the legacy
+//!   [`super::gemm::gemm_f32`] row kernel.
+//!
+//! Blocking: B is repacked once into [`NR`]-column panels (column-major
+//! panels, contiguous per k-step) so the microkernel streams it
+//! linearly; A is consumed row-major in [`MR`]-row blocks with an
+//! `[MR x NR]` accumulator block held in registers. The inner loop is
+//! plain indexed arithmetic over fixed-size arrays, which LLVM
+//! autovectorizes (the panel width is two SIMD registers of i32/f32 on
+//! AVX2).
+//!
+//! Contracts shared with [`super::gemm`]:
+//! - **bit-exactness across threads**: `_tiled` variants split C's rows
+//!   into contiguous blocks running the identical serial kernel, and
+//!   per-(row, column) accumulation order is independent of the split,
+//!   so serial == tiled at any `QUANTUNE_THREADS` (exactly, including
+//!   f32).
+//! - **zero-skip keying on A**: an aligned k-quad (k-pair for int4) is
+//!   skipped only when *all* its A values are zero; remainder elements
+//!   skip individually. See the NaN/Inf notes on
+//!   [`super::gemm::gemm_f32`] -- the f32 blocked kernel preserves that
+//!   contract verbatim.
+//!
+//! Overflow: i8 operands bound each product by `128 * 127`, so a k up
+//! to ~130k accumulates within i32; our largest conv GEMM k is ~4.6k.
+
+use crate::util::pool;
+
+use super::gemm::PAR_MIN_MACS;
+
+/// Microkernel row-block height (A rows per accumulator block).
+pub const MR: usize = 4;
+
+/// Panel width: B columns per packed panel (= accumulator block width).
+pub const NR: usize = 16;
+
+/// f32 B operand repacked into [`NR`]-column panels.
+///
+/// Panel `jp` holds columns `jp*NR .. jp*NR+NR` (zero-padded past `n`);
+/// within a panel, the `NR` values of k-step `p` are contiguous at
+/// `p*NR`, so the microkernel reads one cache line per k-step.
+pub struct PanelsF32 {
+    /// Shared (inner) dimension.
+    pub k: usize,
+    /// Logical column count (before panel padding).
+    pub n: usize,
+    data: Vec<f32>,
+}
+
+/// Pack a row-major `[k, n]` f32 matrix into [`PanelsF32`].
+pub fn pack_b_f32(k: usize, n: usize, b: &[f32]) -> PanelsF32 {
+    debug_assert_eq!(b.len(), k * n);
+    let np = n.div_ceil(NR);
+    let mut data = vec![0.0f32; np * k * NR];
+    for jp in 0..np {
+        let j0 = jp * NR;
+        let w = NR.min(n - j0);
+        let panel = &mut data[jp * k * NR..(jp + 1) * k * NR];
+        for p in 0..k {
+            for jj in 0..w {
+                panel[p * NR + jj] = b[p * n + j0 + jj];
+            }
+        }
+    }
+    PanelsF32 { k, n, data }
+}
+
+/// i8 B operand repacked into [`NR`]-column panels, with per-column
+/// sums for the zero-point correction of [`qgemm_i8`].
+///
+/// Same layout as [`PanelsF32`] over i8 elements.
+pub struct PanelsI8 {
+    /// Shared (inner) dimension.
+    pub k: usize,
+    /// Logical column count (before panel padding).
+    pub n: usize,
+    data: Vec<i8>,
+    /// `col_sums[j] = sum_p B[p, j]` (length `n`).
+    pub col_sums: Vec<i32>,
+}
+
+/// Pack an i8 B operand into [`PanelsI8`] via an element accessor
+/// (`at(p, j)` returns `B[p, j]`), so callers can pack straight from a
+/// strided weight tensor without materializing the `[k, n]` matrix.
+pub fn pack_b_i8(k: usize, n: usize, at: impl Fn(usize, usize) -> i8) -> PanelsI8 {
+    let np = n.div_ceil(NR);
+    let mut data = vec![0i8; np * k * NR];
+    let mut col_sums = vec![0i32; n];
+    for jp in 0..np {
+        let j0 = jp * NR;
+        let w = NR.min(n - j0);
+        let panel = &mut data[jp * k * NR..(jp + 1) * k * NR];
+        for p in 0..k {
+            for jj in 0..w {
+                let v = at(p, j0 + jj);
+                panel[p * NR + jj] = v;
+                col_sums[j0 + jj] += v as i32;
+            }
+        }
+    }
+    PanelsI8 { k, n, data, col_sums }
+}
+
+/// Packed-int4 B operand: nibble pairs along k, [`NR`]-column panels,
+/// plus per-column sums for the zero-point correction of [`qgemm_i4`].
+///
+/// Byte `p2*NR + jj` of panel `jp` holds column `jp*NR + jj`'s weights
+/// for k-steps `2*p2` (low nibble) and `2*p2 + 1` (high nibble) -- the
+/// same low-nibble-first convention as
+/// [`PackedI4`](crate::quant::PackedI4), applied down each column. Odd
+/// k leaves the final high nibble zero. The microkernel sign-extends
+/// nibbles in-register; int4 weights are never widened in memory.
+pub struct PanelsI4 {
+    /// Shared (inner) dimension (elements, not bytes).
+    pub k: usize,
+    /// Logical column count (before panel padding).
+    pub n: usize,
+    data: Vec<u8>,
+    /// `col_sums[j] = sum_p B[p, j]` (length `n`).
+    pub col_sums: Vec<i32>,
+}
+
+/// Pack an int4 B operand into [`PanelsI4`] via an element accessor
+/// (`at(p, j)` must return values in [-8, 7]).
+pub fn pack_b_i4(k: usize, n: usize, at: impl Fn(usize, usize) -> i8) -> PanelsI4 {
+    let kp = k.div_ceil(2);
+    let np = n.div_ceil(NR);
+    let mut data = vec![0u8; np * kp * NR];
+    let mut col_sums = vec![0i32; n];
+    for jp in 0..np {
+        let j0 = jp * NR;
+        let w = NR.min(n - j0);
+        let panel = &mut data[jp * kp * NR..(jp + 1) * kp * NR];
+        for p2 in 0..kp {
+            for jj in 0..w {
+                let lo = at(2 * p2, j0 + jj);
+                let hi = if 2 * p2 + 1 < k { at(2 * p2 + 1, j0 + jj) } else { 0 };
+                debug_assert!(
+                    (-8..=7).contains(&lo) && (-8..=7).contains(&hi),
+                    "int4 operand out of range: {lo}/{hi}"
+                );
+                panel[p2 * NR + jj] = ((lo as u8) & 0x0f) | ((hi as u8) << 4);
+                col_sums[j0 + jj] += lo as i32 + hi as i32;
+            }
+        }
+    }
+    PanelsI4 { k, n, data, col_sums }
+}
+
+// ---- f32 blocked kernel ----
+
+/// C += A * B over f32 with B pre-packed into panels. Auto-tiles like
+/// [`super::gemm::gemm_f32`]; see [`gemm_f32_blocked_tiled`].
+pub fn gemm_f32_blocked(m: usize, a: &[f32], b: &PanelsF32, c: &mut [f32]) {
+    let macs = m.saturating_mul(b.k).saturating_mul(b.n);
+    let threads = if macs >= PAR_MIN_MACS { pool::effective_threads() } else { 1 };
+    gemm_f32_blocked_tiled(m, a, b, c, threads);
+}
+
+/// C += A * B (f32, packed B) with an explicit worker count. Bit-exact
+/// against `threads == 1` at any count: each worker runs the identical
+/// serial kernel over a disjoint row block, and per-element accumulation
+/// order does not depend on the block boundaries.
+pub fn gemm_f32_blocked_tiled(m: usize, a: &[f32], b: &PanelsF32, c: &mut [f32], threads: usize) {
+    debug_assert_eq!(a.len(), m * b.k);
+    debug_assert_eq!(c.len(), m * b.n);
+    let threads = threads.clamp(1, m.max(1));
+    if threads <= 1 || b.k == 0 || b.n == 0 {
+        gemm_f32_blocked_serial(m, a, b, c);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (ab, cb) in a.chunks(rows_per * b.k).zip(c.chunks_mut(rows_per * b.n)) {
+            scope.spawn(move || gemm_f32_blocked_serial(cb.len() / b.n, ab, b, cb));
+        }
+    });
+}
+
+fn gemm_f32_blocked_serial(m: usize, a: &[f32], b: &PanelsF32, c: &mut [f32]) {
+    let (k, n) = (b.k, b.n);
+    if k == 0 || n == 0 {
+        return;
+    }
+    let np = n.div_ceil(NR);
+    let k4 = k / 4 * 4;
+    for jp in 0..np {
+        let panel = &b.data[jp * k * NR..(jp + 1) * k * NR];
+        let j0 = jp * NR;
+        let w = NR.min(n - j0);
+        let mut i = 0;
+        while i < m {
+            let rows = MR.min(m - i);
+            let mut acc = [[0.0f32; NR]; MR];
+            let mut p = 0;
+            while p < k4 {
+                let b0 = &panel[p * NR..(p + 1) * NR];
+                let b1 = &panel[(p + 1) * NR..(p + 2) * NR];
+                let b2 = &panel[(p + 2) * NR..(p + 3) * NR];
+                let b3 = &panel[(p + 3) * NR..(p + 4) * NR];
+                for r in 0..rows {
+                    let ar = &a[(i + r) * k..(i + r) * k + k];
+                    let (a0, a1, a2, a3) = (ar[p], ar[p + 1], ar[p + 2], ar[p + 3]);
+                    // zero-skip contract: all-zero quads only (see
+                    // super::gemm::gemm_f32)
+                    if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                        continue;
+                    }
+                    let accr = &mut acc[r];
+                    for j in 0..NR {
+                        accr[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                }
+                p += 4;
+            }
+            while p < k {
+                let bp = &panel[p * NR..(p + 1) * NR];
+                for r in 0..rows {
+                    let av = a[(i + r) * k + p];
+                    if av != 0.0 {
+                        let accr = &mut acc[r];
+                        for j in 0..NR {
+                            accr[j] += av * bp[j];
+                        }
+                    }
+                }
+                p += 1;
+            }
+            for r in 0..rows {
+                let crow = &mut c[(i + r) * n + j0..(i + r) * n + j0 + w];
+                for (cv, &av) in crow.iter_mut().zip(&acc[r][..w]) {
+                    *cv += av;
+                }
+            }
+            i += rows;
+        }
+    }
+}
+
+// ---- i8 kernel ----
+
+/// C += A * B over raw i8 operands into i32 (no zero-point handling;
+/// see [`qgemm_i8`] for the corrected form). Auto-tiles.
+pub fn gemm_i8_i32(m: usize, a: &[i8], b: &PanelsI8, c: &mut [i32]) {
+    let macs = m.saturating_mul(b.k).saturating_mul(b.n);
+    let threads = if macs >= PAR_MIN_MACS { pool::effective_threads() } else { 1 };
+    gemm_i8_i32_tiled(m, a, b, c, threads);
+}
+
+/// C += A * B (i8, packed B) with an explicit worker count; integer
+/// arithmetic, so serial == tiled exactly at any count.
+pub fn gemm_i8_i32_tiled(m: usize, a: &[i8], b: &PanelsI8, c: &mut [i32], threads: usize) {
+    debug_assert_eq!(a.len(), m * b.k);
+    debug_assert_eq!(c.len(), m * b.n);
+    let threads = threads.clamp(1, m.max(1));
+    if threads <= 1 || b.k == 0 || b.n == 0 {
+        gemm_i8_serial(m, a, b, c);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (ab, cb) in a.chunks(rows_per * b.k).zip(c.chunks_mut(rows_per * b.n)) {
+            scope.spawn(move || gemm_i8_serial(cb.len() / b.n, ab, b, cb));
+        }
+    });
+}
+
+fn gemm_i8_serial(m: usize, a: &[i8], b: &PanelsI8, c: &mut [i32]) {
+    let (k, n) = (b.k, b.n);
+    if k == 0 || n == 0 {
+        return;
+    }
+    let np = n.div_ceil(NR);
+    let k4 = k / 4 * 4;
+    for jp in 0..np {
+        let panel = &b.data[jp * k * NR..(jp + 1) * k * NR];
+        let j0 = jp * NR;
+        let w = NR.min(n - j0);
+        let mut i = 0;
+        while i < m {
+            let rows = MR.min(m - i);
+            let mut acc = [[0i32; NR]; MR];
+            let mut p = 0;
+            while p < k4 {
+                let b0 = &panel[p * NR..(p + 1) * NR];
+                let b1 = &panel[(p + 1) * NR..(p + 2) * NR];
+                let b2 = &panel[(p + 2) * NR..(p + 3) * NR];
+                let b3 = &panel[(p + 3) * NR..(p + 4) * NR];
+                for r in 0..rows {
+                    let ar = &a[(i + r) * k..(i + r) * k + k];
+                    let (a0, a1, a2, a3) = (
+                        ar[p] as i32,
+                        ar[p + 1] as i32,
+                        ar[p + 2] as i32,
+                        ar[p + 3] as i32,
+                    );
+                    // quantized post-ReLU rows are zero-heavy at
+                    // zero_point 0; keep the f32 kernel's skip keying
+                    if (a0 | a1 | a2 | a3) == 0 {
+                        continue;
+                    }
+                    let accr = &mut acc[r];
+                    for j in 0..NR {
+                        accr[j] += a0 * b0[j] as i32
+                            + a1 * b1[j] as i32
+                            + a2 * b2[j] as i32
+                            + a3 * b3[j] as i32;
+                    }
+                }
+                p += 4;
+            }
+            while p < k {
+                let bp = &panel[p * NR..(p + 1) * NR];
+                for r in 0..rows {
+                    let av = a[(i + r) * k + p] as i32;
+                    if av != 0 {
+                        let accr = &mut acc[r];
+                        for j in 0..NR {
+                            accr[j] += av * bp[j] as i32;
+                        }
+                    }
+                }
+                p += 1;
+            }
+            for r in 0..rows {
+                let crow = &mut c[(i + r) * n + j0..(i + r) * n + j0 + w];
+                for (cv, &av) in crow.iter_mut().zip(&acc[r][..w]) {
+                    *cv += av;
+                }
+            }
+            i += rows;
+        }
+    }
+}
+
+// ---- packed-int4 kernel ----
+
+/// C += A * B with B in the packed-int4 panels (raw grid values; see
+/// [`qgemm_i4`] for the zero-point-corrected form). Auto-tiles.
+pub fn gemm_i4_i32(m: usize, a: &[i8], b: &PanelsI4, c: &mut [i32]) {
+    let macs = m.saturating_mul(b.k).saturating_mul(b.n);
+    let threads = if macs >= PAR_MIN_MACS { pool::effective_threads() } else { 1 };
+    gemm_i4_i32_tiled(m, a, b, c, threads);
+}
+
+/// C += A * B (packed int4 B) with an explicit worker count; integer
+/// arithmetic, so serial == tiled exactly at any count.
+pub fn gemm_i4_i32_tiled(m: usize, a: &[i8], b: &PanelsI4, c: &mut [i32], threads: usize) {
+    debug_assert_eq!(a.len(), m * b.k);
+    debug_assert_eq!(c.len(), m * b.n);
+    let threads = threads.clamp(1, m.max(1));
+    if threads <= 1 || b.k == 0 || b.n == 0 {
+        gemm_i4_serial(m, a, b, c);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (ab, cb) in a.chunks(rows_per * b.k).zip(c.chunks_mut(rows_per * b.n)) {
+            scope.spawn(move || gemm_i4_serial(cb.len() / b.n, ab, b, cb));
+        }
+    });
+}
+
+fn gemm_i4_serial(m: usize, a: &[i8], b: &PanelsI4, c: &mut [i32]) {
+    let (k, n) = (b.k, b.n);
+    if k == 0 || n == 0 {
+        return;
+    }
+    let kp = k.div_ceil(2);
+    let np = n.div_ceil(NR);
+    for jp in 0..np {
+        let panel = &b.data[jp * kp * NR..(jp + 1) * kp * NR];
+        let j0 = jp * NR;
+        let w = NR.min(n - j0);
+        let mut i = 0;
+        while i < m {
+            let rows = MR.min(m - i);
+            let mut acc = [[0i32; NR]; MR];
+            for p2 in 0..kp {
+                let bp = &panel[p2 * NR..(p2 + 1) * NR];
+                for r in 0..rows {
+                    let ar = &a[(i + r) * k..(i + r) * k + k];
+                    let a0 = ar[2 * p2] as i32;
+                    let a1 = if 2 * p2 + 1 < k { ar[2 * p2 + 1] as i32 } else { 0 };
+                    // zero-skip on the k-pair (the int4 analogue of the
+                    // aligned quad): both A values zero -> no work
+                    if (a0 | a1) == 0 {
+                        continue;
+                    }
+                    let accr = &mut acc[r];
+                    for j in 0..NR {
+                        // sign-extend both nibbles in-register
+                        let byte = bp[j];
+                        let lo = (((byte << 4) as i8) >> 4) as i32;
+                        let hi = ((byte as i8) >> 4) as i32;
+                        accr[j] += a0 * lo + a1 * hi;
+                    }
+                }
+            }
+            for r in 0..rows {
+                let crow = &mut c[(i + r) * n + j0..(i + r) * n + j0 + w];
+                for (cv, &av) in crow.iter_mut().zip(&acc[r][..w]) {
+                    *cv += av;
+                }
+            }
+            i += rows;
+        }
+    }
+}
+
+// ---- zero-point-corrected entry points ----
+
+/// gemmlowp-style zero-point correction applied after a raw-operand
+/// GEMM: turns `C_raw[i,j] = sum_p qa[i,p] * qb[p,j]` into the centered
+/// product `sum_p (qa - za)(qb - zb_j)` via
+/// `C += k*za*zb_j - zb_j*rowsum_i - za*colsum_j`. O(m*n + m*k),
+/// negligible next to the O(m*k*n) GEMM.
+#[allow(clippy::too_many_arguments)]
+fn correct_zero_points(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    za: i32,
+    col_sums: &[i32],
+    zb: &[i32],
+    c: &mut [i32],
+) {
+    let kk = k as i32;
+    for i in 0..m {
+        let rowsum: i32 = a[i * k..(i + 1) * k].iter().map(|&v| v as i32).sum();
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let zbj = zb[if zb.len() == 1 { 0 } else { j }];
+            crow[j] += kk * za * zbj - zbj * rowsum - za * col_sums[j];
+        }
+    }
+}
+
+/// Zero-point-corrected i8 GEMM (overwrites `c`):
+/// `C[i,j] = sum_p (A[i,p] - za) * (B[p,j] - zb_j)`.
+///
+/// This is the interpreter's integer conv/dense product: A holds
+/// uncentered activation grid values, B uncentered weight grid values,
+/// and the correction terms (gemmlowp's trick) reconstruct the centered
+/// product exactly in integer arithmetic -- so asymmetric schemes with
+/// nonzero zero points run on true i8 operands. `zb` is per-column
+/// (length `n`) or broadcast (length 1). Auto-tiles like
+/// [`gemm_i8_i32`]; the correction pass is serial and deterministic.
+pub fn qgemm_i8(m: usize, a: &[i8], za: i32, b: &PanelsI8, zb: &[i32], c: &mut [i32]) {
+    let macs = m.saturating_mul(b.k).saturating_mul(b.n);
+    let threads = if macs >= PAR_MIN_MACS { pool::effective_threads() } else { 1 };
+    qgemm_i8_tiled(m, a, za, b, zb, c, threads);
+}
+
+/// [`qgemm_i8`] with an explicit worker count (bit-exact at any count).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_i8_tiled(
+    m: usize,
+    a: &[i8],
+    za: i32,
+    b: &PanelsI8,
+    zb: &[i32],
+    c: &mut [i32],
+    threads: usize,
+) {
+    debug_assert!(zb.len() == 1 || zb.len() == b.n);
+    c.fill(0);
+    gemm_i8_i32_tiled(m, a, b, c, threads);
+    correct_zero_points(m, b.k, b.n, a, za, &b.col_sums, zb, c);
+}
+
+/// Zero-point-corrected packed-int4 GEMM (overwrites `c`); the int4
+/// counterpart of [`qgemm_i8`] -- A stays i8 (activations are always on
+/// the int8 grid), B stays nibble-packed.
+pub fn qgemm_i4(m: usize, a: &[i8], za: i32, b: &PanelsI4, zb: &[i32], c: &mut [i32]) {
+    let macs = m.saturating_mul(b.k).saturating_mul(b.n);
+    let threads = if macs >= PAR_MIN_MACS { pool::effective_threads() } else { 1 };
+    qgemm_i4_tiled(m, a, za, b, zb, c, threads);
+}
+
+/// [`qgemm_i4`] with an explicit worker count (bit-exact at any count).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_i4_tiled(
+    m: usize,
+    a: &[i8],
+    za: i32,
+    b: &PanelsI4,
+    zb: &[i32],
+    c: &mut [i32],
+    threads: usize,
+) {
+    debug_assert!(zb.len() == 1 || zb.len() == b.n);
+    c.fill(0);
+    gemm_i4_i32_tiled(m, a, b, c, threads);
+    correct_zero_points(m, b.k, b.n, a, za, &b.col_sums, zb, c);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn rand_i8(n: usize, lo: i8, hi: i8, seed: u64) -> Vec<i8> {
+        let mut rng = Pcg32::seeded(seed);
+        let span = (hi as i32 - lo as i32 + 1) as usize;
+        (0..n)
+            .map(|_| {
+                // sprinkle zeros to exercise the skip path
+                if rng.chance(0.3) {
+                    0
+                } else {
+                    (lo as i32 + rng.below(span) as i32) as i8
+                }
+            })
+            .collect()
+    }
+
+    fn naive_i32(m: usize, k: usize, n: usize, a: &[i8], b: &[i8]) -> Vec<i32> {
+        let mut c = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    c[i * n + j] += a[i * k + p] as i32 * b[p * n + j] as i32;
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn pack_i8_layout_and_col_sums() {
+        // k=3, n=18 -> 2 panels, second ragged (2 live columns)
+        let (k, n) = (3, 18);
+        let b: Vec<i8> = (0..k * n).map(|i| (i % 11) as i8 - 5).collect();
+        let packed = pack_b_i8(k, n, |p, j| b[p * n + j]);
+        for j in 0..n {
+            let want: i32 = (0..k).map(|p| b[p * n + j] as i32).sum();
+            assert_eq!(packed.col_sums[j], want, "col {j}");
+        }
+        // spot-check the panel layout: element (p=2, j=17) lives in
+        // panel 1 at offset p*NR + (17 - 16)
+        assert_eq!(packed.data[k * NR + 2 * NR + 1], b[2 * n + 17]);
+    }
+
+    #[test]
+    fn pack_i4_nibble_layout() {
+        // odd k: the final high nibble is padding and must read as 0
+        let (k, n) = (3, 2);
+        let b: Vec<i8> = vec![-8, 7, 3, -1, 5, 2]; // row-major [k, n]
+        let packed = pack_b_i4(k, n, |p, j| b[p * n + j]);
+        // column 0: k-steps (0,1) share byte 0 of panel row 0
+        let byte = packed.data[0];
+        assert_eq!((((byte << 4) as i8) >> 4), -8, "low nibble = k-step 0");
+        assert_eq!(((byte as i8) >> 4), 3, "high nibble = k-step 1");
+        for j in 0..n {
+            let want: i32 = (0..k).map(|p| b[p * n + j] as i32).sum();
+            assert_eq!(packed.col_sums[j], want, "col {j}");
+        }
+    }
+
+    #[test]
+    fn i8_matches_naive_on_ragged_shapes() {
+        // shapes straddling the MR/NR block boundaries
+        for (m, k, n, seed) in
+            [(1, 1, 1, 1), (4, 16, 16, 2), (5, 7, 17, 3), (9, 33, 31, 4), (3, 4, 48, 5)]
+        {
+            let a = rand_i8(m * k, -128, 127, seed);
+            let b = rand_i8(k * n, -128, 127, seed + 100);
+            let packed = pack_b_i8(k, n, |p, j| b[p * n + j]);
+            let mut c = vec![0i32; m * n];
+            gemm_i8_i32_tiled(m, &a, &packed, &mut c, 1);
+            assert_eq!(c, naive_i32(m, k, n, &a, &b), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn i4_matches_naive_on_ragged_shapes() {
+        // odd and even k (nibble-pair padding on odd)
+        for (m, k, n, seed) in
+            [(1, 1, 1, 1), (4, 2, 16, 2), (5, 7, 17, 3), (9, 33, 31, 4), (6, 8, 5, 5)]
+        {
+            let a = rand_i8(m * k, -128, 127, seed);
+            let b = rand_i8(k * n, -8, 7, seed + 200);
+            let packed = pack_b_i4(k, n, |p, j| b[p * n + j]);
+            let mut c = vec![0i32; m * n];
+            gemm_i4_i32_tiled(m, &a, &packed, &mut c, 1);
+            assert_eq!(c, naive_i32(m, k, n, &a, &b), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn integer_kernels_bit_exact_across_threads() {
+        let (m, k, n) = (13, 9, 21);
+        let a = rand_i8(m * k, -128, 127, 7);
+        let b8 = rand_i8(k * n, -128, 127, 8);
+        let b4 = rand_i8(k * n, -8, 7, 9);
+        let p8 = pack_b_i8(k, n, |p, j| b8[p * n + j]);
+        let p4 = pack_b_i4(k, n, |p, j| b4[p * n + j]);
+        let mut c8 = vec![0i32; m * n];
+        let mut c4 = vec![0i32; m * n];
+        gemm_i8_i32_tiled(m, &a, &p8, &mut c8, 1);
+        gemm_i4_i32_tiled(m, &a, &p4, &mut c4, 1);
+        for threads in [2, 4, 8] {
+            let mut t8 = vec![0i32; m * n];
+            let mut t4 = vec![0i32; m * n];
+            gemm_i8_i32_tiled(m, &a, &p8, &mut t8, threads);
+            gemm_i4_i32_tiled(m, &a, &p4, &mut t4, threads);
+            assert_eq!(t8, c8, "i8 threads {threads}");
+            assert_eq!(t4, c4, "i4 threads {threads}");
+        }
+    }
+
+    #[test]
+    fn qgemm_matches_centered_reference() {
+        // per-column weight zero points (channel granularity) + a
+        // nonzero activation zero point: the corrected product must
+        // equal the naive centered sum exactly
+        let (m, k, n) = (7, 10, 19);
+        let a = rand_i8(m * k, -128, 127, 11);
+        let b = rand_i8(k * n, -128, 127, 12);
+        let za = -3i32;
+        let zb: Vec<i32> = (0..n as i32).map(|j| (j % 7) - 3).collect();
+        let centered = |bv: &[i8]| -> Vec<i32> {
+            let mut c = vec![0i32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    for p in 0..k {
+                        c[i * n + j] += (a[i * k + p] as i32 - za)
+                            * (bv[p * n + j] as i32 - zb[j]);
+                    }
+                }
+            }
+            c
+        };
+        let p8 = pack_b_i8(k, n, |p, j| b[p * n + j]);
+        for threads in [1, 2, 4, 8] {
+            let mut c = vec![999i32; m * n]; // overwritten, not accumulated
+            qgemm_i8_tiled(m, &a, za, &p8, &zb, &mut c, threads);
+            assert_eq!(c, centered(&b), "i8 threads {threads}");
+        }
+        let b4 = rand_i8(k * n, -8, 7, 13);
+        let p4 = pack_b_i4(k, n, |p, j| b4[p * n + j]);
+        for threads in [1, 2, 4, 8] {
+            let mut c = vec![-5i32; m * n];
+            qgemm_i4_tiled(m, &a, za, &p4, &zb, &mut c, threads);
+            assert_eq!(c, centered(&b4), "i4 threads {threads}");
+        }
+        // broadcast zero point (tensor granularity)
+        let zb1 = vec![5i32];
+        let mut c = vec![0i32; m * n];
+        qgemm_i8_tiled(m, &a, za, &p8, &zb1, &mut c, 2);
+        let mut want = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    want[i * n + j] +=
+                        (a[i * k + p] as i32 - za) * (b[p * n + j] as i32 - 5);
+                }
+            }
+        }
+        assert_eq!(c, want, "broadcast zb");
+    }
+
+    #[test]
+    fn f32_blocked_matches_legacy_within_ulp() {
+        let (m, k, n) = (11, 14, 27);
+        let mut rng = Pcg32::seeded(17);
+        let a: Vec<f32> = (0..m * k)
+            .map(|_| if rng.chance(0.4) { 0.0 } else { rng.normal() })
+            .collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let mut legacy = vec![0.0f32; m * n];
+        super::super::gemm::gemm_f32_tiled(m, k, n, &a, &b, &mut legacy, 1);
+        let packed = pack_b_f32(k, n, &b);
+        let mut blocked = vec![0.0f32; m * n];
+        gemm_f32_blocked_tiled(m, &a, &packed, &mut blocked, 1);
+        for (i, (x, y)) in blocked.iter().zip(&legacy).enumerate() {
+            // identical quad arithmetic, different accumulation nesting:
+            // agree to a tight relative tolerance
+            assert!(
+                (x - y).abs() <= 1e-5 * y.abs().max(1.0),
+                "elem {i}: {x} vs {y}"
+            );
+        }
+        // threads bit-exact against the blocked serial result
+        for threads in [2, 4, 8] {
+            let mut t = vec![0.0f32; m * n];
+            gemm_f32_blocked_tiled(m, &a, &packed, &mut t, threads);
+            for (x, y) in t.iter().zip(&blocked) {
+                assert_eq!(x.to_bits(), y.to_bits(), "threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_blocked_keeps_zero_skip_nan_contract() {
+        // all-zero A row: NaN/Inf in B never reach C (same pin as the
+        // legacy kernel's zero_skip_nan_contract_f32 test)
+        let (m, k, n) = (1, 5, 3);
+        let a = vec![0.0f32; k];
+        let mut b = vec![1.0f32; k * n];
+        b[0] = f32::NAN;
+        b[4 * n] = f32::INFINITY;
+        let packed = pack_b_f32(k, n, &b);
+        let mut c = vec![0.5f32; m * n];
+        gemm_f32_blocked(m, &a, &packed, &mut c);
+        assert_eq!(c, vec![0.5; 3]);
+    }
+
+    #[test]
+    fn empty_dims_are_safe() {
+        let p = pack_b_i8(0, 0, |_, _| 0);
+        let mut c: Vec<i32> = Vec::new();
+        gemm_i8_i32_tiled(0, &[], &p, &mut c, 8);
+        qgemm_i8_tiled(0, &[], 0, &p, &[], &mut c, 8);
+        let p4 = pack_b_i4(4, 0, |_, _| 0);
+        gemm_i4_i32_tiled(0, &[], &p4, &mut c, 8);
+        let pf = pack_b_f32(0, 3, &[]);
+        let mut cf = vec![1.0f32; 3];
+        gemm_f32_blocked_tiled(1, &[], &pf, &mut cf, 8);
+        assert_eq!(cf, vec![1.0; 3]);
+    }
+}

@@ -7,21 +7,53 @@
 //!
 //! The interpreter is the fallback accuracy-measurement backend when
 //! PJRT artifacts are absent, and the parity reference in tests.
+//!
+//! # Integer fast path
+//!
+//! In fake-quant mode the interpreter can run conv/dense layers on true
+//! integer operands instead of round-tripping through f32: attach a
+//! per-layer [`QuantWeight`] map with [`Interpreter::with_int_weights`]
+//! and every conv/dense whose input tensor is known to sit exactly on a
+//! quantization grid dispatches to the packed [`kernels`] engine
+//! (i8 x i8 -> i32, or packed-int4 weights consumed two-per-byte).
+//! Zero points are handled with the gemmlowp correction terms, so the
+//! centered product `sum (qa - za)(qw - zw)` is computed exactly in
+//! integer arithmetic; the i32 accumulator is then scaled once by
+//! `scale_a * scale_w` and biased. Layers whose input is not on a grid
+//! (bypassed quant points, avg-pooled values, fp32-width weights) fall
+//! back to the legacy f32 fake-quant route transparently.
 
 pub mod gemm;
+pub mod kernels;
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::ir::{Act, Graph, Op, PoolKind, Tensor};
-use crate::quant::ActQuantization;
+use crate::ir::{window_out_dim, Act, Graph, Op, PoolKind, Tensor};
+use crate::quant::{ActQuantization, IntRepr, QParams, QuantWeight};
 
 use gemm::gemm_f32;
+use kernels::{pack_b_i4, pack_b_i8, qgemm_i4, qgemm_i8};
+
+/// Is the integer fake-quant interpreter path enabled? Defaults to on;
+/// set `QUANTUNE_INT_INTERP=0` to force the legacy f32 fake-quant route
+/// everywhere (kill switch for A/B debugging). Checked by the
+/// coordinator when wiring evaluators, not per-layer.
+pub fn int_interp_enabled() -> bool {
+    match std::env::var("QUANTUNE_INT_INTERP") {
+        Ok(v) => v != "0",
+        Err(_) => true,
+    }
+}
 
 /// im2col: [N,H,W,C] -> patches [N*OH*OW, k*k*C] for one channel group.
 ///
 /// `ch_off..ch_off+cg` selects the input-channel slice (grouped convs).
+/// `oh`/`ow` must come from [`window_out_dim`], which rejects windows
+/// larger than the padded extent (the unchecked subtraction here would
+/// underflow on such geometry).
 #[allow(clippy::too_many_arguments)]
 fn im2col(
     x: &[f32],
@@ -34,10 +66,10 @@ fn im2col(
     k: usize,
     stride: usize,
     pad: usize,
+    oh: usize,
+    ow: usize,
     out: &mut Vec<f32>,
-) -> (usize, usize) {
-    let oh = (h + 2 * pad - k) / stride + 1;
-    let ow = (w + 2 * pad - k) / stride + 1;
+) {
     let cols = k * k * cg;
     out.clear();
     out.resize(n * oh * ow * cols, 0.0);
@@ -63,7 +95,54 @@ fn im2col(
             }
         }
     }
-    (oh, ow)
+}
+
+/// Integer im2col over raw quantized activations. Identical geometry to
+/// [`im2col`], but padding cells hold `fill` (= the activation zero
+/// point, the raw value whose dequantization is exactly 0.0) so the
+/// centered integer product treats padding as real zero.
+#[allow(clippy::too_many_arguments)]
+fn im2col_i8(
+    x: &[i8],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    ch_off: usize,
+    cg: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    fill: i8,
+    out: &mut Vec<i8>,
+) {
+    let cols = k * k * cg;
+    out.clear();
+    out.resize(n * oh * ow * cols, fill);
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((ni * oh + oy) * ow + ox) * cols;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((ni * h + iy as usize) * w + ix as usize) * c + ch_off;
+                        let dst = row + (ky * k + kx) * cg;
+                        out[dst..dst + cg].copy_from_slice(&x[src..src + cg]);
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Repack HWIO weights [k,k,cg,outg] into a [k*k*cg, outg] GEMM operand
@@ -90,6 +169,7 @@ pub struct Interpreter<'a, W: std::borrow::Borrow<Tensor> = Tensor> {
     /// The model graph being evaluated.
     pub graph: &'a Graph,
     weights: &'a HashMap<String, W>,
+    int_weights: Option<&'a HashMap<String, Arc<QuantWeight>>>,
 }
 
 /// Which evaluation semantics to apply.
@@ -103,7 +183,16 @@ impl<'a, W: std::borrow::Borrow<Tensor>> Interpreter<'a, W> {
     /// `weights` must contain every `{layer}_w` / `{layer}_b`. For the
     /// fake-quant mode pass weights already fake-quantized per config.
     pub fn new(graph: &'a Graph, weights: &'a HashMap<String, W>) -> Self {
-        Interpreter { graph, weights }
+        Interpreter { graph, weights, int_weights: None }
+    }
+
+    /// Attach integer weights (keyed by layer name, not `{layer}_w`) to
+    /// enable the integer fast path in fake-quant mode. Layers absent
+    /// from the map keep the f32 fake-quant route, so a partial map
+    /// (e.g. only the int4/int8 layers of a mixed config) is fine.
+    pub fn with_int_weights(mut self, int_weights: &'a HashMap<String, Arc<QuantWeight>>) -> Self {
+        self.int_weights = Some(int_weights);
+        self
     }
 
     /// fp32 logits [N, classes].
@@ -137,11 +226,48 @@ impl<'a, W: std::borrow::Borrow<Tensor>> Interpreter<'a, W> {
             .ok_or_else(|| anyhow!("missing weight {name}"))
     }
 
+    /// Integer-path dispatch test for a conv/dense node: fires only in
+    /// fake-quant mode, when the node's input tensor is known to sit
+    /// exactly on a quantization grid, and an integer weight exists for
+    /// the layer. Returns the input grid params + the integer weight.
+    fn int_ctx(
+        &self,
+        mode: &Mode<'_>,
+        grid: &HashMap<String, QParams>,
+        node: &crate::ir::Node,
+    ) -> Option<(QParams, &'a QuantWeight)> {
+        if !matches!(mode, Mode::FakeQuant(_)) {
+            return None;
+        }
+        let iw = self.int_weights?;
+        let pa = grid.get(node.inputs[0].as_str()).copied()?;
+        let qw = iw.get(node.name.as_str())?;
+        Some((pa, qw.as_ref()))
+    }
+
     fn run(&self, x: &Tensor, mut mode: Mode) -> Result<(Tensor, Option<Vec<Tensor>>)> {
         anyhow::ensure!(x.rank() == 4, "input must be NHWC, got {:?}", x.shape);
         let qpoints = self.graph.quant_points();
         let qindex: HashMap<&str, usize> =
             qpoints.iter().enumerate().map(|(i, s)| (s.as_str(), i)).collect();
+
+        // env entries proven to lie exactly on a quantization grid:
+        // fake-quant output is (q - zp) * scale by construction, and
+        // re-quantizing such a value recovers q exactly (the product's
+        // rounding error is far below half a grid step)
+        let mut grid: HashMap<String, QParams> = HashMap::new();
+
+        // active (non-bypassed) quant-point params for `name`, if any
+        let qp_of = |name: &str, mode: &Mode| -> Option<QParams> {
+            match mode {
+                Mode::FakeQuant(aq) => qindex
+                    .get(name)
+                    .copied()
+                    .filter(|&i| !aq.is_bypassed(i))
+                    .map(|i| aq.params(i)),
+                _ => None,
+            }
+        };
 
         let apply_q = |name: &str, t: Tensor, mode: &mut Mode| -> Tensor {
             match mode {
@@ -166,6 +292,9 @@ impl<'a, W: std::borrow::Borrow<Tensor>> Interpreter<'a, W> {
         };
 
         let mut env: HashMap<&str, Tensor> = HashMap::new();
+        if let Some(p) = qp_of("input", &mode) {
+            grid.insert("input".to_string(), p);
+        }
         env.insert("input", apply_q("input", x.clone(), &mut mode));
 
         let mut patch_buf = Vec::new();
@@ -176,11 +305,21 @@ impl<'a, W: std::borrow::Borrow<Tensor>> Interpreter<'a, W> {
                 .map(|i| env.get(i.as_str()).ok_or_else(|| anyhow!("missing {i}")))
                 .collect::<Result<_>>()?;
             let t = match &node.op {
-                Op::Conv { k, stride, pad, in_ch, out_ch, groups, act } => self.conv(
-                    ins[0], node, *k, *stride, *pad, *in_ch, *out_ch, *groups, *act,
-                    &mut patch_buf,
-                )?,
-                Op::Pool { kind, k, stride, pad } => pool(ins[0], *kind, *k, *stride, *pad),
+                Op::Conv { k, stride, pad, in_ch, out_ch, groups, act } => {
+                    match self.int_ctx(&mode, &grid, node) {
+                        Some((pa, qw)) => self.conv_int(
+                            ins[0], node, *k, *stride, *pad, *in_ch, *out_ch, *groups,
+                            *act, pa, qw,
+                        )?,
+                        None => self.conv(
+                            ins[0], node, *k, *stride, *pad, *in_ch, *out_ch, *groups,
+                            *act, &mut patch_buf,
+                        )?,
+                    }
+                }
+                Op::Pool { kind, k, stride, pad } => {
+                    pool(ins[0], &node.name, *kind, *k, *stride, *pad)?
+                }
                 Op::Gap => gap(ins[0]),
                 Op::Add { act } => {
                     anyhow::ensure!(ins[0].shape == ins[1].shape, "add shape mismatch");
@@ -194,22 +333,41 @@ impl<'a, W: std::borrow::Borrow<Tensor>> Interpreter<'a, W> {
                             .collect(),
                     }
                 }
-                Op::Concat => concat(&ins),
+                Op::Concat => concat(&node.name, &ins)?,
                 Op::Shuffle { groups } => shuffle(ins[0], *groups),
                 Op::Dense { in_dim, out_dim } => {
-                    let w = self.weight(&format!("{}_w", node.name))?;
-                    let b = self.weight(&format!("{}_b", node.name))?;
-                    let n = ins[0].shape[0];
-                    let mut out = vec![0.0f32; n * out_dim];
-                    for (row, chunk) in out.chunks_exact_mut(*out_dim).enumerate() {
-                        chunk.copy_from_slice(&b.data);
-                        let _ = row;
+                    match self.int_ctx(&mode, &grid, node) {
+                        Some((pa, qw)) => {
+                            self.dense_int(ins[0], node, *in_dim, *out_dim, pa, qw)?
+                        }
+                        None => {
+                            let w = self.weight(&format!("{}_w", node.name))?;
+                            let b = self.weight(&format!("{}_b", node.name))?;
+                            let n = ins[0].shape[0];
+                            let mut out = vec![0.0f32; n * out_dim];
+                            for chunk in out.chunks_exact_mut(*out_dim) {
+                                chunk.copy_from_slice(&b.data);
+                            }
+                            gemm_f32(n, *in_dim, *out_dim, &ins[0].data, &w.data, &mut out);
+                            Tensor { shape: vec![n, *out_dim], data: out }
+                        }
                     }
-                    gemm_f32(n, *in_dim, *out_dim, &ins[0].data, &w.data, &mut out);
-                    Tensor { shape: vec![n, *out_dim], data: out }
                 }
             };
+            let qp = qp_of(&node.name, &mode);
             let t = apply_q(&node.name, t, &mut mode);
+            if let Some(p) = qp {
+                grid.insert(node.name.clone(), p);
+            } else if matches!(
+                &node.op,
+                Op::Pool { kind: PoolKind::Max, .. } | Op::Shuffle { .. }
+            ) {
+                // value-preserving ops keep their input's grid (max-pool
+                // selects existing values, shuffle permutes them)
+                if let Some(p) = grid.get(node.inputs[0].as_str()).copied() {
+                    grid.insert(node.name.clone(), p);
+                }
+            }
             env.insert(node.name.as_str(), t);
         }
 
@@ -240,15 +398,12 @@ impl<'a, W: std::borrow::Borrow<Tensor>> Interpreter<'a, W> {
         let bias = self.weight(&format!("{}_b", node.name))?;
         let cg = in_ch / groups;
         let outg = out_ch / groups;
-        let mut oh = 0;
-        let mut ow = 0;
+        let oh = window_out_dim(&node.name, h, k, stride, pad)?;
+        let ow = window_out_dim(&node.name, w, k, stride, pad)?;
         // output in group-major scratch, then interleave
         let mut group_out: Vec<Vec<f32>> = Vec::with_capacity(groups);
         for g in 0..groups {
-            let (oh_, ow_) =
-                im2col(&x.data, n, h, w, c, g * cg, cg, k, stride, pad, patch_buf);
-            oh = oh_;
-            ow = ow_;
+            im2col(&x.data, n, h, w, c, g * cg, cg, k, stride, pad, oh, ow, patch_buf);
             let (wm, rows, cols) = weight_matrix(wt, g, groups);
             let m = n * oh * ow;
             let mut out = vec![0.0f32; m * cols];
@@ -278,12 +433,164 @@ impl<'a, W: std::borrow::Borrow<Tensor>> Interpreter<'a, W> {
         }
         Ok(Tensor { shape: vec![n, oh, ow, out_ch], data })
     }
+
+    /// Integer conv: the input (already on grid `pa`) is re-quantized to
+    /// its raw i8 values, patches are gathered in integer space with the
+    /// zero point as padding, and each group runs the packed i8 or
+    /// packed-int4 kernel with gemmlowp zero-point corrections. The i32
+    /// accumulator is dequantized once per element
+    /// (`acc * scale_a * scale_w + bias`), so the only f32 arithmetic
+    /// left is the final scaling -- the f32 weight tensor is never read.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_int(
+        &self,
+        x: &Tensor,
+        node: &crate::ir::Node,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        in_ch: usize,
+        out_ch: usize,
+        groups: usize,
+        act: Act,
+        pa: QParams,
+        qw: &QuantWeight,
+    ) -> Result<Tensor> {
+        let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        anyhow::ensure!(c == in_ch, "conv {}: in_ch mismatch", node.name);
+        let bias = self.weight(&format!("{}_b", node.name))?;
+        let cg = in_ch / groups;
+        let outg = out_ch / groups;
+        let rows = k * k * cg;
+        anyhow::ensure!(
+            qw.len() == rows * out_ch,
+            "conv {}: int weight holds {} values, expected {}",
+            node.name,
+            qw.len(),
+            rows * out_ch
+        );
+        let oh = window_out_dim(&node.name, h, k, stride, pad)?;
+        let ow = window_out_dim(&node.name, w, k, stride, pad)?;
+        let za = pa.zero_point;
+        // exact grid recovery: x values are (q - za) * scale, so
+        // re-quantizing reproduces q (all grids are signed int8-or-
+        // narrower here, so q fits i8)
+        let xq: Vec<i8> = x.data.iter().map(|&v| pa.quantize(v) as i8).collect();
+        let m = n * oh * ow;
+        let mut patches: Vec<i8> = Vec::new();
+        let mut acc = vec![0i32; m * outg];
+        let mut data = vec![0.0f32; m * out_ch];
+        let nscale = qw.scales.len();
+        for g in 0..groups {
+            im2col_i8(
+                &xq, n, h, w, c, g * cg, cg, k, stride, pad, oh, ow, za as i8,
+                &mut patches,
+            );
+            let zb: Vec<i32> = if nscale == 1 {
+                vec![qw.zero_points[0]]
+            } else {
+                qw.zero_points[g * outg..(g + 1) * outg].to_vec()
+            };
+            match &qw.repr {
+                IntRepr::I8(d) => {
+                    let pb = pack_b_i8(rows, outg, |p, j| d[p * out_ch + g * outg + j]);
+                    qgemm_i8(m, &patches, za, &pb, &zb, &mut acc);
+                }
+                IntRepr::I4(pk) => {
+                    let pb =
+                        pack_b_i4(rows, outg, |p, j| pk.get(p * out_ch + g * outg + j));
+                    qgemm_i4(m, &patches, za, &pb, &zb, &mut acc);
+                }
+            }
+            for r in 0..m {
+                let arow = &acc[r * outg..(r + 1) * outg];
+                let drow = &mut data[r * out_ch + g * outg..r * out_ch + (g + 1) * outg];
+                for j in 0..outg {
+                    let ch = g * outg + j;
+                    let sw = qw.scales[ch % nscale];
+                    drow[j] = arow[j] as f32 * (pa.scale * sw) + bias.data[ch];
+                }
+            }
+        }
+        if act != Act::None {
+            for v in &mut data {
+                *v = act.apply(*v);
+            }
+        }
+        Ok(Tensor { shape: vec![n, oh, ow, out_ch], data })
+    }
+
+    /// Integer dense layer; see [`Interpreter::conv_int`] -- same
+    /// quantize / integer GEMM / dequantize-and-bias structure without
+    /// the patch gather.
+    fn dense_int(
+        &self,
+        x: &Tensor,
+        node: &crate::ir::Node,
+        in_dim: usize,
+        out_dim: usize,
+        pa: QParams,
+        qw: &QuantWeight,
+    ) -> Result<Tensor> {
+        anyhow::ensure!(
+            qw.len() == in_dim * out_dim,
+            "dense {}: int weight holds {} values, expected {}",
+            node.name,
+            qw.len(),
+            in_dim * out_dim
+        );
+        let bias = self.weight(&format!("{}_b", node.name))?;
+        let n = x.shape[0];
+        let za = pa.zero_point;
+        let xq: Vec<i8> = x.data.iter().map(|&v| pa.quantize(v) as i8).collect();
+        let nscale = qw.scales.len();
+        let zb: Vec<i32> =
+            if nscale == 1 { vec![qw.zero_points[0]] } else { qw.zero_points.clone() };
+        let mut acc = vec![0i32; n * out_dim];
+        match &qw.repr {
+            IntRepr::I8(d) => {
+                let pb = pack_b_i8(in_dim, out_dim, |p, j| d[p * out_dim + j]);
+                qgemm_i8(n, &xq, za, &pb, &zb, &mut acc);
+            }
+            IntRepr::I4(pk) => {
+                let pb = pack_b_i4(in_dim, out_dim, |p, j| pk.get(p * out_dim + j));
+                qgemm_i4(n, &xq, za, &pb, &zb, &mut acc);
+            }
+        }
+        let mut out = vec![0.0f32; n * out_dim];
+        for r in 0..n {
+            for j in 0..out_dim {
+                let sw = qw.scales[j % nscale];
+                out[r * out_dim + j] =
+                    acc[r * out_dim + j] as f32 * (pa.scale * sw) + bias.data[j];
+            }
+        }
+        Ok(Tensor { shape: vec![n, out_dim], data: out })
+    }
 }
 
-fn pool(x: &Tensor, kind: PoolKind, k: usize, stride: usize, pad: usize) -> Tensor {
+/// Pooling over NHWC. The average divisor is the count of *valid*
+/// (non-padded) window cells -- the convention of the python reference's
+/// `_pool` (padding contributes neither to the sum nor to the divisor).
+/// Graph validation rejects `pad >= k`, so every window contains at
+/// least one valid cell (the corner nearest the interior) and the
+/// divisor is never zero; the same is re-checked here for direct
+/// callers.
+fn pool(
+    x: &Tensor,
+    name: &str,
+    kind: PoolKind,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> Result<Tensor> {
     let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-    let oh = (h + 2 * pad - k) / stride + 1;
-    let ow = (w + 2 * pad - k) / stride + 1;
+    anyhow::ensure!(
+        pad < k,
+        "pool {name}: pad {pad} >= window {k} leaves all-padding border windows"
+    );
+    let oh = window_out_dim(name, h, k, stride, pad)?;
+    let ow = window_out_dim(name, w, k, stride, pad)?;
     let mut data = vec![0.0f32; n * oh * ow * c];
     for ni in 0..n {
         for oy in 0..oh {
@@ -315,14 +622,15 @@ fn pool(x: &Tensor, kind: PoolKind, k: usize, stride: usize, pad: usize) -> Tens
                     }
                     let out = match kind {
                         PoolKind::Max => acc,
-                        PoolKind::Avg => acc / cnt.max(1) as f32,
+                        // cnt >= 1 is guaranteed by pad < k
+                        PoolKind::Avg => acc / cnt as f32,
                     };
                     data[((ni * oh + oy) * ow + ox) * c + ci] = out;
                 }
             }
         }
     }
-    Tensor { shape: vec![n, oh, ow, c], data }
+    Ok(Tensor { shape: vec![n, oh, ow, c], data })
 }
 
 fn gap(x: &Tensor) -> Tensor {
@@ -343,8 +651,22 @@ fn gap(x: &Tensor) -> Tensor {
     Tensor { shape: vec![n, c], data }
 }
 
-fn concat(ins: &[&Tensor]) -> Tensor {
-    let (n, h, w) = (ins[0].shape[0], ins[0].shape[1], ins[0].shape[2]);
+/// Channel concatenation. All inputs must share the leading [n, h, w]
+/// dims (only the channel count may differ) -- mismatches previously
+/// read out of bounds or silently interleaved garbage.
+fn concat(name: &str, ins: &[&Tensor]) -> Result<Tensor> {
+    anyhow::ensure!(!ins.is_empty(), "concat {name}: no inputs");
+    let lead = &ins[0].shape[..3];
+    for t in ins {
+        anyhow::ensure!(t.rank() == 4, "concat {name}: non-NHWC input {:?}", t.shape);
+        anyhow::ensure!(
+            &t.shape[..3] == lead,
+            "concat {name}: [n,h,w] mismatch ({:?} vs {:?})",
+            &t.shape[..3],
+            lead
+        );
+    }
+    let (n, h, w) = (lead[0], lead[1], lead[2]);
     let cs: Vec<usize> = ins.iter().map(|t| t.shape[3]).collect();
     let c_total: usize = cs.iter().sum();
     let mut data = vec![0.0f32; n * h * w * c_total];
@@ -357,7 +679,7 @@ fn concat(ins: &[&Tensor]) -> Tensor {
             off += ct;
         }
     }
-    Tensor { shape: vec![n, h, w, c_total], data }
+    Ok(Tensor { shape: vec![n, h, w, c_total], data })
 }
 
 fn shuffle(x: &Tensor, groups: usize) -> Tensor {
@@ -462,10 +784,28 @@ mod tests {
     #[test]
     fn pool_maxavg() {
         let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
-        let mx = pool(&x, PoolKind::Max, 2, 2, 0);
+        let mx = pool(&x, "p", PoolKind::Max, 2, 2, 0).unwrap();
         assert_eq!(mx.data, vec![4.0]);
-        let av = pool(&x, PoolKind::Avg, 2, 2, 0);
+        let av = pool(&x, "p", PoolKind::Avg, 2, 2, 0).unwrap();
         assert_eq!(av.data, vec![2.5]);
+    }
+
+    #[test]
+    fn padded_avg_pool_divides_by_valid_count() {
+        // 2x2 input [[1,2],[3,4]], k=2 s=1 pad=1 -> 3x3 output; border
+        // windows average only their valid cells (hand-computed)
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let y = pool(&x, "p", PoolKind::Avg, 2, 1, 1).unwrap();
+        assert_eq!(y.shape, vec![1, 3, 3, 1]);
+        assert_eq!(y.data, vec![1.0, 1.5, 2.0, 2.0, 2.5, 3.0, 3.0, 3.5, 4.0]);
+    }
+
+    #[test]
+    fn pool_rejects_all_padding_geometry() {
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![0.0; 4]).unwrap();
+        let err = pool(&x, "pbad", PoolKind::Avg, 2, 1, 2).unwrap_err();
+        assert!(err.to_string().contains("pbad"), "{err}");
+        assert!(err.to_string().contains("pad"), "{err}");
     }
 
     #[test]
@@ -480,8 +820,17 @@ mod tests {
     fn concat_channels() {
         let a = Tensor::from_vec(&[1, 1, 1, 2], vec![1.0, 2.0]).unwrap();
         let b = Tensor::from_vec(&[1, 1, 1, 1], vec![9.0]).unwrap();
-        let y = concat(&[&a, &b]);
+        let y = concat("cat", &[&a, &b]).unwrap();
         assert_eq!(y.shape, vec![1, 1, 1, 3]);
         assert_eq!(y.data, vec![1.0, 2.0, 9.0]);
+    }
+
+    #[test]
+    fn concat_rejects_mismatched_leading_dims() {
+        let a = Tensor::from_vec(&[1, 2, 2, 1], vec![0.0; 4]).unwrap();
+        let b = Tensor::from_vec(&[1, 1, 2, 1], vec![0.0; 2]).unwrap();
+        let err = concat("cat2", &[&a, &b]).unwrap_err();
+        assert!(err.to_string().contains("cat2"), "{err}");
+        assert!(err.to_string().contains("mismatch"), "{err}");
     }
 }

@@ -133,6 +133,37 @@ impl Node {
     }
 }
 
+/// Output extent of a square sliding window over one spatial dim:
+/// `(extent + 2*pad - k) / stride + 1`, checked.
+///
+/// The naive unsigned expression underflows whenever the window exceeds
+/// the padded input (a panic in debug builds, a garbage shape in
+/// release), so every shape-inference and interpreter site routes
+/// through here and reports a descriptive, node-named error instead.
+/// `what` names the offending node in the error.
+pub fn window_out_dim(
+    what: &str,
+    extent: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> Result<usize> {
+    if k == 0 {
+        bail!("{what}: zero window size");
+    }
+    if stride == 0 {
+        bail!("{what}: zero stride");
+    }
+    let padded = extent + 2 * pad;
+    if k > padded {
+        bail!(
+            "{what}: window {k} exceeds padded input extent {padded} \
+             ({extent} + 2*{pad} pad)"
+        );
+    }
+    Ok((padded - k) / stride + 1)
+}
+
 /// A CNN model graph plus its ABI metadata.
 #[derive(Clone, Debug)]
 pub struct Graph {
@@ -181,7 +212,10 @@ impl Graph {
                 bail!("duplicate node name {}", n.name);
             }
             match &n.op {
-                Op::Conv { in_ch, out_ch, groups, k, .. } => {
+                Op::Conv { in_ch, out_ch, groups, k, stride, .. } => {
+                    if *groups == 0 {
+                        bail!("conv {}: zero groups", n.name);
+                    }
                     if in_ch % groups != 0 || out_ch % groups != 0 {
                         bail!("conv {}: groups {groups} does not divide {in_ch}/{out_ch}",
                               n.name);
@@ -189,8 +223,38 @@ impl Graph {
                     if *k == 0 {
                         bail!("conv {}: zero kernel", n.name);
                     }
+                    if *stride == 0 {
+                        bail!("conv {}: zero stride", n.name);
+                    }
                     if n.inputs.len() != 1 {
                         bail!("conv {} wants 1 input", n.name);
+                    }
+                }
+                Op::Pool { k, stride, pad, .. } => {
+                    if *k == 0 {
+                        bail!("pool {}: zero window", n.name);
+                    }
+                    if *stride == 0 {
+                        bail!("pool {}: zero stride", n.name);
+                    }
+                    // pad >= k would let border windows see padding only;
+                    // under valid-count averaging that is a 0/0 (the
+                    // reference reduce_window produces NaN there), so the
+                    // geometry is rejected outright
+                    if *pad >= *k {
+                        bail!(
+                            "pool {}: pad {pad} >= window {k} leaves \
+                             all-padding border windows",
+                            n.name
+                        );
+                    }
+                    if n.inputs.len() != 1 {
+                        bail!("pool {} wants 1 input", n.name);
+                    }
+                }
+                Op::Shuffle { groups } => {
+                    if *groups == 0 {
+                        bail!("shuffle {}: zero groups", n.name);
                     }
                 }
                 Op::Add { .. } => {
@@ -216,7 +280,6 @@ impl Graph {
     pub fn infer_shapes(&self) -> Result<HashMap<String, Vec<usize>>> {
         let mut shapes: HashMap<String, Vec<usize>> = HashMap::new();
         shapes.insert("input".into(), self.input_shape.to_vec());
-        let out_hw = |h: usize, k: usize, s: usize, p: usize| (h + 2 * p - k) / s + 1;
         for n in &self.nodes {
             let get = |i: usize| -> Result<&Vec<usize>> {
                 shapes
@@ -229,11 +292,19 @@ impl Graph {
                     if s.len() != 3 || s[2] != *in_ch {
                         bail!("conv {}: input shape {:?} != in_ch {}", n.name, s, in_ch);
                     }
-                    vec![out_hw(s[0], *k, *stride, *pad), out_hw(s[1], *k, *stride, *pad), *out_ch]
+                    vec![
+                        window_out_dim(&n.name, s[0], *k, *stride, *pad)?,
+                        window_out_dim(&n.name, s[1], *k, *stride, *pad)?,
+                        *out_ch,
+                    ]
                 }
                 Op::Pool { k, stride, pad, .. } => {
                     let s = get(0)?;
-                    vec![out_hw(s[0], *k, *stride, *pad), out_hw(s[1], *k, *stride, *pad), s[2]]
+                    vec![
+                        window_out_dim(&n.name, s[0], *k, *stride, *pad)?,
+                        window_out_dim(&n.name, s[1], *k, *stride, *pad)?,
+                        s[2],
+                    ]
                 }
                 Op::Gap => {
                     let s = get(0)?;
@@ -494,6 +565,56 @@ mod tests {
         )
         .unwrap();
         assert!(Graph::from_meta(&meta).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_window() {
+        // 4x4 input, no pad, k=7: the unsigned out-dim formula would
+        // underflow; the checked path must name the node instead
+        let meta = Json::parse(
+            r#"{"name": "bad", "input_shape": [4,4,3], "num_classes": 2,
+            "nodes": [{"name": "cbig", "op": "conv", "inputs": ["input"],
+              "k": 7, "stride": 1, "pad": 0, "in_ch": 3, "out_ch": 8,
+              "groups": 1, "act": "relu"}]}"#,
+        )
+        .unwrap();
+        let err = Graph::from_meta(&meta).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("cbig") && msg.contains("window"), "got: {msg}");
+    }
+
+    #[test]
+    fn rejects_all_padding_pool_windows() {
+        let meta = Json::parse(
+            r#"{"name": "bad", "input_shape": [4,4,3], "num_classes": 2,
+            "nodes": [{"name": "pbad", "op": "pool", "inputs": ["input"],
+              "kind": "avg", "k": 2, "stride": 1, "pad": 2}]}"#,
+        )
+        .unwrap();
+        let err = Graph::from_meta(&meta).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pbad") && msg.contains("pad"), "got: {msg}");
+    }
+
+    #[test]
+    fn rejects_zero_stride() {
+        let meta = Json::parse(
+            r#"{"name": "bad", "input_shape": [4,4,3], "num_classes": 2,
+            "nodes": [{"name": "p0", "op": "pool", "inputs": ["input"],
+              "kind": "max", "k": 2, "stride": 0, "pad": 0}]}"#,
+        )
+        .unwrap();
+        assert!(Graph::from_meta(&meta).is_err());
+    }
+
+    #[test]
+    fn window_out_dim_formula_and_errors() {
+        assert_eq!(window_out_dim("t", 8, 3, 1, 1).unwrap(), 8);
+        assert_eq!(window_out_dim("t", 8, 2, 2, 0).unwrap(), 4);
+        assert_eq!(window_out_dim("t", 2, 2, 1, 1).unwrap(), 3);
+        assert!(window_out_dim("t", 4, 7, 1, 0).is_err());
+        assert!(window_out_dim("t", 4, 2, 0, 0).is_err());
+        assert!(window_out_dim("t", 4, 0, 1, 0).is_err());
     }
 
     #[test]

@@ -7,5 +7,5 @@
 pub mod graph;
 pub mod tensor;
 
-pub use graph::{Act, Graph, Node, Op, PoolKind};
+pub use graph::{window_out_dim, Act, Graph, Node, Op, PoolKind};
 pub use tensor::{I32Tensor, QTensor, Tensor};

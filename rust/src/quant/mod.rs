@@ -28,8 +28,8 @@ pub use space::{
 pub use weights::{
     channel_params, channel_params_at, fake_quant_weights, fake_quant_weights_at,
     model_size_bytes, model_size_bytes_at, model_size_bytes_masked, model_size_fp32,
-    quantize_weights_int8, tensor_params, tensor_params_at, weight_mse,
-    weight_mse_at,
+    quantize_weights_int, quantize_weights_int8, tensor_params, tensor_params_at,
+    weight_mse, weight_mse_at, IntRepr, PackedI4, QuantWeight,
 };
 
 use anyhow::Result;

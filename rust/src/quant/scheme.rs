@@ -290,6 +290,19 @@ impl QParams {
         self.dequantize(self.quantize(x))
     }
 
+    /// Requantize an integer accumulator onto this grid.
+    ///
+    /// This is the integer kernel path's output hop: a zero-point-
+    /// corrected i8/i4 GEMM accumulator `acc` carries an effective float
+    /// scale `acc_scale` (the product of its operand scales, e.g.
+    /// `s_a * s_w`), so `acc * acc_scale` is the real-valued result and
+    /// requantizing is a single [`QParams::quantize`] onto this grid.
+    /// Equals `self.quantize(acc as f32 * acc_scale)` by construction,
+    /// so integer consumers never materialize an f32 tensor to hop grids.
+    pub fn requantize(&self, acc: i32, acc_scale: f32) -> i32 {
+        self.quantize(acc as f32 * acc_scale)
+    }
+
     /// Worst-case absolute rounding error inside the clipped range.
     pub fn step(&self) -> f32 {
         self.scale * 0.5
@@ -459,6 +472,24 @@ mod tests {
         // fp32 maps to the bypass row convention
         let id = Scheme::Symmetric.params_for(-3.0, 2.0, BitWidth::Fp32);
         assert_eq!(id, QParams::identity());
+    }
+
+    #[test]
+    fn requantize_matches_float_composition() {
+        // output grid differs from the accumulator scale: requantize must
+        // agree with quantizing the dequantized real value, including
+        // saturation and round-half-to-even at the midpoints
+        let out = Scheme::Asymmetric.params_from_range(-1.0, 3.0);
+        for acc in [-3000i32, -17, -1, 0, 1, 255, 4096, 100_000] {
+            for acc_scale in [1e-4f32, 3.7e-3, 0.5] {
+                let want = out.quantize(acc as f32 * acc_scale);
+                assert_eq!(out.requantize(acc, acc_scale), want, "acc={acc}");
+            }
+        }
+        // identity sanity: scale-1 accumulator onto a scale-1 grid
+        let id = QParams::identity();
+        assert_eq!(id.requantize(42, 1.0), 42);
+        assert_eq!(id.requantize(1000, 1.0), 127, "saturates at qmax");
     }
 
     #[test]

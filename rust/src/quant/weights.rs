@@ -104,6 +104,177 @@ pub fn quantize_weights_int8(w: &Tensor, scheme: Scheme) -> QTensor {
     }
 }
 
+/// Two int4 values per byte, flat element order: element `2i` lives in
+/// the low nibble of byte `i`, element `2i+1` in the high nibble (odd
+/// lengths leave the last high nibble zero).
+///
+/// This is the serialized layout [`BitWidth::weight_bytes`] accounts
+/// for, and the storage the packed-int4 GEMM kernel consumes directly
+/// (unpack-in-register; the f32 weights are never materialized).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedI4 {
+    bytes: Vec<u8>,
+    len: usize,
+}
+
+impl PackedI4 {
+    /// Pack a slice of int4 values (each must lie in [-8, 7]).
+    pub fn pack(vals: &[i8]) -> PackedI4 {
+        let mut bytes = vec![0u8; vals.len().div_ceil(2)];
+        for (i, &v) in vals.iter().enumerate() {
+            debug_assert!((-8..=7).contains(&v), "int4 value {v} out of range");
+            let nib = (v as u8) & 0x0f;
+            if i % 2 == 0 {
+                bytes[i / 2] |= nib;
+            } else {
+                bytes[i / 2] |= nib << 4;
+            }
+        }
+        PackedI4 { bytes, len: vals.len() }
+    }
+
+    /// Element `i`, sign-extended from its nibble.
+    pub fn get(&self, i: usize) -> i8 {
+        debug_assert!(i < self.len);
+        let byte = self.bytes[i / 2];
+        if i % 2 == 0 {
+            ((byte << 4) as i8) >> 4
+        } else {
+            (byte as i8) >> 4
+        }
+    }
+
+    /// Number of packed elements.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Is the buffer empty?
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The raw nibble-pair bytes.
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+}
+
+/// Integer storage of a quantized weight tensor.
+#[derive(Clone, Debug)]
+pub enum IntRepr {
+    /// One i8 per element (the int8 grid).
+    I8(Vec<i8>),
+    /// Two int4 elements per byte (see [`PackedI4`]).
+    I4(PackedI4),
+}
+
+/// A weight tensor held as true integers plus its grid parameters --
+/// the operand the integer GEMM kernels compute on.
+///
+/// `scales` / `zero_points` have one entry per scale group: a single
+/// entry at [`Granularity::Tensor`], one per output channel (the last
+/// axis, same `i % c` indexing as [`channel_params_at`]) at
+/// [`Granularity::Channel`]. [`QuantWeight::dequantize`] reproduces
+/// [`fake_quant_weights_at`] bit-for-bit, which is what lets the integer
+/// interpreter path stand in for the f32 fake-quant route.
+#[derive(Clone, Debug)]
+pub struct QuantWeight {
+    /// Tensor shape (HWIO for conv, [in, out] for dense).
+    pub shape: Vec<usize>,
+    /// The integer elements.
+    pub repr: IntRepr,
+    /// One scale per group (len 1 or `channels`).
+    pub scales: Vec<f32>,
+    /// One zero point per group (aligned with `scales`).
+    pub zero_points: Vec<i32>,
+    /// The grid the elements live on ([`BitWidth::Int4`] or
+    /// [`BitWidth::Int8`]).
+    pub width: BitWidth,
+}
+
+impl QuantWeight {
+    /// Flat element `i` as an i32 grid value.
+    pub fn get(&self, i: usize) -> i32 {
+        match &self.repr {
+            IntRepr::I8(d) => d[i] as i32,
+            IntRepr::I4(p) => p.get(i) as i32,
+        }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        match &self.repr {
+            IntRepr::I8(d) => d.len(),
+            IntRepr::I4(p) => p.len(),
+        }
+    }
+
+    /// Is the tensor empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Scale-group index of flat element `i` (0 at tensor granularity,
+    /// the output channel -- last axis -- at channel granularity).
+    pub fn group(&self, i: usize) -> usize {
+        i % self.scales.len()
+    }
+
+    /// Dequantize to f32; bit-identical to [`fake_quant_weights_at`] at
+    /// the same (scheme, granularity, width).
+    pub fn dequantize(&self) -> Tensor {
+        let data = (0..self.len())
+            .map(|i| {
+                let g = self.group(i);
+                (self.get(i) - self.zero_points[g]) as f32 * self.scales[g]
+            })
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+}
+
+/// Quantize a weight tensor to true integers on the `width` grid.
+///
+/// Returns `None` for [`BitWidth::Int16`] and [`BitWidth::Fp32`]: those
+/// widths have no integer kernel (int16 products overflow the i8 GEMM's
+/// operand contract; fp32 is the bypass), so their layers stay on the
+/// f32 fake-quant route. Uses the same per-tensor / per-channel
+/// parameters as [`fake_quant_weights_at`], so dequantizing the result
+/// reproduces the fake-quant tensor exactly.
+pub fn quantize_weights_int(
+    w: &Tensor,
+    scheme: Scheme,
+    gran: Granularity,
+    width: BitWidth,
+) -> Option<QuantWeight> {
+    if !matches!(width, BitWidth::Int4 | BitWidth::Int8) {
+        return None;
+    }
+    let params: Vec<QParams> = match gran {
+        Granularity::Tensor => vec![tensor_params_at(w, scheme, width)],
+        Granularity::Channel => channel_params_at(w, scheme, width),
+    };
+    let c = params.len();
+    let q: Vec<i8> = w
+        .data
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| params[i % c].quantize(x) as i8)
+        .collect();
+    let repr = match width {
+        BitWidth::Int4 => IntRepr::I4(PackedI4::pack(&q)),
+        _ => IntRepr::I8(q),
+    };
+    Some(QuantWeight {
+        shape: w.shape.clone(),
+        repr,
+        scales: params.iter().map(|p| p.scale).collect(),
+        zero_points: params.iter().map(|p| p.zero_point).collect(),
+        width,
+    })
+}
+
 /// Mean squared fake-quant error of a weight tensor on the `width` grid
 /// (zero for [`BitWidth::Fp32`]).
 pub fn weight_mse_at(
@@ -330,6 +501,58 @@ mod tests {
         );
         assert_eq!(fq.data, w.data);
         assert_eq!(weight_mse_at(&w, Scheme::Symmetric, Granularity::Tensor, BitWidth::Fp32), 0.0);
+    }
+
+    #[test]
+    fn packed_i4_roundtrips_all_values() {
+        // every int4 value at both nibble positions, odd length included
+        let vals: Vec<i8> = (-8..=7).chain(-8..=6).collect();
+        let p = PackedI4::pack(&vals);
+        assert_eq!(p.len(), vals.len());
+        assert_eq!(p.bytes().len(), vals.len().div_ceil(2));
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(p.get(i), v, "element {i}");
+        }
+        assert!(PackedI4::pack(&[]).is_empty());
+    }
+
+    #[test]
+    fn quant_weight_dequantizes_to_fake_quant_bitwise() {
+        // the integer path's correctness hinges on this: true-integer
+        // storage + dequantize must be the f32 fake-quant tensor exactly
+        let w = rand_weight(&[3, 3, 4, 6], 7);
+        for width in [BitWidth::Int4, BitWidth::Int8] {
+            for gran in [Granularity::Tensor, Granularity::Channel] {
+                for scheme in [Scheme::Asymmetric, Scheme::Symmetric, Scheme::Pow2] {
+                    let q = quantize_weights_int(&w, scheme, gran, width).unwrap();
+                    assert_eq!(q.width, width);
+                    assert_eq!(q.len(), w.data.len());
+                    let fq = fake_quant_weights_at(&w, scheme, gran, width);
+                    for (i, (a, b)) in q.dequantize().data.iter().zip(&fq.data).enumerate()
+                    {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{scheme}/{gran:?}/{width} elem {i}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_weights_int_rejects_kernel_less_widths() {
+        let w = rand_weight(&[4, 4], 8);
+        for width in [BitWidth::Int16, BitWidth::Fp32] {
+            assert!(quantize_weights_int(
+                &w,
+                Scheme::Symmetric,
+                Granularity::Tensor,
+                width
+            )
+            .is_none());
+        }
     }
 
     #[test]

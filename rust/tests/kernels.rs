@@ -1,0 +1,174 @@
+//! End-to-end guarantees of the integer kernel engine (ROADMAP item 1).
+//!
+//! The unit tests in `interp/kernels.rs` pin the microkernels against
+//! naive integer references; this suite covers the full interpreter
+//! path: for every scheme x granularity x {int4, int8, mixed} the
+//! integer route ([`Interpreter::with_int_weights`]) must agree with
+//! the legacy f32 fake-quant route to float-accumulation noise and
+//! produce identical Top-1 predictions, with the int-weight map coming
+//! out of the real quantizer ([`prepare_cached`]). Runs entirely on
+//! synthetic models/datasets -- no artifacts needed.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use quantune::calib::{calibrate, CalibBackend};
+use quantune::coordinator::{prepare_cached, WeightCache};
+use quantune::data::synthetic_dataset;
+use quantune::interp::{argmax_batch, Interpreter};
+use quantune::ir::Tensor;
+use quantune::quant::{
+    BitWidth, CalibCount, Clipping, Granularity, QuantConfig, QuantPlan, Scheme,
+    ALL_SCHEMES,
+};
+use quantune::zoo::synthetic_model;
+
+/// Max |a - b| over two logit tensors.
+fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Run one plan through both interpreter routes and return
+/// (f32-route logits, integer-route logits, #layers on the int path).
+fn both_routes(
+    scheme: Scheme,
+    gran: Granularity,
+    layer_widths: Option<Vec<BitWidth>>,
+) -> (Tensor, Tensor, usize) {
+    let model = synthetic_model(8, 4, 4, 3).unwrap();
+    let calib = synthetic_dataset(16, 8, 8, 4, 4, 5);
+    let eval = synthetic_dataset(64, 8, 8, 4, 4, 6);
+    let cache = calibrate(&model, &calib, CalibCount::C1, &CalibBackend::Interp, 1)
+        .unwrap();
+    let base = QuantConfig {
+        calib: CalibCount::C1,
+        scheme,
+        clip: Clipping::Max,
+        gran,
+        mixed: false,
+    };
+    let plan = QuantPlan { base, layer_widths };
+    let setup =
+        prepare_cached(&model, &cache, &plan, &WeightCache::new()).unwrap();
+    let weights: HashMap<String, Arc<Tensor>> = model
+        .weights
+        .order
+        .iter()
+        .cloned()
+        .zip(setup.weights.iter().cloned())
+        .collect();
+    let x = eval.batch(&(0..eval.n).collect::<Vec<_>>());
+
+    let f32_route = Interpreter::new(&model.graph, &weights);
+    let a = f32_route.forward_fq(&x, &setup.aq).unwrap();
+    let int_route =
+        Interpreter::new(&model.graph, &weights).with_int_weights(&setup.int_weights);
+    let b = int_route.forward_fq(&x, &setup.aq).unwrap();
+    (a, b, setup.int_weights.len())
+}
+
+#[test]
+fn int8_route_agrees_with_f32_route_on_every_scheme() {
+    for scheme in ALL_SCHEMES {
+        for gran in [Granularity::Tensor, Granularity::Channel] {
+            let (a, b, n_int) = both_routes(scheme, gran, None);
+            // all three weighted layers (c1, c2, d) carry int8 weights
+            assert_eq!(n_int, 3, "{scheme:?}/{gran:?}");
+            // same math, different accumulation (exact integer vs f32):
+            // agree to float noise, scaled to these logit magnitudes
+            let diff = max_abs_diff(&a, &b);
+            assert!(diff < 2e-3, "{scheme:?}/{gran:?}: logits diverged by {diff}");
+            assert_eq!(
+                argmax_batch(&a),
+                argmax_batch(&b),
+                "{scheme:?}/{gran:?}: predictions diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn int4_and_mixed_widths_dispatch_correctly() {
+    // c1 int4 (packed nibbles), c2 fp32 (must fall back), d int8
+    let widths = vec![BitWidth::Int4, BitWidth::Fp32, BitWidth::Int8];
+    let (a, b, n_int) =
+        both_routes(Scheme::Asymmetric, Granularity::Channel, Some(widths));
+    // only the int4 + int8 layers get integer weights; the fp32 layer
+    // (and everything downstream of its off-grid output) falls back
+    assert_eq!(n_int, 2);
+    let diff = max_abs_diff(&a, &b);
+    assert!(diff < 2e-3, "mixed-width logits diverged by {diff}");
+    assert_eq!(argmax_batch(&a), argmax_batch(&b));
+
+    // all-int4: every layer on the packed-nibble kernel
+    let widths = vec![BitWidth::Int4; 3];
+    let (a, b, n_int) =
+        both_routes(Scheme::Symmetric, Granularity::Tensor, Some(widths));
+    assert_eq!(n_int, 3);
+    let diff = max_abs_diff(&a, &b);
+    assert!(diff < 2e-3, "int4 logits diverged by {diff}");
+    assert_eq!(argmax_batch(&a), argmax_batch(&b));
+}
+
+#[test]
+fn int16_stays_on_f32_route() {
+    // int16 exceeds the i8 operand kernels: no integer weights built,
+    // both routes are literally the same code path
+    let widths = vec![BitWidth::Int16; 3];
+    let (a, b, n_int) =
+        both_routes(Scheme::Asymmetric, Granularity::Tensor, Some(widths));
+    assert_eq!(n_int, 0);
+    assert_eq!(a.data, b.data, "identical path must produce identical bits");
+}
+
+#[test]
+fn fp32_and_acts_modes_ignore_int_weights() {
+    // the integer path is a fake-quant-only dispatch: plain fp32
+    // forwards (and calibration captures) must be bit-identical with
+    // and without an attached int-weight map
+    let model = synthetic_model(8, 4, 4, 3).unwrap();
+    let calib = synthetic_dataset(16, 8, 8, 4, 4, 5);
+    let cache = calibrate(&model, &calib, CalibCount::C1, &CalibBackend::Interp, 1)
+        .unwrap();
+    let base = QuantConfig {
+        calib: CalibCount::C1,
+        scheme: Scheme::Asymmetric,
+        clip: Clipping::Max,
+        gran: Granularity::Tensor,
+        mixed: false,
+    };
+    let setup =
+        prepare_cached(&model, &cache, &base.into(), &WeightCache::new()).unwrap();
+    let x = calib.batch(&[0, 1, 2]);
+    let plain = Interpreter::new(&model.graph, model.weights_map());
+    let with_int = Interpreter::new(&model.graph, model.weights_map())
+        .with_int_weights(&setup.int_weights);
+    let a = plain.forward(&x).unwrap();
+    let b = with_int.forward(&x).unwrap();
+    assert_eq!(a.data, b.data);
+    let (_, acts_a) = plain.forward_acts(&x).unwrap();
+    let (_, acts_b) = with_int.forward_acts(&x).unwrap();
+    for (ta, tb) in acts_a.iter().zip(&acts_b) {
+        assert_eq!(ta.data, tb.data);
+    }
+}
+
+#[test]
+fn grid_recovery_is_exact_for_all_schemes() {
+    // the integer path's keystone: re-quantizing a fake-quant value
+    // recovers its grid index exactly, for every scheme's params over a
+    // representative range
+    for scheme in ALL_SCHEMES {
+        let p = scheme.params_from_range(-3.7, 5.3);
+        let (lo, hi) = (p.qmin as i32, p.qmax as i32);
+        for q in lo..=hi {
+            let v = (q - p.zero_point) as f32 * p.scale;
+            let rq = p.quantize(v);
+            assert_eq!(rq, q, "{scheme:?}: grid point {q} recovered as {rq} (v = {v})");
+        }
+    }
+}

@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Sanity-check a BENCH_kernels.json emitted by `cargo bench --bench
+bench_kernels` (CI runs the bench in --smoke mode and then this script,
+so a bench that silently emits an empty or partial report fails the
+build instead of shipping a hollow artifact).
+
+Checks:
+- the file parses and has the expected top-level structure;
+- at least one shape was measured;
+- every declared kernel variant has a row with a positive p50 in every
+  shape (the four variants are pinned here on purpose: dropping one from
+  the bench should be a deliberate, visible change);
+- the i8-vs-f32 speedup field is present and positive.
+
+Usage: python3 tools/check_bench_kernels.py BENCH_kernels.json
+"""
+
+import json
+import sys
+
+EXPECTED_VARIANTS = ["f32_scalar", "f32_blocked", "i8", "i4_packed"]
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench_kernels: FAIL: {msg}")
+    sys.exit(1)
+
+
+def main() -> None:
+    if len(sys.argv) != 2:
+        fail(f"usage: {sys.argv[0]} BENCH_kernels.json")
+    path = sys.argv[1]
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot parse {path}: {e}")
+
+    variants = report.get("variants")
+    if variants != EXPECTED_VARIANTS:
+        fail(f"variants {variants!r} != expected {EXPECTED_VARIANTS!r}")
+
+    shapes = report.get("shapes")
+    if not isinstance(shapes, list) or not shapes:
+        fail("no shapes measured")
+
+    for shape in shapes:
+        label = f"{shape.get('m')}x{shape.get('k')}x{shape.get('n')}"
+        kernels = shape.get("kernels", {})
+        for v in EXPECTED_VARIANTS:
+            row = kernels.get(v)
+            if not isinstance(row, dict):
+                fail(f"shape {label}: missing kernel row {v!r}")
+            for field in ("p50_ms", "mean_ms", "gmacs_per_s"):
+                val = row.get(field)
+                if not isinstance(val, (int, float)) or val <= 0:
+                    fail(f"shape {label}: {v}.{field} = {val!r} (want > 0)")
+        speedup = shape.get("speedup_i8_vs_f32")
+        if not isinstance(speedup, (int, float)) or speedup <= 0:
+            fail(f"shape {label}: speedup_i8_vs_f32 = {speedup!r} (want > 0)")
+
+    print(
+        f"check_bench_kernels: OK ({len(shapes)} shapes x "
+        f"{len(EXPECTED_VARIANTS)} kernels, "
+        f"i8 speedups {[round(s['speedup_i8_vs_f32'], 2) for s in shapes]})"
+    )
+
+
+if __name__ == "__main__":
+    main()
