@@ -1,0 +1,363 @@
+//! End-to-end integer interpreter benchmark (BENCHMARKS.md §Kernel
+//! engine).
+//!
+//! Where `bench_kernels` A/Bs isolated GEMM microkernels, this bench
+//! measures whole fake-quant forwards through the interpreter and
+//! persists the numbers to `BENCH_interp.json`. Three variants per row:
+//! - `fq_f32`     -- the legacy route: f32 GEMM over fake-quantized
+//!   values, no integer weights attached (reused scratch arena);
+//! - `int_repack` -- the integer route with *nothing* reused across
+//!   forwards: every pass re-packs every weight panel, rebuilds the
+//!   interpreter plans, and brings a cold scratch arena. This is the
+//!   per-call-packing shape of the engine before prepacking landed;
+//! - `int_steady` -- the PR-7 steady state: panels packed once in
+//!   `prepare_cached`, one scratch arena reused across passes.
+//!
+//! Correctness gates run before any timing: `int_steady` and
+//! `int_repack` logits must be bitwise identical (independently packed
+//! panels, same integer math), both must predict the same classes as
+//! the f32 route, and the steady loop must perform **zero** `pack_b_*`
+//! calls and at most a handful of heap allocations per forward -- the
+//! process allocator is wrapped in a counting shim to enforce that.
+//!
+//! The model set pairs the conv-dominated `syn8` (where packing is
+//! amortized over many output pixels) with a dense-heavy `dense_head`
+//! at batch 1, where every dense GEMM has one output row and per-call
+//! packing costs as much as the GEMM itself -- the regime the prepack
+//! cache exists for.
+//!
+//! ```bash
+//! cargo bench --offline --bench bench_interp            # full reps
+//! cargo bench --offline --bench bench_interp -- --smoke # CI smoke
+//! cargo bench --offline --bench bench_interp -- --out path.json
+//! ```
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use quantune::calib::{calibrate, CalibBackend};
+use quantune::coordinator::{prepare_cached, QuantizedSetup, WeightCache};
+use quantune::data::{synthetic_dataset, Weights};
+use quantune::interp::kernels::pack_calls;
+use quantune::interp::{argmax_batch, InterpScratch, Interpreter, PreparedWeight};
+use quantune::ir::{Graph, Op, Tensor};
+use quantune::quant::{
+    CalibCount, Clipping, Granularity, QuantConfig, QuantPlan, Scheme,
+};
+use quantune::util::stats::percentile;
+use quantune::util::{pool, Json, Pcg32, Timer};
+use quantune::zoo::{synthetic_model, ZooModel};
+
+/// Counting shim around the system allocator: bumps a global tally on
+/// every alloc/realloc so the bench can assert the steady-state forward
+/// loop is allocation-free (modulo the returned logits).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn bench<F: FnMut() -> Result<()>>(name: &str, reps: usize, mut f: F) -> Result<(f64, f64)> {
+    for _ in 0..2.max(reps / 10) {
+        f()?;
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        f()?;
+        samples.push(t.ms());
+    }
+    let p50 = percentile(&samples, 50.0);
+    let mean: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
+    println!("{name:<44} p50 {p50:>9.3} ms   mean {mean:>9.3} ms   ({reps} reps)");
+    Ok((p50, mean))
+}
+
+/// Allocations per call of `f`, averaged over `reps` quiet runs (no
+/// timing machinery in the loop).
+fn allocs_per_call<F: FnMut() -> Result<()>>(reps: usize, mut f: F) -> Result<f64> {
+    f()?; // warm once so one-time growth is not billed to the loop
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..reps {
+        f()?;
+    }
+    Ok((ALLOCS.load(Ordering::Relaxed) - a0) as f64 / reps as f64)
+}
+
+/// A dense-heavy head: one small conv, then three dense layers with a
+/// 256-wide trunk. At batch 1 every dense GEMM has a single output row,
+/// so per-call panel packing costs as much as the matmul it feeds.
+fn dense_head(seed: u64) -> Result<ZooModel> {
+    let meta_text = r#"{"name": "dense_head", "input_shape": [8, 8, 4], "num_classes": 4,
+      "nodes": [
+        {"name": "c1", "op": "conv", "inputs": ["input"], "k": 3, "stride": 1,
+         "pad": 1, "in_ch": 4, "out_ch": 8, "groups": 1, "act": "relu"},
+        {"name": "g", "op": "gap", "inputs": ["c1"]},
+        {"name": "d1", "op": "dense", "inputs": ["g"], "in_dim": 8, "out_dim": 256},
+        {"name": "d2", "op": "dense", "inputs": ["d1"], "in_dim": 256, "out_dim": 256},
+        {"name": "d3", "op": "dense", "inputs": ["d2"], "in_dim": 256, "out_dim": 4}]}"#;
+    let graph = Graph::from_meta(&Json::parse(meta_text)?)?;
+    let mut rng = Pcg32::new(seed, 41);
+    let mut tensors = HashMap::new();
+    let mut order = Vec::new();
+    for node in &graph.nodes {
+        let (w_shape, b_len): (Vec<usize>, usize) = match &node.op {
+            Op::Conv { k, in_ch, out_ch, groups, .. } => {
+                (vec![*k, *k, in_ch / groups, *out_ch], *out_ch)
+            }
+            Op::Dense { in_dim, out_dim } => (vec![*in_dim, *out_dim], *out_dim),
+            _ => continue,
+        };
+        let fan_in: usize = w_shape[..w_shape.len() - 1].iter().product();
+        let scale = (2.0 / fan_in.max(1) as f32).sqrt();
+        let wn: usize = w_shape.iter().product();
+        let w = Tensor {
+            shape: w_shape,
+            data: (0..wn).map(|_| rng.normal() * scale).collect(),
+        };
+        let b = Tensor {
+            shape: vec![b_len],
+            data: (0..b_len).map(|_| rng.normal() * 0.05).collect(),
+        };
+        for (suffix, t) in [("w", w), ("b", b)] {
+            let name = format!("{}_{suffix}", node.name);
+            order.push(name.clone());
+            tensors.insert(name, t);
+        }
+    }
+    Ok(ZooModel {
+        name: "dense_head".to_string(),
+        graph,
+        weights: Weights { tensors, order },
+        fp32_top1: 0.5,
+        batch: 16,
+    })
+}
+
+fn variant_row(p50: f64, mean: f64, batch: usize) -> Json {
+    Json::obj(vec![
+        ("p50_ms", Json::num(p50)),
+        ("mean_ms", Json::num(mean)),
+        ("ms_per_image", Json::num(p50 / batch as f64)),
+    ])
+}
+
+fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Pack every panel of `setup` from scratch into a fresh map -- the
+/// per-forward cost the `int_repack` baseline pays.
+fn repack_all(setup: &QuantizedSetup) -> Result<HashMap<String, Arc<PreparedWeight>>> {
+    let mut out = HashMap::with_capacity(setup.int_weights.len());
+    for (name, pw) in &setup.int_weights {
+        out.insert(
+            name.clone(),
+            Arc::new(PreparedWeight::pack(pw.qw().clone(), pw.groups())?),
+        );
+    }
+    Ok(out)
+}
+
+fn bench_model(model: &ZooModel, batch: usize, scheme: Scheme, reps: usize) -> Result<Json> {
+    println!("\n-- {} @ batch {batch}, {scheme:?} --", model.name);
+    let calib = synthetic_dataset(16, 8, 8, 4, 4, 5);
+    let eval = synthetic_dataset(batch, 8, 8, 4, 4, 6);
+    let cache = calibrate(model, &calib, CalibCount::C1, &CalibBackend::Interp, 1)?;
+    let base = QuantConfig {
+        calib: CalibCount::C1,
+        scheme,
+        clip: Clipping::Max,
+        gran: Granularity::Channel,
+        mixed: false,
+    };
+    let plan = QuantPlan { base, layer_widths: None };
+    let setup = prepare_cached(model, &cache, &plan, &WeightCache::new())?;
+    let weights: HashMap<String, Arc<Tensor>> = model
+        .weights
+        .order
+        .iter()
+        .cloned()
+        .zip(setup.weights.iter().cloned())
+        .collect();
+    let x = eval.batch(&(0..batch).collect::<Vec<_>>());
+
+    let f32_route = Interpreter::new(&model.graph, &weights);
+    let steady_route = Interpreter::new(&model.graph, &weights)
+        .with_int_weights(&setup.int_weights);
+
+    // -- correctness gates, before any timing -------------------------
+    let ref_f32 = f32_route.forward_fq(&x, &setup.aq)?;
+    let mut scratch = InterpScratch::for_graph(&model.graph, batch);
+    let ref_steady = steady_route.forward_fq_with(&x, &setup.aq, &mut scratch)?;
+    let repacked = repack_all(&setup)?;
+    let repack_route =
+        Interpreter::new(&model.graph, &weights).with_int_weights(&repacked);
+    let ref_repack = repack_route.forward_fq(&x, &setup.aq)?;
+    anyhow::ensure!(
+        ref_steady.data == ref_repack.data,
+        "{}: prepacked and freshly packed panels disagree bitwise",
+        model.name
+    );
+    anyhow::ensure!(
+        argmax_batch(&ref_steady) == argmax_batch(&ref_f32),
+        "{}: integer route flipped a Top-1 prediction vs the f32 route",
+        model.name
+    );
+    let diff_f32 = max_abs_diff(&ref_steady, &ref_f32);
+
+    // -- steady-state no-pack / no-alloc assertions -------------------
+    let packs0 = pack_calls();
+    let allocs_steady = allocs_per_call(reps, || {
+        let logits = steady_route.forward_fq_with(&x, &setup.aq, &mut scratch)?;
+        std::hint::black_box(&logits);
+        Ok(())
+    })?;
+    anyhow::ensure!(
+        pack_calls() == packs0,
+        "{}: steady-state forwards re-packed a weight panel",
+        model.name
+    );
+    // the returned logits tensor (shape + data vecs) is the only
+    // steady-state allocation the arena design permits
+    anyhow::ensure!(
+        allocs_steady <= 4.0,
+        "{}: steady-state forward allocates ({allocs_steady:.1}/fwd)",
+        model.name
+    );
+    let packs_before_repack = pack_calls();
+    let mut repack_fwds = 0u64;
+    let allocs_repack = allocs_per_call(reps, || {
+        let fresh = repack_all(&setup)?;
+        let route = Interpreter::new(&model.graph, &weights).with_int_weights(&fresh);
+        let logits = route.forward_fq_with(&x, &setup.aq, &mut InterpScratch::new())?;
+        std::hint::black_box(&logits);
+        repack_fwds += 1;
+        Ok(())
+    })?;
+    anyhow::ensure!(
+        allocs_steady < allocs_repack,
+        "{}: repack baseline should out-allocate the arena path",
+        model.name
+    );
+    let packs_per_repack_fwd =
+        (pack_calls() - packs_before_repack) as f64 / repack_fwds as f64;
+
+    // -- timing -------------------------------------------------------
+    let mut variants = Vec::new();
+    let (p50_f32, mean) = bench("fq_f32 (fake-quant f32 GEMM)", reps, || {
+        let logits = f32_route.forward_fq_with(&x, &setup.aq, &mut scratch)?;
+        std::hint::black_box(&logits);
+        Ok(())
+    })?;
+    variants.push(("fq_f32", variant_row(p50_f32, mean, batch)));
+
+    let (p50_repack, mean) = bench("int_repack (pack every forward)", reps, || {
+        let fresh = repack_all(&setup)?;
+        let route = Interpreter::new(&model.graph, &weights).with_int_weights(&fresh);
+        let logits = route.forward_fq_with(&x, &setup.aq, &mut InterpScratch::new())?;
+        std::hint::black_box(&logits);
+        Ok(())
+    })?;
+    variants.push(("int_repack", variant_row(p50_repack, mean, batch)));
+
+    let (p50_steady, mean) = bench("int_steady (prepacked + arena)", reps, || {
+        let logits = steady_route.forward_fq_with(&x, &setup.aq, &mut scratch)?;
+        std::hint::black_box(&logits);
+        Ok(())
+    })?;
+    variants.push(("int_steady", variant_row(p50_steady, mean, batch)));
+
+    let speedup_repack = p50_repack / p50_steady;
+    let speedup_f32 = p50_f32 / p50_steady;
+    println!(
+        "   int_steady speedup: {speedup_repack:.2}x vs int_repack, \
+         {speedup_f32:.2}x vs fq_f32 (steady {allocs_steady:.1} allocs/fwd, \
+         repack {allocs_repack:.1})"
+    );
+    Ok(Json::obj(vec![
+        ("model", Json::str(&model.name)),
+        ("batch", Json::num(batch as f64)),
+        ("scheme", Json::str(&format!("{scheme:?}"))),
+        ("variants", Json::obj(variants)),
+        ("speedup_vs_repack", Json::num(speedup_repack)),
+        ("speedup_vs_f32", Json::num(speedup_f32)),
+        ("allocs_per_fwd_steady", Json::num(allocs_steady)),
+        ("allocs_per_fwd_repack", Json::num(allocs_repack)),
+        ("pack_calls_per_fwd_steady", Json::num(0.0)),
+        ("pack_calls_per_fwd_repack", Json::num(packs_per_repack_fwd)),
+        ("max_abs_diff_vs_f32", Json::num(diff_f32 as f64)),
+    ]))
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_interp.json".to_string());
+
+    // single thread: this bench measures the engine, not the pool
+    pool::set_thread_override(Some(1));
+    let reps = if smoke { 5 } else { 200 };
+    println!(
+        "integer pipeline A/B: {} reps/variant, single-thread (see \
+         BENCHMARKS.md \u{00a7}Kernel engine)",
+        reps
+    );
+
+    let syn8 = synthetic_model(8, 4, 4, 3)?;
+    let dense = dense_head(7)?;
+    let rows = vec![
+        bench_model(&syn8, 16, Scheme::Asymmetric, reps)?,
+        bench_model(&syn8, 1, Scheme::Asymmetric, reps)?,
+        bench_model(&dense, 1, Scheme::Asymmetric, reps)?,
+        bench_model(&dense, 1, Scheme::Symmetric, reps)?,
+    ];
+
+    let report = Json::obj(vec![
+        ("threads", Json::num(1.0)),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "variants",
+            Json::Arr(
+                ["fq_f32", "int_repack", "int_steady"]
+                    .iter()
+                    .map(|v| Json::str(*v))
+                    .collect(),
+            ),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    report.write_file(std::path::Path::new(&out_path))?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

@@ -33,8 +33,9 @@ use anyhow::Result;
 
 use crate::calib::{calibrate, CalibBackend, CalibrationCache};
 use crate::data::Dataset;
-use crate::interp::{argmax_batch, Interpreter};
+use crate::interp::{argmax_batch, InterpScratch, Interpreter};
 use crate::ir::Tensor;
+use crate::metrics::{DispatchCounters, DispatchStats};
 use crate::quant::{general_space, CalibCount, ConfigSpace, QuantPlan, SpaceRef};
 use crate::runtime::{tensor_to_literal, Runtime};
 use crate::util::pool::Pool;
@@ -328,6 +329,7 @@ pub struct InterpEvaluator<'a> {
     memo: Mutex<HashMap<usize, f64>>,
     measure_times: Mutex<Vec<f64>>,
     workers: Pool,
+    counters: DispatchCounters,
 }
 
 impl<'a> InterpEvaluator<'a> {
@@ -348,6 +350,7 @@ impl<'a> InterpEvaluator<'a> {
             memo: Mutex::new(HashMap::new()),
             measure_times: Mutex::new(Vec::new()),
             workers: Pool::auto(),
+            counters: DispatchCounters::new(),
         }
     }
 
@@ -370,6 +373,17 @@ impl<'a> InterpEvaluator<'a> {
     pub fn with_calibration(self, count: CalibCount, cache: Arc<CalibrationCache>) -> Self {
         self.calib.put(count, cache);
         self
+    }
+
+    /// Cumulative dispatch accounting across every measurement so far:
+    /// integer-engine vs f32-fallback layer/MAC tallies from the
+    /// interpreter, plus the prepacked-weight cache's hit/build counts.
+    pub fn dispatch_stats(&self) -> DispatchStats {
+        let mut s = self.counters.snapshot();
+        let (hits, builds) = self.wcache.int_cache_stats();
+        s.prepack_hits = hits;
+        s.prepack_builds = builds;
+        s
     }
 }
 
@@ -397,7 +411,8 @@ impl SharedEvaluator for InterpEvaluator<'_> {
             .cloned()
             .zip(setup.weights.iter().cloned())
             .collect();
-        let interp = Interpreter::new(&self.model.graph, &weights);
+        let interp = Interpreter::new(&self.model.graph, &weights)
+            .with_dispatch_counters(&self.counters);
         // int4/int8 conv/dense layers run on the packed integer kernels
         // (QUANTUNE_INT_INTERP=0 forces the legacy f32 fake-quant route)
         let interp = if crate::interp::int_interp_enabled() {
@@ -416,13 +431,20 @@ impl SharedEvaluator for InterpEvaluator<'_> {
         } else {
             self.workers
         };
-        let hits_per = workers.map(&chunks, |chunk| -> Result<usize> {
-            let x = self.eval.batch(chunk);
-            let logits = interp.forward_fq(&x, &setup.aq)?;
-            let preds = argmax_batch(&logits);
-            let labels = self.eval.labels_for(chunk);
-            Ok(preds.iter().zip(&labels).filter(|(&p, &l)| p == l as usize).count())
-        })?;
+        // each worker builds one scratch arena sized to the graph's
+        // high-water mark and reuses it across every batch it steals --
+        // steady-state forwards then allocate nothing but the logits
+        let hits_per = workers.map_init(
+            &chunks,
+            || InterpScratch::for_graph(&self.model.graph, 64),
+            |scratch, chunk| -> Result<usize> {
+                let x = self.eval.batch(chunk);
+                let logits = interp.forward_fq_with(&x, &setup.aq, scratch)?;
+                let preds = argmax_batch(&logits);
+                let labels = self.eval.labels_for(chunk);
+                Ok(preds.iter().zip(&labels).filter(|(&p, &l)| p == l as usize).count())
+            },
+        )?;
         let mut hits = 0usize;
         for h in hits_per {
             hits += h?;

@@ -17,15 +17,17 @@
 //! interior-mutable so the parallel sweep's workers share it.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::calib::CalibrationCache;
-use crate::ir::Tensor;
+use crate::interp::PreparedWeight;
+use crate::ir::{Op, Tensor};
 use crate::quant::{
     fake_quant_weights_at, quantize_weights_int, ActQuantization, BitWidth,
-    Granularity, QuantPlan, QuantWeight, Scheme,
+    Granularity, QuantPlan, Scheme,
 };
 use crate::zoo::ZooModel;
 
@@ -37,11 +39,13 @@ pub struct QuantizedSetup {
     /// except fp32 layers); `Arc`d so cache hits share storage instead
     /// of copying tensors
     pub weights: Vec<Arc<Tensor>>,
-    /// True-integer weights for the interpreter's integer fast path,
-    /// keyed by *layer* name: present for every int4/int8 `_w` tensor
-    /// (the widths the packed kernels cover), absent for
-    /// fp32/int16 layers, which stay on the f32 fake-quant route.
-    pub int_weights: HashMap<String, Arc<QuantWeight>>,
+    /// Prepacked true-integer weights for the interpreter's integer
+    /// fast path, keyed by *layer* name: present for every int4/int8
+    /// `_w` tensor (the widths the packed kernels cover), absent for
+    /// fp32/int16 layers, which stay on the f32 fake-quant route. The
+    /// GEMM panels are packed once here and `Arc`-shared across every
+    /// evaluation of the sweep — steady-state forwards never pack.
+    pub int_weights: HashMap<String, Arc<PreparedWeight>>,
     /// The plan this setup realizes.
     pub plan: QuantPlan,
 }
@@ -62,7 +66,9 @@ pub enum WeightVariant {
 #[derive(Default)]
 pub struct WeightCache {
     cached: Mutex<HashMap<(String, WeightVariant), Arc<Tensor>>>,
-    cached_int: Mutex<HashMap<(String, WeightVariant), Arc<QuantWeight>>>,
+    cached_int: Mutex<HashMap<(String, WeightVariant), Arc<PreparedWeight>>>,
+    int_hits: AtomicU64,
+    int_builds: AtomicU64,
 }
 
 impl WeightCache {
@@ -79,6 +85,12 @@ impl WeightCache {
     /// Number of distinct true-integer weights held.
     pub fn int_entries(&self) -> usize {
         self.cached_int.lock().unwrap().len()
+    }
+
+    /// (hits, builds) of the prepacked-weight cache: how many integer
+    /// lookups reused an existing panel set vs packed a new one.
+    pub fn int_cache_stats(&self) -> (u64, u64) {
+        (self.int_hits.load(Ordering::Relaxed), self.int_builds.load(Ordering::Relaxed))
     }
 
     fn get_or_build(
@@ -106,14 +118,16 @@ impl WeightCache {
         &self,
         name: &str,
         variant: WeightVariant,
-        build: impl FnOnce() -> QuantWeight,
-    ) -> Arc<QuantWeight> {
+        build: impl FnOnce() -> PreparedWeight,
+    ) -> Arc<PreparedWeight> {
         if let Some(q) =
             self.cached_int.lock().unwrap().get(&(name.to_string(), variant))
         {
+            self.int_hits.fetch_add(1, Ordering::Relaxed);
             return q.clone();
         }
         // same first-insert-wins protocol as get_or_build
+        self.int_builds.fetch_add(1, Ordering::Relaxed);
         let built = Arc::new(build());
         self.cached_int
             .lock()
@@ -207,17 +221,24 @@ pub fn prepare_cached(
             }
             WeightVariant::Fp32 => t.clone(),
         }));
-        // int4/int8 layers additionally get a true-integer weight so the
-        // interpreter can run them on the packed kernels; it shares the
-        // fake-quant tensor's grid exactly (same params), so both routes
-        // see identical quantized values
+        // int4/int8 layers additionally get a true-integer weight,
+        // prepacked into GEMM panels per group, so the interpreter can
+        // run them on the packed kernels without per-call packing; it
+        // shares the fake-quant tensor's grid exactly (same params), so
+        // both routes see identical quantized values
         if let WeightVariant::Quant(scheme, gran, width) = variant {
             if matches!(width, BitWidth::Int4 | BitWidth::Int8) {
-                let qw = wcache.get_or_build_int(name, variant, || {
-                    quantize_weights_int(t, scheme, gran, width)
-                        .expect("int4/int8 widths always quantize")
+                let groups = match model.graph.node(layer).map(|n| &n.op) {
+                    Some(Op::Conv { groups, .. }) => *groups,
+                    _ => 1,
+                };
+                let pw = wcache.get_or_build_int(name, variant, || {
+                    let qw = quantize_weights_int(t, scheme, gran, width)
+                        .expect("int4/int8 widths always quantize");
+                    PreparedWeight::pack(qw, groups)
+                        .expect("layer weights always pack for their groups")
                 });
-                int_weights.insert(layer.to_string(), qw);
+                int_weights.insert(layer.to_string(), pw);
             }
         }
     }
@@ -290,8 +311,14 @@ mod tests {
         let variant =
             WeightVariant::Quant(Scheme::Symmetric, Granularity::Tensor, BitWidth::Int8);
         let build = || {
-            quantize_weights_int(&t, Scheme::Symmetric, Granularity::Tensor, BitWidth::Int8)
-                .unwrap()
+            let qw = quantize_weights_int(
+                &t,
+                Scheme::Symmetric,
+                Granularity::Tensor,
+                BitWidth::Int8,
+            )
+            .unwrap();
+            PreparedWeight::pack(qw, 1).unwrap()
         };
         let a = wcache.get_or_build_int("l1_w", variant, build);
         let b = wcache.get_or_build_int("l1_w", variant, build);
@@ -299,5 +326,7 @@ mod tests {
         assert_eq!(wcache.int_entries(), 1);
         // the integer map is independent of the f32 map
         assert_eq!(wcache.entries(), 0);
+        // the prepack tallies saw one build and one reuse
+        assert_eq!(wcache.int_cache_stats(), (1, 1));
     }
 }

@@ -35,9 +35,24 @@
 //! Overflow: i8 operands bound each product by `128 * 127`, so a k up
 //! to ~130k accumulates within i32; our largest conv GEMM k is ~4.6k.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::util::pool;
 
 use super::gemm::PAR_MIN_MACS;
+
+/// Process-wide count of integer pack calls ([`pack_b_i8`] +
+/// [`pack_b_i4`]), for asserting that steady-state forwards run on
+/// prepacked panels (PR 7). Relaxed ordering: it is a statistic, not a
+/// synchronization point.
+static PACK_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Total integer pack calls since process start. Steady-state integer
+/// forwards must not move this counter -- `bench_interp` and the
+/// end-to-end tests assert a zero delta across repeated forward passes.
+pub fn pack_calls() -> u64 {
+    PACK_CALLS.load(Ordering::Relaxed)
+}
 
 /// Microkernel row-block height (A rows per accumulator block).
 pub const MR: usize = 4;
@@ -94,6 +109,7 @@ pub struct PanelsI8 {
 /// (`at(p, j)` returns `B[p, j]`), so callers can pack straight from a
 /// strided weight tensor without materializing the `[k, n]` matrix.
 pub fn pack_b_i8(k: usize, n: usize, at: impl Fn(usize, usize) -> i8) -> PanelsI8 {
+    PACK_CALLS.fetch_add(1, Ordering::Relaxed);
     let np = n.div_ceil(NR);
     let mut data = vec![0i8; np * k * NR];
     let mut col_sums = vec![0i32; n];
@@ -134,6 +150,7 @@ pub struct PanelsI4 {
 /// Pack an int4 B operand into [`PanelsI4`] via an element accessor
 /// (`at(p, j)` must return values in [-8, 7]).
 pub fn pack_b_i4(k: usize, n: usize, at: impl Fn(usize, usize) -> i8) -> PanelsI4 {
+    PACK_CALLS.fetch_add(1, Ordering::Relaxed);
     let kp = k.div_ceil(2);
     let np = n.div_ceil(NR);
     let mut data = vec![0u8; np * kp * NR];

@@ -12,16 +12,43 @@
 //!
 //! In fake-quant mode the interpreter can run conv/dense layers on true
 //! integer operands instead of round-tripping through f32: attach a
-//! per-layer [`QuantWeight`] map with [`Interpreter::with_int_weights`]
-//! and every conv/dense whose input tensor is known to sit exactly on a
-//! quantization grid dispatches to the packed [`kernels`] engine
-//! (i8 x i8 -> i32, or packed-int4 weights consumed two-per-byte).
-//! Zero points are handled with the gemmlowp correction terms, so the
-//! centered product `sum (qa - za)(qw - zw)` is computed exactly in
-//! integer arithmetic; the i32 accumulator is then scaled once by
-//! `scale_a * scale_w` and biased. Layers whose input is not on a grid
-//! (bypassed quant points, avg-pooled values, fp32-width weights) fall
-//! back to the legacy f32 fake-quant route transparently.
+//! per-layer [`PreparedWeight`] map with
+//! [`Interpreter::with_int_weights`] and every conv/dense whose input
+//! sits exactly on a quantization grid dispatches to the packed
+//! [`kernels`] engine (i8 x i8 -> i32, or packed-int4 weights consumed
+//! two-per-byte). Zero points are handled with the gemmlowp correction
+//! terms, so the centered product `sum (qa - za)(qw - zw)` is computed
+//! exactly in integer arithmetic; the i32 accumulator is then scaled
+//! once by `scale_a * scale_w`, biased, and requantized straight back
+//! onto the consumer's grid. Layers whose input is not on a grid
+//! (bypassed quant points, fp32-width weights) fall back to the legacy
+//! f32 fake-quant route transparently.
+//!
+//! Three properties make the steady state cheap (PR 7):
+//!
+//! - **Prepacked panels.** Weight panels are packed once into a
+//!   [`PreparedWeight`] (per layer, per group) when the sweep's
+//!   [`crate::coordinator::WeightCache`] builds its integer entries,
+//!   not per forward call. Packed col-sums and per-group zero-point
+//!   slices ride along.
+//! - **Integer-resident activations.** Values flowing between integer
+//!   layers stay `i8` in a [`QTensor`] (this is the interpreter's own
+//!   activation tensor — distinct from the VTA-path `crate::ir::QTensor`
+//!   accessor struct). Conv/dense outputs are requantized with the
+//!   activation folded into the integer clamp; max-pool, shuffle and
+//!   concat consume and produce `i8` directly; average pooling sums in
+//!   i32 and divides once. Dequantization to f32 happens only at
+//!   genuine f32 boundaries (bypassed points, f32-route layers, Add,
+//!   avg-pool output, and the final logits).
+//! - **Scratch arena.** All per-forward buffers (im2col patches, i32
+//!   accumulators, the env value pool) live in a reusable
+//!   [`InterpScratch`], sized once per worker; steady-state forwards
+//!   allocate nothing but the returned logits tensor.
+//!
+//! Bit-exactness: the requantization applies the *same* f32 op sequence
+//! as the fake-quant oracle (`acc as f32 * (scale_a * scale_w) + bias`,
+//! then `quantize`), so the integer-resident route is bitwise identical
+//! to the legacy route at every on-grid point; tests pin this.
 
 pub mod gemm;
 pub mod kernels;
@@ -32,6 +59,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::ir::{window_out_dim, Act, Graph, Op, PoolKind, Tensor};
+use crate::metrics::DispatchCounters;
 use crate::quant::{ActQuantization, IntRepr, QParams, QuantWeight};
 
 use gemm::gemm_f32;
@@ -45,6 +73,303 @@ pub fn int_interp_enabled() -> bool {
     match std::env::var("QUANTUNE_INT_INTERP") {
         Ok(v) => v != "0",
         Err(_) => true,
+    }
+}
+
+/// An integer-resident activation tensor: raw `i8` grid values plus the
+/// [`QParams`] grid they live on. `data[i]` dequantizes to
+/// `(data[i] - qp.zero_point) * qp.scale`.
+///
+/// This is the interpreter's internal activation carrier (PR 7), not
+/// the VTA accessor struct of the same name in `crate::ir`.
+#[derive(Clone, Debug)]
+pub struct QTensor {
+    /// NHWC (or [n, c]) shape, like [`Tensor`].
+    pub shape: Vec<usize>,
+    /// Raw quantized values, row-major.
+    pub data: Vec<i8>,
+    /// The grid the values live on.
+    pub qp: QParams,
+}
+
+impl QTensor {
+    /// Dequantize to a fresh f32 [`Tensor`].
+    pub fn dequantize(&self) -> Tensor {
+        let (zp, s) = (self.qp.zero_point, self.qp.scale);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&q| (q as i32 - zp) as f32 * s).collect(),
+        }
+    }
+}
+
+/// Packed GEMM operand panels for one (layer, group): the int8 or
+/// packed-int4 form the [`kernels`] engine consumes directly.
+pub enum PackedPanels {
+    /// int8 weight panels.
+    I8(kernels::PanelsI8),
+    /// packed-int4 weight panels.
+    I4(kernels::PanelsI4),
+}
+
+/// A [`QuantWeight`] prepacked for the integer GEMM engine: per-group
+/// panels (with col-sums) and per-group zero-point slices, built once
+/// per (layer, config-variant) and `Arc`-shared across a whole sweep.
+///
+/// Steady-state forwards call no `pack_b_*` and read only the packed
+/// form; the original [`QuantWeight`] stays reachable for scales,
+/// zero points and metadata.
+pub struct PreparedWeight {
+    qw: QuantWeight,
+    groups: usize,
+    panels: Vec<PackedPanels>,
+    zbs: Vec<Vec<i32>>,
+}
+
+impl PreparedWeight {
+    /// Pack `qw` for `groups` convolution groups (1 for dense). The
+    /// weight's last shape axis is the output-channel axis; each group
+    /// packs a `[rows, out_ch/groups]` panel set.
+    pub fn pack(qw: QuantWeight, groups: usize) -> Result<PreparedWeight> {
+        anyhow::ensure!(groups >= 1, "prepack: groups must be >= 1");
+        let out_ch = *qw
+            .shape
+            .last()
+            .ok_or_else(|| anyhow!("prepack: scalar weight shape"))?;
+        anyhow::ensure!(out_ch > 0, "prepack: zero output channels");
+        anyhow::ensure!(
+            out_ch % groups == 0,
+            "prepack: out_ch {out_ch} not divisible by groups {groups}"
+        );
+        anyhow::ensure!(
+            qw.len() % out_ch == 0,
+            "prepack: {} values not divisible by out_ch {out_ch}",
+            qw.len()
+        );
+        let nscale = qw.scales.len();
+        anyhow::ensure!(
+            nscale == 1 || nscale == out_ch,
+            "prepack: {nscale} scale groups for {out_ch} channels"
+        );
+        let rows = qw.len() / out_ch;
+        let outg = out_ch / groups;
+        let mut panels = Vec::with_capacity(groups);
+        let mut zbs = Vec::with_capacity(groups);
+        for g in 0..groups {
+            let zb: Vec<i32> = if nscale == 1 {
+                vec![qw.zero_points[0]]
+            } else {
+                qw.zero_points[g * outg..(g + 1) * outg].to_vec()
+            };
+            let p = match &qw.repr {
+                IntRepr::I8(d) => PackedPanels::I8(pack_b_i8(rows, outg, |p, j| {
+                    d[p * out_ch + g * outg + j]
+                })),
+                IntRepr::I4(pk) => PackedPanels::I4(pack_b_i4(rows, outg, |p, j| {
+                    pk.get(p * out_ch + g * outg + j)
+                })),
+            };
+            panels.push(p);
+            zbs.push(zb);
+        }
+        Ok(PreparedWeight { qw, groups, panels, zbs })
+    }
+
+    /// The quantized weight the panels were packed from.
+    pub fn qw(&self) -> &QuantWeight {
+        &self.qw
+    }
+
+    /// Number of groups the panels were packed for.
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+
+    /// Packed panels + zero-point slice for group `g`.
+    pub fn group(&self, g: usize) -> (&PackedPanels, &[i32]) {
+        (&self.panels[g], &self.zbs[g])
+    }
+}
+
+/// Which evaluation semantics to apply.
+#[derive(Clone, Copy)]
+enum Mode<'q> {
+    Fp32,
+    FakeQuant(&'q ActQuantization),
+    Acts,
+}
+
+/// A value in the interpreter environment: plain f32 or
+/// integer-resident on a quantization grid.
+enum Value {
+    F(Tensor),
+    Q(QTensor),
+}
+
+impl Value {
+    fn shape(&self) -> &[usize] {
+        match self {
+            Value::F(t) => &t.shape,
+            Value::Q(q) => &q.shape,
+        }
+    }
+}
+
+/// Borrowed-or-owned f32 view of a [`Value`]: f32 values borrow, i8
+/// values dequantize into a pooled scratch tensor (the fallback
+/// boundary). Return the owned case with [`recycle_cow`].
+enum FCow<'v> {
+    B(&'v Tensor),
+    O(Tensor),
+}
+
+impl FCow<'_> {
+    fn t(&self) -> &Tensor {
+        match self {
+            FCow::B(t) => t,
+            FCow::O(t) => t,
+        }
+    }
+}
+
+fn to_f32<'v>(v: &'v Value, scratch: &mut InterpScratch) -> FCow<'v> {
+    match v {
+        Value::F(t) => FCow::B(t),
+        Value::Q(q) => {
+            let mut t = scratch.tensor(&q.shape);
+            let (zp, s) = (q.qp.zero_point, q.qp.scale);
+            for (d, &qv) in t.data.iter_mut().zip(&q.data) {
+                *d = (qv as i32 - zp) as f32 * s;
+            }
+            FCow::O(t)
+        }
+    }
+}
+
+fn recycle_cow(c: FCow<'_>, scratch: &mut InterpScratch) {
+    if let FCow::O(t) = c {
+        scratch.free_f.push(t);
+    }
+}
+
+/// Per-worker scratch arena for the interpreter: every buffer a forward
+/// pass needs (im2col patches, i8 staging, i32 accumulators, hoisted
+/// per-channel combined scales, and a pool of recycled env tensors),
+/// reused across layers, batch items and forward calls so the steady
+/// state performs no heap allocation.
+///
+/// Build one per worker with [`InterpScratch::for_graph`] (sizes the
+/// pools to the graph's high-water mark) and pass it to
+/// [`Interpreter::forward_fq_with`]; the `forward_*` convenience
+/// wrappers create a transient arena internally.
+#[derive(Default)]
+pub struct InterpScratch {
+    free_f: Vec<Tensor>,
+    free_q: Vec<QTensor>,
+    patches_f32: Vec<f32>,
+    patches_i8: Vec<i8>,
+    acc: Vec<i32>,
+    comb: Vec<f32>,
+    wbuf: Vec<f32>,
+    gbuf: Vec<f32>,
+    env: Vec<Option<Value>>,
+    uses: Vec<u32>,
+}
+
+impl InterpScratch {
+    /// An empty arena; buffers grow on first use.
+    pub fn new() -> InterpScratch {
+        InterpScratch::default()
+    }
+
+    /// An arena pre-sized to `graph`'s high-water mark at batch size
+    /// `batch`: enough pooled tensors for every live value plus the
+    /// largest im2col / accumulator / weight panel any conv or dense
+    /// layer needs. If the graph's shapes cannot be inferred the arena
+    /// starts empty and grows on demand (behaviourally identical, just
+    /// lazier).
+    pub fn for_graph(graph: &Graph, batch: usize) -> InterpScratch {
+        let mut s = InterpScratch::default();
+        let Ok(shapes) = graph.infer_shapes() else { return s };
+        let mut max_elems = 0usize;
+        for sh in shapes.values() {
+            max_elems = max_elems.max(batch * sh.iter().product::<usize>());
+        }
+        let slots = graph.nodes.len() + 3;
+        for _ in 0..slots {
+            s.free_f
+                .push(Tensor { shape: Vec::new(), data: Vec::with_capacity(max_elems) });
+            s.free_q.push(QTensor {
+                shape: Vec::new(),
+                data: Vec::with_capacity(max_elems),
+                qp: QParams::identity(),
+            });
+        }
+        let (mut max_patch, mut max_acc, mut max_ch, mut max_w) =
+            (0usize, 0usize, 0usize, 0usize);
+        for node in &graph.nodes {
+            match &node.op {
+                Op::Conv { k, in_ch, out_ch, groups, .. } => {
+                    let (kk, icg, oc) = (*k, in_ch / groups, *out_ch);
+                    let Some(osh) = shapes.get(node.name.as_str()) else { continue };
+                    let out_elems = batch * osh.iter().product::<usize>();
+                    let m = out_elems / oc;
+                    let rows = kk * kk * icg;
+                    max_patch = max_patch.max(m * rows);
+                    max_acc = max_acc.max(out_elems / groups);
+                    max_ch = max_ch.max(oc);
+                    max_w = max_w.max(rows * (oc / groups));
+                }
+                Op::Dense { in_dim, out_dim } => {
+                    max_acc = max_acc.max(batch * out_dim);
+                    max_ch = max_ch.max(*out_dim);
+                    max_w = max_w.max(in_dim * out_dim);
+                }
+                _ => {}
+            }
+        }
+        s.patches_f32.reserve(max_patch);
+        s.patches_i8.reserve(max_patch);
+        s.acc.reserve(max_acc);
+        s.comb.reserve(max_ch);
+        s.wbuf.reserve(max_w);
+        s.gbuf.reserve(max_acc);
+        s
+    }
+
+    fn tensor(&mut self, shape: &[usize]) -> Tensor {
+        let mut t = self
+            .free_f
+            .pop()
+            .unwrap_or(Tensor { shape: Vec::new(), data: Vec::new() });
+        t.shape.clear();
+        t.shape.extend_from_slice(shape);
+        let len = shape.iter().product();
+        t.data.clear();
+        t.data.resize(len, 0.0);
+        t
+    }
+
+    fn qtensor(&mut self, shape: &[usize], qp: QParams) -> QTensor {
+        let mut q = self.free_q.pop().unwrap_or(QTensor {
+            shape: Vec::new(),
+            data: Vec::new(),
+            qp: QParams::identity(),
+        });
+        q.shape.clear();
+        q.shape.extend_from_slice(shape);
+        let len = shape.iter().product();
+        q.data.clear();
+        q.data.resize(len, 0);
+        q.qp = qp;
+        q
+    }
+
+    fn recycle(&mut self, v: Value) {
+        match v {
+            Value::F(t) => self.free_f.push(t),
+            Value::Q(q) => self.free_q.push(q),
+        }
     }
 }
 
@@ -146,17 +471,32 @@ fn im2col_i8(
 }
 
 /// Repack HWIO weights [k,k,cg,outg] into a [k*k*cg, outg] GEMM operand
-/// for group `g` (selecting output channels g*outg..(g+1)*outg).
-fn weight_matrix(wt: &Tensor, g: usize, groups: usize) -> (Vec<f32>, usize, usize) {
+/// for group `g` into a reused scratch buffer.
+fn weight_matrix_into(
+    wt: &Tensor,
+    g: usize,
+    groups: usize,
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
     let (k1, k2, cg, out_ch) = (wt.shape[0], wt.shape[1], wt.shape[2], wt.shape[3]);
     let outg = out_ch / groups;
     let rows = k1 * k2 * cg;
-    let mut m = vec![0.0f32; rows * outg];
+    out.clear();
+    out.resize(rows * outg, 0.0);
     for r in 0..rows {
         let src = r * out_ch + g * outg;
-        m[r * outg..(r + 1) * outg].copy_from_slice(&wt.data[src..src + outg]);
+        out[r * outg..(r + 1) * outg].copy_from_slice(&wt.data[src..src + outg]);
     }
-    (m, rows, outg)
+    (rows, outg)
+}
+
+/// Precomputed per-node evaluation plan: resolved input value ids,
+/// weight-map keys, and the node's quant-point row (if any).
+struct NodePlan {
+    in_ids: Vec<usize>,
+    w_key: String,
+    b_key: String,
+    qrow: Option<usize>,
 }
 
 /// Pure-rust reference interpreter for one (graph, weight set) pair.
@@ -169,54 +509,117 @@ pub struct Interpreter<'a, W: std::borrow::Borrow<Tensor> = Tensor> {
     /// The model graph being evaluated.
     pub graph: &'a Graph,
     weights: &'a HashMap<String, W>,
-    int_weights: Option<&'a HashMap<String, Arc<QuantWeight>>>,
-}
-
-/// Which evaluation semantics to apply.
-enum Mode<'q> {
-    Fp32,
-    FakeQuant(&'q ActQuantization),
-    Acts(Vec<Tensor>),
+    int_weights: Option<&'a HashMap<String, Arc<PreparedWeight>>>,
+    counters: Option<&'a DispatchCounters>,
+    plans: Vec<NodePlan>,
+    uses0: Vec<u32>,
+    input_qrow: Option<usize>,
+    out_id: usize,
 }
 
 impl<'a, W: std::borrow::Borrow<Tensor>> Interpreter<'a, W> {
     /// `weights` must contain every `{layer}_w` / `{layer}_b`. For the
     /// fake-quant mode pass weights already fake-quantized per config.
     pub fn new(graph: &'a Graph, weights: &'a HashMap<String, W>) -> Self {
-        Interpreter { graph, weights, int_weights: None }
+        let qpoints = graph.quant_points();
+        let qindex: HashMap<&str, usize> =
+            qpoints.iter().enumerate().map(|(i, s)| (s.as_str(), i)).collect();
+        let mut ids: HashMap<&str, usize> = HashMap::new();
+        ids.insert("input", 0);
+        for (i, node) in graph.nodes.iter().enumerate() {
+            ids.insert(node.name.as_str(), i + 1);
+        }
+        let nvals = graph.nodes.len() + 1;
+        let mut uses0 = vec![0u32; nvals];
+        let mut plans = Vec::with_capacity(graph.nodes.len());
+        for node in &graph.nodes {
+            let in_ids: Vec<usize> = node
+                .inputs
+                .iter()
+                .map(|n| ids.get(n.as_str()).copied().unwrap_or(usize::MAX))
+                .collect();
+            for &id in &in_ids {
+                if id != usize::MAX {
+                    uses0[id] += 1;
+                }
+            }
+            plans.push(NodePlan {
+                in_ids,
+                w_key: format!("{}_w", node.name),
+                b_key: format!("{}_b", node.name),
+                qrow: qindex.get(node.name.as_str()).copied(),
+            });
+        }
+        let out_id = if graph.nodes.is_empty() {
+            0
+        } else {
+            ids.get(graph.output()).copied().unwrap_or(0)
+        };
+        uses0[out_id] += 1;
+        let input_qrow = qindex.get("input").copied();
+        Interpreter {
+            graph,
+            weights,
+            int_weights: None,
+            counters: None,
+            plans,
+            uses0,
+            input_qrow,
+            out_id,
+        }
     }
 
-    /// Attach integer weights (keyed by layer name, not `{layer}_w`) to
-    /// enable the integer fast path in fake-quant mode. Layers absent
-    /// from the map keep the f32 fake-quant route, so a partial map
-    /// (e.g. only the int4/int8 layers of a mixed config) is fine.
-    pub fn with_int_weights(mut self, int_weights: &'a HashMap<String, Arc<QuantWeight>>) -> Self {
+    /// Attach prepacked integer weights (keyed by layer name, not
+    /// `{layer}_w`) to enable the integer fast path in fake-quant mode.
+    /// Layers absent from the map keep the f32 fake-quant route, so a
+    /// partial map (e.g. only the int4/int8 layers of a mixed config)
+    /// is fine.
+    pub fn with_int_weights(
+        mut self,
+        int_weights: &'a HashMap<String, Arc<PreparedWeight>>,
+    ) -> Self {
         self.int_weights = Some(int_weights);
+        self
+    }
+
+    /// Attach dispatch counters: every fake-quant conv/dense records
+    /// whether it ran on the integer engine or the f32 fallback, plus
+    /// its MAC count, into `counters` (shared across workers).
+    pub fn with_dispatch_counters(mut self, counters: &'a DispatchCounters) -> Self {
+        self.counters = Some(counters);
         self
     }
 
     /// fp32 logits [N, classes].
     pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
-        match self.run(x, Mode::Fp32)? {
-            (logits, None) => Ok(logits),
-            _ => unreachable!(),
-        }
+        self.forward_with(x, &mut InterpScratch::new())
+    }
+
+    /// fp32 logits, reusing a caller-held scratch arena.
+    pub fn forward_with(&self, x: &Tensor, scratch: &mut InterpScratch) -> Result<Tensor> {
+        Ok(self.run(x, Mode::Fp32, scratch)?.0)
     }
 
     /// Fake-quantized logits (weights must be pre-fake-quantized).
     pub fn forward_fq(&self, x: &Tensor, aq: &ActQuantization) -> Result<Tensor> {
-        match self.run(x, Mode::FakeQuant(aq))? {
-            (logits, None) => Ok(logits),
-            _ => unreachable!(),
-        }
+        self.forward_fq_with(x, aq, &mut InterpScratch::new())
+    }
+
+    /// Fake-quantized logits, reusing a caller-held scratch arena — the
+    /// allocation-free steady-state entry point for sweeps.
+    pub fn forward_fq_with(
+        &self,
+        x: &Tensor,
+        aq: &ActQuantization,
+        scratch: &mut InterpScratch,
+    ) -> Result<Tensor> {
+        Ok(self.run(x, Mode::FakeQuant(aq), scratch)?.0)
     }
 
     /// fp32 logits + the tensor at every quantization point (calibration).
     pub fn forward_acts(&self, x: &Tensor) -> Result<(Tensor, Vec<Tensor>)> {
-        match self.run(x, Mode::Acts(Vec::new()))? {
-            (logits, Some(acts)) => Ok((logits, acts)),
-            _ => unreachable!(),
-        }
+        let (logits, acts) = self.run(x, Mode::Acts, &mut InterpScratch::new())?;
+        Ok((logits, acts.unwrap_or_default()))
     }
 
     fn weight(&self, name: &str) -> Result<&Tensor> {
@@ -226,154 +629,247 @@ impl<'a, W: std::borrow::Borrow<Tensor>> Interpreter<'a, W> {
             .ok_or_else(|| anyhow!("missing weight {name}"))
     }
 
-    /// Integer-path dispatch test for a conv/dense node: fires only in
-    /// fake-quant mode, when the node's input tensor is known to sit
-    /// exactly on a quantization grid, and an integer weight exists for
-    /// the layer. Returns the input grid params + the integer weight.
-    fn int_ctx(
+    fn run(
         &self,
-        mode: &Mode<'_>,
-        grid: &HashMap<String, QParams>,
-        node: &crate::ir::Node,
-    ) -> Option<(QParams, &'a QuantWeight)> {
-        if !matches!(mode, Mode::FakeQuant(_)) {
-            return None;
-        }
-        let iw = self.int_weights?;
-        let pa = grid.get(node.inputs[0].as_str()).copied()?;
-        let qw = iw.get(node.name.as_str())?;
-        Some((pa, qw.as_ref()))
-    }
-
-    fn run(&self, x: &Tensor, mut mode: Mode) -> Result<(Tensor, Option<Vec<Tensor>>)> {
+        x: &Tensor,
+        mode: Mode,
+        scratch: &mut InterpScratch,
+    ) -> Result<(Tensor, Option<Vec<Tensor>>)> {
         anyhow::ensure!(x.rank() == 4, "input must be NHWC, got {:?}", x.shape);
-        let qpoints = self.graph.quant_points();
-        let qindex: HashMap<&str, usize> =
-            qpoints.iter().enumerate().map(|(i, s)| (s.as_str(), i)).collect();
+        let fq = matches!(mode, Mode::FakeQuant(_));
+        let integer_resident = fq && self.int_weights.is_some_and(|m| !m.is_empty());
+        let mut captured: Vec<Tensor> = Vec::new();
 
-        // env entries proven to lie exactly on a quantization grid:
-        // fake-quant output is (q - zp) * scale by construction, and
-        // re-quantizing such a value recovers q exactly (the product's
-        // rounding error is far below half a grid step)
-        let mut grid: HashMap<String, QParams> = HashMap::new();
+        // the env lives in the arena between calls so its slots (and
+        // the tensors they recycle into the free pools) never reallocate
+        let nvals = self.graph.nodes.len() + 1;
+        let mut env = std::mem::take(&mut scratch.env);
+        env.clear();
+        env.resize_with(nvals, || None);
+        let mut uses = std::mem::take(&mut scratch.uses);
+        uses.clear();
+        uses.extend_from_slice(&self.uses0);
 
-        // active (non-bypassed) quant-point params for `name`, if any
-        let qp_of = |name: &str, mode: &Mode| -> Option<QParams> {
+        // active (non-bypassed) quant-point params for a qindex row
+        let qp_at = |row: Option<usize>| -> Option<QParams> {
             match mode {
-                Mode::FakeQuant(aq) => qindex
-                    .get(name)
-                    .copied()
-                    .filter(|&i| !aq.is_bypassed(i))
-                    .map(|i| aq.params(i)),
+                Mode::FakeQuant(aq) => {
+                    row.filter(|&i| !aq.is_bypassed(i)).map(|i| aq.params(i))
+                }
                 _ => None,
             }
         };
 
-        let apply_q = |name: &str, t: Tensor, mode: &mut Mode| -> Tensor {
-            match mode {
-                Mode::Fp32 => t,
-                Mode::Acts(captured) => {
-                    if qindex.contains_key(name) {
-                        captured.push(t.clone());
-                    }
-                    t
+        if matches!(mode, Mode::Acts) && self.input_qrow.is_some() {
+            captured.push(x.clone());
+        }
+        let input_val = match qp_at(self.input_qrow) {
+            // fake-quant output is (q - zp) * scale by construction, so
+            // quantizing the input once yields the exact grid the f32
+            // route would round-trip through
+            Some(p) if integer_resident => {
+                let mut q = scratch.qtensor(&x.shape, p);
+                for (d, &v) in q.data.iter_mut().zip(&x.data) {
+                    *d = p.quantize(v) as i8;
                 }
-                Mode::FakeQuant(aq) => match qindex.get(name) {
-                    Some(&i) if !aq.is_bypassed(i) => {
-                        let p = aq.params(i);
-                        Tensor {
-                            shape: t.shape,
-                            data: t.data.iter().map(|&v| p.fake_quant(v)).collect(),
-                        }
+                Value::Q(q)
+            }
+            qp => {
+                let mut t = scratch.tensor(&x.shape);
+                t.data.copy_from_slice(&x.data);
+                if let Some(p) = qp {
+                    for v in &mut t.data {
+                        *v = p.fake_quant(*v);
                     }
-                    _ => t,
-                },
+                }
+                Value::F(t)
             }
         };
+        env[0] = Some(input_val);
 
-        let mut env: HashMap<&str, Tensor> = HashMap::new();
-        if let Some(p) = qp_of("input", &mode) {
-            grid.insert("input".to_string(), p);
-        }
-        env.insert("input", apply_q("input", x.clone(), &mut mode));
-
-        let mut patch_buf = Vec::new();
-        for node in &self.graph.nodes {
-            let ins: Vec<&Tensor> = node
-                .inputs
-                .iter()
-                .map(|i| env.get(i.as_str()).ok_or_else(|| anyhow!("missing {i}")))
-                .collect::<Result<_>>()?;
-            let t = match &node.op {
+        for (idx, node) in self.graph.nodes.iter().enumerate() {
+            let plan = &self.plans[idx];
+            for (&id, name) in plan.in_ids.iter().zip(&node.inputs) {
+                anyhow::ensure!(id != usize::MAX && env[id].is_some(), "missing {name}");
+            }
+            let pout = qp_at(plan.qrow);
+            let out: Value = match &node.op {
                 Op::Conv { k, stride, pad, in_ch, out_ch, groups, act } => {
-                    match self.int_ctx(&mode, &grid, node) {
-                        Some((pa, qw)) => self.conv_int(
-                            ins[0], node, *k, *stride, *pad, *in_ch, *out_ch, *groups,
-                            *act, pa, qw,
-                        )?,
-                        None => self.conv(
-                            ins[0], node, *k, *stride, *pad, *in_ch, *out_ch, *groups,
-                            *act, &mut patch_buf,
-                        )?,
+                    let (kk, st, pd, ic, oc, gr, a) =
+                        (*k, *stride, *pad, *in_ch, *out_ch, *groups, *act);
+                    let vin = env[plan.in_ids[0]].as_ref().unwrap();
+                    let ipw = if fq {
+                        self.int_weights.and_then(|m| m.get(node.name.as_str()))
+                    } else {
+                        None
+                    };
+                    match (vin, ipw) {
+                        (Value::Q(qx), Some(pw)) => {
+                            let out = self.conv_int(
+                                qx, node, &plan.b_key, kk, st, pd, ic, oc, gr, a,
+                                pw.as_ref(), pout, scratch,
+                            )?;
+                            if let Some(cs) = self.counters {
+                                cs.record(true, conv_macs(out.shape(), kk, ic, oc, gr));
+                            }
+                            out
+                        }
+                        _ => {
+                            let xc = to_f32(vin, scratch);
+                            let t = self.conv(
+                                xc.t(), node, &plan.w_key, &plan.b_key, kk, st, pd,
+                                ic, oc, gr, a, scratch,
+                            )?;
+                            if fq {
+                                if let Some(cs) = self.counters {
+                                    cs.record(false, conv_macs(&t.shape, kk, ic, oc, gr));
+                                }
+                            }
+                            recycle_cow(xc, scratch);
+                            Value::F(t)
+                        }
                     }
                 }
                 Op::Pool { kind, k, stride, pad } => {
-                    pool(ins[0], &node.name, *kind, *k, *stride, *pad)?
-                }
-                Op::Gap => gap(ins[0]),
-                Op::Add { act } => {
-                    anyhow::ensure!(ins[0].shape == ins[1].shape, "add shape mismatch");
-                    Tensor {
-                        shape: ins[0].shape.clone(),
-                        data: ins[0]
-                            .data
-                            .iter()
-                            .zip(&ins[1].data)
-                            .map(|(&a, &b)| act.apply(a + b))
-                            .collect(),
+                    let (kk, st, pd) = (*k, *stride, *pad);
+                    let vin = env[plan.in_ids[0]].as_ref().unwrap();
+                    match (vin, kind) {
+                        (Value::Q(qx), PoolKind::Max) => {
+                            Value::Q(pool_max_q(qx, &node.name, kk, st, pd, scratch)?)
+                        }
+                        (Value::Q(qx), PoolKind::Avg) => {
+                            Value::F(pool_avg_q(qx, &node.name, kk, st, pd, scratch)?)
+                        }
+                        (Value::F(t), _) => {
+                            Value::F(pool(t, &node.name, *kind, kk, st, pd)?)
+                        }
                     }
                 }
-                Op::Concat => concat(&node.name, &ins)?,
-                Op::Shuffle { groups } => shuffle(ins[0], *groups),
+                Op::Gap => gap_value(env[plan.in_ids[0]].as_ref().unwrap(), scratch),
+                Op::Add { act } => {
+                    let a = env[plan.in_ids[0]].as_ref().unwrap();
+                    let b = env[plan.in_ids[1]].as_ref().unwrap();
+                    add_values(a, b, *act, scratch)?
+                }
+                Op::Concat => {
+                    let ins: Vec<&Value> =
+                        plan.in_ids.iter().map(|&id| env[id].as_ref().unwrap()).collect();
+                    concat_values(&node.name, &ins, scratch)?
+                }
+                Op::Shuffle { groups } => {
+                    match env[plan.in_ids[0]].as_ref().unwrap() {
+                        Value::F(t) => Value::F(shuffle(t, *groups)),
+                        Value::Q(q) => Value::Q(shuffle_q(q, *groups, scratch)),
+                    }
+                }
                 Op::Dense { in_dim, out_dim } => {
-                    match self.int_ctx(&mode, &grid, node) {
-                        Some((pa, qw)) => {
-                            self.dense_int(ins[0], node, *in_dim, *out_dim, pa, qw)?
+                    let (idim, odim) = (*in_dim, *out_dim);
+                    let vin = env[plan.in_ids[0]].as_ref().unwrap();
+                    let ipw = if fq {
+                        self.int_weights.and_then(|m| m.get(node.name.as_str()))
+                    } else {
+                        None
+                    };
+                    match (vin, ipw) {
+                        (Value::Q(qx), Some(pw)) => {
+                            let macs = (qx.shape[0] * idim * odim) as u64;
+                            let out = self.dense_int(
+                                qx, node, &plan.b_key, idim, odim, pw.as_ref(), pout,
+                                scratch,
+                            )?;
+                            if let Some(cs) = self.counters {
+                                cs.record(true, macs);
+                            }
+                            out
                         }
-                        None => {
-                            let w = self.weight(&format!("{}_w", node.name))?;
-                            let b = self.weight(&format!("{}_b", node.name))?;
-                            let n = ins[0].shape[0];
-                            let mut out = vec![0.0f32; n * out_dim];
-                            for chunk in out.chunks_exact_mut(*out_dim) {
+                        _ => {
+                            let xc = to_f32(vin, scratch);
+                            let w = self.weight(&plan.w_key)?;
+                            let b = self.weight(&plan.b_key)?;
+                            let n = xc.t().shape[0];
+                            let mut t = scratch.tensor(&[n, odim]);
+                            for chunk in t.data.chunks_exact_mut(odim) {
                                 chunk.copy_from_slice(&b.data);
                             }
-                            gemm_f32(n, *in_dim, *out_dim, &ins[0].data, &w.data, &mut out);
-                            Tensor { shape: vec![n, *out_dim], data: out }
+                            gemm_f32(n, idim, odim, &xc.t().data, &w.data, &mut t.data);
+                            if fq {
+                                if let Some(cs) = self.counters {
+                                    cs.record(false, (n * idim * odim) as u64);
+                                }
+                            }
+                            recycle_cow(xc, scratch);
+                            Value::F(t)
                         }
                     }
                 }
             };
-            let qp = qp_of(&node.name, &mode);
-            let t = apply_q(&node.name, t, &mut mode);
-            if let Some(p) = qp {
-                grid.insert(node.name.clone(), p);
-            } else if matches!(
-                &node.op,
-                Op::Pool { kind: PoolKind::Max, .. } | Op::Shuffle { .. }
-            ) {
-                // value-preserving ops keep their input's grid (max-pool
-                // selects existing values, shuffle permutes them)
-                if let Some(p) = grid.get(node.inputs[0].as_str()).copied() {
-                    grid.insert(node.name.clone(), p);
+            let out = match mode {
+                Mode::Fp32 => out,
+                Mode::Acts => {
+                    if plan.qrow.is_some() {
+                        if let Value::F(t) = &out {
+                            captured.push(t.clone());
+                        }
+                    }
+                    out
+                }
+                Mode::FakeQuant(_) => match (out, pout) {
+                    // integer-path producers already emitted exactly-at-
+                    // grid values; non-quant-point passthroughs keep
+                    // their input's grid
+                    (Value::Q(q), _) => Value::Q(q),
+                    (Value::F(mut t), Some(p)) => {
+                        if integer_resident {
+                            let mut q = scratch.qtensor(&t.shape, p);
+                            for (d, &v) in q.data.iter_mut().zip(&t.data) {
+                                *d = p.quantize(v) as i8;
+                            }
+                            scratch.free_f.push(t);
+                            Value::Q(q)
+                        } else {
+                            for v in &mut t.data {
+                                *v = p.fake_quant(*v);
+                            }
+                            Value::F(t)
+                        }
+                    }
+                    (v, None) => v,
+                },
+            };
+            for &id in &plan.in_ids {
+                uses[id] -= 1;
+                if uses[id] == 0 {
+                    if let Some(v) = env[id].take() {
+                        scratch.recycle(v);
+                    }
                 }
             }
-            env.insert(node.name.as_str(), t);
+            env[idx + 1] = Some(out);
         }
 
-        let logits = env.remove(self.graph.output()).expect("output computed");
+        let vout = env[self.out_id].take().expect("output computed");
+        // the one O(1) steady-state allocation: the returned logits
+        let logits = match vout {
+            Value::F(t) => {
+                let out = t.clone();
+                scratch.free_f.push(t);
+                out
+            }
+            Value::Q(q) => {
+                let out = q.dequantize();
+                scratch.free_q.push(q);
+                out
+            }
+        };
+        for slot in env.iter_mut() {
+            if let Some(v) = slot.take() {
+                scratch.recycle(v);
+            }
+        }
+        scratch.env = env;
+        scratch.uses = uses;
         match mode {
-            Mode::Acts(captured) => Ok((logits, Some(captured))),
+            Mode::Acts => Ok((logits, Some(captured))),
             _ => Ok((logits, None)),
         }
     }
@@ -383,6 +879,8 @@ impl<'a, W: std::borrow::Borrow<Tensor>> Interpreter<'a, W> {
         &self,
         x: &Tensor,
         node: &crate::ir::Node,
+        w_key: &str,
+        b_key: &str,
         k: usize,
         stride: usize,
         pad: usize,
@@ -390,62 +888,76 @@ impl<'a, W: std::borrow::Borrow<Tensor>> Interpreter<'a, W> {
         out_ch: usize,
         groups: usize,
         act: Act,
-        patch_buf: &mut Vec<f32>,
+        scratch: &mut InterpScratch,
     ) -> Result<Tensor> {
         let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
         anyhow::ensure!(c == in_ch, "conv {}: in_ch mismatch", node.name);
-        let wt = self.weight(&format!("{}_w", node.name))?;
-        let bias = self.weight(&format!("{}_b", node.name))?;
+        let wt = self.weight(w_key)?;
+        let bias = self.weight(b_key)?;
         let cg = in_ch / groups;
         let outg = out_ch / groups;
         let oh = window_out_dim(&node.name, h, k, stride, pad)?;
         let ow = window_out_dim(&node.name, w, k, stride, pad)?;
-        // output in group-major scratch, then interleave
-        let mut group_out: Vec<Vec<f32>> = Vec::with_capacity(groups);
-        for g in 0..groups {
-            im2col(&x.data, n, h, w, c, g * cg, cg, k, stride, pad, oh, ow, patch_buf);
-            let (wm, rows, cols) = weight_matrix(wt, g, groups);
-            let m = n * oh * ow;
-            let mut out = vec![0.0f32; m * cols];
-            // seed with bias
-            for chunk in out.chunks_exact_mut(cols) {
-                chunk.copy_from_slice(&bias.data[g * outg..(g + 1) * outg]);
-            }
-            gemm_f32(m, rows, cols, patch_buf, &wm, &mut out);
-            group_out.push(out);
-        }
         let m = n * oh * ow;
-        let mut data = vec![0.0f32; m * out_ch];
+        let mut t = scratch.tensor(&[n, oh, ow, out_ch]);
         if groups == 1 {
-            data.copy_from_slice(&group_out[0]);
+            im2col(
+                &x.data, n, h, w, c, 0, cg, k, stride, pad, oh, ow,
+                &mut scratch.patches_f32,
+            );
+            let (rows, cols) = weight_matrix_into(wt, 0, 1, &mut scratch.wbuf);
+            // seed with bias
+            for chunk in t.data.chunks_exact_mut(cols) {
+                chunk.copy_from_slice(&bias.data);
+            }
+            gemm_f32(m, rows, cols, &scratch.patches_f32, &scratch.wbuf, &mut t.data);
         } else {
-            for (g, go) in group_out.iter().enumerate() {
+            // per-group scratch, then interleave into the NHWC output
+            for g in 0..groups {
+                im2col(
+                    &x.data, n, h, w, c, g * cg, cg, k, stride, pad, oh, ow,
+                    &mut scratch.patches_f32,
+                );
+                let (rows, cols) = weight_matrix_into(wt, g, groups, &mut scratch.wbuf);
+                scratch.gbuf.clear();
+                scratch.gbuf.resize(m * outg, 0.0);
+                for chunk in scratch.gbuf.chunks_exact_mut(cols) {
+                    chunk.copy_from_slice(&bias.data[g * outg..(g + 1) * outg]);
+                }
+                gemm_f32(
+                    m, rows, cols, &scratch.patches_f32, &scratch.wbuf,
+                    &mut scratch.gbuf,
+                );
                 for r in 0..m {
-                    data[r * out_ch + g * outg..r * out_ch + (g + 1) * outg]
-                        .copy_from_slice(&go[r * outg..(r + 1) * outg]);
+                    t.data[r * out_ch + g * outg..r * out_ch + (g + 1) * outg]
+                        .copy_from_slice(&scratch.gbuf[r * outg..(r + 1) * outg]);
                 }
             }
         }
         if act != Act::None {
-            for v in &mut data {
+            for v in &mut t.data {
                 *v = act.apply(*v);
             }
         }
-        Ok(Tensor { shape: vec![n, oh, ow, out_ch], data })
+        Ok(t)
     }
 
-    /// Integer conv: the input (already on grid `pa`) is re-quantized to
-    /// its raw i8 values, patches are gathered in integer space with the
-    /// zero point as padding, and each group runs the packed i8 or
-    /// packed-int4 kernel with gemmlowp zero-point corrections. The i32
-    /// accumulator is dequantized once per element
-    /// (`acc * scale_a * scale_w + bias`), so the only f32 arithmetic
-    /// left is the final scaling -- the f32 weight tensor is never read.
+    /// Integer conv: the input arrives as raw i8 grid values, patches
+    /// are gathered in integer space with the zero point as padding,
+    /// and each group runs its prepacked i8 / packed-int4 panels with
+    /// gemmlowp zero-point corrections. The i32 accumulator is scaled
+    /// once per element (`acc * (scale_a * scale_w) + bias` — the
+    /// per-channel combined scale is hoisted out of the inner loop) and,
+    /// when the node is an active quant point, requantized directly
+    /// onto the output grid with the activation folded into an integer
+    /// clamp. That f32 op sequence is exactly the fake-quant oracle's,
+    /// so the result is bitwise identical to the legacy route.
     #[allow(clippy::too_many_arguments)]
     fn conv_int(
         &self,
-        x: &Tensor,
+        x: &QTensor,
         node: &crate::ir::Node,
+        b_key: &str,
         k: usize,
         stride: usize,
         pad: usize,
@@ -453,12 +965,21 @@ impl<'a, W: std::borrow::Borrow<Tensor>> Interpreter<'a, W> {
         out_ch: usize,
         groups: usize,
         act: Act,
-        pa: QParams,
-        qw: &QuantWeight,
-    ) -> Result<Tensor> {
+        pw: &PreparedWeight,
+        pout: Option<QParams>,
+        scratch: &mut InterpScratch,
+    ) -> Result<Value> {
         let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
         anyhow::ensure!(c == in_ch, "conv {}: in_ch mismatch", node.name);
-        let bias = self.weight(&format!("{}_b", node.name))?;
+        anyhow::ensure!(
+            pw.groups() == groups,
+            "conv {}: weight prepacked for {} groups, node has {}",
+            node.name,
+            pw.groups(),
+            groups
+        );
+        let qw = pw.qw();
+        let bias = self.weight(b_key)?;
         let cg = in_ch / groups;
         let outg = out_ch / groups;
         let rows = k * k * cg;
@@ -471,67 +992,106 @@ impl<'a, W: std::borrow::Borrow<Tensor>> Interpreter<'a, W> {
         );
         let oh = window_out_dim(&node.name, h, k, stride, pad)?;
         let ow = window_out_dim(&node.name, w, k, stride, pad)?;
+        let pa = x.qp;
         let za = pa.zero_point;
-        // exact grid recovery: x values are (q - za) * scale, so
-        // re-quantizing reproduces q (all grids are signed int8-or-
-        // narrower here, so q fits i8)
-        let xq: Vec<i8> = x.data.iter().map(|&v| pa.quantize(v) as i8).collect();
         let m = n * oh * ow;
-        let mut patches: Vec<i8> = Vec::new();
-        let mut acc = vec![0i32; m * outg];
-        let mut data = vec![0.0f32; m * out_ch];
         let nscale = qw.scales.len();
-        for g in 0..groups {
-            im2col_i8(
-                &xq, n, h, w, c, g * cg, cg, k, stride, pad, oh, ow, za as i8,
-                &mut patches,
-            );
-            let zb: Vec<i32> = if nscale == 1 {
-                vec![qw.zero_points[0]]
-            } else {
-                qw.zero_points[g * outg..(g + 1) * outg].to_vec()
-            };
-            match &qw.repr {
-                IntRepr::I8(d) => {
-                    let pb = pack_b_i8(rows, outg, |p, j| d[p * out_ch + g * outg + j]);
-                    qgemm_i8(m, &patches, za, &pb, &zb, &mut acc);
+        // hoisted per-channel combined scale: no `ch % nscale` lookup
+        // in the inner loop
+        scratch.comb.clear();
+        if nscale == 1 {
+            scratch.comb.resize(out_ch, pa.scale * qw.scales[0]);
+        } else {
+            scratch.comb.extend(qw.scales.iter().map(|&sw| pa.scale * sw));
+        }
+        scratch.acc.clear();
+        scratch.acc.resize(m * outg, 0);
+        match pout {
+            Some(p) => {
+                let (lo, hi) = act_bounds(act, &p);
+                let mut out = scratch.qtensor(&[n, oh, ow, out_ch], p);
+                for g in 0..groups {
+                    im2col_i8(
+                        &x.data, n, h, w, c, g * cg, cg, k, stride, pad, oh, ow,
+                        za as i8, &mut scratch.patches_i8,
+                    );
+                    let (panels, zb) = pw.group(g);
+                    match panels {
+                        PackedPanels::I8(pb) => {
+                            qgemm_i8(m, &scratch.patches_i8, za, pb, zb, &mut scratch.acc)
+                        }
+                        PackedPanels::I4(pb) => {
+                            qgemm_i4(m, &scratch.patches_i8, za, pb, zb, &mut scratch.acc)
+                        }
+                    }
+                    let brow = &bias.data[g * outg..(g + 1) * outg];
+                    let combg = &scratch.comb[g * outg..(g + 1) * outg];
+                    for r in 0..m {
+                        let arow = &scratch.acc[r * outg..(r + 1) * outg];
+                        let qrow = &mut out.data
+                            [r * out_ch + g * outg..r * out_ch + (g + 1) * outg];
+                        for j in 0..outg {
+                            let v = arow[j] as f32 * combg[j] + brow[j];
+                            qrow[j] = p.quantize(v).clamp(lo, hi) as i8;
+                        }
+                    }
                 }
-                IntRepr::I4(pk) => {
-                    let pb =
-                        pack_b_i4(rows, outg, |p, j| pk.get(p * out_ch + g * outg + j));
-                    qgemm_i4(m, &patches, za, &pb, &zb, &mut acc);
-                }
+                Ok(Value::Q(out))
             }
-            for r in 0..m {
-                let arow = &acc[r * outg..(r + 1) * outg];
-                let drow = &mut data[r * out_ch + g * outg..r * out_ch + (g + 1) * outg];
-                for j in 0..outg {
-                    let ch = g * outg + j;
-                    let sw = qw.scales[ch % nscale];
-                    drow[j] = arow[j] as f32 * (pa.scale * sw) + bias.data[ch];
+            None => {
+                let mut out = scratch.tensor(&[n, oh, ow, out_ch]);
+                for g in 0..groups {
+                    im2col_i8(
+                        &x.data, n, h, w, c, g * cg, cg, k, stride, pad, oh, ow,
+                        za as i8, &mut scratch.patches_i8,
+                    );
+                    let (panels, zb) = pw.group(g);
+                    match panels {
+                        PackedPanels::I8(pb) => {
+                            qgemm_i8(m, &scratch.patches_i8, za, pb, zb, &mut scratch.acc)
+                        }
+                        PackedPanels::I4(pb) => {
+                            qgemm_i4(m, &scratch.patches_i8, za, pb, zb, &mut scratch.acc)
+                        }
+                    }
+                    let brow = &bias.data[g * outg..(g + 1) * outg];
+                    let combg = &scratch.comb[g * outg..(g + 1) * outg];
+                    for r in 0..m {
+                        let arow = &scratch.acc[r * outg..(r + 1) * outg];
+                        let drow = &mut out.data
+                            [r * out_ch + g * outg..r * out_ch + (g + 1) * outg];
+                        for j in 0..outg {
+                            drow[j] = arow[j] as f32 * combg[j] + brow[j];
+                        }
+                    }
                 }
+                if act != Act::None {
+                    for v in &mut out.data {
+                        *v = act.apply(*v);
+                    }
+                }
+                Ok(Value::F(out))
             }
         }
-        if act != Act::None {
-            for v in &mut data {
-                *v = act.apply(*v);
-            }
-        }
-        Ok(Tensor { shape: vec![n, oh, ow, out_ch], data })
     }
 
-    /// Integer dense layer; see [`Interpreter::conv_int`] -- same
-    /// quantize / integer GEMM / dequantize-and-bias structure without
-    /// the patch gather.
+    /// Integer dense layer; see [`Interpreter::conv_int`] — same
+    /// prepacked integer GEMM / scale-and-bias / requantize structure
+    /// without the patch gather. The input's i8 grid values feed the
+    /// kernel directly (no f32 round-trip).
+    #[allow(clippy::too_many_arguments)]
     fn dense_int(
         &self,
-        x: &Tensor,
+        x: &QTensor,
         node: &crate::ir::Node,
+        b_key: &str,
         in_dim: usize,
         out_dim: usize,
-        pa: QParams,
-        qw: &QuantWeight,
-    ) -> Result<Tensor> {
+        pw: &PreparedWeight,
+        pout: Option<QParams>,
+        scratch: &mut InterpScratch,
+    ) -> Result<Value> {
+        let qw = pw.qw();
         anyhow::ensure!(
             qw.len() == in_dim * out_dim,
             "dense {}: int weight holds {} values, expected {}",
@@ -539,33 +1099,72 @@ impl<'a, W: std::borrow::Borrow<Tensor>> Interpreter<'a, W> {
             qw.len(),
             in_dim * out_dim
         );
-        let bias = self.weight(&format!("{}_b", node.name))?;
+        anyhow::ensure!(
+            pw.groups() == 1,
+            "dense {}: weight prepacked for {} groups",
+            node.name,
+            pw.groups()
+        );
+        let bias = self.weight(b_key)?;
         let n = x.shape[0];
+        let pa = x.qp;
         let za = pa.zero_point;
-        let xq: Vec<i8> = x.data.iter().map(|&v| pa.quantize(v) as i8).collect();
         let nscale = qw.scales.len();
-        let zb: Vec<i32> =
-            if nscale == 1 { vec![qw.zero_points[0]] } else { qw.zero_points.clone() };
-        let mut acc = vec![0i32; n * out_dim];
-        match &qw.repr {
-            IntRepr::I8(d) => {
-                let pb = pack_b_i8(in_dim, out_dim, |p, j| d[p * out_dim + j]);
-                qgemm_i8(n, &xq, za, &pb, &zb, &mut acc);
+        scratch.comb.clear();
+        if nscale == 1 {
+            scratch.comb.resize(out_dim, pa.scale * qw.scales[0]);
+        } else {
+            scratch.comb.extend(qw.scales.iter().map(|&sw| pa.scale * sw));
+        }
+        scratch.acc.clear();
+        scratch.acc.resize(n * out_dim, 0);
+        let (panels, zb) = pw.group(0);
+        match panels {
+            PackedPanels::I8(pb) => qgemm_i8(n, &x.data, za, pb, zb, &mut scratch.acc),
+            PackedPanels::I4(pb) => qgemm_i4(n, &x.data, za, pb, zb, &mut scratch.acc),
+        }
+        match pout {
+            Some(p) => {
+                let mut out = scratch.qtensor(&[n, out_dim], p);
+                for r in 0..n {
+                    let arow = &scratch.acc[r * out_dim..(r + 1) * out_dim];
+                    let qrow = &mut out.data[r * out_dim..(r + 1) * out_dim];
+                    for j in 0..out_dim {
+                        let v = arow[j] as f32 * scratch.comb[j] + bias.data[j];
+                        qrow[j] = p.quantize(v) as i8;
+                    }
+                }
+                Ok(Value::Q(out))
             }
-            IntRepr::I4(pk) => {
-                let pb = pack_b_i4(in_dim, out_dim, |p, j| pk.get(p * out_dim + j));
-                qgemm_i4(n, &xq, za, &pb, &zb, &mut acc);
+            None => {
+                let mut out = scratch.tensor(&[n, out_dim]);
+                for r in 0..n {
+                    let arow = &scratch.acc[r * out_dim..(r + 1) * out_dim];
+                    let drow = &mut out.data[r * out_dim..(r + 1) * out_dim];
+                    for j in 0..out_dim {
+                        drow[j] = arow[j] as f32 * scratch.comb[j] + bias.data[j];
+                    }
+                }
+                Ok(Value::F(out))
             }
         }
-        let mut out = vec![0.0f32; n * out_dim];
-        for r in 0..n {
-            for j in 0..out_dim {
-                let sw = qw.scales[j % nscale];
-                out[r * out_dim + j] =
-                    acc[r * out_dim + j] as f32 * (pa.scale * sw) + bias.data[j];
-            }
-        }
-        Ok(Tensor { shape: vec![n, out_dim], data: out })
+    }
+}
+
+/// MAC count of a conv from its output shape [n, oh, ow, out_ch].
+fn conv_macs(sh: &[usize], k: usize, in_ch: usize, out_ch: usize, groups: usize) -> u64 {
+    (sh[0] * sh[1] * sh[2]) as u64 * (k * k * (in_ch / groups)) as u64 * out_ch as u64
+}
+
+/// Integer clamp bounds folding `act` into requantization onto grid
+/// `p`: `p.quantize(v).clamp(lo, hi)` equals `p.quantize(act.apply(v))`
+/// for the monotone activations (quantize is monotone, so clamping in
+/// the quantized domain at the activation endpoints is exact).
+fn act_bounds(act: Act, p: &QParams) -> (i32, i32) {
+    match act {
+        Act::None => (i32::MIN, i32::MAX),
+        Act::Relu => (p.quantize(0.0), i32::MAX),
+        Act::Relu6 => (p.quantize(0.0), p.quantize(6.0)),
     }
 }
 
@@ -633,6 +1232,108 @@ fn pool(
     Ok(Tensor { shape: vec![n, oh, ow, c], data })
 }
 
+/// Integer max-pool: the max over raw i8 values equals the quantized
+/// max over their dequantizations (dequantize is monotone), so the
+/// output stays on the input's grid, bit-exactly.
+fn pool_max_q(
+    x: &QTensor,
+    name: &str,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    scratch: &mut InterpScratch,
+) -> Result<QTensor> {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    anyhow::ensure!(
+        pad < k,
+        "pool {name}: pad {pad} >= window {k} leaves all-padding border windows"
+    );
+    let oh = window_out_dim(name, h, k, stride, pad)?;
+    let ow = window_out_dim(name, w, k, stride, pad)?;
+    let mut out = scratch.qtensor(&[n, oh, ow, c], x.qp);
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ci in 0..c {
+                    let mut acc = i8::MIN;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let v = x.data
+                                [((ni * h + iy as usize) * w + ix as usize) * c + ci];
+                            acc = acc.max(v);
+                        }
+                    }
+                    out.data[((ni * oh + oy) * ow + ox) * c + ci] = acc;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Integer-route average pool: sums raw values in i32, subtracts the
+/// zero-point mass, and scales/divides once per window. This is a
+/// documented f32 boundary — the result is mathematically the window
+/// mean but its f32 rounding differs from the oracle's
+/// sum-of-dequantized-f32 order, so the output returns to f32 (pool is
+/// not a quant point, so no grid claim is made).
+fn pool_avg_q(
+    x: &QTensor,
+    name: &str,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    scratch: &mut InterpScratch,
+) -> Result<Tensor> {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    anyhow::ensure!(
+        pad < k,
+        "pool {name}: pad {pad} >= window {k} leaves all-padding border windows"
+    );
+    let oh = window_out_dim(name, h, k, stride, pad)?;
+    let ow = window_out_dim(name, w, k, stride, pad)?;
+    let (zp, s) = (x.qp.zero_point, x.qp.scale);
+    let mut out = scratch.tensor(&[n, oh, ow, c]);
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ci in 0..c {
+                    let mut sum = 0i32;
+                    let mut cnt = 0i32;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            sum += x.data
+                                [((ni * h + iy as usize) * w + ix as usize) * c + ci]
+                                as i32;
+                            cnt += 1;
+                        }
+                    }
+                    // cnt >= 1 is guaranteed by pad < k
+                    out.data[((ni * oh + oy) * ow + ox) * c + ci] =
+                        (sum - cnt * zp) as f32 * s / cnt as f32;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
 fn gap(x: &Tensor) -> Tensor {
     let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let mut data = vec![0.0f32; n * c];
@@ -649,6 +1350,34 @@ fn gap(x: &Tensor) -> Tensor {
         *v *= inv;
     }
     Tensor { shape: vec![n, c], data }
+}
+
+/// Global average pool over a [`Value`]: the f32 arm delegates to
+/// [`gap`]; the i8 arm accumulates dequantized values in the same
+/// order, so both are bitwise identical to the oracle.
+fn gap_value(v: &Value, scratch: &mut InterpScratch) -> Value {
+    match v {
+        Value::F(t) => Value::F(gap(t)),
+        Value::Q(q) => {
+            let (n, h, w, c) = (q.shape[0], q.shape[1], q.shape[2], q.shape[3]);
+            let mut out = scratch.tensor(&[n, c]);
+            let (zp, s) = (q.qp.zero_point, q.qp.scale);
+            let inv = 1.0 / (h * w) as f32;
+            for ni in 0..n {
+                for p in 0..h * w {
+                    let src = (ni * h * w + p) * c;
+                    for ci in 0..c {
+                        out.data[ni * c + ci] +=
+                            (q.data[src + ci] as i32 - zp) as f32 * s;
+                    }
+                }
+            }
+            for vv in &mut out.data {
+                *vv *= inv;
+            }
+            Value::F(out)
+        }
+    }
 }
 
 /// Channel concatenation. All inputs must share the leading [n, h, w]
@@ -682,6 +1411,61 @@ fn concat(name: &str, ins: &[&Tensor]) -> Result<Tensor> {
     Ok(Tensor { shape: vec![n, h, w, c_total], data })
 }
 
+/// Concat over [`Value`]s: all-f32 inputs delegate to [`concat`];
+/// mixed or all-i8 inputs dequantize row-by-row into a pooled output
+/// (each dequantized value is exactly the f32 the oracle holds, so the
+/// node's own fake-quant afterwards is bitwise identical).
+fn concat_values(name: &str, ins: &[&Value], scratch: &mut InterpScratch) -> Result<Value> {
+    anyhow::ensure!(!ins.is_empty(), "concat {name}: no inputs");
+    if ins.iter().all(|v| matches!(v, Value::F(_))) {
+        let ts: Vec<&Tensor> = ins
+            .iter()
+            .map(|v| match v {
+                Value::F(t) => t,
+                Value::Q(_) => unreachable!(),
+            })
+            .collect();
+        return Ok(Value::F(concat(name, &ts)?));
+    }
+    let lead3 = {
+        let sh = ins[0].shape();
+        anyhow::ensure!(sh.len() == 4, "concat {name}: non-NHWC input {sh:?}");
+        [sh[0], sh[1], sh[2]]
+    };
+    for v in ins {
+        let sh = v.shape();
+        anyhow::ensure!(sh.len() == 4, "concat {name}: non-NHWC input {sh:?}");
+        anyhow::ensure!(
+            sh[..3] == lead3,
+            "concat {name}: [n,h,w] mismatch ({:?} vs {:?})",
+            &sh[..3],
+            &lead3[..]
+        );
+    }
+    let (n, h, w) = (lead3[0], lead3[1], lead3[2]);
+    let cs: Vec<usize> = ins.iter().map(|v| v.shape()[3]).collect();
+    let c_total: usize = cs.iter().sum();
+    let mut out = scratch.tensor(&[n, h, w, c_total]);
+    let rows = n * h * w;
+    for r in 0..rows {
+        let mut off = 0;
+        for (v, &ct) in ins.iter().zip(&cs) {
+            let dst = &mut out.data[r * c_total + off..r * c_total + off + ct];
+            match v {
+                Value::F(t) => dst.copy_from_slice(&t.data[r * ct..(r + 1) * ct]),
+                Value::Q(q) => {
+                    let (zp, s) = (q.qp.zero_point, q.qp.scale);
+                    for (d, &qv) in dst.iter_mut().zip(&q.data[r * ct..(r + 1) * ct]) {
+                        *d = (qv as i32 - zp) as f32 * s;
+                    }
+                }
+            }
+            off += ct;
+        }
+    }
+    Ok(Value::F(out))
+}
+
 fn shuffle(x: &Tensor, groups: usize) -> Tensor {
     let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let per = c / groups;
@@ -698,6 +1482,60 @@ fn shuffle(x: &Tensor, groups: usize) -> Tensor {
         }
     }
     Tensor { shape: vec![n, h, w, c], data }
+}
+
+/// Integer channel shuffle: a pure permutation of raw i8 values, so the
+/// output keeps the input's grid bit-exactly.
+fn shuffle_q(x: &QTensor, groups: usize, scratch: &mut InterpScratch) -> QTensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let per = c / groups;
+    let mut out = scratch.qtensor(&x.shape, x.qp);
+    let rows = n * h * w;
+    for r in 0..rows {
+        let src = &x.data[r * c..(r + 1) * c];
+        let dst = &mut out.data[r * c..(r + 1) * c];
+        for g in 0..groups {
+            for p in 0..per {
+                dst[p * groups + g] = src[g * per + p];
+            }
+        }
+    }
+    out
+}
+
+/// Elementwise add over two [`Value`]s, dequantizing i8 operands on the
+/// fly (the `a + b` order and per-element op sequence match the f32
+/// oracle exactly).
+fn add_values(a: &Value, b: &Value, act: Act, scratch: &mut InterpScratch) -> Result<Value> {
+    anyhow::ensure!(a.shape() == b.shape(), "add shape mismatch");
+    let mut out = scratch.tensor(a.shape());
+    match (a, b) {
+        (Value::F(ta), Value::F(tb)) => {
+            for ((d, &va), &vb) in out.data.iter_mut().zip(&ta.data).zip(&tb.data) {
+                *d = act.apply(va + vb);
+            }
+        }
+        (Value::Q(qa), Value::F(tb)) => {
+            let (zp, s) = (qa.qp.zero_point, qa.qp.scale);
+            for ((d, &qv), &vb) in out.data.iter_mut().zip(&qa.data).zip(&tb.data) {
+                *d = act.apply((qv as i32 - zp) as f32 * s + vb);
+            }
+        }
+        (Value::F(ta), Value::Q(qb)) => {
+            let (zp, s) = (qb.qp.zero_point, qb.qp.scale);
+            for ((d, &va), &qv) in out.data.iter_mut().zip(&ta.data).zip(&qb.data) {
+                *d = act.apply(va + (qv as i32 - zp) as f32 * s);
+            }
+        }
+        (Value::Q(qa), Value::Q(qb)) => {
+            let (za, sa) = (qa.qp.zero_point, qa.qp.scale);
+            let (zb, sb) = (qb.qp.zero_point, qb.qp.scale);
+            for ((d, &va), &vb) in out.data.iter_mut().zip(&qa.data).zip(&qb.data) {
+                *d = act.apply((va as i32 - za) as f32 * sa + (vb as i32 - zb) as f32 * sb);
+            }
+        }
+    }
+    Ok(Value::F(out))
 }
 
 /// Top-1 predictions from logits [N, classes].
@@ -722,6 +1560,7 @@ pub fn argmax_batch(logits: &Tensor) -> Vec<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::BitWidth;
     use crate::util::Json;
 
     fn graph_1conv() -> Graph {
@@ -832,5 +1671,102 @@ mod tests {
         let err = concat("cat2", &[&a, &b]).unwrap_err();
         assert!(err.to_string().contains("cat2"), "{err}");
         assert!(err.to_string().contains("mismatch"), "{err}");
+    }
+
+    #[test]
+    fn prepared_weight_pack_validates() {
+        let qw = QuantWeight {
+            shape: vec![2, 2],
+            repr: IntRepr::I8(vec![1, -2, 3, -4]),
+            scales: vec![0.5, 0.25],
+            zero_points: vec![0, 1],
+            width: BitWidth::Int8,
+        };
+        let pw = PreparedWeight::pack(qw, 1).unwrap();
+        assert_eq!(pw.groups(), 1);
+        let (panels, zb) = pw.group(0);
+        assert_eq!(zb.to_vec(), vec![0, 1]);
+        match panels {
+            PackedPanels::I8(p) => assert_eq!((p.k, p.n), (2, 2)),
+            PackedPanels::I4(_) => panic!("expected i8 panels"),
+        }
+        // out_ch=2 not divisible by groups=3
+        let qw2 = QuantWeight {
+            shape: vec![2, 2],
+            repr: IntRepr::I8(vec![1, -2, 3, -4]),
+            scales: vec![0.5],
+            zero_points: vec![0],
+            width: BitWidth::Int8,
+        };
+        assert!(PreparedWeight::pack(qw2, 3).is_err());
+    }
+
+    #[test]
+    fn act_bounds_fold_is_exact() {
+        // quantize(act(v)) == clamp(quantize(v), act_bounds) across a
+        // dense sweep, for every activation (monotonicity argument)
+        let p = QParams { scale: 0.043, zero_point: -7, qmin: -128.0, qmax: 127.0 };
+        for act in [Act::None, Act::Relu, Act::Relu6] {
+            let (lo, hi) = act_bounds(act, &p);
+            assert!(lo <= hi);
+            let mut v = -7.0f32;
+            while v < 7.0 {
+                let oracle = p.quantize(act.apply(v));
+                let folded = p.quantize(v).clamp(lo, hi);
+                assert_eq!(oracle, folded, "act {act:?} v {v}");
+                v += 0.0137;
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bitwise_stable() {
+        let g = graph_1conv();
+        let w = identity_weights();
+        let interp = Interpreter::new(&g, &w);
+        let x = Tensor::from_vec(
+            &[2, 4, 4, 1],
+            (0..32).map(|i| (i as f32) * 0.11 - 1.5).collect(),
+        )
+        .unwrap();
+        let rows = vec![[0.05f32, -3.0, -128.0, 127.0, 0.0]; g.quant_points().len()];
+        let aq = ActQuantization { rows };
+        let baseline = interp.forward_fq(&x, &aq).unwrap();
+        let mut scratch = InterpScratch::for_graph(&g, 2);
+        for _ in 0..3 {
+            let got = interp.forward_fq_with(&x, &aq, &mut scratch).unwrap();
+            assert_eq!(got.shape, baseline.shape);
+            assert_eq!(got.data, baseline.data);
+        }
+        // fp32 route through the same arena is stable too
+        let f0 = interp.forward(&x).unwrap();
+        let f1 = interp.forward_with(&x, &mut scratch).unwrap();
+        assert_eq!(f0.data, f1.data);
+    }
+
+    #[test]
+    fn qtensor_ops_preserve_grid() {
+        let qp = QParams { scale: 0.1, zero_point: 3, qmin: -128.0, qmax: 127.0 };
+        let mut scratch = InterpScratch::new();
+        let x = QTensor {
+            shape: vec![1, 2, 2, 2],
+            data: vec![1, -2, 3, -4, 5, -6, 7, -8],
+            qp,
+        };
+        let mx = pool_max_q(&x, "p", 2, 2, 0, &mut scratch).unwrap();
+        assert_eq!(mx.data, vec![7, -2]);
+        let sh = shuffle_q(
+            &QTensor { shape: vec![1, 1, 1, 4], data: vec![1, 2, 3, 4], qp },
+            2,
+            &mut scratch,
+        );
+        assert_eq!(sh.data, vec![1, 3, 2, 4]);
+        // avg over the full window equals the mean of dequantized cells
+        let av = pool_avg_q(&x, "p", 2, 2, 0, &mut scratch).unwrap();
+        let deq = x.dequantize();
+        let oracle = pool(&deq, "p", PoolKind::Avg, 2, 2, 0).unwrap();
+        for (a, b) in av.data.iter().zip(&oracle.data) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
     }
 }

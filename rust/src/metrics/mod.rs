@@ -1,8 +1,87 @@
-//! Result analysis: Top-1 bookkeeping and the Shannon-entropy diversity
-//! analysis of Table 4.
+//! Result analysis: Top-1 bookkeeping, the Shannon-entropy diversity
+//! analysis of Table 4, and interpreter dispatch accounting (what
+//! fraction of a sweep's MACs ran on the integer engine).
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::quant::QuantConfig;
 use crate::util::stats::shannon_entropy;
+
+/// Shared counters recording, per fake-quant conv/dense dispatch,
+/// whether the layer ran on the integer engine or fell back to the f32
+/// route, plus the MAC volume of each. Relaxed atomics: the counts are
+/// monotonic tallies with no ordering dependencies, safe to bump from
+/// every worker thread concurrently.
+#[derive(Debug, Default)]
+pub struct DispatchCounters {
+    int_layers: AtomicU64,
+    fallback_layers: AtomicU64,
+    int_macs: AtomicU64,
+    fallback_macs: AtomicU64,
+}
+
+impl DispatchCounters {
+    /// Fresh zeroed counters.
+    pub fn new() -> DispatchCounters {
+        DispatchCounters::default()
+    }
+
+    /// Record one conv/dense dispatch: `int_path` says which engine ran
+    /// it, `macs` its multiply-accumulate volume.
+    pub fn record(&self, int_path: bool, macs: u64) {
+        if int_path {
+            self.int_layers.fetch_add(1, Ordering::Relaxed);
+            self.int_macs.fetch_add(macs, Ordering::Relaxed);
+        } else {
+            self.fallback_layers.fetch_add(1, Ordering::Relaxed);
+            self.fallback_macs.fetch_add(macs, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot the tallies (prepack stats are filled in by the caller
+    /// that owns the weight cache; they default to zero here).
+    pub fn snapshot(&self) -> DispatchStats {
+        DispatchStats {
+            int_layers: self.int_layers.load(Ordering::Relaxed),
+            fallback_layers: self.fallback_layers.load(Ordering::Relaxed),
+            int_macs: self.int_macs.load(Ordering::Relaxed),
+            fallback_macs: self.fallback_macs.load(Ordering::Relaxed),
+            prepack_hits: 0,
+            prepack_builds: 0,
+        }
+    }
+}
+
+/// Point-in-time view of [`DispatchCounters`], plus the weight cache's
+/// prepack reuse tallies.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DispatchStats {
+    /// Conv/dense dispatches that ran on the integer engine.
+    pub int_layers: u64,
+    /// Conv/dense dispatches that fell back to the f32 route.
+    pub fallback_layers: u64,
+    /// MACs executed on the integer engine.
+    pub int_macs: u64,
+    /// MACs executed on the f32 fallback.
+    pub fallback_macs: u64,
+    /// Prepacked-weight cache hits (panel reused across variants).
+    pub prepack_hits: u64,
+    /// Prepacked-weight cache builds (panel packed from scratch).
+    pub prepack_builds: u64,
+}
+
+impl DispatchStats {
+    /// Fraction of all fake-quant MACs that ran on the integer engine
+    /// (0.0 when nothing was dispatched).
+    pub fn integer_mac_fraction(&self) -> f64 {
+        let total = self.int_macs + self.fallback_macs;
+        if total == 0 {
+            0.0
+        } else {
+            self.int_macs as f64 / total as f64
+        }
+    }
+}
 
 /// Per-dimension Shannon entropy of the configs whose accuracy is within
 /// `threshold` of the fp32 baseline (the paper uses the MLPerf 1% margin).
@@ -119,6 +198,21 @@ mod tests {
         // scheme is uniform over 4 -> ln 4
         assert!((d.scheme - 4f64.ln()).abs() < 1e-9);
         assert!((d.clipping - 2f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dispatch_counters_tally_and_fraction() {
+        let c = DispatchCounters::new();
+        c.record(true, 600);
+        c.record(true, 200);
+        c.record(false, 200);
+        let s = c.snapshot();
+        assert_eq!(s.int_layers, 2);
+        assert_eq!(s.fallback_layers, 1);
+        assert_eq!(s.int_macs, 800);
+        assert_eq!(s.fallback_macs, 200);
+        assert!((s.integer_mac_fraction() - 0.8).abs() < 1e-12);
+        assert_eq!(DispatchStats::default().integer_mac_fraction(), 0.0);
     }
 
     #[test]

@@ -17,8 +17,8 @@ pub use config::{
 };
 pub use histogram::Histogram;
 pub use scheme::{
-    parse_bits_spec, BitWidth, QParams, Scheme, ALL_SCHEMES, ALL_WIDTHS,
-    BINARY_WIDTHS,
+    parse_bits_spec, BitWidth, FixedRequant, QParams, Scheme, ALL_SCHEMES,
+    ALL_WIDTHS, BINARY_WIDTHS,
 };
 pub use space::{
     general_space, max_layers_for, vta_space, ConfigSpace, GeneralSpace,

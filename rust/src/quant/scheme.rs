@@ -308,12 +308,108 @@ impl QParams {
         self.scale * 0.5
     }
 
+    /// Build the integer-only requantizer for accumulators carrying the
+    /// effective float scale `acc_scale` landing on this grid. See
+    /// [`FixedRequant`] for the contract.
+    pub fn fixed_requant(&self, acc_scale: f32) -> FixedRequant {
+        FixedRequant::new(acc_scale, self)
+    }
+
     /// The representable float interval.
     pub fn float_range(&self) -> (f32, f32) {
         (
             self.dequantize(self.qmin as i32),
             self.dequantize(self.qmax as i32),
         )
+    }
+}
+
+/// Integer-only requantizer: a fixed-point multiplier + rounding shift
+/// that maps an i32 GEMM accumulator onto an output grid without any
+/// float arithmetic (the gemmlowp / Jacob et al. deployment recipe).
+///
+/// Construction factors the real ratio `acc_scale / out.scale` as
+/// `mult * 2^-shift` with `mult` the exact 53-bit f64 mantissa, so
+/// `apply` computes `round_half_even(acc * mult * 2^-shift) + zero_point`
+/// clamped to the grid -- bit-identical to rounding the *infinitely
+/// precise* product `acc * (acc_scale/out.scale)` whenever that ratio is
+/// exactly representable in f64 (always true for [`Scheme::Pow2`], where
+/// the shift degenerates to a pure bit-shift).
+///
+/// This is the deployment-style path an integer-only target (e.g. VTA)
+/// would run. The interpreter's oracle-parity hot loop deliberately does
+/// *not* use it: bit-exactness against the f32 fake-quant oracle requires
+/// replaying the oracle's f32 operation order, which
+/// [`QParams::requantize`] does. Tests pin the two against each other on
+/// ratios where f32 rounding cannot diverge.
+///
+/// # Examples
+///
+/// ```
+/// use quantune::quant::Scheme;
+///
+/// let out = Scheme::Pow2.params_from_range(-2.0, 2.0);
+/// let rq = out.fixed_requant(out.scale * 0.5); // dyadic ratio: exact
+/// for acc in [-300, -1, 0, 7, 1000] {
+///     assert_eq!(rq.apply(acc), out.requantize(acc, out.scale * 0.5));
+/// }
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct FixedRequant {
+    /// Fixed-point multiplier (the 53-bit mantissa of the ratio), or a
+    /// sentinel for degenerate ratios (see `new`).
+    mult: i64,
+    /// Right-shift applied after the multiply; negative means left-shift.
+    shift: i32,
+    zero_point: i32,
+    qmin: i32,
+    qmax: i32,
+}
+
+impl FixedRequant {
+    /// Factor `acc_scale / out.scale` into multiplier + shift for `out`'s
+    /// grid. Zero/subnormal ratios collapse to "always returns the zero
+    /// point" (the accumulator carries no representable signal).
+    pub fn new(acc_scale: f32, out: &QParams) -> FixedRequant {
+        let zero_point = out.zero_point;
+        let (qmin, qmax) = (out.qmin as i32, out.qmax as i32);
+        let ratio = acc_scale as f64 / out.scale as f64;
+        if !(ratio.is_finite() && ratio >= f64::MIN_POSITIVE) {
+            // zero, subnormal, negative, or non-finite ratio: no signal
+            return FixedRequant { mult: 0, shift: 0, zero_point, qmin, qmax };
+        }
+        // exact binary factoring: ratio = m * 2^exp with m in [1, 2), so
+        // mult = m * 2^52 is the integer mantissa and the residual shift
+        // is 52 - exp (shift right if positive, left if negative)
+        let exp = ((ratio.to_bits() >> 52) & 0x7ff) as i32 - 1023;
+        let mult = (ratio / 2f64.powi(exp) * (1u64 << 52) as f64) as i64;
+        FixedRequant { mult, shift: 52 - exp, zero_point, qmin, qmax }
+    }
+
+    /// Requantize one accumulator value: multiply, round-half-even shift,
+    /// add the zero point, clamp to the grid.
+    pub fn apply(&self, acc: i32) -> i32 {
+        let prod = acc as i128 * self.mult as i128;
+        let rounded: i128 = if self.shift <= 0 {
+            // huge ratio: the product only grows; i128 holds
+            // |acc| * mult * 2^|shift| for any shift >= -43 (i.e. any
+            // exp <= 95, far beyond finite grids), so shift safely
+            prod << (-self.shift).min(43)
+        } else if self.shift >= 127 {
+            0 // rounds to zero for any i32 accumulator
+        } else {
+            let floor = prod >> self.shift;
+            let rem = prod - (floor << self.shift);
+            let half = 1i128 << (self.shift - 1);
+            // round half to even, matching f32/f64 round_ties_even
+            if rem > half || (rem == half && floor & 1 == 1) {
+                floor + 1
+            } else {
+                floor
+            }
+        };
+        let q = rounded.clamp(i32::MIN as i128, i32::MAX as i128) as i32;
+        q.saturating_add(self.zero_point).clamp(self.qmin, self.qmax)
     }
 }
 
@@ -499,5 +595,85 @@ mod tests {
         assert_eq!(p.quantize(0.5), 0);
         assert_eq!(p.quantize(1.5), 2);
         assert_eq!(p.quantize(-0.5), 0);
+    }
+
+    #[test]
+    fn fixed_requant_exact_on_dyadic_ratios() {
+        // power-of-two ratios are exact in both f64 and the fixed-point
+        // factoring, so the integer path must match the f64 reference
+        // (round-half-even) on every accumulator
+        let p = QParams { scale: 1.0, zero_point: 3, qmin: -128.0, qmax: 127.0 };
+        for ratio_exp in [-8i32, -3, -1, 0, 1, 4] {
+            let ratio = (ratio_exp as f32).exp2();
+            let rq = p.fixed_requant(ratio);
+            for acc in -1000i32..=1000 {
+                let want = ((acc as f64 * ratio as f64).round_ties_even()
+                    as i32
+                    + p.zero_point)
+                    .clamp(p.qmin as i32, p.qmax as i32);
+                assert_eq!(rq.apply(acc), want, "ratio=2^{ratio_exp} acc={acc}");
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_requant_ties_go_to_even() {
+        // ratio 0.5: acc=1 -> 0.5 -> 0 (even), acc=3 -> 1.5 -> 2
+        let p = QParams { scale: 1.0, zero_point: 0, qmin: -128.0, qmax: 127.0 };
+        let rq = p.fixed_requant(0.5);
+        assert_eq!(rq.apply(1), 0);
+        assert_eq!(rq.apply(3), 2);
+        assert_eq!(rq.apply(-1), 0);
+        assert_eq!(rq.apply(-3), -2);
+    }
+
+    #[test]
+    fn fixed_requant_matches_pow2_requantize() {
+        // pow2-scheme scales are powers of two, so with a dyadic
+        // acc_scale every f32 step in QParams::requantize is exact and
+        // the integer requantizer must agree bit-for-bit (on arbitrary
+        // scales the f32 composition double-rounds, which is exactly why
+        // FixedRequant exists)
+        for range in [(-1.5f32, 2.5f32), (-0.1, 0.1), (-8.0, 64.0)] {
+            let out = Scheme::Pow2.params_from_range(range.0, range.1);
+            for mul in [0.125f32, 0.25, 1.0, 2.0] {
+                let acc_scale = out.scale * mul;
+                let rq = out.fixed_requant(acc_scale);
+                for acc in [-100_000, -513, -3, -1, 0, 1, 2, 511, 65_535] {
+                    assert_eq!(
+                        rq.apply(acc),
+                        out.requantize(acc, acc_scale),
+                        "range={range:?} mul={mul} acc={acc}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_requant_is_monotone_and_clamped() {
+        let out = Scheme::Asymmetric.params_from_range(-1.0, 3.0);
+        let rq = out.fixed_requant(1.7e-3);
+        let mut prev = i32::MIN;
+        for acc in (-200_000..=200_000).step_by(97) {
+            let q = rq.apply(acc);
+            assert!(q >= out.qmin as i32 && q <= out.qmax as i32);
+            assert!(q >= prev, "monotone at acc={acc}");
+            prev = q;
+        }
+        assert_eq!(rq.apply(i32::MAX), out.qmax as i32);
+        assert_eq!(rq.apply(i32::MIN), out.qmin as i32);
+    }
+
+    #[test]
+    fn fixed_requant_degenerate_ratio_returns_zero_point() {
+        let p = QParams { scale: 1.0, zero_point: 5, qmin: -128.0, qmax: 127.0 };
+        for bad in [0.0f32, -1.0, f32::NAN, f32::INFINITY] {
+            let rq = p.fixed_requant(bad);
+            assert_eq!(rq.apply(12345), 5, "acc_scale={bad}");
+        }
+        // tiny-but-normal ratios round every representable acc to zp too
+        let rq = p.fixed_requant(1e-30);
+        assert_eq!(rq.apply(i32::MAX), 5);
     }
 }

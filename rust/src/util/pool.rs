@@ -106,6 +106,21 @@ impl Pool {
         R: Send,
         F: Fn(usize) -> R + Sync,
     {
+        self.run_init(n, || (), |(), i| f(i))
+    }
+
+    /// Like [`Pool::run`], but each worker first builds a private state
+    /// with `init` and threads it through every item it steals — the
+    /// hook for per-worker scratch arenas (e.g.
+    /// [`crate::interp::InterpScratch`]) that are built once per worker
+    /// instead of once per item. The inline (`<= 1` worker) path builds
+    /// exactly one state.
+    pub fn run_init<S, R, I, F>(&self, n: usize, init: I, f: F) -> Result<Vec<R>>
+    where
+        R: Send,
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, usize) -> R + Sync,
+    {
         if n == 0 {
             return Ok(Vec::new());
         }
@@ -116,9 +131,10 @@ impl Pool {
             // the tiled GEMM see effective_threads() == 1, same as on a
             // spawned worker
             let _guard = WorkerFlag::enter();
+            let mut state = init();
             let mut out = Vec::with_capacity(n);
             for i in 0..n {
-                match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                match catch_unwind(AssertUnwindSafe(|| f(&mut state, i))) {
                     Ok(r) => out.push(r),
                     Err(p) => {
                         return Err(anyhow!(
@@ -139,6 +155,7 @@ impl Pool {
             for _ in 0..workers {
                 scope.spawn(|| {
                     IN_POOL_WORKER.with(|w| w.set(true));
+                    let mut state = init();
                     loop {
                         if poisoned.load(Ordering::Relaxed) {
                             break;
@@ -147,7 +164,7 @@ impl Pool {
                         if i >= n {
                             break;
                         }
-                        match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                        match catch_unwind(AssertUnwindSafe(|| f(&mut state, i))) {
                             Ok(r) => *slots[i].lock().unwrap() = Some(r),
                             Err(p) => {
                                 poisoned.store(true, Ordering::Relaxed);
@@ -188,6 +205,18 @@ impl Pool {
         F: Fn(&T) -> R + Sync,
     {
         self.run(items.len(), |i| f(&items[i]))
+    }
+
+    /// Like [`Pool::map`], but with a per-worker state built by `init`
+    /// (see [`Pool::run_init`]).
+    pub fn map_init<T, S, R, I, F>(&self, items: &[T], init: I, f: F) -> Result<Vec<R>>
+    where
+        T: Sync,
+        R: Send,
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, &T) -> R + Sync,
+    {
+        self.run_init(items.len(), init, |state, i| f(state, &items[i]))
     }
 }
 
@@ -284,5 +313,49 @@ mod tests {
     fn zero_thread_request_clamps_to_one() {
         assert_eq!(Pool::new(0).threads(), 1);
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn run_init_reuses_worker_state() {
+        // single worker: one state visits every item in order
+        let out = Pool::new(1)
+            .run_init(
+                5,
+                || 0usize,
+                |seen, i| {
+                    *seen += 1;
+                    (i, *seen)
+                },
+            )
+            .unwrap();
+        assert_eq!(out, vec![(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        // multi worker: results stay in input order and every item saw a
+        // live (>= 1) state; states are per-worker so counts never exceed n
+        for threads in [2, 4] {
+            let out = Pool::new(threads)
+                .run_init(
+                    12,
+                    || 0usize,
+                    |seen, i| {
+                        *seen += 1;
+                        (i, *seen)
+                    },
+                )
+                .unwrap();
+            assert_eq!(
+                out.iter().map(|&(i, _)| i).collect::<Vec<_>>(),
+                (0..12).collect::<Vec<_>>()
+            );
+            assert!(out.iter().all(|&(_, s)| (1..=12).contains(&s)));
+        }
+    }
+
+    #[test]
+    fn map_init_over_items() {
+        let items = vec![10u32, 20, 30];
+        let out = Pool::new(2)
+            .map_init(&items, || 1u32, |bias, x| x + *bias)
+            .unwrap();
+        assert_eq!(out, vec![11, 21, 31]);
     }
 }

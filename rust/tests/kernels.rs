@@ -6,22 +6,28 @@
 //! integer route ([`Interpreter::with_int_weights`]) must agree with
 //! the legacy f32 fake-quant route to float-accumulation noise and
 //! produce identical Top-1 predictions, with the int-weight map coming
-//! out of the real quantizer ([`prepare_cached`]). Runs entirely on
-//! synthetic models/datasets -- no artifacts needed.
+//! out of the real quantizer ([`prepare_cached`]). Also covered here:
+//! integer-resident chains through pool/concat/shuffle-free graphs
+//! (conv -> max-pool -> conv -> concat -> gap -> dense), the avg-pool
+//! integer route, per-evaluation dispatch accounting, and Top-1
+//! invariance across worker thread counts. Runs entirely on synthetic
+//! models/datasets -- no artifacts needed.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
 use quantune::calib::{calibrate, CalibBackend};
-use quantune::coordinator::{prepare_cached, WeightCache};
-use quantune::data::synthetic_dataset;
+use quantune::coordinator::{prepare_cached, InterpEvaluator, SharedEvaluator, WeightCache};
+use quantune::data::{synthetic_dataset, Weights};
 use quantune::interp::{argmax_batch, Interpreter};
-use quantune::ir::Tensor;
+use quantune::ir::{Graph, Op, Tensor};
+use quantune::metrics::DispatchCounters;
 use quantune::quant::{
     BitWidth, CalibCount, Clipping, Granularity, QuantConfig, QuantPlan, Scheme,
     ALL_SCHEMES,
 };
-use quantune::zoo::synthetic_model;
+use quantune::util::{Json, Pcg32};
+use quantune::zoo::{synthetic_model, ZooModel};
 
 /// Max |a - b| over two logit tensors.
 fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
@@ -155,6 +161,248 @@ fn fp32_and_acts_modes_ignore_int_weights() {
     for (ta, tb) in acts_a.iter().zip(&acts_b) {
         assert_eq!(ta.data, tb.data);
     }
+}
+
+/// Build a [`ZooModel`] from inline meta JSON with seeded He-init
+/// weights -- the same construction as [`synthetic_model`], for custom
+/// topologies (pools, branches, concat).
+fn model_from_meta(meta_text: &str, seed: u64) -> ZooModel {
+    let graph = Graph::from_meta(&Json::parse(meta_text).unwrap()).unwrap();
+    let mut rng = Pcg32::new(seed, 41);
+    let mut tensors = HashMap::new();
+    let mut order = Vec::new();
+    for node in &graph.nodes {
+        let (w_shape, b_len): (Vec<usize>, usize) = match &node.op {
+            Op::Conv { k, in_ch, out_ch, groups, .. } => {
+                (vec![*k, *k, in_ch / groups, *out_ch], *out_ch)
+            }
+            Op::Dense { in_dim, out_dim } => (vec![*in_dim, *out_dim], *out_dim),
+            _ => continue,
+        };
+        let fan_in: usize = w_shape[..w_shape.len() - 1].iter().product();
+        let scale = (2.0 / fan_in.max(1) as f32).sqrt();
+        let wn: usize = w_shape.iter().product();
+        let w = Tensor {
+            shape: w_shape,
+            data: (0..wn).map(|_| rng.normal() * scale).collect(),
+        };
+        let b = Tensor {
+            shape: vec![b_len],
+            data: (0..b_len).map(|_| rng.normal() * 0.05).collect(),
+        };
+        for (suffix, t) in [("w", w), ("b", b)] {
+            let name = format!("{}_{suffix}", node.name);
+            order.push(name.clone());
+            tensors.insert(name, t);
+        }
+    }
+    ZooModel {
+        name: "chain".to_string(),
+        graph,
+        weights: Weights { tensors, order },
+        fp32_top1: 0.5,
+        batch: 16,
+    }
+}
+
+/// conv -> max-pool -> (conv, conv) -> concat -> gap -> dense: every
+/// integer-resident op of the PR 7 pipeline in one graph. Weighted
+/// layers in graph order: c1, c2a, c2b, d.
+const CHAIN_META: &str = r#"{"name": "chain", "input_shape": [8, 8, 4], "num_classes": 4,
+  "nodes": [
+    {"name": "c1", "op": "conv", "inputs": ["input"], "k": 3, "stride": 1,
+     "pad": 1, "in_ch": 4, "out_ch": 8, "groups": 1, "act": "relu"},
+    {"name": "p1", "op": "pool", "inputs": ["c1"], "kind": "max", "k": 2,
+     "stride": 2, "pad": 0},
+    {"name": "c2a", "op": "conv", "inputs": ["p1"], "k": 3, "stride": 1,
+     "pad": 1, "in_ch": 8, "out_ch": 8, "groups": 1, "act": "relu"},
+    {"name": "c2b", "op": "conv", "inputs": ["p1"], "k": 1, "stride": 1,
+     "pad": 0, "in_ch": 8, "out_ch": 8, "groups": 1, "act": "none"},
+    {"name": "cc", "op": "concat", "inputs": ["c2a", "c2b"]},
+    {"name": "g", "op": "gap", "inputs": ["cc"]},
+    {"name": "d", "op": "dense", "inputs": ["g"], "in_dim": 16, "out_dim": 4}]}"#;
+
+/// Same skeleton with an average pool: the int route crosses a
+/// documented f32 boundary there. Weighted layers: c1, c2, d.
+const AVG_META: &str = r#"{"name": "chain", "input_shape": [8, 8, 4], "num_classes": 4,
+  "nodes": [
+    {"name": "c1", "op": "conv", "inputs": ["input"], "k": 3, "stride": 1,
+     "pad": 1, "in_ch": 4, "out_ch": 8, "groups": 1, "act": "relu"},
+    {"name": "p1", "op": "pool", "inputs": ["c1"], "kind": "avg", "k": 2,
+     "stride": 2, "pad": 0},
+    {"name": "c2", "op": "conv", "inputs": ["p1"], "k": 3, "stride": 1,
+     "pad": 1, "in_ch": 8, "out_ch": 8, "groups": 1, "act": "relu"},
+    {"name": "g", "op": "gap", "inputs": ["c2"]},
+    {"name": "d", "op": "dense", "inputs": ["g"], "in_dim": 8, "out_dim": 4}]}"#;
+
+/// Run one plan through both routes on a custom-topology model and
+/// return (f32 logits, int logits, #int layers, (int, fallback)
+/// dispatch tallies of the integer route).
+fn chain_routes(
+    meta: &str,
+    scheme: Scheme,
+    gran: Granularity,
+    layer_widths: Option<Vec<BitWidth>>,
+) -> (Tensor, Tensor, usize, (u64, u64)) {
+    let model = model_from_meta(meta, 9);
+    let calib = synthetic_dataset(16, 8, 8, 4, 4, 5);
+    let eval = synthetic_dataset(32, 8, 8, 4, 4, 6);
+    let cache = calibrate(&model, &calib, CalibCount::C1, &CalibBackend::Interp, 1)
+        .unwrap();
+    let base = QuantConfig {
+        calib: CalibCount::C1,
+        scheme,
+        clip: Clipping::Max,
+        gran,
+        mixed: false,
+    };
+    let plan = QuantPlan { base, layer_widths };
+    let setup =
+        prepare_cached(&model, &cache, &plan, &WeightCache::new()).unwrap();
+    let weights: HashMap<String, Arc<Tensor>> = model
+        .weights
+        .order
+        .iter()
+        .cloned()
+        .zip(setup.weights.iter().cloned())
+        .collect();
+    let x = eval.batch(&(0..eval.n).collect::<Vec<_>>());
+
+    let f32_route = Interpreter::new(&model.graph, &weights);
+    let a = f32_route.forward_fq(&x, &setup.aq).unwrap();
+    let counters = DispatchCounters::new();
+    let int_route = Interpreter::new(&model.graph, &weights)
+        .with_int_weights(&setup.int_weights)
+        .with_dispatch_counters(&counters);
+    let b = int_route.forward_fq(&x, &setup.aq).unwrap();
+    let s = counters.snapshot();
+    (a, b, setup.int_weights.len(), (s.int_layers, s.fallback_layers))
+}
+
+#[test]
+fn integer_chain_agrees_on_every_scheme() {
+    // conv -> max-pool -> conv -> concat -> gap -> dense stays
+    // integer-resident end to end: max-pool passes i8 through, concat
+    // and gap dequantize in the oracle's accumulation order, and every
+    // weighted layer dispatches to the packed kernels
+    for scheme in ALL_SCHEMES {
+        for gran in [Granularity::Tensor, Granularity::Channel] {
+            let (a, b, n_int, (int_l, fb_l)) =
+                chain_routes(CHAIN_META, scheme, gran, None);
+            assert_eq!(n_int, 4, "{scheme:?}/{gran:?}");
+            assert_eq!((int_l, fb_l), (4, 0), "{scheme:?}/{gran:?}: dispatch");
+            let diff = max_abs_diff(&a, &b);
+            assert!(diff < 2e-3, "{scheme:?}/{gran:?}: logits diverged by {diff}");
+            assert_eq!(
+                argmax_batch(&a),
+                argmax_batch(&b),
+                "{scheme:?}/{gran:?}: predictions diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn integer_chain_handles_mixed_and_int4_widths() {
+    // c2b stays fp32: its dispatch falls back, its output leaves the
+    // grid, and the concat re-quantizes the merged tensor at its own
+    // (active) quant point so the dense head returns to the int path
+    let widths =
+        vec![BitWidth::Int8, BitWidth::Int4, BitWidth::Fp32, BitWidth::Int8];
+    let (a, b, n_int, (int_l, fb_l)) =
+        chain_routes(CHAIN_META, Scheme::Asymmetric, Granularity::Channel, Some(widths));
+    assert_eq!(n_int, 3);
+    assert_eq!((int_l, fb_l), (3, 1), "c2b must be the only fallback");
+    let diff = max_abs_diff(&a, &b);
+    assert!(diff < 2e-3, "mixed chain logits diverged by {diff}");
+    assert_eq!(argmax_batch(&a), argmax_batch(&b));
+
+    // all-int4: the whole chain on packed-nibble weights
+    let widths = vec![BitWidth::Int4; 4];
+    let (a, b, n_int, (int_l, fb_l)) =
+        chain_routes(CHAIN_META, Scheme::Symmetric, Granularity::Tensor, Some(widths));
+    assert_eq!(n_int, 4);
+    assert_eq!((int_l, fb_l), (4, 0));
+    let diff = max_abs_diff(&a, &b);
+    assert!(diff < 2e-3, "int4 chain logits diverged by {diff}");
+    assert_eq!(argmax_batch(&a), argmax_batch(&b));
+}
+
+#[test]
+fn avg_pool_integer_route_stays_near_oracle() {
+    // the i32-summed average pool is a documented f32 boundary: its
+    // result is the same window mean with a different rounding order,
+    // so the downstream conv re-enters via the f32 fallback and the
+    // routes agree to (at worst) one grid step of requantization slack
+    let (a, b, n_int, (int_l, fb_l)) =
+        chain_routes(AVG_META, Scheme::Asymmetric, Granularity::Channel, None);
+    assert_eq!(n_int, 3);
+    // c1 and d run integer; c2 consumes the avg pool's f32 output
+    assert_eq!((int_l, fb_l), (2, 1));
+    assert!(b.data.iter().all(|v| v.is_finite()));
+    let diff = max_abs_diff(&a, &b);
+    assert!(diff < 0.25, "avg-pool chain logits diverged by {diff}");
+    let (pa, pb) = (argmax_batch(&a), argmax_batch(&b));
+    let flips = pa.iter().zip(&pb).filter(|(x, y)| x != y).count();
+    assert!(flips <= 2, "avg-pool chain flipped {flips}/32 predictions");
+}
+
+#[test]
+fn thread_count_is_invisible_to_measured_top1() {
+    // the batch fan-out reduces hit counts in input order, and every
+    // worker's scratch arena is private: Top-1 must be bit-identical at
+    // any QUANTUNE_THREADS-style worker count
+    let model = synthetic_model(8, 4, 4, 3).unwrap();
+    let calib = synthetic_dataset(16, 8, 8, 4, 4, 5);
+    let eval = synthetic_dataset(160, 8, 8, 4, 4, 6);
+    for config in [0usize, 13] {
+        let mut accs = Vec::new();
+        for threads in [1usize, 2, 4, 8] {
+            let ev = InterpEvaluator::new(&model, &calib, &eval, 1)
+                .with_threads(threads);
+            accs.push(ev.measure_shared(config).unwrap());
+        }
+        assert!(
+            accs.windows(2).all(|w| w[0] == w[1]),
+            "config {config}: Top-1 varies with thread count: {accs:?}"
+        );
+    }
+}
+
+#[test]
+fn evaluator_dispatch_stats_track_integer_sweep() {
+    let model = synthetic_model(8, 4, 4, 3).unwrap();
+    let calib = synthetic_dataset(16, 8, 8, 4, 4, 5);
+    let eval = synthetic_dataset(64, 8, 8, 4, 4, 6);
+    let ev = InterpEvaluator::new(&model, &calib, &eval, 1).with_threads(2);
+    ev.measure_shared(0).unwrap();
+    let s = ev.dispatch_stats();
+    // 64 eval images = one batch; all three weighted layers went integer
+    assert_eq!(s.int_layers, 3);
+    assert_eq!(s.fallback_layers, 0);
+    assert!(s.int_macs > 0);
+    assert!((s.integer_mac_fraction() - 1.0).abs() < 1e-12);
+    // one prepack per weighted layer, Arc-shared thereafter
+    assert_eq!(s.prepack_builds, 3);
+    assert_eq!(s.prepack_hits, 0);
+    // re-measuring the same config is memoized: nothing moves
+    ev.measure_shared(0).unwrap();
+    let s2 = ev.dispatch_stats();
+    assert_eq!((s2.int_layers, s2.prepack_builds), (3, 3));
+    // a config differing only in activation clipping shares every
+    // prepacked panel: 3 cache hits, zero new builds
+    let c0 = QuantConfig::from_index(0).unwrap();
+    let other = (1..QuantConfig::SPACE_SIZE)
+        .find(|&i| {
+            let c = QuantConfig::from_index(i).unwrap();
+            c.clip != c0.clip && QuantConfig { clip: c0.clip, ..c } == c0
+        })
+        .expect("space has a clip-only neighbour of config 0");
+    ev.measure_shared(other).unwrap();
+    let s3 = ev.dispatch_stats();
+    assert_eq!(s3.prepack_builds, 3);
+    assert_eq!(s3.prepack_hits, 3);
+    assert_eq!(s3.int_layers, 6);
 }
 
 #[test]

@@ -1,0 +1,73 @@
+//! Steady-state no-packing guarantee of the prepacked weight pipeline.
+//!
+//! [`pack_calls`] is a process-global counter bumped by every
+//! `pack_b_i8` / `pack_b_i4` invocation, so this test lives in its own
+//! integration binary: cargo runs each test file as a separate process,
+//! which keeps the counter free of traffic from unrelated tests running
+//! concurrently. The contract under test (ROADMAP item 1 / PR 7): all
+//! packing happens inside [`prepare_cached`], and repeated fake-quant
+//! forwards afterwards neither repack nor drift by a single bit --
+//! whether they reuse one scratch arena or bring a fresh one.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use quantune::calib::{calibrate, CalibBackend};
+use quantune::coordinator::{prepare_cached, WeightCache};
+use quantune::data::synthetic_dataset;
+use quantune::interp::kernels::pack_calls;
+use quantune::interp::{InterpScratch, Interpreter};
+use quantune::ir::Tensor;
+use quantune::quant::{CalibCount, QuantConfig, QuantPlan};
+use quantune::zoo::synthetic_model;
+
+#[test]
+fn steady_state_forwards_never_pack_and_are_bitwise_stable() {
+    let model = synthetic_model(8, 4, 4, 3).unwrap();
+    let calib = synthetic_dataset(16, 8, 8, 4, 4, 5);
+    let eval = synthetic_dataset(32, 8, 8, 4, 4, 6);
+    let cache = calibrate(&model, &calib, CalibCount::C1, &CalibBackend::Interp, 1)
+        .unwrap();
+    let plan: QuantPlan = QuantConfig::from_index(0).unwrap().into();
+    let setup =
+        prepare_cached(&model, &cache, &plan, &WeightCache::new()).unwrap();
+    // config 0 is all-int8 non-mixed: one panel packed per weighted layer
+    assert_eq!(setup.int_weights.len(), 3);
+    assert!(
+        pack_calls() >= 3,
+        "prepare_cached must have packed the weight panels up front"
+    );
+
+    let weights: HashMap<String, Arc<Tensor>> = model
+        .weights
+        .order
+        .iter()
+        .cloned()
+        .zip(setup.weights.iter().cloned())
+        .collect();
+    let interp = Interpreter::new(&model.graph, &weights)
+        .with_int_weights(&setup.int_weights);
+    let x = eval.batch(&(0..eval.n).collect::<Vec<_>>());
+
+    let mut scratch = InterpScratch::for_graph(&model.graph, eval.n);
+    let baseline = interp.forward_fq_with(&x, &setup.aq, &mut scratch).unwrap();
+    let n0 = pack_calls();
+    for pass in 0..5 {
+        let logits = interp.forward_fq_with(&x, &setup.aq, &mut scratch).unwrap();
+        assert_eq!(
+            logits.data, baseline.data,
+            "steady-state pass {pass} drifted from the first forward"
+        );
+    }
+    assert_eq!(
+        pack_calls(),
+        n0,
+        "steady-state forwards must not repack any weight panel"
+    );
+
+    // a fresh arena (the forward_fq convenience path) reproduces the
+    // same bits: the scratch is workspace, never state
+    let fresh = interp.forward_fq(&x, &setup.aq).unwrap();
+    assert_eq!(fresh.data, baseline.data);
+    assert_eq!(pack_calls(), n0);
+}

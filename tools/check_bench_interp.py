@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Sanity-check a BENCH_interp.json emitted by `cargo bench --bench
+bench_interp` (CI runs the bench in --smoke mode and then this script,
+so a bench that silently emits an empty or partial report fails the
+build instead of shipping a hollow artifact).
+
+Checks:
+- the file parses and has the expected top-level structure;
+- both pinned models were measured (`syn8` conv-dominated, `dense_head`
+  batch-1 dense-heavy -- dropping one should be a deliberate, visible
+  change);
+- every declared variant has positive p50/mean/ms-per-image timings in
+  every row;
+- the speedup fields are present and positive;
+- the steady-state no-allocation contract held: zero pack calls per
+  steady forward, and strictly fewer allocations than the per-call
+  packing baseline.
+
+Usage: python3 tools/check_bench_interp.py BENCH_interp.json
+"""
+
+import json
+import sys
+
+EXPECTED_VARIANTS = ["fq_f32", "int_repack", "int_steady"]
+EXPECTED_MODELS = {"syn", "dense_head"}
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench_interp: FAIL: {msg}")
+    sys.exit(1)
+
+
+def main() -> None:
+    if len(sys.argv) != 2:
+        fail(f"usage: {sys.argv[0]} BENCH_interp.json")
+    path = sys.argv[1]
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot parse {path}: {e}")
+
+    variants = report.get("variants")
+    if variants != EXPECTED_VARIANTS:
+        fail(f"variants {variants!r} != expected {EXPECTED_VARIANTS!r}")
+
+    rows = report.get("rows")
+    if not isinstance(rows, list) or not rows:
+        fail("no rows measured")
+
+    seen_models = set()
+    for row in rows:
+        label = f"{row.get('model')}@b{row.get('batch')}/{row.get('scheme')}"
+        seen_models.add(row.get("model"))
+        vrows = row.get("variants", {})
+        for v in EXPECTED_VARIANTS:
+            vrow = vrows.get(v)
+            if not isinstance(vrow, dict):
+                fail(f"row {label}: missing variant row {v!r}")
+            for field in ("p50_ms", "mean_ms", "ms_per_image"):
+                val = vrow.get(field)
+                if not isinstance(val, (int, float)) or val <= 0:
+                    fail(f"row {label}: {v}.{field} = {val!r} (want > 0)")
+        for field in ("speedup_vs_repack", "speedup_vs_f32"):
+            val = row.get(field)
+            if not isinstance(val, (int, float)) or val <= 0:
+                fail(f"row {label}: {field} = {val!r} (want > 0)")
+        packs = row.get("pack_calls_per_fwd_steady")
+        if packs != 0:
+            fail(f"row {label}: pack_calls_per_fwd_steady = {packs!r} (want 0)")
+        steady = row.get("allocs_per_fwd_steady")
+        repack = row.get("allocs_per_fwd_repack")
+        if not isinstance(steady, (int, float)) or not isinstance(repack, (int, float)):
+            fail(f"row {label}: allocation counters missing")
+        if steady >= repack:
+            fail(
+                f"row {label}: allocs_per_fwd_steady = {steady} not below "
+                f"repack baseline {repack}"
+            )
+
+    missing = EXPECTED_MODELS - seen_models
+    if missing:
+        fail(f"pinned model(s) not measured: {sorted(missing)}")
+
+    print(
+        f"check_bench_interp: OK ({len(rows)} rows x "
+        f"{len(EXPECTED_VARIANTS)} variants, speedups vs repack "
+        f"{[round(r['speedup_vs_repack'], 2) for r in rows]})"
+    )
+
+
+if __name__ == "__main__":
+    main()
