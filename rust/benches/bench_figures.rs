@@ -162,7 +162,7 @@ fn main() -> Result<()> {
             let model = q.load_model(&name)?;
             let base = q
                 .db
-                .best_for(&name)
+                .best_general(&name)
                 .map(|(c, _)| c)
                 .unwrap_or_else(Quantune::tensorrt_like_baseline);
             println!("-- {name} (base {}) --", base.slug());

@@ -6,18 +6,22 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-/// Parsed command line: a subcommand plus options.
+/// Parsed command line: a subcommand, an optional action, and options.
 #[derive(Debug, Default)]
 pub struct Cli {
     /// The subcommand (first positional argument).
     pub command: String,
+    /// Optional sub-action (second positional argument, e.g. the
+    /// `status` of `quantune db status`). Commands that take no action
+    /// reject a present one at dispatch time.
+    pub action: Option<String>,
     opts: HashMap<String, String>,
     flags: Vec<String>,
 }
 
 impl Cli {
     /// Parse `args` (without argv[0]). Grammar:
-    /// `<command> [--key value | --flag]...`
+    /// `<command> [action] [--key value | --flag]...`
     pub fn parse(args: &[String]) -> Result<Cli> {
         let mut cli = Cli::default();
         let mut it = args.iter().peekable();
@@ -25,6 +29,11 @@ impl Cli {
             Some(cmd) if !cmd.starts_with("--") => cli.command = cmd.clone(),
             Some(cmd) => bail!("expected a subcommand before {cmd:?}"),
             None => bail!("missing subcommand"),
+        }
+        if let Some(a) = it.peek() {
+            if !a.starts_with("--") {
+                cli.action = it.next().cloned();
+            }
         }
         while let Some(a) = it.next() {
             let Some(key) = a.strip_prefix("--") else {
@@ -132,8 +141,20 @@ mod tests {
     }
 
     #[test]
+    fn second_positional_is_the_action() {
+        let c = parse("db status --artifacts x").unwrap();
+        assert_eq!(c.command, "db");
+        assert_eq!(c.action.as_deref(), Some("status"));
+        assert_eq!(c.opt("artifacts"), Some("x"));
+        // a lone command leaves the action empty
+        assert!(parse("sweep --force").unwrap().action.is_none());
+    }
+
+    #[test]
     fn rejects_positional_garbage() {
-        assert!(parse("sweep junk").is_err());
+        // a third positional is garbage; the second parses as the action
+        // (commands that take none reject it at dispatch time)
+        assert!(parse("db status junk").is_err());
         assert!(parse("").is_err());
         assert!(parse("--flag").is_err());
     }

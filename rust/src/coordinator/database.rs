@@ -1,18 +1,24 @@
-//! The trial database D = {(e_i, s_i, c_i)} (paper §5.2).
+//! The legacy JSON backend of the trial store (paper §5.2's database D).
 //!
 //! Every measured (model, space, config, accuracy) record is appended
 //! here; the transfer-learning search (XGB-T) warm-starts from the
 //! records of *other* models measured in the *same* space -- the space
 //! tag keeps feature vectors from incompatible spaces (general vs VTA vs
 //! a layer-wise space) from ever being mixed into one cost model.
-//! Persisted as JSON so runs accumulate across processes; records
-//! written before the space tag existed load as the general space (and
-//! records written before the multi-objective fields existed load with
-//! unknown latency/size components).
 //!
-//! Ranking over records is NaN-safe: `accuracy_table` explicitly fills
-//! holes with NaN, so everything that sorts or maxes accuracies treats
-//! NaN as "worse than any measurement" instead of panicking.
+//! This whole-file JSON format predates the segmented log
+//! ([`super::store::LogStore`]); it is kept so old `database.json`
+//! artifacts open transparently and as the export/migration schema.
+//! Records written before the space tag existed load as the general
+//! space, and records written before the multi-objective fields existed
+//! load with unknown latency/size components. Since the store refactor,
+//! `save` is crash-safe: the document lands via a temp file + atomic
+//! rename, so a crash mid-write can never destroy an existing database.
+//!
+//! Ranking over records is NaN-safe: a null accuracy loads as NaN
+//! ("poisoned measurement") and every query of the
+//! [`super::store::TrialStore`] trait treats NaN as "worse than any
+//! measurement" instead of panicking.
 
 #![deny(clippy::unwrap_used)]
 
@@ -20,9 +26,8 @@ use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
-use crate::quant::QuantConfig;
-use crate::search::TransferRecord;
-use crate::util::{nan_min_cmp, Json};
+use super::store::{write_atomic, RecordIndex, TrialStore};
+use crate::util::Json;
 
 /// Space tag of the 96-element general space (the pre-tag default).
 pub const GENERAL_SPACE_TAG: &str = "general";
@@ -73,14 +78,68 @@ impl Record {
             device: None,
         }
     }
+
+    /// The record as a JSON object -- the schema shared by the legacy
+    /// whole-file database, the log-segment frames, and `db export`.
+    /// JSON has no NaN: a poisoned accuracy serializes as null and
+    /// non-finite optional components are dropped.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("model", Json::str(self.model.clone())),
+            ("space", Json::str(self.space.clone())),
+            ("config", Json::num(self.config as f64)),
+            (
+                "accuracy",
+                if self.accuracy.is_finite() {
+                    Json::num(self.accuracy)
+                } else {
+                    Json::Null
+                },
+            ),
+            ("measure_secs", Json::num(self.measure_secs)),
+        ];
+        if let Some(l) = self.latency_ms.filter(|l| l.is_finite()) {
+            fields.push(("latency_ms", Json::num(l)));
+        }
+        if let Some(b) = self.size_bytes.filter(|b| b.is_finite()) {
+            fields.push(("size_bytes", Json::num(b)));
+        }
+        if let Some(d) = &self.device {
+            fields.push(("device", Json::str(d.clone())));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse one record object (the inverse of [`Record::to_json`]).
+    /// Tolerant of legacy shapes: a missing space tag loads as the
+    /// general space, a null accuracy loads as NaN, and the
+    /// latency/size/device fields are optional.
+    pub fn from_json(v: &Json) -> Result<Record> {
+        let default_space = Json::Str(GENERAL_SPACE_TAG.to_string());
+        let opt = |key: &str| -> Option<f64> { v.get(key).ok().and_then(|x| x.as_f64().ok()) };
+        Ok(Record {
+            model: v.get("model")?.as_str()?.to_string(),
+            space: v.get_or("space", &default_space).as_str()?.to_string(),
+            config: v.get("config")?.as_usize()?,
+            accuracy: match v.get("accuracy")? {
+                Json::Null => f64::NAN,
+                x => x.as_f64()?,
+            },
+            measure_secs: v.get("measure_secs")?.as_f64()?,
+            latency_ms: opt("latency_ms"),
+            size_bytes: opt("size_bytes"),
+            device: v.get("device").ok().and_then(|x| x.as_str().ok()).map(str::to_string),
+        })
+    }
 }
 
-/// The trial database `D`: an append-only record list, optionally
-/// JSON-backed.
+/// The legacy JSON trial database: an append-only record list plus its
+/// [`RecordIndex`], optionally backed by a whole-file JSON document.
+/// Queries come from the [`TrialStore`] trait it implements.
 #[derive(Default)]
 pub struct Database {
-    /// Every measured trial, in insertion order.
-    pub records: Vec<Record>,
+    records: Vec<Record>,
+    index: RecordIndex,
     path: Option<PathBuf>,
 }
 
@@ -93,146 +152,50 @@ impl Database {
     /// Open (or create) a JSON-backed database.
     pub fn open(path: &Path) -> Result<Database> {
         if !path.exists() {
-            return Ok(Database { records: Vec::new(), path: Some(path.to_path_buf()) });
+            return Ok(Database {
+                records: Vec::new(),
+                index: RecordIndex::default(),
+                path: Some(path.to_path_buf()),
+            });
         }
         let json = Json::from_file(path)?;
         let mut records = Vec::new();
-        let default_space = Json::Str(GENERAL_SPACE_TAG.to_string());
         for r in json.get("records")?.as_arr()? {
-            // optional component fields: absent on legacy records
-            let opt = |key: &str| -> Option<f64> {
-                r.get(key).ok().and_then(|v| v.as_f64().ok())
-            };
-            records.push(Record {
-                model: r.get("model")?.as_str()?.to_string(),
-                space: r.get_or("space", &default_space).as_str()?.to_string(),
-                config: r.get("config")?.as_usize()?,
-                // a null accuracy is a persisted poisoned measurement;
-                // it loads as NaN and degrades in every ranking site
-                accuracy: match r.get("accuracy")? {
-                    Json::Null => f64::NAN,
-                    v => v.as_f64()?,
-                },
-                measure_secs: r.get("measure_secs")?.as_f64()?,
-                latency_ms: opt("latency_ms"),
-                size_bytes: opt("size_bytes"),
-                device: r
-                    .get("device")
-                    .ok()
-                    .and_then(|v| v.as_str().ok())
-                    .map(str::to_string),
-            });
+            records.push(Record::from_json(r)?);
         }
-        Ok(Database { records, path: Some(path.to_path_buf()) })
+        let index = RecordIndex::build(&records);
+        Ok(Database { records, index, path: Some(path.to_path_buf()) })
+    }
+}
+
+impl TrialStore for Database {
+    fn records(&self) -> &[Record] {
+        &self.records
     }
 
-    /// Append one record.
-    pub fn add(&mut self, r: Record) {
+    fn index(&self) -> &RecordIndex {
+        &self.index
+    }
+
+    fn add(&mut self, r: Record) -> Result<u64> {
+        let seq = self.records.len() as u64;
+        self.index.insert(self.records.len(), &r);
         self.records.push(r);
+        Ok(seq)
     }
 
     /// Persist to the backing file (no-op for in-memory databases).
-    pub fn save(&self) -> Result<()> {
+    /// Crash-safe: the whole document is rewritten to a temp file and
+    /// atomically renamed over the old one.
+    fn save(&self) -> Result<()> {
         let Some(path) = &self.path else { return Ok(()) };
-        let records: Vec<Json> = self
-            .records
-            .iter()
-            .map(|r| {
-                let mut fields = vec![
-                    ("model", Json::str(r.model.clone())),
-                    ("space", Json::str(r.space.clone())),
-                    ("config", Json::num(r.config as f64)),
-                    // JSON has no NaN: a poisoned accuracy persists as
-                    // null and round-trips back to NaN on load
-                    (
-                        "accuracy",
-                        if r.accuracy.is_finite() {
-                            Json::num(r.accuracy)
-                        } else {
-                            Json::Null
-                        },
-                    ),
-                    ("measure_secs", Json::num(r.measure_secs)),
-                ];
-                // only finite components serialize (JSON has no NaN)
-                if let Some(l) = r.latency_ms.filter(|l| l.is_finite()) {
-                    fields.push(("latency_ms", Json::num(l)));
-                }
-                if let Some(b) = r.size_bytes.filter(|b| b.is_finite()) {
-                    fields.push(("size_bytes", Json::num(b)));
-                }
-                if let Some(d) = &r.device {
-                    fields.push(("device", Json::str(d.clone())));
-                }
-                Json::obj(fields)
-            })
-            .collect();
-        Json::obj(vec![("records", Json::Arr(records))]).write_file(path)
+        let records: Vec<Json> = self.records.iter().map(Record::to_json).collect();
+        let doc = Json::obj(vec![("records", Json::Arr(records))]);
+        write_atomic(path, doc.pretty().as_bytes())
     }
 
-    /// Accuracy table (index -> best-known accuracy) for one model in
-    /// one space; holes are NaN. Duplicate (model, config) records keep
-    /// the maximum measured accuracy, so a re-measured config can only
-    /// improve the table.
-    pub fn accuracy_table(&self, model: &str, space: &str, size: usize) -> Vec<f64> {
-        let mut t = vec![f64::NAN; size];
-        for r in
-            self.records.iter().filter(|r| r.model == model && r.space == space)
-        {
-            if r.config < size && (t[r.config].is_nan() || r.accuracy > t[r.config]) {
-                t[r.config] = r.accuracy;
-            }
-        }
-        t
-    }
-
-    /// Does the database hold a full sweep for `model` in `space`?
-    pub fn has_full_sweep(&self, model: &str, space: &str, size: usize) -> bool {
-        self.accuracy_table(model, space, size).iter().all(|a| !a.is_nan())
-    }
-
-    /// Are there any records from models other than `exclude` in
-    /// `space`? Cheap pre-check for xgb_t's transfer requirement (a
-    /// `true` can still yield no transfer records when the other
-    /// models' feature metadata is missing -- the search then errors
-    /// descriptively, which is the right surface for that broken state).
-    pub fn has_transfer_records(&self, exclude: &str, space: &str) -> bool {
-        self.records.iter().any(|r| r.model != exclude && r.space == space)
-    }
-
-    /// Transfer-learning records in `space` from every model EXCEPT
-    /// `exclude`. `features` maps (model, config index) -> feature
-    /// vector.
-    pub fn transfer_records(
-        &self,
-        exclude: &str,
-        space: &str,
-        mut features: impl FnMut(&str, usize) -> Option<Vec<f32>>,
-    ) -> Vec<TransferRecord> {
-        let mut out = Vec::new();
-        for r in &self.records {
-            if r.model == exclude || r.space != space {
-                continue;
-            }
-            if let Some(f) = features(&r.model, r.config) {
-                out.push(TransferRecord { features: f, accuracy: r.accuracy as f32 });
-            }
-        }
-        out
-    }
-
-    /// Best (config, accuracy) for a model in the general space. NaN
-    /// accuracies (holes re-persisted from a table, poisoned
-    /// measurements) are skipped entirely: a database of only-NaN
-    /// records reports `None` instead of panicking mid-comparison.
-    pub fn best_for(&self, model: &str) -> Option<(QuantConfig, f64)> {
-        self.records
-            .iter()
-            .filter(|r| {
-                r.model == model && r.space == GENERAL_SPACE_TAG && !r.accuracy.is_nan()
-            })
-            .max_by(|a, b| nan_min_cmp(&a.accuracy, &b.accuracy))
-            .and_then(|r| QuantConfig::from_index(r.config).ok().map(|c| (c, r.accuracy)))
+    fn location(&self) -> Option<&Path> {
+        self.path.as_deref()
     }
 }
 
@@ -253,16 +216,17 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         {
             let mut db = Database::open(&path).unwrap();
-            db.add(rec("mn", 3, 0.7));
-            db.add(Record { space: "vta".into(), ..rec("shn", 5, 0.6) });
+            db.add(rec("mn", 3, 0.7)).unwrap();
+            db.add(Record { space: "vta".into(), ..rec("shn", 5, 0.6) }).unwrap();
             db.save().unwrap();
         }
         let db = Database::open(&path).unwrap();
-        assert_eq!(db.records.len(), 2);
-        assert_eq!(db.records[0].model, "mn");
-        assert_eq!(db.records[0].config, 3);
-        assert_eq!(db.records[0].space, GENERAL_SPACE_TAG);
-        assert_eq!(db.records[1].space, "vta");
+        assert_eq!(db.records().len(), 2);
+        assert_eq!(db.records()[0].model, "mn");
+        assert_eq!(db.records()[0].config, 3);
+        assert_eq!(db.records()[0].space, GENERAL_SPACE_TAG);
+        assert_eq!(db.records()[1].space, "vta");
+        assert!(!dir.join("db.json.tmp").exists(), "atomic save leaves no temp file");
     }
 
     #[test]
@@ -277,22 +241,22 @@ mod tests {
         )
         .unwrap();
         let db = Database::open(&path).unwrap();
-        assert_eq!(db.records.len(), 1);
-        assert_eq!(db.records[0].space, GENERAL_SPACE_TAG);
+        assert_eq!(db.records().len(), 1);
+        assert_eq!(db.records()[0].space, GENERAL_SPACE_TAG);
         let _ = std::fs::remove_file(&path);
     }
 
     #[test]
     fn transfer_excludes_target_model_and_other_spaces() {
         let mut db = Database::in_memory();
-        db.add(rec("mn", 0, 0.5));
-        db.add(rec("shn", 1, 0.6));
-        db.add(Record { space: "vta".into(), ..rec("shn", 2, 0.9) });
+        db.add(rec("mn", 0, 0.5)).unwrap();
+        db.add(rec("shn", 1, 0.6)).unwrap();
+        db.add(Record { space: "vta".into(), ..rec("shn", 2, 0.9) }).unwrap();
         let recs =
-            db.transfer_records("mn", GENERAL_SPACE_TAG, |_, i| Some(vec![i as f32]));
+            db.transfer_records("mn", GENERAL_SPACE_TAG, &mut |_, i| Some(vec![i as f32]));
         assert_eq!(recs.len(), 1);
         assert_eq!(recs[0].accuracy, 0.6);
-        let vta = db.transfer_records("mn", "vta", |_, i| Some(vec![i as f32]));
+        let vta = db.transfer_records("mn", "vta", &mut |_, i| Some(vec![i as f32]));
         assert_eq!(vta.len(), 1);
         assert_eq!(vta[0].accuracy, 0.9);
         // the cheap pre-check agrees with the full extraction
@@ -305,16 +269,18 @@ mod tests {
     #[test]
     fn accuracy_table_and_best() {
         let mut db = Database::in_memory();
-        db.add(rec("mn", 0, 0.5));
-        db.add(rec("mn", 2, 0.9));
+        db.add(rec("mn", 0, 0.5)).unwrap();
+        db.add(rec("mn", 2, 0.9)).unwrap();
         let t = db.accuracy_table("mn", GENERAL_SPACE_TAG, 4);
         assert_eq!(t[0], 0.5);
         assert!(t[1].is_nan());
         assert_eq!(t[2], 0.9);
         assert!(!db.has_full_sweep("mn", GENERAL_SPACE_TAG, 4));
-        let (cfg, acc) = db.best_for("mn").unwrap();
+        let (cfg, acc) = db.best_general("mn").unwrap();
         assert_eq!(cfg.index(), 2);
         assert_eq!(acc, 0.9);
+        // the generalized query agrees with the wrapper
+        assert_eq!(db.best_for("mn", GENERAL_SPACE_TAG), Some((2, 0.9)));
     }
 
     #[test]
@@ -322,10 +288,10 @@ mod tests {
         // a re-measured config must never degrade the table ("best-known
         // accuracy"), regardless of record order
         let mut db = Database::in_memory();
-        db.add(rec("mn", 1, 0.8));
-        db.add(rec("mn", 1, 0.3)); // noisy re-measurement, later in time
-        db.add(rec("mn", 0, 0.1));
-        db.add(rec("mn", 0, 0.4));
+        db.add(rec("mn", 1, 0.8)).unwrap();
+        db.add(rec("mn", 1, 0.3)).unwrap(); // noisy re-measurement, later in time
+        db.add(rec("mn", 0, 0.1)).unwrap();
+        db.add(rec("mn", 0, 0.4)).unwrap();
         let t = db.accuracy_table("mn", GENERAL_SPACE_TAG, 2);
         assert_eq!(t[0], 0.4);
         assert_eq!(t[1], 0.8);
@@ -336,10 +302,10 @@ mod tests {
         // a NaN accuracy record (a re-persisted table hole, a poisoned
         // measurement) used to panic best_for's comparator
         let mut db = Database::in_memory();
-        db.add(rec("mn", 0, f64::NAN));
-        db.add(rec("mn", 2, 0.9));
-        db.add(rec("mn", 1, f64::NAN));
-        let (cfg, acc) = db.best_for("mn").unwrap();
+        db.add(rec("mn", 0, f64::NAN)).unwrap();
+        db.add(rec("mn", 2, 0.9)).unwrap();
+        db.add(rec("mn", 1, f64::NAN)).unwrap();
+        let (cfg, acc) = db.best_general("mn").unwrap();
         assert_eq!(cfg.index(), 2);
         assert_eq!(acc, 0.9);
         // table keeps the real value for config 2 and NaN elsewhere
@@ -348,8 +314,8 @@ mod tests {
         assert_eq!(t[2], 0.9);
         // all-NaN: no best, not a panic
         let mut only_nan = Database::in_memory();
-        only_nan.add(rec("shn", 0, f64::NAN));
-        assert!(only_nan.best_for("shn").is_none());
+        only_nan.add(rec("shn", 0, f64::NAN)).unwrap();
+        assert!(only_nan.best_general("shn").is_none());
     }
 
     #[test]
@@ -365,23 +331,25 @@ mod tests {
                 size_bytes: Some(1944.0),
                 device: Some("CPU(i7-8700)".into()),
                 ..rec("mn", 7, 0.8)
-            });
+            })
+            .unwrap();
             db.add(Record {
                 latency_ms: Some(f64::NAN), // must not serialize as NaN
                 size_bytes: None,
                 ..rec("mn", 8, 0.7)
-            });
-            db.add(rec("mn", 9, 0.6));
+            })
+            .unwrap();
+            db.add(rec("mn", 9, 0.6)).unwrap();
             db.save().unwrap();
         }
         let db = Database::open(&path).unwrap();
-        assert_eq!(db.records[0].latency_ms, Some(3.25));
-        assert_eq!(db.records[0].size_bytes, Some(1944.0));
-        assert_eq!(db.records[0].device.as_deref(), Some("CPU(i7-8700)"));
-        assert_eq!(db.records[1].latency_ms, None);
-        assert_eq!(db.records[1].device, None);
-        assert_eq!(db.records[2].latency_ms, None);
-        assert_eq!(db.records[2].size_bytes, None);
+        assert_eq!(db.records()[0].latency_ms, Some(3.25));
+        assert_eq!(db.records()[0].size_bytes, Some(1944.0));
+        assert_eq!(db.records()[0].device.as_deref(), Some("CPU(i7-8700)"));
+        assert_eq!(db.records()[1].latency_ms, None);
+        assert_eq!(db.records()[1].device, None);
+        assert_eq!(db.records()[2].latency_ms, None);
+        assert_eq!(db.records()[2].size_bytes, None);
         let _ = std::fs::remove_file(&path);
     }
 
@@ -393,14 +361,14 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         {
             let mut db = Database::open(&path).unwrap();
-            db.add(rec("mn", 1, f64::NAN));
-            db.add(rec("mn", 2, 0.7));
+            db.add(rec("mn", 1, f64::NAN)).unwrap();
+            db.add(rec("mn", 2, 0.7)).unwrap();
             db.save().unwrap();
         }
         let db = Database::open(&path).unwrap();
-        assert!(db.records[0].accuracy.is_nan());
-        assert_eq!(db.records[1].accuracy, 0.7);
-        let (cfg, _) = db.best_for("mn").unwrap();
+        assert!(db.records()[0].accuracy.is_nan());
+        assert_eq!(db.records()[1].accuracy, 0.7);
+        let (cfg, _) = db.best_general("mn").unwrap();
         assert_eq!(cfg.index(), 2);
         let _ = std::fs::remove_file(&path);
     }
@@ -408,12 +376,14 @@ mod tests {
     #[test]
     fn tables_are_separated_by_space() {
         let mut db = Database::in_memory();
-        db.add(rec("mn", 0, 0.5));
-        db.add(Record { space: "vta".into(), ..rec("mn", 0, 0.9) });
+        db.add(rec("mn", 0, 0.5)).unwrap();
+        db.add(Record { space: "vta".into(), ..rec("mn", 0, 0.9) }).unwrap();
         let g = db.accuracy_table("mn", GENERAL_SPACE_TAG, 1);
         let v = db.accuracy_table("mn", "vta", 1);
         assert_eq!(g[0], 0.5);
         assert_eq!(v[0], 0.9);
         assert!(db.has_full_sweep("mn", "vta", 1));
+        // best_for sees the per-space winners too
+        assert_eq!(db.best_for("mn", "vta"), Some((0, 0.9)));
     }
 }

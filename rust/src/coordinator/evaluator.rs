@@ -482,7 +482,7 @@ impl OracleEvaluator {
 
     /// Out-of-range indices are an error (the caller paired the wrong
     /// space with this table); a NaN entry -- an unmeasured hole of
-    /// `Database::accuracy_table` -- is returned as NaN so a search over
+    /// `TrialStore::accuracy_table` -- is returned as NaN so a search over
     /// a partial table degrades (NaN ranks below every real score)
     /// instead of aborting.
     fn lookup(&self, config: usize) -> Result<f64> {

@@ -19,8 +19,13 @@ pub mod devices;
 pub mod evaluator;
 pub mod objective;
 pub mod quantizer;
+pub mod store;
 
 pub use database::{Database, Record, GENERAL_SPACE_TAG};
+pub use store::{
+    records_equal, write_atomic, LogStore, RecordIndex, Store, StoreWriter, TransferCursor,
+    TrialStore,
+};
 pub use devices::{DeviceProfile, DEVICES};
 pub use evaluator::{
     Evaluator, HloEvaluator, InterpEvaluator, ObjectiveEvaluator, OracleEvaluator,
@@ -95,22 +100,29 @@ pub fn make_algorithm(
     })
 }
 
-/// Holds the shared experiment state: artifacts dir, datasets, database,
-/// and the deployment device the latency-aware objective prices against.
+/// Holds the shared experiment state: artifacts dir, datasets, trial
+/// store, and the deployment device the latency-aware objective prices
+/// against.
 pub struct Quantune {
-    /// Artifacts directory (HLO files, datasets, database).
+    /// Artifacts directory (HLO files, datasets, trial store).
     pub artifacts: PathBuf,
     /// Calibration image pool.
     pub calib_pool: Dataset,
     /// Held-out eval split.
     pub eval: Dataset,
-    /// The trial database `D`.
-    pub db: Database,
+    /// The trial store holding the database `D` (backend auto-detected
+    /// by [`Store::open`]: segmented log or legacy JSON).
+    pub db: Store,
     /// Seed for calibration draws and searches.
     pub seed: u64,
     /// Deploy target for modeled latency (general / layer-wise spaces;
     /// the VTA space always prices by cycle counts). Default: i7-8700.
     pub device: DeviceProfile,
+    /// Warm-start GA / NSGA-II populations from the store's best-known
+    /// configs for (model, space) instead of fully random init
+    /// (`--seed-from-db`). Falls back to random when the store holds
+    /// nothing for the pair.
+    pub seed_from_db: bool,
 }
 
 impl Quantune {
@@ -119,7 +131,7 @@ impl Quantune {
         let calib_pool = Dataset::load(&artifacts.join("dataset_calib.qtd"))
             .context("calibration pool (run `make artifacts`)")?;
         let eval = Dataset::load(&artifacts.join("dataset_eval.qtd"))?;
-        let db = Database::open(&artifacts.join("database.json"))?;
+        let db = Store::open(&artifacts)?;
         Ok(Quantune {
             artifacts,
             calib_pool,
@@ -127,11 +139,12 @@ impl Quantune {
             db,
             seed: 20220205,
             device: DEVICES[1],
+            seed_from_db: false,
         })
     }
 
     /// A self-contained instance over the synthetic model's datasets and
-    /// an in-memory database -- every search path works without artifact
+    /// an in-memory store -- every search path works without artifact
     /// files (the CLI falls back to this so `quantune search` runs from
     /// a clean checkout).
     pub fn synthetic() -> Quantune {
@@ -139,9 +152,10 @@ impl Quantune {
             artifacts: PathBuf::from("."),
             calib_pool: crate::data::synthetic_dataset(64, 8, 8, 4, 4, 5),
             eval: crate::data::synthetic_dataset(256, 8, 8, 4, 4, 6),
-            db: Database::in_memory(),
+            db: Store::in_memory(),
             seed: 20220205,
             device: DEVICES[1],
+            seed_from_db: false,
         }
     }
 
@@ -221,7 +235,7 @@ impl Quantune {
                 latency_ms: Some(c.latency_ms),
                 size_bytes: Some(c.size_bytes),
                 device: Some(cost.target.clone()),
-            });
+            })?;
             progress(i, acc);
         }
         self.db.save()?;
@@ -229,9 +243,14 @@ impl Quantune {
     }
 
     /// Exhaustive sweep through a thread-safe evaluator: the configs fan
-    /// out across `workers`, and results land in the database in config
-    /// order (0..size), so the table and the persisted records are
-    /// identical to the serial [`Quantune::sweep`] at any thread count.
+    /// out across `workers`, and completed trials stream through a
+    /// [`StoreWriter`], which appends them durably in config order
+    /// (0..size) as their slot's turn comes -- so the table and the
+    /// persisted records are bit-identical to the serial
+    /// [`Quantune::sweep`] at any thread count, and a crash mid-sweep
+    /// loses only the trailing configs whose predecessors hadn't
+    /// finished. On a measurement error, the durable prefix up to the
+    /// first failed config is kept.
     ///
     /// `progress(done, acc)` is called from worker threads with the
     /// *completed-measurement count* (configs finish out of order, so
@@ -250,45 +269,69 @@ impl Quantune {
         if !force && self.db.has_full_sweep(&model.name, &tag, size) {
             return Ok(self.db.accuracy_table(&model.name, &tag, size));
         }
-        let done = std::sync::atomic::AtomicUsize::new(0);
-        let measured = workers.run(size, |i| {
-            let t = Timer::start();
-            let r = evaluator.measure_shared(i).map(|acc| (acc, t.secs()));
-            if let Ok((acc, _)) = &r {
-                let n = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
-                progress(n, *acc);
-            }
-            r
-        })?;
         let cost = CostModel::build(model, space, &self.device, crate::vta::PYNQ_CLOCK_MHZ)?;
+        let done = std::sync::atomic::AtomicUsize::new(0);
+        let writer = self.db.writer();
+        let measured = workers.run(size, |i| -> Result<f64> {
+            let t = Timer::start();
+            let acc = evaluator.measure_shared(i)?;
+            let secs = t.secs();
+            let c = cost.cost(i)?;
+            writer.submit(
+                i,
+                Record {
+                    model: model.name.clone(),
+                    space: tag.clone(),
+                    config: i,
+                    accuracy: acc,
+                    measure_secs: secs,
+                    latency_ms: Some(c.latency_ms),
+                    size_bytes: Some(c.size_bytes),
+                    device: Some(cost.target.clone()),
+                },
+            )?;
+            let n = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+            progress(n, acc);
+            Ok(acc)
+        })?;
         let mut table = vec![f64::NAN; size];
         for (i, r) in measured.into_iter().enumerate() {
-            let (acc, secs) = r?;
-            table[i] = acc;
-            let c = cost.cost(i)?;
-            self.db.add(Record {
-                model: model.name.clone(),
-                space: tag.clone(),
-                config: i,
-                accuracy: acc,
-                measure_secs: secs,
-                latency_ms: Some(c.latency_ms),
-                size_bytes: Some(c.size_bytes),
-                device: Some(cost.target.clone()),
-            });
+            table[i] = r?;
         }
-        self.db.save()?;
+        writer.finish()?;
         Ok(table)
     }
 
     /// Transfer records from every other model's trials in `space` (the
     /// database D, filtered to the space's tag so feature vectors stay
-    /// compatible).
+    /// compatible). One-shot: drains a [`TransferCursor`] from watermark
+    /// 0, so it extracts exactly what the incremental path does.
     pub fn transfer_for(
         &self,
         target: &ZooModel,
         space: &dyn ConfigSpace,
     ) -> Result<Vec<TransferRecord>> {
+        let mut cursor = self.transfer_cursor(target, space);
+        self.refresh_transfer(&mut cursor, target, space)?;
+        Ok(cursor.into_records())
+    }
+
+    /// A watermark cursor over `space` trials of every model except
+    /// `target` -- feed it to [`Quantune::refresh_transfer`] between
+    /// search generations for incremental XGB-T refits.
+    pub fn transfer_cursor(&self, target: &ZooModel, space: &dyn ConfigSpace) -> TransferCursor {
+        TransferCursor::new(target.name.clone(), space.tag())
+    }
+
+    /// Pull the records appended since the cursor's watermark into it
+    /// (mapping each to the arch ++ space feature vector); returns how
+    /// many transfer rows were added.
+    pub fn refresh_transfer(
+        &self,
+        cursor: &mut TransferCursor,
+        target: &ZooModel,
+        space: &dyn ConfigSpace,
+    ) -> Result<usize> {
         let mut feats: std::collections::HashMap<String, Vec<f32>> = Default::default();
         for name in zoo::MODELS {
             if name == target.name {
@@ -301,7 +344,7 @@ impl Quantune {
                 );
             }
         }
-        Ok(self.db.transfer_records(&target.name, &space.tag(), |m, cfg| {
+        Ok(cursor.refresh(&self.db, |m, cfg| {
             let arch = feats.get(m)?;
             let mut f = arch.clone();
             f.extend(space.features(cfg).ok()?);
@@ -497,6 +540,24 @@ impl Quantune {
             "xgb_t needs trials of other models in the {:?} space first",
             space.tag()
         );
+        // database-seeded warm start: the population algorithms can
+        // begin from the store's best-known configs for (model, space)
+        if self.seed_from_db && matches!(algo_name, "genetic" | "nsga2") {
+            let seeds: Vec<usize> = self
+                .db
+                .best_configs(&model.name, &space.tag(), 4)
+                .into_iter()
+                .map(|(cfg, _)| cfg)
+                .filter(|&cfg| cfg < space.size())
+                .collect();
+            if !seeds.is_empty() {
+                return Ok(if algo_name == "genetic" {
+                    Box::new(GeneticSearch::with_seeds(space.clone(), seed, &seeds)?)
+                } else {
+                    Box::new(ParetoSearch::with_seeds(space.clone(), seed, &seeds)?)
+                });
+            }
+        }
         make_algorithm(algo_name, model, space, transfer, seed)
     }
 

@@ -1,0 +1,546 @@
+//! Crash-safe append-only segmented trial log (the production backend
+//! of the [`super::TrialStore`]).
+//!
+//! On-disk layout: a directory of `segment-NNNNN.qlog` files. Each
+//! segment starts with an 8-byte header (`QTLG` magic + u32 LE format
+//! version) and is followed by frames of
+//! `[u32 LE payload length][u32 LE CRC32][payload]`, where the payload
+//! is the compact-JSON serialization of one [`Record`] (the same schema
+//! the legacy `database.json` uses per record, so migration is a
+//! replay). Dependency-free by design: the CRC32 (IEEE) is implemented
+//! here.
+//!
+//! Crash-safety invariants:
+//!
+//! - segments are created atomically (header written to a `.tmp`
+//!   sibling, then renamed), so a segment file always has a valid
+//!   header; leftover `.tmp` files from a crashed creation are removed
+//!   on open;
+//! - records are appended frame-at-a-time; a crash mid-append leaves a
+//!   torn final frame, which `open` detects (length/CRC/parse check),
+//!   truncates away -- on the *tail* segment only -- and logs;
+//! - a bad frame in a sealed (non-tail) segment is real corruption and
+//!   refuses to open rather than silently dropping interior records;
+//! - the highest-numbered segment is the active tail; it rotates
+//!   (seal + start the next id) once it would exceed the size
+//!   threshold.
+
+#![deny(clippy::unwrap_used)]
+
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::super::database::Record;
+use super::{RecordIndex, TrialStore};
+use crate::util::Json;
+
+/// Segment header magic.
+const MAGIC: &[u8; 4] = b"QTLG";
+/// On-disk format version (bumped on incompatible frame changes).
+const FORMAT_VERSION: u32 = 1;
+/// Segment header length in bytes (magic + version).
+const HEADER_LEN: usize = 8;
+/// Frame header length in bytes (payload length + CRC32).
+const FRAME_HEADER_LEN: usize = 8;
+/// Default segment-rotation threshold.
+const DEFAULT_SEGMENT_BYTES: u64 = 1 << 20;
+
+/// CRC32 (IEEE 802.3, reflected polynomial 0xEDB88320) -- the checksum
+/// guarding every frame payload. Bitwise, table-free: trial records are
+/// tiny and appended at human-experiment rates.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+fn segment_name(id: u32) -> String {
+    format!("segment-{id:05}.qlog")
+}
+
+fn parse_segment_id(name: &str) -> Option<u32> {
+    name.strip_prefix("segment-")?.strip_suffix(".qlog")?.parse().ok()
+}
+
+/// The append-only segmented log store. All reads are served from
+/// memory (records are replayed into a `Vec` + [`RecordIndex`] on
+/// open); every [`TrialStore::add`] writes one framed record to the
+/// tail segment before returning.
+pub struct LogStore {
+    dir: PathBuf,
+    records: Vec<Record>,
+    index: RecordIndex,
+    /// Open append handle on the tail segment (opened lazily on the
+    /// first add, so opening a store never creates files).
+    tail: Option<File>,
+    /// Id of the tail segment (the next one to create, if its file
+    /// doesn't exist yet).
+    tail_id: u32,
+    /// Bytes of the tail segment (header included).
+    tail_bytes: u64,
+    /// Segment files on disk.
+    segments: usize,
+    /// Rotation threshold: a frame that would push the tail past this
+    /// seals it and starts the next segment.
+    segment_bytes: u64,
+}
+
+impl LogStore {
+    /// Open (or lazily create) the log at `dir` with the default
+    /// segment-rotation threshold. A missing directory is an empty
+    /// store; nothing is written until the first append.
+    pub fn open(dir: &Path) -> Result<LogStore> {
+        LogStore::open_with(dir, DEFAULT_SEGMENT_BYTES)
+    }
+
+    /// [`LogStore::open`] with an explicit rotation threshold (tests
+    /// use tiny thresholds to force multi-segment stores).
+    pub fn open_with(dir: &Path, segment_bytes: u64) -> Result<LogStore> {
+        let mut ids: Vec<u32> = Vec::new();
+        if dir.is_dir() {
+            for entry in
+                fs::read_dir(dir).map_err(|e| anyhow!("reading {}: {e}", dir.display()))?
+            {
+                let entry = entry?;
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                if let Some(id) = parse_segment_id(&name) {
+                    ids.push(id);
+                } else if name.ends_with(".tmp") {
+                    // leftover from a crashed atomic segment creation:
+                    // never renamed into place, so it holds no records
+                    let _ = fs::remove_file(entry.path());
+                }
+            }
+        }
+        ids.sort_unstable();
+        for (k, &id) in ids.iter().enumerate() {
+            ensure!(
+                id as usize == k,
+                "trial log {} is missing segment-{k:05}.qlog (found segment-{id:05}.qlog) \
+                 -- refusing to open with a sequence gap",
+                dir.display()
+            );
+        }
+        let mut records = Vec::new();
+        let mut tail_bytes = 0u64;
+        for (k, &id) in ids.iter().enumerate() {
+            let is_tail = k + 1 == ids.len();
+            let n = read_segment(&dir.join(segment_name(id)), &mut records, is_tail)?;
+            if is_tail {
+                tail_bytes = n;
+            }
+        }
+        let index = RecordIndex::build(&records);
+        Ok(LogStore {
+            dir: dir.to_path_buf(),
+            records,
+            index,
+            tail: None,
+            tail_id: ids.last().copied().unwrap_or(0),
+            tail_bytes,
+            segments: ids.len(),
+            segment_bytes: segment_bytes.max(HEADER_LEN as u64 + 1),
+        })
+    }
+
+    /// Segment files on disk.
+    pub fn segment_count(&self) -> usize {
+        self.segments
+    }
+
+    /// The log directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn tail_exists(&self) -> bool {
+        self.segments == self.tail_id as usize + 1
+    }
+
+    /// Open (creating if needed) the append handle on the tail segment.
+    fn ensure_tail(&mut self) -> Result<()> {
+        if self.tail.is_some() {
+            return Ok(());
+        }
+        fs::create_dir_all(&self.dir)
+            .map_err(|e| anyhow!("creating trial log dir {}: {e}", self.dir.display()))?;
+        if !self.tail_exists() {
+            // atomic creation: the full header lands via tmp + rename,
+            // so no reader can ever see a header-less segment
+            let name = segment_name(self.tail_id);
+            let tmp = self.dir.join(format!("{name}.tmp"));
+            let mut header = Vec::with_capacity(HEADER_LEN);
+            header.extend_from_slice(MAGIC);
+            header.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+            fs::write(&tmp, &header)
+                .map_err(|e| anyhow!("writing {}: {e}", tmp.display()))?;
+            fs::rename(&tmp, self.dir.join(&name))
+                .map_err(|e| anyhow!("renaming {} into place: {e}", tmp.display()))?;
+            self.segments = self.tail_id as usize + 1;
+            self.tail_bytes = HEADER_LEN as u64;
+        }
+        let path = self.dir.join(segment_name(self.tail_id));
+        let file = OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .map_err(|e| anyhow!("opening {}: {e}", path.display()))?;
+        self.tail = Some(file);
+        Ok(())
+    }
+}
+
+/// Optional cost components that aren't finite can't round-trip through
+/// JSON (it has no NaN/inf); normalize them to `None` up front so the
+/// in-memory state always equals what a reopen would replay.
+fn normalize(mut r: Record) -> Record {
+    r.latency_ms = r.latency_ms.filter(|v| v.is_finite());
+    r.size_bytes = r.size_bytes.filter(|v| v.is_finite());
+    r
+}
+
+impl TrialStore for LogStore {
+    fn records(&self) -> &[Record] {
+        &self.records
+    }
+
+    fn index(&self) -> &RecordIndex {
+        &self.index
+    }
+
+    fn add(&mut self, r: Record) -> Result<u64> {
+        let r = normalize(r);
+        let payload = r.to_json().dump().into_bytes();
+        let frame_len = (FRAME_HEADER_LEN + payload.len()) as u64;
+        // seal a non-empty tail the incoming frame would overflow (an
+        // oversized single record still lands in its own segment)
+        if self.tail_exists()
+            && self.tail_bytes > HEADER_LEN as u64
+            && self.tail_bytes + frame_len > self.segment_bytes
+        {
+            if let Some(f) = self.tail.take() {
+                f.sync_data()?;
+            }
+            self.tail_id += 1;
+            self.tail_bytes = 0;
+        }
+        self.ensure_tail()?;
+        let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        let file = match self.tail.as_mut() {
+            Some(f) => f,
+            None => bail!("trial log tail unavailable (internal bug)"),
+        };
+        file.write_all(&frame)
+            .map_err(|e| anyhow!("appending to trial log {}: {e}", self.dir.display()))?;
+        self.tail_bytes += frame_len;
+        let seq = self.records.len() as u64;
+        self.index.insert(self.records.len(), &r);
+        self.records.push(r);
+        Ok(seq)
+    }
+
+    fn save(&self) -> Result<()> {
+        if let Some(f) = &self.tail {
+            f.sync_data()?;
+        }
+        Ok(())
+    }
+
+    fn location(&self) -> Option<&Path> {
+        Some(&self.dir)
+    }
+}
+
+/// Replay one segment into `records`, returning its valid byte length.
+/// A torn/corrupt frame truncates the file there when `is_tail`, and is
+/// a hard error otherwise.
+fn read_segment(path: &Path, records: &mut Vec<Record>, is_tail: bool) -> Result<u64> {
+    let data = fs::read(path).map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    ensure!(
+        data.len() >= HEADER_LEN && data[..4] == *MAGIC,
+        "{} is not a quantune trial-log segment",
+        path.display()
+    );
+    let version = u32::from_le_bytes([data[4], data[5], data[6], data[7]]);
+    ensure!(
+        version == FORMAT_VERSION,
+        "{}: unsupported trial-log format version {version} (this build reads v{FORMAT_VERSION})",
+        path.display()
+    );
+    let mut off = HEADER_LEN;
+    let valid = loop {
+        if off == data.len() {
+            break off;
+        }
+        match decode_frame(&data[off..]) {
+            Some((rec, consumed)) => {
+                records.push(rec);
+                off += consumed;
+            }
+            None => break off,
+        }
+    };
+    if valid < data.len() {
+        ensure!(
+            is_tail,
+            "corrupt frame in sealed trial-log segment {} at byte {valid} -- refusing to \
+             open (only the tail segment may have a torn frame)",
+            path.display()
+        );
+        eprintln!(
+            "quantune: truncating torn tail of {} at byte {valid} ({} byte(s) dropped)",
+            path.display(),
+            data.len() - valid
+        );
+        let f = OpenOptions::new()
+            .write(true)
+            .open(path)
+            .map_err(|e| anyhow!("truncating {}: {e}", path.display()))?;
+        f.set_len(valid as u64)?;
+    }
+    Ok(valid as u64)
+}
+
+/// Decode one frame from `buf`: `Some((record, bytes consumed))`, or
+/// `None` for a torn or corrupt frame (incomplete header or payload,
+/// CRC mismatch, unparsable payload).
+fn decode_frame(buf: &[u8]) -> Option<(Record, usize)> {
+    if buf.len() < FRAME_HEADER_LEN {
+        return None;
+    }
+    let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    let crc = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]);
+    let end = FRAME_HEADER_LEN.checked_add(len)?;
+    if buf.len() < end {
+        return None;
+    }
+    let payload = &buf[FRAME_HEADER_LEN..end];
+    if crc32(payload) != crc {
+        return None;
+    }
+    let text = std::str::from_utf8(payload).ok()?;
+    let rec = Json::parse(text).ok().and_then(|j| Record::from_json(&j).ok())?;
+    Some((rec, end))
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::super::records_equal;
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn rec(config: usize, acc: f64) -> Record {
+        Record::new("mn".into(), "general".into(), config, acc, 0.1)
+    }
+
+    #[test]
+    fn crc32_check_value() {
+        // the standard CRC-32/ISO-HDLC check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_and_reopen() {
+        let dir = tmpdir("quantune_log_roundtrip_test");
+        {
+            let mut log = LogStore::open(&dir).unwrap();
+            assert!(log.is_empty());
+            log.add(rec(0, 0.5)).unwrap();
+            log.add(rec(1, f64::NAN)).unwrap();
+            log.add(Record {
+                latency_ms: Some(3.25),
+                size_bytes: Some(f64::INFINITY), // normalized to None
+                device: Some("CPU(i7-8700)".into()),
+                ..rec(2, 0.9)
+            })
+            .unwrap();
+            log.save().unwrap();
+            assert_eq!(log.records[2].size_bytes, None, "non-finite normalizes");
+        }
+        let log = LogStore::open(&dir).unwrap();
+        assert_eq!(log.len(), 3);
+        assert!(log.records[1].accuracy.is_nan());
+        assert_eq!(log.records[2].latency_ms, Some(3.25));
+        assert_eq!(log.records[2].size_bytes, None);
+        assert_eq!(log.records[2].device.as_deref(), Some("CPU(i7-8700)"));
+        assert_eq!(log.segment_count(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_missing_dir_is_empty_and_lazy() {
+        let dir = tmpdir("quantune_log_lazy_test");
+        let log = LogStore::open(&dir).unwrap();
+        assert!(log.is_empty());
+        assert!(!dir.exists(), "open must not create files");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tiny_threshold_rotates_segments() {
+        let dir = tmpdir("quantune_log_rotate_test");
+        let n = 10;
+        {
+            // threshold below one frame: every record seals its segment
+            let mut log = LogStore::open_with(&dir, 16).unwrap();
+            for i in 0..n {
+                log.add(rec(i, 0.5 + i as f64 / 100.0)).unwrap();
+            }
+            log.save().unwrap();
+            assert_eq!(log.segment_count(), n);
+        }
+        let log = LogStore::open(&dir).unwrap();
+        assert_eq!(log.len(), n);
+        assert_eq!(log.segment_count(), n);
+        for (i, r) in log.records().iter().enumerate() {
+            assert_eq!(r.config, i, "replay must preserve sequence order");
+        }
+        // appends keep working across a reopen
+        let mut log = LogStore::open_with(&dir, 16).unwrap();
+        log.add(rec(n, 0.99)).unwrap();
+        assert_eq!(log.segment_count(), n + 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_truncates_to_valid_prefix() {
+        let dir = tmpdir("quantune_log_torn_test");
+        let originals = [rec(0, 0.5), rec(1, 0.6), rec(2, 0.7)];
+        {
+            let mut log = LogStore::open(&dir).unwrap();
+            for r in &originals {
+                log.add(r.clone()).unwrap();
+            }
+            log.save().unwrap();
+        }
+        // simulate a crash mid-append: garbage after the last frame
+        let path = dir.join(segment_name(0));
+        let good_len = fs::metadata(&path).unwrap().len();
+        let mut data = fs::read(&path).unwrap();
+        data.extend_from_slice(&[0x12, 0x00, 0x00, 0x00, 0xde, 0xad]);
+        fs::write(&path, &data).unwrap();
+        let log = LogStore::open(&dir).unwrap();
+        assert_eq!(log.len(), 3, "valid prefix survives");
+        for (a, b) in originals.iter().zip(log.records()) {
+            assert!(records_equal(a, b));
+        }
+        assert_eq!(fs::metadata(&path).unwrap().len(), good_len, "file truncated");
+        // and a truncated final frame (partial payload) drops only it
+        let mut data = fs::read(&path).unwrap();
+        data.truncate(data.len() - 3);
+        fs::write(&path, &data).unwrap();
+        let mut log = LogStore::open(&dir).unwrap();
+        assert_eq!(log.len(), 2, "only the torn record is lost");
+        // the store stays appendable after recovery
+        log.add(rec(9, 0.9)).unwrap();
+        drop(log);
+        assert_eq!(LogStore::open(&dir).unwrap().len(), 3);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_payload_in_tail_is_dropped_via_crc() {
+        let dir = tmpdir("quantune_log_crc_test");
+        {
+            let mut log = LogStore::open(&dir).unwrap();
+            log.add(rec(0, 0.5)).unwrap();
+            log.add(rec(1, 0.6)).unwrap();
+            log.save().unwrap();
+        }
+        let path = dir.join(segment_name(0));
+        let mut data = fs::read(&path).unwrap();
+        let last = data.len() - 1;
+        data[last] ^= 0xFF; // flip a payload byte of the final frame
+        fs::write(&path, &data).unwrap();
+        let log = LogStore::open(&dir).unwrap();
+        assert_eq!(log.len(), 1, "CRC catches the flipped byte");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_sealed_segment_refuses_to_open() {
+        let dir = tmpdir("quantune_log_sealed_test");
+        {
+            let mut log = LogStore::open_with(&dir, 16).unwrap();
+            log.add(rec(0, 0.5)).unwrap();
+            log.add(rec(1, 0.6)).unwrap(); // rotates: segment 0 is sealed
+            log.save().unwrap();
+            assert_eq!(log.segment_count(), 2);
+        }
+        let path = dir.join(segment_name(0));
+        let mut data = fs::read(&path).unwrap();
+        let last = data.len() - 1;
+        data[last] ^= 0xFF;
+        fs::write(&path, &data).unwrap();
+        let err = LogStore::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("sealed"), "got: {err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn segment_gap_refuses_to_open() {
+        let dir = tmpdir("quantune_log_gap_test");
+        {
+            let mut log = LogStore::open_with(&dir, 16).unwrap();
+            for i in 0..3 {
+                log.add(rec(i, 0.5)).unwrap();
+            }
+            log.save().unwrap();
+        }
+        fs::remove_file(dir.join(segment_name(1))).unwrap();
+        let err = LogStore::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("sequence gap"), "got: {err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn leftover_tmp_files_are_cleaned_up() {
+        let dir = tmpdir("quantune_log_tmp_test");
+        {
+            let mut log = LogStore::open(&dir).unwrap();
+            log.add(rec(0, 0.5)).unwrap();
+            log.save().unwrap();
+        }
+        let stray = dir.join("segment-00001.qlog.tmp");
+        fs::write(&stray, b"half-written").unwrap();
+        let log = LogStore::open(&dir).unwrap();
+        assert_eq!(log.len(), 1);
+        assert!(!stray.exists(), "crashed-creation leftovers are removed");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sequence_numbers_are_stable_across_reopen() {
+        let dir = tmpdir("quantune_log_seq_test");
+        {
+            let mut log = LogStore::open(&dir).unwrap();
+            assert_eq!(log.add(rec(0, 0.5)).unwrap(), 0);
+            assert_eq!(log.add(rec(1, 0.6)).unwrap(), 1);
+            log.save().unwrap();
+        }
+        let mut log = LogStore::open(&dir).unwrap();
+        assert_eq!(log.next_seq(), 2);
+        assert_eq!(log.add(rec(2, 0.7)).unwrap(), 2);
+        assert_eq!(log.records_since(2).len(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

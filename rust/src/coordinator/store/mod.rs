@@ -1,0 +1,816 @@
+//! The persistent trial store: the paper's database D = {(e_i, s_i, c_i)}
+//! (§5.2) behind one backend-independent [`TrialStore`] interface.
+//!
+//! Two backends implement it:
+//!
+//! - [`Database`] -- the legacy whole-file JSON format, kept for
+//!   transparent opening of old artifacts, migration, and export;
+//! - [`LogStore`] -- a crash-safe append-only segmented log
+//!   (dependency-free: per-record length + CRC32 framing, atomic
+//!   tmp+rename segment creation, torn-tail truncation on open).
+//!
+//! [`Store`] is the dispatching handle `Quantune` owns; it auto-detects
+//! the backend from the artifacts directory. Both backends share the
+//! [`RecordIndex`] -- positions grouped by (space tag, model) plus
+//! device counts -- so `accuracy_table`, `has_full_sweep`, `best_for`,
+//! and `transfer_records` are O(matching records) index probes instead
+//! of O(all records) scans, and both are append-only with stable
+//! sequence numbers, which gives consumers a watermark API
+//! ([`TrialStore::records_since`], [`TransferCursor`]) for incremental
+//! XGB refits. [`StoreWriter`] is the concurrency story: parallel sweep
+//! workers append durably as trials complete while the persisted order
+//! stays bit-identical to the serial sweep.
+
+#![deny(clippy::unwrap_used)]
+
+pub mod log;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use anyhow::{anyhow, ensure, Result};
+
+pub use log::LogStore;
+
+use super::database::{Database, Record, GENERAL_SPACE_TAG};
+use crate::quant::QuantConfig;
+use crate::search::TransferRecord;
+
+/// In-memory secondary index over a record list: record positions
+/// grouped by (space tag, model), plus per-device record counts.
+/// Building is O(records); probing is O(matching records).
+#[derive(Clone, Debug, Default)]
+pub struct RecordIndex {
+    by_space: BTreeMap<String, BTreeMap<String, Vec<usize>>>,
+    devices: BTreeMap<String, usize>,
+}
+
+impl RecordIndex {
+    /// Index every record of `records` (positions are sequence numbers).
+    pub fn build(records: &[Record]) -> RecordIndex {
+        let mut idx = RecordIndex::default();
+        for (pos, r) in records.iter().enumerate() {
+            idx.insert(pos, r);
+        }
+        idx
+    }
+
+    /// Register the record stored at position `pos`.
+    pub fn insert(&mut self, pos: usize, r: &Record) {
+        self.by_space
+            .entry(r.space.clone())
+            .or_default()
+            .entry(r.model.clone())
+            .or_default()
+            .push(pos);
+        if let Some(d) = &r.device {
+            *self.devices.entry(d.clone()).or_default() += 1;
+        }
+    }
+
+    /// Positions of every (model, space) record, in insertion order.
+    pub fn positions(&self, space: &str, model: &str) -> &[usize] {
+        match self.by_space.get(space).and_then(|m| m.get(model)) {
+            Some(v) => v,
+            None => &[],
+        }
+    }
+
+    /// (model, positions) pairs for one space, models in sorted order.
+    pub fn models_in<'a>(
+        &'a self,
+        space: &str,
+    ) -> impl Iterator<Item = (&'a str, &'a [usize])> + 'a {
+        self.by_space
+            .get(space)
+            .into_iter()
+            .flat_map(|m| m.iter().map(|(k, v)| (k.as_str(), v.as_slice())))
+    }
+
+    /// Record count per space tag, sorted by tag.
+    pub fn space_counts(&self) -> Vec<(&str, usize)> {
+        self.by_space
+            .iter()
+            .map(|(s, models)| (s.as_str(), models.values().map(Vec::len).sum()))
+            .collect()
+    }
+
+    /// Record count per model, aggregated across spaces.
+    pub fn model_counts(&self) -> BTreeMap<&str, usize> {
+        let mut out: BTreeMap<&str, usize> = BTreeMap::new();
+        for models in self.by_space.values() {
+            for (m, v) in models {
+                *out.entry(m.as_str()).or_default() += v.len();
+            }
+        }
+        out
+    }
+
+    /// Record count per device tag (device-less records don't count).
+    pub fn device_counts(&self) -> &BTreeMap<String, usize> {
+        &self.devices
+    }
+}
+
+/// Backend-independent view of the trial database `D`: an append-only,
+/// sequence-numbered record list plus the [`RecordIndex`] over it.
+/// Every query is a provided method over those two accessors, so all
+/// backends answer them identically.
+pub trait TrialStore: Send {
+    /// Every record in sequence order (position == sequence number).
+    fn records(&self) -> &[Record];
+
+    /// The secondary index over [`TrialStore::records`].
+    fn index(&self) -> &RecordIndex;
+
+    /// Append one record, returning its sequence number. Log-backed
+    /// stores write the record to disk before returning.
+    fn add(&mut self, r: Record) -> Result<u64>;
+
+    /// Durability point: atomic whole-file rewrite (JSON backend), data
+    /// sync of the active segment (log backend), no-op in memory.
+    fn save(&self) -> Result<()>;
+
+    /// Where the records live on disk (`None` for in-memory stores).
+    fn location(&self) -> Option<&Path>;
+
+    /// Number of records.
+    fn len(&self) -> usize {
+        self.records().len()
+    }
+
+    /// True when no trials have been recorded.
+    fn is_empty(&self) -> bool {
+        self.records().is_empty()
+    }
+
+    /// The sequence number the next [`TrialStore::add`] will return --
+    /// the watermark a consumer saves to resume from later.
+    fn next_seq(&self) -> u64 {
+        self.records().len() as u64
+    }
+
+    /// Records appended at or after sequence number `seq`, in order --
+    /// the incremental-refit API: a consumer that remembers the
+    /// `next_seq` of its last visit sees exactly the trials a full
+    /// re-scan would have added.
+    fn records_since(&self, seq: u64) -> &[Record] {
+        let start = (seq as usize).min(self.records().len());
+        &self.records()[start..]
+    }
+
+    /// Accuracy table (config index -> best-known accuracy) for one
+    /// model in one space; holes are NaN. Duplicate (model, config)
+    /// records keep the maximum measured accuracy, so a re-measured
+    /// config can only improve the table.
+    fn accuracy_table(&self, model: &str, space: &str, size: usize) -> Vec<f64> {
+        let recs = self.records();
+        let mut t = vec![f64::NAN; size];
+        for &pos in self.index().positions(space, model) {
+            let r = &recs[pos];
+            if r.config < size && (t[r.config].is_nan() || r.accuracy > t[r.config]) {
+                t[r.config] = r.accuracy;
+            }
+        }
+        t
+    }
+
+    /// Does the store hold a full sweep for `model` in `space`?
+    fn has_full_sweep(&self, model: &str, space: &str, size: usize) -> bool {
+        self.accuracy_table(model, space, size).iter().all(|a| !a.is_nan())
+    }
+
+    /// Are there any records from models other than `exclude` in
+    /// `space`? Cheap pre-check for xgb_t's transfer requirement (a
+    /// `true` can still yield no transfer records when the other
+    /// models' feature metadata is missing -- the search then errors
+    /// descriptively, which is the right surface for that broken state).
+    fn has_transfer_records(&self, exclude: &str, space: &str) -> bool {
+        self.index().models_in(space).any(|(m, v)| m != exclude && !v.is_empty())
+    }
+
+    /// Transfer-learning records in `space` from every model EXCEPT
+    /// `exclude`. `features` maps (model, config index) -> feature
+    /// vector; records it returns `None` for are skipped.
+    fn transfer_records(
+        &self,
+        exclude: &str,
+        space: &str,
+        features: &mut dyn FnMut(&str, usize) -> Option<Vec<f32>>,
+    ) -> Vec<TransferRecord> {
+        let recs = self.records();
+        let mut positions: Vec<usize> = self
+            .index()
+            .models_in(space)
+            .filter(|&(m, _)| m != exclude)
+            .flat_map(|(_, v)| v.iter().copied())
+            .collect();
+        // merge the per-model position lists back into global sequence
+        // order: row order feeds the XGB fit, so it must match what a
+        // full scan of `records()` produces
+        positions.sort_unstable();
+        let mut out = Vec::with_capacity(positions.len());
+        for pos in positions {
+            let r = &recs[pos];
+            if let Some(f) = features(&r.model, r.config) {
+                out.push(TransferRecord { features: f, accuracy: r.accuracy as f32 });
+            }
+        }
+        out
+    }
+
+    /// Best finite-accuracy (config, accuracy) for `model` in `space`
+    /// -- any space, not just the general one. NaN accuracies are
+    /// skipped entirely (a store of only-NaN records reports `None`);
+    /// accuracy ties keep the newest record, matching the legacy
+    /// full-scan `max_by` semantics.
+    fn best_for(&self, model: &str, space: &str) -> Option<(usize, f64)> {
+        let recs = self.records();
+        let mut best: Option<(usize, f64)> = None;
+        for &pos in self.index().positions(space, model) {
+            let r = &recs[pos];
+            if r.accuracy.is_nan() {
+                continue;
+            }
+            let better = match best {
+                Some((_, acc)) => r.accuracy >= acc,
+                None => true,
+            };
+            if better {
+                best = Some((r.config, r.accuracy));
+            }
+        }
+        best
+    }
+
+    /// General-space wrapper over [`TrialStore::best_for`] for the
+    /// legacy call sites: decodes the winner into a [`QuantConfig`].
+    fn best_general(&self, model: &str) -> Option<(QuantConfig, f64)> {
+        self.best_for(model, GENERAL_SPACE_TAG)
+            .and_then(|(cfg, acc)| QuantConfig::from_index(cfg).ok().map(|c| (c, acc)))
+    }
+
+    /// Up to `k` distinct configs for (model, space) ranked by
+    /// best-known accuracy (descending; the config index breaks ties)
+    /// -- the warm-start query behind database-seeded GA / NSGA-II
+    /// populations.
+    fn best_configs(&self, model: &str, space: &str, k: usize) -> Vec<(usize, f64)> {
+        let recs = self.records();
+        let mut best: BTreeMap<usize, f64> = BTreeMap::new();
+        for &pos in self.index().positions(space, model) {
+            let r = &recs[pos];
+            if r.accuracy.is_nan() {
+                continue;
+            }
+            let e = best.entry(r.config).or_insert(f64::NEG_INFINITY);
+            if r.accuracy > *e {
+                *e = r.accuracy;
+            }
+        }
+        let mut out: Vec<(usize, f64)> = best.into_iter().collect();
+        out.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        out.truncate(k);
+        out
+    }
+}
+
+/// The backend-dispatching store handle [`crate::coordinator::Quantune`]
+/// owns. All [`TrialStore`] queries are re-exposed as inherent methods,
+/// so call sites don't need the trait in scope.
+///
+/// # Examples
+///
+/// ```
+/// use quantune::coordinator::{Record, Store};
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let mut store = Store::in_memory();
+/// store.add(Record::new("mn".into(), "general".into(), 3, 0.71, 0.1))?;
+/// store.add(Record::new("mn".into(), "general".into(), 7, 0.84, 0.1))?;
+/// assert_eq!(store.best_for("mn", "general"), Some((7, 0.84)));
+/// assert_eq!(store.records_since(1).len(), 1);
+/// # Ok(())
+/// # }
+/// ```
+pub enum Store {
+    /// Legacy whole-file JSON database (also the in-memory backend).
+    Json(Database),
+    /// Crash-safe append-only segmented log.
+    Log(LogStore),
+}
+
+impl Store {
+    /// A store with no backing file (`save` is a no-op).
+    pub fn in_memory() -> Store {
+        Store::Json(Database::in_memory())
+    }
+
+    /// Open the trial store of an artifacts directory, auto-detecting
+    /// the backend: an existing `trials/` log wins, else an existing
+    /// legacy `database.json` opens transparently on the JSON backend,
+    /// else a fresh log store is created (lazily -- nothing touches the
+    /// disk until the first append).
+    pub fn open(artifacts: &Path) -> Result<Store> {
+        let log_dir = artifacts.join("trials");
+        if log_dir.is_dir() {
+            return Ok(Store::Log(LogStore::open(&log_dir)?));
+        }
+        let legacy = artifacts.join("database.json");
+        if legacy.exists() {
+            return Ok(Store::Json(Database::open(&legacy)?));
+        }
+        Ok(Store::Log(LogStore::open(&log_dir)?))
+    }
+
+    /// Open a specific legacy JSON file (migration / export tooling).
+    pub fn open_json(path: &Path) -> Result<Store> {
+        Ok(Store::Json(Database::open(path)?))
+    }
+
+    /// Open a specific log directory.
+    pub fn open_log(dir: &Path) -> Result<Store> {
+        Ok(Store::Log(LogStore::open(dir)?))
+    }
+
+    /// Backend name for status displays: "memory", "json", or "log".
+    pub fn backend(&self) -> &'static str {
+        match self {
+            Store::Json(db) => {
+                if db.location().is_none() {
+                    "memory"
+                } else {
+                    "json"
+                }
+            }
+            Store::Log(_) => "log",
+        }
+    }
+
+    /// Segment count (0 for the JSON / in-memory backends).
+    pub fn segments(&self) -> usize {
+        match self {
+            Store::Json(_) => 0,
+            Store::Log(log) => log.segment_count(),
+        }
+    }
+
+    /// A cloneable, mutex-guarded appender handle for parallel
+    /// producers; see [`StoreWriter`].
+    pub fn writer(&mut self) -> StoreWriter<'_> {
+        StoreWriter::new(self)
+    }
+
+    /// See [`TrialStore::records`].
+    pub fn records(&self) -> &[Record] {
+        TrialStore::records(self)
+    }
+
+    /// See [`TrialStore::len`].
+    pub fn len(&self) -> usize {
+        TrialStore::len(self)
+    }
+
+    /// See [`TrialStore::is_empty`].
+    pub fn is_empty(&self) -> bool {
+        TrialStore::is_empty(self)
+    }
+
+    /// See [`TrialStore::add`].
+    pub fn add(&mut self, r: Record) -> Result<u64> {
+        TrialStore::add(self, r)
+    }
+
+    /// See [`TrialStore::save`].
+    pub fn save(&self) -> Result<()> {
+        TrialStore::save(self)
+    }
+
+    /// See [`TrialStore::location`].
+    pub fn location(&self) -> Option<&Path> {
+        TrialStore::location(self)
+    }
+
+    /// See [`TrialStore::index`].
+    pub fn index(&self) -> &RecordIndex {
+        TrialStore::index(self)
+    }
+
+    /// See [`TrialStore::next_seq`].
+    pub fn next_seq(&self) -> u64 {
+        TrialStore::next_seq(self)
+    }
+
+    /// See [`TrialStore::records_since`].
+    pub fn records_since(&self, seq: u64) -> &[Record] {
+        TrialStore::records_since(self, seq)
+    }
+
+    /// See [`TrialStore::accuracy_table`].
+    pub fn accuracy_table(&self, model: &str, space: &str, size: usize) -> Vec<f64> {
+        TrialStore::accuracy_table(self, model, space, size)
+    }
+
+    /// See [`TrialStore::has_full_sweep`].
+    pub fn has_full_sweep(&self, model: &str, space: &str, size: usize) -> bool {
+        TrialStore::has_full_sweep(self, model, space, size)
+    }
+
+    /// See [`TrialStore::has_transfer_records`].
+    pub fn has_transfer_records(&self, exclude: &str, space: &str) -> bool {
+        TrialStore::has_transfer_records(self, exclude, space)
+    }
+
+    /// See [`TrialStore::transfer_records`].
+    pub fn transfer_records(
+        &self,
+        exclude: &str,
+        space: &str,
+        mut features: impl FnMut(&str, usize) -> Option<Vec<f32>>,
+    ) -> Vec<TransferRecord> {
+        TrialStore::transfer_records(self, exclude, space, &mut features)
+    }
+
+    /// See [`TrialStore::best_for`].
+    pub fn best_for(&self, model: &str, space: &str) -> Option<(usize, f64)> {
+        TrialStore::best_for(self, model, space)
+    }
+
+    /// See [`TrialStore::best_general`].
+    pub fn best_general(&self, model: &str) -> Option<(QuantConfig, f64)> {
+        TrialStore::best_general(self, model)
+    }
+
+    /// See [`TrialStore::best_configs`].
+    pub fn best_configs(&self, model: &str, space: &str, k: usize) -> Vec<(usize, f64)> {
+        TrialStore::best_configs(self, model, space, k)
+    }
+}
+
+impl TrialStore for Store {
+    fn records(&self) -> &[Record] {
+        match self {
+            Store::Json(db) => db.records(),
+            Store::Log(log) => log.records(),
+        }
+    }
+
+    fn index(&self) -> &RecordIndex {
+        match self {
+            Store::Json(db) => db.index(),
+            Store::Log(log) => log.index(),
+        }
+    }
+
+    fn add(&mut self, r: Record) -> Result<u64> {
+        match self {
+            Store::Json(db) => db.add(r),
+            Store::Log(log) => log.add(r),
+        }
+    }
+
+    fn save(&self) -> Result<()> {
+        match self {
+            Store::Json(db) => db.save(),
+            Store::Log(log) => log.save(),
+        }
+    }
+
+    fn location(&self) -> Option<&Path> {
+        match self {
+            Store::Json(db) => db.location(),
+            Store::Log(log) => log.location(),
+        }
+    }
+}
+
+/// State behind a [`StoreWriter`]: the borrowed store plus the reorder
+/// buffer of completed-but-not-yet-sequenced trials.
+struct WriterState<'s> {
+    store: &'s mut dyn TrialStore,
+    /// Completed trials waiting for their slot's turn.
+    staged: BTreeMap<u64, Record>,
+    /// Next slot to append (slots are writer-relative, starting at 0).
+    next: u64,
+    appended: usize,
+}
+
+/// A cloneable, mutex-guarded appender over a store: parallel sweep
+/// workers [`StoreWriter::submit`] completed trials under a *slot*
+/// number (their config index) and the writer appends the contiguous
+/// completed prefix in slot order. The persisted sequence is therefore
+/// bit-identical to the serial sweep at any `QUANTUNE_THREADS`, while
+/// every record still lands durably the moment its slot's turn comes
+/// instead of at sweep end -- a crash loses only the trailing trials
+/// whose slot predecessors hadn't finished yet.
+pub struct StoreWriter<'s> {
+    inner: Arc<Mutex<WriterState<'s>>>,
+}
+
+impl<'s> StoreWriter<'s> {
+    /// Wrap a store. Dropping the writer releases the borrow; call
+    /// [`StoreWriter::finish`] first to assert completeness and sync.
+    pub fn new(store: &'s mut dyn TrialStore) -> StoreWriter<'s> {
+        StoreWriter {
+            inner: Arc::new(Mutex::new(WriterState {
+                store,
+                staged: BTreeMap::new(),
+                next: 0,
+                appended: 0,
+            })),
+        }
+    }
+
+    fn lock(&self) -> Result<MutexGuard<'_, WriterState<'s>>> {
+        self.inner
+            .lock()
+            .map_err(|_| anyhow!("trial-store writer poisoned by a panicked producer"))
+    }
+
+    /// Stage the record for `slot`, then append every staged record
+    /// that continues the contiguous slot prefix. Each slot must be
+    /// submitted exactly once.
+    pub fn submit(&self, slot: usize, r: Record) -> Result<()> {
+        let mut guard = self.lock()?;
+        let st = &mut *guard;
+        let slot = slot as u64;
+        ensure!(
+            slot >= st.next && !st.staged.contains_key(&slot),
+            "slot {slot} submitted twice to the store writer"
+        );
+        st.staged.insert(slot, r);
+        while let Some(rec) = st.staged.remove(&st.next) {
+            st.store.add(rec)?;
+            st.next += 1;
+            st.appended += 1;
+        }
+        Ok(())
+    }
+
+    /// Assert every submitted slot was appended (no gaps), sync the
+    /// store, and return how many records this writer appended.
+    pub fn finish(&self) -> Result<usize> {
+        let guard = self.lock()?;
+        ensure!(
+            guard.staged.is_empty(),
+            "store writer finished with {} record(s) stuck behind missing slot {}",
+            guard.staged.len(),
+            guard.next
+        );
+        guard.store.save()?;
+        Ok(guard.appended)
+    }
+}
+
+impl Clone for StoreWriter<'_> {
+    fn clone(&self) -> Self {
+        StoreWriter { inner: Arc::clone(&self.inner) }
+    }
+}
+
+/// Watermark-incremental extractor of transfer rows (paper §5.2): the
+/// cursor remembers the last sequence number it consumed and converts
+/// only records appended since into [`TransferRecord`]s, so the XGB-T
+/// fit ingests new trials without re-scanning the whole store each
+/// generation. A refresh from watermark 0 is exactly the full
+/// [`TrialStore::transfer_records`] scan.
+pub struct TransferCursor {
+    exclude: String,
+    space: String,
+    watermark: u64,
+    records: Vec<TransferRecord>,
+}
+
+impl TransferCursor {
+    /// Cursor over `space` records of every model except `exclude`.
+    pub fn new(exclude: impl Into<String>, space: impl Into<String>) -> TransferCursor {
+        TransferCursor {
+            exclude: exclude.into(),
+            space: space.into(),
+            watermark: 0,
+            records: Vec::new(),
+        }
+    }
+
+    /// Consume records appended since the watermark, mapping (model,
+    /// config) to feature vectors (`None` skips the record); returns
+    /// how many rows were added. Afterwards the watermark equals the
+    /// store's [`TrialStore::next_seq`].
+    pub fn refresh<S: TrialStore + ?Sized>(
+        &mut self,
+        store: &S,
+        mut features: impl FnMut(&str, usize) -> Option<Vec<f32>>,
+    ) -> usize {
+        let mut added = 0;
+        for r in store.records_since(self.watermark) {
+            if r.model != self.exclude && r.space == self.space {
+                if let Some(f) = features(&r.model, r.config) {
+                    self.records
+                        .push(TransferRecord { features: f, accuracy: r.accuracy as f32 });
+                    added += 1;
+                }
+            }
+        }
+        self.watermark = store.next_seq();
+        added
+    }
+
+    /// Sequence number the next refresh resumes from.
+    pub fn watermark(&self) -> u64 {
+        self.watermark
+    }
+
+    /// Every row extracted so far, in sequence order.
+    pub fn records(&self) -> &[TransferRecord] {
+        &self.records
+    }
+
+    /// Consume the cursor, returning the extracted rows.
+    pub fn into_records(self) -> Vec<TransferRecord> {
+        self.records
+    }
+}
+
+/// Bit-exact record equality (NaN == NaN): migration verification and
+/// determinism tests compare floats by bit pattern, not `==`.
+pub fn records_equal(a: &Record, b: &Record) -> bool {
+    let bits = f64::to_bits;
+    a.model == b.model
+        && a.space == b.space
+        && a.config == b.config
+        && bits(a.accuracy) == bits(b.accuracy)
+        && bits(a.measure_secs) == bits(b.measure_secs)
+        && a.latency_ms.map(bits) == b.latency_ms.map(bits)
+        && a.size_bytes.map(bits) == b.size_bytes.map(bits)
+        && a.device == b.device
+}
+
+/// Write `bytes` to `path` through a same-directory temp file + atomic
+/// rename, so a crash mid-write can never destroy an existing file.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    fs::write(&tmp, bytes).map_err(|e| anyhow!("writing {}: {e}", tmp.display()))?;
+    fs::rename(&tmp, path)
+        .map_err(|e| anyhow!("renaming {} into place: {e}", tmp.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    fn rec(model: &str, space: &str, config: usize, acc: f64) -> Record {
+        Record::new(model.into(), space.into(), config, acc, 0.1)
+    }
+
+    #[test]
+    fn index_queries_match_full_scans() {
+        let mut s = Store::in_memory();
+        s.add(rec("mn", "general", 0, 0.5)).unwrap();
+        s.add(rec("shn", "general", 1, 0.6)).unwrap();
+        s.add(rec("mn", "vta", 0, 0.9)).unwrap();
+        s.add(rec("mn", "general", 2, 0.7)).unwrap();
+        let t = s.accuracy_table("mn", "general", 4);
+        assert_eq!(t[0], 0.5);
+        assert!(t[1].is_nan());
+        assert_eq!(t[2], 0.7);
+        assert!(s.has_transfer_records("mn", "general"));
+        assert!(!s.has_transfer_records("shn", "vta"));
+        let rows = s.transfer_records("mn", "general", |_, i| Some(vec![i as f32]));
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].accuracy, 0.6);
+    }
+
+    #[test]
+    fn transfer_rows_keep_global_sequence_order() {
+        // two other models interleaved: the per-model index lists must
+        // merge back into insertion order, as the XGB row order depends
+        // on it
+        let mut s = Store::in_memory();
+        s.add(rec("a", "general", 0, 0.1)).unwrap();
+        s.add(rec("b", "general", 1, 0.2)).unwrap();
+        s.add(rec("a", "general", 2, 0.3)).unwrap();
+        s.add(rec("b", "general", 3, 0.4)).unwrap();
+        let rows = s.transfer_records("mn", "general", |_, i| Some(vec![i as f32]));
+        let configs: Vec<f32> = rows.iter().map(|r| r.features[0]).collect();
+        assert_eq!(configs, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn best_for_any_space_ties_keep_newest() {
+        let mut s = Store::in_memory();
+        s.add(rec("mn", "vta", 2, 0.8)).unwrap();
+        s.add(rec("mn", "vta", 5, 0.8)).unwrap(); // tie: newest wins
+        s.add(rec("mn", "vta", 1, f64::NAN)).unwrap();
+        assert_eq!(s.best_for("mn", "vta"), Some((5, 0.8)));
+        assert_eq!(s.best_for("mn", "general"), None);
+        // all-NaN space reports None, not a panic
+        s.add(rec("shn", "vta", 0, f64::NAN)).unwrap();
+        assert_eq!(s.best_for("shn", "vta"), None);
+    }
+
+    #[test]
+    fn best_configs_ranks_unique_configs() {
+        let mut s = Store::in_memory();
+        s.add(rec("mn", "general", 3, 0.5)).unwrap();
+        s.add(rec("mn", "general", 3, 0.9)).unwrap(); // re-measured, better
+        s.add(rec("mn", "general", 7, 0.7)).unwrap();
+        s.add(rec("mn", "general", 1, f64::NAN)).unwrap();
+        s.add(rec("mn", "general", 4, 0.7)).unwrap(); // accuracy tie with 7
+        let top = s.best_configs("mn", "general", 2);
+        assert_eq!(top, vec![(3, 0.9), (4, 0.7)]);
+        let all = s.best_configs("mn", "general", 10);
+        assert_eq!(all, vec![(3, 0.9), (4, 0.7), (7, 0.7)]);
+    }
+
+    #[test]
+    fn records_since_is_a_watermark() {
+        let mut s = Store::in_memory();
+        assert_eq!(s.next_seq(), 0);
+        assert_eq!(s.add(rec("mn", "general", 0, 0.5)).unwrap(), 0);
+        assert_eq!(s.add(rec("mn", "general", 1, 0.6)).unwrap(), 1);
+        let mark = s.next_seq();
+        assert_eq!(mark, 2);
+        s.add(rec("mn", "general", 2, 0.7)).unwrap();
+        let new = s.records_since(mark);
+        assert_eq!(new.len(), 1);
+        assert_eq!(new[0].config, 2);
+        // past-the-end watermark is empty, not a panic
+        assert!(s.records_since(99).is_empty());
+    }
+
+    #[test]
+    fn writer_reorders_out_of_order_slots() {
+        let mut s = Store::in_memory();
+        let w = s.writer();
+        w.submit(2, rec("mn", "general", 2, 0.3)).unwrap();
+        w.submit(0, rec("mn", "general", 0, 0.1)).unwrap();
+        w.submit(1, rec("mn", "general", 1, 0.2)).unwrap();
+        assert_eq!(w.finish().unwrap(), 3);
+        drop(w);
+        let configs: Vec<usize> = s.records().iter().map(|r| r.config).collect();
+        assert_eq!(configs, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn writer_rejects_duplicate_slots_and_gapped_finish() {
+        let mut s = Store::in_memory();
+        let w = s.writer();
+        w.submit(0, rec("mn", "general", 0, 0.1)).unwrap();
+        assert!(w.submit(0, rec("mn", "general", 0, 0.1)).is_err());
+        w.submit(2, rec("mn", "general", 2, 0.3)).unwrap();
+        assert!(w.submit(2, rec("mn", "general", 2, 0.3)).is_err());
+        let err = w.finish().unwrap_err().to_string();
+        assert!(err.contains("missing slot 1"), "got: {err}");
+    }
+
+    #[test]
+    fn cursor_refresh_matches_full_extraction() {
+        let mut s = Store::in_memory();
+        s.add(rec("a", "general", 0, 0.1)).unwrap();
+        s.add(rec("mn", "general", 1, 0.9)).unwrap(); // excluded
+        let mut cursor = TransferCursor::new("mn", "general");
+        assert_eq!(cursor.refresh(&s, |_, i| Some(vec![i as f32])), 1);
+        s.add(rec("b", "vta", 2, 0.2)).unwrap(); // wrong space
+        s.add(rec("b", "general", 3, 0.3)).unwrap();
+        assert_eq!(cursor.refresh(&s, |_, i| Some(vec![i as f32])), 1);
+        // nothing new: refresh is a no-op
+        assert_eq!(cursor.refresh(&s, |_, i| Some(vec![i as f32])), 0);
+        let full = s.transfer_records("mn", "general", |_, i| Some(vec![i as f32]));
+        assert_eq!(cursor.records().len(), full.len());
+        for (a, b) in cursor.records().iter().zip(&full) {
+            assert_eq!(a.features, b.features);
+            assert_eq!(a.accuracy, b.accuracy);
+        }
+        assert_eq!(cursor.watermark(), s.next_seq());
+    }
+
+    #[test]
+    fn records_equal_is_bit_exact_and_nan_aware() {
+        let a = rec("mn", "general", 1, f64::NAN);
+        let b = rec("mn", "general", 1, f64::NAN);
+        assert!(records_equal(&a, &b));
+        let c = Record { latency_ms: Some(1.5), ..a.clone() };
+        assert!(!records_equal(&a, &c));
+        assert!(records_equal(&c, &c.clone()));
+        let d = Record { device: Some("x".into()), ..a.clone() };
+        assert!(!records_equal(&a, &d));
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join("quantune_store_atomic_test");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("f.json");
+        write_atomic(&path, b"one").unwrap();
+        write_atomic(&path, b"two").unwrap();
+        assert_eq!(fs::read_to_string(&path).unwrap(), "two");
+        assert!(!dir.join("f.json.tmp").exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

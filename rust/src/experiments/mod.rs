@@ -1443,9 +1443,10 @@ pub fn pareto_search_synthetic() -> Result<ParetoSearchSummary> {
         artifacts: PathBuf::from("."),
         calib_pool: calib.clone(),
         eval: eval.clone(),
-        db: crate::coordinator::Database::in_memory(),
+        db: crate::coordinator::Store::in_memory(),
         seed,
         device: DEVICES[1],
+        seed_from_db: false,
     };
     let nsga_budget = space.size() / 4;
     let mut ev = InterpEvaluator::new(&model, &calib, &eval, seed)

@@ -84,7 +84,7 @@ pub fn fp32_vs_fq_b1(
 ) -> Result<LatencyReport> {
     let cfg = q
         .db
-        .best_for(&model.name)
+        .best_general(&model.name)
         .map(|(c, _)| c)
         .unwrap_or_else(Quantune::tensorrt_like_baseline);
     let cache = calibrate(
@@ -150,7 +150,7 @@ pub fn fp32_vs_fq_b1(
 /// QuantConfig whose latency is being measured (exposed for reports).
 pub fn latency_config(q: &Quantune, model: &ZooModel) -> QuantConfig {
     q.db
-        .best_for(&model.name)
+        .best_general(&model.name)
         .map(|(c, _)| c)
         .unwrap_or_else(Quantune::tensorrt_like_baseline)
 }

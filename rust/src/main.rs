@@ -11,6 +11,7 @@
 //! quantune quantize  [--models mn,..] [--config IDX]   # deploy report
 //! quantune vta       [--models mn,..]                  # integer-only path
 //! quantune latency   [--models mn,..] [--reps N]
+//! quantune db status|table|export|migrate [--space TAG] [--format csv|json] [--out F]
 //! ```
 //!
 //! `--space` selects the quantization search space: the 96-element
@@ -36,6 +37,17 @@
 //! `search` falls back to the self-contained synthetic model, so the
 //! multi-objective path runs from a clean checkout.
 //!
+//! `db` inspects and manages the persistent trial store (the paper's
+//! database D, §5.2): `status` prints backend / record / segment /
+//! space / model / device counts, `table` prints the best-known
+//! accuracy table for each model in a space, `export` dumps every
+//! record as CSV or JSON, and `migrate` converts a legacy
+//! `database.json` into the crash-safe segmented trial log (round-trip
+//! verified before anything is replaced). `--seed-from-db` warm-starts
+//! the GA / NSGA-II initial populations from the store's best-known
+//! configs for the target space. See rust/BENCHMARKS.md for the log
+//! format and index semantics.
+//!
 //! `--algo nsga2` searches for the whole Pareto *frontier* over
 //! (accuracy, latency, bytes) instead of one scalarized optimum, and
 //! prints the recovered front. `--budget-lat-ms` / `--budget-bytes` add
@@ -52,8 +64,9 @@ use anyhow::{Context, Result};
 use quantune::calib::{calibrate, CalibBackend};
 use quantune::config::Cli;
 use quantune::coordinator::{
-    Budget, DeviceProfile, Evaluator, HloEvaluator, InterpEvaluator, ObjectiveWeights,
-    OracleEvaluator, Quantune, ALGORITHMS, DEVICES, GENERAL_SPACE_TAG,
+    records_equal, write_atomic, Budget, DeviceProfile, Evaluator, HloEvaluator,
+    InterpEvaluator, ObjectiveWeights, OracleEvaluator, Quantune, Record, Store, ALGORITHMS,
+    DEVICES, GENERAL_SPACE_TAG,
 };
 use quantune::quant::{
     general_space, max_layers_for, model_size_bytes, model_size_fp32,
@@ -61,7 +74,7 @@ use quantune::quant::{
     VtaConfig, MAX_LAYERWISE_BITS,
 };
 use quantune::runtime::Runtime;
-use quantune::util::{fmt_duration, Pool, Timer};
+use quantune::util::{fmt_duration, Json, Pool, Timer};
 use quantune::vta::VtaModel;
 use quantune::zoo;
 
@@ -80,13 +93,15 @@ fn main() {
 fn print_help() {
     eprintln!(
         "quantune -- post-training quantization auto-tuner (paper reproduction)\n\
-         commands: info | sweep | search | quantize | vta | latency\n\
+         commands: info | sweep | search | quantize | vta | latency | db\n\
          common options: --artifacts DIR --models mn,shn,... --seed N\n\
          space options:  --space general|vta|layerwise --layers K (layerwise cap)\n\
                          --bits 4,8,16 (layer-wise width menu; default 8 = {{int8,fp32}})\n\
          objectives:     --objective acc|lat|size|balanced --device a53|i7|2080ti\n\
          constraints:    --budget-lat-ms X --budget-bytes X (reject before measuring)\n\
          frontier:       --algo nsga2 (Pareto-front search; see rust/SEARCH.md)\n\
+         warm start:     --seed-from-db (GA/NSGA-II populations from the trial store)\n\
+         trial store:    db status|table|export|migrate [--format csv|json] [--out F]\n\
          env: QUANTUNE_THREADS=N sizes the worker pool (default: all cores)\n\
          see README.md and rust/BENCHMARKS.md for details"
     );
@@ -101,7 +116,7 @@ fn resolve_space(cli: &Cli, q: &Quantune, model: &zoo::ZooModel) -> Result<Space
         "general" => Ok(general_space()),
         "vta" => Ok(vta_space()),
         "layerwise" => {
-            let base = match q.db.best_for(&model.name) {
+            let base = match q.db.best_general(&model.name) {
                 Some((cfg, _)) => cfg,
                 None => {
                     eprintln!(
@@ -129,6 +144,13 @@ fn resolve_space(cli: &Cli, q: &Quantune, model: &zoo::ZooModel) -> Result<Space
 
 fn run(args: &[String]) -> Result<()> {
     let cli = Cli::parse(args)?;
+    if cli.command != "db" {
+        if let Some(action) = &cli.action {
+            anyhow::bail!(
+                "unexpected positional argument {action:?} (only `db` takes an action)"
+            );
+        }
+    }
     match cli.command.as_str() {
         "info" => cmd_info(&cli),
         "sweep" => cmd_sweep(&cli),
@@ -136,6 +158,7 @@ fn run(args: &[String]) -> Result<()> {
         "quantize" => cmd_quantize(&cli),
         "vta" => cmd_vta(&cli),
         "latency" => cmd_latency(&cli),
+        "db" => cmd_db(&cli),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -148,7 +171,7 @@ fn cmd_info(cli: &Cli) -> Result<()> {
     let q = Quantune::open(cli.artifacts())?;
     println!("artifacts: {}", q.artifacts.display());
     println!("eval images: {}, calib pool: {}", q.eval.n, q.calib_pool.n);
-    println!("database records: {}", q.db.records.len());
+    println!("database records: {} ({} backend)", q.db.len(), q.db.backend());
     println!("search space: {} configs (Eq. 1)", QuantConfig::SPACE_SIZE);
     for name in cli.models() {
         match q.load_model(&name) {
@@ -282,6 +305,7 @@ fn cmd_search(cli: &Cli) -> Result<()> {
         (q, models)
     };
     q.device = device;
+    q.seed_from_db = cli.flag("seed-from-db");
     for model in &models {
         let name = &model.name;
         let space = resolve_space(cli, &q, model)?;
@@ -395,7 +419,7 @@ fn cmd_quantize(cli: &Cli) -> Result<()> {
         let cfg = match cli.opt("config") {
             Some(idx) => QuantConfig::from_index(idx.parse()?)?,
             None => {
-                q.db.best_for(&name)
+                q.db.best_general(&name)
                     .map(|(c, _)| c)
                     .context("no sweep/search results; pass --config IDX")?
             }
@@ -475,6 +499,190 @@ fn cmd_vta(cli: &Cli) -> Result<()> {
             model.fp32_top1 * 100.0
         );
     }
+    Ok(())
+}
+
+/// `quantune db <action>`: inspect / export / migrate the trial store.
+fn cmd_db(cli: &Cli) -> Result<()> {
+    match cli.action.as_deref().unwrap_or("status") {
+        "status" => cmd_db_status(cli),
+        "table" => cmd_db_table(cli),
+        "export" => cmd_db_export(cli),
+        "migrate" => cmd_db_migrate(cli),
+        other => {
+            anyhow::bail!("unknown db action {other:?} (try status|table|export|migrate)")
+        }
+    }
+}
+
+fn cmd_db_status(cli: &Cli) -> Result<()> {
+    let db = Store::open(&cli.artifacts())?;
+    println!("backend: {}", db.backend());
+    match db.location() {
+        Some(p) => println!("location: {}", p.display()),
+        None => println!("location: (in memory)"),
+    }
+    println!("records: {}", db.len());
+    if db.backend() == "log" {
+        println!("segments: {}", db.segments());
+    }
+    let idx = db.index();
+    let spaces = idx.space_counts();
+    if !spaces.is_empty() {
+        println!("spaces:");
+        for (space, n) in spaces {
+            println!("  {space:12} {n} record(s)");
+        }
+    }
+    let models = idx.model_counts();
+    if !models.is_empty() {
+        println!("models:");
+        for (model, n) in models {
+            println!("  {model:12} {n} record(s)");
+        }
+    }
+    if !idx.device_counts().is_empty() {
+        println!("devices:");
+        for (dev, n) in idx.device_counts() {
+            println!("  {dev:12} {n} record(s)");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_db_table(cli: &Cli) -> Result<()> {
+    let db = Store::open(&cli.artifacts())?;
+    let space = cli.opt_or("space", GENERAL_SPACE_TAG);
+    for name in cli.models() {
+        let positions = db.index().positions(&space, &name);
+        if positions.is_empty() {
+            println!("{name} x {space}: no records");
+            continue;
+        }
+        // size the table from the data itself: the CLI has no space
+        // object here (layer-wise spaces need a loaded model)
+        let size = positions
+            .iter()
+            .map(|&p| db.records()[p].config + 1)
+            .max()
+            .unwrap_or(0);
+        let table = db.accuracy_table(&name, &space, size);
+        let known = table.iter().filter(|a| !a.is_nan()).count();
+        println!("{name} x {space}: {known} config(s) known (max index {})", size - 1);
+        for (cfg, acc) in table.iter().enumerate() {
+            if !acc.is_nan() {
+                println!("  config {cfg:4} top1 {:6.2}%", acc * 100.0);
+            }
+        }
+        if let Some((cfg, acc)) = db.best_for(&name, &space) {
+            println!("  => best config {cfg} top1 {:.2}%", acc * 100.0);
+        }
+    }
+    Ok(())
+}
+
+/// One CSV row per record; empty cells for NaN / absent optionals.
+fn csv_row(seq: usize, r: &Record) -> String {
+    let num = |x: f64| if x.is_finite() { format!("{x}") } else { String::new() };
+    let opt = |x: Option<f64>| x.map(num).unwrap_or_default();
+    format!(
+        "{seq},{},{},{},{},{},{},{},{}\n",
+        r.model,
+        r.space,
+        r.config,
+        num(r.accuracy),
+        num(r.measure_secs),
+        opt(r.latency_ms),
+        opt(r.size_bytes),
+        r.device.as_deref().unwrap_or_default(),
+    )
+}
+
+fn cmd_db_export(cli: &Cli) -> Result<()> {
+    let db = Store::open(&cli.artifacts())?;
+    let format = cli.opt_or("format", "csv");
+    let out = match format.as_str() {
+        "csv" => {
+            let mut s = String::from(
+                "seq,model,space,config,accuracy,measure_secs,latency_ms,size_bytes,device\n",
+            );
+            for (seq, r) in db.records().iter().enumerate() {
+                s.push_str(&csv_row(seq, r));
+            }
+            s
+        }
+        "json" => {
+            let doc = Json::Arr(db.records().iter().map(Record::to_json).collect());
+            let mut s = doc.pretty();
+            s.push('\n');
+            s
+        }
+        other => anyhow::bail!("unknown export format {other:?} (try csv|json)"),
+    };
+    match cli.opt("out") {
+        Some(path) => {
+            // same crash-safety contract as the store itself: a died
+            // export can never leave a half-written file behind
+            write_atomic(std::path::Path::new(path), out.as_bytes())?;
+            eprintln!("exported {} record(s) to {path} ({format})", db.len());
+        }
+        None => print!("{out}"),
+    }
+    Ok(())
+}
+
+fn cmd_db_migrate(cli: &Cli) -> Result<()> {
+    let artifacts = cli.artifacts();
+    let legacy_path = artifacts.join("database.json");
+    let log_dir = artifacts.join("trials");
+    anyhow::ensure!(
+        legacy_path.exists(),
+        "no legacy database at {} (nothing to migrate)",
+        legacy_path.display()
+    );
+    anyhow::ensure!(
+        !log_dir.exists(),
+        "{} already exists; refusing to overwrite an existing trial log",
+        log_dir.display()
+    );
+    let legacy = Store::open_json(&legacy_path)?;
+    // replay into a scratch directory; the real `trials/` only appears
+    // via the final rename, after the round-trip verification passed
+    let tmp_dir = artifacts.join("trials.migrate-tmp");
+    if tmp_dir.exists() {
+        std::fs::remove_dir_all(&tmp_dir)?;
+    }
+    let mut log = Store::open_log(&tmp_dir)?;
+    for r in legacy.records() {
+        log.add(r.clone())?;
+    }
+    log.save()?;
+    drop(log);
+    let reread = Store::open_log(&tmp_dir)?;
+    anyhow::ensure!(
+        reread.len() == legacy.len(),
+        "migration round-trip lost records: {} in, {} back",
+        legacy.len(),
+        reread.len()
+    );
+    for (seq, (a, b)) in legacy.records().iter().zip(reread.records()).enumerate() {
+        anyhow::ensure!(
+            records_equal(a, b),
+            "migration round-trip corrupted record {seq} ({} {} config {})",
+            a.model,
+            a.space,
+            a.config
+        );
+    }
+    std::fs::rename(&tmp_dir, &log_dir)?;
+    let retired = artifacts.join("database.json.migrated");
+    std::fs::rename(&legacy_path, &retired)?;
+    println!(
+        "migrated {} record(s) losslessly into {}",
+        legacy.len(),
+        log_dir.display()
+    );
+    println!("legacy file retired to {}", retired.display());
     Ok(())
 }
 

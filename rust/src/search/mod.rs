@@ -256,6 +256,36 @@ impl GeneticSearch {
         }
     }
 
+    /// GA whose initial population is warm-started from `seeds` (config
+    /// indices, best first -- e.g. the trial store's best-known configs
+    /// for this model x space). Up to a full population of seeds is
+    /// encoded as genomes (proposed first, in order); the remainder of
+    /// the population stays random. The RNG is constructed exactly as in
+    /// [`GeneticSearch::new`], so an empty `seeds` slice reproduces the
+    /// unseeded search bit-for-bit. Errors if a seed index is outside
+    /// the space.
+    pub fn with_seeds(space: SpaceRef, seed: u64, seeds: &[usize]) -> anyhow::Result<Self> {
+        let mut rng = Pcg32::new(seed, 17);
+        let pop_size = 8;
+        let bits = space.genome_bits().max(1);
+        let mut population: Vec<Vec<bool>> = Vec::with_capacity(pop_size);
+        for &cfg in seeds.iter().take(pop_size) {
+            let mut genome = space.encode(cfg)?;
+            genome.resize(bits, false);
+            population.push(genome);
+        }
+        let fill = pop_size - population.len();
+        population.extend(random_population(&mut rng, fill, bits));
+        Ok(GeneticSearch {
+            rng,
+            space,
+            bits,
+            population,
+            pending: (0..pop_size).rev().collect(),
+            pop_size,
+        })
+    }
+
     fn fitness_of(space: &dyn ConfigSpace, genome: &[bool], history: &[Trial]) -> f64 {
         let idx = space.decode(genome);
         history
@@ -343,6 +373,15 @@ pub struct XgbSearch {
     pub params: XgbParams,
     rng: Pcg32,
     name: &'static str,
+    // incremental training cache: the finite rows already drained from
+    // `transfer` and from the trial history, so each generation's refit
+    // appends only the rows past the two watermarks below instead of
+    // re-extracting the full table (the search-side consumer of the
+    // store's `records_since` watermark design)
+    xs: Vec<Vec<f32>>,
+    ys: Vec<f32>,
+    transfer_seen: usize,
+    history_seen: usize,
 }
 
 impl XgbSearch {
@@ -354,6 +393,10 @@ impl XgbSearch {
             params: XgbParams::default(),
             rng: Pcg32::new(seed, 23),
             name: "xgb",
+            xs: Vec::new(),
+            ys: Vec::new(),
+            transfer_seen: 0,
+            history_seen: 0,
         }
     }
 
@@ -369,11 +412,69 @@ impl XgbSearch {
             params: XgbParams::default(),
             rng: Pcg32::new(seed, 23),
             name: "xgb_t",
+            xs: Vec::new(),
+            ys: Vec::new(),
+            transfer_seen: 0,
+            history_seen: 0,
         }
     }
 
-    /// The fitted cost model for the current history (also used by the
-    /// Fig 3 feature-importance bench).
+    /// Append freshly harvested transfer records (e.g. a watermark
+    /// refresh of the trial store via `coordinator::TransferCursor`);
+    /// the next refit absorbs exactly the new rows. Rows enter the
+    /// training set in arrival order, so records added mid-run land
+    /// after already-cached history rows -- the row *set* stays
+    /// identical to a full re-extraction, only the order differs.
+    pub fn extend_transfer(&mut self, records: impl IntoIterator<Item = TransferRecord>) {
+        self.transfer.extend(records);
+    }
+
+    /// Drain rows the training cache has not absorbed yet: transfer
+    /// records first, then history trials past the watermark. Non-finite
+    /// rows are skipped exactly as in [`XgbSearch::fit_cost_model`] but
+    /// still advance the watermarks (they teach nothing and are never
+    /// revisited). Called by every [`XgbSearch::propose`]; public so the
+    /// watermark-equivalence tests can sync without proposing.
+    pub fn sync_rows(&mut self, history: &[Trial]) {
+        for r in &self.transfer[self.transfer_seen..] {
+            if r.accuracy.is_finite() {
+                self.xs.push(r.features.clone());
+                self.ys.push(r.accuracy);
+            }
+        }
+        self.transfer_seen = self.transfer.len();
+        for t in &history[self.history_seen.min(history.len())..] {
+            if t.score.is_finite() {
+                self.xs.push(self.space_features[t.config].clone());
+                self.ys.push(t.score as f32);
+            }
+        }
+        self.history_seen = self.history_seen.max(history.len());
+    }
+
+    /// The cached finite training rows `(features, labels)` the next
+    /// refit will use. Equals what [`XgbSearch::fit_cost_model`] would
+    /// extract from scratch whenever the transfer set was fixed at
+    /// construction (the watermark-equivalence tests assert this).
+    pub fn training_rows(&self) -> (&[Vec<f32>], &[f32]) {
+        (&self.xs, &self.ys)
+    }
+
+    /// Fit from the incremental cache, with the same capacity scaling
+    /// as [`XgbSearch::fit_cost_model`].
+    fn fit_cached(&self) -> Option<XgbModel> {
+        if self.xs.is_empty() {
+            return None;
+        }
+        let mut params = self.params;
+        params.max_depth = params.max_depth.min(1 + self.xs.len() / 6).max(1);
+        params.n_trees = params.n_trees.min(10 + 3 * self.xs.len());
+        XgbModel::fit(&self.xs, &self.ys, params).ok()
+    }
+
+    /// The fitted cost model for the current history, extracted from
+    /// scratch (also used by the Fig 3 feature-importance bench; the
+    /// search loop itself refits incrementally via the row cache).
     pub fn fit_cost_model(&self, history: &[Trial]) -> Option<XgbModel> {
         let mut xs: Vec<Vec<f32>> = Vec::new();
         let mut ys: Vec<f32> = Vec::new();
@@ -422,7 +523,8 @@ impl SearchAlgo for XgbSearch {
         if unexplored.is_empty() {
             return None;
         }
-        match self.fit_cost_model(history) {
+        self.sync_rows(history);
+        match self.fit_cached() {
             None => {
                 // cold start with no data at all: random first probe
                 Some(unexplored[self.rng.below(unexplored.len())])

@@ -386,6 +386,37 @@ impl ParetoSearch {
         }
     }
 
+    /// NSGA-II whose first offspring generation is warm-started from
+    /// `seeds` (config indices, best first -- e.g. the trial store's
+    /// best-known configs for this model x space). Up to a full
+    /// population of seeds is encoded as genomes (proposed first, in
+    /// order); the remainder stays random. The RNG is constructed
+    /// exactly as in [`ParetoSearch::new`], so an empty `seeds` slice
+    /// reproduces the unseeded search bit-for-bit. Errors if a seed
+    /// index is outside the space.
+    pub fn with_seeds(space: SpaceRef, seed: u64, seeds: &[usize]) -> anyhow::Result<Self> {
+        let mut rng = Pcg32::new(seed, 29);
+        let pop_size = 8;
+        let bits = space.genome_bits().max(1);
+        let mut offspring: Vec<Vec<bool>> = Vec::with_capacity(pop_size);
+        for &cfg in seeds.iter().take(pop_size) {
+            let mut genome = space.encode(cfg)?;
+            genome.resize(bits, false);
+            offspring.push(genome);
+        }
+        let fill = pop_size - offspring.len();
+        offspring.extend(random_population(&mut rng, fill, bits));
+        Ok(ParetoSearch {
+            rng,
+            space,
+            bits,
+            pop_size,
+            parents: Vec::new(),
+            offspring,
+            pending: (0..pop_size).rev().collect(),
+        })
+    }
+
     /// Objective vector of a genome: the latest measurement of its
     /// decoded config, or an all-worst point (NaN accuracy, +inf costs)
     /// when it was never measured -- so unmeasured genomes can never

@@ -5,7 +5,7 @@
 /// -inf). `max_by(nan_min_cmp)` therefore never selects a NaN entry
 /// unless every entry is NaN, and `sort_by(nan_min_cmp)` sinks NaN to
 /// the front instead of panicking. This is the one comparator every
-/// ranking site uses: `Database::accuracy_table` fills holes with NaN,
+/// ranking site uses: `TrialStore::accuracy_table` fills holes with NaN,
 /// so a bare `partial_cmp().unwrap()` on anything downstream of it is a
 /// latent panic.
 pub fn nan_min_cmp(a: &f64, b: &f64) -> std::cmp::Ordering {

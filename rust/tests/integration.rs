@@ -199,18 +199,20 @@ fn xgb_t_requires_then_uses_transfer() {
     let table = vec![0.5; QuantConfig::SPACE_SIZE];
     let space = general_space();
     // no other-model records in a fresh in-memory db: xgb_t must refuse
-    q.db = coordinator::Database::in_memory();
+    q.db = coordinator::Store::in_memory();
     let mut oracle = OracleEvaluator::new(table.clone());
     assert!(q.search(&model, &space, "xgb_t", &mut oracle, 4, 1).is_err());
     // seed the db with another model's records -> works
     for i in 0..QuantConfig::SPACE_SIZE {
-        q.db.add(coordinator::Record::new(
-            "mn".into(),
-            GENERAL_SPACE_TAG.into(),
-            i,
-            0.5,
-            0.0,
-        ));
+        q.db
+            .add(coordinator::Record::new(
+                "mn".into(),
+                GENERAL_SPACE_TAG.into(),
+                i,
+                0.5,
+                0.0,
+            ))
+            .unwrap();
     }
     if q.artifacts.join("mn_meta.json").exists() {
         let mut oracle = OracleEvaluator::new(table);
@@ -265,7 +267,7 @@ fn vta_per_layer_beats_global_scale() {
 fn sweep_persists_to_database() {
     let Some(dir) = artifacts() else { return };
     let mut q = Quantune::open(dir).unwrap();
-    q.db = coordinator::Database::in_memory();
+    q.db = coordinator::Store::in_memory();
     let model = q.load_model("sqn").unwrap();
     // tiny fake sweep via oracle (a full HLO sweep is exercised by the
     // benches; here we verify the bookkeeping)
@@ -281,7 +283,7 @@ fn sweep_persists_to_database() {
     let again =
         q.sweep(&model, space.as_ref(), &mut empty, false, |_, _| {}).unwrap();
     assert_eq!(again, table);
-    let (best_cfg, best_acc) = q.db.best_for("sqn").unwrap();
+    let (best_cfg, best_acc) = q.db.best_general("sqn").unwrap();
     assert_eq!(best_cfg.index(), 95);
     assert!((best_acc - 0.95).abs() < 1e-9);
 }

@@ -18,8 +18,8 @@
 //!   25% of the exhaustive evaluation budget.
 
 use quantune::coordinator::{
-    self, Budget, CostModel, Database, Evaluator, InterpEvaluator, ObjectiveWeights,
-    Quantune, Record, GENERAL_SPACE_TAG,
+    self, Budget, CostModel, Evaluator, InterpEvaluator, ObjectiveWeights, Quantune,
+    Record, Store, GENERAL_SPACE_TAG,
 };
 use quantune::experiments;
 use quantune::quant::{general_space, vta_space, VtaConfig};
@@ -116,10 +116,12 @@ fn nan_database_record_degrades_best_for_and_search() {
     let mut q = Quantune::synthetic();
     let model = Quantune::synthetic_model().unwrap();
     // a poisoned record (NaN accuracy) next to real ones
-    q.db = Database::in_memory();
-    q.db.add(Record::new(model.name.clone(), GENERAL_SPACE_TAG.into(), 3, f64::NAN, 0.0));
-    q.db.add(Record::new(model.name.clone(), GENERAL_SPACE_TAG.into(), 7, 0.8, 0.0));
-    let (cfg, acc) = q.db.best_for(&model.name).expect("real record survives");
+    q.db = Store::in_memory();
+    q.db.add(Record::new(model.name.clone(), GENERAL_SPACE_TAG.into(), 3, f64::NAN, 0.0))
+        .unwrap();
+    q.db.add(Record::new(model.name.clone(), GENERAL_SPACE_TAG.into(), 7, 0.8, 0.0))
+        .unwrap();
+    let (cfg, acc) = q.db.best_general(&model.name).expect("real record survives");
     assert_eq!(cfg.index(), 7);
     assert_eq!(acc, 0.8);
 

@@ -175,9 +175,10 @@ fn sweep_parallel_non_general_space_matches_serial() {
         artifacts: std::path::PathBuf::from("."),
         calib_pool: calib.clone(),
         eval: eval.clone(),
-        db: coordinator::Database::in_memory(),
+        db: coordinator::Store::in_memory(),
         seed: 1,
         device: coordinator::DEVICES[1],
+        seed_from_db: false,
     };
 
     let mut q_serial = make_q();
@@ -209,8 +210,8 @@ fn sweep_parallel_non_general_space_matches_serial() {
         let bits = |t: &[f64]| -> Vec<u64> { t.iter().map(|a| a.to_bits()).collect() };
         assert_eq!(bits(&serial), bits(&parallel), "{threads} threads");
         // the persisted records match the serial run in order and content
-        assert_eq!(q_par.db.records.len(), q_serial.db.records.len());
-        for (a, b) in q_serial.db.records.iter().zip(&q_par.db.records) {
+        assert_eq!(q_par.db.records().len(), q_serial.db.records().len());
+        for (a, b) in q_serial.db.records().iter().zip(q_par.db.records()) {
             assert_eq!(a.model, b.model);
             assert_eq!(a.space, b.space);
             assert_eq!(a.config, b.config);
@@ -283,9 +284,10 @@ fn pareto_trace_identical_across_thread_counts() {
         artifacts: std::path::PathBuf::from("."),
         calib_pool: calib.clone(),
         eval: eval.clone(),
-        db: coordinator::Database::in_memory(),
+        db: coordinator::Store::in_memory(),
         seed: 1,
         device: coordinator::DEVICES[1],
+        seed_from_db: false,
     };
     let weights = ObjectiveWeights::parse("balanced").unwrap();
     let seed = 20220205u64;
@@ -346,9 +348,10 @@ fn objective_search_traces_identical_across_thread_counts() {
         artifacts: std::path::PathBuf::from("."),
         calib_pool: calib.clone(),
         eval: eval.clone(),
-        db: coordinator::Database::in_memory(),
+        db: coordinator::Store::in_memory(),
         seed: 1,
         device: coordinator::DEVICES[0], // a53: strongest latency penalty
+        seed_from_db: false,
     };
     let weights = ObjectiveWeights::parse("balanced").unwrap();
     let seed = 20220205u64;

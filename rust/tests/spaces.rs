@@ -11,7 +11,7 @@
 
 use std::path::PathBuf;
 
-use quantune::coordinator::{Database, InterpEvaluator, Quantune, DEVICES};
+use quantune::coordinator::{InterpEvaluator, Quantune, Store, DEVICES};
 use quantune::data::{synthetic_dataset, Dataset};
 use quantune::experiments;
 use quantune::quant::{
@@ -32,9 +32,10 @@ fn quantune_with(calib: &Dataset, eval: &Dataset) -> Quantune {
         artifacts: PathBuf::from("."),
         calib_pool: calib.clone(),
         eval: eval.clone(),
-        db: Database::in_memory(),
+        db: Store::in_memory(),
         seed: 1,
         device: DEVICES[1],
+        seed_from_db: false,
     }
 }
 
@@ -236,5 +237,5 @@ fn layerwise_sweep_persists_under_its_own_tag() {
     assert!(q.db.has_full_sweep(&model.name, &space.tag(), 4));
     // the general-space table is untouched by layer-wise records
     assert!(!q.db.has_full_sweep(&model.name, "general", 96));
-    assert!(q.db.records.iter().all(|r| r.space == space.tag()));
+    assert!(q.db.records().iter().all(|r| r.space == space.tag()));
 }

@@ -1,0 +1,303 @@
+//! End-to-end guarantees of the persistent trial store (PR 8):
+//!
+//! - concurrent writers through [`StoreWriter`] persist the exact same
+//!   record sequence as a serial sweep, at any worker count;
+//! - a torn tail segment (crash mid-append) recovers to the valid
+//!   prefix through the `Store::open` auto-detect path and the store
+//!   stays appendable;
+//! - a legacy `database.json` (null accuracies, missing space tags,
+//!   optional cost fields) migrates into the log with zero records
+//!   lost, bit-for-bit;
+//! - the watermark cursor feeding incremental XGB refits sees exactly
+//!   the rows a full scan extracts, and the search-side row cache
+//!   reproduces the full-extraction training set;
+//! - database-seeded GA/NSGA-II populations propose the seeded configs
+//!   first and degrade to the unseeded RNG stream when no seeds exist.
+//!
+//! Everything here runs on synthetic records -- no artifacts needed.
+
+use std::fs;
+use std::path::PathBuf;
+
+use quantune::coordinator::{
+    records_equal, Record, Store, TransferCursor, TrialStore, GENERAL_SPACE_TAG,
+};
+use quantune::quant::general_space;
+use quantune::search::{
+    GeneticSearch, ParetoSearch, SearchAlgo, TransferRecord, Trial, XgbSearch,
+};
+use quantune::util::Pool;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A varied synthetic record: every third accuracy is NaN (failed
+/// measurement), optional cost fields and device present on a subset.
+fn rec(i: usize) -> Record {
+    Record {
+        latency_ms: (i % 2 == 0).then_some(1.5 + i as f64),
+        size_bytes: (i % 5 == 0).then_some(1000.0 * i as f64),
+        device: (i % 4 == 0).then(|| "CPU(i7-8700)".to_string()),
+        ..Record::new(
+            format!("m{}", i % 3),
+            GENERAL_SPACE_TAG.to_string(),
+            i % 96,
+            if i % 3 == 2 { f64::NAN } else { 0.4 + i as f64 / 100.0 },
+            0.01 * i as f64,
+        )
+    }
+}
+
+#[test]
+fn concurrent_writers_equal_serial_at_every_thread_count() {
+    let n = 64;
+    let serial_dir = tmpdir("quantune_store_stress_serial");
+    let mut serial = Store::open_log(&serial_dir).unwrap();
+    for i in 0..n {
+        assert_eq!(serial.add(rec(i)).unwrap(), i as u64);
+    }
+    serial.save().unwrap();
+
+    for threads in [1, 2, 4, 8] {
+        let dir = tmpdir(&format!("quantune_store_stress_t{threads}"));
+        let mut store = Store::open_log(&dir).unwrap();
+        {
+            let writer = store.writer();
+            let results = Pool::new(threads).run(n, |i| writer.submit(i, rec(i))).unwrap();
+            for r in results {
+                r.unwrap();
+            }
+            assert_eq!(writer.finish().unwrap(), n);
+        }
+        assert_eq!(store.len(), n, "threads={threads}");
+        for (a, b) in serial.records().iter().zip(store.records()) {
+            assert!(records_equal(a, b), "threads={threads}: in-memory order diverged");
+        }
+        // durability: a reopen replays the identical sequence
+        drop(store);
+        let reopened = Store::open_log(&dir).unwrap();
+        assert_eq!(reopened.len(), n, "threads={threads}");
+        for (a, b) in serial.records().iter().zip(reopened.records()) {
+            assert!(records_equal(a, b), "threads={threads}: replay diverged");
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+    let _ = fs::remove_dir_all(&serial_dir);
+}
+
+#[test]
+fn writer_rejects_duplicate_slots_and_gaps() {
+    let mut store = Store::in_memory();
+    let writer = store.writer();
+    writer.submit(0, rec(0)).unwrap();
+    assert!(writer.submit(0, rec(0)).is_err(), "slot 0 submitted twice");
+    writer.submit(2, rec(2)).unwrap(); // parked behind the missing slot 1
+    let err = writer.finish().unwrap_err().to_string();
+    assert!(err.contains("missing slot 1"), "got: {err}");
+    writer.submit(1, rec(1)).unwrap(); // fills the gap, drains slot 2
+    assert_eq!(writer.finish().unwrap(), 3);
+    drop(writer);
+    assert_eq!(store.len(), 3);
+    assert_eq!(store.records()[2].config, rec(2).config);
+}
+
+#[test]
+fn torn_tail_recovers_through_the_autodetect_path() {
+    let artifacts = tmpdir("quantune_store_torn_artifacts");
+    let trials = artifacts.join("trials");
+    {
+        let mut store = Store::open_log(&trials).unwrap();
+        for i in 0..3 {
+            store.add(rec(i)).unwrap();
+        }
+        store.save().unwrap();
+    }
+    // crash mid-append: a half-written frame lands after the last record
+    let seg = trials.join("segment-00000.qlog");
+    let good = fs::read(&seg).unwrap();
+    let mut torn = good.clone();
+    torn.extend_from_slice(&[0x40, 0x00, 0x00, 0x00, 0xaa, 0xbb, 0xcc]);
+    fs::write(&seg, &torn).unwrap();
+
+    // the artifacts-level open auto-detects trials/ and recovers
+    let mut store = Store::open(&artifacts).unwrap();
+    assert_eq!(store.backend(), "log");
+    assert_eq!(store.len(), 3, "valid prefix survives the torn frame");
+    assert_eq!(fs::read(&seg).unwrap(), good, "file truncated back to the prefix");
+    for (i, r) in store.records().iter().enumerate() {
+        assert!(records_equal(r, &rec(i)));
+    }
+    // recovered store keeps its sequence numbers and stays appendable
+    assert_eq!(store.add(rec(3)).unwrap(), 3);
+    store.save().unwrap();
+    drop(store);
+    let reopened = Store::open(&artifacts).unwrap();
+    assert_eq!(reopened.len(), 4);
+    let _ = fs::remove_dir_all(&artifacts);
+}
+
+#[test]
+fn legacy_json_migrates_into_the_log_losslessly() {
+    let artifacts = tmpdir("quantune_store_migrate_artifacts");
+    fs::create_dir_all(&artifacts).unwrap();
+    // a hand-written legacy file: null accuracy, a record predating
+    // space tags (defaults to "general"), optional fields on and off
+    fs::write(
+        artifacts.join("database.json"),
+        r#"{"records": [
+          {"model": "sqn", "space": "general", "config": 3, "accuracy": 0.71,
+           "measure_secs": 0.5, "latency_ms": 2.25, "size_bytes": 123456,
+           "device": "CPU(i7-8700)"},
+          {"model": "sqn", "config": 9, "accuracy": null, "measure_secs": 0.4},
+          {"model": "mn", "space": "vta", "config": 0, "accuracy": 0.66,
+           "measure_secs": 1.25}
+        ]}"#,
+    )
+    .unwrap();
+
+    // without a trials/ dir, open lands on the legacy backend
+    let legacy = Store::open(&artifacts).unwrap();
+    assert_eq!(legacy.backend(), "json");
+    assert_eq!(legacy.len(), 3);
+    assert_eq!(legacy.records()[1].space, GENERAL_SPACE_TAG, "missing tag defaults");
+    assert!(legacy.records()[1].accuracy.is_nan(), "null accuracy reads as NaN");
+    assert_eq!(legacy.records()[0].latency_ms, Some(2.25));
+    assert_eq!(legacy.records()[2].device, None);
+
+    // replay into a log (what `quantune db migrate` does), then verify
+    let trials = artifacts.join("trials");
+    {
+        let mut log = Store::open_log(&trials).unwrap();
+        for r in legacy.records() {
+            log.add(r.clone()).unwrap();
+        }
+        log.save().unwrap();
+    }
+    let migrated = Store::open(&artifacts).unwrap();
+    assert_eq!(migrated.backend(), "log", "trials/ now wins the auto-detect");
+    assert_eq!(migrated.len(), legacy.len());
+    for (a, b) in legacy.records().iter().zip(migrated.records()) {
+        assert!(records_equal(a, b), "migration must be bit-for-bit");
+    }
+    // the migrated store answers the same queries
+    assert_eq!(
+        legacy.best_for("sqn", GENERAL_SPACE_TAG),
+        migrated.best_for("sqn", GENERAL_SPACE_TAG),
+    );
+    assert_eq!(legacy.best_for("sqn", GENERAL_SPACE_TAG), Some((3, 0.71)));
+    let _ = fs::remove_dir_all(&artifacts);
+}
+
+/// Feature map used by the watermark tests: (model, config) -> a tiny
+/// deterministic vector, with one model excluded to exercise skips.
+fn feat(model: &str, config: usize) -> Option<Vec<f32>> {
+    (model != "skipme").then(|| vec![model.len() as f32, config as f32])
+}
+
+#[test]
+fn watermark_cursor_sees_exactly_what_a_full_scan_extracts() {
+    let mut store = Store::in_memory();
+    let mut cursor = TransferCursor::new("sqn", GENERAL_SPACE_TAG);
+    assert_eq!(cursor.refresh(&store, feat), 0, "empty store, no rows");
+
+    // batch 1: a mix of included, excluded-by-model, excluded-by-space,
+    // feature-mapper-skipped, and NaN-accuracy records
+    store.add(Record::new("mn".into(), GENERAL_SPACE_TAG.into(), 4, 0.61, 0.1)).unwrap();
+    store.add(Record::new("sqn".into(), GENERAL_SPACE_TAG.into(), 4, 0.80, 0.1)).unwrap();
+    store.add(Record::new("mn".into(), "vta".into(), 1, 0.55, 0.1)).unwrap();
+    store.add(Record::new("skipme".into(), GENERAL_SPACE_TAG.into(), 2, 0.5, 0.1)).unwrap();
+    store.add(Record::new("rn".into(), GENERAL_SPACE_TAG.into(), 7, f64::NAN, 0.1)).unwrap();
+    assert_eq!(cursor.refresh(&store, feat), 2);
+    assert_eq!(cursor.watermark(), store.next_seq());
+
+    // batch 2: the incremental refresh consumes only the new suffix
+    store.add(Record::new("mn".into(), GENERAL_SPACE_TAG.into(), 9, 0.69, 0.1)).unwrap();
+    store.add(Record::new("sqn".into(), GENERAL_SPACE_TAG.into(), 9, 0.81, 0.1)).unwrap();
+    assert_eq!(cursor.refresh(&store, feat), 1);
+    assert_eq!(cursor.refresh(&store, feat), 0, "nothing new, nothing re-read");
+
+    let full = store.transfer_records("sqn", GENERAL_SPACE_TAG, feat);
+    let inc = cursor.records();
+    assert_eq!(inc.len(), full.len());
+    for (a, b) in full.iter().zip(inc) {
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+    }
+}
+
+#[test]
+fn xgb_row_cache_reproduces_the_full_extraction() {
+    // 6 configs with scalar features; transfer rows fixed up front
+    let space_features: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32]).collect();
+    let transfer = vec![
+        TransferRecord { features: vec![10.0], accuracy: 0.5 },
+        TransferRecord { features: vec![11.0], accuracy: f32::NAN }, // dropped
+        TransferRecord { features: vec![12.0], accuracy: 0.7 },
+    ];
+    let mut search = XgbSearch::with_transfer(space_features.clone(), transfer, 1);
+
+    let mut history = vec![Trial::of(2, 0.62), Trial::of(5, f64::NAN)];
+    search.sync_rows(&history);
+    let (xs, ys) = search.training_rows();
+    // full extraction: finite transfer rows, then finite history rows
+    assert_eq!(xs, vec![vec![10.0], vec![12.0], vec![2.0]]);
+    assert_eq!(ys, vec![0.5, 0.7, 0.62]);
+
+    // growing the history only appends the new finite rows
+    history.push(Trial::of(0, 0.58));
+    search.sync_rows(&history);
+    let (xs, ys) = search.training_rows();
+    assert_eq!(xs, vec![vec![10.0], vec![12.0], vec![2.0], vec![0.0]]);
+    assert_eq!(ys, vec![0.5, 0.7, 0.62, 0.58]);
+
+    // re-syncing the same history is idempotent
+    search.sync_rows(&history);
+    assert_eq!(search.training_rows().0.len(), 4);
+
+    // mid-run transfer growth (a refreshed watermark cursor) lands in
+    // the cache on the next sync
+    search.extend_transfer([TransferRecord { features: vec![13.0], accuracy: 0.9 }]);
+    search.sync_rows(&history);
+    let (xs, ys) = search.training_rows();
+    assert_eq!(xs.last().unwrap().as_slice(), [13.0]);
+    assert_eq!(ys.last().copied(), Some(0.9));
+}
+
+#[test]
+fn seeded_populations_propose_the_seeds_first() {
+    let space = general_space();
+    let seeds = [5usize, 17, 3];
+
+    let mut ga = GeneticSearch::with_seeds(space.clone(), 7, &seeds).unwrap();
+    let first: Vec<usize> = (0..3).map(|_| ga.propose(&[]).unwrap()).collect();
+    assert_eq!(first, seeds, "GA proposes the database seeds first, in order");
+    for _ in 3..8 {
+        assert!(ga.propose(&[]).unwrap() < space.size(), "random fill stays in-space");
+    }
+
+    let mut nsga = ParetoSearch::with_seeds(space.clone(), 7, &seeds).unwrap();
+    let first: Vec<usize> = (0..3).map(|_| nsga.propose(&[]).unwrap()).collect();
+    assert_eq!(first, seeds, "NSGA-II warm-starts its first offspring generation");
+
+    // an out-of-space seed is a hard error, not a silent clamp
+    assert!(GeneticSearch::with_seeds(space.clone(), 7, &[space.size()]).is_err());
+    assert!(ParetoSearch::with_seeds(space.clone(), 7, &[space.size()]).is_err());
+}
+
+#[test]
+fn empty_seed_list_reproduces_the_unseeded_search() {
+    let space = general_space();
+    let mut plain = GeneticSearch::new(space.clone(), 11);
+    let mut seeded = GeneticSearch::with_seeds(space.clone(), 11, &[]).unwrap();
+    for _ in 0..8 {
+        assert_eq!(plain.propose(&[]), seeded.propose(&[]));
+    }
+    let mut plain = ParetoSearch::new(space.clone(), 11);
+    let mut seeded = ParetoSearch::with_seeds(space.clone(), 11, &[]).unwrap();
+    for _ in 0..8 {
+        assert_eq!(plain.propose(&[]), seeded.propose(&[]));
+    }
+}

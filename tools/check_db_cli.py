@@ -1,0 +1,149 @@
+#!/usr/bin/env python3
+"""Smoke-test the `quantune db` CLI against a fixture legacy database
+(CI builds the release binary and then runs this script, so a broken
+status/export/migrate path fails the build instead of shipping a CLI
+that corrupts or strands trial data).
+
+Exercised end to end, in a temp artifacts dir:
+- a hand-written legacy database.json (null accuracy, a record missing
+  its space tag, optional cost fields on and off) opens via `db status`
+  on the json backend with the right record count;
+- `db export` emits a parseable CSV (empty cells for NaN/absent) and
+  `--format json` round-trips through a JSON parser with every record;
+- `db migrate` replays the legacy file into the segmented trial log,
+  retires database.json, and reports losslessness;
+- after migration `db status` lands on the log backend with >= 1
+  segment and the same record count, and `db export` is byte-identical
+  to the pre-migration export;
+- a second `db migrate` refuses to run (nothing left to migrate).
+
+Usage: python3 tools/check_db_cli.py target/release/quantune
+"""
+
+import json
+import shutil
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+FIXTURE = """{"records": [
+  {"model": "sqn", "space": "general", "config": 3, "accuracy": 0.71,
+   "measure_secs": 0.5, "latency_ms": 2.25, "size_bytes": 123456,
+   "device": "CPU(i7-8700)"},
+  {"model": "sqn", "config": 9, "accuracy": null, "measure_secs": 0.4},
+  {"model": "mn", "space": "vta", "config": 0, "accuracy": 0.66,
+   "measure_secs": 1.25}
+]}
+"""
+N_RECORDS = 3
+
+
+def fail(msg: str) -> None:
+    print(f"check_db_cli: FAIL: {msg}")
+    sys.exit(1)
+
+
+def run(cmd: list, expect_ok: bool = True) -> "subprocess.CompletedProcess":
+    proc = subprocess.run(cmd, capture_output=True, text=True)
+    shown = " ".join(cmd[1:])
+    if expect_ok and proc.returncode != 0:
+        fail(f"`{shown}` exited {proc.returncode}:\n{proc.stdout}{proc.stderr}")
+    if not expect_ok and proc.returncode == 0:
+        fail(f"`{shown}` was expected to fail but exited 0")
+    return proc
+
+
+def expect(haystack: str, needle: str, what: str) -> None:
+    if needle not in haystack:
+        fail(f"{what}: expected {needle!r} in output:\n{haystack}")
+
+
+def main() -> None:
+    if len(sys.argv) != 2:
+        fail(f"usage: {sys.argv[0]} path/to/quantune")
+    binary = Path(sys.argv[1])
+    if not binary.exists():
+        fail(f"binary {binary} not found (run `cargo build --release` first)")
+
+    workdir = Path(tempfile.mkdtemp(prefix="quantune_db_cli_"))
+    try:
+        check(str(binary), workdir)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+def check(binary: str, artifacts: Path) -> None:
+    (artifacts / "database.json").write_text(FIXTURE)
+    base = [binary, "db"]
+    at = ["--artifacts", str(artifacts)]
+
+    # 1. status on the legacy backend (also the default db action)
+    out = run(base + ["status"] + at).stdout
+    expect(out, "backend: json", "pre-migration status")
+    expect(out, f"records: {N_RECORDS}", "pre-migration status")
+    expect(out, "general", "status space index")
+    expect(out, "vta", "status space index")
+    expect(out, "CPU(i7-8700)", "status device index")
+    default_action = run([binary, "db"] + at).stdout
+    if default_action != out:
+        fail("`quantune db` (no action) must behave like `db status`")
+
+    # 2. CSV export: header + one row per record, NaN/absent as empties
+    csv_before = run(base + ["export"] + at).stdout
+    lines = csv_before.strip().split("\n")
+    header = "seq,model,space,config,accuracy,measure_secs,latency_ms,size_bytes,device"
+    if lines[0] != header:
+        fail(f"csv header {lines[0]!r} != {header!r}")
+    if len(lines) != 1 + N_RECORDS:
+        fail(f"csv has {len(lines) - 1} data rows, want {N_RECORDS}")
+    row = dict(zip(header.split(","), lines[2].split(",")))
+    if row["accuracy"] != "":
+        fail(f"null accuracy must export as an empty cell, got {row['accuracy']!r}")
+    if row["space"] != "general":
+        fail(f"missing space tag must default to general, got {row['space']!r}")
+
+    # 3. JSON export through --out (atomic write path) must parse
+    json_path = artifacts / "export.json"
+    run(base + ["export", "--format", "json", "--out", str(json_path)] + at)
+    exported = json.loads(json_path.read_text())
+    if not isinstance(exported, list) or len(exported) != N_RECORDS:
+        fail(f"json export: want a list of {N_RECORDS} records, got {exported!r}")
+    if exported[1]["accuracy"] is not None:
+        fail("json export must keep the NaN accuracy as null")
+
+    # 4. table view over the fixture's general-space records
+    out = run(base + ["table", "--models", "sqn"] + at).stdout
+    expect(out, "sqn x general", "db table")
+    expect(out, "=> best config 3", "db table best line")
+
+    # 5. migrate: legacy -> segmented log, verified lossless
+    out = run(base + ["migrate"] + at).stdout
+    expect(out, f"migrated {N_RECORDS} record(s) losslessly", "db migrate")
+    if not (artifacts / "trials").is_dir():
+        fail("migrate left no trials/ log directory")
+    if (artifacts / "database.json").exists():
+        fail("migrate must retire database.json")
+    if not (artifacts / "database.json.migrated").exists():
+        fail("migrate must keep the legacy file as database.json.migrated")
+
+    # 6. the store now opens on the log backend with the same contents
+    out = run(base + ["status"] + at).stdout
+    expect(out, "backend: log", "post-migration status")
+    expect(out, f"records: {N_RECORDS}", "post-migration status")
+    expect(out, "segments: 1", "post-migration status")
+    csv_after = run(base + ["export"] + at).stdout
+    if csv_after != csv_before:
+        fail(
+            "export diverged across migration:\n"
+            f"--- before ---\n{csv_before}--- after ---\n{csv_after}"
+        )
+
+    # 7. re-running migrate must refuse (no legacy file left)
+    run(base + ["migrate"] + at, expect_ok=False)
+
+    print(f"check_db_cli: OK ({N_RECORDS} records: json -> log, exports identical)")
+
+
+if __name__ == "__main__":
+    main()
