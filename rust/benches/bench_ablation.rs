@@ -114,10 +114,10 @@ fn space_ablation(seeds: &[u64], eps: f64) -> Result<()> {
         // oracle (the content only matters to xgb_t)
         let transfer: Vec<TransferRecord> = (0..space.size())
             .map(|i| {
-                Ok(TransferRecord {
-                    features: coordinator::features_for(&model, space.as_ref(), i)?,
-                    accuracy: oracle(i)? as f32,
-                })
+                Ok(TransferRecord::full(
+                    coordinator::features_for(&model, space.as_ref(), i)?,
+                    oracle(i)? as f32,
+                ))
             })
             .collect::<Result<_>>()?;
         print!("{:>32} | {:>4} |", space.tag(), space.size());

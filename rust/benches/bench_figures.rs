@@ -5,6 +5,7 @@
 //! cargo bench --offline --bench bench_figures           # all figures
 //! cargo bench --offline --bench bench_figures -- fig5   # one figure
 //! cargo bench --offline --bench bench_figures -- pareto # layer-wise series
+//! cargo bench --offline --bench bench_figures -- racing # multi-fidelity racing
 //! ```
 //!
 //! Output: stdout + CSVs under results/ (one series per figure).
@@ -118,11 +119,43 @@ fn print_objective_pareto(rows: &[exp::ObjectiveParetoRow]) {
     }
 }
 
+fn print_racing(rows: &[exp::RacingRow]) {
+    println!(
+        "{:>8} | {:>10} | {:>16} | {:>16} | {:>9} | cost (full evals)",
+        "stage", "algo", "exhaustive best", "racing best", "recovered"
+    );
+    for r in rows {
+        println!(
+            "{:>8} | {:>10} | {:>6} @ {:>7.4} | {:>6} @ {:>7.4} | {:>9} | \
+             {:.2} vs {:.0} ({:.1}%)",
+            r.stage,
+            r.algo,
+            r.exhaustive_best,
+            r.exhaustive_score,
+            r.racing_best,
+            r.racing_score,
+            if r.recovered { "yes" } else { "NO" },
+            r.racing_cost,
+            r.exhaustive_cost,
+            r.cost_fraction * 100.0,
+        );
+    }
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let want = |t: &str| {
         args.iter().all(|a| a.starts_with("--")) || args.iter().any(|a| a == t)
     };
+
+    if want("racing") {
+        println!(
+            "== Multi-fidelity racing: successive halving vs exhaustive \
+             (synthetic, no artifacts) =="
+        );
+        print_racing(&exp::racing_synthetic()?);
+        println!();
+    }
 
     if want("pareto") {
         println!("== Layer-wise Pareto: synthetic fragile model (no artifacts) ==");
@@ -237,7 +270,7 @@ fn main() -> Result<()> {
                 print!(" {m:>6}");
             }
             println!("   (mean trials to sweep-best, {} seeds)", seeds.len());
-            for algo in quantune::coordinator::ALGORITHMS {
+            for algo in quantune::coordinator::PROPOSERS {
                 print!("{algo:>8} |");
                 for m in &models {
                     match results.iter().find(|r| &r.model == m && r.algo == algo) {

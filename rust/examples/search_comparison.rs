@@ -10,7 +10,7 @@
 
 use anyhow::{Context, Result};
 
-use quantune::coordinator::{OracleEvaluator, Quantune, ALGORITHMS, GENERAL_SPACE_TAG};
+use quantune::coordinator::{OracleEvaluator, Quantune, GENERAL_SPACE_TAG, PROPOSERS};
 use quantune::quant::{general_space, QuantConfig};
 use quantune::util::stats::mean;
 use quantune::zoo;
@@ -43,7 +43,7 @@ fn main() -> Result<()> {
     let seeds: Vec<u64> = (0..5).collect();
     println!("{:>8} | {:>14} | {:>10} | convergence (best top1 after 1/4/16/48 trials)", "algo", "trials-to-best", "speedup");
     let mut random_mean = None;
-    for algo in ALGORITHMS {
+    for algo in PROPOSERS {
         if algo == "xgb_t" && !transfer_ready {
             println!("{algo:>8} | (needs other models' sweeps in the database)");
             continue;

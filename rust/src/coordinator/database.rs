@@ -56,6 +56,10 @@ pub struct Record {
     /// Serialized quantized model bytes (Table 5 accounting); `None`
     /// for legacy records.
     pub size_bytes: Option<f64>,
+    /// Fraction of the evaluation set the accuracy was measured on
+    /// (multi-fidelity racing). `None` means full fidelity -- the
+    /// legacy shape and the common non-racing case.
+    pub fidelity: Option<f64>,
 }
 
 impl Record {
@@ -76,7 +80,15 @@ impl Record {
             latency_ms: None,
             size_bytes: None,
             device: None,
+            fidelity: None,
         }
+    }
+
+    /// Was the accuracy measured on the full evaluation set? (Partial
+    /// racing estimates are excluded from best-config and
+    /// accuracy-table queries.)
+    pub fn is_full_fidelity(&self) -> bool {
+        self.fidelity.is_none_or(|f| f >= 1.0)
     }
 
     /// The record as a JSON object -- the schema shared by the legacy
@@ -107,13 +119,17 @@ impl Record {
         if let Some(d) = &self.device {
             fields.push(("device", Json::str(d.clone())));
         }
+        if let Some(f) = self.fidelity.filter(|f| f.is_finite()) {
+            fields.push(("fidelity", Json::num(f)));
+        }
         Json::obj(fields)
     }
 
     /// Parse one record object (the inverse of [`Record::to_json`]).
     /// Tolerant of legacy shapes: a missing space tag loads as the
     /// general space, a null accuracy loads as NaN, and the
-    /// latency/size/device fields are optional.
+    /// latency/size/device/fidelity fields are optional (a record
+    /// without a fidelity field loads as a full-fidelity measurement).
     pub fn from_json(v: &Json) -> Result<Record> {
         let default_space = Json::Str(GENERAL_SPACE_TAG.to_string());
         let opt = |key: &str| -> Option<f64> { v.get(key).ok().and_then(|x| x.as_f64().ok()) };
@@ -129,6 +145,7 @@ impl Record {
             latency_ms: opt("latency_ms"),
             size_bytes: opt("size_bytes"),
             device: v.get("device").ok().and_then(|x| x.as_str().ok()).map(str::to_string),
+            fidelity: opt("fidelity"),
         })
     }
 }
@@ -351,6 +368,44 @@ mod tests {
         assert_eq!(db.records()[2].latency_ms, None);
         assert_eq!(db.records()[2].size_bytes, None);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fidelity_roundtrips_and_legacy_records_default_to_full() {
+        let dir = std::env::temp_dir().join("quantune_db_fidelity_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("db.json");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut db = Database::open(&path).unwrap();
+            db.add(Record { fidelity: Some(0.25), ..rec("mn", 1, 0.6) }).unwrap();
+            db.add(Record { fidelity: Some(1.0), ..rec("mn", 2, 0.7) }).unwrap();
+            db.add(rec("mn", 3, 0.8)).unwrap(); // legacy shape: no field
+            db.save().unwrap();
+        }
+        let db = Database::open(&path).unwrap();
+        assert_eq!(db.records()[0].fidelity, Some(0.25));
+        assert!(!db.records()[0].is_full_fidelity());
+        assert_eq!(db.records()[1].fidelity, Some(1.0));
+        assert!(db.records()[1].is_full_fidelity());
+        assert_eq!(db.records()[2].fidelity, None, "missing field loads as None");
+        assert!(db.records()[2].is_full_fidelity(), "None means full fidelity");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn partial_fidelity_records_do_not_enter_tables_or_best() {
+        // a low-fidelity racing estimate is an approximation; only
+        // full-fidelity measurements may win best_for or fill the
+        // accuracy table a sweep-completeness check reads
+        let mut db = Database::in_memory();
+        db.add(Record { fidelity: Some(0.25), ..rec("mn", 0, 0.99) }).unwrap();
+        db.add(rec("mn", 1, 0.7)).unwrap();
+        let t = db.accuracy_table("mn", GENERAL_SPACE_TAG, 2);
+        assert!(t[0].is_nan(), "partial record must not fill the table");
+        assert_eq!(t[1], 0.7);
+        assert_eq!(db.best_for("mn", GENERAL_SPACE_TAG), Some((1, 0.7)));
+        assert!(!db.has_full_sweep("mn", GENERAL_SPACE_TAG, 2));
     }
 
     #[test]

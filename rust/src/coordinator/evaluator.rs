@@ -24,6 +24,14 @@
 //! accuracy is measured, predicted latency and model bytes come from the
 //! static per-config [`CostModel`](super::objective::CostModel), and the
 //! weighted scalarization is what the search maximizes.
+//!
+//! Multi-fidelity racing: both traits carry a provided
+//! `measure_fidelity*` entry point taking a [`Fidelity`] fraction of
+//! the evaluation set. The default ignores the fraction and measures at
+//! full fidelity (correct for [`OracleEvaluator`] table lookups, which
+//! are free anyway); [`InterpEvaluator`] overrides it to score the
+//! config on a nested, label-stratified prefix of the eval batches
+//! (see `data::stratified_order`), memoized per (config, prefix).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -38,6 +46,7 @@ use crate::ir::Tensor;
 use crate::metrics::{DispatchCounters, DispatchStats};
 use crate::quant::{general_space, CalibCount, ConfigSpace, QuantPlan, SpaceRef};
 use crate::runtime::{tensor_to_literal, Runtime};
+use crate::search::Fidelity;
 use crate::util::pool::Pool;
 use crate::util::Timer;
 use crate::zoo::ZooModel;
@@ -50,6 +59,14 @@ pub trait Evaluator {
     fn measure(&mut self, config: usize) -> Result<f64>;
     /// Mean wall-clock seconds of a non-memoized measurement.
     fn mean_measure_secs(&self) -> f64;
+    /// Measure Top-1 on a `fidelity` fraction of the evaluation set
+    /// (multi-fidelity racing). Fidelity-oblivious evaluators keep this
+    /// default, which measures the full set whatever the fraction --
+    /// still correct, just never cheaper.
+    fn measure_fidelity(&mut self, config: usize, fidelity: Fidelity) -> Result<f64> {
+        let _ = fidelity;
+        self.measure(config)
+    }
 }
 
 /// Thread-safe measurement: evaluators whose `measure` may be called
@@ -59,6 +76,17 @@ pub trait Evaluator {
 pub trait SharedEvaluator: Sync {
     /// Measure (or return the memoized) Top-1 for a config index.
     fn measure_shared(&self, config: usize) -> Result<f64>;
+    /// Measure Top-1 on a `fidelity` fraction of the evaluation set
+    /// (multi-fidelity racing; see [`Evaluator::measure_fidelity`] for
+    /// the default's contract).
+    fn measure_fidelity_shared(
+        &self,
+        config: usize,
+        fidelity: Fidelity,
+    ) -> Result<f64> {
+        let _ = fidelity;
+        self.measure_shared(config)
+    }
 }
 
 /// Objective-aware measurement: Top-1 accuracy comes from the wrapped
@@ -97,6 +125,18 @@ impl ObjectiveEvaluator<'_> {
         &mut self,
         config: usize,
     ) -> Result<(f64, crate::search::Components)> {
+        self.measure_scored_fidelity(config, Fidelity::full())
+    }
+
+    /// [`ObjectiveEvaluator::measure_scored`] at a racing fidelity: the
+    /// budget gate fires first exactly as at full fidelity (static
+    /// costs don't depend on how much of the eval set is scored), then
+    /// accuracy is measured on the `fidelity` fraction.
+    pub fn measure_scored_fidelity(
+        &mut self,
+        config: usize,
+        fidelity: Fidelity,
+    ) -> Result<(f64, crate::search::Components)> {
         let cost = self.cost.cost(config)?;
         if !self.budget.admits(cost) {
             return Ok((
@@ -108,7 +148,7 @@ impl ObjectiveEvaluator<'_> {
                 },
             ));
         }
-        let accuracy = self.inner.measure(config)?;
+        let accuracy = self.inner.measure_fidelity(config, fidelity)?;
         let score = self.weights.score(accuracy, cost, &self.cost.refs);
         let components = crate::search::Components {
             accuracy,
@@ -327,6 +367,9 @@ pub struct InterpEvaluator<'a> {
     calib: CalibStore,
     wcache: WeightCache,
     memo: Mutex<HashMap<usize, f64>>,
+    // racing memo: (config, eval batches scored) -> Top-1 estimate, so
+    // re-racing a config at the same rung is free like a full measure
+    partial_memo: Mutex<HashMap<(usize, usize), f64>>,
     measure_times: Mutex<Vec<f64>>,
     workers: Pool,
     counters: DispatchCounters,
@@ -348,6 +391,7 @@ impl<'a> InterpEvaluator<'a> {
             calib: CalibStore::new(seed),
             wcache: WeightCache::new(),
             memo: Mutex::new(HashMap::new()),
+            partial_memo: Mutex::new(HashMap::new()),
             measure_times: Mutex::new(Vec::new()),
             workers: Pool::auto(),
             counters: DispatchCounters::new(),
@@ -385,15 +429,13 @@ impl<'a> InterpEvaluator<'a> {
         s.prepack_builds = builds;
         s
     }
-}
 
-impl SharedEvaluator for InterpEvaluator<'_> {
-    fn measure_shared(&self, config: usize) -> Result<f64> {
-        if let Some(&a) = self.memo.lock().unwrap().get(&config) {
-            return Ok(a);
-        }
+    /// Top-1 of `config` over exactly the eval-image chunks given: the
+    /// shared measurement core behind full- and partial-fidelity
+    /// scoring. Per-chunk hit counts fan out across the pool and reduce
+    /// in input order, so the result is identical at any thread count.
+    fn top1_on(&self, config: usize, chunks: &[&[usize]]) -> Result<f64> {
         let plan = self.space.plan(config)?;
-        let t = Timer::start();
         let cache = self.calib.get(
             self.model,
             self.calib_pool,
@@ -420,8 +462,6 @@ impl SharedEvaluator for InterpEvaluator<'_> {
         } else {
             interp
         };
-        let idx_all: Vec<usize> = (0..self.eval.n).collect();
-        let chunks: Vec<&[usize]> = idx_all.chunks(64).collect();
         // per-batch hit counts fan out, then reduce in input order: the
         // integer sum is identical at any thread count. When this
         // measurement itself runs on a pool worker (parallel sweep), the
@@ -435,7 +475,7 @@ impl SharedEvaluator for InterpEvaluator<'_> {
         // high-water mark and reuses it across every batch it steals --
         // steady-state forwards then allocate nothing but the logits
         let hits_per = workers.map_init(
-            &chunks,
+            chunks,
             || InterpScratch::for_graph(&self.model.graph, 64),
             |scratch, chunk| -> Result<usize> {
                 let x = self.eval.batch(chunk);
@@ -449,9 +489,45 @@ impl SharedEvaluator for InterpEvaluator<'_> {
         for h in hits_per {
             hits += h?;
         }
-        let acc = hits as f64 / self.eval.n.max(1) as f64;
+        let images: usize = chunks.iter().map(|c| c.len()).sum();
+        Ok(hits as f64 / images.max(1) as f64)
+    }
+}
+
+impl SharedEvaluator for InterpEvaluator<'_> {
+    fn measure_shared(&self, config: usize) -> Result<f64> {
+        if let Some(&a) = self.memo.lock().unwrap().get(&config) {
+            return Ok(a);
+        }
+        let t = Timer::start();
+        let idx_all: Vec<usize> = (0..self.eval.n).collect();
+        let chunks: Vec<&[usize]> = idx_all.chunks(64).collect();
+        let acc = self.top1_on(config, &chunks)?;
         self.measure_times.lock().unwrap().push(t.secs());
         self.memo.lock().unwrap().insert(config, acc);
+        Ok(acc)
+    }
+
+    fn measure_fidelity_shared(&self, config: usize, fidelity: Fidelity) -> Result<f64> {
+        // full fidelity takes the plain path (same memo, same chunk
+        // order): racing with fidelity_min = 1 is bit-identical to the
+        // unraced evaluator
+        if fidelity.is_full() {
+            return self.measure_shared(config);
+        }
+        let batches = self.eval.stratified_batches(64);
+        let take = fidelity.batches_of(batches.len());
+        if let Some(&a) = self.partial_memo.lock().unwrap().get(&(config, take)) {
+            return Ok(a);
+        }
+        let t = Timer::start();
+        // a PREFIX of the stratified batch order: rung k's images are a
+        // subset of rung k+1's, and every prefix is label-balanced
+        let chunks: Vec<&[usize]> =
+            batches[..take].iter().map(|b| b.as_slice()).collect();
+        let acc = self.top1_on(config, &chunks)?;
+        self.measure_times.lock().unwrap().push(t.secs());
+        self.partial_memo.lock().unwrap().insert((config, take), acc);
         Ok(acc)
     }
 }
@@ -459,6 +535,10 @@ impl SharedEvaluator for InterpEvaluator<'_> {
 impl Evaluator for InterpEvaluator<'_> {
     fn measure(&mut self, config: usize) -> Result<f64> {
         self.measure_shared(config)
+    }
+
+    fn measure_fidelity(&mut self, config: usize, fidelity: Fidelity) -> Result<f64> {
+        self.measure_fidelity_shared(config, fidelity)
     }
 
     fn mean_measure_secs(&self) -> f64 {
@@ -522,5 +602,15 @@ mod tests {
         assert!(o.measure(2).unwrap().is_nan());
         // shared entry point agrees with the &mut one
         assert_eq!(o.measure_shared(0).unwrap(), 0.1);
+    }
+
+    #[test]
+    fn fidelity_oblivious_defaults_measure_full() {
+        // the provided trait defaults ignore the fraction: a table
+        // lookup is already free, so racing an oracle stays exact
+        let mut o = OracleEvaluator::new(vec![0.1, 0.9]);
+        let f = Fidelity::fraction(0.25).unwrap();
+        assert_eq!(o.measure_fidelity(1, f).unwrap(), 0.9);
+        assert_eq!(o.measure_fidelity_shared(0, f).unwrap(), 0.1);
     }
 }

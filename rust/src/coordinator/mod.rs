@@ -46,17 +46,24 @@ use crate::calib::{calibrate, CalibBackend};
 use crate::data::Dataset;
 use crate::quant::{BitWidth, ConfigSpace, LayerwiseSpace, QuantConfig, SpaceRef};
 use crate::search::{
-    run_search, GeneticSearch, GridSearch, ParetoSearch, ParetoTrace, RandomSearch,
-    SearchAlgo, SearchTrace, TransferRecord, XgbSearch,
+    run_racing, run_search, GeneticSearch, GridSearch, ParetoSearch, ParetoTrace,
+    RacingOptions, RandomSearch, SearchAlgo, SearchTrace, TransferRecord, XgbSearch,
 };
 use crate::util::pool::Pool;
 use crate::util::Timer;
 use crate::zoo::{self, ZooModel};
 
-/// The search algorithms by CLI name: the paper's five (Fig 5/6) plus
-/// the NSGA-II Pareto-front search (`nsga2`, see
-/// [`crate::search::ParetoSearch`] and rust/SEARCH.md).
-pub const ALGORITHMS: [&str; 6] = ["random", "grid", "genetic", "xgb", "xgb_t", "nsga2"];
+/// The proposer algorithms [`make_algorithm`] can construct: the
+/// paper's five (Fig 5/6) plus the NSGA-II Pareto-front search
+/// (`nsga2`, see [`crate::search::ParetoSearch`]). Iterate this, not
+/// [`ALGORITHMS`], when every name must build a [`SearchAlgo`].
+pub const PROPOSERS: [&str; 6] = ["random", "grid", "genetic", "xgb", "xgb_t", "nsga2"];
+
+/// Every CLI algorithm name: the [`PROPOSERS`] plus the multi-fidelity
+/// racing scheduler (`sh`, successive halving over random proposals --
+/// see [`crate::search::SuccessiveHalving`] and rust/SEARCH.md), which
+/// is a scheduler wrapping a proposer rather than a proposer itself.
+pub const ALGORITHMS: [&str; 7] = ["random", "grid", "genetic", "xgb", "xgb_t", "nsga2", "sh"];
 
 /// Feature vector of (model, config): arch blocks `e` ++ the space's
 /// config features `s` (paper §5.1; 10 + 13 = 23 dims for the general
@@ -96,6 +103,10 @@ pub fn make_algorithm(
             seed,
         )),
         "nsga2" => Box::new(ParetoSearch::new(space.clone(), seed)),
+        "sh" => anyhow::bail!(
+            "\"sh\" is a racing scheduler, not a proposer -- run it through \
+             Quantune::search_racing / run_racing (CLI: `search --algo sh`)"
+        ),
         other => anyhow::bail!("unknown algorithm {other:?} (try {ALGORITHMS:?})"),
     })
 }
@@ -235,6 +246,7 @@ impl Quantune {
                 latency_ms: Some(c.latency_ms),
                 size_bytes: Some(c.size_bytes),
                 device: Some(cost.target.clone()),
+                fidelity: None,
             })?;
             progress(i, acc);
         }
@@ -288,6 +300,7 @@ impl Quantune {
                     latency_ms: Some(c.latency_ms),
                     size_bytes: Some(c.size_bytes),
                     device: Some(cost.target.clone()),
+                    fidelity: None,
                 },
             )?;
             let n = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
@@ -392,6 +405,114 @@ impl Quantune {
     ) -> Result<SearchTrace> {
         let mut algo = self.make_algo(model, space, algo_name, seed)?;
         run_search(algo.as_mut(), budget, |cfg| evaluator.measure(cfg))
+    }
+
+    /// Multi-fidelity racing search: the same proposer algorithms,
+    /// scheduled by successive halving ([`crate::search::SuccessiveHalving`]).
+    /// Whole generations are ranked on a cheap fraction of the eval set
+    /// and only the top `1/eta` survive to the next (larger) rung, so
+    /// most configs are rejected at a fraction of the full measurement
+    /// cost. `algo_name` `"sh"` means "the plain scheduler" (random
+    /// proposals); any proposer except `nsga2` composes (`"xgb"` gives
+    /// fidelity-aware XGB racing). `budget` counts *base-rung*
+    /// proposals, so a racing run at budget B explores the same number
+    /// of configs as a plain search at budget B -- at a fraction of the
+    /// evaluation cost ([`SearchTrace::total_cost`] reports it in
+    /// full-evaluation units).
+    ///
+    /// With `opts.fidelity_min == 1.0` the ladder collapses to a single
+    /// full rung and the result is trial-for-trial bit-identical to
+    /// [`Quantune::search`].
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use quantune::coordinator::{InterpEvaluator, Quantune};
+    /// use quantune::quant::general_space;
+    /// use quantune::search::RacingOptions;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let q = Quantune::synthetic();
+    /// let model = Quantune::synthetic_model()?;
+    /// let space = general_space();
+    /// let mut ev = InterpEvaluator::new(&model, &q.calib_pool, &q.eval, q.seed)
+    ///     .with_threads(1)
+    ///     .with_space(space.clone());
+    /// let opts = RacingOptions { eta: 4, fidelity_min: 0.25 };
+    /// let trace = q.search_racing(&model, &space, "sh", &mut ev, 4, 7, opts)?;
+    /// assert_eq!(trace.algo, "sh(random)");
+    /// // the winner is always a full-fidelity measurement
+    /// assert!(trace.trials.iter().any(|t| t.config == trace.best_config && t.fidelity >= 1.0));
+    /// assert!(trace.total_cost() < trace.trials.len() as f64);
+    /// # Ok(())
+    /// # }
+    /// ```
+    #[allow(clippy::too_many_arguments)]
+    pub fn search_racing(
+        &self,
+        model: &ZooModel,
+        space: &SpaceRef,
+        algo_name: &str,
+        evaluator: &mut dyn Evaluator,
+        budget: usize,
+        seed: u64,
+        opts: RacingOptions,
+    ) -> Result<SearchTrace> {
+        let mut algo = self.make_racing_algo(model, space, algo_name, seed)?;
+        run_racing(algo.as_mut(), budget, opts, |cfg, fid| {
+            evaluator.measure_fidelity(cfg, fid)
+        })
+    }
+
+    /// Racing under the multi-objective scalarization: exactly
+    /// [`Quantune::search_objective`] with the successive-halving
+    /// scheduler in place of the flat trial loop. The epsilon-constraint
+    /// applies at every rung (over-budget configs are rejected before
+    /// any accuracy is measured and charge no evaluation cost).
+    #[allow(clippy::too_many_arguments)]
+    pub fn search_racing_objective(
+        &self,
+        model: &ZooModel,
+        space: &SpaceRef,
+        algo_name: &str,
+        evaluator: &mut dyn Evaluator,
+        budget: usize,
+        seed: u64,
+        weights: ObjectiveWeights,
+        limits: Budget,
+        opts: RacingOptions,
+    ) -> Result<SearchTrace> {
+        let cost =
+            CostModel::build(model, space.as_ref(), &self.device, crate::vta::PYNQ_CLOCK_MHZ)?;
+        Self::ensure_feasible(&cost, &limits, &space.tag())?;
+        let mut scored =
+            ObjectiveEvaluator { inner: evaluator, cost: &cost, weights, budget: limits };
+        let mut algo = self.make_racing_algo(model, space, algo_name, seed)?;
+        let trace = run_racing(algo.as_mut(), budget, opts, |cfg, fid| {
+            scored.measure_scored_fidelity(cfg, fid)
+        })?;
+        Self::ensure_measured(&trace, &limits)?;
+        Ok(trace)
+    }
+
+    /// Resolve the proposer behind a racing run: `"sh"` is the plain
+    /// scheduler (random proposals); `nsga2` is refused -- its
+    /// non-dominated ranking reads full component vectors, which
+    /// partial-fidelity estimates would corrupt.
+    fn make_racing_algo(
+        &self,
+        model: &ZooModel,
+        space: &SpaceRef,
+        algo_name: &str,
+        seed: u64,
+    ) -> Result<Box<dyn SearchAlgo>> {
+        anyhow::ensure!(
+            algo_name != "nsga2",
+            "racing composes with scalar proposers only -- nsga2 ranks Pareto \
+             fronts from full component vectors; drop --fidelity-min/--eta"
+        );
+        let proposer = if algo_name == "sh" { "random" } else { algo_name };
+        self.make_algo(model, space, proposer, seed)
     }
 
     /// Multi-objective search: same driver, but every measurement is
@@ -585,6 +706,9 @@ mod tests {
         // constructing by name needs a model only for xgb variants; use
         // the error path to validate the name check
         assert!(ALGORITHMS.contains(&"xgb_t"));
+        // ALGORITHMS is exactly the proposers plus the racing scheduler
+        assert_eq!(&ALGORITHMS[..PROPOSERS.len()], &PROPOSERS[..]);
+        assert_eq!(ALGORITHMS[PROPOSERS.len()..], ["sh"]);
     }
 
     #[test]

@@ -164,12 +164,17 @@ pub trait TrialStore: Send {
     /// Accuracy table (config index -> best-known accuracy) for one
     /// model in one space; holes are NaN. Duplicate (model, config)
     /// records keep the maximum measured accuracy, so a re-measured
-    /// config can only improve the table.
+    /// config can only improve the table. Partial-fidelity racing
+    /// records (see [`Record::is_full_fidelity`]) are estimates, not
+    /// measurements, and never fill the table.
     fn accuracy_table(&self, model: &str, space: &str, size: usize) -> Vec<f64> {
         let recs = self.records();
         let mut t = vec![f64::NAN; size];
         for &pos in self.index().positions(space, model) {
             let r = &recs[pos];
+            if !r.is_full_fidelity() {
+                continue;
+            }
             if r.config < size && (t[r.config].is_nan() || r.accuracy > t[r.config]) {
                 t[r.config] = r.accuracy;
             }
@@ -193,7 +198,10 @@ pub trait TrialStore: Send {
 
     /// Transfer-learning records in `space` from every model EXCEPT
     /// `exclude`. `features` maps (model, config index) -> feature
-    /// vector; records it returns `None` for are skipped.
+    /// vector; records it returns `None` for are skipped. Partial
+    /// racing records DO feed transfer -- they carry their fidelity
+    /// fraction so the fidelity-aware XGB feature column can learn the
+    /// estimate/measurement distinction instead of discarding the rows.
     fn transfer_records(
         &self,
         exclude: &str,
@@ -215,23 +223,27 @@ pub trait TrialStore: Send {
         for pos in positions {
             let r = &recs[pos];
             if let Some(f) = features(&r.model, r.config) {
-                out.push(TransferRecord { features: f, accuracy: r.accuracy as f32 });
+                out.push(TransferRecord {
+                    features: f,
+                    accuracy: r.accuracy as f32,
+                    fidelity: r.fidelity.unwrap_or(1.0) as f32,
+                });
             }
         }
         out
     }
 
     /// Best finite-accuracy (config, accuracy) for `model` in `space`
-    /// -- any space, not just the general one. NaN accuracies are
-    /// skipped entirely (a store of only-NaN records reports `None`);
-    /// accuracy ties keep the newest record, matching the legacy
-    /// full-scan `max_by` semantics.
+    /// -- any space, not just the general one. NaN accuracies and
+    /// partial-fidelity racing estimates are skipped entirely (a store
+    /// of only-NaN records reports `None`); accuracy ties keep the
+    /// newest record, matching the legacy full-scan `max_by` semantics.
     fn best_for(&self, model: &str, space: &str) -> Option<(usize, f64)> {
         let recs = self.records();
         let mut best: Option<(usize, f64)> = None;
         for &pos in self.index().positions(space, model) {
             let r = &recs[pos];
-            if r.accuracy.is_nan() {
+            if r.accuracy.is_nan() || !r.is_full_fidelity() {
                 continue;
             }
             let better = match best {
@@ -255,13 +267,14 @@ pub trait TrialStore: Send {
     /// Up to `k` distinct configs for (model, space) ranked by
     /// best-known accuracy (descending; the config index breaks ties)
     /// -- the warm-start query behind database-seeded GA / NSGA-II
-    /// populations.
+    /// populations. Partial-fidelity racing records are excluded like
+    /// NaNs: a seeded population must start from real measurements.
     fn best_configs(&self, model: &str, space: &str, k: usize) -> Vec<(usize, f64)> {
         let recs = self.records();
         let mut best: BTreeMap<usize, f64> = BTreeMap::new();
         for &pos in self.index().positions(space, model) {
             let r = &recs[pos];
-            if r.accuracy.is_nan() {
+            if r.accuracy.is_nan() || !r.is_full_fidelity() {
                 continue;
             }
             let e = best.entry(r.config).or_insert(f64::NEG_INFINITY);
@@ -606,8 +619,11 @@ impl TransferCursor {
         for r in store.records_since(self.watermark) {
             if r.model != self.exclude && r.space == self.space {
                 if let Some(f) = features(&r.model, r.config) {
-                    self.records
-                        .push(TransferRecord { features: f, accuracy: r.accuracy as f32 });
+                    self.records.push(TransferRecord {
+                        features: f,
+                        accuracy: r.accuracy as f32,
+                        fidelity: r.fidelity.unwrap_or(1.0) as f32,
+                    });
                     added += 1;
                 }
             }
@@ -644,6 +660,7 @@ pub fn records_equal(a: &Record, b: &Record) -> bool {
         && a.latency_ms.map(bits) == b.latency_ms.map(bits)
         && a.size_bytes.map(bits) == b.size_bytes.map(bits)
         && a.device == b.device
+        && a.fidelity.map(bits) == b.fidelity.map(bits)
 }
 
 /// Write `bytes` to `path` through a same-directory temp file + atomic
@@ -799,6 +816,29 @@ mod tests {
         assert!(records_equal(&c, &c.clone()));
         let d = Record { device: Some("x".into()), ..a.clone() };
         assert!(!records_equal(&a, &d));
+        let e = Record { fidelity: Some(0.25), ..a.clone() };
+        assert!(!records_equal(&a, &e), "fidelity is part of record identity");
+        assert!(records_equal(&e, &e.clone()));
+    }
+
+    #[test]
+    fn transfer_rows_carry_the_record_fidelity() {
+        let mut s = Store::in_memory();
+        s.add(Record { fidelity: Some(0.0625), ..rec("a", "general", 0, 0.4) }).unwrap();
+        s.add(rec("a", "general", 1, 0.6)).unwrap(); // legacy: full
+        s.add(Record { fidelity: Some(1.0), ..rec("b", "general", 2, 0.7) }).unwrap();
+        let rows = s.transfer_records("mn", "general", |_, i| Some(vec![i as f32]));
+        let fids: Vec<f32> = rows.iter().map(|r| r.fidelity).collect();
+        assert_eq!(fids, vec![0.0625, 1.0, 1.0]);
+        // the cursor agrees with the full extraction
+        let mut cursor = TransferCursor::new("mn", "general");
+        cursor.refresh(&s, |_, i| Some(vec![i as f32]));
+        let cfids: Vec<f32> = cursor.records().iter().map(|r| r.fidelity).collect();
+        assert_eq!(cfids, fids);
+        // but partial estimates never win best_for / best_configs
+        s.add(Record { fidelity: Some(0.25), ..rec("a", "general", 9, 0.99) }).unwrap();
+        assert_eq!(s.best_for("a", "general"), Some((1, 0.6)));
+        assert_eq!(s.best_configs("a", "general", 4), vec![(1, 0.6)]);
     }
 
     #[test]

@@ -88,6 +88,50 @@ impl Dataset {
     pub fn labels_for(&self, idx: &[usize]) -> Vec<u8> {
         idx.iter().map(|&i| self.labels[i]).collect()
     }
+
+    /// The evaluation set cut into `batch`-image chunks of the
+    /// deterministic stratified order (see [`stratified_order`]): any
+    /// prefix of the returned batches is label-balanced to within one
+    /// image per class, and shorter prefixes are strict subsets of
+    /// longer ones -- the nesting property multi-fidelity racing needs
+    /// so rung k's images are always contained in rung k+1's
+    /// ([`crate::search::Fidelity::batches_of`] picks the prefix
+    /// length). The final batch may be short.
+    pub fn stratified_batches(&self, batch: usize) -> Vec<Vec<usize>> {
+        let order = stratified_order(&self.labels);
+        order.chunks(batch.max(1)).map(|c| c.to_vec()).collect()
+    }
+}
+
+/// Deterministic stratified interleave of `0..labels.len()`: group the
+/// indices by label (first-appearance order of the labels, original
+/// order within a label) and emit them round-robin, one index per label
+/// per round. Every prefix of the result is label-balanced to within
+/// one image per class, and the function is pure -- no RNG -- so the
+/// order is identical across processes, thread counts, and runs.
+///
+/// A dataset whose labels already cycle `0, 1, .., k-1, 0, 1, ..` (the
+/// self-labeled synthetic evaluation sets) is a fixed point: the
+/// stratified order is the identity.
+pub fn stratified_order(labels: &[u8]) -> Vec<usize> {
+    let mut by_label: Vec<(u8, Vec<usize>)> = Vec::new();
+    for (i, &l) in labels.iter().enumerate() {
+        match by_label.iter_mut().find(|(tag, _)| *tag == l) {
+            Some((_, idx)) => idx.push(i),
+            None => by_label.push((l, vec![i])),
+        }
+    }
+    let mut out = Vec::with_capacity(labels.len());
+    let mut round = 0usize;
+    while out.len() < labels.len() {
+        for (_, idx) in &by_label {
+            if let Some(&i) = idx.get(round) {
+                out.push(i);
+            }
+        }
+        round += 1;
+    }
+    out
 }
 
 /// The paper's "Image Selector": draws the calibration subset from the
@@ -221,6 +265,43 @@ mod tests {
         assert_eq!(t.shape, vec![1, 1, 2, 3]);
         assert!((t.data[0] + 1.0).abs() < 1e-6);
         assert!((t.data[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stratified_order_interleaves_labels() {
+        // grouped labels -> round-robin interleave, stable within a label
+        let labels = [0u8, 0, 0, 1, 1, 2];
+        assert_eq!(stratified_order(&labels), vec![0, 3, 5, 1, 4, 2]);
+        // cycling labels are a fixed point (the identity order)
+        let cycling: Vec<u8> = (0..12).map(|i| (i % 4) as u8).collect();
+        assert_eq!(stratified_order(&cycling), (0..12).collect::<Vec<_>>());
+        // label-balance of every prefix: counts differ by at most one
+        // while a class still has images left
+        let labels: Vec<u8> = (0..30).map(|i| (i * 7 % 3) as u8).collect();
+        let order = stratified_order(&labels);
+        for take in 1..=30 {
+            let mut counts = [0usize; 3];
+            for &i in &order[..take] {
+                counts[labels[i] as usize] += 1;
+            }
+            let (mn, mx) =
+                (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+            assert!(mx - mn <= 1, "prefix {take}: unbalanced {counts:?}");
+        }
+        assert!(stratified_order(&[]).is_empty());
+    }
+
+    #[test]
+    fn stratified_batches_nest() {
+        let ds = synthetic_dataset(50, 1, 1, 1, 4, 3);
+        let batches = ds.stratified_batches(8);
+        assert_eq!(batches.iter().map(Vec::len).sum::<usize>(), 50);
+        assert_eq!(batches.last().unwrap().len(), 2, "final batch is short");
+        // deterministic + a permutation of the whole set
+        assert_eq!(batches, ds.stratified_batches(8));
+        let mut all: Vec<usize> = batches.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..50).collect::<Vec<_>>());
     }
 
     #[test]

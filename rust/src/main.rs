@@ -8,6 +8,7 @@
 //!                    [--space general|vta|layerwise] [--layers K] [--bits 4,8,16]
 //!                    [--objective acc|lat|size|balanced] [--device a53|i7|2080ti]
 //!                    [--budget-lat-ms X] [--budget-bytes X]
+//!                    [--fidelity-min X] [--eta N]      # multi-fidelity racing
 //! quantune quantize  [--models mn,..] [--config IDX]   # deploy report
 //! quantune vta       [--models mn,..]                  # integer-only path
 //! quantune latency   [--models mn,..] [--reps N]
@@ -56,6 +57,16 @@
 //! their accuracy is ever measured. See rust/SEARCH.md for the
 //! algorithm-by-algorithm guide.
 //!
+//! `--fidelity-min X` / `--eta N` turn any scalar search into a
+//! multi-fidelity *race* (successive halving): whole generations are
+//! ranked on a cheap stratified fraction of the eval set and only the
+//! top `1/eta` survive to the next, `eta`-times-larger fraction, so
+//! most configs are rejected at a fraction of the full measurement
+//! cost. `--algo sh` is the plain scheduler over random proposals;
+//! combined with `--algo xgb`/`xgb_t`, the cost model learns from
+//! fidelity-tagged rows. nsga2 does not race (its Pareto ranking needs
+//! full component vectors). See the racing section of rust/SEARCH.md.
+//!
 //! Everything the CLI does is also exposed as library API; the benches in
 //! rust/benches regenerate the paper's tables and figures.
 
@@ -74,6 +85,7 @@ use quantune::quant::{
     VtaConfig, MAX_LAYERWISE_BITS,
 };
 use quantune::runtime::Runtime;
+use quantune::search::RacingOptions;
 use quantune::util::{fmt_duration, Json, Pool, Timer};
 use quantune::vta::VtaModel;
 use quantune::zoo;
@@ -100,6 +112,7 @@ fn print_help() {
          objectives:     --objective acc|lat|size|balanced --device a53|i7|2080ti\n\
          constraints:    --budget-lat-ms X --budget-bytes X (reject before measuring)\n\
          frontier:       --algo nsga2 (Pareto-front search; see rust/SEARCH.md)\n\
+         racing:         --fidelity-min X --eta N (successive halving; --algo sh)\n\
          warm start:     --seed-from-db (GA/NSGA-II populations from the trial store)\n\
          trial store:    db status|table|export|migrate [--format csv|json] [--out F]\n\
          env: QUANTUNE_THREADS=N sizes the worker pool (default: all cores)\n\
@@ -267,11 +280,37 @@ fn parse_device(cli: &Cli) -> Result<DeviceProfile> {
     }
 }
 
+/// Racing knobs: `--algo sh` or an explicit `--eta` / `--fidelity-min`
+/// turns the scalar search into a successive-halving race; `None` means
+/// the plain flat trial loop.
+fn parse_racing(cli: &Cli, algo: &str) -> Result<Option<RacingOptions>> {
+    let on =
+        algo == "sh" || cli.opt("eta").is_some() || cli.opt("fidelity-min").is_some();
+    if !on {
+        return Ok(None);
+    }
+    let defaults = RacingOptions::default();
+    let opts = RacingOptions {
+        eta: cli.opt_usize("eta", defaults.eta)?,
+        fidelity_min: cli
+            .opt_budget_f64("fidelity-min")?
+            .unwrap_or(defaults.fidelity_min),
+    };
+    opts.validate()?;
+    Ok(Some(opts))
+}
+
 fn cmd_search(cli: &Cli) -> Result<()> {
     let algo = cli.opt_or("algo", "xgb_t");
     anyhow::ensure!(
         ALGORITHMS.contains(&algo.as_str()),
         "--algo must be one of {ALGORITHMS:?}"
+    );
+    let racing = parse_racing(cli, &algo)?;
+    anyhow::ensure!(
+        racing.is_none() || algo != "nsga2",
+        "nsga2 does not race (Pareto ranking needs full component vectors); \
+         drop --fidelity-min / --eta"
     );
     let weights = ObjectiveWeights::parse(&cli.opt_or("objective", "acc"))?;
     let limits = Budget {
@@ -372,6 +411,16 @@ fn cmd_search(cli: &Cli) -> Result<()> {
                 );
             }
             trace
+        } else if let Some(opts) = racing {
+            // successive-halving race over the same proposer; the
+            // objective/constraint split mirrors the flat path below
+            if weights.is_accuracy_only() && !limits.is_limited() {
+                q.search_racing(model, &space, algo, evaluator, budget, seed, opts)?
+            } else {
+                q.search_racing_objective(
+                    model, &space, algo, evaluator, budget, seed, weights, limits, opts,
+                )?
+            }
         } else if weights.is_accuracy_only() && !limits.is_limited() {
             q.search(model, &space, algo, evaluator, budget, seed)?
         } else {
@@ -407,6 +456,16 @@ fn cmd_search(cli: &Cli) -> Result<()> {
                 c.size_bytes / 1024.0,
                 space.tag(),
             ),
+        }
+        if let Some(opts) = racing {
+            println!(
+                "  racing (eta {}, fidelity-min {}): {} trial(s) across the rungs \
+                 cost {:.2} full evaluations",
+                opts.eta,
+                opts.fidelity_min,
+                trace.trials.len(),
+                trace.total_cost(),
+            );
         }
     }
     Ok(())
@@ -586,7 +645,7 @@ fn csv_row(seq: usize, r: &Record) -> String {
     let num = |x: f64| if x.is_finite() { format!("{x}") } else { String::new() };
     let opt = |x: Option<f64>| x.map(num).unwrap_or_default();
     format!(
-        "{seq},{},{},{},{},{},{},{},{}\n",
+        "{seq},{},{},{},{},{},{},{},{},{}\n",
         r.model,
         r.space,
         r.config,
@@ -595,6 +654,7 @@ fn csv_row(seq: usize, r: &Record) -> String {
         opt(r.latency_ms),
         opt(r.size_bytes),
         r.device.as_deref().unwrap_or_default(),
+        opt(r.fidelity),
     )
 }
 
@@ -604,7 +664,8 @@ fn cmd_db_export(cli: &Cli) -> Result<()> {
     let out = match format.as_str() {
         "csv" => {
             let mut s = String::from(
-                "seq,model,space,config,accuracy,measure_secs,latency_ms,size_bytes,device\n",
+                "seq,model,space,config,accuracy,measure_secs,latency_ms,size_bytes,\
+                 device,fidelity\n",
             );
             for (seq, r) in db.records().iter().enumerate() {
                 s.push_str(&csv_row(seq, r));

@@ -19,13 +19,25 @@
 //! Ranking is NaN-safe throughout: a NaN score (e.g. a database hole
 //! propagated through an oracle table) degrades to "worst" instead of
 //! panicking in a comparator (see [`crate::util::nan_min_cmp`]).
+//!
+//! Module [`racing`] layers multi-fidelity successive halving
+//! ([`SuccessiveHalving`], `--algo sh`) over any of the scalar
+//! algorithms: generations are ranked on a small evaluation-set slice
+//! and only promoted survivors pay full fidelity, with every trial
+//! recording the [`Fidelity`] it was scored at and the evaluation cost
+//! it charged.
 
 #![deny(clippy::unwrap_used)]
 
 pub mod pareto;
+pub mod racing;
 
 pub use pareto::{
     crowding_distance, dominates, non_dominated_sort, ParetoSearch, ParetoTrace,
+};
+pub use racing::{
+    promotion_count, rung_fractions, run_racing, Fidelity, RacingOptions,
+    SuccessiveHalving,
 };
 
 use crate::quant::{ConfigSpace, SpaceRef};
@@ -79,12 +91,25 @@ pub struct Trial {
     pub score: f64,
     /// Component breakdown when the measurement was multi-objective.
     pub components: Option<Components>,
+    /// Fraction of the evaluation set this trial was scored on (1.0 for
+    /// every non-racing trial; see [`racing::Fidelity`]).
+    pub fidelity: f64,
+    /// Evaluation cost charged, in full-fidelity-evaluation
+    /// equivalents: the fidelity fraction for measured trials, 0.0 for
+    /// budget-rejected (`-inf` sentinel) trials that never ran.
+    pub cost: f64,
 }
 
 impl Trial {
-    /// Accuracy-only trial (score IS the Top-1 accuracy).
+    /// Accuracy-only trial (score IS the Top-1 accuracy), measured at
+    /// full fidelity.
     pub fn of(config: usize, score: f64) -> Trial {
-        Trial { config, score, components: None }
+        Trial { config, score, components: None, fidelity: 1.0, cost: 1.0 }
+    }
+
+    /// Full-fidelity trial with a component breakdown.
+    pub fn scored(config: usize, score: f64, components: Components) -> Trial {
+        Trial { config, score, components: Some(components), fidelity: 1.0, cost: 1.0 }
     }
 
     /// The measured Top-1 accuracy: the component breakdown's when one
@@ -359,6 +384,28 @@ pub struct TransferRecord {
     pub features: Vec<f32>,
     /// Its measured accuracy.
     pub accuracy: f32,
+    /// Fraction of the evaluation set the accuracy was measured on
+    /// (1.0 for legacy / non-racing records). Fed to the surrogate as
+    /// an extra feature column so low-fidelity racing estimates still
+    /// train it without being mistaken for full measurements.
+    pub fidelity: f32,
+}
+
+impl TransferRecord {
+    /// A full-fidelity transfer record (the common, non-racing case).
+    pub fn full(features: Vec<f32>, accuracy: f32) -> TransferRecord {
+        TransferRecord { features, accuracy, fidelity: 1.0 }
+    }
+}
+
+/// `features` with the fidelity column appended -- the row layout the
+/// XGB surrogate trains on and predicts with (predictions always ask
+/// at full fidelity).
+fn with_fidelity(features: &[f32], fidelity: f32) -> Vec<f32> {
+    let mut row = Vec::with_capacity(features.len() + 1);
+    row.extend_from_slice(features);
+    row.push(fidelity);
+    row
 }
 
 /// Cost-model search: refit XGBoost on everything measured so far (plus
@@ -438,14 +485,15 @@ impl XgbSearch {
     pub fn sync_rows(&mut self, history: &[Trial]) {
         for r in &self.transfer[self.transfer_seen..] {
             if r.accuracy.is_finite() {
-                self.xs.push(r.features.clone());
+                self.xs.push(with_fidelity(&r.features, r.fidelity));
                 self.ys.push(r.accuracy);
             }
         }
         self.transfer_seen = self.transfer.len();
         for t in &history[self.history_seen.min(history.len())..] {
             if t.score.is_finite() {
-                self.xs.push(self.space_features[t.config].clone());
+                self.xs
+                    .push(with_fidelity(&self.space_features[t.config], t.fidelity as f32));
                 self.ys.push(t.score as f32);
             }
         }
@@ -486,14 +534,14 @@ impl XgbSearch {
             if !r.accuracy.is_finite() {
                 continue;
             }
-            xs.push(r.features.clone());
+            xs.push(with_fidelity(&r.features, r.fidelity));
             ys.push(r.accuracy);
         }
         for t in history {
             if !t.score.is_finite() {
                 continue;
             }
-            xs.push(self.space_features[t.config].clone());
+            xs.push(with_fidelity(&self.space_features[t.config], t.fidelity as f32));
             ys.push(t.score as f32);
         }
         if xs.is_empty() {
@@ -534,9 +582,13 @@ impl SearchAlgo for XgbSearch {
                 // (§5.2.3): break prediction ties uniformly at random
                 // instead of by index, so plateaus of the young cost
                 // model spread probes across the space
+                // candidates are predicted AT full fidelity: the
+                // surrogate learned from (features, fidelity) rows, and
+                // the question asked of it is always "how good would
+                // this config be on the whole evaluation set"
                 let preds: Vec<f32> = unexplored
                     .iter()
-                    .map(|&i| model.predict(&self.space_features[i]))
+                    .map(|&i| model.predict(&with_fidelity(&self.space_features[i], 1.0)))
                     .collect();
                 let best = preds.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
                 let ties: Vec<usize> = unexplored
@@ -603,6 +655,37 @@ impl SearchTrace {
             .map(|t| t.score)
             .fold(f64::NEG_INFINITY, f64::max)
     }
+
+    /// Total evaluation cost of the run in full-fidelity-evaluation
+    /// equivalents: the sum of every trial's [`Trial::cost`]. For a
+    /// plain (non-racing) search this equals the number of measured
+    /// trials (budget-rejected `-inf` trials charge nothing); racing
+    /// traces come in well below their trial count.
+    pub fn total_cost(&self) -> f64 {
+        self.trials.iter().map(|t| t.cost).sum()
+    }
+
+    /// Evaluation cost spent up to and including the first
+    /// *full-fidelity* trial whose score is within `eps` of `target`
+    /// (the cost-weighted twin of [`SearchTrace::trials_to_reach`]).
+    /// Earlier trials' cost accrues whatever their fidelity, but a
+    /// partial-fidelity score is only an estimate and cannot satisfy
+    /// the threshold. `None` if never reached; a NaN `target` is
+    /// unreachable and NaN scores never match, exactly as in
+    /// [`SearchTrace::trials_to_reach`].
+    pub fn cost_to_reach(&self, target: f64, eps: f64) -> Option<f64> {
+        if target.is_nan() {
+            return None;
+        }
+        let mut spent = 0.0;
+        for t in &self.trials {
+            spent += t.cost;
+            if t.fidelity >= 1.0 && t.score >= target - eps {
+                return Some(spent);
+            }
+        }
+        None
+    }
 }
 
 /// Run a search algorithm for `budget` proposals, measuring via
@@ -624,7 +707,17 @@ pub fn run_search<M: Into<Measured>>(
     for _ in 0..budget {
         let Some(config) = algo.propose(&trials) else { break };
         let m: Measured = measure(config)?.into();
-        trials.push(Trial { config, score: m.score, components: m.components });
+        // full fidelity; a budget-rejected config (-inf sentinel, see
+        // coordinator::Budget) was never actually measured, so it
+        // charges no evaluation cost
+        let cost = if m.score == f64::NEG_INFINITY { 0.0 } else { 1.0 };
+        trials.push(Trial {
+            config,
+            score: m.score,
+            components: m.components,
+            fidelity: 1.0,
+            cost,
+        });
     }
     let Some(best) = trials
         .iter()
@@ -859,10 +952,7 @@ mod tests {
         };
         let feats = features(96);
         let transfer: Vec<TransferRecord> = (0..96)
-            .map(|i| TransferRecord {
-                features: feats[i].clone(),
-                accuracy: structured(i) as f32,
-            })
+            .map(|i| TransferRecord::full(feats[i].clone(), structured(i) as f32))
             .collect();
         let mut s = XgbSearch::with_transfer(feats.clone(), transfer, 1);
         let first = s.propose(&[]).unwrap();
@@ -889,6 +979,81 @@ mod tests {
         assert_eq!(trace.trials_to_reach(0.9, 0.0), None);
         assert_eq!(trace.best_after(1), 0.2);
         assert_eq!(trace.best_after(3), 0.8);
+    }
+
+    #[test]
+    fn trace_cost_accounting() {
+        // per-trial cost: full-fidelity trials charge 1.0, partial
+        // trials their fraction, budget-rejected (-inf) trials nothing
+        let partial = |config, score, fidelity| Trial {
+            config,
+            score,
+            components: None,
+            fidelity,
+            cost: fidelity,
+        };
+        let mut rejected = Trial::of(9, f64::NEG_INFINITY);
+        rejected.cost = 0.0;
+        let trace = SearchTrace {
+            algo: "sh(x)".into(),
+            trials: vec![
+                partial(0, 0.9, 0.25), // low-fidelity estimate of 0.9
+                partial(1, 0.3, 0.25),
+                rejected,
+                partial(0, 0.85, 1.0),
+            ],
+            best_score: 0.85,
+            best_config: 0,
+            best_components: None,
+        };
+        assert_eq!(trace.total_cost(), 1.5);
+        // trials_to_reach counts trials (the estimate matches first);
+        // cost_to_reach weighs by cost AND requires full fidelity
+        assert_eq!(trace.trials_to_reach(0.9, 0.0), Some(1));
+        assert_eq!(trace.cost_to_reach(0.9, 0.0), None);
+        assert_eq!(trace.cost_to_reach(0.85, 0.0), Some(1.5));
+        assert_eq!(trace.cost_to_reach(f64::NAN, 0.0), None);
+        // a plain run_search trace: cost == measured-trial count, and
+        // cost_to_reach degenerates to trials_to_reach
+        let mut s = GridSearch::new(8, 0);
+        let plain = run_search(&mut s, 8, |i| Ok(oracle(i))).unwrap();
+        assert_eq!(plain.total_cost(), 8.0);
+        assert!(plain.trials.iter().all(|t| t.fidelity == 1.0 && t.cost == 1.0));
+        assert_eq!(
+            plain.cost_to_reach(plain.best_score, 1e-9),
+            plain.trials_to_reach(plain.best_score, 1e-9).map(|n| n as f64)
+        );
+        // -inf (budget-rejected) trials charge nothing in run_search too
+        let mut s2 = GridSearch::new(8, 0);
+        let gated = run_search(&mut s2, 8, |i| {
+            Ok(if i % 2 == 0 { f64::NEG_INFINITY } else { oracle(i) })
+        })
+        .unwrap();
+        assert_eq!(gated.total_cost(), 4.0);
+    }
+
+    #[test]
+    fn xgb_rows_carry_the_fidelity_column() {
+        // transfer + history rows end with their fidelity; predictions
+        // (exercised via propose) ask at full fidelity
+        let feats = features(96);
+        let transfer = vec![
+            TransferRecord { features: feats[0].clone(), accuracy: 0.5, fidelity: 0.25 },
+            TransferRecord::full(feats[1].clone(), 0.7),
+        ];
+        let mut s = XgbSearch::with_transfer(feats.clone(), transfer, 1);
+        let mut low = Trial::of(2, 0.62);
+        low.fidelity = 0.0625;
+        low.cost = 0.0625;
+        s.sync_rows(&[low, Trial::of(3, 0.8)]);
+        let (xs, ys) = s.training_rows();
+        assert_eq!(xs.len(), 4);
+        let fid_col: Vec<f32> = xs.iter().map(|r| *r.last().unwrap()).collect();
+        assert_eq!(fid_col, vec![0.25, 1.0, 0.0625, 1.0]);
+        assert_eq!(ys, &[0.5, 0.7, 0.62, 0.8]);
+        for (row, want) in xs.iter().zip([&feats[0], &feats[1], &feats[2], &feats[3]]) {
+            assert_eq!(&row[..row.len() - 1], want.as_slice());
+        }
     }
 
     #[test]

@@ -223,15 +223,11 @@ impl ParetoTrace {
     /// ```
     /// use quantune::search::{Components, ParetoTrace, Trial};
     ///
-    /// let t = |config, acc, lat, bytes| Trial {
+    /// let t = |config, acc, lat, bytes| Trial::scored(
     ///     config,
-    ///     score: acc,
-    ///     components: Some(Components {
-    ///         accuracy: acc,
-    ///         latency_ms: lat,
-    ///         size_bytes: bytes,
-    ///     }),
-    /// };
+    ///     acc,
+    ///     Components { accuracy: acc, latency_ms: lat, size_bytes: bytes },
+    /// );
     /// // configs 0 and 1 trade accuracy against cost; 2 is dominated
     /// let trace = ParetoTrace::from_trials(
     ///     "nsga2",
@@ -591,11 +587,7 @@ mod tests {
 
     #[test]
     fn hypervolume_of_known_boxes() {
-        let t = |config, acc, lat, size| Trial {
-            config,
-            score: acc,
-            components: Some(c(acc, lat, size)),
-        };
+        let t = |config, acc, lat, size| Trial::scored(config, acc, c(acc, lat, size));
         // one point: volume is the product of its gaps to the reference
         let one = ParetoTrace::from_trials("nsga2", &[t(0, 0.5, 1.0, 10.0)]);
         let r = c(0.0, 2.0, 20.0);
@@ -625,15 +617,13 @@ mod tests {
 
     #[test]
     fn trace_tracks_front_growth_and_unique_evaluations() {
-        let t = |config, acc, lat, size| Trial {
-            config,
-            score: acc,
-            components: Some(c(acc, lat, size)),
-        };
+        let t = |config, acc, lat, size| Trial::scored(config, acc, c(acc, lat, size));
         let rejected = |config| Trial {
             config,
             score: f64::NEG_INFINITY,
             components: Some(c(f64::NAN, 5.0, 50.0)),
+            fidelity: 1.0,
+            cost: 0.0,
         };
         let trials = [
             t(3, 0.5, 1.0, 10.0),
@@ -653,11 +643,7 @@ mod tests {
 
     #[test]
     fn re_measured_config_rebuilds_the_front() {
-        let t = |config, acc, lat, size| Trial {
-            config,
-            score: acc,
-            components: Some(c(acc, lat, size)),
-        };
+        let t = |config, acc, lat, size| Trial::scored(config, acc, c(acc, lat, size));
         // config 2 first dominates config 0; its re-measure drops below,
         // which must resurrect config 0 onto the front
         let trials = [

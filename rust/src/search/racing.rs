@@ -1,0 +1,468 @@
+//! Multi-fidelity racing: successive halving over any search space.
+//!
+//! Every algorithm in this crate historically paid full evaluation-set
+//! fidelity for every candidate. Racing (successive halving, Li et al.;
+//! see rust/SEARCH.md "Racing") spends a [`Fidelity`] *fraction* of the
+//! evaluation set on each trial instead: a generation of candidates is
+//! scored on the smallest rung, the top `1/eta` fraction is promoted to
+//! an `eta`-times-larger slice, and only the survivors of the last
+//! promotion pay for a full-fidelity measurement.
+//!
+//! Rung math: with `eta` and `fidelity_min`, the rung fractions are
+//! `[eta^-k, ..., eta^-1, 1]` where `k` is the largest power with
+//! `eta^-k >= fidelity_min` (so `fidelity_min = 1` degenerates to the
+//! single full-fidelity rung and racing reproduces [`run_search`]
+//! trial-for-trial). A generation holds `eta^k` candidates, so each
+//! rung after a promotion races `1/eta` of the previous rung's
+//! survivors at `eta`x the fidelity -- every rung of a full generation
+//! costs exactly one full-fidelity-evaluation equivalent, and a whole
+//! generation costs `k + 1` equivalents instead of `eta^k`.
+//!
+//! Low-fidelity scores are *estimates*: they enter the trial history
+//! (so an XGB proposer can learn from them -- see the fidelity feature
+//! column on [`super::XgbSearch`]) and they accrue evaluation cost, but
+//! the best config reported by a racing trace comes from full-fidelity
+//! measurements only.
+//!
+//! [`run_search`]: super::run_search
+
+use super::{Measured, SearchAlgo, SearchTrace, Trial};
+use crate::util::nan_min_cmp;
+
+/// Fraction of the evaluation set a trial is scored on, in `(0, 1]`.
+///
+/// A fidelity maps to a *prefix* of the evaluation set's deterministic
+/// stratified batch order (see `data::Dataset::stratified_batches`), so
+/// rung k's images are a subset of rung k+1's and scores are comparable
+/// across promotions.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Fidelity(f64);
+
+impl Fidelity {
+    /// Full fidelity: the whole evaluation set.
+    pub fn full() -> Fidelity {
+        Fidelity(1.0)
+    }
+
+    /// A fractional fidelity. Errors unless `f` is finite and in
+    /// `(0, 1]`.
+    pub fn fraction(f: f64) -> anyhow::Result<Fidelity> {
+        anyhow::ensure!(
+            f.is_finite() && f > 0.0 && f <= 1.0,
+            "fidelity fraction must be in (0, 1], got {f}"
+        );
+        Ok(Fidelity(f))
+    }
+
+    /// The fraction itself.
+    pub fn value(self) -> f64 {
+        self.0
+    }
+
+    /// Whether this is the full evaluation set.
+    pub fn is_full(self) -> bool {
+        self.0 >= 1.0
+    }
+
+    /// How many of `total` evaluation batches this fidelity covers:
+    /// `ceil(fraction * total)`, at least 1 so a rung is never empty
+    /// (and 0 only for an empty evaluation set).
+    pub fn batches_of(self, total: usize) -> usize {
+        if total == 0 {
+            return 0;
+        }
+        if self.is_full() {
+            return total;
+        }
+        (((self.0 * total as f64).ceil()) as usize).clamp(1, total)
+    }
+}
+
+/// The ascending rung fractions `[eta^-k, ..., eta^-1, 1]` for the
+/// largest `k` with `eta^-k >= fidelity_min`. Always ends at 1.0 and
+/// never goes below `fidelity_min`; `fidelity_min = 1` yields `[1.0]`.
+pub fn rung_fractions(fidelity_min: f64, eta: usize) -> Vec<f64> {
+    let mut out = vec![1.0];
+    let mut v = 1.0;
+    while v / eta as f64 >= fidelity_min {
+        v /= eta as f64;
+        out.push(v);
+    }
+    out.reverse();
+    out
+}
+
+/// How many of `n` rung members are promoted to the next rung: the top
+/// `ceil(n / eta)`, so at least one candidate always survives.
+pub fn promotion_count(n: usize, eta: usize) -> usize {
+    n.div_ceil(eta.max(1))
+}
+
+/// Knobs of the successive-halving scheduler (`--eta` /
+/// `--fidelity-min` on the CLI).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RacingOptions {
+    /// Promotion factor: each rung keeps the top `1/eta` fraction and
+    /// multiplies the fidelity by `eta`. Must be >= 2.
+    pub eta: usize,
+    /// Smallest rung fraction (the base-rung fidelity is the largest
+    /// `eta^-k >= fidelity_min`). `1.0` disables racing: a single
+    /// full-fidelity rung, trial-for-trial identical to
+    /// [`super::run_search`].
+    pub fidelity_min: f64,
+}
+
+impl Default for RacingOptions {
+    fn default() -> Self {
+        RacingOptions { eta: 4, fidelity_min: 1.0 / 16.0 }
+    }
+}
+
+impl RacingOptions {
+    /// Validate the knobs (finite `fidelity_min` in `(0, 1]`, `eta >= 2`).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.eta >= 2, "--eta must be >= 2, got {}", self.eta);
+        anyhow::ensure!(
+            self.fidelity_min.is_finite()
+                && self.fidelity_min > 0.0
+                && self.fidelity_min <= 1.0,
+            "--fidelity-min must be in (0, 1], got {}",
+            self.fidelity_min
+        );
+        Ok(())
+    }
+}
+
+/// The successive-halving rung scheduler: races generations of
+/// candidates from any [`SearchAlgo`] through ascending-fidelity rungs,
+/// promoting the top `1/eta` fraction at each step.
+pub struct SuccessiveHalving {
+    opts: RacingOptions,
+    rungs: Vec<Fidelity>,
+}
+
+impl SuccessiveHalving {
+    /// Build the scheduler, validating `opts` and deriving the rung
+    /// ladder.
+    pub fn new(opts: RacingOptions) -> anyhow::Result<SuccessiveHalving> {
+        opts.validate()?;
+        let rungs = rung_fractions(opts.fidelity_min, opts.eta)
+            .into_iter()
+            .map(Fidelity::fraction)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(SuccessiveHalving { opts, rungs })
+    }
+
+    /// The ascending rung fidelities (always ends at full).
+    pub fn rungs(&self) -> &[Fidelity] {
+        &self.rungs
+    }
+
+    /// Candidates per generation: `eta^(rungs - 1)`, sized so each
+    /// promotion divides the cohort by exactly `eta` down to one
+    /// full-fidelity survivor.
+    pub fn generation_size(&self) -> usize {
+        self.opts
+            .eta
+            .checked_pow((self.rungs.len() - 1) as u32)
+            .unwrap_or(usize::MAX)
+    }
+
+    /// Race `algo` for up to `budget` *base-rung* proposals. `measure`
+    /// is called as `(config, fidelity)` and may return anything
+    /// [`super::run_search`] accepts. Every measurement (all rungs)
+    /// lands in the trace with its fidelity and cost, so the history
+    /// the proposer sees includes the low-fidelity estimates; the
+    /// reported best comes from full-fidelity trials only.
+    ///
+    /// Budget accounting: `budget` bounds how many candidates the
+    /// proposer contributes (the base rung); promoted re-measurements
+    /// are the scheduler's own and are charged through [`Trial::cost`]
+    /// instead. With `fidelity_min = 1` this is trial-for-trial
+    /// identical to `run_search(algo, budget, ..)`.
+    ///
+    /// Errors when no full-fidelity trial ran at all (zero budget, or
+    /// an algorithm that declines its first proposal).
+    pub fn run<M: Into<Measured>>(
+        &self,
+        algo: &mut dyn SearchAlgo,
+        budget: usize,
+        mut measure: impl FnMut(usize, Fidelity) -> anyhow::Result<M>,
+    ) -> anyhow::Result<SearchTrace> {
+        let gen_size = self.generation_size();
+        let mut trials: Vec<Trial> = Vec::new();
+        let mut proposed = 0usize;
+        let mut exhausted = false;
+        while proposed < budget && !exhausted {
+            // one generation of candidates from the proposer (short at
+            // the budget tail or when the algorithm runs dry)
+            let want = gen_size.min(budget - proposed);
+            let mut cohort: Vec<usize> = Vec::with_capacity(want);
+            // the whole cohort is proposed before anything is measured,
+            // so a proposer that re-ranks only on new scores (the XGB
+            // surrogate's argmax) may keep repeating itself: skip
+            // in-cohort duplicates, bounded so a degenerate proposer
+            // still yields a (short) generation instead of stalling
+            let mut attempts = 0usize;
+            while cohort.len() < want && attempts < 4 * want + 16 {
+                attempts += 1;
+                match algo.propose(&trials) {
+                    Some(c) if cohort.contains(&c) => continue,
+                    Some(c) => cohort.push(c),
+                    None => {
+                        exhausted = true;
+                        break;
+                    }
+                }
+            }
+            if cohort.is_empty() {
+                break;
+            }
+            proposed += cohort.len();
+            // race the cohort up the rung ladder
+            for (r, &fid) in self.rungs.iter().enumerate() {
+                let mut scored: Vec<(usize, f64)> = Vec::with_capacity(cohort.len());
+                for &config in &cohort {
+                    let m: Measured = measure(config, fid)?.into();
+                    // a budget-rejected config (-inf sentinel, see
+                    // coordinator::Budget) was never actually measured,
+                    // so it charges nothing
+                    let cost =
+                        if m.score == f64::NEG_INFINITY { 0.0 } else { fid.value() };
+                    trials.push(Trial {
+                        config,
+                        score: m.score,
+                        components: m.components,
+                        fidelity: fid.value(),
+                        cost,
+                    });
+                    scored.push((config, m.score));
+                }
+                if r + 1 == self.rungs.len() {
+                    break;
+                }
+                // promote the top 1/eta (NaN ranks worst; ties keep the
+                // earlier rung position, so promotion is deterministic)
+                let keep = promotion_count(scored.len(), self.opts.eta);
+                let mut order: Vec<usize> = (0..scored.len()).collect();
+                order.sort_by(|&a, &b| {
+                    nan_min_cmp(&scored[b].1, &scored[a].1).then(a.cmp(&b))
+                });
+                cohort = order[..keep].iter().map(|&i| scored[i].0).collect();
+            }
+        }
+        let Some(best) = trials
+            .iter()
+            .copied()
+            .filter(|t| t.fidelity >= 1.0)
+            .max_by(|a, b| nan_min_cmp(&a.score, &b.score))
+        else {
+            anyhow::bail!(
+                "racing over {:?} ran no full-fidelity trials (budget {budget}); \
+                 raise the budget or check why the algorithm declined to propose",
+                algo.name()
+            );
+        };
+        Ok(SearchTrace {
+            algo: format!("sh({})", algo.name()),
+            trials,
+            best_score: best.score,
+            best_config: best.config,
+            best_components: best.components,
+        })
+    }
+}
+
+/// Convenience wrapper: build a [`SuccessiveHalving`] from `opts` and
+/// race `algo` for `budget` base-rung proposals.
+pub fn run_racing<M: Into<Measured>>(
+    algo: &mut dyn SearchAlgo,
+    budget: usize,
+    opts: RacingOptions,
+    measure: impl FnMut(usize, Fidelity) -> anyhow::Result<M>,
+) -> anyhow::Result<SearchTrace> {
+    SuccessiveHalving::new(opts)?.run(algo, budget, measure)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::super::{run_search, GridSearch, RandomSearch};
+    use super::*;
+
+    /// Synthetic oracle whose optimum orders the same at every rung:
+    /// config 7 scores 1.0 everywhere, everything else strictly less.
+    fn oracle(i: usize, fid: Fidelity) -> f64 {
+        if i == 7 {
+            1.0
+        } else {
+            // a touch of fidelity-dependent noise: low rungs are noisy
+            // estimates, but never enough to outrank the optimum
+            0.5 + 0.3 * (i % 5) as f64 / 5.0 + 0.01 * fid.value()
+        }
+    }
+
+    #[test]
+    fn rung_fractions_ladder() {
+        assert_eq!(rung_fractions(1.0 / 16.0, 4), vec![1.0 / 16.0, 0.25, 1.0]);
+        assert_eq!(rung_fractions(0.25, 2), vec![0.25, 0.5, 1.0]);
+        assert_eq!(rung_fractions(1.0, 4), vec![1.0]);
+        assert_eq!(rung_fractions(0.3, 4), vec![1.0]); // 1/4 < 0.3
+    }
+
+    #[test]
+    fn promotion_counts() {
+        assert_eq!(promotion_count(16, 4), 4);
+        assert_eq!(promotion_count(4, 4), 1);
+        assert_eq!(promotion_count(5, 4), 2);
+        assert_eq!(promotion_count(1, 4), 1, "a lone candidate survives");
+    }
+
+    #[test]
+    fn fidelity_batch_counts() {
+        let f = Fidelity::fraction(1.0 / 16.0).unwrap();
+        assert_eq!(f.batches_of(16), 1);
+        assert_eq!(f.batches_of(4), 1, "rounds up to a whole batch");
+        assert_eq!(f.batches_of(0), 0, "empty eval set stays empty");
+        assert_eq!(Fidelity::full().batches_of(5), 5);
+        assert!(Fidelity::fraction(0.0).is_err());
+        assert!(Fidelity::fraction(1.1).is_err());
+        assert!(Fidelity::fraction(f64::NAN).is_err());
+    }
+
+    #[test]
+    fn invalid_options_error() {
+        assert!(SuccessiveHalving::new(RacingOptions { eta: 1, fidelity_min: 0.5 })
+            .is_err());
+        assert!(SuccessiveHalving::new(RacingOptions { eta: 4, fidelity_min: 0.0 })
+            .is_err());
+        assert!(SuccessiveHalving::new(RacingOptions { eta: 4, fidelity_min: 2.0 })
+            .is_err());
+    }
+
+    #[test]
+    fn full_fidelity_degenerates_to_run_search() {
+        // identical RNG stream on both sides => identical proposals;
+        // the traces must agree trial-for-trial
+        let budget = 20;
+        let mut a = RandomSearch::new(96, 3);
+        let plain = run_search(&mut a, budget, |i| Ok(oracle(i, Fidelity::full())))
+            .unwrap();
+        let mut b = RandomSearch::new(96, 3);
+        let opts = RacingOptions { eta: 4, fidelity_min: 1.0 };
+        let raced =
+            run_racing(&mut b, budget, opts, |i, fid| Ok(oracle(i, fid))).unwrap();
+        assert_eq!(raced.algo, "sh(random)");
+        assert_eq!(plain.trials.len(), raced.trials.len());
+        for (p, r) in plain.trials.iter().zip(&raced.trials) {
+            assert_eq!(p.config, r.config);
+            assert_eq!(p.score.to_bits(), r.score.to_bits());
+            assert_eq!(r.fidelity, 1.0);
+            assert_eq!(p.cost, r.cost);
+        }
+        assert_eq!(plain.best_config, raced.best_config);
+        assert_eq!(plain.best_score.to_bits(), raced.best_score.to_bits());
+    }
+
+    #[test]
+    fn known_best_survives_every_rung() {
+        let opts = RacingOptions { eta: 4, fidelity_min: 1.0 / 16.0 };
+        let sh = SuccessiveHalving::new(opts).unwrap();
+        assert_eq!(sh.rungs().len(), 3);
+        assert_eq!(sh.generation_size(), 16);
+        let mut algo = RandomSearch::new(96, 1);
+        let trace = sh.run(&mut algo, 96, |i, fid| Ok(oracle(i, fid))).unwrap();
+        assert_eq!(trace.best_config, 7);
+        assert_eq!(trace.best_score, 1.0);
+        // config 7 was measured once at every rung fraction
+        for &fid in sh.rungs() {
+            assert!(
+                trace
+                    .trials
+                    .iter()
+                    .any(|t| t.config == 7 && t.fidelity == fid.value()),
+                "optimum missing from rung {}",
+                fid.value()
+            );
+        }
+        // racing cost: 6 generations of 16 -> 96/16 + 24/4 + 6 = 18
+        // full-fidelity equivalents vs 96 for the exhaustive sweep
+        assert!((trace.total_cost() - 18.0).abs() < 1e-9, "{}", trace.total_cost());
+        assert!(trace.total_cost() < 0.4 * 96.0);
+    }
+
+    #[test]
+    fn budget_bounds_base_rung_proposals() {
+        let opts = RacingOptions { eta: 2, fidelity_min: 0.25 };
+        for budget in [1usize, 3, 4, 7, 12] {
+            let mut algo = RandomSearch::new(96, 5);
+            let trace =
+                run_racing(&mut algo, budget, opts, |i, fid| Ok(oracle(i, fid)))
+                    .unwrap();
+            let base = trace
+                .trials
+                .iter()
+                .filter(|t| t.fidelity == 0.25)
+                .count();
+            assert!(base <= budget, "{base} base-rung trials > budget {budget}");
+            assert!(trace.trials.iter().any(|t| t.fidelity >= 1.0));
+        }
+    }
+
+    #[test]
+    fn algorithm_exhaustion_ends_the_race() {
+        // a 6-config space exhausts mid-generation; the partial cohort
+        // still races to full fidelity and the search terminates
+        let opts = RacingOptions { eta: 4, fidelity_min: 1.0 / 16.0 };
+        let mut algo = RandomSearch::new(6, 2);
+        let trace =
+            run_racing(&mut algo, 96, opts, |i, fid| Ok(oracle(i, fid))).unwrap();
+        let base = trace.trials.iter().filter(|t| t.fidelity < 0.1).count();
+        assert_eq!(base, 6, "every config proposed exactly once");
+        assert!(trace.trials.iter().any(|t| t.fidelity >= 1.0));
+    }
+
+    #[test]
+    fn zero_budget_is_an_error() {
+        let opts = RacingOptions::default();
+        let mut algo = GridSearch::new(12, 0);
+        let err = run_racing(&mut algo, 0, opts, |i, fid| Ok(oracle(i, fid)))
+            .unwrap_err();
+        assert!(err.to_string().contains("no full-fidelity trials"), "{err}");
+    }
+
+    #[test]
+    fn nan_scores_are_demoted_not_promoted() {
+        // configs measuring NaN on the base rung must never crowd out
+        // real measurements in the promotion set
+        let opts = RacingOptions { eta: 4, fidelity_min: 0.25 };
+        let mut algo = GridSearch::new(16, 0);
+        let trace = run_racing(&mut algo, 16, opts, |i, fid| {
+            Ok(if i % 2 == 0 { f64::NAN } else { oracle(i, fid) })
+        })
+        .unwrap();
+        assert!(!trace.best_score.is_nan());
+        assert_eq!(trace.best_config % 2, 1);
+        for t in trace.trials.iter().filter(|t| t.fidelity >= 1.0) {
+            assert!(!t.score.is_nan(), "a NaN config was promoted to full fidelity");
+        }
+    }
+
+    #[test]
+    fn budget_rejections_charge_nothing() {
+        let opts = RacingOptions { eta: 2, fidelity_min: 0.5 };
+        let mut algo = GridSearch::new(8, 0);
+        let trace = run_racing(&mut algo, 8, opts, |i, fid| {
+            Ok(if i >= 4 { f64::NEG_INFINITY } else { oracle(i, fid) })
+        })
+        .unwrap();
+        for t in &trace.trials {
+            if t.score == f64::NEG_INFINITY {
+                assert_eq!(t.cost, 0.0);
+            } else {
+                assert_eq!(t.cost, t.fidelity);
+            }
+        }
+        assert!(trace.best_score.is_finite());
+    }
+}

@@ -241,11 +241,12 @@ fn search_traces_identical_across_thread_counts() {
         .map(|i| TransferRecord {
             features: coordinator::features_for(&model, space.as_ref(), i).unwrap(),
             accuracy: 0.4 + (i % 7) as f32 * 0.05,
+            fidelity: 1.0,
         })
         .collect();
     let seed = 20220205u64;
     let budget = 6;
-    for algo in coordinator::ALGORITHMS {
+    for algo in coordinator::PROPOSERS {
         let run_at = |threads: usize| -> SearchTrace {
             let ev = InterpEvaluator::new(&model, &calib, &eval, seed).with_threads(threads);
             let mut search =

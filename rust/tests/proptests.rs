@@ -11,9 +11,10 @@ use quantune::quant::{
     VtaConfig,
 };
 use quantune::search::{
-    crowding_distance, dominates, non_dominated_sort, run_search, Components,
-    GeneticSearch, GridSearch, ParetoSearch, ParetoTrace, RandomSearch, SearchAlgo,
-    Trial, XgbSearch,
+    crowding_distance, dominates, non_dominated_sort, promotion_count, run_racing,
+    run_search, rung_fractions, Components, GeneticSearch, GridSearch, ParetoSearch,
+    ParetoTrace, RacingOptions, RandomSearch, SearchAlgo, SuccessiveHalving, Trial,
+    XgbSearch,
 };
 use quantune::util::{Json, Pcg32, Pool};
 use quantune::vta::rshift_round;
@@ -599,7 +600,7 @@ fn prop_pareto_trace_front_never_dominated_and_hv_monotone() {
         let trials: Vec<Trial> = (0..n)
             .map(|i| {
                 let c = random_components(rng, 0.1);
-                Trial { config: i, score: c.accuracy, components: Some(c) }
+                Trial::scored(i, c.accuracy, c)
             })
             .collect();
         let trace = ParetoTrace::from_trials("nsga2", &trials);
@@ -654,4 +655,98 @@ fn prop_nsga2_proposals_always_in_space_and_deterministic() {
             assert_eq!(cfgs(&a), cfgs(&b), "same seed must replay identically");
         });
     }
+}
+
+// ---------------------------------------------------------------------------
+// multi-fidelity racing: rung arithmetic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_rung_ladder_well_formed() {
+    // for any (eta, fidelity_min): the ladder is never empty, ends at
+    // full fidelity, never dips below fidelity_min, and consecutive
+    // rungs differ by exactly the promotion factor
+    props(300, |rng| {
+        let eta = 2 + rng.below(7);
+        let fidelity_min = rng.range_f32(1e-4, 1.0) as f64;
+        let rungs = rung_fractions(fidelity_min, eta);
+        assert!(!rungs.is_empty(), "eta {eta} min {fidelity_min}: empty ladder");
+        assert_eq!(*rungs.last().unwrap(), 1.0, "ladder must end at full fidelity");
+        for r in &rungs {
+            assert!(
+                *r >= fidelity_min && *r <= 1.0,
+                "rung {r} outside [{fidelity_min}, 1]"
+            );
+        }
+        for w in rungs.windows(2) {
+            let ratio = w[1] / w[0];
+            assert!(
+                (ratio - eta as f64).abs() < 1e-9 * eta as f64,
+                "consecutive rungs {w:?} are not an eta={eta} step"
+            );
+        }
+        // one more division would cross fidelity_min (the ladder is the
+        // longest admissible one)
+        assert!(rungs[0] / eta as f64 < fidelity_min, "ladder too short: {rungs:?}");
+    });
+}
+
+#[test]
+fn prop_promotion_counts_monotone_and_never_empty() {
+    props(300, |rng| {
+        let eta = 2 + rng.below(7);
+        let mut prev = 0usize;
+        for n in 1..=64usize {
+            let k = promotion_count(n, eta);
+            assert!(k >= 1, "n {n} eta {eta}: a rung must promote someone");
+            assert!(k <= n, "n {n} eta {eta}: promoted {k} > members");
+            assert!(k >= prev, "promotion counts must be monotone in n");
+            prev = k;
+        }
+        // a full generation halves down to exactly one survivor: each
+        // promotion divides by exactly eta, one division per rung step
+        let fidelity_min = rng.range_f32(1e-3, 1.0) as f64;
+        let sh = SuccessiveHalving::new(RacingOptions { eta, fidelity_min }).unwrap();
+        let mut n = sh.generation_size();
+        assert_eq!(n, eta.pow((sh.rungs().len() - 1) as u32));
+        for _ in 1..sh.rungs().len() {
+            n = promotion_count(n, eta);
+        }
+        assert_eq!(n, 1, "a full generation must race down to one survivor");
+    });
+}
+
+#[test]
+fn prop_racing_budget_and_cost_never_exceeded() {
+    // for any (space, budget, ladder): base-rung proposals never exceed
+    // the budget, every trial sits on a ladder rung, the total cost is
+    // bounded by the trial count, and a winner was measured at full
+    // fidelity
+    props(60, |rng| {
+        let eta = 2 + rng.below(3);
+        let fidelity_min = [1.0, 0.5, 0.25, 1.0 / 16.0][rng.below(4)];
+        let opts = RacingOptions { eta, fidelity_min };
+        let sh = SuccessiveHalving::new(opts).unwrap();
+        let size = 1 + rng.below(96);
+        let budget = 1 + rng.below(40);
+        let mut algo = RandomSearch::new(size, rng.next_u64());
+        let trace = run_racing(&mut algo, budget, opts, |i, fid| {
+            Ok((i % 17) as f64 / 17.0 + 0.001 * fid.value())
+        })
+        .unwrap();
+        let base_fid = sh.rungs()[0].value();
+        let base = trace.trials.iter().filter(|t| t.fidelity == base_fid).count();
+        assert!(base <= budget, "{base} base-rung trials > budget {budget}");
+        for t in &trace.trials {
+            assert!(
+                sh.rungs().iter().any(|r| r.value() == t.fidelity),
+                "trial fidelity {} is not a ladder rung",
+                t.fidelity
+            );
+            assert!(t.cost <= t.fidelity, "cost {} > fidelity {}", t.cost, t.fidelity);
+        }
+        assert!(trace.total_cost() <= trace.trials.len() as f64 + 1e-9);
+        assert!(trace.trials.iter().any(|t| t.fidelity >= 1.0));
+        assert!(trace.best_score.is_finite());
+    });
 }

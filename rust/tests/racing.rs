@@ -1,0 +1,290 @@
+//! Determinism and equivalence guarantees of the multi-fidelity racing
+//! search (successive halving, PR 9):
+//!
+//! - with `fidelity_min = 1` (a single full-fidelity rung) racing
+//!   degenerates bit-for-bit to the plain `run_search` loop for every
+//!   scalar proposer, measured live through the interpreter;
+//! - a racing run -- promotion sets included -- is byte-identical at
+//!   1/2/4/8 evaluator threads;
+//! - the `sh` CLI name works end to end through `Quantune::search_racing`
+//!   but is refused by `make_algorithm` (it is a scheduler, not a
+//!   proposer), and `nsga2` refuses to race at all;
+//! - the `racing_synthetic` experiment recovers the exhaustive best at
+//!   under 40% of the exhaustive evaluation cost (the ISSUE acceptance
+//!   bar), and the live-interpreter stage stays under 1.0;
+//! - fidelity-tagged records round-trip both trial-store backends, and
+//!   legacy records (no `fidelity` field) read back as full fidelity.
+//!
+//! Everything runs on synthetic models/datasets (no artifacts needed).
+
+use std::fs;
+use std::path::PathBuf;
+
+use quantune::coordinator::{
+    self, records_equal, InterpEvaluator, Quantune, Record, SharedEvaluator, Store,
+    TrialStore, GENERAL_SPACE_TAG,
+};
+use quantune::data::{synthetic_dataset, Dataset};
+use quantune::quant::general_space;
+use quantune::search::{run_racing, run_search, RacingOptions, SearchTrace, TransferRecord};
+use quantune::zoo::{synthetic_model, ZooModel};
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Scalar proposers that can race (`nsga2` is excluded by design: its
+/// non-dominated ranking needs full component vectors).
+const RACEABLE: [&str; 5] = ["random", "grid", "genetic", "xgb", "xgb_t"];
+
+fn setup() -> (ZooModel, Dataset, Dataset) {
+    let model = synthetic_model(8, 4, 4, 3).unwrap();
+    let calib = synthetic_dataset(32, 8, 8, 4, 4, 5);
+    let eval = synthetic_dataset(96, 8, 8, 4, 4, 6);
+    (model, calib, eval)
+}
+
+fn transfer_for(model: &ZooModel) -> Vec<TransferRecord> {
+    let space = general_space();
+    (0..96)
+        .map(|i| TransferRecord {
+            features: coordinator::features_for(model, space.as_ref(), i).unwrap(),
+            accuracy: 0.4 + (i % 7) as f32 * 0.05,
+            fidelity: 1.0,
+        })
+        .collect()
+}
+
+/// Everything a trial carries, bit-exact (config, score, fidelity, cost).
+fn trace_key(t: &SearchTrace) -> Vec<(usize, u64, u64, u64)> {
+    t.trials
+        .iter()
+        .map(|tr| (tr.config, tr.score.to_bits(), tr.fidelity.to_bits(), tr.cost.to_bits()))
+        .collect()
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// `fidelity_min = 1` => one full-fidelity rung, generation size 1: the
+/// scheduler must reproduce the plain search loop trial-for-trial
+/// (same proposals, bit-identical scores, same cost) for every scalar
+/// proposer, measuring live through the interpreter.
+#[test]
+fn full_fidelity_racing_degenerates_to_the_plain_search() {
+    let (model, calib, eval) = setup();
+    let space = general_space();
+    let transfer = transfer_for(&model);
+    let seed = 20220205u64;
+    let budget = 6;
+    let opts = RacingOptions { eta: 4, fidelity_min: 1.0 };
+    for algo in RACEABLE {
+        let ev = InterpEvaluator::new(&model, &calib, &eval, seed);
+        let mut plain_algo =
+            coordinator::make_algorithm(algo, &model, &space, transfer.clone(), seed).unwrap();
+        let plain =
+            run_search(plain_algo.as_mut(), budget, |cfg| ev.measure_shared(cfg)).unwrap();
+
+        let ev = InterpEvaluator::new(&model, &calib, &eval, seed);
+        let mut raced_algo =
+            coordinator::make_algorithm(algo, &model, &space, transfer.clone(), seed).unwrap();
+        let raced = run_racing(raced_algo.as_mut(), budget, opts, |cfg, fid| {
+            ev.measure_fidelity_shared(cfg, fid)
+        })
+        .unwrap();
+
+        assert_eq!(raced.algo, format!("sh({})", plain.algo), "{algo}");
+        assert_eq!(trace_key(&plain), trace_key(&raced), "{algo}: traces diverged");
+        assert_eq!(plain.best_config, raced.best_config, "{algo}");
+        assert_eq!(plain.best_score.to_bits(), raced.best_score.to_bits(), "{algo}");
+        assert!(raced.trials.iter().all(|t| t.fidelity == 1.0), "{algo}");
+    }
+}
+
+/// The full racing ladder (1/16 -> 1/4 -> 1) must produce a
+/// byte-identical trace -- proposals, low-fidelity scores, promotion
+/// sets, costs -- at every evaluator thread count.
+#[test]
+fn racing_traces_identical_across_thread_counts() {
+    let (model, calib, eval) = setup();
+    let space = general_space();
+    let transfer = transfer_for(&model);
+    let seed = 20220205u64;
+    let budget = 16;
+    let opts = RacingOptions { eta: 4, fidelity_min: 1.0 / 16.0 };
+    for algo in RACEABLE {
+        let run_at = |threads: usize| -> SearchTrace {
+            let ev =
+                InterpEvaluator::new(&model, &calib, &eval, seed).with_threads(threads);
+            let mut search =
+                coordinator::make_algorithm(algo, &model, &space, transfer.clone(), seed)
+                    .unwrap();
+            run_racing(search.as_mut(), budget, opts, |cfg, fid| {
+                ev.measure_fidelity_shared(cfg, fid)
+            })
+            .unwrap()
+        };
+        let base = run_at(THREAD_COUNTS[0]);
+        // cursor proposers fill a whole generation: 16 base-rung
+        // trials, 4 promotions, 1 full (population proposers may race
+        // a shorter cohort when the dedup guard trips)
+        if matches!(algo, "random" | "grid") {
+            assert_eq!(base.trials.len(), 21, "{algo}");
+        }
+        assert!(base.trials.iter().filter(|t| t.fidelity >= 1.0).count() >= 1, "{algo}");
+        for &threads in &THREAD_COUNTS[1..] {
+            let t = run_at(threads);
+            assert_eq!(
+                trace_key(&base),
+                trace_key(&t),
+                "{algo}: racing trace diverged between 1 and {threads} threads"
+            );
+            assert_eq!(base.best_config, t.best_config, "{algo}");
+            assert_eq!(base.best_score.to_bits(), t.best_score.to_bits(), "{algo}");
+        }
+    }
+}
+
+/// The `sh` name works end to end through the coordinator (random
+/// proposals under the scheduler), is refused as a plain proposer, and
+/// `nsga2` is refused as a racing proposer.
+#[test]
+fn sh_races_through_the_coordinator_and_nsga2_refuses() {
+    let (model, calib, eval) = setup();
+    let q = Quantune {
+        artifacts: PathBuf::from("."),
+        calib_pool: calib.clone(),
+        eval: eval.clone(),
+        db: Store::in_memory(),
+        seed: 1,
+        device: coordinator::DEVICES[1],
+        seed_from_db: false,
+    };
+    let space = general_space();
+    let seed = 7u64;
+    let opts = RacingOptions { eta: 4, fidelity_min: 0.25 };
+    let mut ev = InterpEvaluator::new(&model, &calib, &eval, seed);
+    let trace = q.search_racing(&model, &space, "sh", &mut ev, 8, seed, opts).unwrap();
+    assert_eq!(trace.algo, "sh(random)");
+    assert!(trace.trials.iter().any(|t| t.fidelity >= 1.0));
+    assert!(trace.total_cost() < trace.trials.len() as f64, "partial rungs must be cheaper");
+
+    let err = coordinator::make_algorithm("sh", &model, &space, Vec::new(), seed)
+        .err()
+        .expect("sh must not construct as a plain proposer");
+    assert!(err.to_string().contains("racing scheduler"), "{err}");
+
+    let mut ev = InterpEvaluator::new(&model, &calib, &eval, seed);
+    let err = q
+        .search_racing(&model, &space, "nsga2", &mut ev, 8, seed, opts)
+        .err()
+        .expect("nsga2 must refuse to race");
+    assert!(err.to_string().contains("nsga2"), "{err}");
+}
+
+/// The ISSUE acceptance bar: `racing_synthetic` recovers the exhaustive
+/// best score at under 40% of the exhaustive evaluation cost on the
+/// provable surface stage, and the live-interpreter stage races the VTA
+/// space for strictly less than an exhaustive sweep.
+#[test]
+fn racing_synthetic_recovers_the_best_under_forty_percent_cost() {
+    let out = tmpdir("quantune_racing_results");
+    std::env::set_var("QUANTUNE_RESULTS", &out);
+    let rows = quantune::experiments::racing_synthetic().unwrap();
+    std::env::remove_var("QUANTUNE_RESULTS");
+    assert_eq!(rows.len(), 2);
+
+    let surface = &rows[0];
+    assert_eq!(surface.stage, "surface");
+    assert!(surface.recovered, "racing missed the analytic optimum");
+    assert_eq!(surface.racing_score, surface.exhaustive_score);
+    assert!(
+        surface.cost_fraction < 0.4,
+        "surface stage cost {:.3} of exhaustive, want < 0.4",
+        surface.cost_fraction
+    );
+
+    let interp = &rows[1];
+    assert_eq!(interp.stage, "interp");
+    assert!(interp.full_trials >= 1, "no full-fidelity winner measured");
+    assert!(
+        interp.cost_fraction < 1.0,
+        "interp stage cost {:.3} of exhaustive, want < 1.0",
+        interp.cost_fraction
+    );
+
+    let csv = fs::read_to_string(out.join("racing_synthetic.csv")).unwrap();
+    assert!(csv.starts_with("stage,algo,exhaustive_best,"), "{csv}");
+    assert_eq!(csv.lines().count(), 1 + rows.len());
+    let _ = fs::remove_dir_all(&out);
+}
+
+/// Fidelity-tagged records survive both store backends bit-for-bit, and
+/// a legacy record (no `fidelity` field in the JSON) reads back as full
+/// fidelity on both.
+#[test]
+fn fidelity_records_round_trip_both_store_backends() {
+    let recs = vec![
+        Record {
+            fidelity: Some(0.0625),
+            ..Record::new("mn".into(), GENERAL_SPACE_TAG.into(), 3, 0.71, 0.5)
+        },
+        Record {
+            fidelity: Some(1.0),
+            ..Record::new("mn".into(), GENERAL_SPACE_TAG.into(), 4, 0.74, 0.5)
+        },
+        Record::new("mn".into(), GENERAL_SPACE_TAG.into(), 5, 0.69, 0.5), // legacy: None
+    ];
+    assert!(!recs[0].is_full_fidelity());
+    assert!(recs[1].is_full_fidelity());
+    assert!(recs[2].is_full_fidelity());
+
+    // JSON backend: write database.json, reopen through the auto-detect
+    let json_dir = tmpdir("quantune_racing_store_json");
+    fs::create_dir_all(&json_dir).unwrap();
+    let mut store = Store::open_json(&json_dir.join("database.json")).unwrap();
+    for r in &recs {
+        store.add(r.clone()).unwrap();
+    }
+    store.save().unwrap();
+    let reopened = Store::open(&json_dir).unwrap();
+    assert_eq!(reopened.backend(), "json");
+    assert_eq!(reopened.records().len(), recs.len());
+    for (a, b) in recs.iter().zip(reopened.records()) {
+        assert!(records_equal(a, b), "json backend dropped fidelity: {a:?} vs {b:?}");
+    }
+
+    // log backend: segmented frames are Record JSON, same guarantee
+    let log_dir = tmpdir("quantune_racing_store_log");
+    let mut store = Store::open_log(&log_dir.join("trials")).unwrap();
+    for r in &recs {
+        store.add(r.clone()).unwrap();
+    }
+    store.save().unwrap();
+    let reopened = Store::open(&log_dir).unwrap();
+    assert_eq!(reopened.backend(), "log");
+    assert_eq!(reopened.records().len(), recs.len());
+    for (a, b) in recs.iter().zip(reopened.records()) {
+        assert!(records_equal(a, b), "log backend dropped fidelity: {a:?} vs {b:?}");
+    }
+
+    // a hand-written legacy file (no fidelity field anywhere) parses to
+    // full-fidelity records on the modern reader
+    let legacy_dir = tmpdir("quantune_racing_store_legacy");
+    fs::create_dir_all(&legacy_dir).unwrap();
+    fs::write(
+        legacy_dir.join("database.json"),
+        r#"{"records": [{"model": "sqn", "space": "general", "config": 1,
+            "accuracy": 0.5, "measure_secs": 0.1}]}"#,
+    )
+    .unwrap();
+    let legacy = Store::open(&legacy_dir).unwrap();
+    assert_eq!(legacy.records().len(), 1);
+    assert_eq!(legacy.records()[0].fidelity, None);
+    assert!(legacy.records()[0].is_full_fidelity());
+
+    for d in [json_dir, log_dir, legacy_dir] {
+        let _ = fs::remove_dir_all(d);
+    }
+}

@@ -233,9 +233,9 @@ fn xgb_row_cache_reproduces_the_full_extraction() {
     // 6 configs with scalar features; transfer rows fixed up front
     let space_features: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32]).collect();
     let transfer = vec![
-        TransferRecord { features: vec![10.0], accuracy: 0.5 },
-        TransferRecord { features: vec![11.0], accuracy: f32::NAN }, // dropped
-        TransferRecord { features: vec![12.0], accuracy: 0.7 },
+        TransferRecord::full(vec![10.0], 0.5),
+        TransferRecord::full(vec![11.0], f32::NAN), // dropped
+        TransferRecord::full(vec![12.0], 0.7),
     ];
     let mut search = XgbSearch::with_transfer(space_features.clone(), transfer, 1);
 
@@ -243,14 +243,18 @@ fn xgb_row_cache_reproduces_the_full_extraction() {
     search.sync_rows(&history);
     let (xs, ys) = search.training_rows();
     // full extraction: finite transfer rows, then finite history rows
-    assert_eq!(xs, vec![vec![10.0], vec![12.0], vec![2.0]]);
+    // (every row carries the trailing fidelity feature column)
+    assert_eq!(xs, vec![vec![10.0, 1.0], vec![12.0, 1.0], vec![2.0, 1.0]]);
     assert_eq!(ys, vec![0.5, 0.7, 0.62]);
 
     // growing the history only appends the new finite rows
     history.push(Trial::of(0, 0.58));
     search.sync_rows(&history);
     let (xs, ys) = search.training_rows();
-    assert_eq!(xs, vec![vec![10.0], vec![12.0], vec![2.0], vec![0.0]]);
+    assert_eq!(
+        xs,
+        vec![vec![10.0, 1.0], vec![12.0, 1.0], vec![2.0, 1.0], vec![0.0, 1.0]]
+    );
     assert_eq!(ys, vec![0.5, 0.7, 0.62, 0.58]);
 
     // re-syncing the same history is idempotent
@@ -259,10 +263,10 @@ fn xgb_row_cache_reproduces_the_full_extraction() {
 
     // mid-run transfer growth (a refreshed watermark cursor) lands in
     // the cache on the next sync
-    search.extend_transfer([TransferRecord { features: vec![13.0], accuracy: 0.9 }]);
+    search.extend_transfer([TransferRecord::full(vec![13.0], 0.9)]);
     search.sync_rows(&history);
     let (xs, ys) = search.training_rows();
-    assert_eq!(xs.last().unwrap().as_slice(), [13.0]);
+    assert_eq!(xs.last().unwrap().as_slice(), [13.0, 1.0]);
     assert_eq!(ys.last().copied(), Some(0.9));
 }
 

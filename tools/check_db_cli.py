@@ -33,10 +33,12 @@ FIXTURE = """{"records": [
    "device": "CPU(i7-8700)"},
   {"model": "sqn", "config": 9, "accuracy": null, "measure_secs": 0.4},
   {"model": "mn", "space": "vta", "config": 0, "accuracy": 0.66,
-   "measure_secs": 1.25}
+   "measure_secs": 1.25},
+  {"model": "mn", "space": "general", "config": 5, "accuracy": 0.5,
+   "measure_secs": 0.1, "fidelity": 0.25}
 ]}
 """
-N_RECORDS = 3
+N_RECORDS = 4
 
 
 def fail(msg: str) -> None:
@@ -92,7 +94,10 @@ def check(binary: str, artifacts: Path) -> None:
     # 2. CSV export: header + one row per record, NaN/absent as empties
     csv_before = run(base + ["export"] + at).stdout
     lines = csv_before.strip().split("\n")
-    header = "seq,model,space,config,accuracy,measure_secs,latency_ms,size_bytes,device"
+    header = (
+        "seq,model,space,config,accuracy,measure_secs,latency_ms,size_bytes,"
+        "device,fidelity"
+    )
     if lines[0] != header:
         fail(f"csv header {lines[0]!r} != {header!r}")
     if len(lines) != 1 + N_RECORDS:
@@ -102,6 +107,11 @@ def check(binary: str, artifacts: Path) -> None:
         fail(f"null accuracy must export as an empty cell, got {row['accuracy']!r}")
     if row["space"] != "general":
         fail(f"missing space tag must default to general, got {row['space']!r}")
+    if row["fidelity"] != "":
+        fail(f"legacy record must export an empty fidelity cell, got {row['fidelity']!r}")
+    racing_row = dict(zip(header.split(","), lines[4].split(",")))
+    if racing_row["fidelity"] != "0.25":
+        fail(f"partial-fidelity record must export 0.25, got {racing_row['fidelity']!r}")
 
     # 3. JSON export through --out (atomic write path) must parse
     json_path = artifacts / "export.json"

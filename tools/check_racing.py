@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Smoke-gate the multi-fidelity racing experiment (CI runs `cargo
+bench --bench bench_figures -- racing` first, which writes
+results/racing_synthetic.csv; this script then holds the racing search
+to the PR's acceptance bar, so a regression that silently stops
+recovering the best config -- or stops being cheaper than exhaustive
+measurement -- fails the build).
+
+Checks, per stage of the experiment:
+- `surface` (analytic oracle, ranking provably fidelity-invariant):
+  racing MUST recover the exhaustive best score, at under 40% of the
+  exhaustive evaluation cost;
+- `interp` (live interpreter over the VTA space): the race must cost
+  strictly less than the exhaustive sweep (charged by images actually
+  interpreted) and crown a full-fidelity winner;
+- both: sane row shape, positive trial counts, cost fractions
+  consistent with the cost columns.
+
+Usage: python3 tools/check_racing.py [results/racing_synthetic.csv]
+Without an argument the default locations (results/, rust/results/)
+are probed.
+"""
+
+import csv
+import sys
+from pathlib import Path
+
+CANDIDATES = [
+    Path("results/racing_synthetic.csv"),
+    Path("rust/results/racing_synthetic.csv"),
+]
+EXPECTED_COLUMNS = [
+    "stage", "algo", "exhaustive_best", "exhaustive_score", "racing_best",
+    "racing_score", "recovered", "exhaustive_cost", "racing_cost",
+    "cost_fraction", "trials", "full_trials",
+]
+SURFACE_COST_BAR = 0.4
+
+
+def fail(msg: str) -> None:
+    print(f"check_racing: FAIL: {msg}")
+    sys.exit(1)
+
+
+def load(path: Path) -> list:
+    with path.open() as f:
+        rows = list(csv.DictReader(f))
+    if not rows:
+        fail(f"{path}: no data rows")
+    got = list(rows[0].keys())
+    if got != EXPECTED_COLUMNS:
+        fail(f"{path}: columns {got} != expected {EXPECTED_COLUMNS}")
+    return rows
+
+
+def check_common(row: dict) -> None:
+    stage = row["stage"]
+    if int(row["trials"]) <= 0:
+        fail(f"{stage}: no trials ran")
+    if int(row["full_trials"]) <= 0:
+        fail(f"{stage}: no full-fidelity trial -- the winner was never confirmed")
+    racing, exhaustive = float(row["racing_cost"]), float(row["exhaustive_cost"])
+    if racing <= 0 or exhaustive <= 0:
+        fail(f"{stage}: non-positive costs ({racing} vs {exhaustive})")
+    frac = float(row["cost_fraction"])
+    if abs(frac - racing / exhaustive) > 1e-3:
+        fail(f"{stage}: cost_fraction {frac} inconsistent with {racing}/{exhaustive}")
+
+
+def main() -> None:
+    if len(sys.argv) > 2:
+        fail(f"usage: {sys.argv[0]} [racing_synthetic.csv]")
+    if len(sys.argv) == 2:
+        path = Path(sys.argv[1])
+    else:
+        path = next((p for p in CANDIDATES if p.exists()), None)
+        if path is None:
+            fail(
+                f"no racing_synthetic.csv in {[str(p) for p in CANDIDATES]} "
+                "(run `cargo bench --bench bench_figures -- racing` first)"
+            )
+    rows = {r["stage"]: r for r in load(path)}
+    for stage in ("surface", "interp"):
+        if stage not in rows:
+            fail(f"missing stage {stage!r}, got {sorted(rows)}")
+        check_common(rows[stage])
+
+    surface = rows["surface"]
+    if surface["recovered"] != "true":
+        fail(
+            "surface stage did not recover the exhaustive best "
+            f"(racing {surface['racing_best']}@{surface['racing_score']} vs "
+            f"exhaustive {surface['exhaustive_best']}@{surface['exhaustive_score']})"
+        )
+    frac = float(surface["cost_fraction"])
+    if frac >= SURFACE_COST_BAR:
+        fail(f"surface stage cost fraction {frac} >= {SURFACE_COST_BAR}")
+
+    interp = rows["interp"]
+    interp_frac = float(interp["cost_fraction"])
+    if interp_frac >= 1.0:
+        fail(f"interp stage cost fraction {interp_frac} >= 1.0 -- racing cost "
+             "as much as the exhaustive sweep")
+
+    print(
+        f"check_racing: OK (surface recovered best at {frac:.1%} of exhaustive "
+        f"cost, interp raced at {interp_frac:.1%}; {path})"
+    )
+
+
+if __name__ == "__main__":
+    main()
