@@ -2,7 +2,7 @@
 //!
 //!   0. search spaces: the same six algorithms (including the NSGA-II
 //!      Pareto search, scored here by its scalar trace) over the general
-//!      (96), VTA (12), and a layer-wise mixed-precision space through
+//!      (288), VTA (12), and a layer-wise mixed-precision space through
 //!      the one generic `run_search` path (always runs, no artifacts
 //!      needed);
 //!   1. feature preprocessing: one-hot vs categorical encoding (the paper
@@ -74,6 +74,7 @@ fn space_ablation(seeds: &[u64], eps: f64) -> Result<()> {
         clip: quantune::quant::Clipping::Max,
         gran: quantune::quant::Granularity::Tensor,
         mixed: false,
+        bias_correct: false,
     };
     let layerwise: SpaceRef = std::sync::Arc::new(LayerwiseSpace::rank(
         &model.name,
@@ -178,14 +179,14 @@ fn main() -> Result<()> {
         let model = q.load_model(name)?;
         let table = q.db.accuracy_table(name, GENERAL_SPACE_TAG, QuantConfig::SPACE_SIZE);
         let arch = model.arch_features();
-        let one_hot: Vec<Vec<f32>> = (0..96)
+        let one_hot: Vec<Vec<f32>> = (0..QuantConfig::SPACE_SIZE)
             .map(|i| {
                 let mut f = arch.clone();
                 f.extend(QuantConfig::from_index(i).unwrap().one_hot());
                 f
             })
             .collect();
-        let categorical: Vec<Vec<f32>> = (0..96)
+        let categorical: Vec<Vec<f32>> = (0..QuantConfig::SPACE_SIZE)
             .map(|i| {
                 let mut f = arch.clone();
                 f.extend(QuantConfig::from_index(i).unwrap().categorical());
@@ -204,7 +205,7 @@ fn main() -> Result<()> {
     let feats_for = |name: &str| -> Result<Vec<Vec<f32>>> {
         let model = q.load_model(name)?;
         let arch = model.arch_features();
-        Ok((0..96)
+        Ok((0..QuantConfig::SPACE_SIZE)
             .map(|i| {
                 let mut f = arch.clone();
                 f.extend(QuantConfig::from_index(i).unwrap().one_hot());

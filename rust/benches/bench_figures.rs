@@ -49,12 +49,18 @@ fn print_pareto(rows: &[exp::LayerwiseParetoRow]) {
 
 fn print_radix_pareto(rows: &[exp::RadixParetoRow]) {
     println!(
-        "{:>6} | {:>28} | {:>4} | {:>4} | {:>9} | {:>11} | frontier | dominates",
+        "{:>6} | {:>28} | {:>4} | {:>4} | {:>9} | {:>11} | frontier | dominates | picked",
         "space", "widths", "int4", "fp32", "top1", "quant bytes"
     );
     for r in rows {
+        let picked = match (r.ip_baseline, r.xgb_best) {
+            (true, true) => "ip+xgb",
+            (true, false) => "ip",
+            (false, true) => "xgb",
+            (false, false) => "",
+        };
         println!(
-            "{:>6} | {:>28} | {:>4} | {:>4} | {:>8.2}% | {:>11} | {:>8} | {}",
+            "{:>6} | {:>28} | {:>4} | {:>4} | {:>8.2}% | {:>11} | {:>8} | {:>9} | {}",
             r.space,
             r.label,
             r.int4_layers,
@@ -62,7 +68,24 @@ fn print_radix_pareto(rows: &[exp::RadixParetoRow]) {
             r.accuracy * 100.0,
             r.quant_bytes,
             if r.on_frontier { "*" } else { "" },
-            if r.dominates_best_binary { "yes" } else { "" }
+            if r.dominates_best_binary { "yes" } else { "" },
+            picked
+        );
+    }
+}
+
+fn print_aciq(rows: &[exp::AciqRow]) {
+    println!(
+        "{:>6} | {:>12} | {:>24} | {:>9}",
+        "clip", "bias_correct", "config", "top1"
+    );
+    for r in rows {
+        println!(
+            "{:>6} | {:>12} | {:>24} | {:>8.2}%",
+            r.clip.name(),
+            r.bias_correct,
+            r.label,
+            r.top1 * 100.0
         );
     }
 }
@@ -166,6 +189,11 @@ fn main() -> Result<()> {
         );
         print_radix_pareto(&exp::pareto_radix_synthetic()?);
         println!(
+            "\n== ACIQ toolbox: clipping x bias-correction on the heavy-tailed \
+             synthetic model =="
+        );
+        print_aciq(&exp::aciq_synthetic()?);
+        println!(
             "\n== Multi-objective Pareto: accuracy vs latency vs bytes \
              (synthetic, i7 profile) =="
         );
@@ -223,7 +251,10 @@ fn main() -> Result<()> {
     };
     if want("fig2") {
         if let Some(rt) = need_rt(runtime.as_ref(), "fig2") {
-            println!("== Fig 2: Top-1 across all 96 configs ==");
+            println!(
+                "== Fig 2: Top-1 across all {} configs ==",
+                quantune::quant::QuantConfig::SPACE_SIZE
+            );
             let tables = exp::fig2(&mut q, rt)?;
             let mut names: Vec<&String> = tables.keys().collect();
             names.sort();

@@ -195,6 +195,7 @@ fn bench_model(model: &ZooModel, batch: usize, scheme: Scheme, reps: usize) -> R
         clip: Clipping::Max,
         gran: Granularity::Channel,
         mixed: false,
+        bias_correct: false,
     };
     let plan = QuantPlan { base, layer_widths: None };
     let setup = prepare_cached(model, &cache, &plan, &WeightCache::new())?;

@@ -129,6 +129,7 @@ fn synthetic_benches() -> Result<()> {
         clip: Clipping::Max,
         gran: Granularity::Tensor,
         mixed: false,
+        bias_correct: false,
     }
     .index();
     for threads in [1usize, pool::default_threads()] {

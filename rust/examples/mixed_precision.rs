@@ -51,6 +51,7 @@ fn main() -> Result<()> {
                 clip: Clipping::Max,
                 gran,
                 mixed,
+                bias_correct: false,
             };
             let acc = evaluator.measure(cfg.index())?;
             let size = model_size_bytes(&model.graph, &weight_dims, gran, mixed);

@@ -52,6 +52,7 @@ fn main() -> Result<()> {
         clip: Clipping::Kl,
         gran: Granularity::Channel,
         mixed: false,
+        bias_correct: false,
     };
     // ... and a deliberately weak one
     let weak = QuantConfig {
@@ -60,6 +61,7 @@ fn main() -> Result<()> {
         clip: Clipping::Max,
         gran: Granularity::Tensor,
         mixed: false,
+        bias_correct: false,
     };
 
     for (label, cfg) in [("weak", weak), ("good", good)] {

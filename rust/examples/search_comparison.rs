@@ -52,8 +52,10 @@ fn main() -> Result<()> {
         let mut curves = [0.0f64; 4];
         for &seed in &seeds {
             let mut oracle = OracleEvaluator::new(table.clone());
-            let trace = q.search(&model, &space, algo, &mut oracle, 96, seed)?;
-            let t = trace.trials_to_reach(best, 1e-3).unwrap_or(96) as f64;
+            let trace =
+                q.search(&model, &space, algo, &mut oracle, QuantConfig::SPACE_SIZE, seed)?;
+            let t =
+                trace.trials_to_reach(best, 1e-3).unwrap_or(QuantConfig::SPACE_SIZE) as f64;
             to_best.push(t);
             for (i, &n) in [1usize, 4, 16, 48].iter().enumerate() {
                 curves[i] += trace.best_after(n) / seeds.len() as f64;

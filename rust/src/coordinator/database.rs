@@ -29,7 +29,9 @@ use anyhow::Result;
 use super::store::{write_atomic, RecordIndex, TrialStore};
 use crate::util::Json;
 
-/// Space tag of the 96-element general space (the pre-tag default).
+/// Space tag of the general config space (the pre-tag default). Legacy
+/// rows recorded under the 96-config space keep this tag: the 288-config
+/// space extends it with the same index order for the first 96 entries.
 pub const GENERAL_SPACE_TAG: &str = "general";
 
 /// One measured trial: a (model, space, config) triple with its Top-1

@@ -7,7 +7,7 @@
 //! appears here -- the HLO artifacts are self-contained.
 //!
 //! Everything is generic over a [`ConfigSpace`]: the same sweep, search,
-//! transfer-learning, and database plumbing drives the 96-element
+//! transfer-learning, and database plumbing drives the 288-element
 //! general space, the 12-element VTA space, and per-model layer-wise
 //! mixed-precision spaces (`Quantune::layerwise_space`). It is also
 //! generic over the objective: [`objective`] scalarizes (Top-1, modeled
@@ -692,6 +692,7 @@ impl Quantune {
             clip: crate::quant::Clipping::Kl,
             gran: crate::quant::Granularity::Channel,
             mixed: false,
+            bias_correct: false,
         }
     }
 }

@@ -368,7 +368,7 @@ mod tests {
         let space = crate::quant::general_space();
         let dev = &super::super::DEVICES[1]; // i7: naive int8 slower than fp32
         let cm = CostModel::build(&model, space.as_ref(), dev, 100.0).unwrap();
-        assert_eq!(cm.len(), 96);
+        assert_eq!(cm.len(), crate::quant::QuantConfig::SPACE_SIZE);
         for i in 0..space.size() {
             let plan = space.plan(i).unwrap();
             let cost = cm.cost(i).unwrap();

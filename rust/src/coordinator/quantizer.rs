@@ -12,9 +12,11 @@
 //! Weight preparation is memoized in a [`WeightCache`]: calibration count
 //! and clipping policy only shape *activation* ranges, so a sweep reuses
 //! at most one fake-quantized tensor per (layer, scheme, granularity,
-//! bit-width) plus one fp32 passthrough per tensor. Configs that share a
-//! layer's setting skip requantization entirely, and the cache is
-//! interior-mutable so the parallel sweep's workers share it.
+//! bit-width), one corrected bias per quantized grid (the `bias_correct`
+//! axis; corrected and uncorrected variants coexist under distinct
+//! [`WeightVariant`] keys), plus one fp32 passthrough per tensor. Configs
+//! that share a layer's setting skip requantization entirely, and the
+//! cache is interior-mutable so the parallel sweep's workers share it.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -26,8 +28,8 @@ use crate::calib::CalibrationCache;
 use crate::interp::PreparedWeight;
 use crate::ir::{Op, Tensor};
 use crate::quant::{
-    fake_quant_weights_at, quantize_weights_int, ActQuantization, BitWidth,
-    Granularity, QuantPlan, Scheme,
+    correct_bias, fake_quant_weights_at, quantize_weights_int, ActQuantization,
+    BitWidth, Granularity, QuantPlan, Scheme,
 };
 use crate::zoo::ZooModel;
 
@@ -57,6 +59,13 @@ pub enum WeightVariant {
     Fp32,
     /// fake-quantized onto the (scheme, granularity, width) grid
     Quant(Scheme, Granularity, BitWidth),
+    /// bias with the per-channel weight quantization error of the named
+    /// layer's (scheme, granularity, width) grid folded in (the
+    /// `bias_correct` axis). The correction depends only on the weight
+    /// tensor and its grid -- no calibration statistics -- so the key
+    /// carries exactly the grid, and corrected and uncorrected variants
+    /// of the same bias coexist in one cache.
+    CorrectedBias(Scheme, Granularity, BitWidth),
 }
 
 /// Cache of prepared weight tensors keyed by (weight name, variant).
@@ -209,15 +218,28 @@ pub fn prepare_cached(
             .map_or(BitWidth::Fp32, |&i| widths[i]);
         // biases stay fp32 in the fake-quant evaluation (they are int32
         // at accumulator scale on true integer hardware, which the VTA
-        // path models exactly)
+        // path models exactly) -- but under the bias_correct axis a
+        // quantized layer's bias absorbs the per-channel weight rounding
+        // error of its grid (still fp32-valued)
+        let wname = format!("{layer}_w");
         let variant = if name.ends_with("_w") && !width.is_float() {
             WeightVariant::Quant(plan.base.scheme, plan.base.gran, width)
+        } else if name.ends_with("_b")
+            && plan.base.bias_correct
+            && !width.is_float()
+            && model.weights.get(&wname).is_ok()
+        {
+            WeightVariant::CorrectedBias(plan.base.scheme, plan.base.gran, width)
         } else {
             WeightVariant::Fp32
         };
         weights.push(wcache.get_or_build(name, variant, || match variant {
             WeightVariant::Quant(scheme, gran, width) => {
                 fake_quant_weights_at(t, scheme, gran, width)
+            }
+            WeightVariant::CorrectedBias(scheme, gran, width) => {
+                let w = model.weights.get(&wname).expect("checked above");
+                correct_bias(t, w, scheme, gran, width)
             }
             WeightVariant::Fp32 => t.clone(),
         }));
@@ -302,6 +324,37 @@ mod tests {
         );
         assert!(!Arc::ptr_eq(&a, &d));
         assert_eq!(wcache.entries(), 3);
+    }
+
+    #[test]
+    fn corrected_and_plain_bias_coexist() {
+        // the bias_correct axis must never evict or alias the fp32 bias:
+        // the corrected variant is a distinct cache key
+        let wcache = WeightCache::new();
+        let b = Tensor { shape: vec![2], data: vec![0.5, -0.5] };
+        let plain = wcache.get_or_build("l1_b", WeightVariant::Fp32, || b.clone());
+        let corrected = wcache.get_or_build(
+            "l1_b",
+            WeightVariant::CorrectedBias(
+                Scheme::Symmetric,
+                Granularity::Tensor,
+                BitWidth::Int4,
+            ),
+            || Tensor { shape: vec![2], data: vec![0.625, -0.375] },
+        );
+        assert!(!Arc::ptr_eq(&plain, &corrected));
+        assert_eq!(wcache.entries(), 2);
+        // a second corrected lookup on the same grid hits the cache
+        let again = wcache.get_or_build(
+            "l1_b",
+            WeightVariant::CorrectedBias(
+                Scheme::Symmetric,
+                Granularity::Tensor,
+                BitWidth::Int4,
+            ),
+            || unreachable!("must hit the cache"),
+        );
+        assert!(Arc::ptr_eq(&corrected, &again));
     }
 
     #[test]

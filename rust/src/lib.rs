@@ -12,10 +12,10 @@
 //! |---|---|---|
 //! | §4.1 calibration caches | histogram collection over {1, 64, 512} images | [`calib`], [`quant::Histogram`] |
 //! | §4.2 quantization schemes (Eq. 2-13) | asymmetric / symmetric / symmetric-uint8 / pow2 grids | [`quant::scheme`] |
-//! | §4.3 range clipping | max vs KL-divergence thresholds | [`quant::histogram`] |
+//! | §4.3 range clipping | max vs KL-divergence vs analytical ACIQ thresholds | [`quant::histogram`] |
 //! | §4.4 granularity | per-tensor vs per-channel weight scales | [`quant::weights`] |
 //! | §4.5 mixed precision | fp32 bypass, generalized to per-layer int4/int8/int16/fp32 | [`quant::space`], [`quant::BitWidth`] |
-//! | Eq. 1 / Eq. 23 search spaces | the 96-element general and 12-element VTA spaces | [`quant::config`], [`quant::ConfigSpace`] |
+//! | Eq. 1 / Eq. 23 search spaces | the 288-element general and 12-element VTA spaces | [`quant::config`], [`quant::ConfigSpace`] |
 //! | §5.1 features | arch blocks `e` ++ config features `s` | [`zoo`], [`coordinator::features_for`] |
 //! | §5.2 XGB cost model + transfer | gradient-boosted trees over the trial database | [`xgb`], [`search::XgbSearch`] |
 //! | Algorithm 1 / Fig 5-6 | the five scalar search drivers + NSGA-II Pareto search | [`search`], [`search::ParetoSearch`] |
@@ -31,7 +31,8 @@
 //!   substrate (our mini-Glow graph IR + quantizers), the VTA integer-only
 //!   simulator, and the PJRT runtime that executes AOT-lowered JAX models.
 //!   Search, sweep, and the trial database are generic over a
-//!   [`quant::ConfigSpace`]: the 96-element general space (Eq. 1), the
+//!   [`quant::ConfigSpace`]: the 288-element general space (Eq. 1 plus
+//!   the ACIQ clipping and bias-correction axes), the
 //!   12-element VTA integer-only space (Eq. 23), and per-model layer-wise
 //!   mixed-precision spaces ([`quant::LayerwiseSpace`]) all flow through
 //!   the same driver, and database records carry a space tag so transfer

@@ -10,16 +10,26 @@
 //!                    [--budget-lat-ms X] [--budget-bytes X]
 //!                    [--fidelity-min X] [--eta N]      # multi-fidelity racing
 //! quantune quantize  [--models mn,..] [--config IDX]   # deploy report
+//!                    [--clip max|kl|aciq] [--bias-correct]
 //! quantune vta       [--models mn,..]                  # integer-only path
 //! quantune latency   [--models mn,..] [--reps N]
 //! quantune db status|table|export|migrate [--space TAG] [--format csv|json] [--out F]
 //! ```
 //!
-//! `--space` selects the quantization search space: the 96-element
-//! general space (Eq. 1), the 12-element VTA integer-only space (Eq. 23),
-//! or a per-model layer-wise mixed-precision space built from a
-//! calibration-driven fragility ranking of the top `--layers K` weighted
-//! layers on top of the model's best known base config.
+//! `--space` selects the quantization search space: the 288-element
+//! general space (Eq. 1 extended with the analytical-PTQ axes), the
+//! 12-element VTA integer-only space (Eq. 23), or a per-model layer-wise
+//! mixed-precision space built from a calibration-driven fragility
+//! ranking of the top `--layers K` weighted layers on top of the model's
+//! best known base config.
+//!
+//! `--clip max|kl|aciq` and `--bias-correct` override the corresponding
+//! axes of the resolved config: the clipping policy (absolute-max, KL
+//! entropy minimization, or the analytical ACIQ threshold) and whether
+//! the per-channel quantization-error mean is folded into the layer
+//! biases. `quantize` applies them to its deploy config; `sweep` /
+//! `search --space layerwise` apply them to the base config the
+//! layer-wise space is built on.
 //!
 //! `--bits` sets the per-layer width menu of the layer-wise space: a CSV
 //! of integer weight widths (`4`, `8`, `16`), each free layer choosing
@@ -81,8 +91,8 @@ use quantune::coordinator::{
 };
 use quantune::quant::{
     general_space, max_layers_for, model_size_bytes, model_size_fp32,
-    parse_bits_spec, vta_space, ConfigSpace, Granularity, QuantConfig, SpaceRef,
-    VtaConfig, MAX_LAYERWISE_BITS,
+    parse_bits_spec, vta_space, Clipping, ConfigSpace, Granularity, QuantConfig,
+    SpaceRef, VtaConfig, MAX_LAYERWISE_BITS,
 };
 use quantune::runtime::Runtime;
 use quantune::search::RacingOptions;
@@ -109,6 +119,7 @@ fn print_help() {
          common options: --artifacts DIR --models mn,shn,... --seed N\n\
          space options:  --space general|vta|layerwise --layers K (layerwise cap)\n\
                          --bits 4,8,16 (layer-wise width menu; default 8 = {{int8,fp32}})\n\
+         config axes:    --clip max|kl|aciq --bias-correct (override the resolved config)\n\
          objectives:     --objective acc|lat|size|balanced --device a53|i7|2080ti\n\
          constraints:    --budget-lat-ms X --budget-bytes X (reject before measuring)\n\
          frontier:       --algo nsga2 (Pareto-front search; see rust/SEARCH.md)\n\
@@ -118,6 +129,21 @@ fn print_help() {
          env: QUANTUNE_THREADS=N sizes the worker pool (default: all cores)\n\
          see README.md and rust/BENCHMARKS.md for details"
     );
+}
+
+/// Apply the `--clip` / `--bias-correct` axis overrides to a resolved
+/// config. Absent options leave the config untouched, so the overrides
+/// compose with whatever source picked it (the database's best, the
+/// TensorRT-like baseline, or an explicit `--config IDX`).
+fn apply_config_overrides(cli: &Cli, mut cfg: QuantConfig) -> Result<QuantConfig> {
+    if let Some(name) = cli.opt("clip") {
+        cfg.clip = Clipping::parse(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown --clip {name:?} (try max|kl|aciq)"))?;
+    }
+    if cli.flag("bias-correct") {
+        cfg.bias_correct = true;
+    }
+    Ok(cfg)
 }
 
 /// Resolve `--space` for one model. The layer-wise space builds on the
@@ -140,6 +166,7 @@ fn resolve_space(cli: &Cli, q: &Quantune, model: &zoo::ZooModel) -> Result<Space
                     Quantune::tensorrt_like_baseline()
                 }
             };
+            let base = apply_config_overrides(cli, base)?;
             let widths = parse_bits_spec(&cli.opt_or("bits", "8"))?;
             let max_k = max_layers_for(&widths);
             let k = cli.opt_usize("layers", 4.min(max_k))?;
@@ -355,7 +382,7 @@ fn cmd_search(cli: &Cli) -> Result<()> {
         let table = q.db.accuracy_table(name, &space.tag(), space.size());
         let have_oracle = table.iter().any(|a| !a.is_nan());
         // real models measure the general space through the sweep oracle
-        // only (a live 96-config HLO pass belongs to `sweep`); the
+        // only (a live full-space HLO pass belongs to `sweep`); the
         // synthetic fallback measures any space through the interpreter
         anyhow::ensure!(
             have_oracle || synthetic || space.tag() != GENERAL_SPACE_TAG,
@@ -475,14 +502,17 @@ fn cmd_quantize(cli: &Cli) -> Result<()> {
     let q = Quantune::open(cli.artifacts())?;
     for name in cli.models() {
         let model = q.load_model(&name)?;
-        let cfg = match cli.opt("config") {
-            Some(idx) => QuantConfig::from_index(idx.parse()?)?,
-            None => {
-                q.db.best_general(&name)
-                    .map(|(c, _)| c)
-                    .context("no sweep/search results; pass --config IDX")?
-            }
-        };
+        let cfg = apply_config_overrides(
+            cli,
+            match cli.opt("config") {
+                Some(idx) => QuantConfig::from_index(idx.parse()?)?,
+                None => {
+                    q.db.best_general(&name)
+                        .map(|(c, _)| c)
+                        .context("no sweep/search results; pass --config IDX")?
+                }
+            },
+        )?;
         let weight_dims = |layer: &str| {
             let w = model.weights.get(&format!("{layer}_w")).unwrap();
             let b = model.weights.get(&format!("{layer}_b")).unwrap();
@@ -640,12 +670,24 @@ fn cmd_db_table(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
-/// One CSV row per record; empty cells for NaN / absent optionals.
+/// One CSV row per record; empty cells for NaN / absent optionals. The
+/// `clip` / `bias_correct` axis columns are decoded from the config
+/// index for general-space rows (legacy indices < 96 decode too -- the
+/// 288-config space keeps their order) and left empty for rows whose
+/// space the index cannot be decoded against (vta, layer-wise).
 fn csv_row(seq: usize, r: &Record) -> String {
     let num = |x: f64| if x.is_finite() { format!("{x}") } else { String::new() };
     let opt = |x: Option<f64>| x.map(num).unwrap_or_default();
+    let (clip, bias_correct) = if r.space == GENERAL_SPACE_TAG {
+        match QuantConfig::from_index(r.config) {
+            Ok(c) => (c.clip.name().to_string(), c.bias_correct.to_string()),
+            Err(_) => (String::new(), String::new()),
+        }
+    } else {
+        (String::new(), String::new())
+    };
     format!(
-        "{seq},{},{},{},{},{},{},{},{},{}\n",
+        "{seq},{},{},{},{clip},{bias_correct},{},{},{},{},{},{}\n",
         r.model,
         r.space,
         r.config,
@@ -664,8 +706,8 @@ fn cmd_db_export(cli: &Cli) -> Result<()> {
     let out = match format.as_str() {
         "csv" => {
             let mut s = String::from(
-                "seq,model,space,config,accuracy,measure_secs,latency_ms,size_bytes,\
-                 device,fidelity\n",
+                "seq,model,space,config,clip,bias_correct,accuracy,measure_secs,\
+                 latency_ms,size_bytes,device,fidelity\n",
             );
             for (seq, r) in db.records().iter().enumerate() {
                 s.push_str(&csv_row(seq, r));
@@ -764,4 +806,30 @@ fn cmd_latency(cli: &Cli) -> Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn db_export_decodes_new_axes_and_blanks_undecodable_rows() {
+        // a legacy-index general row decodes its clip / bias_correct
+        // cells (the 288-config space keeps the old 96's order)
+        let r = Record::new("mn".into(), GENERAL_SPACE_TAG.into(), 0, 0.5, 0.1);
+        assert!(csv_row(0, &r).contains(",max,false,"), "{}", csv_row(0, &r));
+        // an extension-block row decodes the new axes
+        let idx = (QuantConfig::LEGACY_SPACE_SIZE..QuantConfig::SPACE_SIZE)
+            .find(|&i| {
+                let c = QuantConfig::from_index(i).unwrap();
+                c.clip == Clipping::Aciq && c.bias_correct
+            })
+            .unwrap();
+        let r = Record::new("mn".into(), GENERAL_SPACE_TAG.into(), idx, 0.5, 0.1);
+        assert!(csv_row(1, &r).contains(",aciq,true,"), "{}", csv_row(1, &r));
+        // a row against a space the index cannot be decoded for keeps
+        // the axis cells empty instead of guessing
+        let r = Record::new("mn".into(), "layerwise:mn:v1".into(), 3, 0.5, 0.1);
+        assert!(csv_row(2, &r).contains(",3,,,0.5,"), "{}", csv_row(2, &r));
+    }
 }

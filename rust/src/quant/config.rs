@@ -1,15 +1,28 @@
 //! Quantization configuration spaces (paper Eq. 1 and Eq. 23).
 //!
-//! `QuantConfig` is one point of the 96-element general-purpose space:
+//! `QuantConfig` is one point of the 288-element general-purpose space:
 //!
 //! ```text
-//! SearchSpace(96) = CalibrationCache(3) x Scheme(4) x Clipping(2)
-//!                   x Granularity(2) x MixedPrecision(2)
+//! SearchSpace(288) = CalibrationCache(3) x Scheme(4) x Clipping(3)
+//!                    x Granularity(2) x MixedPrecision(2) x BiasCorrect(2)
 //! ```
+//!
+//! The space grew from the paper's 96 configs (clipping was {max, kl},
+//! no bias correction) when the analytical PTQ toolbox landed: ACIQ
+//! clipping ([`Clipping::Aciq`]) and per-channel bias correction
+//! ([`QuantConfig::bias_correct`], Banner et al., arXiv:1810.05723) are
+//! extra axes the tuner searches alongside the original four. Index
+//! order is backward compatible: indices `0..96` decode to exactly the
+//! configs they always did (the legacy {max, kl} x no-bias-correct
+//! block, in the legacy nested order), so persisted trial records keep
+//! their meaning; the new (clipping, bias-correct) combinations occupy
+//! indices `96..288` in four blocks of 48.
 //!
 //! `VtaConfig` is one point of the 12-element integer-only space (Eq. 23):
 //! scheme is pinned to pow2, granularity to tensor, and the free choice
-//! becomes conv+ReLU fusion.
+//! becomes conv+ReLU fusion. The VTA space predates the toolbox axes and
+//! stays at 12 configs ({max, kl} only -- the accelerator path has no
+//! bias-correct or ACIQ wiring).
 
 use std::fmt;
 
@@ -62,17 +75,57 @@ impl CalibCount {
     }
 }
 
-/// Range clipping policy (paper §4.3).
+/// Range clipping policy (paper §4.3; ACIQ from Banner et al.).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Clipping {
     /// Use the raw observed min/max.
     Max,
     /// KL-divergence threshold search (TensorRT/Glow procedure).
     Kl,
+    /// ACIQ analytical clipping: the closed-form threshold minimizing
+    /// expected clipping + rounding MSE under a Laplace/Gaussian fit of
+    /// the calibration histogram's moments -- no threshold sweep (see
+    /// [`crate::quant::Histogram::aciq_threshold`]).
+    Aciq,
 }
 
-/// Both clipping policies, in index order.
-pub const ALL_CLIP: [Clipping; 2] = [Clipping::Max, Clipping::Kl];
+/// Every clipping policy, in index order.
+pub const ALL_CLIP: [Clipping; 3] = [Clipping::Max, Clipping::Kl, Clipping::Aciq];
+
+/// The legacy clipping pair of the paper's original 96-config space
+/// (and of the VTA space, which never grew the ACIQ arm).
+pub const LEGACY_CLIP: [Clipping; 2] = [Clipping::Max, Clipping::Kl];
+
+impl Clipping {
+    /// Canonical name (`max` / `kl` / `aciq`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Clipping::Max => "max",
+            Clipping::Kl => "kl",
+            Clipping::Aciq => "aciq",
+        }
+    }
+
+    /// Parse a canonical clipping name.
+    pub fn parse(s: &str) -> Option<Clipping> {
+        ALL_CLIP.iter().copied().find(|c| c.name() == s)
+    }
+
+    /// Ordinal position (0..3).
+    pub fn index(self) -> usize {
+        match self {
+            Clipping::Max => 0,
+            Clipping::Kl => 1,
+            Clipping::Aciq => 2,
+        }
+    }
+}
+
+impl fmt::Display for Clipping {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// Scale sharing granularity for *weights* (paper §4.4; activations are
 /// always per-tensor, as in Glow).
@@ -87,7 +140,7 @@ pub enum Granularity {
 /// Both granularities, in index order.
 pub const ALL_GRAN: [Granularity; 2] = [Granularity::Tensor, Granularity::Channel];
 
-/// One point of the 96-element search space.
+/// One point of the 288-element search space.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct QuantConfig {
     /// Calibration image count.
@@ -100,18 +153,58 @@ pub struct QuantConfig {
     pub gran: Granularity,
     /// keep first and last weighted layers in fp32 (paper §4.5)
     pub mixed: bool,
+    /// fold the per-output-channel weight quantization-error mean into
+    /// the layer bias at prepare time (Banner et al.'s bias correction)
+    pub bias_correct: bool,
 }
 
+/// The extension blocks above the legacy prefix, in index order: each is
+/// a (clipping, bias_correct) pair the legacy 96 never covered, worth 48
+/// configs (calib x scheme x gran x mixed).
+const EXT_BLOCKS: [(Clipping, bool); 4] = [
+    (Clipping::Aciq, false),
+    (Clipping::Max, true),
+    (Clipping::Kl, true),
+    (Clipping::Aciq, true),
+];
+
 impl QuantConfig {
-    /// The full space, in a fixed deterministic order (index 0..96).
+    /// The full space, in a fixed deterministic order (index 0..288):
+    /// the legacy 96-config block first (identical to the pre-toolbox
+    /// ordering), then the four extension blocks of [`EXT_BLOCKS`].
     pub fn space() -> Vec<QuantConfig> {
-        let mut out = Vec::with_capacity(96);
+        let mut out = Vec::with_capacity(Self::SPACE_SIZE);
         for calib in ALL_CALIB {
             for scheme in ALL_SCHEMES {
-                for clip in ALL_CLIP {
+                for clip in LEGACY_CLIP {
                     for gran in ALL_GRAN {
                         for mixed in [false, true] {
-                            out.push(QuantConfig { calib, scheme, clip, gran, mixed });
+                            out.push(QuantConfig {
+                                calib,
+                                scheme,
+                                clip,
+                                gran,
+                                mixed,
+                                bias_correct: false,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        for (clip, bias_correct) in EXT_BLOCKS {
+            for calib in ALL_CALIB {
+                for scheme in ALL_SCHEMES {
+                    for gran in ALL_GRAN {
+                        for mixed in [false, true] {
+                            out.push(QuantConfig {
+                                calib,
+                                scheme,
+                                clip,
+                                gran,
+                                mixed,
+                                bias_correct,
+                            });
                         }
                     }
                 }
@@ -121,15 +214,29 @@ impl QuantConfig {
     }
 
     /// Number of configurations in the general space.
-    pub const SPACE_SIZE: usize = 96;
+    pub const SPACE_SIZE: usize = 288;
+
+    /// Size of the legacy prefix: indices below this decode to exactly
+    /// the configs of the paper's original 96-element space.
+    pub const LEGACY_SPACE_SIZE: usize = 96;
 
     /// Position in `space()` order.
     pub fn index(&self) -> usize {
         let s = ALL_SCHEMES.iter().position(|x| x == &self.scheme).unwrap();
-        (((self.calib.index() * 4 + s) * 2 + (self.clip == Clipping::Kl) as usize) * 2
-            + (self.gran == Granularity::Channel) as usize)
-            * 2
-            + self.mixed as usize
+        let gran = (self.gran == Granularity::Channel) as usize;
+        if !self.bias_correct && self.clip != Clipping::Aciq {
+            // legacy prefix: the pre-toolbox nested order, untouched
+            let kl = (self.clip == Clipping::Kl) as usize;
+            return (((self.calib.index() * 4 + s) * 2 + kl) * 2 + gran) * 2
+                + self.mixed as usize;
+        }
+        let block = EXT_BLOCKS
+            .iter()
+            .position(|&(c, b)| c == self.clip && b == self.bias_correct)
+            .unwrap();
+        Self::LEGACY_SPACE_SIZE
+            + block * 48
+            + (((self.calib.index() * 4 + s) * 2 + gran) * 2 + self.mixed as usize)
     }
 
     /// Config at position `i` of `space()` order.
@@ -140,52 +247,60 @@ impl QuantConfig {
         Ok(Self::space()[i])
     }
 
-    /// Binary-ish genome for the genetic algorithm: 7 bits
-    /// (2 calib, 2 scheme, 1 clip, 1 gran, 1 mixed). Calib/scheme use
-    /// 2-bit fields where value 3 wraps (the GA package's binary
-    /// encoding does the same for non-power-of-two cardinalities).
-    pub fn from_genome(bits: &[bool; 7]) -> QuantConfig {
+    /// Binary-ish genome for the genetic algorithm: 9 bits
+    /// (2 calib, 2 scheme, 2 clip, 1 gran, 1 mixed, 1 bias_correct).
+    /// Calib/scheme/clip use 2-bit fields where out-of-range values wrap
+    /// (the GA package's binary encoding does the same for
+    /// non-power-of-two cardinalities).
+    pub fn from_genome(bits: &[bool; 9]) -> QuantConfig {
         let calib = ALL_CALIB[((bits[0] as usize) * 2 + bits[1] as usize) % 3];
         let scheme = ALL_SCHEMES[(bits[2] as usize) * 2 + bits[3] as usize];
+        let clip = ALL_CLIP[((bits[4] as usize) * 2 + bits[5] as usize) % 3];
         QuantConfig {
             calib,
             scheme,
-            clip: if bits[4] { Clipping::Kl } else { Clipping::Max },
-            gran: if bits[5] { Granularity::Channel } else { Granularity::Tensor },
-            mixed: bits[6],
+            clip,
+            gran: if bits[6] { Granularity::Channel } else { Granularity::Tensor },
+            mixed: bits[7],
+            bias_correct: bits[8],
         }
     }
 
-    /// The canonical 7-bit genome of this config (see `from_genome`).
-    pub fn to_genome(&self) -> [bool; 7] {
+    /// The canonical 9-bit genome of this config (see `from_genome`).
+    pub fn to_genome(&self) -> [bool; 9] {
         let c = self.calib.index();
         let s = ALL_SCHEMES.iter().position(|x| x == &self.scheme).unwrap();
+        let k = self.clip.index();
         [
             c / 2 == 1,
             c % 2 == 1,
             s / 2 == 1,
             s % 2 == 1,
-            self.clip == Clipping::Kl,
+            k / 2 == 1,
+            k % 2 == 1,
             self.gran == Granularity::Channel,
             self.mixed,
+            self.bias_correct,
         ]
     }
 
-    /// One-hot feature encoding for the XGBoost cost model (13 features:
-    /// 3 calib + 4 scheme + 2 clip + 2 gran + 2 mixed). One-hot (not
-    /// ordinal) matches the paper's preprocessing choice (§5.2.2).
+    /// One-hot feature encoding for the XGBoost cost model (16 features:
+    /// 3 calib + 4 scheme + 3 clip + 2 gran + 2 mixed + 2 bias_correct).
+    /// One-hot (not ordinal) matches the paper's preprocessing choice
+    /// (§5.2.2).
     pub fn one_hot(&self) -> Vec<f32> {
-        let mut v = vec![0.0f32; 13];
+        let mut v = vec![0.0f32; Self::ONE_HOT_DIM];
         v[self.calib.index()] = 1.0;
         v[3 + ALL_SCHEMES.iter().position(|x| x == &self.scheme).unwrap()] = 1.0;
-        v[7 + (self.clip == Clipping::Kl) as usize] = 1.0;
-        v[9 + (self.gran == Granularity::Channel) as usize] = 1.0;
-        v[11 + self.mixed as usize] = 1.0;
+        v[7 + self.clip.index()] = 1.0;
+        v[10 + (self.gran == Granularity::Channel) as usize] = 1.0;
+        v[12 + self.mixed as usize] = 1.0;
+        v[14 + self.bias_correct as usize] = 1.0;
         v
     }
 
     /// Width of the one-hot feature encoding.
-    pub const ONE_HOT_DIM: usize = 13;
+    pub const ONE_HOT_DIM: usize = 16;
 
     /// Categorical (ordinal) feature encoding: one integer-valued feature
     /// per axis. The paper (§5.2.2) compared this against one-hot and
@@ -194,38 +309,40 @@ impl QuantConfig {
         vec![
             self.calib.index() as f32,
             ALL_SCHEMES.iter().position(|x| x == &self.scheme).unwrap() as f32,
-            (self.clip == Clipping::Kl) as u8 as f32,
+            self.clip.index() as f32,
             (self.gran == Granularity::Channel) as u8 as f32,
             self.mixed as u8 as f32,
+            self.bias_correct as u8 as f32,
         ]
     }
 
     /// Width of the categorical feature encoding.
-    pub const CATEGORICAL_DIM: usize = 5;
+    pub const CATEGORICAL_DIM: usize = 6;
     /// Names of the one-hot feature dimensions, in order.
-    pub const FEATURE_NAMES: [&'static str; 13] = [
+    pub const FEATURE_NAMES: [&'static str; 16] = [
         "calib_1", "calib_64", "calib_512",
         "scheme_asym", "scheme_sym", "scheme_sym_u8", "scheme_pow2",
-        "clip_max", "clip_kl",
+        "clip_max", "clip_kl", "clip_aciq",
         "gran_tensor", "gran_channel",
         "mixed_off", "mixed_on",
+        "bias_corr_off", "bias_corr_on",
     ];
 
-    /// Compact human-readable label ("c512_symmetric_kl_channel_int8").
+    /// Compact human-readable label ("c512_symmetric_kl_channel_int8";
+    /// bias-corrected configs append "_bc", so legacy slugs are
+    /// unchanged).
     pub fn slug(&self) -> String {
         format!(
-            "c{}_{}_{}_{}_{}",
+            "c{}_{}_{}_{}_{}{}",
             self.calib.images(),
             self.scheme.name(),
-            match self.clip {
-                Clipping::Max => "max",
-                Clipping::Kl => "kl",
-            },
+            self.clip.name(),
             match self.gran {
                 Granularity::Tensor => "tensor",
                 Granularity::Channel => "channel",
             },
             if self.mixed { "mixed" } else { "int8" },
+            if self.bias_correct { "_bc" } else { "" },
         )
     }
 }
@@ -241,7 +358,7 @@ impl fmt::Display for QuantConfig {
 pub struct VtaConfig {
     /// Calibration image count.
     pub calib: CalibCount,
-    /// Range clipping policy.
+    /// Range clipping policy (the enumerated space uses {max, kl} only).
     pub clip: Clipping,
     /// execute conv+ReLU as one fused accelerator op
     pub fusion: bool,
@@ -252,7 +369,7 @@ impl VtaConfig {
     pub fn space() -> Vec<VtaConfig> {
         let mut out = Vec::with_capacity(12);
         for calib in ALL_CALIB {
-            for clip in ALL_CLIP {
+            for clip in LEGACY_CLIP {
                 for fusion in [false, true] {
                     out.push(VtaConfig { calib, clip, fusion });
                 }
@@ -286,6 +403,7 @@ impl VtaConfig {
             clip: self.clip,
             gran: Granularity::Tensor,
             mixed: false,
+            bias_correct: false,
         }
     }
 
@@ -294,10 +412,7 @@ impl VtaConfig {
         format!(
             "vta_c{}_{}_{}",
             self.calib.images(),
-            match self.clip {
-                Clipping::Max => "max",
-                Clipping::Kl => "kl",
-            },
+            self.clip.name(),
             if self.fusion { "fused" } else { "unfused" },
         )
     }
@@ -308,11 +423,11 @@ mod tests {
     use super::*;
 
     #[test]
-    fn space_is_96_distinct() {
+    fn space_is_288_distinct() {
         let space = QuantConfig::space();
-        assert_eq!(space.len(), 96);
+        assert_eq!(space.len(), QuantConfig::SPACE_SIZE);
         let set: std::collections::HashSet<_> = space.iter().collect();
-        assert_eq!(set.len(), 96);
+        assert_eq!(set.len(), QuantConfig::SPACE_SIZE);
     }
 
     #[test]
@@ -320,6 +435,39 @@ mod tests {
         for (i, cfg) in QuantConfig::space().iter().enumerate() {
             assert_eq!(cfg.index(), i);
             assert_eq!(&QuantConfig::from_index(i).unwrap(), cfg);
+        }
+    }
+
+    #[test]
+    fn legacy_prefix_order_is_preserved() {
+        // the pre-toolbox space enumerated calib -> scheme -> {max, kl}
+        // -> gran -> mixed with no bias correction; persisted trial
+        // records index into exactly that order, so the first 96 entries
+        // may never change
+        let mut legacy = Vec::with_capacity(QuantConfig::LEGACY_SPACE_SIZE);
+        for calib in ALL_CALIB {
+            for scheme in ALL_SCHEMES {
+                for clip in [Clipping::Max, Clipping::Kl] {
+                    for gran in ALL_GRAN {
+                        for mixed in [false, true] {
+                            legacy.push(QuantConfig {
+                                calib,
+                                scheme,
+                                clip,
+                                gran,
+                                mixed,
+                                bias_correct: false,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        let space = QuantConfig::space();
+        assert_eq!(&space[..QuantConfig::LEGACY_SPACE_SIZE], &legacy[..]);
+        // and every new-axis config lives strictly above the prefix
+        for cfg in &space[QuantConfig::LEGACY_SPACE_SIZE..] {
+            assert!(cfg.bias_correct || cfg.clip == Clipping::Aciq);
         }
     }
 
@@ -336,8 +484,37 @@ mod tests {
         for cfg in QuantConfig::space() {
             let v = cfg.one_hot();
             assert_eq!(v.len(), QuantConfig::ONE_HOT_DIM);
-            assert_eq!(v.iter().filter(|&&x| x == 1.0).count(), 5);
+            assert_eq!(v.iter().filter(|&&x| x == 1.0).count(), 6);
         }
+    }
+
+    #[test]
+    fn categorical_shape() {
+        for cfg in QuantConfig::space() {
+            assert_eq!(cfg.categorical().len(), QuantConfig::CATEGORICAL_DIM);
+        }
+    }
+
+    #[test]
+    fn slug_distinguishes_new_axes() {
+        let base = QuantConfig::from_index(0).unwrap();
+        assert!(!base.slug().ends_with("_bc"));
+        let bc = QuantConfig { bias_correct: true, ..base };
+        assert!(bc.slug().ends_with("_bc"));
+        let aciq = QuantConfig { clip: Clipping::Aciq, ..base };
+        assert!(aciq.slug().contains("_aciq_"));
+        // slugs stay unique over the whole space
+        let slugs: std::collections::HashSet<String> =
+            QuantConfig::space().iter().map(|c| c.slug()).collect();
+        assert_eq!(slugs.len(), QuantConfig::SPACE_SIZE);
+    }
+
+    #[test]
+    fn clipping_names_roundtrip() {
+        for clip in ALL_CLIP {
+            assert_eq!(Clipping::parse(clip.name()), Some(clip));
+        }
+        assert_eq!(Clipping::parse("minmax"), None);
     }
 
     #[test]
@@ -347,6 +524,7 @@ mod tests {
         for (i, cfg) in space.iter().enumerate() {
             assert_eq!(cfg.index(), i);
             assert!(cfg.as_quant_config().scheme.integer_only());
+            assert!(!cfg.as_quant_config().bias_correct);
         }
     }
 }

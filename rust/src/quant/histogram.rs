@@ -4,13 +4,82 @@
 //! 2048-bin histogram (Glow-style expanding range: when a new batch
 //! exceeds the current range the histogram is rebinned into a doubled
 //! range, so one pass suffices). Clipping then either uses the raw
-//! min/max ("max") or searches a threshold minimizing the KL divergence
+//! min/max ("max"), searches a threshold minimizing the KL divergence
 //! between the clipped distribution and its 128-level quantized
-//! approximation (the TensorRT/Glow procedure the paper builds on).
+//! approximation (the TensorRT/Glow procedure the paper builds on), or
+//! computes the ACIQ analytical threshold from the histogram's moments
+//! with no sweep at all ([`Histogram::aciq_threshold`]; Banner et al.,
+//! arXiv:1810.05723).
 
 /// Histogram resolution (Glow's default bin count).
 pub const NUM_BINS: usize = 2048;
 const QUANT_LEVELS: usize = 128;
+
+/// Distribution-fit decision boundary for ACIQ: the kurtosis proxy
+/// rho = E[x^2] / E[|x|]^2 is exactly 2 for a Laplace distribution and
+/// pi/2 for a zero-mean Gaussian; tensors split at the midpoint.
+const ACIQ_LAPLACE_SPLIT: f64 = (2.0 + std::f64::consts::FRAC_PI_2) / 2.0;
+
+/// Abramowitz & Stegun 7.1.26 erf approximation (|error| <= 1.5e-7),
+/// good far beyond the tolerance of the ACIQ stationarity solve.
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Standard normal density phi(x).
+fn normal_pdf(x: f64) -> f64 {
+    (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal upper-tail mass Q(x) = P[X > x].
+fn normal_tail(x: f64) -> f64 {
+    0.5 * (1.0 - erf(x / std::f64::consts::SQRT_2))
+}
+
+/// ACIQ clip ratio alpha*/b for a Laplace(0, b) tensor quantized to a
+/// symmetric `bits`-wide grid: the unique root of r * e^r = 3 * 4^bits
+/// (stationarity of clip noise 2 b^2 e^-r plus rounding noise
+/// alpha^2 / (3 * 4^bits)). Solved by Newton on f(r) = r + ln r - ln C,
+/// which is concave with f(ln C) > 0, so the iteration converges
+/// monotonically from r0 = ln C.
+fn aciq_laplace_ratio(bits: u32) -> f64 {
+    let ln_c = (3.0f64).ln() + 2.0 * f64::from(bits) * (2.0f64).ln();
+    let mut r = ln_c.max(1e-3);
+    for _ in 0..64 {
+        let f = r + r.ln() - ln_c;
+        let step = f / (1.0 + 1.0 / r);
+        r -= step;
+        if step.abs() < 1e-13 * r.max(1.0) {
+            break;
+        }
+    }
+    r
+}
+
+/// ACIQ clip ratio alpha*/sigma for a zero-mean Gaussian tensor: the
+/// unique root of 2 * (phi(r) - r * Q(r)) = r / (3 * 4^bits). The left
+/// side minus the right is strictly decreasing (d/dr [phi - r Q] = -Q),
+/// so plain bisection finds it.
+fn aciq_gauss_ratio(bits: u32) -> f64 {
+    let inv_c = 1.0 / (3.0 * 4.0f64.powi(bits as i32));
+    let g = |r: f64| 2.0 * (normal_pdf(r) - r * normal_tail(r)) - r * inv_c;
+    let (mut lo, mut hi) = (1e-6f64, 40.0f64);
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if g(mid) > 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
 
 /// Reusable buffers for the KL threshold scan.
 struct KlScratch {
@@ -43,7 +112,7 @@ pub struct Histogram {
     pub max: f32,
     /// Total values accumulated.
     pub count: u64,
-    /// memoized KL threshold (§Perf: the 96-config sweep asks for the
+    /// memoized KL threshold (§Perf: the general-space sweep asks for the
     /// same histogram's threshold once per KL config; the search is
     /// ~5 ms/tensor, so recomputing dominated `prepare`). `OnceLock`
     /// rather than `Cell` so calibration caches are `Sync` and shareable
@@ -127,6 +196,69 @@ impl Histogram {
             }
         }
         acc / self.count as f64
+    }
+
+    /// Mean of |x| over everything accumulated, estimated from the bins
+    /// (bin centers weight the counts). Together with [`mean_sq`] this
+    /// is all ACIQ needs: b = E[|x|] for a Laplace fit, sigma^2 = E[x^2]
+    /// for a zero-mean Gaussian fit.
+    ///
+    /// [`mean_sq`]: Histogram::mean_sq
+    pub fn mean_abs(&self) -> f64 {
+        if self.count == 0 || self.limit <= 0.0 {
+            return 0.0;
+        }
+        let width = self.limit as f64 / NUM_BINS as f64;
+        let mut acc = 0.0f64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            if c > 0 {
+                acc += c as f64 * (i as f64 + 0.5) * width;
+            }
+        }
+        acc / self.count as f64
+    }
+
+    /// ACIQ analytical clip threshold alpha* for a symmetric `bits`-wide
+    /// grid: fit a Laplace or Gaussian to the histogram's moments
+    /// (whichever the kurtosis proxy E[x^2]/E[|x|]^2 says is closer),
+    /// then apply the closed-form ratio minimizing expected clipping +
+    /// rounding MSE -- no threshold sweep. The result is clamped to the
+    /// observed |x| limit (clipping beyond the data is a no-op, and the
+    /// clamp keeps fitted tails from inflating wide-width thresholds).
+    ///
+    /// Returns `None` for degenerate histograms (empty, all-zero, or
+    /// non-finite moments); callers fall back to `Max` clipping. This is
+    /// the guard that keeps a 0/0 scale out of the quantizer -- same
+    /// discipline as `nan_min_cmp` in the ranking paths.
+    pub fn aciq_threshold(&self, bits: u32) -> Option<f32> {
+        if self.count == 0 || self.limit <= 0.0 {
+            return None;
+        }
+        let mean_abs = self.mean_abs();
+        let mean_sq = self.mean_sq();
+        if !(mean_abs > 1e-12) || !mean_abs.is_finite() || !mean_sq.is_finite() {
+            return None;
+        }
+        let rho = mean_sq / (mean_abs * mean_abs);
+        let t = if rho >= ACIQ_LAPLACE_SPLIT {
+            mean_abs * aciq_laplace_ratio(bits)
+        } else {
+            mean_sq.sqrt() * aciq_gauss_ratio(bits)
+        };
+        let t = (t as f32).min(self.limit);
+        (t.is_finite() && t > 0.0).then_some(t)
+    }
+
+    /// Clipped range after ACIQ threshold selection: the observed range
+    /// intersected with [-alpha*, alpha*]. Degenerate histograms fall
+    /// back to the raw [`range`] (i.e. `Max` clipping).
+    ///
+    /// [`range`]: Histogram::range
+    pub fn aciq_clipped_range(&self, bits: u32) -> (f32, f32) {
+        match self.aciq_threshold(bits) {
+            Some(t) => (self.min.max(-t), self.max.min(t)),
+            None => self.range(),
+        }
     }
 
     /// Raw observed range.
@@ -296,5 +428,112 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.range(), (0.0, 0.0));
         assert_eq!(h.kl_clipped_range(), (0.0, 0.0));
+        assert_eq!(h.aciq_threshold(8), None);
+        assert_eq!(h.aciq_clipped_range(8), (0.0, 0.0));
+    }
+
+    #[test]
+    fn aciq_laplace_ratio_solves_stationarity() {
+        // the Laplace alpha*/b ratio must satisfy r * e^r = 3 * 4^bits
+        for bits in [2u32, 3, 4, 8, 16] {
+            let r = aciq_laplace_ratio(bits);
+            let c = 3.0 * 4.0f64.powi(bits as i32);
+            let residual = (r * r.exp() - c).abs() / c;
+            assert!(residual < 1e-9, "bits={bits}: residual {residual}");
+        }
+        // Banner et al. report alpha* = 2.83b / 3.89b / 5.03b for 2/3/4
+        // bits (table in arXiv:1810.05723 §3)
+        assert!((aciq_laplace_ratio(2) - 2.83).abs() < 0.05);
+        assert!((aciq_laplace_ratio(3) - 3.89).abs() < 0.05);
+        assert!((aciq_laplace_ratio(4) - 5.03).abs() < 0.05);
+    }
+
+    #[test]
+    fn aciq_gauss_ratio_solves_stationarity() {
+        // the Gaussian alpha*/sigma ratio must satisfy
+        // 2 * (phi(r) - r * Q(r)) = r / (3 * 4^bits)
+        for bits in [2u32, 3, 4, 8] {
+            let r = aciq_gauss_ratio(bits);
+            let lhs = 2.0 * (normal_pdf(r) - r * normal_tail(r));
+            let rhs = r / (3.0 * 4.0f64.powi(bits as i32));
+            assert!(
+                (lhs - rhs).abs() < 1e-8,
+                "bits={bits}: lhs {lhs} vs rhs {rhs}"
+            );
+        }
+        // Banner et al. report alpha* ~= 2.55 sigma at 4 bits
+        assert!((aciq_gauss_ratio(4) - 2.55).abs() < 0.15);
+        // ratios must grow with bit width (finer grids tolerate wider
+        // ranges)
+        assert!(aciq_gauss_ratio(8) > aciq_gauss_ratio(4));
+        assert!(aciq_laplace_ratio(8) > aciq_laplace_ratio(4));
+    }
+
+    #[test]
+    fn aciq_clips_heavy_tails() {
+        // Laplace(0, 1) samples: rho = E[x^2]/E|x|^2 = 2, so the fit
+        // picks Laplace and the 4-bit threshold lands near 5.03 * b,
+        // well inside the ~11 b observed extreme
+        let mut rng = Pcg32::seeded(7);
+        let xs: Vec<f32> = (0..100_000)
+            .map(|_| {
+                let u = rng.range_f32(-0.4999, 0.4999);
+                -u.signum() * (1.0 - 2.0 * u.abs()).ln()
+            })
+            .collect();
+        let mut h = Histogram::new();
+        h.update(&xs);
+        let absmax = xs.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let t = h.aciq_threshold(4).expect("non-degenerate");
+        assert!(t > 3.0 && t < 7.0, "4-bit Laplace threshold {t}");
+        assert!(t < absmax, "threshold {t} did not clip the {absmax} tail");
+        let (lo, hi) = h.aciq_clipped_range(4);
+        assert!(lo >= -t && hi <= t);
+    }
+
+    #[test]
+    fn aciq_gaussian_threshold_tracks_sigma() {
+        // N(0, 1) samples: rho ~= pi/2, the fit picks Gaussian and the
+        // 4-bit threshold lands near 2.55 sigma
+        let mut rng = Pcg32::seeded(9);
+        let xs: Vec<f32> = (0..100_000).map(|_| rng.normal()).collect();
+        let mut h = Histogram::new();
+        h.update(&xs);
+        let t = h.aciq_threshold(4).expect("non-degenerate");
+        assert!(t > 2.1 && t < 3.1, "4-bit Gaussian threshold {t}");
+    }
+
+    #[test]
+    fn aciq_degenerate_falls_back_to_max() {
+        // all-zero tensor: limit stays 0, threshold must refuse rather
+        // than produce a 0/0 scale, and the clipped range equals the raw
+        // range (Max behavior)
+        let mut h = Histogram::new();
+        h.update(&[0.0; 256]);
+        assert_eq!(h.aciq_threshold(8), None);
+        assert_eq!(h.aciq_clipped_range(8), h.range());
+
+        // single repeated value: every fit overshoots the data, the
+        // clamp pulls alpha* back to the observed limit, and clipping
+        // becomes a no-op -- identical to Max
+        let mut h = Histogram::new();
+        h.update(&[3.0; 100]);
+        let t = h.aciq_threshold(8).expect("non-degenerate");
+        assert!(t >= 3.0, "threshold {t} clipped a constant tensor");
+        assert_eq!(h.aciq_clipped_range(8), h.range());
+    }
+
+    #[test]
+    fn mean_abs_matches_bins() {
+        let mut h = Histogram::new();
+        let xs: Vec<f32> = (0..10_000).map(|i| (i % 100) as f32 / 50.0 - 1.0).collect();
+        h.update(&xs);
+        let exact: f64 = xs.iter().map(|x| f64::from(x.abs())).sum::<f64>() / xs.len() as f64;
+        let est = h.mean_abs();
+        assert!(
+            (est - exact).abs() < 0.01,
+            "mean_abs {est} vs exact {exact}"
+        );
+        assert!(h.mean_abs() > 0.0 && h.mean_sq() > 0.0);
     }
 }

@@ -13,7 +13,7 @@ pub mod weights;
 
 pub use config::{
     CalibCount, Clipping, Granularity, QuantConfig, VtaConfig, ALL_CALIB, ALL_CLIP,
-    ALL_GRAN,
+    ALL_GRAN, LEGACY_CLIP,
 };
 pub use histogram::Histogram;
 pub use scheme::{
@@ -26,10 +26,11 @@ pub use space::{
     MAX_LAYERWISE_BITS,
 };
 pub use weights::{
-    channel_params, channel_params_at, fake_quant_weights, fake_quant_weights_at,
-    model_size_bytes, model_size_bytes_at, model_size_bytes_masked, model_size_fp32,
-    quantize_weights_int, quantize_weights_int8, tensor_params, tensor_params_at,
-    weight_mse, weight_mse_at, IntRepr, PackedI4, QuantWeight,
+    bias_correction_sums, channel_params, channel_params_at, correct_bias,
+    fake_quant_weights, fake_quant_weights_at, layer_size_bytes_at, model_size_bytes,
+    model_size_bytes_at, model_size_bytes_masked, model_size_fp32, quantize_weights_int,
+    quantize_weights_int8, tensor_params, tensor_params_at, weight_mse, weight_mse_at,
+    IntRepr, PackedI4, QuantWeight,
 };
 
 use anyhow::Result;
@@ -66,6 +67,9 @@ impl ActQuantization {
             let (lo, hi) = match clip {
                 Clipping::Max => h.range(),
                 Clipping::Kl => h.kl_clipped_range(),
+                // activations quantize onto the int8 grid; degenerate
+                // histograms fall back to the raw range (Max behavior)
+                Clipping::Aciq => h.aciq_clipped_range(8),
             };
             let p = scheme.params_from_range(lo, hi);
             rows.push([p.scale, p.zero_point as f32, p.qmin, p.qmax, 0.0]);

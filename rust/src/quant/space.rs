@@ -8,7 +8,8 @@
 //! [`QuantPlan`] for the evaluators, featurize points for the cost
 //! model, and encode/decode a binary genome for the GA.
 //!
-//! - [`GeneralSpace`]: the 96-element space of Eq. 1 ([`QuantConfig`]);
+//! - [`GeneralSpace`]: the 288-element space of Eq. 1 extended with the
+//!   analytical-PTQ axes ([`QuantConfig`]);
 //! - [`VtaSpace`]: the 12-element integer-only space of Eq. 23
 //!   ([`VtaConfig`]);
 //! - [`LayerwiseSpace`]: per-layer mixed precision (paper §4.5,
@@ -164,10 +165,10 @@ fn bit(bits: &[bool], j: usize) -> bool {
 }
 
 // ---------------------------------------------------------------------------
-// General space (Eq. 1, |S| = 96)
+// General space (Eq. 1 grown by the PTQ toolbox axes, |S| = 288)
 // ---------------------------------------------------------------------------
 
-/// The 96-element general-purpose space of [`QuantConfig`].
+/// The 288-element general-purpose space of [`QuantConfig`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct GeneralSpace;
 
@@ -202,7 +203,7 @@ impl ConfigSpace for GeneralSpace {
     }
 
     fn genome_bits(&self) -> usize {
-        7
+        9
     }
 
     fn encode(&self, i: usize) -> Result<Vec<bool>> {
@@ -210,7 +211,7 @@ impl ConfigSpace for GeneralSpace {
     }
 
     fn decode(&self, bits: &[bool]) -> usize {
-        let mut g = [false; 7];
+        let mut g = [false; 9];
         for (j, b) in g.iter_mut().enumerate() {
             *b = bit(bits, j);
         }
@@ -439,6 +440,7 @@ impl LayerwiseSpace {
             let (lo, hi) = match base.clip {
                 Clipping::Max => h.range(),
                 Clipping::Kl => h.kl_clipped_range(),
+                Clipping::Aciq => h.aciq_clipped_range(8),
             };
             let scale = base.scheme.params_from_range(lo, hi).scale as f64;
             let act_rel = (scale * scale / 12.0) / (h.mean_sq() + 1e-12);
@@ -549,6 +551,28 @@ impl LayerwiseSpace {
     /// Number of candidate layers index `i` puts at `width`.
     pub fn layers_at(&self, i: usize, width: BitWidth) -> usize {
         self.digits_of(i).into_iter().filter(|&d| self.widths[d] == width).count()
+    }
+
+    /// Inverse of the mixed-radix digit expansion: the config index whose
+    /// per-candidate width choices are `digits` (digit `j` picks candidate
+    /// `j`'s menu entry). The IP width allocator composes its per-layer
+    /// picks back into a space index through this.
+    pub fn index_of_digits(&self, digits: &[usize]) -> Result<usize> {
+        let r = self.widths.len();
+        anyhow::ensure!(
+            digits.len() == self.candidates.len(),
+            "{} digits for {} candidates",
+            digits.len(),
+            self.candidates.len()
+        );
+        let mut i = 0usize;
+        let mut place = 1usize;
+        for &d in digits {
+            anyhow::ensure!(d < r, "digit {d} out of radix {r}");
+            i += d * place;
+            place *= r;
+        }
+        Ok(i)
     }
 }
 
@@ -703,7 +727,7 @@ mod tests {
     #[test]
     fn general_space_roundtrips() {
         let s = GeneralSpace;
-        assert_eq!(s.size(), 96);
+        assert_eq!(s.size(), QuantConfig::SPACE_SIZE);
         space_roundtrips(&s);
         // decode matches QuantConfig's own genome decode for every point
         for i in 0..s.size() {
@@ -805,6 +829,7 @@ mod tests {
             clip: Clipping::Max,
             gran: Granularity::Tensor,
             mixed: false,
+            bias_correct: false,
         }
     }
 
@@ -861,6 +886,20 @@ mod tests {
         // plans carry the width vector through to the evaluators
         let p = s.plan(1).unwrap();
         assert_eq!(p.resolve_widths(3).unwrap(), w1);
+    }
+
+    #[test]
+    fn index_of_digits_inverts_digit_expansion() {
+        let g = tiny_graph();
+        let w = tiny_weights(&g, "c2");
+        let h = tiny_hists(&g);
+        let s = LayerwiseSpace::rank("t", &g, &w, &h, base(), 3, &RADIX_WIDTHS)
+            .unwrap();
+        for i in 0..s.size() {
+            assert_eq!(s.index_of_digits(&s.digits_of(i)).unwrap(), i);
+        }
+        assert!(s.index_of_digits(&[0, 0]).is_err()); // wrong arity
+        assert!(s.index_of_digits(&[4, 0, 0]).is_err()); // digit >= radix
     }
 
     #[test]

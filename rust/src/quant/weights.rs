@@ -358,21 +358,85 @@ pub fn model_size_bytes_at(
     let mut total = 0u64;
     for (i, layer) in layers.iter().enumerate() {
         let (w_elems, channels) = weights(layer);
-        let bias_elems = channels;
         let width = widths.get(i).copied().unwrap_or(BitWidth::Int8);
-        if width.is_float() {
-            total += 4 * (w_elems + bias_elems) as u64;
-        } else {
-            let groups = match gran {
-                Granularity::Tensor => 1,
-                Granularity::Channel => channels,
-            };
-            total += width.weight_bytes(w_elems); // packed integer weights
-            total += 4 * bias_elems as u64; // int32 biases
-            total += 8 * groups as u64; // scale + zero point
-        }
+        total += layer_size_bytes_at(w_elems, channels, gran, width);
     }
     total
+}
+
+/// Serialized size in bytes of one layer at width `width` -- the
+/// single source of truth for the per-layer accounting shared by
+/// [`model_size_bytes_at`] and the IP width allocator
+/// ([`crate::search::ip_alloc`]): the allocator's byte costs and the
+/// experiment CSVs must agree, or the budget-feasibility oracle test
+/// would compare apples to oranges.
+pub fn layer_size_bytes_at(
+    w_elems: usize,
+    channels: usize,
+    gran: Granularity,
+    width: BitWidth,
+) -> u64 {
+    let bias_elems = channels;
+    if width.is_float() {
+        return 4 * (w_elems + bias_elems) as u64;
+    }
+    let groups = match gran {
+        Granularity::Tensor => 1,
+        Granularity::Channel => channels,
+    };
+    width.weight_bytes(w_elems) // packed integer weights
+        + 4 * bias_elems as u64 // int32 biases
+        + 8 * groups as u64 // scale + zero point
+}
+
+/// Per-output-channel sums of the fake-quant weight error on the given
+/// grid: entry `c` is `sum_{i = c mod channels} (w_i - fq(w_i))`, i.e.
+/// the exact bias shift that zeroes channel `c`'s mean output error for
+/// a unit-mean input (Banner et al.'s bias correction, computed exactly
+/// from the weights -- fan_in * (E[W] - E[Wq]) per channel, no
+/// activation statistics involved). Accumulated in f64 so the
+/// cancellation-heavy sum stays exact.
+pub fn bias_correction_sums(
+    w: &Tensor,
+    scheme: Scheme,
+    gran: Granularity,
+    width: BitWidth,
+) -> Vec<f64> {
+    let c = channel_dim(&w.shape);
+    let fq = fake_quant_weights_at(w, scheme, gran, width);
+    let mut sums = vec![0.0f64; c];
+    for (i, (&a, &b)) in w.data.iter().zip(&fq.data).enumerate() {
+        sums[i % c] += (a - b) as f64;
+    }
+    sums
+}
+
+/// Fold the per-channel weight quantization error into a bias vector:
+/// `b'[c] = b[c] + sum_c(W - Wq)` (see [`bias_correction_sums`]). The
+/// corrected bias compensates the DC component of the weight rounding
+/// error at the layer output. Returns `b` untouched when its length
+/// does not match the weight's channel count (defensive; the model
+/// loaders always pair them).
+pub fn correct_bias(
+    b: &Tensor,
+    w: &Tensor,
+    scheme: Scheme,
+    gran: Granularity,
+    width: BitWidth,
+) -> Tensor {
+    let sums = bias_correction_sums(w, scheme, gran, width);
+    if b.data.len() != sums.len() {
+        return b.clone();
+    }
+    Tensor {
+        shape: b.shape.clone(),
+        data: b
+            .data
+            .iter()
+            .zip(&sums)
+            .map(|(&bc, &s)| (f64::from(bc) + s) as f32)
+            .collect(),
+    }
 }
 
 /// fp32 (original) model size in bytes.
@@ -563,5 +627,66 @@ mod tests {
         let m16 =
             weight_mse_at(&w, Scheme::Symmetric, Granularity::Tensor, BitWidth::Int16);
         assert!(m16 < m8 && m8 < m4, "{m16} {m8} {m4}");
+    }
+
+    #[test]
+    fn layer_size_matches_model_accounting() {
+        // layer_size_bytes_at is the factored-out per-layer term of
+        // model_size_bytes_at; spot-check the arithmetic directly
+        for gran in [Granularity::Tensor, Granularity::Channel] {
+            assert_eq!(layer_size_bytes_at(100, 10, gran, BitWidth::Fp32), 4 * 110);
+        }
+        // int8, per-tensor: 100 weight bytes + 40 bias + 8 scale
+        assert_eq!(layer_size_bytes_at(100, 10, Granularity::Tensor, BitWidth::Int8), 148);
+        // int8, per-channel: 10 scale groups
+        assert_eq!(layer_size_bytes_at(100, 10, Granularity::Channel, BitWidth::Int8), 220);
+        // int4 packs two per byte
+        assert_eq!(layer_size_bytes_at(100, 10, Granularity::Tensor, BitWidth::Int4), 98);
+    }
+
+    #[test]
+    fn bias_correction_zeroes_channel_mean_error() {
+        // oracle: after folding the per-channel error sum into the bias,
+        // the channel-mean residual of (W - Wq) + (b' - b) is exactly 0
+        // up to f32 rounding of the final addition
+        let w = rand_weight(&[16, 8], 21);
+        let b = Tensor {
+            shape: vec![8],
+            data: (0..8).map(|i| i as f32 * 0.1 - 0.3).collect(),
+        };
+        for gran in [Granularity::Tensor, Granularity::Channel] {
+            let sums = bias_correction_sums(&w, Scheme::Symmetric, gran, BitWidth::Int4);
+            let fq = fake_quant_weights_at(&w, Scheme::Symmetric, gran, BitWidth::Int4);
+            // some channels must actually carry rounding error at int4
+            assert!(sums.iter().any(|s| s.abs() > 1e-6));
+            let bc = correct_bias(&b, &w, Scheme::Symmetric, gran, BitWidth::Int4);
+            for c in 0..8 {
+                let werr: f64 = w
+                    .data
+                    .iter()
+                    .zip(&fq.data)
+                    .enumerate()
+                    .filter(|(i, _)| i % 8 == c)
+                    .map(|(_, (&a, &q))| (a - q) as f64)
+                    .sum();
+                assert!((sums[c] - werr).abs() < 1e-9);
+                let shift = f64::from(bc.data[c]) - f64::from(b.data[c]);
+                assert!(
+                    (shift - werr).abs() < 1e-6,
+                    "channel {c}: bias shift {shift} vs weight error {werr}"
+                );
+            }
+        }
+        // fp32 width: no rounding error, correction is a no-op
+        let noop = correct_bias(&b, &w, Scheme::Symmetric, Granularity::Tensor, BitWidth::Fp32);
+        assert_eq!(noop.data, b.data);
+    }
+
+    #[test]
+    fn bias_correction_rejects_mismatched_shapes() {
+        let w = rand_weight(&[4, 4], 33);
+        let b = Tensor { shape: vec![3], data: vec![0.1, 0.2, 0.3] };
+        let out = correct_bias(&b, &w, Scheme::Symmetric, Granularity::Tensor, BitWidth::Int8);
+        assert_eq!(out.data, b.data);
     }
 }

@@ -99,7 +99,8 @@ fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
 }
 
 /// PJRT client + executable cache. Compiling an HLO module takes hundreds
-/// of ms; the cache makes the 96-config sweep compile each artifact once.
+/// of ms; the cache makes the general-space sweep compile each artifact
+/// once.
 pub struct Runtime {
     client: xla::PjRtClient,
     cache: RefCell<HashMap<PathBuf, Rc<Executable>>>,

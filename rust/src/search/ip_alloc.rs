@@ -1,0 +1,399 @@
+//! Integer-programming bit-width allocation (the AdaQuant-style
+//! baseline of Hubara et al., arXiv:2006.10518, adapted to the
+//! layer-wise radix spaces).
+//!
+//! The allocator answers "which per-layer width assignment minimizes
+//! summed layer-wise weight quantization MSE under a model-size
+//! budget?" *without searching*: each candidate layer independently
+//! prices every menu width (MSE from [`weight_mse_at`], bytes from
+//! [`layer_size_bytes_at`] -- the same accounting the experiment CSVs
+//! use), and a dynamic program over Pareto-pruned (bytes, mse) states
+//! solves the resulting multiple-choice knapsack *exactly*. The result
+//! is wired into the radix experiments as a non-search baseline column
+//! (`ip_baseline`) that the XGB tuner must beat: the IP optimum is
+//! blind to cross-layer error interaction and to accuracy, so a tuner
+//! that measures real accuracy should dominate or match it.
+//!
+//! Exactness matters here because the oracle test compares the DP
+//! against exhaustive enumeration on every <= 64-config radix space;
+//! dominance pruning is lossless for this objective (two partial
+//! assignments with the same remaining layers differ only by their
+//! accumulated (bytes, mse), so a dominated state can never finish
+//! ahead).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::ir::{Graph, Tensor};
+use crate::quant::{
+    layer_size_bytes_at, weight_mse_at, BitWidth, LayerwiseSpace,
+};
+
+/// One priced width choice for one layer.
+#[derive(Clone, Copy, Debug)]
+pub struct AllocOption {
+    /// Weight quantization MSE of the layer at this width.
+    pub mse: f64,
+    /// Serialized bytes of the layer at this width.
+    pub bytes: u64,
+}
+
+/// An exact optimum of the multiple-choice knapsack.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    /// Chosen option index per layer (same order as the input table).
+    pub picks: Vec<usize>,
+    /// Total objective: summed per-layer MSE of the picks.
+    pub mse: f64,
+    /// Total bytes: fixed bytes plus the picks' bytes.
+    pub bytes: u64,
+}
+
+/// One DP state: accumulated (bytes, mse) plus the picks that got here.
+struct State {
+    bytes: u64,
+    mse: f64,
+    picks: Vec<usize>,
+}
+
+/// Exactly minimize summed MSE over one option pick per layer, subject
+/// to `fixed_bytes + sum(bytes) <= budget_bytes` (no constraint when
+/// `None`). Errors when a layer has no options or no assignment fits
+/// the budget.
+pub fn allocate(
+    options: &[Vec<AllocOption>],
+    fixed_bytes: u64,
+    budget_bytes: Option<u64>,
+) -> Result<Allocation> {
+    let remaining = match budget_bytes {
+        Some(b) => match b.checked_sub(fixed_bytes) {
+            Some(r) => Some(r),
+            None => bail!(
+                "budget {b} B below the fixed cost {fixed_bytes} B of the \
+                 non-candidate layers"
+            ),
+        },
+        None => None,
+    };
+    let mut states = vec![State { bytes: 0, mse: 0.0, picks: Vec::new() }];
+    for (li, opts) in options.iter().enumerate() {
+        if opts.is_empty() {
+            bail!("layer {li} has no width options");
+        }
+        let mut next: Vec<State> = Vec::with_capacity(states.len() * opts.len());
+        for s in &states {
+            for (oi, o) in opts.iter().enumerate() {
+                let bytes = s.bytes.saturating_add(o.bytes);
+                if remaining.is_some_and(|r| bytes > r) {
+                    continue; // already over budget; extensions only grow
+                }
+                let mut picks = Vec::with_capacity(options.len());
+                picks.extend_from_slice(&s.picks);
+                picks.push(oi);
+                next.push(State { bytes, mse: s.mse + o.mse, picks });
+            }
+        }
+        if next.is_empty() {
+            bail!(
+                "no width assignment fits the {} B budget at layer {li}",
+                budget_bytes.unwrap_or(0)
+            );
+        }
+        // Pareto prune: keep, in ascending byte order, only states with
+        // strictly decreasing mse. Ties sort cheaper-bytes first, so a
+        // same-mse-more-bytes state is dropped too.
+        next.sort_by(|a, b| {
+            a.bytes.cmp(&b.bytes).then(a.mse.total_cmp(&b.mse))
+        });
+        let mut pruned: Vec<State> = Vec::with_capacity(next.len());
+        for s in next {
+            if pruned.last().is_none_or(|p| s.mse < p.mse) {
+                pruned.push(s);
+            }
+        }
+        states = pruned;
+    }
+    // every surviving state is feasible; the best objective is the last
+    // (mse strictly decreases along the list)
+    let best = match states.last() {
+        Some(s) => s,
+        None => bail!("empty option table"),
+    };
+    Ok(Allocation {
+        picks: best.picks.clone(),
+        mse: best.mse,
+        bytes: fixed_bytes + best.bytes,
+    })
+}
+
+/// Run the allocator over a [`LayerwiseSpace`]: price every candidate
+/// layer's menu widths from the weights (fp32 entries cost zero MSE),
+/// charge non-candidate layers their fixed int8 bytes, solve, and map
+/// the picks back to a space index via
+/// [`LayerwiseSpace::index_of_digits`]. `dims` maps a layer name to its
+/// (weight elements, output channels), exactly as the model-size
+/// accounting takes it, so the returned [`Allocation::bytes`] equals
+/// `model_size_bytes_at` of the chosen widths.
+pub fn allocate_for_space(
+    space: &LayerwiseSpace,
+    graph: &Graph,
+    weights: &HashMap<String, Tensor>,
+    dims: &dyn Fn(&str) -> (usize, usize),
+    budget_bytes: Option<u64>,
+) -> Result<(usize, Allocation)> {
+    let base = space.base();
+    let candidate_layers: std::collections::HashSet<usize> =
+        space.candidates().iter().map(|c| c.layer_index).collect();
+    let mut fixed_bytes = 0u64;
+    for (li, layer) in graph.layers().iter().enumerate() {
+        if !candidate_layers.contains(&li) {
+            let (w_elems, channels) = dims(layer);
+            fixed_bytes +=
+                layer_size_bytes_at(w_elems, channels, base.gran, BitWidth::Int8);
+        }
+    }
+    let mut options = Vec::with_capacity(space.candidates().len());
+    for c in space.candidates() {
+        let w = match weights.get(&format!("{}_w", c.name)) {
+            Some(w) => w,
+            None => bail!("missing weight tensor {}_w", c.name),
+        };
+        let (w_elems, channels) = dims(&c.name);
+        let opts: Vec<AllocOption> = space
+            .width_menu()
+            .iter()
+            .map(|&width| AllocOption {
+                mse: weight_mse_at(w, base.scheme, base.gran, width),
+                bytes: layer_size_bytes_at(w_elems, channels, base.gran, width),
+            })
+            .collect();
+        options.push(opts);
+    }
+    let alloc = allocate(&options, fixed_bytes, budget_bytes)?;
+    let index = space.index_of_digits(&alloc.picks)?;
+    Ok((index, alloc))
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use crate::ir::Op;
+    use crate::quant::{
+        model_size_bytes_at, CalibCount, Clipping, Granularity, Histogram,
+        QuantConfig, Scheme,
+    };
+    use crate::util::{Json, Pcg32};
+
+    /// Exhaustive reference: try every combination.
+    fn exhaustive(
+        options: &[Vec<AllocOption>],
+        fixed: u64,
+        budget: Option<u64>,
+    ) -> Option<(f64, u64)> {
+        let n: usize = options.iter().map(Vec::len).product();
+        let mut best: Option<(f64, u64)> = None;
+        for mut i in 0..n {
+            let (mut mse, mut bytes) = (0.0f64, fixed);
+            for opts in options {
+                let o = &opts[i % opts.len()];
+                i /= opts.len();
+                mse += o.mse;
+                bytes += o.bytes;
+            }
+            if budget.is_some_and(|b| bytes > b) {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((bm, bb)) => mse < bm || (mse == bm && bytes < bb),
+            };
+            if better {
+                best = Some((mse, bytes));
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn dp_matches_exhaustive_on_random_tables() {
+        let mut rng = Pcg32::seeded(11);
+        for trial in 0..30 {
+            let layers = 1 + (trial % 6);
+            let options: Vec<Vec<AllocOption>> = (0..layers)
+                .map(|_| {
+                    (0..4)
+                        .map(|_| AllocOption {
+                            mse: f64::from(rng.range_f32(0.0, 1.0)),
+                            bytes: 10 + f64::from(rng.range_f32(0.0, 90.0)) as u64,
+                        })
+                        .collect()
+                })
+                .collect();
+            let fixed = 17u64;
+            for budget in [None, Some(fixed + 60 * layers as u64), Some(fixed + 25 * layers as u64)]
+            {
+                let want = exhaustive(&options, fixed, budget);
+                match allocate(&options, fixed, budget) {
+                    Ok(got) => {
+                        let (wm, wb) = want.expect("DP found a solution, so must brute force");
+                        assert!(
+                            (got.mse - wm).abs() < 1e-12,
+                            "trial {trial} budget {budget:?}: DP mse {} vs exhaustive {wm}",
+                            got.mse
+                        );
+                        assert_eq!(got.bytes, wb, "trial {trial} budget {budget:?}");
+                        assert!(budget.is_none_or(|b| got.bytes <= b));
+                        assert_eq!(got.picks.len(), layers);
+                    }
+                    Err(_) => {
+                        assert!(want.is_none(), "trial {trial}: DP infeasible but exhaustive found {want:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_errors() {
+        let options =
+            vec![vec![AllocOption { mse: 0.1, bytes: 100 }, AllocOption { mse: 0.0, bytes: 200 }]];
+        assert!(allocate(&options, 0, Some(50)).is_err());
+        assert!(allocate(&options, 60, Some(50)).is_err()); // fixed alone too big
+        assert!(allocate(&[vec![]], 0, None).is_err()); // option-less layer
+        let ok = allocate(&options, 0, Some(100)).unwrap();
+        assert_eq!(ok.picks, vec![0]); // only the 100 B pick fits
+        let free = allocate(&options, 0, None).unwrap();
+        assert_eq!(free.picks, vec![1]); // unconstrained takes the lower mse
+    }
+
+    fn tiny_graph() -> Graph {
+        Graph::from_meta(
+            &Json::parse(
+                r#"{"name": "t", "input_shape": [8, 8, 2], "num_classes": 3,
+            "nodes": [
+              {"name": "c1", "op": "conv", "inputs": ["input"], "k": 3,
+               "stride": 1, "pad": 1, "in_ch": 2, "out_ch": 4, "groups": 1,
+               "act": "relu"},
+              {"name": "c2", "op": "conv", "inputs": ["c1"], "k": 3,
+               "stride": 1, "pad": 1, "in_ch": 4, "out_ch": 4, "groups": 1,
+               "act": "relu"},
+              {"name": "g", "op": "gap", "inputs": ["c2"]},
+              {"name": "d", "op": "dense", "inputs": ["g"], "in_dim": 4,
+               "out_dim": 3}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    fn tiny_weights(graph: &Graph) -> HashMap<String, Tensor> {
+        let mut rng = Pcg32::seeded(5);
+        let mut out = HashMap::new();
+        for n in &graph.nodes {
+            let (w_shape, b_len): (Vec<usize>, usize) = match &n.op {
+                Op::Conv { k, in_ch, out_ch, groups, .. } => {
+                    (vec![*k, *k, in_ch / groups, *out_ch], *out_ch)
+                }
+                Op::Dense { in_dim, out_dim } => (vec![*in_dim, *out_dim], *out_dim),
+                _ => continue,
+            };
+            let wn: usize = w_shape.iter().product();
+            let data: Vec<f32> = (0..wn).map(|_| rng.normal() * 0.1).collect();
+            out.insert(format!("{}_w", n.name), Tensor { shape: w_shape, data });
+            out.insert(
+                format!("{}_b", n.name),
+                Tensor { shape: vec![b_len], data: vec![0.0; b_len] },
+            );
+        }
+        out
+    }
+
+    #[test]
+    fn allocator_is_optimal_on_radix_spaces() {
+        // the acceptance oracle: on every <= 64-config radix space the
+        // DP pick must match exhaustive enumeration of the space itself,
+        // and its byte accounting must agree with model_size_bytes_at
+        let graph = tiny_graph();
+        let weights = tiny_weights(&graph);
+        let mut rng = Pcg32::seeded(6);
+        let hists: Vec<Histogram> = graph
+            .quant_points()
+            .iter()
+            .map(|_| {
+                let mut h = Histogram::new();
+                let xs: Vec<f32> = (0..512).map(|_| rng.normal()).collect();
+                h.update(&xs);
+                h
+            })
+            .collect();
+        let base = QuantConfig {
+            calib: CalibCount::C64,
+            scheme: Scheme::Symmetric,
+            clip: Clipping::Max,
+            gran: Granularity::Tensor,
+            mixed: false,
+            bias_correct: false,
+        };
+        let dims = |name: &str| {
+            let w = &weights[&format!("{name}_w")];
+            (w.data.len(), *w.shape.last().unwrap())
+        };
+        let menus: [&[BitWidth]; 3] = [
+            &[BitWidth::Int4, BitWidth::Int8, BitWidth::Int16, BitWidth::Fp32],
+            &[BitWidth::Int8, BitWidth::Fp32],
+            &[BitWidth::Int4, BitWidth::Int8],
+        ];
+        for menu in menus {
+            for k in 1..=3usize {
+                let space = LayerwiseSpace::rank(
+                    "t", &graph, &weights, &hists, base, k, menu,
+                )
+                .unwrap();
+                assert!(space.size() <= 64);
+                // objective + bytes of an arbitrary space index, from the
+                // space's own width vectors and the model-level accounting
+                let eval = |i: usize| {
+                    let widths = space.widths_of(i);
+                    let mse: f64 = space
+                        .candidates()
+                        .iter()
+                        .map(|c| {
+                            weight_mse_at(
+                                &weights[&format!("{}_w", c.name)],
+                                base.scheme,
+                                base.gran,
+                                widths[c.layer_index],
+                            )
+                        })
+                        .sum();
+                    let bytes = model_size_bytes_at(&graph, &dims, base.gran, &widths);
+                    (mse, bytes)
+                };
+                let all_int8 = eval(0).1; // index 0 is the all-int8 plan
+                for budget in [None, Some(all_int8), Some(all_int8 * 2)] {
+                    let (index, alloc) =
+                        allocate_for_space(&space, &graph, &weights, &dims, budget)
+                            .unwrap();
+                    let (got_mse, got_bytes) = eval(index);
+                    assert!((alloc.mse - got_mse).abs() < 1e-12);
+                    assert_eq!(alloc.bytes, got_bytes, "accounting mismatch");
+                    // exhaustive optimum over the whole space
+                    let best = (0..space.size())
+                        .map(eval)
+                        .filter(|&(_, b)| budget.is_none_or(|l| b <= l))
+                        .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+                        .expect("budget admits at least all-int8");
+                    assert!(
+                        (alloc.mse - best.0).abs() < 1e-12,
+                        "menu {menu:?} k={k} budget {budget:?}: DP mse {} vs exhaustive {}",
+                        alloc.mse,
+                        best.0
+                    );
+                    assert!(budget.is_none_or(|l| alloc.bytes <= l));
+                }
+            }
+        }
+    }
+}

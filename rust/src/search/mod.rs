@@ -29,9 +29,11 @@
 
 #![deny(clippy::unwrap_used)]
 
+pub mod ip_alloc;
 pub mod pareto;
 pub mod racing;
 
+pub use ip_alloc::{allocate, allocate_for_space, AllocOption, Allocation};
 pub use pareto::{
     crowding_distance, dominates, non_dominated_sort, ParetoSearch, ParetoTrace,
 };
@@ -247,7 +249,7 @@ fn breed(
     next
 }
 
-/// Binary-encoded GA over a [`crate::quant::ConfigSpace`] genome (7 bits
+/// Binary-encoded GA over a [`crate::quant::ConfigSpace`] genome (9 bits
 /// for the general QuantConfig space), mirroring the R `GA` package
 /// defaults the paper used: fitness = the measured score, tournament-of-2
 /// selection, single-point crossover (p=0.8), bit-flip mutation (p=0.1),

@@ -94,6 +94,9 @@ impl VtaModel {
             let (lo, hi) = match cfg.clip {
                 Clipping::Max => h.range(),
                 Clipping::Kl => h.kl_clipped_range(),
+                // the enumerated VTA space never emits Aciq, but the
+                // type admits it: use the analytical int8 threshold
+                Clipping::Aciq => h.aciq_clipped_range(8),
             };
             point_exp.insert(name.clone(), exp_for_range(lo, hi));
         }

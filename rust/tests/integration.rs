@@ -47,6 +47,7 @@ fn good_config() -> QuantConfig {
         clip: Clipping::Kl,
         gran: Granularity::Channel,
         mixed: false,
+        bias_correct: false,
     }
 }
 
@@ -178,7 +179,9 @@ fn search_on_oracle_runs_all_algorithms() {
     let space = general_space();
     for algo in ["random", "grid", "genetic", "xgb"] {
         let mut oracle = OracleEvaluator::new(table.clone());
-        let trace = q.search(&model, &space, algo, &mut oracle, 96, 3).unwrap();
+        let trace = q
+            .search(&model, &space, algo, &mut oracle, QuantConfig::SPACE_SIZE, 3)
+            .unwrap();
         assert_eq!(trace.algo, algo);
         assert!(trace.best_score >= 0.55 - 1e-9, "{algo} missed the optimum");
         // the trace's best must be the history max
@@ -284,8 +287,8 @@ fn sweep_persists_to_database() {
         q.sweep(&model, space.as_ref(), &mut empty, false, |_, _| {}).unwrap();
     assert_eq!(again, table);
     let (best_cfg, best_acc) = q.db.best_general("sqn").unwrap();
-    assert_eq!(best_cfg.index(), 95);
-    assert!((best_acc - 0.95).abs() < 1e-9);
+    assert_eq!(best_cfg.index(), QuantConfig::SPACE_SIZE - 1);
+    assert!((best_acc - (QuantConfig::SPACE_SIZE - 1) as f64 / 100.0).abs() < 1e-9);
 }
 
 #[test]

@@ -56,6 +56,7 @@ fn both_routes(
         clip: Clipping::Max,
         gran,
         mixed: false,
+        bias_correct: false,
     };
     let plan = QuantPlan { base, layer_widths };
     let setup =
@@ -146,6 +147,7 @@ fn fp32_and_acts_modes_ignore_int_weights() {
         clip: Clipping::Max,
         gran: Granularity::Tensor,
         mixed: false,
+        bias_correct: false,
     };
     let setup =
         prepare_cached(&model, &cache, &base.into(), &WeightCache::new()).unwrap();
@@ -255,6 +257,7 @@ fn chain_routes(
         clip: Clipping::Max,
         gran,
         mixed: false,
+        bias_correct: false,
     };
     let plan = QuantPlan { base, layer_widths };
     let setup =

@@ -131,8 +131,9 @@ fn nan_database_record_degrades_best_for_and_search() {
     let table = q.db.accuracy_table(&model.name, &space.tag(), space.size());
     assert!(table[3].is_nan() && !table[7].is_nan());
     let mut oracle = coordinator::OracleEvaluator::new(table);
-    let trace = q.search(&model, &space, "grid", &mut oracle, 96, 5).unwrap();
-    assert_eq!(trace.trials.len(), 96);
+    let trace =
+        q.search(&model, &space, "grid", &mut oracle, space.size(), 5).unwrap();
+    assert_eq!(trace.trials.len(), space.size());
     assert_eq!(trace.best_config, 7);
     assert_eq!(trace.best_score, 0.8);
 

@@ -129,14 +129,98 @@ fn prop_histogram_count_conserved_under_growth() {
     });
 }
 
+#[test]
+fn prop_aciq_threshold_near_bruteforce_scan_optimum() {
+    // the analytical alpha* must land near the minimum of a dense
+    // threshold scan of the *empirical* expected MSE, for every scheme
+    // and integer width: the closed form assumes an exact Laplace /
+    // Gaussian and uniform rounding noise, so "near" is a small constant
+    // factor, not equality. Pow2 rounds its scale down by up to sqrt(2)
+    // (4x in noise power), which the closed form does not model, so its
+    // tolerance is wider.
+    props(8, |rng| {
+        let scale = rng.range_f32(0.05, 5.0);
+        let laplace = rng.chance(0.5);
+        let mut h = Histogram::new();
+        for _ in 0..30 {
+            let xs: Vec<f32> = (0..2048)
+                .map(|_| {
+                    if laplace {
+                        let u = rng.range_f32(-0.4999, 0.4999);
+                        -u.signum() * (1.0 - 2.0 * u.abs()).ln() * scale
+                    } else {
+                        rng.normal() * scale
+                    }
+                })
+                .collect();
+            h.update(&xs);
+        }
+        let bin_w = f64::from(h.limit) / h.bins.len() as f64;
+        for scheme in ALL_SCHEMES {
+            for (width, bits) in [(BitWidth::Int4, 4u32), (BitWidth::Int8, 8)] {
+                // empirical expected MSE of clipping at alpha, straight
+                // from the |x| histogram through the real quantizer
+                let mse = |alpha: f32| -> f64 {
+                    let p = scheme.params_for(-alpha, alpha, width);
+                    let mut acc = 0.0f64;
+                    for (i, &c) in h.bins.iter().enumerate() {
+                        if c > 0 {
+                            let x = ((i as f64 + 0.5) * bin_w) as f32;
+                            let e = f64::from(p.fake_quant(x) - x);
+                            acc += c as f64 * e * e;
+                        }
+                    }
+                    acc / h.count as f64
+                };
+                let scan_min = (1..=160)
+                    .map(|k| mse(h.limit * k as f32 / 160.0))
+                    .fold(f64::INFINITY, f64::min);
+                let t = h.aciq_threshold(bits).expect("non-degenerate stream");
+                assert!(t > 0.0 && t <= h.limit);
+                let factor = if scheme == Scheme::Pow2 { 8.0 } else { 3.0 };
+                assert!(
+                    mse(t) <= factor * scan_min + 1e-12,
+                    "{scheme}/{width} {}: aciq alpha={t} mse={} vs scan min {}",
+                    if laplace { "laplace" } else { "gauss" },
+                    mse(t),
+                    scan_min,
+                );
+            }
+        }
+    });
+}
+
 // ---------------------------------------------------------------------------
 // configuration space
 // ---------------------------------------------------------------------------
 
 #[test]
+fn prop_legacy_indices_decode_with_the_pre_extension_formula() {
+    // any index below LEGACY_SPACE_SIZE must decode to exactly what the
+    // paper's original 96-config nested order produced -- no aciq, no
+    // bias correction, and the same positional arithmetic -- so stored
+    // trial records keep their meaning under the grown space
+    props(200, |rng| {
+        let i = rng.below(QuantConfig::LEGACY_SPACE_SIZE);
+        let cfg = QuantConfig::from_index(i).unwrap();
+        assert!(!cfg.bias_correct, "legacy index {i}");
+        let kl = match cfg.clip {
+            Clipping::Max => 0,
+            Clipping::Kl => 1,
+            Clipping::Aciq => panic!("legacy index {i} decoded to aciq"),
+        };
+        let s = ALL_SCHEMES.iter().position(|x| x == &cfg.scheme).unwrap();
+        let gran = (cfg.gran == Granularity::Channel) as usize;
+        let legacy_index = (((cfg.calib.index() * 4 + s) * 2 + kl) * 2 + gran) * 2
+            + cfg.mixed as usize;
+        assert_eq!(legacy_index, i);
+    });
+}
+
+#[test]
 fn prop_genome_decode_always_valid() {
     props(200, |rng| {
-        let mut bits = [false; 7];
+        let mut bits = [false; 9];
         for b in &mut bits {
             *b = rng.chance(0.5);
         }
@@ -201,6 +285,7 @@ fn radix_spaces() -> Vec<SpaceRef> {
         clip: Clipping::Max,
         gran: Granularity::Tensor,
         mixed: false,
+        bias_correct: false,
     };
     [
         &[BitWidth::Int8][..],                                  // radix 2 (+fp32)
@@ -282,16 +367,17 @@ fn prop_width_grids_bound_roundtrip_error() {
 
 #[test]
 fn prop_search_respects_budget_and_returns_history_best() {
+    let size = QuantConfig::SPACE_SIZE;
     props(40, |rng| {
         let seed = rng.next_u64();
-        let budget = 1 + rng.below(96);
-        let table: Vec<f64> = (0..96).map(|_| rng.f64()).collect();
+        let budget = 1 + rng.below(size);
+        let table: Vec<f64> = (0..size).map(|_| rng.f64()).collect();
         let algos: Vec<Box<dyn SearchAlgo>> = vec![
-            Box::new(RandomSearch::new(96, seed)),
-            Box::new(GridSearch::new(96, seed)),
+            Box::new(RandomSearch::new(size, seed)),
+            Box::new(GridSearch::new(size, seed)),
             Box::new(GeneticSearch::new(general_space(), seed)),
             Box::new(XgbSearch::new(
-                (0..96)
+                (0..size)
                     .map(|i| QuantConfig::from_index(i).unwrap().one_hot())
                     .collect(),
                 seed,
@@ -307,7 +393,7 @@ fn prop_search_respects_budget_and_returns_history_best() {
                 .map(|t| t.score)
                 .fold(f64::NEG_INFINITY, f64::max);
             assert_eq!(trace.best_score, max, "{}", trace.algo);
-            assert!(trace.trials.iter().all(|t| t.config < 96));
+            assert!(trace.trials.iter().all(|t| t.config < size));
         }
     });
 }

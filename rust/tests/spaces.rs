@@ -49,6 +49,7 @@ fn roundtrips_through_the_trait_object() {
         clip: Clipping::Max,
         gran: Granularity::Tensor,
         mixed: false,
+        bias_correct: false,
     };
     let spaces: Vec<SpaceRef> = vec![
         general_space(),
@@ -75,6 +76,38 @@ fn roundtrips_through_the_trait_object() {
 }
 
 #[test]
+fn general_space_roundtrips_all_288_and_extends_the_legacy_prefix() {
+    // every config of the extended space survives index -> config ->
+    // index and index -> genome -> index, and produces a distinct slug
+    assert_eq!(QuantConfig::SPACE_SIZE, 288);
+    let space = general_space();
+    let mut slugs = std::collections::HashSet::new();
+    for i in 0..QuantConfig::SPACE_SIZE {
+        let cfg = QuantConfig::from_index(i).unwrap();
+        assert_eq!(cfg.index(), i);
+        let g = space.encode(i).unwrap();
+        assert_eq!(space.decode(&g), i);
+        assert!(slugs.insert(cfg.slug()), "duplicate slug {}", cfg.slug());
+    }
+    // the first 96 indices are exactly the legacy axes (no ACIQ, no
+    // bias correction): a store recorded against the old space keeps
+    // meaning the same configs under the new one
+    for i in 0..QuantConfig::LEGACY_SPACE_SIZE {
+        let cfg = QuantConfig::from_index(i).unwrap();
+        assert!(!cfg.bias_correct, "legacy index {i} gained bias_correct");
+        assert_ne!(cfg.clip, Clipping::Aciq, "legacy index {i} gained aciq");
+    }
+    // and every extension index carries at least one new axis
+    for i in QuantConfig::LEGACY_SPACE_SIZE..QuantConfig::SPACE_SIZE {
+        let cfg = QuantConfig::from_index(i).unwrap();
+        assert!(
+            cfg.bias_correct || cfg.clip == Clipping::Aciq,
+            "extension index {i} is a legacy config"
+        );
+    }
+}
+
+#[test]
 fn xgb_searches_all_three_spaces_through_one_generic_path() {
     let (model, calib, eval) = fixtures();
     let q = quantune_with(&calib, &eval);
@@ -84,6 +117,7 @@ fn xgb_searches_all_three_spaces_through_one_generic_path() {
         clip: Clipping::Max,
         gran: Granularity::Tensor,
         mixed: false,
+        bias_correct: false,
     };
     let spaces: Vec<SpaceRef> = vec![
         general_space(),
@@ -218,6 +252,7 @@ fn layerwise_sweep_persists_under_its_own_tag() {
         clip: Clipping::Max,
         gran: Granularity::Tensor,
         mixed: false,
+        bias_correct: false,
     };
     let space = q.layerwise_space(&model, base, 2, &BINARY_WIDTHS).unwrap();
     let ev = InterpEvaluator::new(&model, &calib, &eval, q.seed)
@@ -236,6 +271,6 @@ fn layerwise_sweep_persists_under_its_own_tag() {
     assert_eq!(table.len(), 4);
     assert!(q.db.has_full_sweep(&model.name, &space.tag(), 4));
     // the general-space table is untouched by layer-wise records
-    assert!(!q.db.has_full_sweep(&model.name, "general", 96));
+    assert!(!q.db.has_full_sweep(&model.name, "general", QuantConfig::SPACE_SIZE));
     assert!(q.db.records().iter().all(|r| r.space == space.tag()));
 }

@@ -271,6 +271,54 @@ fn xgb_row_cache_reproduces_the_full_extraction() {
 }
 
 #[test]
+fn legacy_and_new_axis_records_coexist_under_one_tag() {
+    use quantune::quant::{Clipping, ConfigSpace, QuantConfig};
+    // the 288-config general space keeps the legacy 96 indices in their
+    // original order, so a store written before the ACIQ/bias-correct
+    // axes existed keeps meaning the same configs -- and new-axis rows
+    // land in the same table, ranking, and transfer extraction
+    let space = general_space();
+    let legacy_idx = 17;
+    let cfg = QuantConfig::from_index(legacy_idx).unwrap();
+    assert!(!cfg.bias_correct && cfg.clip != Clipping::Aciq);
+    let new_idx = QuantConfig::LEGACY_SPACE_SIZE + 5;
+    let last_idx = QuantConfig::SPACE_SIZE - 1;
+
+    let mut store = Store::in_memory();
+    store
+        .add(Record::new("sqn".into(), GENERAL_SPACE_TAG.into(), legacy_idx, 0.70, 0.1))
+        .unwrap();
+    store
+        .add(Record::new("sqn".into(), GENERAL_SPACE_TAG.into(), new_idx, 0.74, 0.1))
+        .unwrap();
+    store
+        .add(Record::new("sqn".into(), GENERAL_SPACE_TAG.into(), last_idx, 0.72, 0.1))
+        .unwrap();
+
+    // one table spans both eras
+    let table =
+        store.accuracy_table("sqn", GENERAL_SPACE_TAG, QuantConfig::SPACE_SIZE);
+    assert_eq!(table.len(), QuantConfig::SPACE_SIZE);
+    assert_eq!(table[legacy_idx], 0.70);
+    assert_eq!(table[new_idx], 0.74);
+    assert_eq!(table[last_idx], 0.72);
+    // best-of ranks across both eras, and the decoded best config
+    // carries the new axis
+    assert_eq!(store.best_for("sqn", GENERAL_SPACE_TAG), Some((new_idx, 0.74)));
+    let (best_cfg, best_acc) = store.best_general("sqn").unwrap();
+    assert_eq!(best_acc, 0.74);
+    assert_eq!(best_cfg.index(), new_idx);
+    // transfer extraction (which excludes the target model) features
+    // legacy and new rows through the same space, with one consistent
+    // feature dimensionality
+    let feats = |_: &str, config: usize| space.features(config).ok();
+    let rows = store.transfer_records("other_model", GENERAL_SPACE_TAG, feats);
+    assert_eq!(rows.len(), 3);
+    let dim = rows[0].features.len();
+    assert!(rows.iter().all(|r| r.features.len() == dim));
+}
+
+#[test]
 fn seeded_populations_propose_the_seeds_first() {
     let space = general_space();
     let seeds = [5usize, 17, 3];

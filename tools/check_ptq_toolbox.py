@@ -1,0 +1,148 @@
+#!/usr/bin/env python3
+"""Smoke-gate the analytical-PTQ-toolbox experiments (CI runs `cargo
+bench --bench bench_figures -- pareto` first, which writes
+results/aciq_synthetic.csv and results/pareto_radix_synthetic.csv;
+this script then holds the new ACIQ / bias-correction / IP-allocator
+axes to the PR's acceptance bar, so a regression that silently breaks
+the analytical clipping threshold -- or lets the learned tuner fall
+behind the measurement-free baseline -- fails the build).
+
+Checks:
+- `aciq_synthetic.csv`: the full clipping x bias-correction grid is
+  present, and on the heavy-tailed synthetic model ACIQ's analytical
+  threshold strictly beats Max clipping (plain rows, no bias
+  correction) -- the paper-level claim the axis exists to reproduce;
+- `pareto_radix_synthetic.csv`: exactly one radix row carries the IP
+  width allocator's pick, it respects the byte budget (the best binary
+  config's size, recomputed from the CSV), and the XGB tuner's pick at
+  the same budget is feasible and no less accurate than the
+  allocator's -- the learned search must beat-or-match its analytical
+  baseline.
+
+Usage: python3 tools/check_ptq_toolbox.py [results_dir]
+Without an argument the default locations (results/, rust/results/)
+are probed.
+"""
+
+import csv
+import sys
+from pathlib import Path
+
+CANDIDATE_DIRS = [Path("results"), Path("rust/results")]
+ACIQ_COLUMNS = ["clip", "bias_correct", "label", "top1"]
+RADIX_COLUMNS = [
+    "space", "config", "label", "int4_layers", "fp32_layers", "top1",
+    "quant_bytes", "on_frontier", "dominates_best_binary", "ip_baseline",
+    "xgb_best",
+]
+
+
+def fail(msg: str) -> None:
+    print(f"check_ptq_toolbox: FAIL: {msg}")
+    sys.exit(1)
+
+
+def load(path: Path, expected_columns: list) -> list:
+    if not path.exists():
+        fail(f"{path} missing (run `cargo bench --bench bench_figures -- pareto`)")
+    with path.open() as f:
+        rows = list(csv.DictReader(f))
+    if not rows:
+        fail(f"{path}: no data rows")
+    got = list(rows[0].keys())
+    if got != expected_columns:
+        fail(f"{path}: columns {got} != expected {expected_columns}")
+    return rows
+
+
+def check_aciq(path: Path) -> float:
+    rows = load(path, ACIQ_COLUMNS)
+    grid = {(r["clip"], r["bias_correct"]) for r in rows}
+    want = {(c, b) for c in ("max", "kl", "aciq") for b in ("false", "true")}
+    if grid != want:
+        fail(f"{path}: clipping x bias_correct grid {sorted(grid)} != {sorted(want)}")
+    for r in rows:
+        if not 0.0 <= float(r["top1"]) <= 1.0:
+            fail(f"{path}: top1 {r['top1']} out of [0,1] for {r['label']}")
+    plain = {r["clip"]: float(r["top1"]) for r in rows if r["bias_correct"] == "false"}
+    if plain["aciq"] <= plain["max"]:
+        fail(
+            "ACIQ's analytical threshold no longer beats Max clipping on the "
+            f"heavy-tailed model (aciq {plain['aciq']} vs max {plain['max']})"
+        )
+    return plain["aciq"] - plain["max"]
+
+
+def check_radix(path: Path) -> tuple:
+    rows = load(path, RADIX_COLUMNS)
+    binary = [r for r in rows if r["space"] == "binary"]
+    radix = [r for r in rows if r["space"] == "radix"]
+    if not binary or not radix:
+        fail(f"{path}: need both binary and radix rows, got "
+             f"{len(binary)}/{len(radix)}")
+    # budget = best binary config's bytes, mirroring the experiment: the
+    # all-fp32 mask (fp32_layers == layer count) is the unquantized
+    # reference, not a deployment, so it cannot set the budget
+    n_layers = max(int(r["fp32_layers"]) for r in binary)
+    deployable = [r for r in binary if int(r["fp32_layers"]) < n_layers]
+    if not deployable:
+        fail(f"{path}: no deployable binary row (all masks are all-fp32?)")
+    budget = min(
+        (r for r in deployable),
+        key=lambda r: (-float(r["top1"]), int(r["quant_bytes"])),
+    )
+    budget_bytes = int(budget["quant_bytes"])
+
+    ip = [r for r in radix if r["ip_baseline"] == "true"]
+    if len(ip) != 1:
+        fail(f"{path}: expected exactly one ip_baseline radix row, got {len(ip)}")
+    ip = ip[0]
+    if int(ip["quant_bytes"]) > budget_bytes:
+        fail(
+            f"IP allocator pick {ip['label']} over budget: "
+            f"{ip['quant_bytes']} > {budget_bytes} bytes"
+        )
+
+    xgb = [r for r in radix if r["xgb_best"] == "true"]
+    if len(xgb) != 1:
+        fail(f"{path}: expected exactly one xgb_best radix row, got {len(xgb)}")
+    xgb = xgb[0]
+    if int(xgb["quant_bytes"]) > budget_bytes:
+        fail(
+            f"XGB pick {xgb['label']} over budget: "
+            f"{xgb['quant_bytes']} > {budget_bytes} bytes"
+        )
+    if float(xgb["top1"]) < float(ip["top1"]):
+        fail(
+            "the XGB tuner fell behind the measurement-free IP baseline "
+            f"(xgb {xgb['label']}@{xgb['top1']} vs ip {ip['label']}@{ip['top1']})"
+        )
+    return ip, xgb, budget_bytes
+
+
+def main() -> None:
+    if len(sys.argv) > 2:
+        fail(f"usage: {sys.argv[0]} [results_dir]")
+    if len(sys.argv) == 2:
+        base = Path(sys.argv[1])
+    else:
+        base = next(
+            (d for d in CANDIDATE_DIRS if (d / "aciq_synthetic.csv").exists()),
+            None,
+        )
+        if base is None:
+            fail(
+                f"no aciq_synthetic.csv in {[str(d) for d in CANDIDATE_DIRS]} "
+                "(run `cargo bench --bench bench_figures -- pareto` first)"
+            )
+    margin = check_aciq(base / "aciq_synthetic.csv")
+    ip, xgb, budget = check_radix(base / "pareto_radix_synthetic.csv")
+    print(
+        f"check_ptq_toolbox: OK (aciq beats max by {margin:.4f} top1; "
+        f"ip baseline {ip['label']}@{ip['top1']} vs xgb {xgb['label']}@"
+        f"{xgb['top1']} under {budget} bytes; {base})"
+    )
+
+
+if __name__ == "__main__":
+    main()
